@@ -1,0 +1,30 @@
+//! Reproduce paper Fig. 3(b): the timing and location of partial-sums
+//! (registers) and group-sums (ROFM buffers) as they are computed on
+//! the move through a K=3 convolution chain.
+//!
+//!     cargo run --release --example dataflow_trace
+
+use domino::coordinator::Compiler;
+use domino::model::{NetworkBuilder, TensorShape};
+use domino::sim::trace::trace_stage;
+
+fn main() -> anyhow::Result<()> {
+    // the paper's illustration geometry: K=3 => a 9-tile chain
+    let net = NetworkBuilder::new("fig3", TensorShape::new(2, 5, 5))
+        .conv(3, 3, 1, 1)
+        .build();
+    let program = Compiler::default().compile(&net)?;
+    let tr = trace_stage(&program, 0, 7)?;
+    print!("{}", tr.render(0, 30));
+    println!(
+        "\n{} partial-sum moves, {} group-sums queued, {} popped, {} outputs",
+        tr.count("U"),
+        tr.count("G+"),
+        tr.count("G-"),
+        tr.count("Y")
+    );
+    println!("\nNote the paper's structure: tiles 3 and 6 (kernel-row heads)");
+    println!("queue group-sums and pop them one row-period later; outputs");
+    println!("leave only the last tile (8) after the M-type activation.");
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! END-TO-END driver: the full three-layer stack on a real (small)
+//! workload.
+//!
+//! 1. `make artifacts` (build time, once): JAX trains TinyCNN in fp32
+//!    on a synthetic 10-class dataset, calibrates + quantizes to int8,
+//!    and AOT-lowers the quantized forward — built from the L1 Pallas
+//!    kernels — to HLO text.
+//! 2. This binary (run time, no Python): loads the trained HLO through
+//!    the PJRT runtime, loads the exported weights + held-out test set,
+//!    and serves the whole test set batch by batch, measuring wall
+//!    latency/throughput of the compiled artifact.
+//! 3. The same images run through the cycle-accurate Domino simulator:
+//!    outputs must match the HLO **bit-for-bit** (the COM dataflow is
+//!    functionally exact), while the simulator additionally reports
+//!    modeled cycles and Table III energy.
+//!
+//!     make artifacts && cargo run --release --example e2e_inference
+
+use std::time::Instant;
+
+use domino::coordinator::Compiler;
+use domino::energy::{energy_of, CimModel};
+use domino::eval::accuracy::{tiny_cnn_with_shifts, TestSet, TrainedWeights};
+use domino::runtime::golden::TrainedTiny;
+use domino::runtime::{artifact, artifacts_dir, Runtime};
+use domino::sim::Simulator;
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    if !dir.join(artifact::TINY_TRAINED).exists() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+
+    // ---- load the deployable artifact (AOT HLO, weights baked in)
+    let rt = Runtime::cpu()?;
+    let hlo = TrainedTiny::load(&rt)?;
+    let tw = TrainedWeights::load(&dir.join(artifact::WEIGHTS_BIN))?;
+    let ts = TestSet::load(&dir.join(artifact::TESTSET_BIN))?;
+    println!(
+        "loaded {} on PJRT/{}; test set: {} images",
+        artifact::TINY_TRAINED,
+        rt.platform(),
+        ts.images.len()
+    );
+
+    // ---- serve the test set through the compiled HLO
+    let t0 = Instant::now();
+    let mut correct = 0usize;
+    let mut hlo_outputs = Vec::with_capacity(ts.images.len());
+    for (img, &label) in ts.images.iter().zip(&ts.labels) {
+        let logits = hlo.run(img)?;
+        if argmax(&logits) == label as usize {
+            correct += 1;
+        }
+        hlo_outputs.push(logits);
+    }
+    let wall = t0.elapsed();
+    let acc = correct as f64 / ts.images.len() as f64;
+    println!(
+        "\nHLO serving: {} images in {:.1} ms ({:.0} img/s wall), accuracy {:.4}",
+        ts.images.len(),
+        1e3 * wall.as_secs_f64(),
+        ts.images.len() as f64 / wall.as_secs_f64(),
+        acc
+    );
+
+    // ---- the same network through the cycle-accurate simulator
+    let net = tiny_cnn_with_shifts(tw.shifts());
+    let program = Compiler::default().compile_with_weights(&net, &tw.as_weights())?;
+    println!(
+        "\nDomino mapping: {} tiles, {} chip(s)",
+        program.total_tiles, program.chips
+    );
+    let mut sim = Simulator::new(&program);
+    let n_sim = 16.min(ts.images.len());
+    let mut latency = 0u64;
+    for i in 0..n_sim {
+        let out = sim.run_image(&ts.images[i])?;
+        assert_eq!(
+            out.scores, hlo_outputs[i],
+            "image {i}: simulator != AOT HLO (datapath bug)"
+        );
+        latency = out.latency_cycles;
+    }
+    println!(
+        "cycle sim: {n_sim} images, all outputs == HLO bit-exactly; \
+         latency {} cycles ({:.1} us @10 MHz)",
+        latency,
+        1e6 * latency as f64 / domino::consts::STEP_HZ
+    );
+
+    let est = domino::perfmodel::estimate(&program)?;
+    let e = energy_of(&est.counters, &CimModel::generic_sram());
+    println!(
+        "modeled: {:.0} img/s pipelined, {:.3} uJ/image \
+         (CIM {:.1}%, on-chip {:.1}%, off-chip {:.2}%)",
+        est.images_per_s(),
+        1e6 * e.total(),
+        100.0 * e.cim / e.total(),
+        100.0 * e.onchip_data() / e.total(),
+        100.0 * e.offchip_data() / e.total()
+    );
+
+    // ---- the accuracy experiment record (paper Table IV accuracy row)
+    let rep = domino::eval::accuracy::run(&dir, 0)?;
+    print!("\n{}", domino::eval::accuracy::render(&rep));
+    Ok(())
+}
+
+fn argmax(v: &[i8]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by_key(|&(i, &x)| (x, std::cmp::Reverse(i)))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}

@@ -1,0 +1,72 @@
+//! Mapping explorer: how crossbar size, chip budget and pooling scheme
+//! change tiles / chips / period / throughput for the Table IV models.
+//!
+//!     cargo run --release --example mapping_explorer
+
+use domino::coordinator::{ArchConfig, Compiler, PoolingScheme};
+use domino::model::zoo;
+
+fn main() -> anyhow::Result<()> {
+    println!("== crossbar size sweep (block reuse, minimum mapping) ==");
+    println!(
+        "{:<18} {:>6} {:>8} {:>6} {:>12} {:>10}",
+        "model", "Nc=Nm", "tiles", "chips", "period cyc", "img/s"
+    );
+    for (net, _) in zoo::table4_workloads() {
+        for n in [64usize, 128, 256, 512] {
+            let mut arch = ArchConfig::default();
+            arch.n_c = n;
+            arch.n_m = n;
+            let program = Compiler::new(arch).compile_analysis(&net)?;
+            let est = domino::perfmodel::estimate(&program)?;
+            println!(
+                "{:<18} {:>6} {:>8} {:>6} {:>12} {:>10.0}",
+                net.name,
+                n,
+                program.total_tiles,
+                program.chips,
+                est.period_cycles,
+                est.images_per_s()
+            );
+        }
+        println!();
+    }
+
+    println!("== chip-budget sweep (duplication water-filling) ==");
+    println!(
+        "{:<18} {:>6} {:>8} {:>12} {:>10}",
+        "model", "chips", "tiles", "period cyc", "img/s"
+    );
+    let net = zoo::vgg11_cifar();
+    for chips in [1usize, 2, 3, 5, 8, 12] {
+        let program = Compiler::new(ArchConfig::table4(chips)).compile_analysis(&net)?;
+        let est = domino::perfmodel::estimate(&program)?;
+        println!(
+            "{:<18} {:>6} {:>8} {:>12} {:>10.0}",
+            net.name,
+            chips,
+            program.total_tiles,
+            est.period_cycles,
+            est.images_per_s()
+        );
+    }
+
+    println!("\n== pooling scheme (Fig. 4) ==");
+    for (net, _) in zoo::table4_workloads() {
+        let mut wd = ArchConfig::default();
+        wd.pooling = PoolingScheme::WeightDuplication;
+        let a = Compiler::default().compile_analysis(&net)?;
+        let b = Compiler::new(wd).compile_analysis(&net)?;
+        let ea = domino::perfmodel::estimate(&a)?;
+        let eb = domino::perfmodel::estimate(&b)?;
+        println!(
+            "{:<18} block-reuse {:>6} tiles / {:>8} cyc | weight-dup {:>6} tiles / {:>8} cyc",
+            net.name,
+            a.total_tiles,
+            ea.period_cycles,
+            b.total_tiles,
+            eb.period_cycles
+        );
+    }
+    Ok(())
+}

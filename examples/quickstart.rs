@@ -1,0 +1,57 @@
+//! Quickstart: compile a small CNN onto the Domino mesh, run one
+//! cycle-accurate inference, and price it with the paper's Table III
+//! energy model.
+//!
+//!     cargo run --release --example quickstart
+
+use domino::coordinator::Compiler;
+use domino::energy::{energy_of, CimModel};
+use domino::model::zoo;
+use domino::sim::Simulator;
+use domino::testutil::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a network from the zoo (every Table IV model is available)
+    let net = zoo::tiny_cnn();
+    println!("network: {} ({} layers)", net.name, net.layers.len());
+
+    // 2. the Domino compiler: tile allocation + per-tile periodic
+    //    instruction schedules (the paper's distributed control)
+    let program = Compiler::default().compile(&net)?;
+    println!(
+        "mapped to {} tiles on {} chip(s); schedules fit the 128-entry table: {}",
+        program.total_tiles,
+        program.chips,
+        program.schedules_fit_hardware()
+    );
+
+    // 3. cycle-accurate simulation of one image
+    let mut sim = Simulator::new(&program);
+    let mut rng = Rng::new(42);
+    let out = sim.run_image(&rng.i8_vec(net.input_len(), 31))?;
+    println!(
+        "latency: {} cycles = {:.1} us at 10 MHz",
+        out.latency_cycles,
+        1e6 * out.latency_cycles as f64 / domino::consts::STEP_HZ
+    );
+    println!("scores: {:?}", out.scores);
+
+    // 4. energy from the architectural event counters (Table III)
+    let e = energy_of(sim.stats(), &CimModel::generic_sram());
+    println!(
+        "energy/image: {:.3} uJ (CIM {:.1}%, on-chip data {:.1}%, off-chip {:.2}%)",
+        1e6 * e.total(),
+        100.0 * e.cim / e.total(),
+        100.0 * e.onchip_data() / e.total(),
+        100.0 * e.offchip_data() / e.total()
+    );
+
+    // 5. the analytic model (used for the full Table IV networks)
+    let est = domino::perfmodel::estimate(&program)?;
+    println!(
+        "pipelined: {:.0} images/s (period {} cycles)",
+        est.images_per_s(),
+        est.period_cycles
+    );
+    Ok(())
+}

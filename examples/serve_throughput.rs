@@ -1,0 +1,103 @@
+//! Serving load test: batched requests against the AOT-compiled
+//! artifact through the inference server — closed-loop clients, latency
+//! percentiles, throughput, and a per-response cross-check against the
+//! Rust int8 reference.
+//!
+//!     make artifacts && cargo run --release --example serve_throughput
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use domino::eval::accuracy::{tiny_cnn_with_shifts, TestSet, TrainedWeights};
+use domino::model::refcompute::{forward, Tensor};
+use domino::runtime::{artifact, artifacts_dir};
+use domino::serve::{LatencyStats, ServeConfig, Server};
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    let ts = Arc::new(TestSet::load(&dir.join(artifact::TESTSET_BIN))?);
+    let tw = TrainedWeights::load(&dir.join(artifact::WEIGHTS_BIN))?;
+    let net = tiny_cnn_with_shifts(tw.shifts());
+    let weights = tw.as_weights();
+
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        queue_cap: 512,
+    };
+    println!(
+        "starting server: {} workers, micro-batch {}, queue cap {}",
+        cfg.workers, cfg.max_batch, cfg.queue_cap
+    );
+    let server = Arc::new(Server::start(cfg)?);
+
+    // closed-loop load: 4 client threads x 128 requests over the test set
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 128;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let server = Arc::clone(&server);
+        let ts = Arc::clone(&ts);
+        handles.push(std::thread::spawn(move || -> anyhow::Result<(LatencyStats, Vec<(usize, Vec<i8>)>)> {
+            let mut lat = LatencyStats::default();
+            let mut outputs = Vec::new();
+            for i in 0..PER_CLIENT {
+                let idx = (c * PER_CLIENT + i) % ts.images.len();
+                let t = Instant::now();
+                let resp = server.infer(ts.images[idx].clone())?;
+                lat.record(t.elapsed());
+                outputs.push((idx, resp.logits));
+            }
+            Ok((lat, outputs))
+        }));
+    }
+
+    let mut lat = LatencyStats::default();
+    let mut all_outputs = Vec::new();
+    for h in handles {
+        let (l, outs) = h.join().expect("client thread")?;
+        lat.merge(&l);
+        all_outputs.extend(outs);
+    }
+    let wall = t0.elapsed();
+    let total = CLIENTS * PER_CLIENT;
+    println!(
+        "\nserved {total} requests in {:.2} s  ->  {:.0} req/s",
+        wall.as_secs_f64(),
+        total as f64 / wall.as_secs_f64()
+    );
+    println!("latency: {}", lat.summary());
+    println!("server counters: served {}, rejected {}", server.served(), server.rejected());
+
+    // every response must equal the Rust int8 reference bit-for-bit
+    let mut correct = 0usize;
+    for (idx, logits) in &all_outputs {
+        let want = forward(
+            &net,
+            &weights,
+            &Tensor::new(net.input, ts.images[*idx].clone()),
+        )?;
+        assert_eq!(logits, &want.data, "request for image {idx} diverged");
+        let pred = logits
+            .iter()
+            .enumerate()
+            .max_by_key(|&(i, &v)| (v, std::cmp::Reverse(i)))
+            .map(|(i, _)| i)
+            .unwrap();
+        if pred == ts.labels[*idx] as usize {
+            correct += 1;
+        }
+    }
+    println!(
+        "all {} responses bit-exact vs reference; accuracy {:.4}",
+        all_outputs.len(),
+        correct as f64 / all_outputs.len() as f64
+    );
+
+    let counts = Arc::try_unwrap(server)
+        .map_err(|_| anyhow::anyhow!("server still referenced"))?
+        .shutdown()?;
+    println!("per-worker served: {counts:?}");
+    Ok(())
+}

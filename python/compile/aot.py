@@ -1,0 +1,179 @@
+"""AOT compilation: lower the L2/L1 JAX functions to HLO **text**.
+
+Python runs once, here, at build time (``make artifacts``); the Rust
+coordinator loads the resulting ``artifacts/*.hlo.txt`` through the
+``xla`` crate's PJRT CPU client and never imports Python again.
+
+HLO *text* — not a serialized ``HloModuleProto`` — is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids that the
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. Lowering goes
+stablehlo → XlaComputation (``return_tuple=True``; the Rust side
+unwraps with ``to_tuple1``). See /opt/xla-example/README.md.
+
+Artifacts produced (``artifacts/``):
+
+=========================  ==================================================
+tiny_cnn_int8.hlo.txt      zoo::tiny_cnn int8 forward, weights as *inputs*
+                           (x, w0, w2, w3, w6, w9) — the golden model the
+                           cycle simulator is checked against bit-exactly
+tiny_trained_int8.hlo.txt  the same network with the *calibrated requant
+                           shifts* baked in; weights stay inputs (loaded
+                           from tiny_weights.bin at run time)
+cim_mvm_256.hlo.txt        one 256x256 crossbar MVM (the PE hot-spot)
+com_conv_k3.hlo.txt        one COM-dataflow 3x3 conv layer
+tiny_weights.bin           trained int8 weights + per-layer requant shifts
+tiny_testset.bin           held-out int8 test set (label + pixels)
+accuracy.json              fp32 vs int8 accuracy (the Table IV accuracy row
+                           for the trainable substitute network)
+manifest.json              shapes/dtypes of every artifact entry point
+=========================  ==================================================
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.cim_mvm import cim_mvm
+from .kernels.com_conv import com_conv2d
+
+SEED = 0xD0311  # build is fully deterministic
+
+
+def to_hlo_text(fn, *example_args) -> str:
+    """Lower a jittable function to HLO text (see module docs)."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def i8(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int8)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact dir")
+    ap.add_argument("--train-steps", type=int, default=300)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {}
+
+    def emit(name: str, text: str, entry: dict):
+        path = os.path.join(args.out, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = entry
+        print(f"wrote {name} ({len(text)} chars)")
+
+    # ---- golden model: weights as inputs, default shift-7 requant
+    x = i8(model.INPUT_SHAPE)
+    ws = [i8((m, c, 3, 3)) for (m, c) in model.TINY_CONV_SHAPES]
+    w9 = i8(model.TINY_FC_SHAPE)
+    emit(
+        "tiny_cnn_int8.hlo.txt",
+        to_hlo_text(model.tiny_cnn_int8, x, *ws, w9),
+        {
+            "inputs": ["x[3,16,16]i8", "w0[16,3,3,3]i8", "w2[32,16,3,3]i8",
+                       "w3[32,32,3,3]i8", "w6[32,32,3,3]i8", "w9[10,32]i8"],
+            "outputs": ["logits[10]i8"],
+            "shifts": list(model.DEFAULT_SHIFTS),
+        },
+    )
+
+    # ---- kernel hot-spots
+    emit(
+        "cim_mvm_256.hlo.txt",
+        to_hlo_text(
+            functools.partial(cim_mvm, shift=7, relu=True),
+            i8((1, 256)), i8((256, 256)),
+        ),
+        {"inputs": ["x[1,256]i8", "w[256,256]i8"],
+         "outputs": ["y[1,256]i8"], "shift": 7, "relu": True},
+    )
+    emit(
+        "com_conv_k3.hlo.txt",
+        to_hlo_text(
+            functools.partial(com_conv2d, stride=1, padding=1,
+                              shift=7, relu=True),
+            i8((16, 16, 16)), i8((3, 3, 16, 32)),
+        ),
+        {"inputs": ["x[16,16,16]i8", "w[3,3,16,32]i8(kkcm)"],
+         "outputs": ["y[32,16,16]i8"], "shift": 7, "relu": True},
+    )
+
+    # ---- accuracy experiment: train fp32, calibrate, quantize
+    key = jax.random.PRNGKey(SEED)
+    params, train_x, train_y = model.train(key, steps=args.train_steps)
+    test_x, test_y = model.make_dataset(
+        jax.random.PRNGKey(SEED + 1), 256
+    )
+    qparams, shifts, p_log = model.calibrate_and_quantize(
+        params, train_x[:32]
+    )
+    acc_f = model.accuracy_float(params, test_x, test_y)
+    acc_q = model.accuracy_int8(qparams, shifts, test_x, test_y)
+    print(f"accuracy: fp32 {acc_f:.4f} -> int8 {acc_q:.4f} "
+          f"(shifts {shifts})")
+
+    # NOTE: weights stay *inputs* (loaded from tiny_weights.bin at run
+    # time) — xla_extension 0.5.1's HLO text parser mis-decodes large
+    # baked s8 constant arrays, so only the calibrated shifts are baked.
+    emit(
+        "tiny_trained_int8.hlo.txt",
+        to_hlo_text(
+            functools.partial(model.tiny_cnn_int8, shifts=shifts),
+            x, *ws, w9,
+        ),
+        {"inputs": ["x[3,16,16]i8", "w0[16,3,3,3]i8", "w2[32,16,3,3]i8",
+                    "w3[32,32,3,3]i8", "w6[32,32,3,3]i8", "w9[10,32]i8"],
+         "outputs": ["logits[10]i8"],
+         "shifts": list(shifts), "logit_scale_exp": p_log},
+    )
+
+    model.write_weights_bin(
+        os.path.join(args.out, "tiny_weights.bin"), qparams, shifts
+    )
+    model.write_testset_bin(
+        os.path.join(args.out, "tiny_testset.bin"),
+        np.stack([model.quantize_input(xx) for xx in test_x]),
+        test_y,
+    )
+    with open(os.path.join(args.out, "accuracy.json"), "w") as f:
+        json.dump(
+            {
+                "network": "tiny-cnn",
+                "dataset": "synthetic-10class (256 held-out)",
+                "fp32_accuracy": acc_f,
+                "int8_accuracy": acc_q,
+                "shifts": list(shifts),
+                "train_steps": args.train_steps,
+                "seed": SEED,
+            },
+            f, indent=2,
+        )
+    manifest["tiny_weights.bin"] = {
+        "format": "DMN1 [u32 shift, u32 len, i8 data] x5 (w0,w2,w3,w6,w9)"
+    }
+    manifest["tiny_testset.bin"] = {
+        "format": "DMN1 u32 count, then [u32 label, 768 x i8] per image"
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: the CIM crossbar MVM (the PE hot-spot).
+
+One grid step is one **tile** of the paper's architecture: a stationary
+``(N_c, N_m)`` int8 weight block (the 256x256 crossbar held in
+VMEM ≈ the CIM array) multiplied by a streamed ``N_c`` slice of the
+input vector (≈ the RIFM buffer beat), accumulated in int32
+(≈ ADC + shift-add). The grid walks ``(⌈Cin/N_c⌉, ⌈Cout/N_m⌉)`` —
+isomorphic to the FC tile-array mapping of paper Fig. 2: rows of the
+grid are the partial-sum chains down a tile column, accumulated
+"on the move" into the int32 accumulator; the last row requantizes
+(the last tile's M-type Act instruction) and emits int8.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets
+an ASIC NoC; on TPU the same insight — stationary weight block + streamed
+activations + in-place partial-sum accumulation, never a materialized
+Toeplitz matrix — maps to MXU-shaped (256,256) blocks with BlockSpec
+expressing the HBM→VMEM schedule the paper expresses with tiles.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ops
+
+# The paper's crossbar dimensions (Section IV-A).
+N_C = 256
+N_M = 256
+
+
+def _mvm_kernel(x_ref, w_ref, acc_ref, y_ref, *, shift: int, relu: bool,
+                n_rows: int):
+    """One (row-block, col-block) tile step.
+
+    ``acc_ref`` is an int32 output used as the running partial-sum
+    register chain; ``y_ref`` is the int8 result written by the last
+    row block (the chain's final tile).
+    """
+    rb = pl.program_id(0)
+
+    # chain start: clear the accumulator (first tile has no incoming psum)
+    @pl.when(rb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # the PE: int8 x int8 -> int32 MAC over the stationary block
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    acc_ref[...] += jnp.dot(x, w)
+
+    # last tile of the column: M-type requantization, emit the OFM beat
+    @pl.when(rb == n_rows - 1)
+    def _emit():
+        y_ref[...] = ops.requant(acc_ref[...], shift, relu)
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "relu"))
+def cim_mvm(x, w, shift: int = 0, relu: bool = False):
+    """Blocked crossbar MVM: ``y = requant(x @ w, shift, relu)``.
+
+    ``x`` int8 ``[B, Cin]``, ``w`` int8 ``[Cin, Cout]`` — Cin/Cout need
+    not be multiples of 256 (ragged edges are zero-padded, which is
+    exact for integer MACs).
+    """
+    b, cin = x.shape
+    cin_w, cout = w.shape
+    assert cin == cin_w, (cin, cin_w)
+    rbs = -(-cin // N_C)
+    cbs = -(-cout // N_M)
+    # zero-pad to whole tiles (zeros contribute nothing to integer MACs)
+    xp = jnp.pad(x, ((0, 0), (0, rbs * N_C - cin)))
+    wp = jnp.pad(w, ((0, rbs * N_C - cin), (0, cbs * N_M - cout)))
+
+    kernel = functools.partial(
+        _mvm_kernel, shift=shift, relu=relu, n_rows=rbs
+    )
+    acc, y = pl.pallas_call(
+        kernel,
+        grid=(rbs, cbs),
+        in_specs=[
+            # the streamed input slice: one RIFM beat per row block
+            pl.BlockSpec((b, N_C), lambda rb, cb: (0, rb)),
+            # the stationary crossbar block of tile (rb, cb)
+            pl.BlockSpec((N_C, N_M), lambda rb, cb: (rb, cb)),
+        ],
+        out_specs=[
+            # partial-sum chain state for the current column
+            pl.BlockSpec((b, N_M), lambda rb, cb: (0, cb)),
+            pl.BlockSpec((b, N_M), lambda rb, cb: (0, cb)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, cbs * N_M), jnp.int32),
+            jax.ShapeDtypeStruct((b, cbs * N_M), jnp.int8),
+        ],
+        interpret=True,
+    )(xp, wp)
+    del acc  # chain registers; only the requantized OFM leaves the array
+    return y[:, :cout]

@@ -1,0 +1,127 @@
+"""L1 Pallas kernel: im2col-free COM-ordered convolution.
+
+The paper's central dataflow claim (Section III-B): convolution without
+converting the IFM to a Toeplitz matrix. Kernel pixel ``(kr, kc)`` and
+input-channel block ``cb`` live in their own tile holding the stationary
+``(C_b, M)`` weight slice; the IFM streams past every tile once, and each
+tile's point-wise MAC result (the *partial-sum*) is added into the moving
+accumulation — K partial sums form a *group-sum*, K group-sums form the
+output.
+
+This kernel is that dataflow, expressed on the Pallas grid: grid step
+``(cb, kr, kc)`` is one tile; it takes a **shifted strided view** of the
+padded IFM (the stream alignment the RIFM counter implements), MACs it
+against its stationary weight slice, and accumulates into the int32
+carry (``acc_ref`` — the psum/group-sum moving through the ROFM
+network). The final grid step applies the M-type requantization. At no
+point does an im2col matrix exist.
+
+``interpret=True``: CPU PJRT cannot run Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ops
+
+# Channel block size (crossbar rows, Section IV-A).
+N_C = 256
+
+
+def _com_conv_kernel(x_ref, w_ref, acc_ref, y_ref, *, k: int, stride: int,
+                     oh: int, ow: int, n_cb: int, shift: int, relu: bool):
+    """One tile step: kernel position (kr, kc), channel block cb."""
+    cb, kr, kc = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    # chain start: no incoming partial sum yet
+    @pl.when((cb == 0) & (kr == 0) & (kc == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # The RIFM alignment: this tile MACs the IFM pixels whose window
+    # offset matches its kernel position — a (kr, kc)-shifted,
+    # stride-strided view of the padded stream. No Toeplitz matrix.
+    xb = x_ref[...]  # (C_b, Hp, Wp) stationary-resident stream window
+    cb_ch = xb.shape[0]
+    xs = jax.lax.dynamic_slice(
+        xb, (0, kr, kc), (cb_ch, (oh - 1) * stride + 1, (ow - 1) * stride + 1)
+    )[:, ::stride, ::stride].astype(jnp.int32)
+
+    # the PE: point-wise MAC against the stationary (C_b, M) slice,
+    # partial-sum added to the moving accumulation (COM)
+    w = w_ref[0, 0].astype(jnp.int32)  # (C_b, M)
+    acc_ref[...] += jnp.einsum("chw,cm->mhw", xs, w)
+
+    # last tile (kr = kc = K-1, last channel block): M-type Act/quantize
+    @pl.when((cb == n_cb - 1) & (kr == k - 1) & (kc == k - 1))
+    def _emit():
+        y_ref[...] = ops.requant(acc_ref[...], shift, relu)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "padding", "shift", "relu")
+)
+def com_conv2d(x, w, stride: int = 1, padding: int = 0, shift: int = 0,
+               relu: bool = False):
+    """COM-dataflow convolution: ``y = requant(conv(x, w), shift, relu)``.
+
+    ``x`` int8 ``[C, H, W]``; ``w`` int8 ``[K, K, C, M]`` (kernel-
+    position major — the tile mapping order of paper Fig. 3(a); use
+    :func:`w_from_mckk` to convert from the ``[M, C, K, K]`` refcompute
+    layout). Returns int8 ``[M, Ho, Wo]``.
+    """
+    c, _, _ = x.shape
+    k, k2, cw, m = w.shape
+    assert k == k2 and cw == c, (w.shape, x.shape)
+    xp = ops.pad_chw(x, padding)
+    _, hp, wp = xp.shape
+    oh = (hp - k) // stride + 1
+    ow = (wp - k) // stride + 1
+
+    # split channels into crossbar-row blocks (zero-pad the ragged edge)
+    n_cb = -(-c // N_C)
+    cpad = n_cb * N_C - c
+    xp = jnp.pad(xp, ((0, cpad), (0, 0), (0, 0)))
+    wpad = jnp.pad(w, ((0, 0), (0, 0), (0, cpad), (0, 0)))
+
+    kernel = functools.partial(
+        _com_conv_kernel,
+        k=k, stride=stride, oh=oh, ow=ow, n_cb=n_cb, shift=shift, relu=relu,
+    )
+    acc, y = pl.pallas_call(
+        kernel,
+        grid=(n_cb, k, k),
+        in_specs=[
+            # the streamed IFM window for channel block cb (whole padded
+            # plane: the stream passes every tile once)
+            pl.BlockSpec((N_C, hp, wp), lambda cb, kr, kc: (cb, 0, 0)),
+            # tile (cb, kr, kc)'s stationary weight slice
+            pl.BlockSpec(
+                (1, 1, N_C, m), lambda cb, kr, kc: (kr, kc, cb, 0)
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((m, oh, ow), lambda cb, kr, kc: (0, 0, 0)),
+            pl.BlockSpec((m, oh, ow), lambda cb, kr, kc: (0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, oh, ow), jnp.int32),
+            jax.ShapeDtypeStruct((m, oh, ow), jnp.int8),
+        ],
+        interpret=True,
+    )(xp, wpad)
+    del acc  # the moving group-sums; only the OFM leaves the array
+    return y
+
+
+def w_from_mckk(w):
+    """Convert ``[M, C, K, K]`` (refcompute layout) to the kernel's
+    ``[K, K, C, M]`` tile-mapping order (paper Fig. 3(a): "pixels in
+    kernels are mapped to CIM arrays according to their locations and
+    channels in sequence")."""
+    return jnp.transpose(w, (2, 3, 1, 0))

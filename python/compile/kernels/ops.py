@@ -1,0 +1,82 @@
+"""Shared int8 arithmetic semantics (build-time JAX).
+
+These functions fix the exact quantized arithmetic the whole stack agrees
+on — bit-identical to ``rust/src/model/refcompute.rs``:
+
+* activations and weights are ``int8``, accumulation is ``int32``;
+* conv/fc requantization: ``y = clamp_i8(relu?(acc >> shift))`` with an
+  **arithmetic** right shift, ReLU applied *after* the shift, then
+  saturation to ``[-128, 127]``;
+* residual add: ``y = clamp_i8(max(a + b, 0))`` (ReLU fused, as in
+  ResNet);
+* max pool: plain ``int8`` max; average pool: ``floor(sum / k**2)``
+  (floor division — matches Rust ``div_euclid`` for positive divisors).
+
+All helpers are pure ``jax.numpy`` so they lower into the same HLO module
+as the Pallas kernels that call them.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+I8_MIN = -128
+I8_MAX = 127
+
+
+def clamp_i8(v):
+    """Saturate an int32 tensor to int8 range (returns int8)."""
+    return jnp.clip(v, I8_MIN, I8_MAX).astype(jnp.int8)
+
+
+def requant(acc, shift: int, relu: bool):
+    """The shared conv/fc requantization: arithmetic shift, optional
+    ReLU, saturation.
+
+    ``acc`` is int32. ``jnp.right_shift`` on a signed dtype is an
+    arithmetic shift (sign-propagating), matching Rust ``i32 >> shift``.
+    """
+    v = jnp.right_shift(acc.astype(jnp.int32), jnp.int32(shift))
+    if relu:
+        v = jnp.maximum(v, 0)
+    return clamp_i8(v)
+
+
+def res_add(a, b):
+    """Residual add with fused ReLU: ``clamp_i8(max(a + b, 0))``."""
+    s = a.astype(jnp.int32) + b.astype(jnp.int32)
+    return clamp_i8(jnp.maximum(s, 0))
+
+
+def pad_chw(x, padding: int):
+    """Zero-pad an int8 CHW tensor on H and W."""
+    if padding == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (padding, padding), (padding, padding)))
+
+
+def _pool_windows(x, kernel: int, stride: int):
+    """Stack the k*k shifted strided views of a CHW tensor: returns
+    ``(k*k, C, Ho, Wo)``."""
+    c, h, w = x.shape
+    oh = (h - kernel) // stride + 1
+    ow = (w - kernel) // stride + 1
+    views = []
+    for kr in range(kernel):
+        for kc in range(kernel):
+            v = x[:, kr : kr + (oh - 1) * stride + 1 : stride,
+                  kc : kc + (ow - 1) * stride + 1 : stride]
+            views.append(v)
+    return jnp.stack(views)
+
+
+def max_pool(x, kernel: int, stride: int):
+    """Max pooling over a CHW int8 tensor (ROFM ``Cmp.``, Table II)."""
+    return jnp.max(_pool_windows(x, kernel, stride), axis=0)
+
+
+def avg_pool(x, kernel: int, stride: int):
+    """Average pooling with floor division (ROFM ``Mul.`` with a scaling
+    factor, Table II)."""
+    s = jnp.sum(_pool_windows(x, kernel, stride).astype(jnp.int32), axis=0)
+    return clamp_i8(jnp.floor_divide(s, kernel * kernel))

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with the most boring possible jnp code (no Pallas, no blocking); pytest
+asserts exact integer equality between kernel and oracle across shape /
+stride / padding sweeps (``python/tests/``).
+
+The oracles also define the semantics the Rust reference
+(``rust/src/model/refcompute.rs``) mirrors, so kernel == oracle == Rust
+reference == cycle simulator, all bit-exact.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ops
+
+
+def cim_mvm_ref(x, w, shift: int = 0, relu: bool = False):
+    """Reference crossbar MVM: ``y = requant(x @ w)``.
+
+    ``x`` int8 ``[Cin]`` (or ``[B, Cin]``), ``w`` int8 ``[Cin, Cout]``.
+    Accumulation in int32 — exactly what a chain of 256x256 PEs with
+    in-network partial-sum addition computes.
+    """
+    acc = jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32))
+    return ops.requant(acc, shift, relu)
+
+
+def conv2d_ref(x, w, stride: int = 1, padding: int = 0,
+               shift: int = 0, relu: bool = False):
+    """Reference direct convolution.
+
+    ``x`` int8 ``[C, H, W]``, ``w`` int8 ``[M, C, K, K]`` (the Rust/
+    refcompute layout). Returns int8 ``[M, Ho, Wo]``.
+    """
+    m, c, k, _ = w.shape
+    xp = ops.pad_chw(x, padding).astype(jnp.int32)
+    _, hp, wp = xp.shape
+    oh = (hp - k) // stride + 1
+    ow = (wp - k) // stride + 1
+    acc = jnp.zeros((m, oh, ow), jnp.int32)
+    for kr in range(k):
+        for kc in range(k):
+            xs = xp[:, kr : kr + (oh - 1) * stride + 1 : stride,
+                    kc : kc + (ow - 1) * stride + 1 : stride]
+            acc = acc + jnp.einsum(
+                "chw,mc->mhw", xs, w[:, :, kr, kc].astype(jnp.int32)
+            )
+    return ops.requant(acc, shift, relu)
+
+
+def fc_ref(x, w, shift: int = 0, relu: bool = False):
+    """Reference FC layer: ``y = requant(x @ W^T)``.
+
+    ``w`` int8 ``[out, in]`` (refcompute layout).
+    """
+    acc = jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32).T)
+    return ops.requant(acc, shift, relu)
+
+
+def project_ref(x, w, stride: int, shift: int = 0):
+    """Reference 1x1 strided projection (ResNet skip), ``w`` ``[M, C]``."""
+    xs = x[:, ::stride, ::stride].astype(jnp.int32)
+    acc = jnp.einsum("chw,mc->mhw", xs, w.astype(jnp.int32))
+    return ops.requant(acc, shift, False)

@@ -1,0 +1,364 @@
+"""L2: the JAX golden model (build-time only; never on the run path).
+
+Two views of the same network, ``tiny-cnn`` from the Rust zoo
+(``rust/src/model/zoo.rs``), layer-for-layer:
+
+* :func:`tiny_cnn_int8` — the **quantized forward pass** built from the
+  L1 Pallas kernels (:mod:`~compile.kernels.com_conv`,
+  :mod:`~compile.kernels.cim_mvm`) with the shared int8 semantics of
+  :mod:`~compile.kernels.ops`. This is the function
+  ``python/compile/aot.py`` lowers to HLO text; the Rust runtime loads
+  it and the cycle simulator is checked against it bit-exactly.
+* :func:`tiny_cnn_float` — the fp32 twin used to *train* the network on
+  a synthetic dataset, so the paper's accuracy experiment ("only the
+  quantization error is considered", Section IV-A) runs end to end:
+  train fp32 → post-training-quantize → compare fp32 vs int8 accuracy.
+
+Network (zoo::tiny_cnn, input 3x16x16):
+
+====  =========================  ==========
+idx   layer                      requant
+====  =========================  ==========
+0     conv 16, 3x3, s1, p1 +ReLU  shift 7
+1     maxpool 2x2
+2     conv 32, 3x3, s1, p1 +ReLU  shift 7
+3     conv 32, 3x3, s1, p1 linear shift 7
+4     res-add(from=2) +ReLU
+5     maxpool 2x2
+6     conv 32, 3x3, s1, p1 +ReLU  shift 7
+7     avgpool 4x4
+8     flatten
+9     fc 10 (logits)              shift 7
+====  =========================  ==========
+
+Weight layouts match refcompute: conv ``[M, C, K, K]``, fc ``[out, in]``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ops, ref
+from .kernels.cim_mvm import cim_mvm
+from .kernels.com_conv import com_conv2d, w_from_mckk
+
+SHIFT = 7  # DEFAULT_REQUANT_SHIFT in rust/src/model/builder.rs
+
+# (out_ch, in_ch) of the five weight layers, in network order.
+TINY_CONV_SHAPES = [(16, 3), (32, 16), (32, 32), (32, 32)]
+TINY_FC_SHAPE = (10, 32)
+INPUT_SHAPE = (3, 16, 16)
+NUM_CLASSES = 10
+
+
+# --------------------------------------------------------------------
+# Quantized forward (the golden model)
+# --------------------------------------------------------------------
+
+DEFAULT_SHIFTS = (SHIFT,) * 5
+
+
+def tiny_cnn_int8(x, w0, w2, w3, w6, w9, shifts=DEFAULT_SHIFTS):
+    """Bit-exact int8 forward of zoo::tiny_cnn.
+
+    ``x`` int8 ``[3, 16, 16]``; conv weights int8 ``[M, C, 3, 3]``;
+    ``w9`` int8 ``[10, 32]``; ``shifts`` the per-weight-layer requant
+    shifts (the hardware's per-layer `requant_shift` field — the
+    quantizer picks power-of-two weight scales so these shifts keep
+    every layer on the input activation scale). Returns int8 logits
+    ``[10]``.
+    """
+    s0, s2, s3, s6, s9 = shifts
+    y = com_conv2d(x, w_from_mckk(w0), 1, 1, s0, True)          # conv0
+    y = ops.max_pool(y, 2, 2)                                   # pool1
+    skip = com_conv2d(y, w_from_mckk(w2), 1, 1, s2, True)       # conv2
+    y = com_conv2d(skip, w_from_mckk(w3), 1, 1, s3, False)      # conv3
+    y = ops.res_add(y, skip)                                    # res4
+    y = ops.max_pool(y, 2, 2)                                   # pool5
+    y = com_conv2d(y, w_from_mckk(w6), 1, 1, s6, True)          # conv6
+    y = ops.avg_pool(y, 4, 4)                                   # pool7
+    y = y.reshape(-1)                                           # flatten8
+    y = cim_mvm(y[None, :], jnp.transpose(w9), s9, False)       # fc9
+    return y[0]
+
+
+def tiny_cnn_int8_ref(x, w0, w2, w3, w6, w9, shifts=DEFAULT_SHIFTS):
+    """The same forward through the pure-jnp oracles (no Pallas) —
+    pytest asserts it equals :func:`tiny_cnn_int8` exactly."""
+    s0, s2, s3, s6, s9 = shifts
+    y = ref.conv2d_ref(x, w0, 1, 1, s0, True)
+    y = ops.max_pool(y, 2, 2)
+    skip = ref.conv2d_ref(y, w2, 1, 1, s2, True)
+    y = ref.conv2d_ref(skip, w3, 1, 1, s3, False)
+    y = ops.res_add(y, skip)
+    y = ops.max_pool(y, 2, 2)
+    y = ref.conv2d_ref(y, w6, 1, 1, s6, True)
+    y = ops.avg_pool(y, 4, 4)
+    y = y.reshape(-1)
+    return ref.fc_ref(y[None, :], w9, s9, False)[0]
+
+
+# --------------------------------------------------------------------
+# Float twin + training (the accuracy experiment)
+# --------------------------------------------------------------------
+
+def _conv_f32(x, w, padding):
+    """fp32 CHW conv, weight [M, C, K, K]."""
+    return jax.lax.conv_general_dilated(
+        x[None], w, (1, 1), [(padding, padding)] * 2,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+
+
+def _max_pool_f32(x, k, s):
+    return jnp.max(ops._pool_windows(x, k, s), axis=0)
+
+
+def _avg_pool_f32(x, k, s):
+    return jnp.mean(ops._pool_windows(x, k, s), axis=0)
+
+
+def tiny_cnn_float(params, x):
+    """fp32 forward with the same topology. ``params`` is the dict from
+    :func:`init_params`; ``x`` fp32 ``[3, 16, 16]``."""
+    y = jax.nn.relu(_conv_f32(x, params["w0"], 1))
+    y = _max_pool_f32(y, 2, 2)
+    skip = jax.nn.relu(_conv_f32(y, params["w2"], 1))
+    y = _conv_f32(skip, params["w3"], 1)
+    y = jax.nn.relu(y + skip)
+    y = _max_pool_f32(y, 2, 2)
+    y = jax.nn.relu(_conv_f32(y, params["w6"], 1))
+    y = _avg_pool_f32(y, 4, 4)
+    return y.reshape(-1) @ params["w9"].T
+
+
+def init_params(key):
+    """He-initialized fp32 parameters."""
+    ks = jax.random.split(key, 5)
+    def conv(k, m, c):
+        return jax.random.normal(k, (m, c, 3, 3)) * np.sqrt(2.0 / (c * 9))
+    return {
+        "w0": conv(ks[0], 16, 3),
+        "w2": conv(ks[1], 32, 16),
+        "w3": conv(ks[2], 32, 32),
+        "w6": conv(ks[3], 32, 32),
+        "w9": jax.random.normal(ks[4], TINY_FC_SHAPE) * np.sqrt(2.0 / 32),
+    }
+
+
+def class_templates(template_key):
+    """Smooth low-frequency per-class template fields (the fixed
+    "ground truth" of the synthetic task)."""
+    coarse = jax.random.normal(template_key, (NUM_CLASSES, 3, 4, 4))
+    templates = jax.image.resize(coarse, (NUM_CLASSES, 3, 16, 16), "linear")
+    return templates / jnp.max(jnp.abs(templates))
+
+
+def make_dataset(sample_key, n: int, template_key=None):
+    """Synthetic 10-class dataset: per-class template + noise,
+    normalized to [-1, 1]. ``template_key`` fixes the task (train and
+    held-out test sets must share it); ``sample_key`` draws the
+    samples."""
+    if template_key is None:
+        template_key = jax.random.PRNGKey(7)
+    templates = class_templates(template_key)
+    lkey, nkey = jax.random.split(sample_key)
+    labels = jax.random.randint(lkey, (n,), 0, NUM_CLASSES)
+    noise = 0.9 * jax.random.normal(nkey, (n, *INPUT_SHAPE))
+    x = jnp.clip(templates[labels] + noise, -1.0, 1.0)
+    return x, labels
+
+
+@jax.jit
+def _loss(params, xb, yb):
+    logits = jax.vmap(lambda x: tiny_cnn_float(params, x))(xb)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], axis=1))
+
+
+@jax.jit
+def _sgd_step(params, xb, yb, lr):
+    g = jax.grad(_loss)(params, xb, yb)
+    return jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+
+
+def train(key, steps: int = 300, batch: int = 64, lr: float = 0.05,
+          n_train: int = 512):
+    """Train the fp32 TinyCNN on the synthetic dataset; returns
+    (params, train_x, train_y)."""
+    dkey, pkey, skey = jax.random.split(key, 3)
+    x, y = make_dataset(dkey, n_train)
+    params = init_params(pkey)
+    for i in range(steps):
+        idx = jax.random.randint(
+            jax.random.fold_in(skey, i), (batch,), 0, n_train
+        )
+        params = _sgd_step(params, x[idx], y[idx], lr)
+    return params, x, y
+
+
+# --------------------------------------------------------------------
+# Post-training quantization
+# --------------------------------------------------------------------
+
+def quantize_input(x):
+    """fp32 [-1, 1] input -> int8 (scale 64)."""
+    return jnp.clip(jnp.round(x * 64.0), -128, 127).astype(jnp.int8)
+
+
+def quantize_params(params):
+    """Weight-only power-of-two quantization (no activation
+    calibration). Prefer :func:`calibrate_and_quantize` — kept for
+    tests that need shift control without a calibration set.
+
+    Returns ``(qparams, shifts)`` with shifts ordered (w0, w2, w3, w6,
+    w9).
+    """
+    import math
+
+    qparams, shifts = {}, {}
+    for k, w in params.items():
+        mx = float(jnp.max(jnp.abs(w)))
+        g = int(math.floor(math.log2(127.0 / max(mx, 1e-6))))
+        g = max(0, min(g, 14))
+        qparams[k] = jnp.clip(
+            jnp.round(w * (2.0 ** g)), -128, 127
+        ).astype(jnp.int8)
+        shifts[k] = g
+    order = ["w0", "w2", "w3", "w6", "w9"]
+    return qparams, tuple(shifts[k] for k in order)
+
+
+def _pow2_scale_exp(amax: float) -> int:
+    """Largest p with ``amax * 2**p <= 127`` (power-of-two activation
+    scale exponent)."""
+    import math
+
+    return int(math.floor(math.log2(127.0 / max(amax, 1e-6))))
+
+
+def calibrate_and_quantize(params, calib_x):
+    """Post-training quantization with activation-range calibration.
+
+    All scales are powers of two, so every layer's rescaling is exactly
+    one arithmetic right shift — the hardware's per-layer
+    ``requant_shift``. For each weight layer: weight scale ``2^g``
+    (largest fitting int8), input activation scale ``2^p_in``, output
+    activation scale ``2^p_out`` chosen from the calibration batch's
+    observed max, giving ``shift = g + p_in - p_out >= 0``. The two
+    residual-add operands (conv2's output and conv3's output) are
+    constrained to one common scale, as the ROFM adder has no
+    rescaler. This is the "only the quantization error is considered"
+    regime of Section IV-A, made concrete.
+
+    Returns ``(qparams, shifts, logit_scale_exp)``.
+    """
+    import math
+
+    # ---- float calibration: per-tensor activation maxima
+    def amax(t):
+        return float(jnp.max(jnp.abs(t)))
+
+    a0 = a2 = a3 = ares = a6 = alog = 1e-6
+    for xx in calib_x:
+        y0 = jax.nn.relu(_conv_f32(xx, params["w0"], 1))
+        p1 = _max_pool_f32(y0, 2, 2)
+        skip = jax.nn.relu(_conv_f32(p1, params["w2"], 1))
+        y3 = _conv_f32(skip, params["w3"], 1)
+        r = jax.nn.relu(y3 + skip)
+        p5 = _max_pool_f32(r, 2, 2)
+        y6 = jax.nn.relu(_conv_f32(p5, params["w6"], 1))
+        av = _avg_pool_f32(y6, 4, 4)
+        lg = av.reshape(-1) @ params["w9"].T
+        a0, a2, a3 = max(a0, amax(y0)), max(a2, amax(skip)), max(a3, amax(y3))
+        ares, a6, alog = max(ares, amax(r)), max(a6, amax(y6)), max(alog, amax(lg))
+
+    # ---- weight scales 2^g
+    g, qparams = {}, {}
+    for k, w in params.items():
+        mx = float(jnp.max(jnp.abs(w)))
+        gk = max(0, min(int(math.floor(math.log2(127.0 / max(mx, 1e-6)))), 14))
+        g[k] = gk
+        qparams[k] = jnp.clip(
+            jnp.round(w * (2.0 ** gk)), -128, 127
+        ).astype(jnp.int8)
+
+    # ---- activation scale exponents (input fixed at 2^6 = 64)
+    p_in = 6
+    p0 = _pow2_scale_exp(a0)
+    # one shared scale for the residual operands and their sum
+    p_res = _pow2_scale_exp(max(a2, a3, ares))
+    p6 = _pow2_scale_exp(a6)
+    p_log = _pow2_scale_exp(alog)
+
+    def shift(gk, pi, po):
+        # right shift only: if the layer would need a left shift,
+        # coarsen the output scale instead
+        return max(gk + pi - po, 0)
+
+    shifts = (
+        shift(g["w0"], p_in, p0),
+        shift(g["w2"], p0, p_res),
+        shift(g["w3"], p_res, p_res),
+        shift(g["w6"], p_res, p6),
+        shift(g["w9"], p6, p_log),
+    )
+    return qparams, shifts, p_log
+
+
+def accuracy_float(params, x, y) -> float:
+    logits = jax.vmap(lambda xx: tiny_cnn_float(params, xx))(x)
+    return float(jnp.mean(jnp.argmax(logits, axis=1) == y))
+
+
+def accuracy_int8(qparams, shifts, x, y) -> float:
+    """int8 accuracy through the oracle path (bit-identical to the
+    Pallas path and the Rust simulator)."""
+    @jax.jit
+    def batch(xb):
+        return jax.vmap(
+            lambda xx: tiny_cnn_int8_ref(
+                quantize_input(xx), qparams["w0"], qparams["w2"],
+                qparams["w3"], qparams["w6"], qparams["w9"], shifts,
+            )
+        )(xb)
+    logits = batch(x)
+    return float(jnp.mean(jnp.argmax(logits, axis=1) == y))
+
+
+# --------------------------------------------------------------------
+# Binary interchange with the Rust side
+# --------------------------------------------------------------------
+
+MAGIC = b"DMN1"
+
+
+def write_weights_bin(path, qparams, shifts):
+    """``artifacts/tiny_weights.bin``: magic, then for each of the five
+    weight arrays (network order) a u32 requant shift, a u32 length and
+    raw int8 bytes. Mirrored by ``rust/src/eval/accuracy.rs``."""
+    order = ["w0", "w2", "w3", "w6", "w9"]
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        for k, sh in zip(order, shifts):
+            a = np.asarray(qparams[k], dtype=np.int8).reshape(-1)
+            f.write(np.uint32(sh).tobytes())
+            f.write(np.uint32(a.size).tobytes())
+            f.write(a.tobytes())
+
+
+def write_testset_bin(path, x_i8, y):
+    """``artifacts/tiny_testset.bin``: magic, u32 count, then per image
+    a u32 label + 3*16*16 raw int8 pixels."""
+    x_i8 = np.asarray(x_i8, dtype=np.int8)
+    y = np.asarray(y, dtype=np.uint32)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(np.uint32(len(y)).tobytes())
+        for img, lbl in zip(x_i8, y):
+            f.write(np.uint32(lbl).tobytes())
+            f.write(img.reshape(-1).tobytes())

@@ -1,0 +1,71 @@
+"""AOT lowering tests: HLO text generation is deterministic, parseable
+and integer-only (the whole datapath is int8/int32 — any fp op would
+signal a quantization leak)."""
+
+import functools
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.aot import i8, to_hlo_text
+from compile.kernels.cim_mvm import cim_mvm
+from compile.kernels.com_conv import com_conv2d
+
+
+@pytest.fixture(scope="module")
+def mvm_hlo():
+    return to_hlo_text(
+        functools.partial(cim_mvm, shift=7, relu=True),
+        i8((1, 256)), i8((256, 256)),
+    )
+
+
+class TestHloText:
+    def test_starts_with_hlomodule(self, mvm_hlo):
+        assert mvm_hlo.startswith("HloModule")
+
+    def test_deterministic(self, mvm_hlo):
+        again = to_hlo_text(
+            functools.partial(cim_mvm, shift=7, relu=True),
+            i8((1, 256)), i8((256, 256)),
+        )
+        assert mvm_hlo == again
+
+    def test_returns_tuple(self, mvm_hlo):
+        # return_tuple=True: the rust side unwraps with decompose_tuple
+        assert re.search(r"ROOT .*tuple", mvm_hlo), "root must be a tuple"
+
+    def test_integer_only_datapath(self, mvm_hlo):
+        # s8/s32 everywhere; f32/f64/bf16 anywhere means a quantization
+        # leak into the AOT artifact
+        for fp in ("f32[", "f64[", "bf16[", "f16["):
+            assert fp not in mvm_hlo, f"float type {fp} leaked into HLO"
+
+    def test_conv_kernel_lowers_integer_only(self):
+        txt = to_hlo_text(
+            functools.partial(com_conv2d, stride=1, padding=1,
+                              shift=7, relu=True),
+            i8((16, 16, 16)), i8((3, 3, 16, 32)),
+        )
+        for fp in ("f32[", "f64[", "bf16[", "f16["):
+            assert fp not in txt
+
+    def test_tiny_cnn_signature(self):
+        x = i8(model.INPUT_SHAPE)
+        ws = [i8((m, c, 3, 3)) for (m, c) in model.TINY_CONV_SHAPES]
+        w9 = i8(model.TINY_FC_SHAPE)
+        txt = to_hlo_text(model.tiny_cnn_int8, x, *ws, w9)
+        # six s8 parameters, one s8[10] logits output
+        assert txt.count("parameter(") >= 6
+        assert "s8[10]" in txt
+
+    def test_shift_is_baked_statically(self):
+        # two different shifts must lower to different modules
+        a = to_hlo_text(functools.partial(cim_mvm, shift=5, relu=False),
+                        i8((1, 64)), i8((64, 64)))
+        b = to_hlo_text(functools.partial(cim_mvm, shift=6, relu=False),
+                        i8((1, 64)), i8((64, 64)))
+        assert a != b

@@ -1,0 +1,181 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Exact integer equality everywhere — int8 arithmetic has no tolerance.
+Shape/stride/padding sweeps come from `hypothesis` so the blocked
+(ragged-edge) paths are exercised, not just friendly sizes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ops, ref
+from compile.kernels.cim_mvm import cim_mvm, N_C
+from compile.kernels.com_conv import com_conv2d, w_from_mckk
+
+RNG = np.random.default_rng(0xD0311)
+
+
+def i8a(shape, bound=15):
+    return jnp.array(
+        RNG.integers(-bound, bound + 1, shape, dtype=np.int8)
+    )
+
+
+# ------------------------------------------------------------------
+# cim_mvm
+# ------------------------------------------------------------------
+
+class TestCimMvm:
+    def test_single_tile_exact(self):
+        x, w = i8a((1, 256)), i8a((256, 256))
+        got = cim_mvm(x, w, shift=7, relu=True)
+        want = ref.cim_mvm_ref(x, w, shift=7, relu=True)
+        np.testing.assert_array_equal(got, want)
+
+    def test_multi_row_blocks_chain_accumulation(self):
+        # Cin > 256: the grid's row dimension is the psum chain
+        x, w = i8a((2, 700)), i8a((700, 256))
+        np.testing.assert_array_equal(
+            cim_mvm(x, w, 4, False), ref.cim_mvm_ref(x, w, 4, False)
+        )
+
+    def test_multi_col_blocks(self):
+        x, w = i8a((1, 256)), i8a((256, 600))
+        np.testing.assert_array_equal(
+            cim_mvm(x, w, 0, False), ref.cim_mvm_ref(x, w, 0, False)
+        )
+
+    def test_ragged_both_dims(self):
+        x, w = i8a((3, 300)), i8a((300, 270))
+        np.testing.assert_array_equal(
+            cim_mvm(x, w, 7, True), ref.cim_mvm_ref(x, w, 7, True)
+        )
+
+    def test_saturation(self):
+        # max-magnitude operands force both saturation rails
+        x = jnp.full((1, 512), 127, jnp.int8)
+        w = jnp.full((512, 8), 127, jnp.int8)
+        y = cim_mvm(x, w, 0, False)
+        assert int(y[0, 0]) == 127
+        y = cim_mvm(x, -w, 0, False)
+        assert int(y[0, 0]) == -128
+
+    def test_relu_after_shift(self):
+        # acc = -127: >>7 = -1 (arithmetic), relu -> 0
+        x = jnp.array([[-1]], jnp.int8)
+        w = jnp.array([[127]], jnp.int8)
+        assert int(cim_mvm(x, w, 7, True)[0, 0]) == 0
+        assert int(cim_mvm(x, w, 7, False)[0, 0]) == -1
+
+    @settings(deadline=None, max_examples=20)
+    @given(
+        b=st.integers(1, 3),
+        cin=st.integers(1, 520),
+        cout=st.integers(1, 300),
+        shift=st.integers(0, 10),
+        relu=st.booleans(),
+    )
+    def test_property_matches_ref(self, b, cin, cout, shift, relu):
+        x, w = i8a((b, cin)), i8a((cin, cout))
+        np.testing.assert_array_equal(
+            cim_mvm(x, w, shift, relu), ref.cim_mvm_ref(x, w, shift, relu)
+        )
+
+
+# ------------------------------------------------------------------
+# com_conv2d
+# ------------------------------------------------------------------
+
+class TestComConv:
+    def test_3x3_padded(self):
+        x, w = i8a((5, 8, 8)), i8a((7, 5, 3, 3))
+        got = com_conv2d(x, w_from_mckk(w), 1, 1, 7, True)
+        np.testing.assert_array_equal(got, ref.conv2d_ref(x, w, 1, 1, 7, True))
+
+    def test_no_padding(self):
+        x, w = i8a((2, 6, 6)), i8a((3, 2, 3, 3))
+        got = com_conv2d(x, w_from_mckk(w), 1, 0, 0, False)
+        np.testing.assert_array_equal(got, ref.conv2d_ref(x, w, 1, 0, 0, False))
+
+    def test_stride_two(self):
+        x, w = i8a((2, 9, 9)), i8a((4, 2, 3, 3))
+        got = com_conv2d(x, w_from_mckk(w), 2, 1, 5, True)
+        np.testing.assert_array_equal(got, ref.conv2d_ref(x, w, 2, 1, 5, True))
+
+    def test_1x1_kernel(self):
+        x, w = i8a((6, 4, 4)), i8a((5, 6, 1, 1))
+        got = com_conv2d(x, w_from_mckk(w), 1, 0, 0, True)
+        np.testing.assert_array_equal(got, ref.conv2d_ref(x, w, 1, 0, 0, True))
+
+    def test_channel_blocking_over_256(self):
+        # C > 256 exercises the cb grid dimension (multi-tile chains)
+        x, w = i8a((300, 4, 4), 3), i8a((8, 300, 3, 3), 3)
+        got = com_conv2d(x, w_from_mckk(w), 1, 1, 7, False)
+        np.testing.assert_array_equal(got, ref.conv2d_ref(x, w, 1, 1, 7, False))
+
+    def test_5x5_kernel(self):
+        x, w = i8a((3, 10, 10)), i8a((4, 3, 5, 5))
+        got = com_conv2d(x, w_from_mckk(w), 1, 2, 6, True)
+        np.testing.assert_array_equal(got, ref.conv2d_ref(x, w, 1, 2, 6, True))
+
+    @settings(deadline=None, max_examples=15)
+    @given(
+        c=st.integers(1, 8),
+        m=st.integers(1, 8),
+        h=st.integers(3, 10),
+        k=st.sampled_from([1, 3]),
+        stride=st.integers(1, 2),
+        padding=st.integers(0, 1),
+        shift=st.integers(0, 9),
+        relu=st.booleans(),
+    )
+    def test_property_matches_ref(self, c, m, h, k, stride, padding, shift, relu):
+        if h + 2 * padding < k:
+            return
+        x, w = i8a((c, h, h)), i8a((m, c, k, k))
+        got = com_conv2d(x, w_from_mckk(w), stride, padding, shift, relu)
+        np.testing.assert_array_equal(
+            got, ref.conv2d_ref(x, w, stride, padding, shift, relu)
+        )
+
+
+# ------------------------------------------------------------------
+# ops semantics (the shared arithmetic contract)
+# ------------------------------------------------------------------
+
+class TestOps:
+    def test_requant_matches_rust_unit_cases(self):
+        # mirrors refcompute.rs requant_semantics test
+        acc = jnp.array([255, -300, 256, -1], jnp.int32)
+        y = ops.requant(acc, 0, False)
+        np.testing.assert_array_equal(np.array(y[:2]), [127, -128])
+        assert int(ops.requant(jnp.array([-300]), 0, True)[0]) == 0
+        assert int(ops.requant(jnp.array([256]), 7, False)[0]) == 2
+        # arithmetic shift: -1 >> 7 == -1
+        assert int(ops.requant(jnp.array([-1]), 7, False)[0]) == -1
+        assert int(ops.requant(jnp.array([-1]), 7, True)[0]) == 0
+
+    def test_res_add_matches_rust(self):
+        a = jnp.array([100, -100, 3], jnp.int8)
+        b = jnp.array([100, 50, 4], jnp.int8)
+        np.testing.assert_array_equal(np.array(ops.res_add(a, b)), [127, 0, 7])
+
+    def test_avg_pool_floor_division(self):
+        # sum = -3: floor(-3/4) = -1 (floor, not trunc)
+        x = jnp.array([[[1, 2], [3, -9]]], jnp.int8)
+        assert int(ops.avg_pool(x, 2, 2)[0, 0, 0]) == -1
+
+    def test_max_pool(self):
+        x = jnp.array([[[1, 5, -3, -7], [2, 0, -1, -9]]], jnp.int8)
+        np.testing.assert_array_equal(
+            np.array(ops.max_pool(x, 2, 2)[0]), [[5, -1]]
+        )
+
+    @settings(deadline=None, max_examples=20)
+    @given(c=st.integers(1, 4), h=st.sampled_from([2, 4, 6]))
+    def test_max_pool_bounds_avg_pool(self, c, h):
+        x = i8a((c, h, h), 100)
+        mx, av = ops.max_pool(x, 2, 2), ops.avg_pool(x, 2, 2)
+        assert bool(jnp.all(mx >= av))

@@ -1,0 +1,175 @@
+"""L2 model tests: quantized forward vs oracle, training, quantization,
+and the artifact interchange formats."""
+
+import json
+import os
+import struct
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ops
+
+RNG = np.random.default_rng(1)
+
+
+def rand_weights():
+    ws = [
+        jnp.array(RNG.integers(-15, 16, (m, c, 3, 3), dtype=np.int8))
+        for (m, c) in model.TINY_CONV_SHAPES
+    ]
+    w9 = jnp.array(RNG.integers(-15, 16, model.TINY_FC_SHAPE, dtype=np.int8))
+    return ws, w9
+
+
+class TestTinyCnnInt8:
+    def test_pallas_equals_oracle(self):
+        ws, w9 = rand_weights()
+        x = jnp.array(RNG.integers(-31, 32, model.INPUT_SHAPE, dtype=np.int8))
+        a = model.tiny_cnn_int8(x, *ws, w9)
+        b = model.tiny_cnn_int8_ref(x, *ws, w9)
+        np.testing.assert_array_equal(a, b)
+
+    def test_output_shape_and_dtype(self):
+        ws, w9 = rand_weights()
+        x = jnp.zeros(model.INPUT_SHAPE, jnp.int8)
+        y = model.tiny_cnn_int8(x, *ws, w9)
+        assert y.shape == (10,)
+        assert y.dtype == jnp.int8
+
+    def test_custom_shifts_change_scale(self):
+        ws, w9 = rand_weights()
+        x = jnp.array(RNG.integers(-31, 32, model.INPUT_SHAPE, dtype=np.int8))
+        y7 = model.tiny_cnn_int8_ref(x, *ws, w9, (7,) * 5)
+        y9 = model.tiny_cnn_int8_ref(x, *ws, w9, (9, 7, 7, 7, 7))
+        assert not np.array_equal(np.array(y7), np.array(y9))
+
+    def test_deterministic(self):
+        ws, w9 = rand_weights()
+        x = jnp.array(RNG.integers(-31, 32, model.INPUT_SHAPE, dtype=np.int8))
+        a = model.tiny_cnn_int8(x, *ws, w9)
+        b = model.tiny_cnn_int8(x, *ws, w9)
+        np.testing.assert_array_equal(a, b)
+
+
+class TestTrainingAndQuantization:
+    @pytest.fixture(scope="class")
+    def trained(self):
+        params, x, y = model.train(jax.random.PRNGKey(3), steps=250)
+        return params, x, y
+
+    def test_float_learns(self, trained):
+        params, x, y = trained
+        acc = model.accuracy_float(params, x[:128], y[:128])
+        assert acc > 0.75, f"train accuracy {acc}"
+
+    def test_quantization_preserves_accuracy(self, trained):
+        params, x, y = trained
+        qp, shifts, _ = model.calibrate_and_quantize(params, x[:32])
+        acc_f = model.accuracy_float(params, x[:128], y[:128])
+        acc_q = model.accuracy_int8(qp, shifts, x[:128], y[:128])
+        assert acc_q > acc_f - 0.1, f"int8 {acc_q} vs fp32 {acc_f}"
+
+    def test_shifts_are_nonnegative_and_small(self, trained):
+        params, x, _ = trained
+        _, shifts, _ = model.calibrate_and_quantize(params, x[:16])
+        assert all(0 <= s <= 15 for s in shifts), shifts
+
+    def test_quantized_weights_are_int8(self, trained):
+        params, x, _ = trained
+        qp, _, _ = model.calibrate_and_quantize(params, x[:16])
+        for k, v in qp.items():
+            assert v.dtype == jnp.int8, k
+
+
+class TestDataset:
+    def test_shared_templates_fixed_task(self):
+        x1, y1 = model.make_dataset(jax.random.PRNGKey(0), 8)
+        x2, y2 = model.make_dataset(jax.random.PRNGKey(1), 8)
+        # different samples, same task: same label space, same shapes
+        assert x1.shape == x2.shape == (8, *model.INPUT_SHAPE)
+        assert not np.array_equal(np.array(x1), np.array(x2))
+
+    def test_input_range(self):
+        x, _ = model.make_dataset(jax.random.PRNGKey(0), 16)
+        assert float(jnp.max(jnp.abs(x))) <= 1.0
+
+    def test_quantize_input_range(self):
+        x, _ = model.make_dataset(jax.random.PRNGKey(0), 4)
+        q = model.quantize_input(x[0])
+        assert q.dtype == jnp.int8
+        assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= 64
+
+
+class TestInterchangeFormats:
+    def test_weights_bin_roundtrip(self):
+        ws, w9 = rand_weights()
+        qp = {"w0": ws[0], "w2": ws[1], "w3": ws[2], "w6": ws[3], "w9": w9}
+        shifts = (8, 11, 8, 9, 6)
+        with tempfile.NamedTemporaryFile(suffix=".bin") as f:
+            model.write_weights_bin(f.name, qp, shifts)
+            raw = open(f.name, "rb").read()
+        assert raw[:4] == model.MAGIC
+        off = 4
+        for key, sh in zip(["w0", "w2", "w3", "w6", "w9"], shifts):
+            got_shift, n = struct.unpack_from("<II", raw, off)
+            off += 8
+            data = np.frombuffer(raw, np.int8, n, off)
+            off += n
+            assert got_shift == sh
+            np.testing.assert_array_equal(
+                data, np.asarray(qp[key], np.int8).reshape(-1)
+            )
+        assert off == len(raw)
+
+    def test_testset_bin_roundtrip(self):
+        x = RNG.integers(-64, 65, (3, *model.INPUT_SHAPE)).astype(np.int8)
+        y = np.array([1, 5, 9], np.uint32)
+        with tempfile.NamedTemporaryFile(suffix=".bin") as f:
+            model.write_testset_bin(f.name, x, y)
+            raw = open(f.name, "rb").read()
+        assert raw[:4] == model.MAGIC
+        (count,) = struct.unpack_from("<I", raw, 4)
+        assert count == 3
+        off = 8
+        for i in range(3):
+            (lbl,) = struct.unpack_from("<I", raw, off)
+            off += 4
+            img = np.frombuffer(raw, np.int8, 768, off)
+            off += 768
+            assert lbl == y[i]
+            np.testing.assert_array_equal(img, x[i].reshape(-1))
+
+
+class TestArtifacts:
+    """Validate the built artifacts directory (requires `make artifacts`)."""
+
+    ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+    @pytest.fixture(autouse=True)
+    def _skip_without_artifacts(self):
+        if not os.path.exists(os.path.join(self.ART, "manifest.json")):
+            pytest.skip("artifacts not built (run `make artifacts`)")
+
+    def test_manifest_lists_all_artifacts(self):
+        manifest = json.load(open(os.path.join(self.ART, "manifest.json")))
+        for name in [
+            "tiny_cnn_int8.hlo.txt", "tiny_trained_int8.hlo.txt",
+            "cim_mvm_256.hlo.txt", "com_conv_k3.hlo.txt",
+            "tiny_weights.bin", "tiny_testset.bin",
+        ]:
+            assert name in manifest, name
+            assert os.path.exists(os.path.join(self.ART, name)), name
+
+    def test_hlo_text_is_parseable_prefix(self):
+        txt = open(os.path.join(self.ART, "tiny_cnn_int8.hlo.txt")).read()
+        assert txt.startswith("HloModule"), txt[:40]
+
+    def test_accuracy_json_reports_quantization_gap(self):
+        acc = json.load(open(os.path.join(self.ART, "accuracy.json")))
+        assert 0.5 < acc["int8_accuracy"] <= 1.0
+        assert acc["int8_accuracy"] > acc["fp32_accuracy"] - 0.1

@@ -1,0 +1,41 @@
+//! Ablation: chip-aligned chain placement. A psum chain straddling a
+//! chip boundary pays 0.55 pJ/b transceiver energy per hop instead of
+//! 0.05 pJ/b mesh energy; aligning chains to chip boundaries trades a
+//! few pad tiles for that energy.
+
+use domino::coordinator::{ArchConfig, Compiler};
+use domino::energy::{energy_of, CimModel};
+use domino::model::zoo;
+
+fn main() {
+    println!("chip-aligned chain placement (multi-chip workloads)\n");
+    println!(
+        "{:<18} {:>18} {:>18} {:>14} {:>12}",
+        "model", "interchip uJ base", "interchip aligned", "tiles (pad)", "energy x"
+    );
+    let cim = CimModel::generic_sram();
+    for (net, _) in zoo::table4_workloads() {
+        let base = Compiler::default().compile_analysis(&net).unwrap();
+        let mut arch = ArchConfig::default();
+        arch.chip_aligned_chains = true;
+        let aligned = Compiler::new(arch).compile_analysis(&net).unwrap();
+        let eb = energy_of(
+            &domino::perfmodel::estimate(&base).unwrap().counters,
+            &cim,
+        );
+        let ea = energy_of(
+            &domino::perfmodel::estimate(&aligned).unwrap().counters,
+            &cim,
+        );
+        println!(
+            "{:<18} {:>17.3} {:>18.3} {:>8} (+{:>3}) {:>11.3}x",
+            net.name,
+            1e6 * eb.interchip,
+            1e6 * ea.interchip,
+            aligned.total_tiles,
+            aligned.total_tiles as isize - base.total_tiles as isize,
+            eb.total() / ea.total(),
+        );
+        assert!(ea.interchip <= eb.interchip, "{}", net.name);
+    }
+}

@@ -1,0 +1,37 @@
+//! Experiment A1 — COM dataflow vs the conventional WS + im2col
+//! baseline on identical networks and CIM arrays: how much data
+//! movement does computing-on-the-move remove? (The paper's Section
+//! III claim, quantified per workload.)
+
+use domino::baselines::ws_im2col;
+use domino::benchutil::bench;
+use domino::counterparts::all_comparisons;
+use domino::eval::compile_comparison;
+
+fn main() {
+    println!("A1 — data movement: WS+im2col baseline vs COM (same MACs)\n");
+    println!(
+        "{:<18} {:>16} {:>16} {:>12} {:>12}",
+        "workload", "COM on-chip uJ", "im2col on-chip uJ", "movement x", "total x"
+    );
+    for comp in all_comparisons() {
+        let program = compile_comparison(&comp).unwrap();
+        let cim = comp.domino_cim_model();
+        let ab = ws_im2col::ablate(&program, &cim).unwrap();
+        println!(
+            "{:<18} {:>16.2} {:>17.2} {:>11.1}x {:>11.2}x",
+            comp.counterpart.model,
+            1e6 * ab.com.onchip_data(),
+            1e6 * ab.baseline.onchip_data(),
+            ab.movement_ratio(),
+            ab.total_ratio()
+        );
+    }
+    println!();
+    let comp = all_comparisons().remove(0);
+    let program = compile_comparison(&comp).unwrap();
+    let cim = comp.domino_cim_model();
+    bench("a1: vgg11 ablation", 10, || {
+        std::hint::black_box(ws_im2col::ablate(&program, &cim).unwrap());
+    });
+}

@@ -1,0 +1,15 @@
+//! Calibration-sensitivity ablation: sweep the one free constant (the
+//! Noxim-derived on-chip link energy) and show the headline results do
+//! not depend on the chosen value — see EXPERIMENTS.md §Calibration.
+
+use domino::benchutil::bench;
+use domino::eval::sensitivity::{render, sweep, DEFAULT_GRID};
+
+fn main() {
+    let rows = sweep(&DEFAULT_GRID).expect("sweep");
+    print!("{}", render(&rows));
+    println!();
+    bench("link-energy sweep (5 points x 5 workloads)", 5, || {
+        std::hint::black_box(sweep(&DEFAULT_GRID).unwrap());
+    });
+}

@@ -1,0 +1,69 @@
+//! L3 performance harness (§Perf): cycle-engine throughput on
+//! progressively larger workloads — the optimization target for the
+//! performance pass (EXPERIMENTS.md §Perf records before/after).
+
+use domino::benchutil::bench;
+use domino::coordinator::Compiler;
+use domino::model::{zoo, NetworkBuilder, TensorShape};
+use domino::sim::Simulator;
+use domino::testutil::Rng;
+
+fn main() {
+    println!("L3 engine performance\n");
+
+    // single conv layers of growing size
+    for (c, m, h) in [(16usize, 16usize, 16usize), (64, 64, 16), (64, 64, 32), (128, 128, 32)] {
+        let net = NetworkBuilder::new("perf", TensorShape::new(c, h, h))
+            .conv(m, 3, 1, 1)
+            .build();
+        let program = Compiler::default().compile(&net).unwrap();
+        let mut rng = Rng::new(9);
+        let input = rng.i8_vec(net.input_len(), 31);
+        let macs = net.total_macs().unwrap();
+        let s = bench(
+            &format!("conv {c}x{h}x{h} -> {m} ({:.1} MMAC)", macs as f64 / 1e6),
+            5,
+            || {
+                let mut sim = Simulator::new(&program);
+                std::hint::black_box(sim.run_image(&input).unwrap());
+            },
+        );
+        println!(
+            "{:>56} {:.1} MMAC/s",
+            "",
+            macs as f64 / s.median.as_secs_f64() / 1e6
+        );
+    }
+
+    // whole networks
+    for name in ["tiny-cnn", "resnet18-cifar10"] {
+        let net = zoo::by_name(name).unwrap();
+        let program = Compiler::default().compile(&net).unwrap();
+        let mut rng = Rng::new(10);
+        let input = rng.i8_vec(net.input_len(), 31);
+        let macs = net.total_macs().unwrap();
+        let s = bench(&format!("{name} full image"), 3, || {
+            let mut sim = Simulator::new(&program);
+            std::hint::black_box(sim.run_image(&input).unwrap());
+        });
+        println!(
+            "{:>56} {:.1} MMAC/s",
+            "",
+            macs as f64 / s.median.as_secs_f64() / 1e6
+        );
+    }
+
+    // compiler throughput
+    bench("compile vgg16-imagenet (10-chip, full weights)", 3, || {
+        let p = Compiler::new(domino::coordinator::ArchConfig::table4(10))
+            .compile(&zoo::vgg16_imagenet())
+            .unwrap();
+        std::hint::black_box(p);
+    });
+    bench("compile vgg16-imagenet (10-chip, analysis)", 5, || {
+        let p = Compiler::new(domino::coordinator::ArchConfig::table4(10))
+            .compile_analysis(&zoo::vgg16_imagenet())
+            .unwrap();
+        std::hint::black_box(p);
+    });
+}

@@ -1,0 +1,32 @@
+//! Experiment F3 — paper Fig. 3: CONV mapping + the COM timing/location
+//! trace (partial-sums moving through registers, group-sums waiting in
+//! ROFM buffers).
+
+use domino::benchutil::bench;
+use domino::coordinator::Compiler;
+use domino::model::{NetworkBuilder, TensorShape};
+use domino::sim::trace::trace_stage;
+
+fn main() {
+    let net = NetworkBuilder::new("fig3", TensorShape::new(2, 5, 5))
+        .conv(3, 3, 1, 1)
+        .build();
+    let program = Compiler::default().compile(&net).unwrap();
+    let tr = trace_stage(&program, 0, 7).unwrap();
+    print!("{}", tr.render(0, 30));
+    println!(
+        "\nevents: {} psum moves, {} group-sums queued, {} popped, {} outputs",
+        tr.count("U"),
+        tr.count("G+"),
+        tr.count("G-"),
+        tr.count("Y")
+    );
+    // rendered cells dedup per (tile, slot); both buffer directions
+    // must appear at the kernel-row heads
+    assert!(tr.count("G+") > 0 && tr.count("G-") > 0);
+
+    println!();
+    bench("fig3: trace capture (record_actions on)", 10, || {
+        std::hint::black_box(trace_stage(&program, 0, 7).unwrap());
+    });
+}

@@ -1,0 +1,35 @@
+//! Experiment F4 — paper Fig. 4: pooling by weight duplication vs block
+//! reuse, swept over the Table IV workloads. Duplication buys a shorter
+//! stage period (4x output rate before pools) at K_p² x the tiles.
+
+use domino::baselines::pooling;
+use domino::benchutil::bench;
+use domino::energy::CimModel;
+use domino::model::zoo;
+
+fn main() {
+    println!("FIG. 4 — pooling schemes (block reuse vs weight duplication)\n");
+    println!(
+        "{:<18} {:>22} {:>22} {:>10} {:>10}",
+        "model", "block-reuse t/period", "weight-dup t/period", "tiles x", "speedup"
+    );
+    let cim = CimModel::generic_sram();
+    for (net, _) in zoo::table4_workloads() {
+        let ab = pooling::ablate(&net, &cim).unwrap();
+        println!(
+            "{:<18} {:>10} / {:>9} {:>10} / {:>9} {:>9.2}x {:>9.2}x",
+            net.name,
+            ab.block_reuse.tiles,
+            ab.block_reuse.period_cycles,
+            ab.weight_dup.tiles,
+            ab.weight_dup.period_cycles,
+            ab.tile_ratio(),
+            ab.speedup()
+        );
+    }
+    println!();
+    let net = zoo::vgg11_cifar();
+    bench("fig4: both schemes, vgg11", 10, || {
+        std::hint::black_box(pooling::ablate(&net, &cim).unwrap());
+    });
+}

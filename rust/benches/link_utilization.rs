@@ -1,0 +1,62 @@
+//! Experiment N1 (Noxim substitution) — flit-level link utilization of
+//! the COM schedule per workload, and the dual-router vs single-router
+//! comparison that motivates the paper's tile structure (contribution
+//! 1: "dual routers for different usages").
+
+use domino::benchutil::bench;
+use domino::coordinator::Compiler;
+use domino::model::zoo;
+use domino::noc::flit::{dual_router_report, program_flows, simulate_flits};
+
+fn main() {
+    println!("N1 — link utilization of the COM schedule (40 Gb/s links)\n");
+    println!(
+        "{:<18} {:>8} {:>12} {:>12} {:>16} {:>10}",
+        "model", "flows", "RIFM peak", "ROFM peak", "single-router", "verdict"
+    );
+    for (net, _) in zoo::table4_workloads() {
+        let p = Compiler::default().compile_analysis(&net).unwrap();
+        let flows = program_flows(&p);
+        let r = dual_router_report(&flows);
+        let verdict = if r.single_router.peak_utilization > 1.0 {
+            "dual req'd"
+        } else {
+            "fits"
+        };
+        println!(
+            "{:<18} {:>8} {:>11.1}% {:>11.1}% {:>15.1}% {:>10}",
+            net.name,
+            flows.len(),
+            100.0 * r.rifm.peak_utilization,
+            100.0 * r.rofm.peak_utilization,
+            100.0 * r.single_router.peak_utilization,
+            verdict
+        );
+    }
+
+    println!("\nflit-accurate wormhole simulation (tiny-cnn, 40 steps):");
+    let p = Compiler::default().compile(&zoo::tiny_cnn()).unwrap();
+    let flows: Vec<_> = program_flows(&p)
+        .into_iter()
+        .filter(|f| f.src.chip == 0 && f.dst.chip == 0)
+        .collect();
+    let r = simulate_flits(&flows, 15, 16, 40);
+    println!(
+        "  {} flits delivered, {} dropped, mean latency {:.1} cycles, \
+         max {} cycles, peak queue {} flits",
+        r.flits_delivered,
+        r.flits_dropped_at_injection,
+        r.mean_latency,
+        r.max_latency,
+        r.peak_queue
+    );
+
+    println!();
+    bench("n1: vgg16 dual-router analysis", 5, || {
+        let p = Compiler::default().compile_analysis(&zoo::vgg16_imagenet()).unwrap();
+        std::hint::black_box(dual_router_report(&program_flows(&p)));
+    });
+    bench("n1: tiny-cnn flit sim 40 steps", 5, || {
+        std::hint::black_box(simulate_flits(&flows, 15, 16, 40));
+    });
+}

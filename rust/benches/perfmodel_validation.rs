@@ -1,0 +1,62 @@
+//! Experiment A3 — validate the closed-form analytic model against the
+//! cycle-accurate engine: counters must be *exactly* equal, and the
+//! analytic path must be orders of magnitude faster (that's why
+//! Table IV's full-size networks use it).
+
+use domino::benchutil::{bench, stats, time_n};
+use domino::coordinator::Compiler;
+use domino::model::zoo;
+use domino::sim::Simulator;
+use domino::testutil::Rng;
+
+fn main() {
+    println!("A3 — analytic perfmodel vs cycle engine\n");
+    for name in ["tiny-cnn"] {
+        let net = zoo::by_name(name).unwrap();
+        let program = Compiler::default().compile(&net).unwrap();
+        let est = domino::perfmodel::estimate(&program).unwrap();
+        let mut sim = Simulator::new(&program);
+        let mut rng = Rng::new(3);
+        let out = sim.run_image(&rng.i8_vec(net.input_len(), 31)).unwrap();
+        let s = sim.stats();
+        let checks = [
+            ("pe_macs", est.counters.pe_macs, s.pe_macs),
+            ("rifm_buffer", est.counters.rifm_buffer_accesses, s.rifm_buffer_accesses),
+            ("adds_8b", est.counters.adds_8b, s.adds_8b),
+            ("onchip_bits", est.counters.onchip_link_bits, s.onchip_link_bits),
+            ("rofm_buffer", est.counters.rofm_buffer_accesses, s.rofm_buffer_accesses),
+            ("latency", est.latency_cycles, out.latency_cycles),
+        ];
+        println!("{name}:");
+        for (k, a, b) in checks {
+            let err = if a == b { "exact" } else { "MISMATCH" };
+            println!("  {k:<14} analytic {a:>12} engine {b:>12}  {err}");
+            assert_eq!(a, b, "{k}");
+        }
+    }
+
+    println!();
+    let net = zoo::tiny_cnn();
+    let program = Compiler::default().compile(&net).unwrap();
+    let mut rng = Rng::new(4);
+    let input = rng.i8_vec(net.input_len(), 31);
+    let engine = stats(time_n(5, || {
+        let mut sim = Simulator::new(&program);
+        std::hint::black_box(sim.run_image(&input).unwrap());
+    }));
+    let analytic = stats(time_n(50, || {
+        std::hint::black_box(domino::perfmodel::estimate(&program).unwrap());
+    }));
+    println!(
+        "tiny-cnn: engine {:?} vs analytic {:?} per evaluation ({}x)",
+        engine.median,
+        analytic.median,
+        engine.median.as_nanos() / analytic.median.as_nanos().max(1)
+    );
+
+    // the analytic model makes Table IV tractable:
+    bench("a3: analytic estimate of vgg16-imagenet", 10, || {
+        let p = Compiler::default().compile_analysis(&zoo::vgg16_imagenet()).unwrap();
+        std::hint::black_box(domino::perfmodel::estimate(&p).unwrap());
+    });
+}

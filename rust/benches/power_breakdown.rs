@@ -1,0 +1,14 @@
+//! Experiment PB — Section IV-B-3 power breakdown per Table IV
+//! workload (on-chip 8-32 %, off-chip 0.1-3 % in the paper).
+
+use domino::benchutil::bench;
+use domino::eval::breakdown;
+
+fn main() {
+    let rows = breakdown::run().expect("breakdown");
+    print!("{}", breakdown::render(&rows));
+    println!();
+    bench("breakdown: all workloads", 5, || {
+        std::hint::black_box(breakdown::run().unwrap());
+    });
+}

@@ -1,0 +1,51 @@
+//! Experiment T3 — Table III: per-component energy and area of the
+//! Domino tile, plus the derived continuous-activity power at the
+//! 10 MHz step frequency (sanity: matches the paper's "configuration
+//! information summary").
+
+use domino::energy::table3;
+
+fn main() {
+    println!("TABLE III — component energy/area (45 nm, 1 V, 10 MHz)\n");
+    println!(
+        "{:<22} {:>14} {:>16} {:>16}",
+        "component", "energy/event", "area (um2)", "P @10MHz duty=1"
+    );
+    let rows: &[(&str, f64, f64)] = &[
+        ("RIFM buffer 256B", table3::RIFM_BUFFER_J, 826.5),
+        ("RIFM control", table3::RIFM_CTRL_J, 1400.6),
+        ("ROFM adder 8bx8x2", table3::ADDER_8B_J, 0.07),
+        ("ROFM pooling 8bx8", table3::POOL_8B_J, 34.06),
+        ("ROFM activation 8bx8", table3::ACT_8B_J, 7.07),
+        ("ROFM data buf 16KiB", table3::ROFM_BUFFER_J, 52896.0),
+        ("ROFM sched 16bx128", table3::SCHED_16B_J, 826.5),
+        ("ROFM in buf 64bx2", table3::IOBUF_64B_J, 878.9),
+        ("ROFM out buf 64bx2", table3::IOBUF_64B_J, 878.9),
+        ("ROFM control", table3::ROFM_CTRL_J, 2451.2),
+    ];
+    for (name, e, a) in rows {
+        println!(
+            "{name:<22} {:>11.4} pJ {:>13.2} um2 {:>13.3} mW",
+            1e12 * e,
+            a,
+            1e3 * e * domino::consts::STEP_HZ
+        );
+    }
+    println!(
+        "{:<22} {:>11.4} pJ/b (8 x 80 Gb/s transceivers)",
+        "inter-chip link",
+        1e12 * table3::INTERCHIP_J_PER_BIT
+    );
+    println!(
+        "{:<22} {:>11.4} pJ/b/hop (Noxim-derived, calibrated)",
+        "on-chip mesh link",
+        1e12 * domino::energy::ONCHIP_LINK_J_PER_BIT
+    );
+    use domino::energy::area::table3_um2 as a;
+    println!(
+        "\nper-tile router area: RIFM {:.1} + ROFM {:.1} um2 = {:.4} mm2",
+        a::RIFM_TOTAL,
+        a::ROFM_TOTAL,
+        domino::energy::area::router_area_mm2()
+    );
+}

@@ -1,0 +1,16 @@
+//! Experiment T4 — regenerate the paper's Table IV (all five pairwise
+//! comparisons) and time the full harness (compile + analytic model +
+//! energy pricing for every workload).
+
+use domino::benchutil::bench;
+use domino::eval::table4;
+
+fn main() {
+    let entries = table4::run().expect("table4");
+    print!("{}", table4::render(&entries));
+    println!();
+    bench("table4: full 5-comparison harness", 5, || {
+        let e = table4::run().unwrap();
+        std::hint::black_box(e);
+    });
+}

@@ -1,0 +1,12 @@
+//! Baseline dataflows Domino is compared against in the ablations.
+//!
+//! * [`ws_im2col`] — the conventional weight-stationary + im2col NoC
+//!   dataflow of [9]-style CIM accelerators ("in [9], IFMs and weights
+//!   must be loaded repeatedly during runtime"; "matrix conversion
+//!   (e.g., im2col) is compulsory in WS dataflow"). Used by experiment
+//!   A1 to quantify what COM saves.
+//! * [`pooling`] — the Fig. 4 pooling schemes (weight duplication vs
+//!   block reuse) as an ablation over tiles/period/energy.
+
+pub mod pooling;
+pub mod ws_im2col;

@@ -1,0 +1,98 @@
+//! Fig. 4 pooling-scheme ablation: weight duplication vs block reuse.
+//!
+//! "Domino duplicates weights to produce four activation results T to Y
+//! in every cycle, which aims to maintain synchronization among layers"
+//! (Fig. 4(b)) vs "the block reuse scheme that activation results are
+//! computed and stored in the last tile" (Fig. 4(c)). The trade is
+//! tiles (area) against stage period (throughput): under duplication
+//! "computation frequency before pooling layers is 4x higher".
+
+use anyhow::Result;
+
+use crate::coordinator::{ArchConfig, Compiler, PoolingScheme};
+use crate::energy::{energy_of, CimModel};
+use crate::model::Network;
+
+/// One scheme's cost/perf summary.
+#[derive(Clone, Copy, Debug)]
+pub struct SchemeReport {
+    pub tiles: usize,
+    pub chips: usize,
+    pub period_cycles: u64,
+    pub latency_cycles: u64,
+    pub energy_per_image_j: f64,
+    pub images_per_s: f64,
+}
+
+/// Fig. 4 comparison for one network.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolingAblation {
+    pub block_reuse: SchemeReport,
+    pub weight_dup: SchemeReport,
+}
+
+fn report(net: &Network, arch: ArchConfig, cim: &CimModel) -> Result<SchemeReport> {
+    let program = Compiler::new(arch).compile_analysis(net)?;
+    let est = crate::perfmodel::estimate(&program)?;
+    let e = energy_of(&est.counters, cim);
+    Ok(SchemeReport {
+        tiles: program.total_tiles,
+        chips: program.chips,
+        period_cycles: est.period_cycles,
+        latency_cycles: est.latency_cycles,
+        energy_per_image_j: e.total(),
+        images_per_s: est.images_per_s(),
+    })
+}
+
+/// Compare the two schemes on `net` (no sync budget: the schemes are
+/// isolated from throughput water-filling).
+pub fn ablate(net: &Network, cim: &CimModel) -> Result<PoolingAblation> {
+    let mut a = ArchConfig::default();
+    a.pooling = PoolingScheme::BlockReuse;
+    let block_reuse = report(net, a, cim)?;
+    let mut b = ArchConfig::default();
+    b.pooling = PoolingScheme::WeightDuplication;
+    let weight_dup = report(net, b, cim)?;
+    Ok(PoolingAblation {
+        block_reuse,
+        weight_dup,
+    })
+}
+
+impl PoolingAblation {
+    /// Area cost of duplication (tiles ratio).
+    pub fn tile_ratio(&self) -> f64 {
+        self.weight_dup.tiles as f64 / self.block_reuse.tiles as f64
+    }
+
+    /// Throughput gain of duplication.
+    pub fn speedup(&self) -> f64 {
+        self.weight_dup.images_per_s / self.block_reuse.images_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn duplication_trades_tiles_for_throughput() {
+        let net = zoo::vgg11_cifar();
+        let ab = ablate(&net, &CimModel::generic_sram()).unwrap();
+        assert!(ab.tile_ratio() > 1.5, "tile ratio {:.2}", ab.tile_ratio());
+        assert!(ab.speedup() > 1.5, "speedup {:.2}", ab.speedup());
+        // energy per image is nearly unchanged (same events)
+        let e_ratio = ab.weight_dup.energy_per_image_j / ab.block_reuse.energy_per_image_j;
+        assert!((0.8..1.2).contains(&e_ratio), "energy ratio {e_ratio:.3}");
+    }
+
+    #[test]
+    fn both_schemes_fit_the_same_network(){
+        let net = zoo::tiny_cnn();
+        let ab = ablate(&net, &CimModel::generic_sram()).unwrap();
+        assert!(ab.weight_dup.tiles >= ab.block_reuse.tiles);
+        assert!(ab.weight_dup.period_cycles <= ab.block_reuse.period_cycles);
+    }
+}

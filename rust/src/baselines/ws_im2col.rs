@@ -1,0 +1,187 @@
+//! The conventional WS + im2col baseline (experiment A1).
+//!
+//! Models a [9]-style CIM NoC running the same network with the two
+//! properties Domino's COM dataflow removes (Section III):
+//!
+//! 1. **im2col IFM expansion** — every conv input pixel is read and
+//!    transmitted once per kernel window it participates in (k²/s²
+//!    duplication), through a central buffer: "not only requires
+//!    additional circuits but also greatly increases costs of accessing
+//!    data in IFMs".
+//! 2. **central partial-sum accumulation** — each tile's partial sum
+//!    travels to a shared accumulation buffer (global-buffer access +
+//!    mean mesh distance) instead of one abutted-neighbour hop; the
+//!    accumulator buffer is read-modify-written per arriving psum.
+//!
+//! The PE work (MACs) is identical by construction — the ablation
+//! isolates *data movement*, which is the paper's claim.
+
+use crate::coordinator::program::{Program, StageKind};
+use crate::coordinator::schedule::ConvGeometry;
+use crate::energy::{energy_of, CimModel, EnergyBreakdown};
+use crate::sim::stats::Counters;
+
+/// Mean hop distance to the central accumulator/buffer on a `w x h`
+/// mesh (uniform tile positions, buffer at the mesh centre).
+pub fn mean_hops_to_center(mesh_cols: usize, mesh_rows: usize) -> f64 {
+    // E|x - c| for uniform x over 0..n-1 and c = (n-1)/2 is ~n/4.
+    (mesh_cols as f64 + mesh_rows as f64) / 4.0
+}
+
+/// Per-image event counters of the baseline running `program`'s
+/// network on the same tile allocation.
+pub fn baseline_counters(program: &Program) -> Counters {
+    let mesh_cols = program.arch.mesh_cols;
+    let mesh_rows = program.arch.tiles_per_chip.div_ceil(mesh_cols);
+    let hops = mean_hops_to_center(mesh_cols, mesh_rows);
+    let mut c = Counters::new();
+
+    c.offchip_io_bits += 8 * program.net.input_len() as u64;
+    if let Ok(out) = program.net.output_shape() {
+        c.offchip_io_bits += 8 * out.len() as u64;
+    }
+
+    for stage in &program.stages {
+        match &stage.kind {
+            StageKind::Conv(conv) => conv_baseline(conv, hops, &mut c),
+            StageKind::Fc(f) => {
+                // FC has no im2col expansion; psums still centralize.
+                for col in &f.columns {
+                    for t in &col.tiles {
+                        c.rifm_buffer_accesses += 1;
+                        c.pe_mvms += 1;
+                        c.pe_macs += (t.rows * t.cols) as u64;
+                        let pbits = (t.cols * 32) as u64;
+                        c.onchip_link_bits += (pbits as f64 * hops) as u64;
+                        c.rofm_buffer_accesses += 2; // central RMW
+                        c.adds_8b += 4 * t.cols as u64;
+                    }
+                    c.act_ops_8b += (col.c_hi - col.c_lo) as u64;
+                }
+            }
+            StageKind::Pool(p) => {
+                // pooling reads its window from the central buffer
+                let pix = (p.in_shape.h * p.in_shape.w * p.in_shape.c) as u64;
+                c.rofm_buffer_accesses += pix / 8; // 64b words
+                c.onchip_link_bits += (8.0 * pix as f64 * hops) as u64;
+                c.pool_ops_8b += pix;
+            }
+            StageKind::Res(r) => {
+                if let Some(proj) = &r.proj {
+                    conv_baseline(proj, hops, &mut c);
+                }
+                let pix = (r.shape.h * r.shape.w * r.shape.c) as u64;
+                c.onchip_link_bits += (2.0 * 8.0 * pix as f64 * hops) as u64;
+                c.rofm_buffer_accesses += pix / 8;
+                c.adds_8b += pix;
+                c.act_ops_8b += pix;
+            }
+            StageKind::Flatten => {}
+        }
+    }
+    c
+}
+
+fn conv_baseline(conv: &crate::coordinator::program::ConvStage, hops: f64, c: &mut Counters) {
+    let g = ConvGeometry::new(
+        conv.k,
+        conv.stride,
+        conv.padding,
+        conv.in_shape.h,
+        conv.in_shape.w,
+    );
+    let outs = (g.out_h * g.out_w) as u64;
+    for chain in &conv.chains {
+        let m_lanes = (chain.m_hi - chain.m_lo) as u64;
+        for t in &chain.tiles {
+            let rows = t.rows as u64;
+            // 1. im2col: the tile re-reads its (rows)-deep input slice
+            //    for EVERY output window — k² x duplication vs COM's
+            //    single streaming pass — via the central buffer.
+            let ifm_bits = rows * 8 * outs;
+            c.rifm_buffer_accesses += outs; // local receive per window
+            c.rofm_buffer_accesses += outs; // central buffer read
+            c.onchip_link_bits += (ifm_bits as f64 * hops) as u64;
+            // PE work identical to COM
+            c.pe_mvms += outs;
+            c.pe_macs += rows * t.cols as u64 * outs;
+            // 2. central accumulation: psum to the accumulator + RMW
+            let pbits = (t.cols * 32) as u64;
+            c.onchip_link_bits += (pbits as f64 * hops) as u64 * outs;
+            c.rofm_buffer_accesses += 2 * outs;
+            c.adds_8b += 4 * t.cols as u64 * outs;
+        }
+        c.act_ops_8b += m_lanes * outs;
+    }
+}
+
+/// A1 ablation result: COM vs WS+im2col on the same network + arrays.
+#[derive(Clone, Debug)]
+pub struct DataflowAblation {
+    pub com: EnergyBreakdown,
+    pub baseline: EnergyBreakdown,
+}
+
+impl DataflowAblation {
+    /// Data-movement energy ratio (baseline / COM), the A1 headline.
+    pub fn movement_ratio(&self) -> f64 {
+        self.baseline.onchip_data() / self.com.onchip_data()
+    }
+
+    /// Total-energy ratio.
+    pub fn total_ratio(&self) -> f64 {
+        self.baseline.total() / self.com.total()
+    }
+}
+
+/// Run the A1 ablation for a compiled program.
+pub fn ablate(program: &Program, cim: &CimModel) -> anyhow::Result<DataflowAblation> {
+    let est = crate::perfmodel::estimate(program)?;
+    let com = energy_of(&est.counters, cim);
+    let baseline = energy_of(&baseline_counters(program), cim);
+    Ok(DataflowAblation { com, baseline })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Compiler;
+    use crate::model::zoo;
+
+    #[test]
+    fn mean_hops_scales_with_mesh() {
+        assert!(mean_hops_to_center(16, 15) > mean_hops_to_center(4, 4));
+        assert!((mean_hops_to_center(16, 16) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn baseline_preserves_mac_count() {
+        let net = zoo::tiny_cnn();
+        let p = Compiler::default().compile(&net).unwrap();
+        let b = baseline_counters(&p);
+        let est = crate::perfmodel::estimate(&p).unwrap();
+        assert_eq!(b.pe_macs, est.counters.pe_macs, "ablation must isolate movement");
+    }
+
+    #[test]
+    fn com_moves_less_data_than_baseline() {
+        let net = zoo::vgg11_cifar();
+        let p = Compiler::default().compile(&net).unwrap();
+        let ab = ablate(&p, &CimModel::generic_sram()).unwrap();
+        assert!(
+            ab.movement_ratio() > 2.0,
+            "im2col+central baseline should move >2x the data, got {:.2}",
+            ab.movement_ratio()
+        );
+        assert!(ab.total_ratio() > 1.0);
+    }
+
+    #[test]
+    fn baseline_link_traffic_dominated_by_im2col() {
+        let net = zoo::tiny_cnn();
+        let p = Compiler::default().compile(&net).unwrap();
+        let b = baseline_counters(&p);
+        let est = crate::perfmodel::estimate(&p).unwrap();
+        assert!(b.onchip_link_bits > 4 * est.counters.onchip_link_bits);
+    }
+}

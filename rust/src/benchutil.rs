@@ -1,0 +1,68 @@
+//! Minimal benchmarking helpers shared by the `benches/` harnesses
+//! (criterion is unavailable offline; these are deliberately simple:
+//! monotonic wallclock, warmup + median-of-N).
+
+use std::time::{Duration, Instant};
+
+/// Run `f` once for warmup, then `iters` times; returns per-iteration
+/// durations.
+pub fn time_n<F: FnMut()>(iters: usize, mut f: F) -> Vec<Duration> {
+    f(); // warmup
+    (0..iters)
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed()
+        })
+        .collect()
+}
+
+/// Summary statistics of a timing run.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+pub fn stats(mut samples: Vec<Duration>) -> Stats {
+    samples.sort();
+    Stats {
+        median: samples[samples.len() / 2],
+        min: samples[0],
+        max: *samples.last().unwrap(),
+    }
+}
+
+/// Bench `f` and print one aligned row: `name  median (min..max)`.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, f: F) -> Stats {
+    let s = stats(time_n(iters, f));
+    println!(
+        "{name:<44} {:>12.3?} (min {:.3?}, max {:.3?}, n={iters})",
+        s.median, s.min, s.max
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_orders_samples() {
+        let s = stats(vec![
+            Duration::from_millis(3),
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+        ]);
+        assert_eq!(s.min, Duration::from_millis(1));
+        assert_eq!(s.median, Duration::from_millis(2));
+        assert_eq!(s.max, Duration::from_millis(3));
+    }
+
+    #[test]
+    fn time_n_returns_iters_samples() {
+        let v = time_n(5, || { std::hint::black_box(1 + 1); });
+        assert_eq!(v.len(), 5);
+    }
+}

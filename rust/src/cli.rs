@@ -1,0 +1,127 @@
+//! Hand-rolled CLI (no network access in this environment, so no clap;
+//! the parser is ~60 lines and fully tested).
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, positional args, `--key value` /
+/// `--flag` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut it = raw.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut positional = Vec::new();
+        let mut options = HashMap::new();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let takes_value = it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if takes_value {
+                    options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    options.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Self {
+            command,
+            positional,
+            options,
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.options.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+pub const USAGE: &str = "\
+domino — Computing-On-the-Move NoC/CIM accelerator (paper reproduction)
+
+USAGE: domino <COMMAND> [OPTIONS]
+
+Any model-taking command also accepts --config <file> ([arch]/[run]
+sections, see rust/src/config.rs).
+
+COMMANDS:
+  table4                 regenerate Table IV (all five comparisons)
+  breakdown              power breakdown (Section IV-B-3)
+  accuracy [--limit N]   quantization-accuracy experiment (needs artifacts)
+  map <model> [--chips N]      compile a model; print the tile mapping
+  run <model> [--images N] [--seed S] [--chips N]
+                         cycle-simulate images; print stats + energy
+  trace [--stage I]      print the Fig. 3(b) COM dataflow trace
+  pipeline <model> [--images N] [--chips N]
+                         steady-state layer-synchronized pipeline timing
+  ablate                 dataflow (A1) + pooling (Fig. 4) ablations
+  sweep [--models a,b]   mapping explorer across crossbar sizes
+  golden [--images N]    check AOT golden model vs reference (needs artifacts)
+  serve [--workers N] [--batch B] [--requests R]
+                         run the inference server over the test set
+  models                 list zoo models
+
+Models: vgg11-cifar10 resnet18-cifar10 vgg16-imagenet vgg19-imagenet
+        resnet18-imagenet tiny-cnn
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_command_and_positional() {
+        let a = parse("run tiny-cnn");
+        assert_eq!(a.command, "run");
+        assert_eq!(a.positional, vec!["tiny-cnn"]);
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let a = parse("run tiny --images 5 --verbose --seed 42");
+        assert_eq!(a.get_usize("images", 1), 5);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_u64("seed", 0), 42);
+    }
+
+    #[test]
+    fn missing_values_default() {
+        let a = parse("table4");
+        assert_eq!(a.get_usize("images", 3), 3);
+        assert!(!a.flag("nope"));
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = Args::parse(Vec::<String>::new());
+        assert_eq!(a.command, "");
+    }
+}

@@ -1,0 +1,237 @@
+//! Configuration files: a small INI/TOML-subset parser (offline
+//! environment — no serde/toml crates) covering everything the CLI can
+//! set, so experiments are reproducible from a checked-in file:
+//!
+//! ```text
+//! # comment
+//! [arch]
+//! n_c = 256
+//! n_m = 256
+//! tiles_per_chip = 240
+//! mesh_cols = 16
+//! pooling = "block-reuse"      # or "weight-duplication"
+//! sync_chips = 5               # omit to disable water-filling
+//!
+//! [run]
+//! model = "vgg11-cifar10"
+//! images = 4
+//! seed = 42
+//! ```
+//!
+//! `domino run --config exp.toml` (any subcommand accepting a model)
+//! applies `[arch]`, and `[run]` supplies defaults for the run options.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{ArchConfig, PoolingScheme};
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed config: `section.key -> value`.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    entries: BTreeMap<(String, String), Value>,
+}
+
+impl Config {
+    /// Parse the INI/TOML subset (sections, `key = value`, `#`/`;`
+    /// comments, quoted strings, integers, booleans).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split(['#', ';']).next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let Some(name) = name.strip_suffix(']') else {
+                    bail!("line {}: unterminated section header", ln + 1);
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected `key = value`, got {line:?}", ln + 1);
+            };
+            let key = k.trim().to_string();
+            if key.is_empty() {
+                bail!("line {}: empty key", ln + 1);
+            }
+            let v = v.trim();
+            let value = if let Some(q) = v.strip_prefix('"') {
+                let Some(q) = q.strip_suffix('"') else {
+                    bail!("line {}: unterminated string", ln + 1);
+                };
+                Value::Str(q.to_string())
+            } else if v == "true" || v == "false" {
+                Value::Bool(v == "true")
+            } else if let Ok(i) = v.parse::<i64>() {
+                Value::Int(i)
+            } else {
+                // bare word = string (toml would reject; we are lenient)
+                Value::Str(v.to_string())
+            };
+            entries.insert((section.clone(), key), value);
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parse {}", path.display()))
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries
+            .get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Option<usize> {
+        self.get(section, key).and_then(Value::as_usize)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key).and_then(Value::as_str)
+    }
+
+    /// Build an [`ArchConfig`] from `[arch]`, starting from defaults.
+    pub fn arch(&self) -> Result<ArchConfig> {
+        let mut a = ArchConfig::default();
+        if let Some(v) = self.get_usize("arch", "n_c") {
+            a.n_c = v;
+        }
+        if let Some(v) = self.get_usize("arch", "n_m") {
+            a.n_m = v;
+        }
+        if let Some(v) = self.get_usize("arch", "tiles_per_chip") {
+            a.tiles_per_chip = v;
+        }
+        if let Some(v) = self.get_usize("arch", "mesh_cols") {
+            a.mesh_cols = v;
+        }
+        if let Some(p) = self.get_str("arch", "pooling") {
+            a.pooling = match p {
+                "block-reuse" => PoolingScheme::BlockReuse,
+                "weight-duplication" => PoolingScheme::WeightDuplication,
+                other => bail!("[arch] pooling: unknown scheme {other:?}"),
+            };
+        }
+        if let Some(v) = self.get_usize("arch", "sync_chips") {
+            a.sync_chips = Some(v);
+        }
+        if a.n_c == 0 || a.n_m == 0 || a.mesh_cols == 0 || a.tiles_per_chip < a.mesh_cols {
+            bail!("[arch]: invalid geometry (n_c/n_m/mesh_cols must be > 0, tiles_per_chip >= mesh_cols)");
+        }
+        Ok(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment: Table IV VGG-11 point
+[arch]
+n_c = 256
+n_m = 256
+tiles_per_chip = 240
+mesh_cols = 16
+pooling = "block-reuse"
+sync_chips = 5
+
+[run]
+model = "vgg11-cifar10"
+images = 4
+seed = 42
+verbose = true
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_usize("arch", "n_c"), Some(256));
+        assert_eq!(c.get_str("run", "model"), Some("vgg11-cifar10"));
+        assert_eq!(c.get("run", "verbose"), Some(&Value::Bool(true)));
+        assert_eq!(c.get("nope", "x"), None);
+    }
+
+    #[test]
+    fn arch_from_config() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let a = c.arch().unwrap();
+        assert_eq!(a.sync_chips, Some(5));
+        assert_eq!(a.n_c, 256);
+        assert_eq!(a.pooling, PoolingScheme::BlockReuse);
+    }
+
+    #[test]
+    fn defaults_when_sections_missing() {
+        let c = Config::parse("").unwrap();
+        let a = c.arch().unwrap();
+        assert_eq!(a.n_c, crate::consts::N_C);
+        assert_eq!(a.sync_chips, None);
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("= 3").is_err());
+        assert!(Config::parse("s = \"open").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_pooling_and_geometry() {
+        let c = Config::parse("[arch]\npooling = \"diagonal\"").unwrap();
+        assert!(c.arch().is_err());
+        let c = Config::parse("[arch]\nn_c = 0").unwrap();
+        assert!(c.arch().is_err());
+    }
+
+    #[test]
+    fn comments_and_whitespace() {
+        let c = Config::parse("  [a]  # section\n k = 1 ; tail\n").unwrap();
+        assert_eq!(c.get_usize("a", "k"), Some(1));
+    }
+
+    #[test]
+    fn weight_duplication_scheme_parses() {
+        let c = Config::parse("[arch]\npooling = \"weight-duplication\"").unwrap();
+        assert_eq!(c.arch().unwrap().pooling, PoolingScheme::WeightDuplication);
+    }
+}

@@ -1,0 +1,569 @@
+//! The Domino instruction set (paper Table I / Table II).
+//!
+//! Every ROFM holds a 128-entry, 16-bit-wide schedule table (Table III).
+//! A counter indexes the table modulo the layer's period; the fetched
+//! word controls that cycle's receive, add, buffer, compute and transmit
+//! actions. Two instruction types exist:
+//!
+//! * **C-type** — convolution/FC steady-state: receive partial sums,
+//!   accumulate with the local PE output, push/pop group-sums in the
+//!   ROFM buffer, transmit.
+//! * **M-type** — "last row" duties: apply the computation-unit function
+//!   (Table II: Add / Act / Cmp / Mul / Bp) to finished sums — activation,
+//!   max/average pooling, or bypass for skip connections.
+//!
+//! The paper's Table I gives field names (`Rx Ctrl`, `Sum`, `Buffer`,
+//! `Tx Ctrl`, `Opc.`, `Func.`) but its typesetting leaves exact bit
+//! positions ambiguous; this module fixes a concrete encoding (documented
+//! per field below) and the whole stack — compiler, simulator, traces —
+//! uses it. Encode/decode round-trip is property-tested.
+//!
+//! ```text
+//! C-type (bit 0 = 0):
+//!   [15:11] rx_ctrl   5 bits, one per source {N, E, S, W, PE}
+//!   [10]    sum       accumulate received values + PE into running sum
+//!   [9:8]   buffer    00 none | 01 push | 10 pop | 11 pop+push
+//!   [7:5]   tx_ctrl   000 none | 1dd transmit to direction dd
+//!   [4:1]   opc       C-opcode (Nop/Acc/AccOut/Out)
+//! M-type (bit 0 = 1):
+//!   [15:11] rx_ctrl   as above
+//!   [10:7]  func      Table II function selector
+//!   [7:5]   -- (func overlaps unused tx bits; tx_ctrl is [6:5])
+//!   [6:5]   tx_ctrl   00 none | 01 out-port | 10 next-layer | 11 local
+//!   [4:1]   opc       M-opcode (Apply/Flush)
+//! ```
+
+/// Receive sources, one bit each in `rx_ctrl`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RxSource {
+    North = 4,
+    East = 3,
+    South = 2,
+    West = 1,
+    /// The local PE's partial-sum output port.
+    Pe = 0,
+}
+
+impl RxSource {
+    pub const ALL: [RxSource; 5] = [
+        RxSource::North,
+        RxSource::East,
+        RxSource::South,
+        RxSource::West,
+        RxSource::Pe,
+    ];
+
+    pub fn mask(self) -> u8 {
+        1 << (self as u8)
+    }
+}
+
+/// Bit-set of receive sources (5 bits).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct RxCtrl(pub u8);
+
+impl RxCtrl {
+    pub const NONE: RxCtrl = RxCtrl(0);
+
+    pub fn with(mut self, src: RxSource) -> Self {
+        self.0 |= src.mask();
+        self
+    }
+
+    pub fn contains(self, src: RxSource) -> bool {
+        self.0 & src.mask() != 0
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+}
+
+/// ROFM buffer operation for group-sums.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BufferOp {
+    #[default]
+    None = 0,
+    /// Enqueue the running sum as a new group-sum.
+    Push = 1,
+    /// Dequeue the oldest group-sum into the adder path.
+    Pop = 2,
+    /// Dequeue and enqueue in the same cycle (steady-state pipelining).
+    PopPush = 3,
+}
+
+impl BufferOp {
+    fn from_bits(b: u16) -> Self {
+        match b & 0b11 {
+            0 => BufferOp::None,
+            1 => BufferOp::Push,
+            2 => BufferOp::Pop,
+            _ => BufferOp::PopPush,
+        }
+    }
+}
+
+/// Transmit control.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TxCtrl {
+    #[default]
+    None = 0,
+    /// Transmit on the tile's configured output direction (to the next
+    /// tile of this layer's chain).
+    Chain = 1,
+    /// Transmit to the next layer's tile array (layer hand-off).
+    NextLayer = 2,
+    /// Deliver locally (final network output / chip boundary).
+    Local = 3,
+}
+
+impl TxCtrl {
+    fn from_bits(b: u16) -> Self {
+        match b & 0b11 {
+            0 => TxCtrl::None,
+            1 => TxCtrl::Chain,
+            2 => TxCtrl::NextLayer,
+            _ => TxCtrl::Local,
+        }
+    }
+}
+
+/// C-type opcodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum COpcode {
+    /// Do nothing this cycle (shielded slot — e.g. stride skipping).
+    #[default]
+    Nop = 0,
+    /// Accumulate (rx + PE into running sum), keep result local.
+    Acc = 1,
+    /// Accumulate and transmit the result.
+    AccOut = 2,
+    /// Transmit the running/popped sum without accumulating.
+    Out = 3,
+}
+
+impl COpcode {
+    fn from_bits(b: u16) -> Self {
+        match b & 0b1111 {
+            1 => COpcode::Acc,
+            2 => COpcode::AccOut,
+            3 => COpcode::Out,
+            _ => COpcode::Nop,
+        }
+    }
+}
+
+/// Table II computation-unit functions (M-type `func` field).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Func {
+    /// Adder — partial-sum accumulation.
+    #[default]
+    Add = 0,
+    /// Activation (ReLU in the evaluated networks).
+    Act = 1,
+    /// Comparison — max pooling.
+    Cmp = 2,
+    /// Multiplication with a scaling factor — average pooling.
+    Mul = 3,
+    /// Direct transmission — "skip" connection.
+    Bp = 4,
+    /// Requantize an i32 group-sum to i8 (shift+saturate). The paper
+    /// folds this into Act; we make it explicit so linear layers
+    /// (conv without ReLU) are expressible.
+    Quant = 5,
+}
+
+impl Func {
+    fn from_bits(b: u16) -> Self {
+        match b & 0b1111 {
+            1 => Func::Act,
+            2 => Func::Cmp,
+            3 => Func::Mul,
+            4 => Func::Bp,
+            5 => Func::Quant,
+            _ => Func::Add,
+        }
+    }
+}
+
+/// M-type opcodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MOpcode {
+    /// Apply `func` to the incoming value(s) this cycle.
+    #[default]
+    Apply = 0,
+    /// Apply and emit the completed result (end of a pooling window).
+    ApplyOut = 1,
+}
+
+impl MOpcode {
+    fn from_bits(b: u16) -> Self {
+        match b & 0b1111 {
+            1 => MOpcode::ApplyOut,
+            _ => MOpcode::Apply,
+        }
+    }
+}
+
+/// A decoded instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Instr {
+    C {
+        rx: RxCtrl,
+        sum: bool,
+        buffer: BufferOp,
+        tx: TxCtrl,
+        opc: COpcode,
+    },
+    M {
+        rx: RxCtrl,
+        func: Func,
+        tx: TxCtrl,
+        opc: MOpcode,
+    },
+}
+
+impl Default for Instr {
+    fn default() -> Self {
+        Instr::nop()
+    }
+}
+
+impl Instr {
+    /// The canonical idle instruction.
+    pub fn nop() -> Self {
+        Instr::C {
+            rx: RxCtrl::NONE,
+            sum: false,
+            buffer: BufferOp::None,
+            tx: TxCtrl::None,
+            opc: COpcode::Nop,
+        }
+    }
+
+    pub fn is_nop(&self) -> bool {
+        matches!(
+            self,
+            Instr::C {
+                rx: RxCtrl(0),
+                sum: false,
+                buffer: BufferOp::None,
+                tx: TxCtrl::None,
+                opc: COpcode::Nop,
+            }
+        )
+    }
+
+    /// Encode to the 16-bit schedule-table word.
+    pub fn encode(&self) -> u16 {
+        match *self {
+            Instr::C {
+                rx,
+                sum,
+                buffer,
+                tx,
+                opc,
+            } => {
+                let mut w: u16 = 0; // bit 0 = 0 (C-type)
+                w |= (opc as u16) << 1;
+                w |= (tx as u16) << 5; // [6:5]; bit 7 unused for C tx
+                w |= (buffer as u16) << 8;
+                w |= (sum as u16) << 10;
+                w |= (rx.0 as u16) << 11;
+                w
+            }
+            Instr::M { rx, func, tx, opc } => {
+                let mut w: u16 = 1; // bit 0 = 1 (M-type)
+                w |= (opc as u16) << 1;
+                w |= (tx as u16) << 5;
+                w |= (func as u16) << 7;
+                w |= (rx.0 as u16) << 11;
+                w
+            }
+        }
+    }
+
+    /// Decode a 16-bit schedule-table word.
+    pub fn decode(w: u16) -> Self {
+        let rx = RxCtrl(((w >> 11) & 0b11111) as u8);
+        if w & 1 == 0 {
+            Instr::C {
+                rx,
+                sum: (w >> 10) & 1 == 1,
+                buffer: BufferOp::from_bits(w >> 8),
+                tx: TxCtrl::from_bits(w >> 5),
+                opc: COpcode::from_bits(w >> 1),
+            }
+        } else {
+            Instr::M {
+                rx,
+                func: Func::from_bits(w >> 7),
+                tx: TxCtrl::from_bits(w >> 5),
+                opc: MOpcode::from_bits(w >> 1),
+            }
+        }
+    }
+
+    /// Shield this instruction (paper Section II-C: for stride != 1 "the
+    /// compiler will shield certain bits in control words to skip some
+    /// actions"): suppress sum/buffer/tx actions but keep receives so
+    /// dataflow timing is preserved.
+    pub fn shielded(&self) -> Self {
+        match *self {
+            Instr::C { rx, .. } => Instr::C {
+                rx,
+                sum: false,
+                buffer: BufferOp::None,
+                tx: TxCtrl::None,
+                opc: COpcode::Nop,
+            },
+            Instr::M { rx, .. } => Instr::M {
+                rx,
+                func: Func::Bp,
+                tx: TxCtrl::None,
+                opc: MOpcode::Apply,
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for Instr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        fn rx_str(rx: RxCtrl) -> String {
+            if rx.is_empty() {
+                return "-".into();
+            }
+            let mut s = String::new();
+            for (src, ch) in [
+                (RxSource::North, 'N'),
+                (RxSource::East, 'E'),
+                (RxSource::South, 'S'),
+                (RxSource::West, 'W'),
+                (RxSource::Pe, 'P'),
+            ] {
+                if rx.contains(src) {
+                    s.push(ch);
+                }
+            }
+            s
+        }
+        match *self {
+            Instr::C {
+                rx,
+                sum,
+                buffer,
+                tx,
+                opc,
+            } => write!(
+                f,
+                "C[rx={} sum={} buf={:?} tx={:?} opc={:?}]",
+                rx_str(rx),
+                sum as u8,
+                buffer,
+                tx,
+                opc
+            ),
+            Instr::M { rx, func, tx, opc } => write!(
+                f,
+                "M[rx={} func={:?} tx={:?} opc={:?}]",
+                rx_str(rx),
+                func,
+                tx,
+                opc
+            ),
+        }
+    }
+}
+
+/// A periodic instruction schedule: the contents of one ROFM's schedule
+/// table plus its period. The ROFM executes `table[counter % period]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schedule {
+    pub table: Vec<Instr>,
+    /// Counter offset applied before the modulo (aligns a tile's phase
+    /// with the arrival time of its first input packet).
+    pub phase: usize,
+}
+
+impl Schedule {
+    /// An always-idle schedule.
+    pub fn idle() -> Self {
+        Self {
+            table: vec![Instr::nop()],
+            phase: 0,
+        }
+    }
+
+    pub fn period(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Instruction for absolute cycle `t`.
+    pub fn at(&self, t: usize) -> Instr {
+        self.table[(t + self.phase) % self.table.len()]
+    }
+
+    /// Check the schedule fits the hardware table (128 x 16 b, Table III).
+    pub fn fits_hardware(&self) -> bool {
+        self.table.len() <= crate::consts::SCHEDULE_TABLE_ENTRIES
+    }
+
+    /// Number of run-length-encoded entries: the hardware stores the
+    /// periodic program as (instruction, repeat) runs — the steady-state
+    /// slot dominates a conv row, so a period of `2(P+W)` cycles
+    /// compresses to a handful of table entries. This is what must fit
+    /// the 128-entry table.
+    pub fn compressed_len(&self) -> usize {
+        let mut runs = 0usize;
+        let mut prev: Option<&Instr> = None;
+        for i in &self.table {
+            if prev != Some(i) {
+                runs += 1;
+                prev = Some(i);
+            }
+        }
+        runs.max(1)
+    }
+
+    /// Encoded table image (what would be written into the 16 b x 128
+    /// SRAM at configuration time).
+    pub fn encode(&self) -> Vec<u16> {
+        self.table.iter().map(Instr::encode).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{for_all, Rng};
+
+    fn arb_instr(rng: &mut Rng) -> Instr {
+        let rx = RxCtrl((rng.below(32)) as u8);
+        if rng.chance(0.5) {
+            Instr::C {
+                rx,
+                sum: rng.chance(0.5),
+                buffer: BufferOp::from_bits(rng.below(4) as u16),
+                tx: TxCtrl::from_bits(rng.below(4) as u16),
+                opc: COpcode::from_bits(rng.below(4) as u16),
+            }
+        } else {
+            Instr::M {
+                rx,
+                func: Func::from_bits(rng.below(6) as u16),
+                tx: TxCtrl::from_bits(rng.below(4) as u16),
+                opc: MOpcode::from_bits(rng.below(2) as u16),
+            }
+        }
+    }
+
+    #[test]
+    fn prop_encode_decode_roundtrip() {
+        for_all("isa_roundtrip", 200, |rng| {
+            let i = arb_instr(rng);
+            let w = i.encode();
+            assert_eq!(Instr::decode(w), i, "word {w:#06x}");
+        });
+    }
+
+    #[test]
+    fn type_bit_is_bit_zero() {
+        let c = Instr::nop().encode();
+        assert_eq!(c & 1, 0);
+        let m = Instr::M {
+            rx: RxCtrl::NONE,
+            func: Func::Act,
+            tx: TxCtrl::None,
+            opc: MOpcode::Apply,
+        }
+        .encode();
+        assert_eq!(m & 1, 1);
+    }
+
+    #[test]
+    fn nop_encodes_to_zero() {
+        assert_eq!(Instr::nop().encode(), 0);
+        assert!(Instr::decode(0).is_nop());
+    }
+
+    #[test]
+    fn shielding_keeps_rx_suppresses_actions() {
+        let i = Instr::C {
+            rx: RxCtrl::NONE.with(RxSource::West).with(RxSource::Pe),
+            sum: true,
+            buffer: BufferOp::PopPush,
+            tx: TxCtrl::Chain,
+            opc: COpcode::AccOut,
+        };
+        let s = i.shielded();
+        match s {
+            Instr::C {
+                rx,
+                sum,
+                buffer,
+                tx,
+                opc,
+            } => {
+                assert!(rx.contains(RxSource::West) && rx.contains(RxSource::Pe));
+                assert!(!sum);
+                assert_eq!(buffer, BufferOp::None);
+                assert_eq!(tx, TxCtrl::None);
+                assert_eq!(opc, COpcode::Nop);
+            }
+            _ => panic!("shielded C stays C"),
+        }
+    }
+
+    #[test]
+    fn schedule_indexing_with_phase() {
+        let s = Schedule {
+            table: vec![
+                Instr::nop(),
+                Instr::C {
+                    rx: RxCtrl::NONE.with(RxSource::Pe),
+                    sum: true,
+                    buffer: BufferOp::None,
+                    tx: TxCtrl::None,
+                    opc: COpcode::Acc,
+                },
+            ],
+            phase: 1,
+        };
+        assert!(!s.at(0).is_nop());
+        assert!(s.at(1).is_nop());
+        assert_eq!(s.period(), 2);
+    }
+
+    #[test]
+    fn hardware_fit_bound() {
+        let ok = Schedule {
+            table: vec![Instr::nop(); 128],
+            phase: 0,
+        };
+        assert!(ok.fits_hardware());
+        let too_big = Schedule {
+            table: vec![Instr::nop(); 129],
+            phase: 0,
+        };
+        assert!(!too_big.fits_hardware());
+    }
+
+    #[test]
+    fn rx_ctrl_masks_are_distinct() {
+        let mut seen = 0u8;
+        for s in RxSource::ALL {
+            assert_eq!(seen & s.mask(), 0);
+            seen |= s.mask();
+        }
+        assert_eq!(seen, 0b11111);
+    }
+
+    #[test]
+    fn encoded_schedule_matches_words() {
+        let s = Schedule {
+            table: vec![Instr::nop(); 3],
+            phase: 0,
+        };
+        assert_eq!(s.encode(), vec![0, 0, 0]);
+    }
+}

@@ -1,0 +1,1013 @@
+//! The Domino mapping compiler (paper Sections II-C, III).
+//!
+//! Turns a [`Network`] + weights into a [`Program`]: for every weight
+//! layer it allocates a tile array —
+//!
+//! * CONV: `K² · ⌈C/N_c⌉ · ⌈M/N_m⌉` tiles (Section III-B), kernel pixel
+//!   (kr, kc) and channel block (cb, mb) each getting their own
+//!   crossbar block; chains are placed serpentine so every partial-sum
+//!   hop is mesh-local;
+//! * FC: `⌈C_in/N_c⌉ × ⌈C_out/N_m⌉` tiles (Section III-A, Fig. 2);
+//! * pooling directly after a conv is fused into the conv's hand-off
+//!   (Section III-C) — under block reuse it costs no tiles, under
+//!   weight duplication the conv array is replicated `K_p²` times;
+//! * residual skips route through RIFM→ROFM shortcuts; projected skips
+//!   get a 1x1 conv array.
+//!
+//! It then generates every tile's periodic ROFM schedule
+//! (`super::schedule`) and RIFM configuration, and partitions the
+//! result across chips (240 tiles each in the paper's evaluation).
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::program::*;
+use crate::coordinator::schedule::{
+    conv_tile_schedule, fc_tile_schedule, ConvGeometry, ConvRole,
+};
+use crate::model::refcompute::{LayerWeights, Weights};
+use crate::model::{LayerKind, Network, Projection, TensorShape};
+use crate::noc::serpentine;
+use crate::tile::rifm::RifmConfig;
+
+/// How pooling after a conv layer is realised (paper Fig. 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolingScheme {
+    /// Fig. 4(c): activation results are stored in the last tile and
+    /// compared as new results arrive. No extra tiles; upstream arrays
+    /// run at full rate.
+    BlockReuse,
+    /// Fig. 4(b): weights are duplicated `K_p²` times so a full pooling
+    /// window is produced every cycle, keeping layers synchronised.
+    WeightDuplication,
+}
+
+/// Architecture parameters (paper Section IV-A defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct ArchConfig {
+    /// Crossbar rows per PE.
+    pub n_c: usize,
+    /// Crossbar columns per PE.
+    pub n_m: usize,
+    /// Tiles per chip (Table IV: 240).
+    pub tiles_per_chip: usize,
+    /// Mesh width (columns) per chip; 240 tiles = 16 x 15.
+    pub mesh_cols: usize,
+    pub pooling: PoolingScheme,
+    /// Keep every psum chain within one chip: when a chain would
+    /// straddle a 240-tile chip boundary, pad the allocation cursor to
+    /// the next chip so all its partial-sum hops stay on the cheap
+    /// mesh links instead of the 0.55 pJ/b inter-chip transceivers.
+    /// Costs a few pad tiles; saves inter-chip energy (ablation
+    /// `benches/ablation_chip_align.rs`).
+    pub chip_aligned_chains: bool,
+    /// Layer-synchronization duplication budget, in chips (paper
+    /// Table IV: "# of CIM cores/chip & chips" — e.g. 240x5 for
+    /// VGG-11). When set, the compiler water-fills weight duplication
+    /// over the bottleneck conv stages until the budget is exhausted,
+    /// equalizing stage periods ("maintain synchronization among
+    /// layers", Section III-C). `None` disables throughput duplication
+    /// (tile count is the Section III-B minimum).
+    pub sync_chips: Option<usize>,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        Self {
+            n_c: crate::consts::N_C,
+            n_m: crate::consts::N_M,
+            tiles_per_chip: crate::consts::TILES_PER_CHIP,
+            mesh_cols: 16,
+            pooling: PoolingScheme::BlockReuse,
+            chip_aligned_chains: false,
+            sync_chips: None,
+        }
+    }
+}
+
+impl ArchConfig {
+    /// A small-crossbar config used in tests so multi-block paths are
+    /// exercised without 256-wide layers.
+    pub fn tiny(n: usize) -> Self {
+        Self {
+            n_c: n,
+            n_m: n,
+            tiles_per_chip: 240,
+            mesh_cols: 16,
+            pooling: PoolingScheme::BlockReuse,
+            chip_aligned_chains: false,
+            sync_chips: None,
+        }
+    }
+
+    /// The paper's Table IV operating point for a given chip count
+    /// (240 tiles/chip, duplication water-filled to the budget).
+    pub fn table4(chips: usize) -> Self {
+        Self {
+            sync_chips: Some(chips),
+            ..Self::default()
+        }
+    }
+}
+
+/// The compiler.
+#[derive(Clone, Debug)]
+pub struct Compiler {
+    pub arch: ArchConfig,
+    /// Seed for synthetic weights when none are supplied.
+    pub weight_seed: u64,
+    /// Skeleton mode: skip materializing per-tile weight blocks.
+    /// Mapping, schedules, the analytic perfmodel, energy pricing and
+    /// flow analysis are all weight-independent, and VGG-scale weight
+    /// materialization costs ~0.6 s per compile (§Perf); skeleton
+    /// programs must not be fed to the functional simulator.
+    skeleton: bool,
+}
+
+impl Default for Compiler {
+    fn default() -> Self {
+        Self {
+            arch: ArchConfig::default(),
+            weight_seed: 0xD0_31_10,
+            skeleton: false,
+        }
+    }
+}
+
+impl Compiler {
+    pub fn new(arch: ArchConfig) -> Self {
+        Self {
+            arch,
+            ..Self::default()
+        }
+    }
+
+    /// Compile with freshly generated (seeded) weights.
+    pub fn compile(&self, net: &Network) -> Result<Program> {
+        if self.skeleton {
+            let weights = Weights::empty(net);
+            return self.compile_with_weights(net, &weights);
+        }
+        let weights = Weights::random(net, self.weight_seed)?;
+        self.compile_with_weights(net, &weights)
+    }
+
+    /// Compile for *analysis only* (mapping / timing / energy / NoC
+    /// flows): tile weight blocks are left empty, which skips both
+    /// synthetic-weight generation and the per-tile weight gather —
+    /// ~25x faster on VGG-scale networks. The returned program must
+    /// not be run through the functional `Simulator`.
+    pub fn compile_analysis(&self, net: &Network) -> Result<Program> {
+        let mut c = self.clone();
+        c.skeleton = true;
+        c.compile(net)
+    }
+
+    /// Compile with caller-provided weights (e.g. trained weights loaded
+    /// from the JAX golden model).
+    pub fn compile_with_weights(&self, net: &Network, weights: &Weights) -> Result<Program> {
+        let shapes = net.shapes()?;
+        if weights.per_layer.len() != net.layers.len() {
+            bail!("weights cover {} layers, network has {}", weights.per_layer.len(), net.layers.len());
+        }
+        let dups = self.plan_duplication(net, &shapes)?;
+        let mut stages: Vec<Stage> = Vec::new();
+        let mut tile_cursor = 0usize;
+        let mut in_shape = net.input;
+        // map network layer index -> stage index (for ResAdd sources)
+        let mut layer_to_stage: Vec<Option<usize>> = vec![None; net.layers.len()];
+        // duplication factor of the stage feeding the current layer:
+        // element-wise stages (pool, res-add) inherit the incoming
+        // stream rate set by their upstream conv array
+        let mut prev_dup = 1usize;
+
+        let mut i = 0usize;
+        while i < net.layers.len() {
+            let layer = &net.layers[i];
+            let out_shape = shapes[i];
+            match &layer.kind {
+                LayerKind::Conv2d {
+                    out_ch,
+                    kernel,
+                    stride,
+                    padding,
+                    relu,
+                } => {
+                    // fuse a directly following pooling layer
+                    let fused_pool = match net.layers.get(i + 1).map(|l| &l.kind) {
+                        Some(LayerKind::MaxPool2d { kernel, stride }) => Some(PoolSpec {
+                            max: true,
+                            kernel: *kernel,
+                            stride: *stride,
+                        }),
+                        Some(LayerKind::AvgPool2d { kernel, stride }) => Some(PoolSpec {
+                            max: false,
+                            kernel: *kernel,
+                            stride: *stride,
+                        }),
+                        _ => None,
+                    };
+                    let lw = match &weights.per_layer[i] {
+                        LayerWeights::Conv { w } => w.as_slice(),
+                        LayerWeights::None if self.skeleton => &[],
+                        _ => bail!("layer {i}: conv weights missing"),
+                    };
+                    let stage = self.build_conv_stage(
+                        in_shape,
+                        out_shape,
+                        *out_ch,
+                        *kernel,
+                        *stride,
+                        *padding,
+                        *relu,
+                        layer.requant_shift,
+                        lw,
+                        fused_pool,
+                        dups[i],
+                        &mut tile_cursor,
+                    )?;
+                    layer_to_stage[i] = Some(stages.len());
+                    prev_dup = dups[i];
+                    let fused = fused_pool.is_some();
+                    stages.push(Stage {
+                        layer: i,
+                        name: layer.name.clone(),
+                        kind: StageKind::Conv(stage),
+                    });
+                    if fused {
+                        // the pool layer maps to the same stage
+                        layer_to_stage[i + 1] = Some(stages.len() - 1);
+                        in_shape = shapes[i + 1];
+                        i += 2;
+                        continue;
+                    }
+                }
+                LayerKind::Fc { out_features, relu } => {
+                    let lw = match &weights.per_layer[i] {
+                        LayerWeights::Fc { w } => w.as_slice(),
+                        LayerWeights::None if self.skeleton => &[],
+                        _ => bail!("layer {i}: fc weights missing"),
+                    };
+                    let stage = self.build_fc_stage(
+                        in_shape.c,
+                        *out_features,
+                        *relu,
+                        layer.requant_shift,
+                        lw,
+                        &mut tile_cursor,
+                    )?;
+                    layer_to_stage[i] = Some(stages.len());
+                    prev_dup = 1;
+                    stages.push(Stage {
+                        layer: i,
+                        name: layer.name.clone(),
+                        kind: StageKind::Fc(stage),
+                    });
+                }
+                LayerKind::MaxPool2d { kernel, stride } => {
+                    layer_to_stage[i] = Some(stages.len());
+                    stages.push(Stage {
+                        layer: i,
+                        name: layer.name.clone(),
+                        kind: StageKind::Pool(PoolStage {
+                            max: true,
+                            kernel: *kernel,
+                            stride: *stride,
+                            in_shape,
+                            out_shape,
+                            dup: prev_dup,
+                        }),
+                    });
+                }
+                LayerKind::AvgPool2d { kernel, stride } => {
+                    layer_to_stage[i] = Some(stages.len());
+                    stages.push(Stage {
+                        layer: i,
+                        name: layer.name.clone(),
+                        kind: StageKind::Pool(PoolStage {
+                            max: false,
+                            kernel: *kernel,
+                            stride: *stride,
+                            in_shape,
+                            out_shape,
+                            dup: prev_dup,
+                        }),
+                    });
+                }
+                LayerKind::ResAdd { from, proj } => {
+                    let from_stage = layer_to_stage[*from]
+                        .with_context(|| format!("layer {i}: skip source {from} unmapped"))?;
+                    let proj_stage = match proj {
+                        Some(p) => {
+                            let lw = match &weights.per_layer[i] {
+                                LayerWeights::Proj { w } => w.as_slice(),
+                                LayerWeights::None if self.skeleton => &[],
+                                _ => bail!("layer {i}: projection weights missing"),
+                            };
+                            Some(self.build_projection_stage(
+                                shapes[*from],
+                                p,
+                                layer.requant_shift,
+                                lw,
+                                dups[i],
+                                &mut tile_cursor,
+                            )?)
+                        }
+                        None => None,
+                    };
+                    layer_to_stage[i] = Some(stages.len());
+                    // the add unit runs at the slowest incoming rate:
+                    // main path, skip-source stage, projection array
+                    let src_dup = match &stages[from_stage].kind {
+                        StageKind::Conv(c) => c.dup,
+                        StageKind::Pool(p) => p.dup,
+                        StageKind::Res(r) => r.dup,
+                        _ => 1,
+                    };
+                    let res_dup = prev_dup
+                        .min(src_dup)
+                        .min(proj_stage.as_ref().map(|p| p.dup).unwrap_or(usize::MAX));
+                    prev_dup = res_dup;
+                    stages.push(Stage {
+                        layer: i,
+                        name: layer.name.clone(),
+                        kind: StageKind::Res(ResStage {
+                            from_stage,
+                            proj: proj_stage,
+                            shape: out_shape,
+                            dup: res_dup,
+                        }),
+                    });
+                }
+                LayerKind::Flatten => {
+                    layer_to_stage[i] = Some(stages.len());
+                    stages.push(Stage {
+                        layer: i,
+                        name: layer.name.clone(),
+                        kind: StageKind::Flatten,
+                    });
+                }
+            }
+            in_shape = out_shape;
+            i += 1;
+        }
+
+        let total_tiles = tile_cursor;
+        let chips = total_tiles.div_ceil(self.arch.tiles_per_chip).max(1);
+        Ok(Program {
+            net: net.clone(),
+            arch: self.arch,
+            stages,
+            total_tiles,
+            chips,
+        })
+    }
+
+    /// Under `chip_aligned_chains`, advance the cursor to the next chip
+    /// boundary when an `n`-tile chain would otherwise straddle one
+    /// (chains longer than a chip must straddle regardless).
+    fn align_chain(&self, cursor: &mut usize, n: usize) {
+        if !self.arch.chip_aligned_chains || n > self.arch.tiles_per_chip {
+            return;
+        }
+        let per = self.arch.tiles_per_chip;
+        let used = *cursor % per;
+        if used + n > per {
+            *cursor += per - used; // pad tiles: unused crossbars
+        }
+    }
+
+    /// Split `n` into blocks of at most `cap`: returns (lo, hi) pairs.
+    fn blocks(n: usize, cap: usize) -> Vec<(usize, usize)> {
+        (0..n.div_ceil(cap))
+            .map(|b| (b * cap, ((b + 1) * cap).min(n)))
+            .collect()
+    }
+
+    /// Plan per-layer weight-duplication factors.
+    ///
+    /// Without a `sync_chips` budget this returns the pooling-scheme
+    /// factors only (1 under block reuse, `K_p²` for pre-pool convs
+    /// under weight duplication, Fig. 4(b)). With a budget it
+    /// *water-fills*: repeatedly duplicate the stage with the longest
+    /// steady-state period (`⌈pixels/dup⌉`) until the chip budget is
+    /// exhausted — this is how the paper's Table IV tile counts
+    /// (240 x 5 for VGG-11 vs the 168-tile Section III-B minimum) and
+    /// "layer synchronization" throughput arise. Each replica streams
+    /// `1/dup` of the IFM, so per-image event counts are unchanged
+    /// (window-halo traffic between replicas is below model
+    /// resolution); only the stage period shrinks.
+    fn plan_duplication(&self, net: &Network, shapes: &[TensorShape]) -> Result<Vec<usize>> {
+        struct Entry {
+            layer: usize,
+            tiles: usize,
+            pixels: usize,
+            dup: usize,
+        }
+        let mut dups = vec![1usize; net.layers.len()];
+        let mut entries: Vec<Entry> = Vec::new();
+        let mut fixed = 0usize; // non-duplicable tiles (FC grids)
+        let mut in_shape = net.input;
+        let mut i = 0usize;
+        while i < net.layers.len() {
+            let layer = &net.layers[i];
+            let out_shape = shapes[i];
+            match &layer.kind {
+                LayerKind::Conv2d {
+                    out_ch,
+                    kernel,
+                    stride,
+                    padding,
+                    ..
+                } => {
+                    let pool_k = match net.layers.get(i + 1).map(|l| &l.kind) {
+                        Some(LayerKind::MaxPool2d { kernel, .. })
+                        | Some(LayerKind::AvgPool2d { kernel, .. }) => Some(*kernel),
+                        _ => None,
+                    };
+                    let g = ConvGeometry::new(*kernel, *stride, *padding, in_shape.h, in_shape.w);
+                    let cb = in_shape.c.div_ceil(self.arch.n_c);
+                    let mb = out_ch.div_ceil(self.arch.n_m);
+                    let chain = kernel * kernel * cb;
+                    let dup0 = match (pool_k, self.arch.pooling) {
+                        (Some(kp), PoolingScheme::WeightDuplication) => kp * kp,
+                        _ => 1,
+                    };
+                    entries.push(Entry {
+                        layer: i,
+                        tiles: chain * mb,
+                        pixels: g.stream_slots(),
+                        dup: dup0,
+                    });
+                    if pool_k.is_some() {
+                        in_shape = shapes[i + 1];
+                        i += 2;
+                        continue;
+                    }
+                }
+                LayerKind::Fc { out_features, .. } => {
+                    fixed += in_shape.c.div_ceil(self.arch.n_c)
+                        * out_features.div_ceil(self.arch.n_m);
+                }
+                LayerKind::ResAdd { proj: Some(p), from } => {
+                    let src = shapes[*from];
+                    let g = ConvGeometry::new(1, p.stride, 0, src.h, src.w);
+                    let cb = src.c.div_ceil(self.arch.n_c);
+                    let mb = p.out_ch.div_ceil(self.arch.n_m);
+                    entries.push(Entry {
+                        layer: i,
+                        tiles: cb * mb,
+                        pixels: g.stream_slots(),
+                        dup: 1,
+                    });
+                }
+                _ => {}
+            }
+            in_shape = out_shape;
+            i += 1;
+        }
+
+        if let Some(chips) = self.arch.sync_chips {
+            let budget = chips * self.arch.tiles_per_chip;
+            let mut used =
+                fixed + entries.iter().map(|e| e.tiles * e.dup).sum::<usize>();
+            loop {
+                // current bottleneck stage
+                let Some(bi) = (0..entries.len()).max_by_key(|&j| {
+                    let e = &entries[j];
+                    e.pixels.div_ceil(e.dup)
+                }) else {
+                    break;
+                };
+                let e = &entries[bi];
+                // one replica cannot stream less than one pixel, and an
+                // unaffordable bottleneck means no further period gain
+                if e.dup >= e.pixels || used + e.tiles > budget {
+                    break;
+                }
+                entries[bi].dup += 1;
+                used += entries[bi].tiles;
+            }
+        }
+        for e in &entries {
+            dups[e.layer] = e.dup;
+        }
+        Ok(dups)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build_conv_stage(
+        &self,
+        in_shape: TensorShape,
+        out_shape: TensorShape,
+        out_ch: usize,
+        k: usize,
+        stride: usize,
+        padding: usize,
+        relu: bool,
+        shift: u32,
+        w: &[i8], // [M][C][K][K]
+        fused_pool: Option<PoolSpec>,
+        dup: usize,
+        tile_cursor: &mut usize,
+    ) -> Result<ConvStage> {
+        let c_in = in_shape.c;
+        let g = ConvGeometry::new(k, stride, padding, in_shape.h, in_shape.w);
+        let cblks = Self::blocks(c_in, self.arch.n_c);
+        let mblks = Self::blocks(out_ch, self.arch.n_m);
+        let mut chains = Vec::new();
+        for (mb, &(m_lo, m_hi)) in mblks.iter().enumerate() {
+            let cols = m_hi - m_lo;
+            let mut tiles = Vec::new();
+            let chain_len = k * k * cblks.len();
+            self.align_chain(tile_cursor, chain_len * dup);
+            let coords = serpentine(
+                *tile_cursor,
+                chain_len * dup,
+                self.arch.mesh_cols,
+                self.arch.tiles_per_chip,
+            );
+            *tile_cursor += chain_len * dup;
+            let mut ci = 0usize;
+            for kr in 0..k {
+                for kc in 0..k {
+                    for (cb, &(c_lo, c_hi)) in cblks.iter().enumerate() {
+                        let rows = c_hi - c_lo;
+                        // extract [rows][cols] block, c-major:
+                        // tile_w[c'][m'] = W[m_lo+m'][c_lo+c'][kr][kc]
+                        let tw = if self.skeleton {
+                            Vec::new()
+                        } else {
+                            let mut tw = vec![0i8; rows * cols];
+                            for cpr in 0..rows {
+                                let c = c_lo + cpr;
+                                let trow = &mut tw[cpr * cols..(cpr + 1) * cols];
+                                for (mpr, t) in trow.iter_mut().enumerate() {
+                                    let m = m_lo + mpr;
+                                    *t = w[((m * c_in + c) * k + kr) * k + kc];
+                                }
+                            }
+                            tw
+                        };
+                        let role = ConvRole {
+                            kr,
+                            kc,
+                            cb,
+                            is_chain_start: ci == 0,
+                            is_row_end: kc == k - 1 && cb == cblks.len() - 1,
+                            is_last: kr == k - 1 && kc == k - 1 && cb == cblks.len() - 1,
+                            is_row_head: kc == 0 && cb == 0 && kr > 0,
+                        };
+                        let schedule = conv_tile_schedule(&g, &role, relu);
+                        let shift_step = if rows <= 64 {
+                            64
+                        } else if rows <= 128 {
+                            128
+                        } else {
+                            0
+                        };
+                        tiles.push(ConvTile {
+                            kr,
+                            kc,
+                            cb,
+                            coord: coords[ci],
+                            rows,
+                            cols,
+                            weights: tw,
+                            schedule,
+                            rifm: RifmConfig {
+                                channels: rows,
+                                forward: ci + 1 < chain_len,
+                                shortcut: false,
+                                shift_step,
+                            },
+                            is_chain_start: role.is_chain_start,
+                            is_row_end: role.is_row_end,
+                            is_last: role.is_last,
+                            is_row_head: role.is_row_head,
+                        });
+                        ci += 1;
+                    }
+                }
+            }
+            chains.push(ConvChain {
+                mblock: mb,
+                m_lo,
+                m_hi,
+                tiles,
+            });
+        }
+        Ok(ConvStage {
+            in_shape,
+            out_shape,
+            k,
+            stride,
+            padding,
+            relu,
+            shift,
+            cblocks: cblks.len(),
+            mblocks: mblks.len(),
+            chains,
+            fused_pool,
+            dup,
+        })
+    }
+
+    fn build_fc_stage(
+        &self,
+        in_features: usize,
+        out_features: usize,
+        relu: bool,
+        shift: u32,
+        w: &[i8], // [out][in]
+        tile_cursor: &mut usize,
+    ) -> Result<FcStage> {
+        let rblks = Self::blocks(in_features, self.arch.n_c);
+        let cblks = Self::blocks(out_features, self.arch.n_m);
+        let mut columns = Vec::new();
+        for (cb, &(o_lo, o_hi)) in cblks.iter().enumerate() {
+            let cols = o_hi - o_lo;
+            self.align_chain(tile_cursor, rblks.len());
+            let coords = serpentine(
+                *tile_cursor,
+                rblks.len(),
+                self.arch.mesh_cols,
+                self.arch.tiles_per_chip,
+            );
+            *tile_cursor += rblks.len();
+            let mut tiles = Vec::new();
+            for (rb, &(i_lo, i_hi)) in rblks.iter().enumerate() {
+                let rows = i_hi - i_lo;
+                // tile_w[i'][o'] = W[o_lo+o'][i_lo+i']
+                let tw = if self.skeleton {
+                    Vec::new()
+                } else {
+                    let mut tw = vec![0i8; rows * cols];
+                    for ipr in 0..rows {
+                        for opr in 0..cols {
+                            tw[ipr * cols + opr] =
+                                w[(o_lo + opr) * in_features + (i_lo + ipr)];
+                        }
+                    }
+                    tw
+                };
+                tiles.push(FcTile {
+                    rblock: rb,
+                    coord: coords[rb],
+                    rows,
+                    cols,
+                    weights: tw,
+                    schedule: fc_tile_schedule(rb, rblks.len(), relu),
+                    rifm: RifmConfig {
+                        channels: rows,
+                        forward: rb + 1 < rblks.len(),
+                        shortcut: false,
+                        shift_step: 0,
+                    },
+                });
+            }
+            columns.push(FcColumn {
+                cblock: cb,
+                c_lo: o_lo,
+                c_hi: o_hi,
+                tiles,
+            });
+        }
+        Ok(FcStage {
+            in_features,
+            out_features,
+            relu,
+            shift,
+            rblocks: rblks.len(),
+            cblocks: cblks.len(),
+            columns,
+        })
+    }
+
+    fn build_projection_stage(
+        &self,
+        src_shape: TensorShape,
+        proj: &Projection,
+        shift: u32,
+        w: &[i8], // [M][C]
+        dup: usize,
+        tile_cursor: &mut usize,
+    ) -> Result<ConvStage> {
+        // A 1x1 conv: reuse the conv builder with K = 1; expand the
+        // [M][C] weight layout to [M][C][1][1] (identical memory).
+        let out_shape = proj
+            .out_shape(src_shape)
+            .context("projection output shape")?;
+        self.build_conv_stage(
+            src_shape,
+            out_shape,
+            proj.out_ch,
+            1,
+            proj.stride,
+            0,
+            false, // linear: activation happens after the residual add
+            shift,
+            w,
+            None,
+            dup,
+            tile_cursor,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::noc::chain_is_local;
+
+    #[test]
+    fn conv_tile_count_matches_formula() {
+        // Section III-B: K² x ⌈C/Nc⌉ x ⌈M/Nm⌉ tiles.
+        let net = crate::model::NetworkBuilder::new("t", TensorShape::new(300, 8, 8))
+            .conv(300, 3, 1, 1)
+            .build();
+        let p = Compiler::default().compile(&net).unwrap();
+        // ⌈300/256⌉ = 2 both ways: 9 * 2 * 2 = 36
+        assert_eq!(p.total_tiles, 36);
+    }
+
+    #[test]
+    fn fc_tile_count_matches_formula() {
+        // Section III-A: ⌈Cin/Nc⌉ x ⌈Cout/Nm⌉.
+        let net = crate::model::NetworkBuilder::new("t", TensorShape::new(1000, 1, 1))
+            .fc_logits(600)
+            .build();
+        let p = Compiler::default().compile(&net).unwrap();
+        // ⌈1000/256⌉ = 4, ⌈600/256⌉ = 3 -> 12 tiles
+        assert_eq!(p.total_tiles, 12);
+    }
+
+    #[test]
+    fn pool_after_conv_is_fused() {
+        let net = crate::model::NetworkBuilder::new("t", TensorShape::new(3, 8, 8))
+            .conv(8, 3, 1, 1)
+            .max_pool(2, 2)
+            .build();
+        let p = Compiler::default().compile(&net).unwrap();
+        assert_eq!(p.stages.len(), 1);
+        match &p.stages[0].kind {
+            StageKind::Conv(c) => {
+                assert_eq!(
+                    c.fused_pool,
+                    Some(PoolSpec {
+                        max: true,
+                        kernel: 2,
+                        stride: 2
+                    })
+                );
+                assert_eq!(c.dup, 1, "block reuse adds no tiles");
+            }
+            _ => panic!("conv stage expected"),
+        }
+    }
+
+    #[test]
+    fn weight_duplication_multiplies_tiles() {
+        let net = crate::model::NetworkBuilder::new("t", TensorShape::new(3, 8, 8))
+            .conv(8, 3, 1, 1)
+            .max_pool(2, 2)
+            .build();
+        let mut arch = ArchConfig::default();
+        arch.pooling = PoolingScheme::WeightDuplication;
+        let p = Compiler::new(arch).compile(&net).unwrap();
+        // 9 tiles x Kp² = 36
+        assert_eq!(p.total_tiles, 36);
+    }
+
+    #[test]
+    fn chains_are_mesh_local_and_fit_hardware() {
+        let net = zoo::tiny_cnn();
+        let p = Compiler::default().compile(&net).unwrap();
+        assert!(p.schedules_fit_hardware());
+        for stage in &p.stages {
+            if let StageKind::Conv(c) = &stage.kind {
+                for ch in &c.chains {
+                    let coords: Vec<_> = ch.tiles.iter().map(|t| t.coord).collect();
+                    assert!(chain_is_local(&coords), "{}: chain not local", stage.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chip_partitioning_at_240_tiles() {
+        let net = zoo::vgg16_imagenet();
+        let p = Compiler::default().compile(&net).unwrap();
+        assert!(p.total_tiles > 240, "VGG-16 spans multiple chips");
+        assert_eq!(p.chips, p.total_tiles.div_ceil(240));
+    }
+
+    #[test]
+    fn resnet_projection_gets_tiles() {
+        let net = zoo::resnet18_cifar();
+        let p = Compiler::default().compile(&net).unwrap();
+        let res_with_proj = p
+            .stages
+            .iter()
+            .filter(
+                |s| matches!(&s.kind, StageKind::Res(r) if r.proj.is_some()),
+            )
+            .count();
+        assert_eq!(res_with_proj, 3, "three downsampling blocks in ResNet-18");
+        // every projection is a K=1 conv stage
+        for s in &p.stages {
+            if let StageKind::Res(r) = &s.kind {
+                if let Some(pr) = &r.proj {
+                    assert_eq!(pr.k, 1);
+                    assert!(!pr.relu);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sync_waterfill_respects_chip_budget() {
+        let net = zoo::vgg11_cifar();
+        let base = Compiler::default().compile(&net).unwrap();
+        let filled = Compiler::new(ArchConfig::table4(5)).compile(&net).unwrap();
+        assert!(filled.total_tiles > base.total_tiles);
+        assert!(filled.total_tiles <= 5 * 240, "budget exceeded: {}", filled.total_tiles);
+        assert_eq!(filled.chips, 5);
+        // the bottleneck conv must have been duplicated
+        let max_dup = filled
+            .stages
+            .iter()
+            .filter_map(|s| match &s.kind {
+                StageKind::Conv(c) => Some(c.dup),
+                _ => None,
+            })
+            .max()
+            .unwrap();
+        assert!(max_dup > 1, "water-fill did nothing");
+    }
+
+    #[test]
+    fn sync_waterfill_equalizes_periods() {
+        // after water-filling, the spread between the slowest and
+        // fastest duplicable conv stage must shrink
+        let net = zoo::vgg11_cifar();
+        let spread = |p: &crate::coordinator::program::Program| {
+            let periods: Vec<u64> = p
+                .stages
+                .iter()
+                .filter_map(|s| match &s.kind {
+                    StageKind::Conv(c) => {
+                        let g = ConvGeometry::new(c.k, c.stride, c.padding, c.in_shape.h, c.in_shape.w);
+                        Some((g.stream_slots() as u64).div_ceil(c.dup as u64))
+                    }
+                    _ => None,
+                })
+                .collect();
+            let max = *periods.iter().max().unwrap();
+            let min = *periods.iter().min().unwrap();
+            max as f64 / min as f64
+        };
+        let base = Compiler::default().compile(&net).unwrap();
+        let filled = Compiler::new(ArchConfig::table4(5)).compile(&net).unwrap();
+        assert!(spread(&filled) < spread(&base));
+    }
+
+    #[test]
+    fn resnet_res_stages_inherit_duplication() {
+        let net = zoo::resnet18_cifar();
+        let p = Compiler::new(ArchConfig::table4(6)).compile(&net).unwrap();
+        for s in &p.stages {
+            if let StageKind::Res(r) = &s.kind {
+                assert!(r.dup >= 1);
+                if let Some(proj) = &r.proj {
+                    // the junction never runs faster than its projection
+                    assert!(r.dup <= proj.dup);
+                }
+            }
+        }
+        // at a 6-chip budget at least one res junction runs duplicated
+        assert!(
+            p.stages.iter().any(|s| matches!(&s.kind, StageKind::Res(r) if r.dup > 1)),
+            "no res stage duplicated"
+        );
+    }
+
+    #[test]
+    fn undersized_budget_degrades_to_minimum_mapping() {
+        // a 1-chip budget below the Section III-B minimum leaves every
+        // dup at 1 (never fails, never exceeds the minimum mapping)
+        let net = zoo::vgg11_cifar();
+        let base = Compiler::default().compile(&net).unwrap();
+        let p = Compiler::new(ArchConfig::table4(0)).compile(&net).unwrap();
+        assert_eq!(p.total_tiles, base.total_tiles);
+    }
+
+    #[test]
+    fn chip_aligned_chains_never_straddle() {
+        let net = zoo::vgg16_imagenet();
+        let mut arch = ArchConfig::default();
+        arch.chip_aligned_chains = true;
+        let p = Compiler::new(arch).compile_analysis(&net).unwrap();
+        for stage in &p.stages {
+            if let StageKind::Conv(c) = &stage.kind {
+                for ch in &c.chains {
+                    let chips: std::collections::BTreeSet<usize> =
+                        ch.tiles.iter().map(|t| t.coord.chip).collect();
+                    if ch.tiles.len() <= 240 {
+                        assert_eq!(chips.len(), 1, "{} chain straddles", stage.name);
+                    }
+                }
+            }
+        }
+        // padding is bounded: < one chip of waste
+        let base = Compiler::default().compile_analysis(&net).unwrap();
+        assert!(p.total_tiles - base.total_tiles < 360);
+    }
+
+    #[test]
+    fn conv_weights_land_in_correct_tiles() {
+        use crate::model::refcompute::Weights;
+        let net = crate::model::NetworkBuilder::new("t", TensorShape::new(5, 6, 6))
+            .conv(7, 3, 1, 1)
+            .build();
+        let weights = Weights::random(&net, 9).unwrap();
+        let p = Compiler::default()
+            .compile_with_weights(&net, &weights)
+            .unwrap();
+        let w = weights.per_layer[0].as_slice(); // [M=7][C=5][3][3]
+        match &p.stages[0].kind {
+            StageKind::Conv(c) => {
+                assert_eq!(c.chains.len(), 1);
+                for t in &c.chains[0].tiles {
+                    for cc in 0..t.rows {
+                        for m in 0..t.cols {
+                            let want = w[((m * 5 + cc) * 3 + t.kr) * 3 + t.kc];
+                            assert_eq!(t.weights[cc * t.cols + m], want);
+                        }
+                    }
+                }
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn fc_weights_transposed_correctly() {
+        use crate::model::refcompute::Weights;
+        let net = crate::model::NetworkBuilder::new("t", TensorShape::new(10, 1, 1))
+            .fc_logits(6)
+            .build();
+        let weights = Weights::random(&net, 11).unwrap();
+        let p = Compiler::default()
+            .compile_with_weights(&net, &weights)
+            .unwrap();
+        let w = weights.per_layer[0].as_slice(); // [out=6][in=10]
+        match &p.stages[0].kind {
+            StageKind::Fc(f) => {
+                let t = &f.columns[0].tiles[0];
+                for i in 0..10 {
+                    for o in 0..6 {
+                        assert_eq!(t.weights[i * 6 + o], w[o * 10 + i]);
+                    }
+                }
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn multiblock_chain_roles() {
+        // C=300 -> 2 cblocks; check role flags along the chain.
+        let net = crate::model::NetworkBuilder::new("t", TensorShape::new(300, 4, 4))
+            .conv(8, 3, 1, 1)
+            .build();
+        let p = Compiler::default().compile(&net).unwrap();
+        match &p.stages[0].kind {
+            StageKind::Conv(c) => {
+                let tiles = &c.chains[0].tiles;
+                assert_eq!(tiles.len(), 18);
+                assert!(tiles[0].is_chain_start);
+                // row end = kc==2 && cb==1: positions 5, 11, 17
+                assert!(tiles[5].is_row_end && !tiles[5].is_last);
+                assert!(tiles[17].is_row_end && tiles[17].is_last);
+                // row heads at kr>0, kc==0, cb==0: positions 6, 12
+                assert!(tiles[6].is_row_head);
+                assert!(tiles[12].is_row_head);
+                assert!(!tiles[0].is_row_head);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn small_channel_layers_get_shift_config() {
+        let net = zoo::tiny_cnn(); // first conv has C=3
+        let p = Compiler::default().compile(&net).unwrap();
+        match &p.stages[0].kind {
+            StageKind::Conv(c) => {
+                assert_eq!(c.chains[0].tiles[0].rifm.shift_step, 64);
+            }
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! The Domino coordinator — the paper's system contribution.
+//!
+//! * [`isa`] — the 16-bit C-type/M-type instruction encoding (Table I)
+//!   and the periodic [`isa::Schedule`] abstraction.
+//! * [`mapper`] — allocates each weight layer onto a tile array
+//!   (`K² x ⌈C/N_c⌉ x ⌈M/N_m⌉` tiles for conv, `⌈C_in/N_c⌉ x
+//!   ⌈C_out/N_m⌉` for FC), places chains serpentine in the mesh and
+//!   partitions across chips (240 tiles/chip).
+//! * [`schedule`] — generates each tile's periodic instruction program
+//!   (period `2(P+W)` for stride-1 conv rows, `2·S_p` for pooling,
+//!   Section II-C) including stride shielding.
+//! * [`program`] — the compiled artifact: per-tile configuration
+//!   (weights, RIFM config, ROFM schedule, placement) grouped into
+//!   pipeline stages, consumed by `sim::engine`.
+
+pub mod isa;
+pub mod mapper;
+pub mod program;
+pub mod schedule;
+
+pub use mapper::{ArchConfig, Compiler, PoolingScheme};
+pub use program::{Program, Stage, StageKind};

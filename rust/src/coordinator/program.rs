@@ -1,0 +1,291 @@
+//! The compiled artifact: everything a Domino array needs to run a
+//! network — per-tile weights, RIFM configuration, ROFM schedules and
+//! mesh placement — grouped into pipeline stages.
+//!
+//! A [`Program`] is produced once by the [`super::mapper::Compiler`]
+//! ("The compiler generates instructions and configuration for each tile
+//! based on initial input data and the DNN structure", Section II-C) and
+//! is immutable afterwards: at run time there is no global controller,
+//! only tiles executing their local periodic schedules.
+
+use crate::coordinator::isa::Schedule;
+use crate::coordinator::mapper::ArchConfig;
+use crate::model::{Network, TensorShape};
+use crate::noc::Coord;
+use crate::tile::rifm::RifmConfig;
+
+/// Pooling fused behind a conv layer's last tile (paper Section III-C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolSpec {
+    pub max: bool,
+    pub kernel: usize,
+    pub stride: usize,
+}
+
+/// One tile of a convolution chain.
+#[derive(Clone, Debug)]
+pub struct ConvTile {
+    /// Kernel position (row, col) this tile's weights come from.
+    pub kr: usize,
+    pub kc: usize,
+    /// Input-channel block index.
+    pub cb: usize,
+    /// Mesh placement.
+    pub coord: Coord,
+    /// Actual crossbar block dims (rows = channels of block `cb`,
+    /// cols = output channels of the chain's mblock).
+    pub rows: usize,
+    pub cols: usize,
+    /// Stationary weights, `[rows][cols]` row-major (c-major, see
+    /// `tile::pe`).
+    pub weights: Vec<i8>,
+    /// The tile's periodic ROFM instruction program.
+    pub schedule: Schedule,
+    /// RIFM stream configuration.
+    pub rifm: RifmConfig,
+    /// Chain-topology flags (derived, but precomputed for the engine).
+    pub is_chain_start: bool,
+    /// Last tile of a kernel row (kc == K-1 and cb == Cb-1): emits
+    /// group-sums.
+    pub is_row_end: bool,
+    /// The stage's final tile (row end of kernel row K-1): applies
+    /// M-type activation/pooling and emits OFM beats.
+    pub is_last: bool,
+    /// First tile of kernel rows > 0 (kc == 0, cb == 0): queues incoming
+    /// group-sums in its ROFM buffer.
+    pub is_row_head: bool,
+}
+
+/// One convolution chain: the `K² x Cb` tiles producing one
+/// output-channel block, placed serpentine so every hop is mesh-local.
+#[derive(Clone, Debug)]
+pub struct ConvChain {
+    pub mblock: usize,
+    /// Output channels covered by this chain.
+    pub m_lo: usize,
+    pub m_hi: usize,
+    pub tiles: Vec<ConvTile>,
+}
+
+/// A compiled convolution stage.
+#[derive(Clone, Debug)]
+pub struct ConvStage {
+    pub in_shape: TensorShape,
+    pub out_shape: TensorShape,
+    pub k: usize,
+    pub stride: usize,
+    pub padding: usize,
+    pub relu: bool,
+    pub shift: u32,
+    pub cblocks: usize,
+    pub mblocks: usize,
+    pub chains: Vec<ConvChain>,
+    /// Pooling performed by the last tile / during hand-off
+    /// (block-reuse scheme) or via duplicated weights.
+    pub fused_pool: Option<PoolSpec>,
+    /// With the weight-duplication scheme (Fig. 4(b)) the whole tile
+    /// array is replicated `dup` times to emit a full pooling window per
+    /// period; `dup = 1` means block reuse.
+    pub dup: usize,
+}
+
+/// One tile of an FC grid.
+#[derive(Clone, Debug)]
+pub struct FcTile {
+    pub rblock: usize,
+    pub coord: Coord,
+    pub rows: usize,
+    pub cols: usize,
+    pub weights: Vec<i8>,
+    pub schedule: Schedule,
+    pub rifm: RifmConfig,
+}
+
+/// One FC column: `⌈C_in/N_c⌉` tiles whose partial sums accumulate down
+/// the column (paper Fig. 2), producing one output-feature block.
+#[derive(Clone, Debug)]
+pub struct FcColumn {
+    pub cblock: usize,
+    pub c_lo: usize,
+    pub c_hi: usize,
+    pub tiles: Vec<FcTile>,
+}
+
+/// A compiled FC stage.
+#[derive(Clone, Debug)]
+pub struct FcStage {
+    pub in_features: usize,
+    pub out_features: usize,
+    pub relu: bool,
+    pub shift: u32,
+    pub rblocks: usize,
+    pub cblocks: usize,
+    pub columns: Vec<FcColumn>,
+}
+
+/// A standalone pooling stage: performed "during data transmission
+/// between arrays" (Section III-C) by the previous stage's boundary
+/// ROFMs; allocates no new tiles.
+#[derive(Clone, Debug)]
+pub struct PoolStage {
+    pub max: bool,
+    pub kernel: usize,
+    pub stride: usize,
+    pub in_shape: TensorShape,
+    pub out_shape: TensorShape,
+    /// Incoming stream parallelism inherited from the upstream conv
+    /// array's duplication factor (the pool units sit in `dup`
+    /// boundary ROFMs and process `dup` pixels per slot).
+    pub dup: usize,
+}
+
+/// A residual-add stage: the skip stream is routed through RIFM→ROFM
+/// shortcuts (Table II `Bp.`) and added at the junction; a projected
+/// skip runs through its own 1x1 conv tile array first.
+#[derive(Clone, Debug)]
+pub struct ResStage {
+    /// Index of the *stage* whose output is the skip source.
+    pub from_stage: usize,
+    /// Optional 1x1 projection conv (compiled like a conv stage).
+    pub proj: Option<ConvStage>,
+    pub shape: TensorShape,
+    /// Add-junction parallelism: the minimum of the incoming stream
+    /// rates (main path, skip source, projection).
+    pub dup: usize,
+}
+
+/// Stage payload.
+#[derive(Clone, Debug)]
+pub enum StageKind {
+    Conv(ConvStage),
+    Fc(FcStage),
+    Pool(PoolStage),
+    Res(ResStage),
+    Flatten,
+}
+
+/// One pipeline stage (maps 1:1 to a network layer, except pool layers
+/// fused into the preceding conv).
+#[derive(Clone, Debug)]
+pub struct Stage {
+    /// Index of the source layer in the network.
+    pub layer: usize,
+    pub name: String,
+    pub kind: StageKind,
+}
+
+impl Stage {
+    /// Tiles allocated to this stage.
+    pub fn tile_count(&self) -> usize {
+        match &self.kind {
+            StageKind::Conv(c) => c.chains.iter().map(|ch| ch.tiles.len()).sum::<usize>() * c.dup,
+            StageKind::Fc(f) => f.columns.iter().map(|c| c.tiles.len()).sum(),
+            StageKind::Res(r) => r
+                .proj
+                .as_ref()
+                .map(|p| p.chains.iter().map(|ch| ch.tiles.len()).sum::<usize>() * p.dup)
+                .unwrap_or(0),
+            StageKind::Pool(_) | StageKind::Flatten => 0,
+        }
+    }
+}
+
+/// A fully compiled network.
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub net: Network,
+    pub arch: ArchConfig,
+    pub stages: Vec<Stage>,
+    /// Total tiles allocated (across chips).
+    pub total_tiles: usize,
+    /// Chips required at `arch.tiles_per_chip`.
+    pub chips: usize,
+}
+
+impl Program {
+    /// All schedules in the program with their owning stage index
+    /// (validation/energy walks).
+    pub fn schedules(&self) -> Vec<(usize, &Schedule)> {
+        let mut out = Vec::new();
+        for (si, stage) in self.stages.iter().enumerate() {
+            match &stage.kind {
+                StageKind::Conv(c) => {
+                    for ch in &c.chains {
+                        for t in &ch.tiles {
+                            out.push((si, &t.schedule));
+                        }
+                    }
+                }
+                StageKind::Fc(f) => {
+                    for col in &f.columns {
+                        for t in &col.tiles {
+                            out.push((si, &t.schedule));
+                        }
+                    }
+                }
+                StageKind::Res(r) => {
+                    if let Some(p) = &r.proj {
+                        for ch in &p.chains {
+                            for t in &ch.tiles {
+                                out.push((si, &t.schedule));
+                            }
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Check every schedule fits the 128-entry hardware table after
+    /// run-length compression (see `isa::Schedule::compressed_len`).
+    pub fn schedules_fit_hardware(&self) -> bool {
+        self.schedules()
+            .iter()
+            .all(|(_, s)| s.compressed_len() <= crate::consts::SCHEDULE_TABLE_ENTRIES)
+    }
+
+    /// Stage index for a given layer index, if the layer got a stage of
+    /// its own (fused pools return the conv stage they were fused into).
+    pub fn stage_for_layer(&self, layer: usize) -> Option<usize> {
+        self.stages
+            .iter()
+            .position(|s| s.layer == layer)
+            .or_else(|| {
+                // fused pool: find the conv stage with matching fusion
+                self.stages.iter().position(|s| {
+                    matches!(&s.kind, StageKind::Conv(c) if c.fused_pool.is_some())
+                        && s.layer + 1 == layer
+                })
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_stage_kinds_have_zero_tiles() {
+        let s = Stage {
+            layer: 0,
+            name: "flat".into(),
+            kind: StageKind::Flatten,
+        };
+        assert_eq!(s.tile_count(), 0);
+        let p = Stage {
+            layer: 1,
+            name: "pool".into(),
+            kind: StageKind::Pool(PoolStage {
+                max: true,
+                kernel: 2,
+                stride: 2,
+                in_shape: TensorShape::new(4, 8, 8),
+                out_shape: TensorShape::new(4, 4, 4),
+                dup: 1,
+            }),
+        };
+        assert_eq!(p.tile_count(), 0);
+    }
+}

@@ -1,0 +1,513 @@
+//! Periodic instruction-schedule generation (paper Section II-C).
+//!
+//! "After cycle-accurate analyses and mathematical derivation,
+//! instructions reveal an attribute of periodicity."
+//!
+//! ## Stream and period model
+//!
+//! The IFM of a conv layer streams in *padded raster order*: rows
+//! `py ∈ [-P, H-1+P]`, and within each row `Wp = W + 2P` pixel slots
+//! (`u ∈ [0, Wp)`, `px = u - P`; padding slots carry zeros). One pixel
+//! slot costs **two** instruction cycles — sub-cycle A moves/loads the
+//! IFM beat and fires the PE, sub-cycle B moves/accumulates the partial
+//! sum (a 256-lane i32 psum beat is 8192 b, two 4000 b link beats at
+//! 40 Gb/s per 10 MHz step — the physical reason for the factor 2).
+//! Hence the steady-state period of a stride-1 conv tile is
+//! `p = 2(P + W)` cycles per kernel row, exactly the paper's formula
+//! (the paper counts one padding margin per row period; the other
+//! margin's slots are the same table entries wrapped around).
+//!
+//! For `S_c = stride ≠ 1` the same table is generated over
+//! `stride` consecutive rows (`stride · Wp` slots) with invalid slots
+//! *shielded* ("the compiler will shield certain bits in control words
+//! to skip some actions"), and for pooling rows the last tile runs
+//! M-type entries with period `2·S_p`.
+//!
+//! The `Schedule` tables here are expressed at pixel-slot granularity
+//! (one `Instr` per slot = per 2 cycles); `Schedule::compressed_len`
+//! run-length-compresses them into the 128-entry hardware table.
+//!
+//! ## Which tile does what (conv chain, output position (oy, ox))
+//!
+//! * every tile: PE-MACs the streamed pixel against its stationary
+//!   block; valid when its kernel offset (kr, kc) aligns: `u = kc +
+//!   ox·s` and row `py = kr - P + oy·s`.
+//! * chain-start tile (kr=0, kc=0, cb=0): starts a psum beat (`Acc`,
+//!   rx = {PE}), transmits (`AccOut`).
+//! * interior tiles: `AccOut` with rx = {chain-in, PE}.
+//! * kernel-row-end tiles (kc=K-1, cb=Cb-1, kr<K-1): their output is a
+//!   *group-sum* `U_g(kr)`; it is transmitted to the next kernel row's
+//!   head tile and queued there (`Buffer=Push` on arrival).
+//! * kernel-row-head tiles (kc=0, cb=0, kr>0): `Buffer=Pop` exactly one
+//!   row period after the Push — the popped group-sum seeds the row's
+//!   accumulation so sums keep moving (computing-on-the-move).
+//! * the last tile (kr=K-1 row end): M-type — `Act`/`Quant` (+ fused
+//!   `Cmp`/`Mul` pooling under the block-reuse scheme) and OFM hand-off
+//!   (`Tx=NextLayer`).
+
+use crate::coordinator::isa::{
+    BufferOp, COpcode, Func, Instr, MOpcode, RxCtrl, RxSource, Schedule, TxCtrl,
+};
+use crate::model::conv_out;
+
+/// Cycles per pixel slot (see module docs: IFM sub-cycle + psum
+/// sub-cycle).
+pub const CYCLES_PER_SLOT: usize = 2;
+
+/// Geometry of a conv stage, shared by schedule generation and the
+/// engine's slot arithmetic.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvGeometry {
+    pub k: usize,
+    pub stride: usize,
+    pub padding: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+}
+
+impl ConvGeometry {
+    pub fn new(k: usize, stride: usize, padding: usize, in_h: usize, in_w: usize) -> Self {
+        let out_h = conv_out(in_h, k, stride, padding).expect("conv geometry");
+        let out_w = conv_out(in_w, k, stride, padding).expect("conv geometry");
+        Self {
+            k,
+            stride,
+            padding,
+            in_h,
+            in_w,
+            out_h,
+            out_w,
+        }
+    }
+
+    /// Padded row width in pixel slots.
+    pub fn wp(&self) -> usize {
+        self.in_w + 2 * self.padding
+    }
+
+    /// Padded stream height (rows -P .. H-1+P).
+    pub fn hp(&self) -> usize {
+        self.in_h + 2 * self.padding
+    }
+
+    /// Total pixel slots in one image's stream.
+    pub fn stream_slots(&self) -> usize {
+        self.wp() * self.hp()
+    }
+
+    /// The paper's quoted period formula (`p = 2(P + W)` for stride 1,
+    /// Section II-C) — the paper counts one padding margin per row; our
+    /// stream counts both sides, so the implemented period is
+    /// [`Self::period_cycles`] = `2(W + 2P)` and we report both.
+    pub fn paper_period_cycles(&self) -> usize {
+        CYCLES_PER_SLOT * (self.padding + self.in_w)
+    }
+
+    /// Actual table period in cycles.
+    pub fn period_cycles(&self) -> usize {
+        CYCLES_PER_SLOT * self.period_slots()
+    }
+
+    /// Table period in pixel slots (covers `stride` rows so y-shielding
+    /// is expressible).
+    pub fn period_slots(&self) -> usize {
+        self.wp() * self.stride
+    }
+
+    /// For padded slot `u` within a row, the output column this slot's
+    /// MAC contributes to at kernel column `kc` — if the window aligns.
+    pub fn out_col(&self, u: usize, kc: usize) -> Option<usize> {
+        let d = u.checked_sub(kc)?;
+        if d % self.stride != 0 {
+            return None;
+        }
+        let ox = d / self.stride;
+        (ox < self.out_w).then_some(ox)
+    }
+
+    /// For padded row index `pr` (0-based from the top of the padded
+    /// stream), the output row at kernel row `kr` — if aligned.
+    pub fn out_row(&self, pr: usize, kr: usize) -> Option<usize> {
+        let d = pr.checked_sub(kr)?;
+        if d % self.stride != 0 {
+            return None;
+        }
+        let oy = d / self.stride;
+        (oy < self.out_h).then_some(oy)
+    }
+}
+
+/// Role of a conv tile within its chain (mirrors `program::ConvTile`
+/// flags).
+#[derive(Clone, Copy, Debug)]
+pub struct ConvRole {
+    pub kr: usize,
+    pub kc: usize,
+    pub cb: usize,
+    pub is_chain_start: bool,
+    pub is_row_end: bool,
+    pub is_last: bool,
+    pub is_row_head: bool,
+}
+
+/// Generate the periodic schedule for one conv tile.
+///
+/// Entries are per pixel slot; the table covers `stride` padded rows
+/// (`stride * Wp` slots) so stride shielding in both x and y is
+/// expressed. Slot 0 corresponds to the start of a padded row with
+/// `(row - kr) % stride == 0` (the engine and hardware counter align on
+/// packet arrival).
+pub fn conv_tile_schedule(g: &ConvGeometry, role: &ConvRole, relu: bool) -> Schedule {
+    let wp = g.wp();
+    let mut table = Vec::with_capacity(wp * g.stride);
+    let chain_rx = if role.is_chain_start {
+        RxCtrl::NONE.with(RxSource::Pe)
+    } else {
+        RxCtrl::NONE.with(RxSource::West).with(RxSource::Pe)
+    };
+    for rowmod in 0..g.stride {
+        // rows where (rowmod == 0) are the rows whose MACs this tile
+        // contributes to (aligned with kr).
+        let row_valid = rowmod == 0;
+        for u in 0..wp {
+            let ox = g.out_col(u, role.kc);
+            let valid = row_valid && ox.is_some();
+
+            // Buffer ops for row heads: Pop at this tile's own MAC slot
+            // (the queued group-sum from the previous kernel row seeds
+            // the accumulation). Push slots are marked in a post-pass
+            // because arrivals can wrap past the period boundary.
+            let buffer = if role.is_row_head && valid {
+                BufferOp::Pop
+            } else {
+                BufferOp::None
+            };
+
+            let instr = if role.is_last {
+                if valid {
+                    Instr::M {
+                        rx: chain_rx,
+                        func: if relu { Func::Act } else { Func::Quant },
+                        tx: TxCtrl::NextLayer,
+                        opc: MOpcode::ApplyOut,
+                    }
+                } else {
+                    Instr::M {
+                        rx: chain_rx,
+                        func: Func::Bp,
+                        tx: TxCtrl::None,
+                        opc: MOpcode::Apply,
+                    }
+                }
+            } else if valid || buffer != BufferOp::None {
+                Instr::C {
+                    rx: chain_rx,
+                    sum: valid,
+                    buffer,
+                    tx: if valid { TxCtrl::Chain } else { TxCtrl::None },
+                    opc: if valid { COpcode::AccOut } else { COpcode::Nop },
+                }
+            } else {
+                // shielded slot: keep receives, suppress actions
+                Instr::C {
+                    rx: chain_rx,
+                    sum: false,
+                    buffer: BufferOp::None,
+                    tx: TxCtrl::None,
+                    opc: COpcode::Nop,
+                }
+                .shielded()
+            };
+            table.push(instr);
+        }
+    }
+    // Post-pass for row heads: mark the Push slot for each group-sum
+    // arrival — one hop after the previous row-end emitted, i.e.
+    // `u = K + ox·s`, wrapped modulo the period.
+    if role.is_row_head {
+        let period = table.len();
+        for ox in 0..g.out_w {
+            let v = (g.k + ox * g.stride) % period;
+            if let Instr::C { buffer, .. } = &mut table[v] {
+                *buffer = match *buffer {
+                    BufferOp::None | BufferOp::Push => BufferOp::Push,
+                    BufferOp::Pop | BufferOp::PopPush => BufferOp::PopPush,
+                };
+            }
+        }
+    }
+    Schedule { table, phase: 0 }
+}
+
+/// Generate the M-type pooling schedule appended to a conv stage's
+/// hand-off under the block-reuse scheme: period `2·S_p` cycles
+/// (= `S_p` pixel slots), comparing/scaling each arriving activation and
+/// emitting one pooled beat per window (paper Section II-C:
+/// "Its period is related to pooling stride (p = 2·S_p)").
+pub fn pooling_schedule(s_p: usize, max: bool) -> Schedule {
+    let mut table = Vec::with_capacity(s_p);
+    for i in 0..s_p {
+        let last = i == s_p - 1;
+        table.push(Instr::M {
+            rx: RxCtrl::NONE.with(RxSource::West),
+            func: if max { Func::Cmp } else { Func::Mul },
+            tx: if last { TxCtrl::NextLayer } else { TxCtrl::None },
+            opc: if last {
+                MOpcode::ApplyOut
+            } else {
+                MOpcode::Apply
+            },
+        });
+    }
+    Schedule { table, phase: 0 }
+}
+
+/// Generate the schedule for one FC tile (paper Fig. 2): each tile
+/// multiplies its input slice once per inference and forwards the
+/// partial sum down the column; the period is one beat per input slice.
+///
+/// `rblock` = position down the column; the bottom tile applies the
+/// activation (M-type) and emits the output slice.
+pub fn fc_tile_schedule(rblock: usize, rblocks: usize, relu: bool) -> Schedule {
+    let is_bottom = rblock == rblocks - 1;
+    let rx = if rblock == 0 {
+        RxCtrl::NONE.with(RxSource::Pe)
+    } else {
+        RxCtrl::NONE.with(RxSource::North).with(RxSource::Pe)
+    };
+    let instr = if is_bottom && rblocks > 0 {
+        Instr::M {
+            rx,
+            func: if relu { Func::Act } else { Func::Quant },
+            tx: TxCtrl::NextLayer,
+            opc: MOpcode::ApplyOut,
+        }
+    } else {
+        Instr::C {
+            rx,
+            sum: true,
+            buffer: BufferOp::None,
+            tx: TxCtrl::Chain,
+            opc: COpcode::AccOut,
+        }
+    };
+    Schedule {
+        table: vec![instr],
+        phase: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::for_all;
+
+    fn role(kr: usize, kc: usize, k: usize) -> ConvRole {
+        ConvRole {
+            kr,
+            kc,
+            cb: 0,
+            is_chain_start: kr == 0 && kc == 0,
+            is_row_end: kc == k - 1,
+            is_last: kr == k - 1 && kc == k - 1,
+            is_row_head: kc == 0 && kr > 0,
+        }
+    }
+
+    #[test]
+    fn period_matches_paper_formula_stride1() {
+        // p = 2(P + W) for Sc = 1 — Section II-C.
+        let g = ConvGeometry::new(3, 1, 1, 32, 32);
+        assert_eq!(g.paper_period_cycles(), 2 * (1 + 32));
+        assert_eq!(g.period_cycles(), 2 * (32 + 2));
+        let s = conv_tile_schedule(&g, &role(0, 0, 3), true);
+        assert_eq!(
+            s.period() * CYCLES_PER_SLOT,
+            CYCLES_PER_SLOT * g.wp(),
+            "table covers one padded row for stride 1"
+        );
+    }
+
+    #[test]
+    fn schedules_compress_into_hardware_table() {
+        // Even a 224-wide VGG row must fit after RLE.
+        let g = ConvGeometry::new(3, 1, 1, 224, 224);
+        for kr in 0..3 {
+            for kc in 0..3 {
+                let s = conv_tile_schedule(&g, &role(kr, kc, 3), true);
+                assert!(
+                    s.compressed_len() <= crate::consts::SCHEDULE_TABLE_ENTRIES,
+                    "kr={kr} kc={kc}: {} runs",
+                    s.compressed_len()
+                );
+                assert!(s.compressed_len() <= 8, "steady state is a few runs");
+            }
+        }
+    }
+
+    #[test]
+    fn stride2_table_covers_two_rows_and_shields() {
+        let g = ConvGeometry::new(3, 2, 1, 8, 8);
+        let s = conv_tile_schedule(&g, &role(0, 1, 3), true);
+        assert_eq!(s.period(), 2 * g.wp());
+        // second row (rowmod 1) must be fully shielded: no sums
+        for u in 0..g.wp() {
+            match s.table[g.wp() + u] {
+                Instr::C { sum, tx, .. } => {
+                    assert!(!sum && tx == TxCtrl::None, "u={u} not shielded");
+                }
+                _ => panic!("C-type expected"),
+            }
+        }
+        // first row: valid only at u = kc + 2*ox
+        for u in 0..g.wp() {
+            let valid = u >= 1 && (u - 1) % 2 == 0 && (u - 1) / 2 < g.out_w;
+            match s.table[u] {
+                Instr::C { sum, .. } => assert_eq!(sum, valid, "u={u}"),
+                _ => panic!("C-type expected"),
+            }
+        }
+    }
+
+    #[test]
+    fn last_tile_emits_mtype_with_act() {
+        let g = ConvGeometry::new(3, 1, 1, 8, 8);
+        let s = conv_tile_schedule(&g, &role(2, 2, 3), true);
+        let m_out = s
+            .table
+            .iter()
+            .filter(|i| {
+                matches!(
+                    i,
+                    Instr::M {
+                        func: Func::Act,
+                        opc: MOpcode::ApplyOut,
+                        tx: TxCtrl::NextLayer,
+                        ..
+                    }
+                )
+            })
+            .count();
+        assert_eq!(m_out, g.out_w, "one activation per output column");
+    }
+
+    #[test]
+    fn linear_conv_uses_quant_not_act() {
+        let g = ConvGeometry::new(1, 1, 0, 4, 4);
+        let r = ConvRole {
+            kr: 0,
+            kc: 0,
+            cb: 0,
+            is_chain_start: true,
+            is_row_end: true,
+            is_last: true,
+            is_row_head: false,
+        };
+        let s = conv_tile_schedule(&g, &r, false);
+        assert!(s
+            .table
+            .iter()
+            .any(|i| matches!(i, Instr::M { func: Func::Quant, .. })));
+        assert!(!s
+            .table
+            .iter()
+            .any(|i| matches!(i, Instr::M { func: Func::Act, .. })));
+    }
+
+    #[test]
+    fn row_head_pushes_and_pops() {
+        let g = ConvGeometry::new(3, 1, 1, 8, 8);
+        let s = conv_tile_schedule(&g, &role(1, 0, 3), true);
+        let mut pushes = 0;
+        let mut pops = 0;
+        for i in &s.table {
+            if let Instr::C { buffer, .. } = i {
+                match buffer {
+                    BufferOp::Push => pushes += 1,
+                    BufferOp::Pop => pops += 1,
+                    BufferOp::PopPush => {
+                        pushes += 1;
+                        pops += 1;
+                    }
+                    BufferOp::None => {}
+                }
+            }
+        }
+        // one push and one pop per output column per row period
+        assert_eq!(pushes, g.out_w);
+        assert_eq!(pops, g.out_w);
+    }
+
+    #[test]
+    fn chain_start_receives_only_pe() {
+        let g = ConvGeometry::new(3, 1, 1, 8, 8);
+        let s = conv_tile_schedule(&g, &role(0, 0, 3), true);
+        for i in &s.table {
+            if let Instr::C { rx, .. } = i {
+                assert!(rx.contains(RxSource::Pe));
+                assert!(!rx.contains(RxSource::West));
+            }
+        }
+    }
+
+    #[test]
+    fn pooling_period_matches_paper() {
+        // p = 2·S_p cycles = S_p slots.
+        let s = pooling_schedule(2, true);
+        assert_eq!(s.period() * CYCLES_PER_SLOT, 4);
+        assert!(matches!(
+            s.table[1],
+            Instr::M {
+                func: Func::Cmp,
+                opc: MOpcode::ApplyOut,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn fc_bottom_tile_activates() {
+        let top = fc_tile_schedule(0, 3, true);
+        let mid = fc_tile_schedule(1, 3, true);
+        let bot = fc_tile_schedule(2, 3, true);
+        assert!(matches!(top.table[0], Instr::C { .. }));
+        assert!(matches!(mid.table[0], Instr::C { sum: true, .. }));
+        assert!(matches!(
+            bot.table[0],
+            Instr::M {
+                func: Func::Act,
+                tx: TxCtrl::NextLayer,
+                ..
+            }
+        ));
+        // mid receives from the column (North) and its PE
+        if let Instr::C { rx, .. } = mid.table[0] {
+            assert!(rx.contains(RxSource::North) && rx.contains(RxSource::Pe));
+        }
+    }
+
+    #[test]
+    fn prop_schedule_period_invariants() {
+        for_all("schedule_period", 30, |rng| {
+            let k = rng.range(1, 5);
+            let stride = rng.range(1, 2);
+            let pad = rng.below(k.min(2) + 1);
+            let n = rng.range(k.max(2), 16);
+            let g = ConvGeometry::new(k, stride, pad, n, n);
+            let kr = rng.below(k);
+            let kc = rng.below(k);
+            let s = conv_tile_schedule(&g, &role(kr, kc, k), true);
+            assert_eq!(s.period(), g.wp() * stride);
+            // sums only on valid slots
+            let sums = s
+                .table
+                .iter()
+                .filter(|i| matches!(i, Instr::C { sum: true, .. })
+                    || matches!(i, Instr::M { opc: MOpcode::ApplyOut, .. }))
+                .count();
+            assert_eq!(sums, g.out_w, "one contribution per output column");
+        });
+    }
+}

@@ -1,0 +1,448 @@
+//! The five state-of-the-art CIM accelerators Domino is compared against
+//! in Table IV, their published operating points, and the normalization
+//! pipeline.
+//!
+//! Domino "adopts existing CIM arrays to enable flexible substitution"
+//! (Section II-D): in each pairwise comparison the Domino deployment
+//! hosts the *counterpart's* CIM array technology. We therefore derive,
+//! for every comparison, a [`CimModel`] from the counterpart's own
+//! published numbers:
+//!
+//! * **energy/MAC** — the counterpart's normalized CE (8 b / 1 V /
+//!   45 nm) gives its whole-system energy per op; multiplying by its
+//!   *CIM share* (1 − data-movement share, both printed in Table IV)
+//!   isolates the array's contribution:
+//!   `j_per_mac = 2 / (CE_norm / cim_share)` (2 ops per MAC).
+//! * **array area** — from Table IV's Domino-side active area:
+//!   `(area / tiles) − router_area` (clamped to a small positive floor
+//!   where the published area is below the router area — see
+//!   EXPERIMENTS.md §T4 notes).
+//!
+//! This is exactly the paper's methodology ("power consumption of CIM is
+//! not listed" — it is inherited), made explicit and reproducible.
+
+pub mod normalize;
+
+use crate::energy::scaling::{DesignPoint, normalize_ce, normalize_throughput};
+use crate::energy::CimModel;
+
+/// CIM technology class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CimType {
+    Sram,
+    Reram,
+}
+
+/// A counterpart architecture's published Table IV column.
+#[derive(Clone, Copy, Debug)]
+pub struct Counterpart {
+    /// Short key ("jia-isscc21").
+    pub key: &'static str,
+    /// Citation tag as used in the paper.
+    pub cite: &'static str,
+    pub cim: CimType,
+    /// Workload it is compared on.
+    pub model: &'static str,
+    pub dataset: &'static str,
+    pub tech_nm: u32,
+    pub vdd: f64,
+    pub freq_mhz: f64,
+    /// Weight / activation precision (bits).
+    pub b_w: u32,
+    pub b_a: u32,
+    /// CIM cores (chips x cores as a flat count where known).
+    pub cores: usize,
+    pub area_mm2: f64,
+    /// Execution time per inference (µs); None where the paper prints
+    /// "n.a.".
+    pub exec_us: Option<f64>,
+    pub power_w: f64,
+    pub onchip_data_w: Option<f64>,
+    pub offchip_data_w: Option<f64>,
+    /// Computational efficiency as published (TOPS/W).
+    pub ce_tops_w: f64,
+    /// Paper's normalized CE (TOPS/W at 8 b / 1 V / 45 nm).
+    pub paper_norm_ce: f64,
+    pub tops_mm2: f64,
+    /// Paper's normalized throughput (TOPS/mm² at 8 b / 45 nm).
+    pub paper_norm_tops_mm2: f64,
+    pub images_s_core: Option<f64>,
+    pub accuracy: Option<f64>,
+}
+
+/// The paper's Domino-side row for one comparison (Table IV "Ours").
+#[derive(Clone, Copy, Debug)]
+pub struct DominoPaperRow {
+    pub cores_per_chip: usize,
+    pub chips: usize,
+    pub area_mm2: f64,
+    pub exec_us: f64,
+    pub power_w: f64,
+    pub onchip_data_w: f64,
+    pub offchip_data_w: f64,
+    pub ce_tops_w: f64,
+    pub tops_mm2: f64,
+    pub images_s_core: f64,
+    pub accuracy: f64,
+}
+
+/// One pairwise comparison: counterpart + the paper's Domino row.
+#[derive(Clone, Copy, Debug)]
+pub struct Comparison {
+    pub counterpart: Counterpart,
+    pub domino: DominoPaperRow,
+}
+
+impl Counterpart {
+    pub fn design_point(&self) -> DesignPoint {
+        DesignPoint {
+            tech_nm: self.tech_nm,
+            vdd: self.vdd,
+            b_w: self.b_w,
+            b_a: self.b_a,
+        }
+    }
+
+    /// Fraction of published power spent on data movement (on- +
+    /// off-chip); falls back to the class average when a term is "n.a.".
+    pub fn data_share(&self) -> f64 {
+        let on = self.onchip_data_w.unwrap_or(0.24 * self.power_w);
+        let off = self.offchip_data_w.unwrap_or(0.0);
+        ((on + off) / self.power_w).clamp(0.05, 0.95)
+    }
+
+    /// CIM share of the published power.
+    pub fn cim_share(&self) -> f64 {
+        1.0 - self.data_share()
+    }
+
+    /// Our uniformly recomputed normalized CE (cross-check column).
+    pub fn recomputed_norm_ce(&self) -> f64 {
+        normalize_ce(self.ce_tops_w, &self.design_point())
+    }
+
+    /// Our uniformly recomputed normalized throughput.
+    pub fn recomputed_norm_tops_mm2(&self) -> f64 {
+        normalize_throughput(self.tops_mm2, &self.design_point())
+    }
+}
+
+impl Comparison {
+    /// The CIM array model Domino adopts for this comparison (see module
+    /// docs for the derivation).
+    pub fn domino_cim_model(&self) -> CimModel {
+        let cim_ce_norm = self.counterpart.paper_norm_ce / self.counterpart.cim_share();
+        let j_per_mac = 2.0 / (cim_ce_norm * 1e12);
+        let tiles = (self.domino.cores_per_chip * self.domino.chips) as f64;
+        let per_tile = self.domino.area_mm2 / tiles;
+        let array_area = (per_tile - crate::energy::area::router_area_mm2()).max(0.005);
+        CimModel {
+            j_per_mac,
+            array_area_mm2: array_area,
+            label: match self.counterpart.cim {
+                CimType::Sram => "SRAM (substituted)",
+                CimType::Reram => "ReRAM (substituted)",
+            },
+        }
+    }
+
+    /// The paper's headline normalized-CE improvement for this pair.
+    pub fn paper_ce_ratio(&self) -> f64 {
+        // Domino's row is already at the reference point, so its CE is
+        // its normalized CE.
+        self.domino.ce_tops_w / self.counterpart.paper_norm_ce
+    }
+
+    /// The paper's normalized-throughput improvement for this pair.
+    pub fn paper_throughput_ratio(&self) -> f64 {
+        self.domino.tops_mm2 / self.counterpart.paper_norm_tops_mm2
+    }
+}
+
+/// Table IV, column by column.
+pub fn all_comparisons() -> Vec<Comparison> {
+    vec![
+        // VGG-11 / CIFAR-10 vs Jia et al., ISSCC'21 [9] (SRAM, 16 nm)
+        Comparison {
+            counterpart: Counterpart {
+                key: "jia-isscc21",
+                cite: "[9]",
+                cim: CimType::Sram,
+                model: "vgg11-cifar10",
+                dataset: "CIFAR-10",
+                tech_nm: 16,
+                vdd: 0.8,
+                freq_mhz: 200.0,
+                b_w: 4,
+                b_a: 4,
+                cores: 16,
+                area_mm2: 17.5,
+                exec_us: Some(128.0),
+                power_w: 0.15,
+                onchip_data_w: Some(0.036),
+                offchip_data_w: Some(0.06),
+                ce_tops_w: 71.39,
+                paper_norm_ce: 9.53,
+                tops_mm2: 0.7,
+                paper_norm_tops_mm2: 0.088,
+                images_s_core: Some(488.0),
+                accuracy: Some(91.51),
+            },
+            domino: DominoPaperRow {
+                cores_per_chip: 240,
+                chips: 5,
+                area_mm2: 343.2,
+                exec_us: 137.3,
+                power_w: 11.03,
+                onchip_data_w: 3.53,
+                offchip_data_w: 0.34,
+                ce_tops_w: 17.22,
+                tops_mm2: 0.55,
+                images_s_core: 2604.0,
+                accuracy: 89.85,
+            },
+        },
+        // ResNet-18 / CIFAR-10 vs Yue et al., ISSCC'20 [17] (SRAM, 65 nm)
+        Comparison {
+            counterpart: Counterpart {
+                key: "yue-isscc20",
+                cite: "[17]",
+                cim: CimType::Sram,
+                model: "resnet18-cifar10",
+                dataset: "CIFAR-10",
+                tech_nm: 65,
+                vdd: 1.0,
+                freq_mhz: 100.0,
+                b_w: 4,
+                b_a: 4,
+                cores: 4,
+                area_mm2: 5.68,
+                exec_us: Some(1890.0),
+                power_w: 2.78e-3,
+                onchip_data_w: Some(1.76e-3),
+                offchip_data_w: None,
+                ce_tops_w: 6.91,
+                paper_norm_ce: 2.82,
+                tops_mm2: 0.006,
+                paper_norm_tops_mm2: 0.013,
+                images_s_core: Some(8.0),
+                accuracy: Some(91.15),
+            },
+            domino: DominoPaperRow {
+                cores_per_chip: 240,
+                chips: 6,
+                area_mm2: 655.2,
+                exec_us: 206.3,
+                power_w: 18.10,
+                onchip_data_w: 2.95,
+                offchip_data_w: 0.10,
+                ce_tops_w: 6.30,
+                tops_mm2: 0.17,
+                images_s_core: 2604.0,
+                accuracy: 91.57,
+            },
+        },
+        // VGG-16 / ImageNet vs Yoon et al., ISSCC'21 [16] (ReRAM, 40 nm)
+        Comparison {
+            counterpart: Counterpart {
+                key: "yoon-isscc21",
+                cite: "[16]",
+                cim: CimType::Reram,
+                model: "vgg16-imagenet",
+                dataset: "ImageNet",
+                tech_nm: 40,
+                vdd: 0.9,
+                freq_mhz: 100.0,
+                b_w: 8,
+                b_a: 8,
+                cores: 1,
+                area_mm2: 0.44,
+                exec_us: Some(670_000.0),
+                power_w: 11.05e-3,
+                onchip_data_w: Some(1.47e-3),
+                offchip_data_w: Some(4.76e-3),
+                ce_tops_w: 4.15,
+                paper_norm_ce: 3.92,
+                tops_mm2: 0.10,
+                paper_norm_tops_mm2: 0.081,
+                images_s_core: None,
+                accuracy: Some(46.0),
+            },
+            domino: DominoPaperRow {
+                cores_per_chip: 240,
+                chips: 10,
+                area_mm2: 381.6,
+                exec_us: 3481.8,
+                power_w: 4.26,
+                onchip_data_w: 0.64,
+                offchip_data_w: 0.005,
+                ce_tops_w: 9.29,
+                tops_mm2: 0.10,
+                images_s_core: 53.0,
+                accuracy: 70.71,
+            },
+        },
+        // VGG-19 / ImageNet vs AtomLayer, DAC'18 [10] (ReRAM, 32 nm)
+        Comparison {
+            counterpart: Counterpart {
+                key: "atomlayer-dac18",
+                cite: "[10]",
+                cim: CimType::Reram,
+                model: "vgg19-imagenet",
+                dataset: "ImageNet",
+                tech_nm: 32,
+                vdd: 1.0,
+                freq_mhz: 1200.0,
+                b_w: 16,
+                b_a: 16,
+                cores: 160,
+                area_mm2: 6.89,
+                exec_us: Some(6920.0),
+                power_w: 4.8,
+                onchip_data_w: Some(0.54),
+                offchip_data_w: Some(1.32),
+                ce_tops_w: 0.68,
+                paper_norm_ce: 2.73,
+                tops_mm2: 0.36,
+                paper_norm_tops_mm2: 0.18,
+                images_s_core: None,
+                accuracy: None,
+            },
+            domino: DominoPaperRow {
+                cores_per_chip: 240,
+                chips: 10,
+                area_mm2: 192.0,
+                exec_us: 3582.9,
+                power_w: 8.73,
+                onchip_data_w: 0.72,
+                offchip_data_w: 0.01,
+                ce_tops_w: 5.73,
+                tops_mm2: 0.22,
+                images_s_core: 53.0,
+                accuracy: 72.38,
+            },
+        },
+        // VGG-19 / ImageNet vs CASCADE, MICRO'19 [6] (ReRAM, 65 nm)
+        Comparison {
+            counterpart: Counterpart {
+                key: "cascade-micro19",
+                cite: "[6]",
+                cim: CimType::Reram,
+                model: "vgg19-imagenet",
+                dataset: "ImageNet",
+                tech_nm: 65,
+                vdd: 1.0,
+                freq_mhz: 1200.0,
+                b_w: 16,
+                b_a: 16,
+                cores: 96, // "80 - 112"
+                area_mm2: 0.99,
+                exec_us: None,
+                power_w: 3.0e-3,
+                onchip_data_w: Some(0.7e-3),
+                offchip_data_w: Some(0.9e-3),
+                ce_tops_w: 1.96,
+                paper_norm_ce: 6.18,
+                tops_mm2: 0.10,
+                paper_norm_tops_mm2: 0.21,
+                images_s_core: None,
+                accuracy: None,
+            },
+            domino: DominoPaperRow {
+                cores_per_chip: 240,
+                chips: 10,
+                area_mm2: 125.5,
+                exec_us: 3582.9,
+                power_w: 4.57,
+                onchip_data_w: 0.72,
+                offchip_data_w: 0.01,
+                ce_tops_w: 10.95,
+                tops_mm2: 0.66,
+                images_s_core: 53.0,
+                accuracy: 72.38,
+            },
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_comparisons() {
+        assert_eq!(all_comparisons().len(), 5);
+    }
+
+    #[test]
+    fn paper_headline_ce_ratios() {
+        // "Domino achieves 1.77-to-2.37x power efficiency" — the ratios
+        // of the published Table IV rows must reproduce the abstract.
+        let comps = all_comparisons();
+        let ratios: Vec<f64> = comps.iter().map(|c| c.paper_ce_ratio()).collect();
+        let min = ratios.iter().cloned().fold(f64::MAX, f64::min);
+        let max = ratios.iter().cloned().fold(f64::MIN, f64::max);
+        assert!((min - 1.77).abs() < 0.05, "min ratio {min}");
+        assert!((max - 2.37).abs() < 0.05, "max ratio {max}");
+    }
+
+    #[test]
+    fn paper_headline_throughput_ratios() {
+        // "...improves the throughput by 1.28-to-13.16x".
+        let comps = all_comparisons();
+        let ratios: Vec<f64> = comps.iter().map(|c| c.paper_throughput_ratio()).collect();
+        let min = ratios.iter().cloned().fold(f64::MAX, f64::min);
+        let max = ratios.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(min > 1.1 && min < 1.35, "min ratio {min}");
+        assert!((max - 13.16).abs() < 0.2, "max ratio {max}");
+    }
+
+    #[test]
+    fn cim_models_are_physical() {
+        for comp in all_comparisons() {
+            let cim = comp.domino_cim_model();
+            assert!(
+                cim.j_per_mac > 0.01e-12 && cim.j_per_mac < 2.0e-12,
+                "{}: {} pJ/MAC",
+                comp.counterpart.key,
+                cim.j_per_mac * 1e12
+            );
+            assert!(cim.array_area_mm2 > 0.0);
+        }
+    }
+
+    #[test]
+    fn sram_substitution_cheaper_than_reram() {
+        let comps = all_comparisons();
+        let jia = comps[0].domino_cim_model();
+        let yoon = comps[2].domino_cim_model();
+        assert!(jia.j_per_mac < yoon.j_per_mac);
+    }
+
+    #[test]
+    fn data_share_uses_published_fractions() {
+        let comps = all_comparisons();
+        // [9]: (0.036 + 0.06) / 0.15 = 64%
+        assert!((comps[0].counterpart.data_share() - 0.64).abs() < 0.01);
+        // [17]: off-chip n.a. -> on-chip only: 1.76/2.78 = 63.3%
+        assert!((comps[1].counterpart.data_share() - 0.633).abs() < 0.01);
+    }
+
+    #[test]
+    fn recomputed_normalization_within_factor_three_of_paper() {
+        // Our uniform Stillmaker-Baas pipeline vs the paper's printed
+        // normalized values: same order of magnitude for every
+        // counterpart (the paper's own rows are not mutually consistent
+        // — see EXPERIMENTS.md §T4).
+        for comp in all_comparisons() {
+            let ours = comp.counterpart.recomputed_norm_ce();
+            let theirs = comp.counterpart.paper_norm_ce;
+            let ratio = ours / theirs;
+            assert!(
+                (0.33..3.0).contains(&ratio),
+                "{}: ours {ours:.2} vs paper {theirs:.2}",
+                comp.counterpart.key
+            );
+        }
+    }
+}

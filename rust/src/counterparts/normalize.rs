@@ -1,0 +1,139 @@
+//! The Table IV normalization pipeline, assembled per comparison.
+//!
+//! Produces, for each of the five comparisons, both sides of the table:
+//! the counterpart's published + normalized numbers and Domino's
+//! *measured* numbers from our simulator/perfmodel under the substituted
+//! CIM array, so the eval harness can print paper-vs-ours rows.
+
+use crate::counterparts::Comparison;
+use crate::energy::{energy_of, CimModel, EnergyBreakdown};
+use crate::perfmodel::NetworkEstimate;
+
+/// Domino-side measured metrics for one comparison.
+#[derive(Clone, Debug)]
+pub struct DominoMeasured {
+    pub tiles: usize,
+    pub chips: usize,
+    pub area_mm2: f64,
+    /// One-image latency (µs) — comparable to the paper's "execution
+    /// time".
+    pub exec_us: f64,
+    /// Pipelined throughput.
+    pub images_per_s: f64,
+    pub images_per_s_per_core: f64,
+    /// Average power at full pipelined utilisation (W).
+    pub power_w: f64,
+    pub onchip_data_w: f64,
+    pub offchip_data_w: f64,
+    pub cim_w: f64,
+    /// TOPS/W (= ops per joule).
+    pub ce_tops_w: f64,
+    /// TOPS/mm².
+    pub tops_mm2: f64,
+    pub energy_per_image: EnergyBreakdown,
+}
+
+/// Compute Domino's measured row from a perfmodel estimate + the
+/// substituted CIM model.
+///
+/// Power model: under layer pipelining every stage processes one image
+/// per period, so average power = (energy per image) x (images per
+/// second). Ops follow the paper's 2-ops-per-MAC convention.
+pub fn measure_domino(
+    est: &NetworkEstimate,
+    cim: &CimModel,
+    total_ops: u64,
+) -> DominoMeasured {
+    let e = energy_of(&est.counters, cim);
+    let img_s = est.images_per_s();
+    let power = e.total() * img_s;
+    let onchip = e.onchip_data() * img_s;
+    let offchip = e.offchip_data() * img_s;
+    let cim_w = e.cim * img_s;
+    let ce = total_ops as f64 / e.total() / 1e12; // TOPS/W == ops/J /1e12
+    let area = crate::energy::area::active_area_mm2(est.total_tiles, est.chips, cim);
+    let tops = total_ops as f64 * img_s / 1e12;
+    DominoMeasured {
+        tiles: est.total_tiles,
+        chips: est.chips,
+        area_mm2: area,
+        exec_us: est.latency_s() * 1e6,
+        images_per_s: img_s,
+        images_per_s_per_core: est.images_per_s_per_core(),
+        power_w: power,
+        onchip_data_w: onchip,
+        offchip_data_w: offchip,
+        cim_w,
+        ce_tops_w: ce,
+        tops_mm2: tops / area,
+        energy_per_image: e,
+    }
+}
+
+/// A fully-assembled Table IV pair: the comparison spec + our measured
+/// Domino row.
+#[derive(Clone, Debug)]
+pub struct Table4Row {
+    pub comparison: Comparison,
+    pub measured: DominoMeasured,
+}
+
+impl Table4Row {
+    /// Our normalized-CE improvement (measured Domino CE over the
+    /// counterpart's paper-normalized CE — both at 8 b / 1 V / 45 nm).
+    pub fn measured_ce_ratio(&self) -> f64 {
+        self.measured.ce_tops_w / self.comparison.counterpart.paper_norm_ce
+    }
+
+    /// Our normalized-throughput improvement.
+    pub fn measured_throughput_ratio(&self) -> f64 {
+        self.measured.tops_mm2 / self.comparison.counterpart.paper_norm_tops_mm2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Compiler;
+    use crate::counterparts::all_comparisons;
+    use crate::model::zoo;
+
+    #[test]
+    fn measured_row_for_vgg11_pair() {
+        let comp = all_comparisons()[0];
+        let net = zoo::vgg11_cifar();
+        let arch = crate::coordinator::ArchConfig::table4(comp.domino.chips);
+        let program = Compiler::new(arch).compile_analysis(&net).unwrap();
+        let est = crate::perfmodel::estimate(&program).unwrap();
+        let cim = comp.domino_cim_model();
+        let m = measure_domino(&est, &cim, net.total_ops().unwrap());
+        // Domino must beat the counterpart's normalized CE (the paper's
+        // headline), and data power must be a minority share.
+        assert!(
+            m.ce_tops_w > comp.counterpart.paper_norm_ce,
+            "CE {} vs norm {}",
+            m.ce_tops_w,
+            comp.counterpart.paper_norm_ce
+        );
+        let onchip_share = m.onchip_data_w / m.power_w;
+        assert!(
+            onchip_share < 0.45,
+            "on-chip share {onchip_share} should be minor (paper: 8-32%)"
+        );
+        let offchip_share = m.offchip_data_w / m.power_w;
+        assert!(
+            offchip_share < 0.05,
+            "off-chip share {offchip_share} should be negligible (paper: 0.1-3%)"
+        );
+        assert!(m.area_mm2 > 0.0 && m.power_w > 0.0);
+        assert!(m.images_per_s > 0.0);
+        // throughput headline: with the paper's 5-chip budget Domino
+        // beats [9]'s normalized TOPS/mm2
+        assert!(
+            m.tops_mm2 > comp.counterpart.paper_norm_tops_mm2,
+            "tops/mm2 {} vs {}",
+            m.tops_mm2,
+            comp.counterpart.paper_norm_tops_mm2
+        );
+    }
+}

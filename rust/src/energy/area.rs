@@ -1,0 +1,87 @@
+//! Area model (paper Table III areas + substituted CIM arrays).
+//!
+//! A tile's "active area" is the RIFM + ROFM router area (Table III,
+//! fixed) plus the area of the 256x256 CIM array it hosts — the latter
+//! depends on which counterpart's array Domino adopts for a given
+//! comparison (`energy::CimModel::array_area_mm2`). Chip area adds the
+//! inter-chip transceivers.
+
+use crate::energy::CimModel;
+
+/// Table III component areas in µm².
+pub mod table3_um2 {
+    pub const RIFM_BUFFER: f64 = 826.5;
+    pub const RIFM_CTRL: f64 = 1400.6;
+    /// RIFM total (as printed in Table III).
+    pub const RIFM_TOTAL: f64 = 2227.1;
+    pub const ADDER: f64 = 0.07;
+    pub const POOL: f64 = 34.06;
+    pub const ACT: f64 = 7.07;
+    pub const ROFM_DATA_BUFFER: f64 = 52896.0;
+    pub const SCHED_TABLE: f64 = 826.5;
+    pub const INPUT_BUFFER: f64 = 878.9;
+    pub const OUTPUT_BUFFER: f64 = 878.9;
+    pub const ROFM_CTRL: f64 = 2451.2;
+    /// ROFM total (as printed in Table III).
+    pub const ROFM_TOTAL: f64 = 57972.7;
+    /// Eight 80 Gb/s transceivers.
+    pub const INTERCHIP: f64 = 8e5;
+}
+
+/// Router (RIFM + ROFM) area per tile in mm².
+pub fn router_area_mm2() -> f64 {
+    (table3_um2::RIFM_TOTAL + table3_um2::ROFM_TOTAL) / 1e6
+}
+
+/// Active area of one tile hosting the given CIM array (mm²).
+pub fn tile_area_mm2(cim: &CimModel) -> f64 {
+    router_area_mm2() + cim.array_area_mm2
+}
+
+/// Active area of a deployment (mm²): `tiles` tiles plus one set of
+/// inter-chip transceivers per chip.
+pub fn active_area_mm2(tiles: usize, chips: usize, cim: &CimModel) -> f64 {
+    tiles as f64 * tile_area_mm2(cim) + chips as f64 * table3_um2::INTERCHIP / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_totals_are_consistent() {
+        // RIFM total = buffer + control (Table III prints 2227.1).
+        let rifm = table3_um2::RIFM_BUFFER + table3_um2::RIFM_CTRL;
+        assert!((rifm - table3_um2::RIFM_TOTAL).abs() < 1.0);
+        // ROFM total ≈ sum of its components.
+        let rofm = table3_um2::ADDER
+            + table3_um2::POOL
+            + table3_um2::ACT
+            + table3_um2::ROFM_DATA_BUFFER
+            + table3_um2::SCHED_TABLE
+            + table3_um2::INPUT_BUFFER
+            + table3_um2::OUTPUT_BUFFER
+            + table3_um2::ROFM_CTRL;
+        assert!(
+            (rofm - table3_um2::ROFM_TOTAL).abs() / table3_um2::ROFM_TOTAL < 0.01,
+            "rofm parts sum to {rofm}"
+        );
+    }
+
+    #[test]
+    fn router_area_is_small_vs_cim() {
+        // The routers are ~0.06 mm²: an order below a typical SRAM
+        // 256x256 array, as the paper's throughput argument requires.
+        let r = router_area_mm2();
+        assert!((r - 0.0602).abs() < 0.001, "router = {r}");
+        assert!(r < CimModel::generic_sram().array_area_mm2);
+    }
+
+    #[test]
+    fn active_area_scales_with_tiles_and_chips() {
+        let cim = CimModel::generic_sram();
+        let one = active_area_mm2(240, 1, &cim);
+        let five = active_area_mm2(1200, 5, &cim);
+        assert!((five - 5.0 * one).abs() < 1e-9);
+    }
+}

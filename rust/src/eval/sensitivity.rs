@@ -1,0 +1,144 @@
+//! Calibration sensitivity analysis.
+//!
+//! EXPERIMENTS.md §Calibration fixes exactly one free constant — the
+//! on-chip link energy the paper obtains from Noxim but does not
+//! publish. This experiment sweeps that constant across the plausible
+//! 45 nm range and shows the paper's *headlines* (Domino wins CE
+//! against every counterpart; data movement is a minority) are robust
+//! to it: only the exact on-chip share moves.
+
+use anyhow::Result;
+
+use crate::counterparts::all_comparisons;
+use crate::counterparts::normalize::measure_domino;
+use crate::eval::{comparison_network, compile_comparison};
+use crate::energy::energy_of;
+use crate::sim::stats::Counters;
+
+/// One sweep point.
+#[derive(Clone, Debug)]
+pub struct SensitivityRow {
+    /// Link energy (pJ/bit/hop).
+    pub link_pj_per_bit: f64,
+    /// min/max normalized-CE ratio over the five comparisons.
+    pub ce_ratio_min: f64,
+    pub ce_ratio_max: f64,
+    /// min/max on-chip data power share.
+    pub onchip_min: f64,
+    pub onchip_max: f64,
+    /// Does Domino still beat every counterpart's normalized CE?
+    pub all_ce_wins: bool,
+}
+
+/// Recompute an energy breakdown with a substituted link energy by
+/// re-pricing the link-bit counter delta.
+fn energy_with_link(
+    counters: &Counters,
+    cim: &crate::energy::CimModel,
+    link_j: f64,
+) -> crate::energy::EnergyBreakdown {
+    let mut e = energy_of(counters, cim);
+    e.onchip_links = counters.onchip_link_bits as f64 * link_j;
+    e
+}
+
+/// Sweep the link energy over `points` (pJ/b/hop).
+pub fn sweep(points: &[f64]) -> Result<Vec<SensitivityRow>> {
+    // compile + count events once per workload; re-price per point
+    let mut cases = Vec::new();
+    for comp in all_comparisons() {
+        let net = comparison_network(&comp)?;
+        let program = compile_comparison(&comp)?;
+        let est = crate::perfmodel::estimate(&program)?;
+        let ops = net.total_ops()?;
+        cases.push((comp, est, ops));
+    }
+
+    let mut rows = Vec::with_capacity(points.len());
+    for &pj in points {
+        let link_j = pj * 1e-12;
+        let (mut cmin, mut cmax) = (f64::MAX, f64::MIN);
+        let (mut omin, mut omax) = (f64::MAX, f64::MIN);
+        let mut all_wins = true;
+        for (comp, est, ops) in &cases {
+            let cim = comp.domino_cim_model();
+            let e = energy_with_link(&est.counters, &cim, link_j);
+            let ce = *ops as f64 / e.total() / 1e12;
+            let ratio = ce / comp.counterpart.paper_norm_ce;
+            let share = e.onchip_data() / e.total();
+            cmin = cmin.min(ratio);
+            cmax = cmax.max(ratio);
+            omin = omin.min(share);
+            omax = omax.max(share);
+            all_wins &= ratio > 1.0;
+        }
+        // silence unused warning for measure_domino import parity
+        let _ = measure_domino;
+        rows.push(SensitivityRow {
+            link_pj_per_bit: pj,
+            ce_ratio_min: cmin,
+            ce_ratio_max: cmax,
+            onchip_min: omin,
+            onchip_max: omax,
+            all_ce_wins: all_wins,
+        });
+    }
+    Ok(rows)
+}
+
+/// The default sweep grid (pJ/b/hop): Noxim-plausible 45 nm values.
+pub const DEFAULT_GRID: [f64; 5] = [0.025, 0.05, 0.1, 0.15, 0.2];
+
+pub fn render(rows: &[SensitivityRow]) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "CALIBRATION SENSITIVITY — on-chip link energy sweep\n"
+    );
+    let _ = writeln!(
+        s,
+        "{:>14} {:>18} {:>20} {:>12}",
+        "link pJ/b/hop", "CE ratio min-max", "on-chip share %", "CE wins 5/5"
+    );
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "{:>14.3} {:>8.2} - {:<7.2} {:>9.1} - {:<8.1} {:>12}",
+            r.link_pj_per_bit,
+            r.ce_ratio_min,
+            r.ce_ratio_max,
+            100.0 * r.onchip_min,
+            100.0 * r.onchip_max,
+            if r.all_ce_wins { "yes" } else { "NO" }
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_robust_across_plausible_link_energies() {
+        let rows = sweep(&DEFAULT_GRID).unwrap();
+        // Domino wins CE against every counterpart at every plausible
+        // link energy — the calibration choice does not create the
+        // result.
+        for r in &rows {
+            assert!(r.all_ce_wins, "at {} pJ/b", r.link_pj_per_bit);
+            assert!(r.ce_ratio_min > 1.0);
+        }
+        // on-chip share is monotone in the link energy
+        for w in rows.windows(2) {
+            assert!(w[1].onchip_max >= w[0].onchip_max);
+        }
+    }
+
+    #[test]
+    fn chosen_point_keeps_offchip_band() {
+        let rows = sweep(&[0.05]).unwrap();
+        assert!((0.05..0.50).contains(&rows[0].onchip_max));
+    }
+}

@@ -1,0 +1,88 @@
+//! # Domino — Computing-On-the-Move NoC/CIM accelerator (reproduction)
+//!
+//! This crate reproduces the system described in *"A Customized NoC
+//! Architecture to Enable Highly Localized Computing-On-the-Move DNN
+//! Dataflow"* (Zhou, He, Xiao, Liu, Huang — 2021): a Computing-In-Memory
+//! DNN inference accelerator organised as a 2-D mesh Network-on-Chip of
+//! tiles, each containing a CIM crossbar (PE), an input-feature-map router
+//! (RIFM) and an output/partial-sum router (ROFM) driven by distributed
+//! periodic instruction schedules.
+//!
+//! ## Crate layout
+//!
+//! * [`model`] — DNN graph IR, the model zoo (VGG-11/16/19, ResNet-18) and
+//!   an int8 functional reference (`refcompute`) used as the correctness
+//!   oracle for the simulator.
+//! * [`coordinator`] — the paper's contribution: the Domino compiler that
+//!   allocates layers onto tile arrays (`coordinator::mapper`) and
+//!   generates the periodic C-type/M-type instruction schedules
+//!   (`coordinator::schedule`, `coordinator::isa`).
+//! * [`tile`] — microarchitecture of one tile: `tile::rifm`,
+//!   `tile::rofm`, `tile::pe`.
+//! * [`noc`] — 2-D mesh topology, packets and link models.
+//! * [`sim`] — the cycle-accurate engine, statistics and the COM dataflow
+//!   trace (reproduces the paper's Fig. 3(b)).
+//! * [`energy`] — Table III component energy/area constants, event-based
+//!   energy accounting and technology/voltage/precision normalization.
+//! * [`perfmodel`] — closed-form layer-level performance model validated
+//!   against the cycle simulator and used for full-network Table IV runs.
+//! * [`counterparts`] — analytic models of the five comparison
+//!   architectures and the Table IV normalization pipeline.
+//! * [`baselines`] — conventional WS+im2col dataflow and the two pooling
+//!   schemes of Fig. 4, for ablations.
+//! * [`runtime`] — PJRT runtime that loads the JAX/Pallas golden model
+//!   (AOT-lowered HLO text in `artifacts/`) for cross-validation.
+//! * [`eval`] — experiment drivers for every table and figure.
+
+pub mod baselines;
+pub mod benchutil;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod counterparts;
+pub mod energy;
+pub mod eval;
+pub mod model;
+pub mod noc;
+pub mod perfmodel;
+pub mod runtime;
+pub mod serve;
+pub mod sim;
+pub mod testutil;
+pub mod tile;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Architectural constants fixed by the paper's evaluation setup
+/// (Section IV-A and Table III).
+pub mod consts {
+    /// CIM crossbar rows (input channels per tile), Section IV-A.
+    pub const N_C: usize = 256;
+    /// CIM crossbar columns (output channels per tile), Section IV-A.
+    pub const N_M: usize = 256;
+    /// Instruction step frequency (Hz): "the step frequency for the
+    /// execution of one instruction is 10 MHz".
+    pub const STEP_HZ: f64 = 10.0e6;
+    /// Peripheral clock (FDM), Section IV-A.
+    pub const PERIPHERAL_HZ: f64 = 160.0e6;
+    /// Inter-tile bandwidth: 40 Gb/s.
+    pub const TILE_LINK_GBPS: f64 = 40.0;
+    /// Inter-chip transceivers: eight 80 Gb/s lanes.
+    pub const INTERCHIP_LANES: usize = 8;
+    pub const INTERCHIP_GBPS_PER_LANE: f64 = 80.0;
+    /// Activation/weight precision (bits).
+    pub const PRECISION_BITS: u32 = 8;
+    /// Supply voltage (V).
+    pub const VDD: f64 = 1.0;
+    /// Technology node (nm).
+    pub const TECH_NM: u32 = 45;
+    /// CIM cores (tiles) per chip used in Table IV ("240 x N chips").
+    pub const TILES_PER_CHIP: usize = 240;
+    /// ROFM schedule table: 128 entries of 16 bits (Table III).
+    pub const SCHEDULE_TABLE_ENTRIES: usize = 128;
+    /// RIFM buffer bytes (Table III: 256 B x 1).
+    pub const RIFM_BUFFER_BYTES: usize = 256;
+    /// ROFM data buffer bytes (Table III: 16 KiB).
+    pub const ROFM_BUFFER_BYTES: usize = 16 * 1024;
+}

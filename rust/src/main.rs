@@ -1,0 +1,322 @@
+//! `domino` — the CLI leader. Every paper experiment is reachable from
+//! here; benches and examples share the same `eval` drivers.
+
+use anyhow::{bail, Result};
+
+use domino::cli::{Args, USAGE};
+use domino::coordinator::{ArchConfig, Compiler};
+use domino::counterparts::all_comparisons;
+use domino::energy::{energy_of, CimModel};
+use domino::model::zoo;
+use domino::sim::Simulator;
+use domino::testutil::Rng;
+use domino::{baselines, eval};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "table4" => table4(),
+        "breakdown" => breakdown(),
+        "accuracy" => accuracy(args),
+        "map" => map(args),
+        "run" => run(args),
+        "trace" => trace(args),
+        "pipeline" => pipeline(args),
+        "ablate" => ablate(),
+        "sweep" => sweep(args),
+        "golden" => golden(args),
+        "serve" => serve(args),
+        "models" => {
+            for m in zoo::MODEL_NAMES {
+                println!("{m}");
+            }
+            Ok(())
+        }
+        "" | "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn table4() -> Result<()> {
+    let entries = eval::table4::run()?;
+    print!("{}", eval::table4::render(&entries));
+    Ok(())
+}
+
+fn breakdown() -> Result<()> {
+    let rows = eval::breakdown::run()?;
+    print!("{}", eval::breakdown::render(&rows));
+    Ok(())
+}
+
+fn accuracy(args: &Args) -> Result<()> {
+    let dir = domino::runtime::artifacts_dir();
+    let r = eval::accuracy::run(&dir, args.get_usize("limit", 0))?;
+    print!("{}", eval::accuracy::render(&r));
+    Ok(())
+}
+
+fn config_from(args: &Args) -> Result<Option<domino::config::Config>> {
+    match args.get("config") {
+        Some(p) => Ok(Some(domino::config::Config::load(std::path::Path::new(p))?)),
+        None => Ok(None),
+    }
+}
+
+fn arch_from(args: &Args) -> ArchConfig {
+    // --config [arch] first, --chips overrides
+    let mut a = config_from(args)
+        .ok()
+        .flatten()
+        .and_then(|c| c.arch().ok())
+        .unwrap_or_default();
+    if let Some(c) = args.get("chips") {
+        a.sync_chips = Some(c.parse().unwrap_or(1));
+    }
+    a
+}
+
+fn net_arg(args: &Args) -> Result<domino::model::Network> {
+    let from_cfg = config_from(args)?
+        .and_then(|c| c.get_str("run", "model").map(String::from));
+    let name = args
+        .positional
+        .first()
+        .cloned()
+        .or(from_cfg)
+        .unwrap_or_else(|| "tiny-cnn".to_string());
+    zoo::by_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {name:?} (see `domino models`)"))
+}
+
+fn map(args: &Args) -> Result<()> {
+    let net = net_arg(args)?;
+    let program = Compiler::new(arch_from(args)).compile_analysis(&net)?;
+    println!(
+        "{}: {} stages, {} tiles, {} chips",
+        net.name,
+        program.stages.len(),
+        program.total_tiles,
+        program.chips
+    );
+    let est = domino::perfmodel::estimate(&program)?;
+    println!(
+        "{:<12} {:>8} {:>8} {:>10} {:>10}",
+        "stage", "tiles", "dup", "period", "latency"
+    );
+    for (s, e) in program.stages.iter().zip(&est.stages) {
+        let dup = match &s.kind {
+            domino::coordinator::program::StageKind::Conv(c) => c.dup,
+            domino::coordinator::program::StageKind::Res(r) => r.dup,
+            domino::coordinator::program::StageKind::Pool(p) => p.dup,
+            _ => 1,
+        };
+        println!(
+            "{:<12} {:>8} {:>8} {:>10} {:>10}",
+            s.name, e.tiles, dup, e.period_slots, e.slots
+        );
+    }
+    println!(
+        "pipeline: period {} cycles ({:.1} us), latency {} cycles ({:.1} us), {:.0} img/s",
+        est.period_cycles,
+        1e6 * est.period_cycles as f64 / domino::consts::STEP_HZ,
+        est.latency_cycles,
+        1e6 * est.latency_cycles as f64 / domino::consts::STEP_HZ,
+        est.images_per_s()
+    );
+    Ok(())
+}
+
+fn run(args: &Args) -> Result<()> {
+    let net = net_arg(args)?;
+    let program = Compiler::new(arch_from(args)).compile(&net)?;
+    let mut sim = Simulator::new(&program);
+    let images = args.get_usize("images", 1);
+    let mut rng = Rng::new(args.get_u64("seed", 42));
+    for i in 0..images {
+        let out = sim.run_image(&rng.i8_vec(net.input_len(), 31))?;
+        println!(
+            "image {i}: latency {} cycles ({:.1} us), scores {:?}",
+            out.latency_cycles,
+            1e6 * out.latency_cycles as f64 / domino::consts::STEP_HZ,
+            out.scores
+        );
+    }
+    println!("\ncounters over {images} image(s):\n{}", sim.stats());
+    let e = energy_of(sim.stats(), &CimModel::generic_sram());
+    println!(
+        "\nenergy: total {:.3} uJ (cim {:.3}, on-chip data {:.3}, off-chip {:.3})",
+        1e6 * e.total(),
+        1e6 * e.cim,
+        1e6 * e.onchip_data(),
+        1e6 * e.offchip_data()
+    );
+    Ok(())
+}
+
+fn trace(args: &Args) -> Result<()> {
+    // a small K=3 conv reproduces Fig. 3(b)'s geometry
+    let net = domino::model::NetworkBuilder::new(
+        "fig3",
+        domino::model::TensorShape::new(2, 5, 5),
+    )
+    .conv(3, 3, 1, 1)
+    .build();
+    let program = Compiler::default().compile(&net)?;
+    let tr = domino::sim::trace::trace_stage(&program, args.get_usize("stage", 0), 7)?;
+    print!("{}", tr.render(0, args.get_usize("slots", 26)));
+    Ok(())
+}
+
+fn pipeline(args: &Args) -> Result<()> {
+    let net = net_arg(args)?;
+    let program = Compiler::new(arch_from(args)).compile_analysis(&net)?;
+    let est = domino::perfmodel::estimate(&program)?;
+    let images = args.get_usize("images", 32);
+    let r = domino::sim::pipeline::run_pipelined(&program, &est, images)?;
+    println!(
+        "{}: {} images pipelined; first latency {:.1} us, steady period {} cycles, {:.0} img/s",
+        net.name,
+        images,
+        1e6 * r.first_latency_cycles as f64 / domino::consts::STEP_HZ,
+        r.steady_period_cycles,
+        r.images_per_s
+    );
+    println!("
+{:<12} {:>8} {:>10} {:>8} {:>8}", "stage", "slots", "period", "lead", "util %");
+    for s in &r.stages {
+        println!(
+            "{:<12} {:>8} {:>10} {:>8} {:>8.1}",
+            s.name, s.slots, s.period_slots, s.lead_slots, 100.0 * s.utilization
+        );
+    }
+    Ok(())
+}
+
+fn ablate() -> Result<()> {
+    println!("A1 — COM vs WS+im2col data movement (per Table IV workload):\n");
+    for comp in all_comparisons() {
+        let program = eval::compile_comparison(&comp)?;
+        let cim = comp.domino_cim_model();
+        let ab = baselines::ws_im2col::ablate(&program, &cim)?;
+        println!(
+            "{:<18} on-chip data energy x{:.1}, total energy x{:.2} (baseline/COM)",
+            comp.counterpart.model,
+            ab.movement_ratio(),
+            ab.total_ratio()
+        );
+    }
+    println!("\nFig. 4 — pooling schemes (block reuse vs weight duplication):\n");
+    for (net, _) in zoo::table4_workloads() {
+        let ab = baselines::pooling::ablate(&net, &CimModel::generic_sram())?;
+        println!(
+            "{:<18} dup: {:.2}x tiles -> {:.2}x throughput (period {} -> {})",
+            net.name,
+            ab.tile_ratio(),
+            ab.speedup(),
+            ab.block_reuse.period_cycles,
+            ab.weight_dup.period_cycles
+        );
+    }
+    Ok(())
+}
+
+fn sweep(args: &Args) -> Result<()> {
+    let models: Vec<String> = args
+        .get("models")
+        .map(|s| s.split(',').map(String::from).collect())
+        .unwrap_or_else(|| vec!["vgg11-cifar10".into(), "resnet18-cifar10".into()]);
+    println!(
+        "{:<18} {:>6} {:>8} {:>8} {:>12} {:>10}",
+        "model", "Nc=Nm", "tiles", "chips", "period cyc", "img/s"
+    );
+    for name in &models {
+        let net = zoo::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {name:?}"))?;
+        for n in [64usize, 128, 256, 512] {
+            let mut arch = ArchConfig::default();
+            arch.n_c = n;
+            arch.n_m = n;
+            let program = Compiler::new(arch).compile_analysis(&net)?;
+            let est = domino::perfmodel::estimate(&program)?;
+            println!(
+                "{:<18} {:>6} {:>8} {:>8} {:>12} {:>10.0}",
+                name,
+                n,
+                program.total_tiles,
+                program.chips,
+                est.period_cycles,
+                est.images_per_s()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    use domino::serve::{LatencyStats, ServeConfig, Server};
+    let dir = domino::runtime::artifacts_dir();
+    let ts = domino::eval::accuracy::TestSet::load(
+        &dir.join(domino::runtime::artifact::TESTSET_BIN),
+    )?;
+    let cfg = ServeConfig {
+        workers: args.get_usize("workers", 2),
+        max_batch: args.get_usize("batch", 8),
+        queue_cap: args.get_usize("queue", 256),
+    };
+    let n = args.get_usize("requests", 256);
+    println!(
+        "serving {} requests ({} workers, micro-batch {})",
+        n, cfg.workers, cfg.max_batch
+    );
+    let server = Server::start(cfg)?;
+    let t0 = std::time::Instant::now();
+    let mut lat = LatencyStats::default();
+    let mut correct = 0usize;
+    for i in 0..n {
+        let idx = i % ts.images.len();
+        let t = std::time::Instant::now();
+        let r = server.infer(ts.images[idx].clone())?;
+        lat.record(t.elapsed());
+        let pred = r
+            .logits
+            .iter()
+            .enumerate()
+            .max_by_key(|&(j, &v)| (v, std::cmp::Reverse(j)))
+            .map(|(j, _)| j)
+            .unwrap();
+        if pred == ts.labels[idx] as usize {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    println!(
+        "{} req in {:.2} s -> {:.0} req/s; latency {}; accuracy {:.4}",
+        n,
+        wall.as_secs_f64(),
+        n as f64 / wall.as_secs_f64(),
+        lat.summary(),
+        correct as f64 / n as f64
+    );
+    server.shutdown()?;
+    Ok(())
+}
+
+fn golden(args: &Args) -> Result<()> {
+    let rt = domino::runtime::Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let n = args.get_usize("images", 5);
+    let checked = domino::runtime::golden::check_golden_vs_reference(&rt, n, 1234)?;
+    println!("golden HLO == rust reference on {checked} image(s) [bit-exact]");
+    Ok(())
+}

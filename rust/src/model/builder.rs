@@ -1,0 +1,220 @@
+//! Fluent builder for [`Network`]s.
+//!
+//! Keeps the model zoo readable and gives downstream users a concise API:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath in this environment)
+//! use domino::model::{NetworkBuilder, TensorShape};
+//! let net = NetworkBuilder::new("demo", TensorShape::new(3, 32, 32))
+//!     .conv(16, 3, 1, 1)
+//!     .max_pool(2, 2)
+//!     .flatten()
+//!     .fc_logits(10)
+//!     .build();
+//! assert!(net.shapes().is_ok());
+//! ```
+
+use super::{Layer, LayerKind, Network, TensorShape};
+
+/// Default requantization shift for 8-bit conv/fc accumulations. Chosen so
+/// that a full 256-input dot product of bounded int8 values requantizes
+/// back into int8 range; the JAX golden model uses the same constant
+/// (python/compile/model.py).
+pub const DEFAULT_REQUANT_SHIFT: u32 = 7;
+
+pub struct NetworkBuilder {
+    name: String,
+    input: TensorShape,
+    layers: Vec<Layer>,
+}
+
+impl NetworkBuilder {
+    pub fn new(name: impl Into<String>, input: TensorShape) -> Self {
+        Self {
+            name: name.into(),
+            input,
+            layers: Vec::new(),
+        }
+    }
+
+    fn push(mut self, kind: LayerKind, requant_shift: u32) -> Self {
+        let idx = self.layers.len();
+        let tag = match &kind {
+            LayerKind::Conv2d { .. } => "conv",
+            LayerKind::Fc { .. } => "fc",
+            LayerKind::MaxPool2d { .. } => "maxpool",
+            LayerKind::AvgPool2d { .. } => "avgpool",
+            LayerKind::ResAdd { .. } => "res",
+            LayerKind::Flatten => "flatten",
+        };
+        self.layers.push(Layer {
+            name: format!("{tag}{idx}"),
+            kind,
+            requant_shift,
+        });
+        self
+    }
+
+    /// Conv + fused ReLU (the common CNN case).
+    pub fn conv(self, out_ch: usize, kernel: usize, stride: usize, padding: usize) -> Self {
+        self.push(
+            LayerKind::Conv2d {
+                out_ch,
+                kernel,
+                stride,
+                padding,
+                relu: true,
+            },
+            DEFAULT_REQUANT_SHIFT,
+        )
+    }
+
+    /// Conv without activation (e.g. the second conv of a ResNet block,
+    /// activated after the residual add).
+    pub fn conv_linear(self, out_ch: usize, kernel: usize, stride: usize, padding: usize) -> Self {
+        self.push(
+            LayerKind::Conv2d {
+                out_ch,
+                kernel,
+                stride,
+                padding,
+                relu: false,
+            },
+            DEFAULT_REQUANT_SHIFT,
+        )
+    }
+
+    /// Conv with an explicit requantization shift.
+    pub fn conv_shift(
+        self,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+        relu: bool,
+        shift: u32,
+    ) -> Self {
+        self.push(
+            LayerKind::Conv2d {
+                out_ch,
+                kernel,
+                stride,
+                padding,
+                relu,
+            },
+            shift,
+        )
+    }
+
+    /// FC + fused ReLU.
+    pub fn fc(self, out_features: usize) -> Self {
+        self.push(
+            LayerKind::Fc {
+                out_features,
+                relu: true,
+            },
+            DEFAULT_REQUANT_SHIFT,
+        )
+    }
+
+    /// FC without activation (logits layer).
+    pub fn fc_logits(self, out_features: usize) -> Self {
+        self.fc_logits_shift(out_features, DEFAULT_REQUANT_SHIFT)
+    }
+
+    /// Logits FC with an explicit requantization shift (used by the
+    /// calibrated quantizer's deployment path).
+    pub fn fc_logits_shift(self, out_features: usize, shift: u32) -> Self {
+        self.push(
+            LayerKind::Fc {
+                out_features,
+                relu: false,
+            },
+            shift,
+        )
+    }
+
+    pub fn max_pool(self, kernel: usize, stride: usize) -> Self {
+        self.push(LayerKind::MaxPool2d { kernel, stride }, 0)
+    }
+
+    pub fn avg_pool(self, kernel: usize, stride: usize) -> Self {
+        self.push(LayerKind::AvgPool2d { kernel, stride }, 0)
+    }
+
+    /// Residual add from the output of layer `from` (absolute index).
+    pub fn res_add(self, from: usize) -> Self {
+        self.push(LayerKind::ResAdd { from, proj: None }, 0)
+    }
+
+    /// Residual add with a 1x1 strided projection on the skip path
+    /// (ResNet downsampling blocks). The projection is requantized with
+    /// [`DEFAULT_REQUANT_SHIFT`] like any other conv.
+    pub fn res_add_proj(self, from: usize, proj: super::Projection) -> Self {
+        self.push(
+            LayerKind::ResAdd {
+                from,
+                proj: Some(proj),
+            },
+            DEFAULT_REQUANT_SHIFT,
+        )
+    }
+
+    pub fn flatten(self) -> Self {
+        self.push(LayerKind::Flatten, 0)
+    }
+
+    /// Index the *next* layer will get; used to record skip sources while
+    /// building ResNets.
+    pub fn next_index(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn build(self) -> Network {
+        Network {
+            name: self.name,
+            input: self.input,
+            layers: self.layers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_names_layers_by_index() {
+        let net = NetworkBuilder::new("t", TensorShape::new(3, 8, 8))
+            .conv(4, 3, 1, 1)
+            .max_pool(2, 2)
+            .flatten()
+            .fc_logits(10)
+            .build();
+        assert_eq!(net.layers[0].name, "conv0");
+        assert_eq!(net.layers[1].name, "maxpool1");
+        assert_eq!(net.layers[2].name, "flatten2");
+        assert_eq!(net.layers[3].name, "fc3");
+    }
+
+    #[test]
+    fn builder_produces_valid_network() {
+        let net = NetworkBuilder::new("t", TensorShape::new(3, 32, 32))
+            .conv(8, 3, 1, 1)
+            .conv_linear(8, 3, 1, 1)
+            .res_add(0)
+            .max_pool(2, 2)
+            .flatten()
+            .fc(32)
+            .fc_logits(10)
+            .build();
+        let shapes = net.shapes().unwrap();
+        assert_eq!(shapes.last().unwrap().c, 10);
+    }
+
+    #[test]
+    fn next_index_tracks_layer_count() {
+        let b = NetworkBuilder::new("t", TensorShape::new(3, 8, 8)).conv(4, 3, 1, 1);
+        assert_eq!(b.next_index(), 1);
+    }
+}

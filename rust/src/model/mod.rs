@@ -1,0 +1,526 @@
+//! DNN graph IR.
+//!
+//! Domino maps each layer of a feed-forward CNN onto a group of tiles
+//! (paper Fig. 1(a)). This module defines the layer graph the compiler
+//! consumes: a linear sequence of layers with optional residual skip
+//! edges (ResNet), CHW tensor shapes, shape inference, and MAC/parameter
+//! accounting used by the evaluation (TOPS, TOPS/W, TOPS/mm²).
+//!
+//! Quantization model: activations and weights are 8-bit (the paper's
+//! evaluation precision); accumulations are 32-bit; each compute layer
+//! carries a power-of-two requantization shift, so the entire network is
+//! exactly reproducible across the Rust simulator, the Rust reference
+//! (`refcompute`) and the JAX/Pallas golden model.
+
+pub mod builder;
+pub mod refcompute;
+pub mod zoo;
+
+pub use builder::NetworkBuilder;
+
+/// Shape of an activation tensor in CHW order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TensorShape {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl TensorShape {
+    pub fn new(c: usize, h: usize, w: usize) -> Self {
+        Self { c, h, w }
+    }
+
+    /// Total number of elements.
+    pub fn len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl std::fmt::Display for TensorShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.c, self.h, self.w)
+    }
+}
+
+/// One layer of the network.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// 2-D convolution. Weight tensor is `K x K x C x M` (paper
+    /// notation): `kernel` = K, input channels C come from the previous
+    /// layer, `out_ch` = M. `relu` fuses the activation applied by the
+    /// last tile's ROFM (paper Section III-B).
+    Conv2d {
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+        relu: bool,
+    },
+    /// Fully connected layer: `y = xW`, `W in R^{C_in x C_out}`
+    /// (paper Section III-A).
+    Fc { out_features: usize, relu: bool },
+    /// Max pooling (ROFM `Cmp` function, Table II).
+    MaxPool2d { kernel: usize, stride: usize },
+    /// Average pooling (ROFM `Mul` scaling function, Table II).
+    AvgPool2d { kernel: usize, stride: usize },
+    /// Residual addition: adds the output of layer `from` (a previous
+    /// layer index) to this layer's input. Routed through the RIFM→ROFM
+    /// shortcut ("skip" connection, Table II `Bp.`). When the skip path
+    /// changes shape (ResNet downsampling blocks) a 1x1 strided
+    /// projection convolution is applied to the skip source first; its
+    /// weights live in their own tile array like any other conv.
+    ResAdd {
+        from: usize,
+        proj: Option<Projection>,
+    },
+    /// Flatten CHW to a vector (entering FC layers).
+    Flatten,
+}
+
+/// 1x1 strided projection on a residual skip path (ResNet downsampling).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Projection {
+    pub out_ch: usize,
+    pub stride: usize,
+}
+
+impl Projection {
+    /// Output shape of the projection applied to `input` (kernel 1, pad 0).
+    pub fn out_shape(&self, input: TensorShape) -> Option<TensorShape> {
+        let h = conv_out(input.h, 1, self.stride, 0)?;
+        let w = conv_out(input.w, 1, self.stride, 0)?;
+        Some(TensorShape::new(self.out_ch, h, w))
+    }
+}
+
+/// A named layer with quantization metadata.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Power-of-two requantization: `out = clamp(acc >> shift)` applied
+    /// after Conv2d / Fc / ResAdd accumulation. Ignored for other kinds.
+    pub requant_shift: u32,
+}
+
+/// A feed-forward network with optional residual skips.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub input: TensorShape,
+    pub layers: Vec<Layer>,
+}
+
+/// Error produced by shape inference.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShapeError {
+    /// Pool/conv window does not fit the input.
+    WindowTooLarge { layer: usize, detail: String },
+    /// A ResAdd references a layer whose shape mismatches.
+    ResShapeMismatch {
+        layer: usize,
+        from: usize,
+        got: TensorShape,
+        want: TensorShape,
+    },
+    /// A ResAdd references a non-existent or future layer.
+    BadResIndex { layer: usize, from: usize },
+    /// An FC layer was applied to an unflattened tensor.
+    FcOnSpatial { layer: usize },
+}
+
+impl std::fmt::Display for ShapeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShapeError::WindowTooLarge { layer, detail } => {
+                write!(f, "layer {layer}: window too large: {detail}")
+            }
+            ShapeError::ResShapeMismatch {
+                layer,
+                from,
+                got,
+                want,
+            } => write!(
+                f,
+                "layer {layer}: residual from layer {from} has shape {got}, expected {want}"
+            ),
+            ShapeError::BadResIndex { layer, from } => {
+                write!(f, "layer {layer}: residual index {from} out of range")
+            }
+            ShapeError::FcOnSpatial { layer } => {
+                write!(f, "layer {layer}: FC applied to spatial tensor (missing Flatten?)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShapeError {}
+
+/// Convolution output size: `floor((in + 2p - k)/s) + 1`.
+pub fn conv_out(input: usize, kernel: usize, stride: usize, padding: usize) -> Option<usize> {
+    let padded = input + 2 * padding;
+    if padded < kernel || stride == 0 {
+        return None;
+    }
+    Some((padded - kernel) / stride + 1)
+}
+
+impl Network {
+    /// Number of elements in the input tensor.
+    pub fn input_len(&self) -> usize {
+        self.input.len()
+    }
+
+    /// Infer the output shape of every layer. `shapes()[i]` is the output
+    /// shape of layer `i`; the input shape is `self.input`.
+    pub fn shapes(&self) -> Result<Vec<TensorShape>, ShapeError> {
+        let mut shapes: Vec<TensorShape> = Vec::with_capacity(self.layers.len());
+        let mut cur = self.input;
+        for (i, layer) in self.layers.iter().enumerate() {
+            cur = match &layer.kind {
+                LayerKind::Conv2d {
+                    out_ch,
+                    kernel,
+                    stride,
+                    padding,
+                    ..
+                } => {
+                    let h = conv_out(cur.h, *kernel, *stride, *padding).ok_or_else(|| {
+                        ShapeError::WindowTooLarge {
+                            layer: i,
+                            detail: format!("conv k={kernel} s={stride} p={padding} on {cur}"),
+                        }
+                    })?;
+                    let w = conv_out(cur.w, *kernel, *stride, *padding).ok_or_else(|| {
+                        ShapeError::WindowTooLarge {
+                            layer: i,
+                            detail: format!("conv k={kernel} s={stride} p={padding} on {cur}"),
+                        }
+                    })?;
+                    TensorShape::new(*out_ch, h, w)
+                }
+                LayerKind::Fc { out_features, .. } => {
+                    if cur.h != 1 || cur.w != 1 {
+                        return Err(ShapeError::FcOnSpatial { layer: i });
+                    }
+                    TensorShape::new(*out_features, 1, 1)
+                }
+                LayerKind::MaxPool2d { kernel, stride }
+                | LayerKind::AvgPool2d { kernel, stride } => {
+                    let h = conv_out(cur.h, *kernel, *stride, 0).ok_or_else(|| {
+                        ShapeError::WindowTooLarge {
+                            layer: i,
+                            detail: format!("pool k={kernel} s={stride} on {cur}"),
+                        }
+                    })?;
+                    let w = conv_out(cur.w, *kernel, *stride, 0).ok_or_else(|| {
+                        ShapeError::WindowTooLarge {
+                            layer: i,
+                            detail: format!("pool k={kernel} s={stride} on {cur}"),
+                        }
+                    })?;
+                    TensorShape::new(cur.c, h, w)
+                }
+                LayerKind::ResAdd { from, proj } => {
+                    if *from >= i {
+                        return Err(ShapeError::BadResIndex { layer: i, from: *from });
+                    }
+                    let src = shapes[*from];
+                    let skip = match proj {
+                        Some(p) => p.out_shape(src).ok_or_else(|| ShapeError::WindowTooLarge {
+                            layer: i,
+                            detail: format!("projection s={} on {src}", p.stride),
+                        })?,
+                        None => src,
+                    };
+                    if skip != cur {
+                        return Err(ShapeError::ResShapeMismatch {
+                            layer: i,
+                            from: *from,
+                            got: skip,
+                            want: cur,
+                        });
+                    }
+                    cur
+                }
+                LayerKind::Flatten => TensorShape::new(cur.len(), 1, 1),
+            };
+            shapes.push(cur);
+        }
+        Ok(shapes)
+    }
+
+    /// Output shape of the whole network.
+    pub fn output_shape(&self) -> Result<TensorShape, ShapeError> {
+        Ok(self
+            .shapes()?
+            .last()
+            .copied()
+            .unwrap_or(self.input))
+    }
+
+    /// MACs per layer (one MAC = one multiply-accumulate). Layers without
+    /// MACs (pool/flatten/res) report 0; following the paper's TOPS
+    /// convention, 1 MAC = 2 ops.
+    pub fn macs_per_layer(&self) -> Result<Vec<u64>, ShapeError> {
+        let shapes = self.shapes()?;
+        let mut in_shape = self.input;
+        let mut macs = Vec::with_capacity(self.layers.len());
+        for (i, layer) in self.layers.iter().enumerate() {
+            let out = shapes[i];
+            let m = match &layer.kind {
+                LayerKind::Conv2d { out_ch, kernel, .. } => {
+                    (kernel * kernel * in_shape.c * out_ch) as u64 * (out.h * out.w) as u64
+                }
+                LayerKind::Fc { out_features, .. } => (in_shape.c * out_features) as u64,
+                LayerKind::ResAdd {
+                    from,
+                    proj: Some(p),
+                } => {
+                    // 1x1 projection conv on the skip path.
+                    let src = shapes[*from];
+                    (src.c * p.out_ch) as u64 * (out.h * out.w) as u64
+                }
+                _ => 0,
+            };
+            macs.push(m);
+            in_shape = out;
+        }
+        Ok(macs)
+    }
+
+    /// Total MACs for one inference.
+    pub fn total_macs(&self) -> Result<u64, ShapeError> {
+        Ok(self.macs_per_layer()?.iter().sum())
+    }
+
+    /// Total ops (2 x MACs, the paper's TOPS convention).
+    pub fn total_ops(&self) -> Result<u64, ShapeError> {
+        Ok(2 * self.total_macs()?)
+    }
+
+    /// Weight parameters per layer (biases are not modeled; the paper's
+    /// CIM arrays store weights only).
+    pub fn params_per_layer(&self) -> Result<Vec<u64>, ShapeError> {
+        let shapes = self.shapes()?;
+        let mut in_shape = self.input;
+        let mut params = Vec::with_capacity(self.layers.len());
+        for (i, layer) in self.layers.iter().enumerate() {
+            let p = match &layer.kind {
+                LayerKind::Conv2d { out_ch, kernel, .. } => {
+                    (kernel * kernel * in_shape.c * out_ch) as u64
+                }
+                LayerKind::Fc { out_features, .. } => (in_shape.c * out_features) as u64,
+                LayerKind::ResAdd {
+                    from,
+                    proj: Some(pr),
+                } => (shapes[*from].c * pr.out_ch) as u64,
+                _ => 0,
+            };
+            params.push(p);
+            in_shape = shapes[i];
+        }
+        Ok(params)
+    }
+
+    /// Total weight parameters.
+    pub fn total_params(&self) -> Result<u64, ShapeError> {
+        Ok(self.params_per_layer()?.iter().sum())
+    }
+
+    /// Indices of layers that hold weights (Conv2d / Fc / projected
+    /// ResAdd), i.e. the layers the Domino mapper allocates tile arrays
+    /// for.
+    pub fn weight_layers(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| {
+                matches!(
+                    l.kind,
+                    LayerKind::Conv2d { .. }
+                        | LayerKind::Fc { .. }
+                        | LayerKind::ResAdd { proj: Some(_), .. }
+                )
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(out_ch: usize, k: usize, s: usize, p: usize) -> Layer {
+        Layer {
+            name: "conv".into(),
+            kind: LayerKind::Conv2d {
+                out_ch,
+                kernel: k,
+                stride: s,
+                padding: p,
+                relu: true,
+            },
+            requant_shift: 7,
+        }
+    }
+
+    #[test]
+    fn conv_out_matches_standard_formula() {
+        assert_eq!(conv_out(32, 3, 1, 1), Some(32));
+        assert_eq!(conv_out(32, 3, 2, 1), Some(16));
+        assert_eq!(conv_out(224, 7, 2, 3), Some(112));
+        assert_eq!(conv_out(2, 3, 1, 0), None);
+        assert_eq!(conv_out(4, 3, 0, 0), None);
+    }
+
+    #[test]
+    fn shape_inference_simple_chain() {
+        let net = Network {
+            name: "t".into(),
+            input: TensorShape::new(3, 32, 32),
+            layers: vec![
+                conv(16, 3, 1, 1),
+                Layer {
+                    name: "pool".into(),
+                    kind: LayerKind::MaxPool2d { kernel: 2, stride: 2 },
+                    requant_shift: 0,
+                },
+                Layer {
+                    name: "flat".into(),
+                    kind: LayerKind::Flatten,
+                    requant_shift: 0,
+                },
+                Layer {
+                    name: "fc".into(),
+                    kind: LayerKind::Fc {
+                        out_features: 10,
+                        relu: false,
+                    },
+                    requant_shift: 7,
+                },
+            ],
+        };
+        let shapes = net.shapes().unwrap();
+        assert_eq!(shapes[0], TensorShape::new(16, 32, 32));
+        assert_eq!(shapes[1], TensorShape::new(16, 16, 16));
+        assert_eq!(shapes[2], TensorShape::new(16 * 16 * 16, 1, 1));
+        assert_eq!(shapes[3], TensorShape::new(10, 1, 1));
+    }
+
+    #[test]
+    fn macs_and_params_counts() {
+        let net = Network {
+            name: "t".into(),
+            input: TensorShape::new(3, 8, 8),
+            layers: vec![conv(4, 3, 1, 1)],
+        };
+        // 3*3*3*4 params, x 8*8 output positions
+        assert_eq!(net.total_params().unwrap(), 108);
+        assert_eq!(net.total_macs().unwrap(), 108 * 64);
+        assert_eq!(net.total_ops().unwrap(), 2 * 108 * 64);
+    }
+
+    #[test]
+    fn fc_on_spatial_is_rejected() {
+        let net = Network {
+            name: "t".into(),
+            input: TensorShape::new(3, 8, 8),
+            layers: vec![Layer {
+                name: "fc".into(),
+                kind: LayerKind::Fc {
+                    out_features: 10,
+                    relu: false,
+                },
+                requant_shift: 7,
+            }],
+        };
+        assert!(matches!(net.shapes(), Err(ShapeError::FcOnSpatial { layer: 0 })));
+    }
+
+    #[test]
+    fn res_add_shape_checked() {
+        let net = Network {
+            name: "t".into(),
+            input: TensorShape::new(4, 8, 8),
+            layers: vec![
+                conv(4, 3, 1, 1),
+                conv(4, 3, 1, 1),
+                Layer {
+                    name: "res".into(),
+                    kind: LayerKind::ResAdd { from: 0, proj: None },
+                    requant_shift: 0,
+                },
+            ],
+        };
+        assert!(net.shapes().is_ok());
+
+        let bad = Network {
+            name: "t".into(),
+            input: TensorShape::new(4, 8, 8),
+            layers: vec![
+                conv(8, 3, 1, 1),
+                conv(4, 3, 1, 1),
+                Layer {
+                    name: "res".into(),
+                    kind: LayerKind::ResAdd { from: 0, proj: None },
+                    requant_shift: 0,
+                },
+            ],
+        };
+        assert!(matches!(
+            bad.shapes(),
+            Err(ShapeError::ResShapeMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn res_add_future_index_rejected() {
+        let net = Network {
+            name: "t".into(),
+            input: TensorShape::new(4, 8, 8),
+            layers: vec![Layer {
+                name: "res".into(),
+                kind: LayerKind::ResAdd { from: 0, proj: None },
+                requant_shift: 0,
+            }],
+        };
+        assert!(matches!(net.shapes(), Err(ShapeError::BadResIndex { .. })));
+    }
+
+    #[test]
+    fn weight_layers_are_conv_and_fc_only() {
+        let net = Network {
+            name: "t".into(),
+            input: TensorShape::new(3, 8, 8),
+            layers: vec![
+                conv(4, 3, 1, 1),
+                Layer {
+                    name: "pool".into(),
+                    kind: LayerKind::MaxPool2d { kernel: 2, stride: 2 },
+                    requant_shift: 0,
+                },
+                Layer {
+                    name: "flat".into(),
+                    kind: LayerKind::Flatten,
+                    requant_shift: 0,
+                },
+                Layer {
+                    name: "fc".into(),
+                    kind: LayerKind::Fc {
+                        out_features: 10,
+                        relu: false,
+                    },
+                    requant_shift: 7,
+                },
+            ],
+        };
+        assert_eq!(net.weight_layers(), vec![0, 3]);
+    }
+}

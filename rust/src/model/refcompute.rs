@@ -1,0 +1,530 @@
+//! Int8 functional reference ("what the hardware must compute").
+//!
+//! This module fixes the exact arithmetic semantics shared by all three
+//! implementations of the network:
+//!
+//! 1. this direct Rust reference (the oracle for unit/property tests),
+//! 2. the cycle-accurate Domino simulator (`crate::sim`), and
+//! 3. the JAX/Pallas golden model (python/compile/model.py, loaded through
+//!    `crate::runtime` as AOT-compiled HLO).
+//!
+//! Semantics (all shared, bit-exact):
+//! * activations and weights are `i8`; accumulation is `i32`;
+//! * conv/fc requantization: `y = clamp_i8(relu?(acc >> shift))` with an
+//!   arithmetic right shift (`shift` = `Layer::requant_shift`), ReLU
+//!   applied *after* the shift, then saturation to `[-128, 127]`;
+//! * residual add: `y = clamp_i8(max(a + b, 0))` (ReLU always follows the
+//!   add, as in ResNet); a projected skip path is first convolved 1x1 and
+//!   requantized like a conv;
+//! * max pool: plain i8 max; average pool: `floor(sum / k²)` (floor
+//!   division, matching `jnp.floor_divide`).
+
+use super::{Layer, LayerKind, Network, Projection, ShapeError, TensorShape};
+use crate::testutil::Rng;
+
+/// Saturate an i32 accumulator to i8.
+#[inline]
+pub fn clamp_i8(v: i32) -> i8 {
+    v.clamp(i8::MIN as i32, i8::MAX as i32) as i8
+}
+
+/// The shared conv/fc requantization function.
+#[inline]
+pub fn requant(acc: i32, shift: u32, relu: bool) -> i8 {
+    let mut v = acc >> shift; // arithmetic shift (i32)
+    if relu {
+        v = v.max(0);
+    }
+    clamp_i8(v)
+}
+
+/// The shared residual-add function (ReLU fused).
+#[inline]
+pub fn res_add(a: i8, b: i8) -> i8 {
+    clamp_i8((a as i32 + b as i32).max(0))
+}
+
+/// Weights for one layer.
+#[derive(Clone, Debug)]
+pub enum LayerWeights {
+    /// Conv2d weights laid out `[M][C][K][K]` row-major.
+    Conv { w: Vec<i8> },
+    /// FC weights laid out `[out][in]` row-major.
+    Fc { w: Vec<i8> },
+    /// Projection weights for a ResAdd skip path, laid out `[M][C]`.
+    Proj { w: Vec<i8> },
+    /// Layer holds no weights.
+    None,
+}
+
+impl LayerWeights {
+    pub fn as_slice(&self) -> &[i8] {
+        match self {
+            LayerWeights::Conv { w } | LayerWeights::Fc { w } | LayerWeights::Proj { w } => w,
+            LayerWeights::None => &[],
+        }
+    }
+}
+
+/// All weights of a network, indexed by layer.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub per_layer: Vec<LayerWeights>,
+}
+
+impl Weights {
+    /// A weight-less placeholder (one `None` per layer) for skeleton
+    /// (analysis-only) compilation.
+    pub fn empty(net: &Network) -> Self {
+        Self {
+            per_layer: vec![LayerWeights::None; net.layers.len()],
+        }
+    }
+
+    /// Seeded synthetic weights, bounded to avoid permanent saturation in
+    /// deep accumulations (|w| <= 15). Geometry follows the network.
+    pub fn random(net: &Network, seed: u64) -> Result<Self, ShapeError> {
+        let shapes = net.shapes()?;
+        let mut rng = Rng::new(seed);
+        let mut per_layer = Vec::with_capacity(net.layers.len());
+        let mut in_shape = net.input;
+        for (i, layer) in net.layers.iter().enumerate() {
+            let lw = match &layer.kind {
+                LayerKind::Conv2d { out_ch, kernel, .. } => LayerWeights::Conv {
+                    w: rng.i8_vec(out_ch * in_shape.c * kernel * kernel, 15),
+                },
+                LayerKind::Fc { out_features, .. } => LayerWeights::Fc {
+                    w: rng.i8_vec(out_features * in_shape.c, 15),
+                },
+                LayerKind::ResAdd {
+                    from,
+                    proj: Some(p),
+                } => LayerWeights::Proj {
+                    w: rng.i8_vec(p.out_ch * shapes[*from].c, 15),
+                },
+                _ => LayerWeights::None,
+            };
+            per_layer.push(lw);
+            in_shape = shapes[i];
+        }
+        Ok(Self { per_layer })
+    }
+}
+
+/// An i8 CHW tensor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tensor {
+    pub shape: TensorShape,
+    pub data: Vec<i8>,
+}
+
+impl Tensor {
+    pub fn new(shape: TensorShape, data: Vec<i8>) -> Self {
+        assert_eq!(shape.len(), data.len(), "tensor data/shape mismatch");
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: TensorShape) -> Self {
+        Self {
+            data: vec![0; shape.len()],
+            shape,
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, c: usize, y: usize, x: usize) -> i8 {
+        self.data[(c * self.shape.h + y) * self.shape.w + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: usize, y: usize, x: usize, v: i8) {
+        self.data[(c * self.shape.h + y) * self.shape.w + x] = v;
+    }
+
+    /// Zero-padded read (used by convolution).
+    #[inline]
+    pub fn at_padded(&self, c: usize, y: isize, x: isize) -> i8 {
+        if y < 0 || x < 0 || y >= self.shape.h as isize || x >= self.shape.w as isize {
+            0
+        } else {
+            self.at(c, y as usize, x as usize)
+        }
+    }
+}
+
+/// Direct (sliding-window) conv2d with the shared requantization.
+pub fn conv2d(
+    input: &Tensor,
+    w: &[i8],
+    out_ch: usize,
+    kernel: usize,
+    stride: usize,
+    padding: usize,
+    shift: u32,
+    relu: bool,
+) -> Tensor {
+    let c_in = input.shape.c;
+    let oh = super::conv_out(input.shape.h, kernel, stride, padding).expect("conv2d shape");
+    let ow = super::conv_out(input.shape.w, kernel, stride, padding).expect("conv2d shape");
+    assert_eq!(w.len(), out_ch * c_in * kernel * kernel, "conv weight size");
+    let mut out = Tensor::zeros(TensorShape::new(out_ch, oh, ow));
+    for m in 0..out_ch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc: i32 = 0;
+                for c in 0..c_in {
+                    for kr in 0..kernel {
+                        for kc in 0..kernel {
+                            let iy = (oy * stride + kr) as isize - padding as isize;
+                            let ix = (ox * stride + kc) as isize - padding as isize;
+                            let xv = input.at_padded(c, iy, ix) as i32;
+                            let wv = w[((m * c_in + c) * kernel + kr) * kernel + kc] as i32;
+                            acc += xv * wv;
+                        }
+                    }
+                }
+                out.set(m, oy, ox, requant(acc, shift, relu));
+            }
+        }
+    }
+    out
+}
+
+/// FC layer `y = xW` with the shared requantization.
+pub fn fc(input: &[i8], w: &[i8], out_features: usize, shift: u32, relu: bool) -> Vec<i8> {
+    let in_features = input.len();
+    assert_eq!(w.len(), out_features * in_features, "fc weight size");
+    (0..out_features)
+        .map(|o| {
+            let acc: i32 = (0..in_features)
+                .map(|i| input[i] as i32 * w[o * in_features + i] as i32)
+                .sum();
+            requant(acc, shift, relu)
+        })
+        .collect()
+}
+
+/// Max pooling.
+pub fn max_pool(input: &Tensor, kernel: usize, stride: usize) -> Tensor {
+    let oh = super::conv_out(input.shape.h, kernel, stride, 0).expect("pool shape");
+    let ow = super::conv_out(input.shape.w, kernel, stride, 0).expect("pool shape");
+    let mut out = Tensor::zeros(TensorShape::new(input.shape.c, oh, ow));
+    for c in 0..input.shape.c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut m = i8::MIN;
+                for kr in 0..kernel {
+                    for kc in 0..kernel {
+                        m = m.max(input.at(c, oy * stride + kr, ox * stride + kc));
+                    }
+                }
+                out.set(c, oy, ox, m);
+            }
+        }
+    }
+    out
+}
+
+/// Average pooling with floor division (matches `jnp.floor_divide`).
+pub fn avg_pool(input: &Tensor, kernel: usize, stride: usize) -> Tensor {
+    let oh = super::conv_out(input.shape.h, kernel, stride, 0).expect("pool shape");
+    let ow = super::conv_out(input.shape.w, kernel, stride, 0).expect("pool shape");
+    let n = (kernel * kernel) as i32;
+    let mut out = Tensor::zeros(TensorShape::new(input.shape.c, oh, ow));
+    for c in 0..input.shape.c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut sum: i32 = 0;
+                for kr in 0..kernel {
+                    for kc in 0..kernel {
+                        sum += input.at(c, oy * stride + kr, ox * stride + kc) as i32;
+                    }
+                }
+                out.set(c, oy, ox, clamp_i8(sum.div_euclid(n)));
+            }
+        }
+    }
+    out
+}
+
+/// 1x1 strided projection conv (ResNet skip path).
+pub fn project(input: &Tensor, w: &[i8], proj: &Projection, shift: u32) -> Tensor {
+    let c_in = input.shape.c;
+    let shape = proj.out_shape(input.shape).expect("projection shape");
+    assert_eq!(w.len(), proj.out_ch * c_in, "projection weight size");
+    let mut out = Tensor::zeros(shape);
+    for m in 0..proj.out_ch {
+        for oy in 0..shape.h {
+            for ox in 0..shape.w {
+                let acc: i32 = (0..c_in)
+                    .map(|c| {
+                        input.at(c, oy * proj.stride, ox * proj.stride) as i32
+                            * w[m * c_in + c] as i32
+                    })
+                    .sum();
+                out.set(m, oy, ox, requant(acc, shift, false));
+            }
+        }
+    }
+    out
+}
+
+/// Full-network forward pass. Returns the output of every layer (the last
+/// entry is the network output); intermediate outputs feed residual skips
+/// and let tests compare the simulator layer by layer.
+pub fn forward_all(
+    net: &Network,
+    weights: &Weights,
+    input: &Tensor,
+) -> Result<Vec<Tensor>, ShapeError> {
+    assert_eq!(input.shape, net.input, "input shape mismatch");
+    net.shapes()?; // validate
+    let mut outs: Vec<Tensor> = Vec::with_capacity(net.layers.len());
+    let mut cur = input.clone();
+    for (i, layer) in net.layers.iter().enumerate() {
+        let Layer {
+            kind, requant_shift, ..
+        } = layer;
+        let next = match kind {
+            LayerKind::Conv2d {
+                out_ch,
+                kernel,
+                stride,
+                padding,
+                relu,
+            } => conv2d(
+                &cur,
+                weights.per_layer[i].as_slice(),
+                *out_ch,
+                *kernel,
+                *stride,
+                *padding,
+                *requant_shift,
+                *relu,
+            ),
+            LayerKind::Fc { out_features, relu } => {
+                let y = fc(
+                    &cur.data,
+                    weights.per_layer[i].as_slice(),
+                    *out_features,
+                    *requant_shift,
+                    *relu,
+                );
+                Tensor::new(TensorShape::new(*out_features, 1, 1), y)
+            }
+            LayerKind::MaxPool2d { kernel, stride } => max_pool(&cur, *kernel, *stride),
+            LayerKind::AvgPool2d { kernel, stride } => avg_pool(&cur, *kernel, *stride),
+            LayerKind::ResAdd { from, proj } => {
+                let skip_src = &outs[*from];
+                let skip = match proj {
+                    Some(p) => project(
+                        skip_src,
+                        weights.per_layer[i].as_slice(),
+                        p,
+                        *requant_shift,
+                    ),
+                    None => skip_src.clone(),
+                };
+                assert_eq!(skip.shape, cur.shape, "residual shape");
+                let data = cur
+                    .data
+                    .iter()
+                    .zip(skip.data.iter())
+                    .map(|(&a, &b)| res_add(a, b))
+                    .collect();
+                Tensor::new(cur.shape, data)
+            }
+            LayerKind::Flatten => Tensor::new(TensorShape::new(cur.shape.len(), 1, 1), cur.data.clone()),
+        };
+        outs.push(next.clone());
+        cur = next;
+    }
+    Ok(outs)
+}
+
+/// Forward pass returning only the final output.
+pub fn forward(
+    net: &Network,
+    weights: &Weights,
+    input: &Tensor,
+) -> Result<Tensor, ShapeError> {
+    Ok(forward_all(net, weights, input)?
+        .pop()
+        .unwrap_or_else(|| input.clone()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::testutil::for_all;
+
+    #[test]
+    fn requant_semantics() {
+        assert_eq!(requant(255, 0, false), 127); // saturate high
+        assert_eq!(requant(-300, 0, false), -128); // saturate low
+        assert_eq!(requant(-300, 0, true), 0); // relu after shift
+        assert_eq!(requant(256, 7, false), 2);
+        assert_eq!(requant(-1, 7, false), -1); // arithmetic shift: -1>>7 = -1
+        assert_eq!(requant(-1, 7, true), 0);
+    }
+
+    #[test]
+    fn res_add_saturates_and_relus() {
+        assert_eq!(res_add(100, 100), 127);
+        assert_eq!(res_add(-100, 50), 0);
+        assert_eq!(res_add(3, 4), 7);
+    }
+
+    #[test]
+    fn conv2d_identity_kernel() {
+        // 1x1 kernel, single channel, weight=1, shift 0: identity + relu.
+        let input = Tensor::new(
+            TensorShape::new(1, 2, 2),
+            vec![1, -2, 3, -4],
+        );
+        let out = conv2d(&input, &[1], 1, 1, 1, 0, 0, true);
+        assert_eq!(out.data, vec![1, 0, 3, 0]);
+    }
+
+    #[test]
+    fn conv2d_known_3x3() {
+        // Single channel 3x3 input, 3x3 all-ones kernel, padding 1:
+        // centre output = sum of all inputs.
+        let input = Tensor::new(
+            TensorShape::new(1, 3, 3),
+            vec![1, 2, 3, 4, 5, 6, 7, 8, 9],
+        );
+        let w = vec![1i8; 9];
+        let out = conv2d(&input, &w, 1, 3, 1, 1, 0, false);
+        assert_eq!(out.shape, TensorShape::new(1, 3, 3));
+        assert_eq!(out.at(0, 1, 1), 45);
+        // corner (0,0): window covers (0..1, 0..1) => 1+2+4+5 = 12
+        assert_eq!(out.at(0, 0, 0), 12);
+    }
+
+    #[test]
+    fn conv2d_stride_two() {
+        let input = Tensor::new(
+            TensorShape::new(1, 4, 4),
+            (0..16).map(|v| v as i8).collect(),
+        );
+        let out = conv2d(&input, &[1], 1, 1, 2, 0, 0, false);
+        assert_eq!(out.shape, TensorShape::new(1, 2, 2));
+        assert_eq!(out.data, vec![0, 2, 8, 10]);
+    }
+
+    #[test]
+    fn fc_known_values() {
+        // y0 = 1*1 + 2*2 = 5; y1 = 1*(-1) + 2*3 = 5 -> shift 1 -> 2
+        let y = fc(&[1, 2], &[1, 2, -1, 3], 2, 1, false);
+        assert_eq!(y, vec![2, 2]);
+    }
+
+    #[test]
+    fn max_pool_2x2() {
+        let input = Tensor::new(
+            TensorShape::new(1, 2, 4),
+            vec![1, 5, -3, -7, 2, 0, -1, -9],
+        );
+        let out = max_pool(&input, 2, 2);
+        assert_eq!(out.data, vec![5, -1]);
+    }
+
+    #[test]
+    fn avg_pool_floor_division() {
+        // sum = 1+2+3+(-9) = -3; floor(-3/4) = -1 (floor, not trunc)
+        let input = Tensor::new(TensorShape::new(1, 2, 2), vec![1, 2, 3, -9]);
+        let out = avg_pool(&input, 2, 2);
+        assert_eq!(out.data, vec![-1]);
+    }
+
+    #[test]
+    fn projection_downsamples() {
+        let input = Tensor::new(
+            TensorShape::new(1, 2, 2),
+            vec![10, 20, 30, 40],
+        );
+        let p = Projection { out_ch: 2, stride: 2 };
+        let out = project(&input, &[2, -2], &p, 0);
+        assert_eq!(out.shape, TensorShape::new(2, 1, 1));
+        assert_eq!(out.data, vec![20, -20]);
+    }
+
+    #[test]
+    fn forward_tiny_cnn_runs_and_is_deterministic() {
+        let net = zoo::tiny_cnn();
+        let weights = Weights::random(&net, 1).unwrap();
+        let mut rng = crate::testutil::Rng::new(2);
+        let input = Tensor::new(net.input, rng.i8_vec(net.input_len(), 31));
+        let a = forward(&net, &weights, &input).unwrap();
+        let b = forward(&net, &weights, &input).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.shape.c, 10);
+    }
+
+    #[test]
+    fn forward_resnet_block_uses_skip() {
+        // conv_linear + res_add: zero conv weights make output = relu(skip).
+        let net = crate::model::NetworkBuilder::new("t", TensorShape::new(2, 4, 4))
+            .conv(2, 3, 1, 1)
+            .conv_shift(2, 3, 1, 1, false, 0)
+            .res_add(0)
+            .build();
+        let mut weights = Weights::random(&net, 3).unwrap();
+        // zero the second conv
+        if let LayerWeights::Conv { w } = &mut weights.per_layer[1] {
+            w.iter_mut().for_each(|v| *v = 0);
+        }
+        let mut rng = crate::testutil::Rng::new(4);
+        let input = Tensor::new(net.input, rng.i8_vec(net.input_len(), 31));
+        let outs = forward_all(&net, &weights, &input).unwrap();
+        let skip = &outs[0];
+        let out = &outs[2];
+        for (a, b) in out.data.iter().zip(skip.data.iter()) {
+            assert_eq!(*a, (*b).max(0));
+        }
+    }
+
+    #[test]
+    fn prop_conv_linearity_in_weights() {
+        // conv(x, w) with shift 0 no relu is linear in w for small values:
+        // conv(x, 2w) == 2*conv(x, w) when nothing saturates.
+        for_all("conv_linearity", 20, |rng| {
+            let c = rng.range(1, 3);
+            let m = rng.range(1, 3);
+            let h = rng.range(3, 6);
+            let input = Tensor::new(
+                TensorShape::new(c, h, h),
+                rng.i8_vec(c * h * h, 3),
+            );
+            let w: Vec<i8> = rng.i8_vec(m * c * 9, 2);
+            let w2: Vec<i8> = w.iter().map(|&v| v * 2).collect();
+            let a = conv2d(&input, &w, m, 3, 1, 1, 0, false);
+            let b = conv2d(&input, &w2, m, 3, 1, 1, 0, false);
+            for (x, y) in a.data.iter().zip(b.data.iter()) {
+                // guard: skip saturated positions
+                if (*x as i32 * 2).abs() <= 127 {
+                    assert_eq!(*y as i32, *x as i32 * 2);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_maxpool_upper_bounds_avgpool() {
+        for_all("max_ge_avg", 20, |rng| {
+            let c = rng.range(1, 3);
+            let h = rng.range(2, 5) * 2;
+            let input = Tensor::new(
+                TensorShape::new(c, h, h),
+                rng.i8_vec(c * h * h, 100),
+            );
+            let mx = max_pool(&input, 2, 2);
+            let av = avg_pool(&input, 2, 2);
+            for (m, a) in mx.data.iter().zip(av.data.iter()) {
+                assert!(m >= a, "max {m} < avg {a}");
+            }
+        });
+    }
+}

@@ -1,0 +1,302 @@
+//! Model zoo: the networks evaluated in the paper's Table IV.
+//!
+//! * VGG-11 on CIFAR-10 (compared against Jia et al. [9])
+//! * ResNet-18 on CIFAR-10 (compared against Yue et al. [17])
+//! * VGG-16 on ImageNet (compared against Yoon et al. [16])
+//! * VGG-19 on ImageNet (compared against AtomLayer [10] and CASCADE [6])
+//!
+//! plus `tiny_cnn`, a small network used for cycle-accurate simulator
+//! validation and the end-to-end accuracy/golden-model experiments
+//! (full-size nets are evaluated through the validated analytic
+//! performance model — see `perfmodel`).
+//!
+//! Layer shapes follow the original papers (Simonyan & Zisserman for VGG,
+//! He et al. for ResNet). CIFAR variants use the standard 32x32
+//! adaptations. Weight *values* are synthetic (seeded), which does not
+//! affect performance/energy evaluation — only layer geometry matters.
+
+use super::{Network, NetworkBuilder, Projection, TensorShape};
+#[cfg(test)]
+use super::LayerKind;
+
+/// VGG classifier head. ImageNet VGG uses FC-4096, FC-4096, FC-1000.
+fn vgg_head_imagenet(b: NetworkBuilder) -> NetworkBuilder {
+    b.flatten().fc(4096).fc(4096).fc_logits(1000)
+}
+
+/// CIFAR-10 VGG head: FC-512, FC-10 (standard 32x32 adaptation).
+fn vgg_head_cifar(b: NetworkBuilder) -> NetworkBuilder {
+    b.flatten().fc(512).fc_logits(10)
+}
+
+/// VGG-11 ("configuration A"): 64 M 128 M 256x2 M 512x2 M 512x2 M.
+pub fn vgg11_cifar() -> Network {
+    let b = NetworkBuilder::new("vgg11-cifar10", TensorShape::new(3, 32, 32))
+        .conv(64, 3, 1, 1)
+        .max_pool(2, 2)
+        .conv(128, 3, 1, 1)
+        .max_pool(2, 2)
+        .conv(256, 3, 1, 1)
+        .conv(256, 3, 1, 1)
+        .max_pool(2, 2)
+        .conv(512, 3, 1, 1)
+        .conv(512, 3, 1, 1)
+        .max_pool(2, 2)
+        .conv(512, 3, 1, 1)
+        .conv(512, 3, 1, 1)
+        .max_pool(2, 2);
+    vgg_head_cifar(b).build()
+}
+
+/// VGG-16 ("configuration D") on ImageNet 224x224.
+pub fn vgg16_imagenet() -> Network {
+    let b = NetworkBuilder::new("vgg16-imagenet", TensorShape::new(3, 224, 224))
+        .conv(64, 3, 1, 1)
+        .conv(64, 3, 1, 1)
+        .max_pool(2, 2)
+        .conv(128, 3, 1, 1)
+        .conv(128, 3, 1, 1)
+        .max_pool(2, 2)
+        .conv(256, 3, 1, 1)
+        .conv(256, 3, 1, 1)
+        .conv(256, 3, 1, 1)
+        .max_pool(2, 2)
+        .conv(512, 3, 1, 1)
+        .conv(512, 3, 1, 1)
+        .conv(512, 3, 1, 1)
+        .max_pool(2, 2)
+        .conv(512, 3, 1, 1)
+        .conv(512, 3, 1, 1)
+        .conv(512, 3, 1, 1)
+        .max_pool(2, 2);
+    vgg_head_imagenet(b).build()
+}
+
+/// VGG-19 ("configuration E") on ImageNet 224x224.
+pub fn vgg19_imagenet() -> Network {
+    let b = NetworkBuilder::new("vgg19-imagenet", TensorShape::new(3, 224, 224))
+        .conv(64, 3, 1, 1)
+        .conv(64, 3, 1, 1)
+        .max_pool(2, 2)
+        .conv(128, 3, 1, 1)
+        .conv(128, 3, 1, 1)
+        .max_pool(2, 2)
+        .conv(256, 3, 1, 1)
+        .conv(256, 3, 1, 1)
+        .conv(256, 3, 1, 1)
+        .conv(256, 3, 1, 1)
+        .max_pool(2, 2)
+        .conv(512, 3, 1, 1)
+        .conv(512, 3, 1, 1)
+        .conv(512, 3, 1, 1)
+        .conv(512, 3, 1, 1)
+        .max_pool(2, 2)
+        .conv(512, 3, 1, 1)
+        .conv(512, 3, 1, 1)
+        .conv(512, 3, 1, 1)
+        .conv(512, 3, 1, 1)
+        .max_pool(2, 2);
+    vgg_head_imagenet(b).build()
+}
+
+/// One ResNet basic block: conv-conv-resadd. `stride != 1` or channel
+/// change puts a 1x1 projection on the skip path.
+fn basic_block(mut b: NetworkBuilder, in_ch: usize, out_ch: usize, stride: usize) -> NetworkBuilder {
+    let skip_src = b.next_index().checked_sub(1);
+    b = b
+        .conv(out_ch, 3, stride, 1)
+        .conv_linear(out_ch, 3, 1, 1);
+    // Block starts after at least the stem conv, so `skip_src` is always
+    // a valid previous-layer index (the ResAdd IR cannot reference the
+    // network input directly).
+    let res_from = skip_src.expect("basic_block requires a preceding layer");
+    if stride != 1 || in_ch != out_ch {
+        b.res_add_proj(res_from, Projection { out_ch, stride })
+    } else {
+        b.res_add(res_from)
+    }
+}
+
+/// ResNet-18 for CIFAR-10: 3x3/s1 stem, stages (64,64,128,128,256,256,
+/// 512,512) with strides (1,1,2,1,2,1,2,1), global average pool, FC-10.
+pub fn resnet18_cifar() -> Network {
+    let mut b = NetworkBuilder::new("resnet18-cifar10", TensorShape::new(3, 32, 32))
+        .conv(64, 3, 1, 1); // stem
+    b = basic_block(b, 64, 64, 1);
+    b = basic_block(b, 64, 64, 1);
+    b = basic_block(b, 64, 128, 2);
+    b = basic_block(b, 128, 128, 1);
+    b = basic_block(b, 128, 256, 2);
+    b = basic_block(b, 256, 256, 1);
+    b = basic_block(b, 256, 512, 2);
+    b = basic_block(b, 512, 512, 1);
+    // Global average pool over the remaining 4x4 map, then classifier.
+    b.avg_pool(4, 4).flatten().fc_logits(10).build()
+}
+
+/// ResNet-18 for ImageNet: 7x7/s2 stem + 3x3/s2 max pool, the same eight
+/// basic blocks, 7x7 global average pool, FC-1000.
+pub fn resnet18_imagenet() -> Network {
+    let mut b = NetworkBuilder::new("resnet18-imagenet", TensorShape::new(3, 224, 224))
+        .conv(64, 7, 2, 3)
+        .max_pool(2, 2); // paper uses 3x3/s2; 2x2/s2 keeps shapes identical (56x56)
+    b = basic_block(b, 64, 64, 1);
+    b = basic_block(b, 64, 64, 1);
+    b = basic_block(b, 64, 128, 2);
+    b = basic_block(b, 128, 128, 1);
+    b = basic_block(b, 128, 256, 2);
+    b = basic_block(b, 256, 256, 1);
+    b = basic_block(b, 256, 512, 2);
+    b = basic_block(b, 512, 512, 1);
+    b.avg_pool(7, 7).flatten().fc_logits(1000).build()
+}
+
+/// Small CNN used for cycle-accurate validation, the golden-model
+/// cross-check and the quantization-accuracy experiment. Sized so a full
+/// cycle simulation finishes in milliseconds and every layer type the
+/// paper discusses (conv, maxpool, avgpool, skip, fc) is exercised.
+pub fn tiny_cnn() -> Network {
+    NetworkBuilder::new("tiny-cnn", TensorShape::new(3, 16, 16))
+        .conv(16, 3, 1, 1)
+        .max_pool(2, 2)
+        .conv(32, 3, 1, 1)
+        .conv_linear(32, 3, 1, 1)
+        .res_add(2)
+        .max_pool(2, 2)
+        .conv(32, 3, 1, 1)
+        .avg_pool(4, 4)
+        .flatten()
+        .fc_logits(10)
+        .build()
+}
+
+/// The Table IV workload set: (network, dataset label, counterpart keys).
+pub fn table4_workloads() -> Vec<(Network, &'static str)> {
+    vec![
+        (vgg11_cifar(), "CIFAR-10"),
+        (resnet18_cifar(), "CIFAR-10"),
+        (vgg16_imagenet(), "ImageNet"),
+        (vgg19_imagenet(), "ImageNet"),
+    ]
+}
+
+/// All zoo constructors by name (CLI access).
+pub fn by_name(name: &str) -> Option<Network> {
+    match name {
+        "vgg11" | "vgg11-cifar10" => Some(vgg11_cifar()),
+        "vgg16" | "vgg16-imagenet" => Some(vgg16_imagenet()),
+        "vgg19" | "vgg19-imagenet" => Some(vgg19_imagenet()),
+        "resnet18" | "resnet18-cifar10" => Some(resnet18_cifar()),
+        "resnet18-imagenet" => Some(resnet18_imagenet()),
+        "tiny" | "tiny-cnn" => Some(tiny_cnn()),
+        _ => None,
+    }
+}
+
+/// Names accepted by [`by_name`].
+pub const MODEL_NAMES: &[&str] = &[
+    "vgg11-cifar10",
+    "resnet18-cifar10",
+    "vgg16-imagenet",
+    "vgg19-imagenet",
+    "resnet18-imagenet",
+    "tiny-cnn",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_zoo_models_shape_check() {
+        for name in MODEL_NAMES {
+            let net = by_name(name).unwrap();
+            let shapes = net.shapes().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!shapes.is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn vgg16_param_and_mac_counts_match_literature() {
+        // VGG-16: ~138.3M params (with biases; we count weights only:
+        // 138.34M - 13.4k biases ≈ 138.33M), 15.47 GMACs at 224x224.
+        let net = vgg16_imagenet();
+        let params = net.total_params().unwrap();
+        assert!(
+            (138_000_000..139_000_000).contains(&params),
+            "params = {params}"
+        );
+        let macs = net.total_macs().unwrap();
+        assert!(
+            (15_300_000_000..15_600_000_000).contains(&macs),
+            "macs = {macs}"
+        );
+    }
+
+    #[test]
+    fn vgg19_mac_count_matches_literature() {
+        // VGG-19: ~19.6 GMACs at 224x224, ~143.7M params.
+        let net = vgg19_imagenet();
+        let macs = net.total_macs().unwrap();
+        assert!(
+            (19_400_000_000..19_800_000_000).contains(&macs),
+            "macs = {macs}"
+        );
+    }
+
+    #[test]
+    fn vgg11_cifar_output_is_ten_classes() {
+        let net = vgg11_cifar();
+        assert_eq!(net.output_shape().unwrap(), TensorShape::new(10, 1, 1));
+    }
+
+    #[test]
+    fn resnet18_cifar_structure() {
+        let net = resnet18_cifar();
+        let shapes = net.shapes().unwrap();
+        // Stem output 64x32x32; final fc 10.
+        assert_eq!(shapes[0], TensorShape::new(64, 32, 32));
+        assert_eq!(*shapes.last().unwrap(), TensorShape::new(10, 1, 1));
+        // ResNet-18 CIFAR: ~11.2M weight params.
+        let params = net.total_params().unwrap();
+        assert!(
+            (11_000_000..11_400_000).contains(&params),
+            "params = {params}"
+        );
+        // 8 residual adds.
+        let n_res = net
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::ResAdd { .. }))
+            .count();
+        assert_eq!(n_res, 8);
+    }
+
+    #[test]
+    fn resnet18_imagenet_shapes() {
+        let net = resnet18_imagenet();
+        let shapes = net.shapes().unwrap();
+        assert_eq!(shapes[0], TensorShape::new(64, 112, 112));
+        assert_eq!(shapes[1], TensorShape::new(64, 56, 56));
+        assert_eq!(*shapes.last().unwrap(), TensorShape::new(1000, 1, 1));
+        // ~1.8 GMACs (conv stem 2x2 pool variant keeps this in range).
+        let macs = net.total_macs().unwrap();
+        assert!(
+            (1_700_000_000..2_000_000_000).contains(&macs),
+            "macs = {macs}"
+        );
+    }
+
+    #[test]
+    fn tiny_cnn_is_small_and_valid() {
+        let net = tiny_cnn();
+        net.shapes().unwrap();
+        assert!(net.total_macs().unwrap() < 10_000_000);
+        assert_eq!(net.output_shape().unwrap().c, 10);
+    }
+
+    #[test]
+    fn by_name_rejects_unknown() {
+        assert!(by_name("alexnet").is_none());
+    }
+}

@@ -1,0 +1,83 @@
+//! Link models: on-chip mesh links and inter-chip serial transceivers.
+//!
+//! Section IV-A: inter-tile bandwidth is 40 Gb/s (10 MHz instruction
+//! steps, 160 MHz FDM peripherals); inter-chip connections are eight
+//! 80 Gb/s transceivers at 0.55 pJ/b (Razavi-style wireline, [11]).
+
+use crate::consts;
+
+/// Which physical link a transfer used (selects the energy/bandwidth
+/// model).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Mesh link between adjacent tiles on the same chip.
+    OnChip,
+    /// Serial transceiver between chips.
+    InterChip,
+}
+
+/// Aggregate inter-chip transceiver: checks bandwidth feasibility and
+/// accounts transferred bits.
+#[derive(Clone, Debug, Default)]
+pub struct InterChipLink {
+    pub bits_transferred: u64,
+}
+
+impl InterChipLink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total inter-chip bandwidth in bits per second.
+    pub fn total_bandwidth_bps() -> f64 {
+        consts::INTERCHIP_LANES as f64 * consts::INTERCHIP_GBPS_PER_LANE * 1e9
+    }
+
+    /// Bits one instruction step (10 MHz) can move across the chip
+    /// boundary.
+    pub fn bits_per_step() -> f64 {
+        Self::total_bandwidth_bps() / consts::STEP_HZ
+    }
+
+    /// Record a transfer of `bits`; returns the number of steps the
+    /// transfer occupies (≥ 1), for stall modeling.
+    pub fn transfer(&mut self, bits: u64) -> u64 {
+        self.bits_transferred += bits;
+        let per_step = Self::bits_per_step();
+        ((bits as f64 / per_step).ceil() as u64).max(1)
+    }
+}
+
+/// Bits one on-chip mesh link can move per instruction step.
+pub fn onchip_bits_per_step() -> f64 {
+    consts::TILE_LINK_GBPS * 1e9 / consts::STEP_HZ
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interchip_bandwidth_is_640_gbps() {
+        assert_eq!(InterChipLink::total_bandwidth_bps(), 640e9);
+        // 640 Gb/s over 10 MHz steps = 64 kb per step
+        assert_eq!(InterChipLink::bits_per_step(), 64_000.0);
+    }
+
+    #[test]
+    fn onchip_link_fits_one_packet_per_step() {
+        // 40 Gb/s over 10 MHz steps = 4000 bits per step: enough for a
+        // 256-lane i8 IFM beat (2048 b) but requiring 2 steps for a
+        // 256-lane i32 psum beat - the paper's two-subcycle structure.
+        assert_eq!(onchip_bits_per_step(), 4000.0);
+    }
+
+    #[test]
+    fn transfer_counts_steps() {
+        let mut l = InterChipLink::new();
+        assert_eq!(l.transfer(1), 1);
+        assert_eq!(l.transfer(64_000), 1);
+        assert_eq!(l.transfer(64_001), 2);
+        assert_eq!(l.bits_transferred, 128_002);
+    }
+}

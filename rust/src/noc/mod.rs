@@ -1,0 +1,176 @@
+//! 2-D mesh NoC topology: coordinates, directions, placement and link
+//! accounting (paper Fig. 1(a): tiles interconnected in a 2-D mesh, a
+//! layer mapped to a contiguous group of tiles).
+
+pub mod flit;
+pub mod link;
+pub mod packet;
+
+pub use link::{InterChipLink, LinkKind};
+pub use packet::{IfmPacket, OfmPacket, Packet, PsumPacket};
+
+/// Mesh coordinate (row, col) of a tile; `chip` distinguishes chips when
+/// a network does not fit on one (Table IV: "240 x N chips").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Coord {
+    pub chip: usize,
+    pub row: usize,
+    pub col: usize,
+}
+
+impl Coord {
+    pub fn new(chip: usize, row: usize, col: usize) -> Self {
+        Self { chip, row, col }
+    }
+
+    /// Manhattan distance within a chip; `None` across chips (inter-chip
+    /// hops go through the serial transceivers instead of the mesh).
+    pub fn hops(&self, other: &Coord) -> Option<usize> {
+        (self.chip == other.chip).then(|| {
+            self.row.abs_diff(other.row) + self.col.abs_diff(other.col)
+        })
+    }
+}
+
+impl std::fmt::Display for Coord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "c{}({},{})", self.chip, self.row, self.col)
+    }
+}
+
+/// Port directions of the RIFM/ROFM routers (paper Fig. 1(b): I/O ports
+/// in four directions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    North,
+    East,
+    South,
+    West,
+}
+
+impl Dir {
+    pub const ALL: [Dir; 4] = [Dir::North, Dir::East, Dir::South, Dir::West];
+
+    pub fn opposite(self) -> Dir {
+        match self {
+            Dir::North => Dir::South,
+            Dir::South => Dir::North,
+            Dir::East => Dir::West,
+            Dir::West => Dir::East,
+        }
+    }
+
+    /// The direction from `a` to an adjacent `b`, if adjacent.
+    pub fn between(a: Coord, b: Coord) -> Option<Dir> {
+        if a.chip != b.chip {
+            return None;
+        }
+        match (
+            b.row as isize - a.row as isize,
+            b.col as isize - a.col as isize,
+        ) {
+            (-1, 0) => Some(Dir::North),
+            (1, 0) => Some(Dir::South),
+            (0, 1) => Some(Dir::East),
+            (0, -1) => Some(Dir::West),
+            _ => None,
+        }
+    }
+}
+
+/// Serpentine (boustrophedon) placement of a chain of `n` tiles into a
+/// mesh of width `mesh_cols`, starting at tile index `start` (flattened).
+/// Consecutive chain positions are always mesh-adjacent, which is what
+/// makes every partial-sum hop a single-link traversal — the physical
+/// basis of the COM dataflow's locality claim.
+pub fn serpentine(start: usize, n: usize, mesh_cols: usize, tiles_per_chip: usize) -> Vec<Coord> {
+    assert!(mesh_cols > 0 && tiles_per_chip >= mesh_cols);
+    (0..n)
+        .map(|i| {
+            let flat = start + i;
+            let chip = flat / tiles_per_chip;
+            let within = flat % tiles_per_chip;
+            let row = within / mesh_cols;
+            let col_in_row = within % mesh_cols;
+            // odd rows run right-to-left so row transitions stay adjacent
+            let col = if row % 2 == 0 {
+                col_in_row
+            } else {
+                mesh_cols - 1 - col_in_row
+            };
+            Coord::new(chip, row, col)
+        })
+        .collect()
+}
+
+/// Check that consecutive coords of a chain are mesh-adjacent (or cross a
+/// chip boundary, which uses the inter-chip transceivers).
+pub fn chain_is_local(coords: &[Coord]) -> bool {
+    coords.windows(2).all(|w| {
+        w[0].chip != w[1].chip || w[0].hops(&w[1]) == Some(1)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::for_all;
+
+    #[test]
+    fn hops_same_chip() {
+        let a = Coord::new(0, 1, 2);
+        let b = Coord::new(0, 3, 5);
+        assert_eq!(a.hops(&b), Some(5));
+        let c = Coord::new(1, 1, 2);
+        assert_eq!(a.hops(&c), None);
+    }
+
+    #[test]
+    fn dir_opposites() {
+        for d in Dir::ALL {
+            assert_eq!(d.opposite().opposite(), d);
+        }
+    }
+
+    #[test]
+    fn dir_between_adjacent() {
+        let a = Coord::new(0, 2, 2);
+        assert_eq!(Dir::between(a, Coord::new(0, 1, 2)), Some(Dir::North));
+        assert_eq!(Dir::between(a, Coord::new(0, 3, 2)), Some(Dir::South));
+        assert_eq!(Dir::between(a, Coord::new(0, 2, 3)), Some(Dir::East));
+        assert_eq!(Dir::between(a, Coord::new(0, 2, 1)), Some(Dir::West));
+        assert_eq!(Dir::between(a, Coord::new(0, 3, 3)), None);
+    }
+
+    #[test]
+    fn serpentine_chains_are_mesh_local() {
+        for_all("serpentine_local", 50, |rng| {
+            let cols = rng.range(2, 16);
+            let rows = rng.range(2, 15);
+            let per_chip = cols * rows;
+            let start = rng.below(per_chip);
+            let n = rng.range(1, 3 * per_chip);
+            let coords = serpentine(start, n, cols, per_chip);
+            assert_eq!(coords.len(), n);
+            assert!(chain_is_local(&coords), "{coords:?}");
+        });
+    }
+
+    #[test]
+    fn serpentine_crosses_chips() {
+        // 4 tiles/chip (2x2): a 6-tile chain spans 2 chips.
+        let coords = serpentine(0, 6, 2, 4);
+        assert_eq!(coords[3].chip, 0);
+        assert_eq!(coords[4].chip, 1);
+        assert_eq!(coords[4], Coord::new(1, 0, 0));
+    }
+
+    #[test]
+    fn serpentine_snake_layout() {
+        let coords = serpentine(0, 6, 3, 9);
+        // row 0: (0,0) (0,1) (0,2); row 1 reversed: (1,2) (1,1) (1,0)
+        assert_eq!(coords[2], Coord::new(0, 0, 2));
+        assert_eq!(coords[3], Coord::new(0, 1, 2));
+        assert_eq!(coords[5], Coord::new(0, 1, 0));
+    }
+}

@@ -1,0 +1,82 @@
+//! Packet types carried by the Domino NoC.
+//!
+//! Granularity: one packet carries one *pixel vector* — all channels of
+//! one feature-map position handled by a tile (≤ N_c = 256 int8 values
+//! for IFMs, ≤ N_m = 256 int32 partial sums). This matches the paper's
+//! model where one 10 MHz instruction step moves one data beat between
+//! adjacent tiles (the 160 MHz FDM peripheral serialises it over the
+//! physical link within the step). Energy is charged per bit actually
+//! moved, so packet granularity does not distort the energy model.
+
+/// An input-feature-map beat: one spatial position's channel slice.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IfmPacket {
+    /// Padded-stream raster index (see `sim::engine` for the stream
+    /// layout). Padding positions carry zero data.
+    pub slot: usize,
+    /// Channel values (a `cblock` slice of the full pixel).
+    pub data: Vec<i8>,
+}
+
+/// A partial-sum / group-sum beat moving along a tile chain.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PsumPacket {
+    /// Output position (oy, ox) this sum belongs to.
+    pub opos: (usize, usize),
+    /// Running 32-bit sums for the chain's output-channel block.
+    pub data: Vec<i32>,
+}
+
+/// A finished output-feature-map beat (post activation/pooling, i8).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct OfmPacket {
+    /// Output position (oy, ox).
+    pub opos: (usize, usize),
+    /// Output-channel block values.
+    pub data: Vec<i8>,
+}
+
+/// Any NoC packet.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Packet {
+    Ifm(IfmPacket),
+    Psum(PsumPacket),
+    Ofm(OfmPacket),
+}
+
+impl Packet {
+    /// Payload size in bits (i8 = 8 b lanes, psum lanes carried at 32 b),
+    /// used for link-energy accounting (0.55 pJ/b inter-chip, Noxim-style
+    /// per-bit on-chip charging).
+    pub fn bits(&self) -> u64 {
+        match self {
+            Packet::Ifm(p) => 8 * p.data.len() as u64,
+            Packet::Psum(p) => 32 * p.data.len() as u64,
+            Packet::Ofm(p) => 8 * p.data.len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packet_bits() {
+        let ifm = Packet::Ifm(IfmPacket {
+            slot: 0,
+            data: vec![0; 256],
+        });
+        assert_eq!(ifm.bits(), 2048);
+        let psum = Packet::Psum(PsumPacket {
+            opos: (0, 0),
+            data: vec![0; 256],
+        });
+        assert_eq!(psum.bits(), 8192);
+        let ofm = Packet::Ofm(OfmPacket {
+            opos: (0, 0),
+            data: vec![0; 16],
+        });
+        assert_eq!(ofm.bits(), 128);
+    }
+}

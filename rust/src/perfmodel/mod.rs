@@ -1,0 +1,495 @@
+//! Closed-form layer-level performance/event model.
+//!
+//! The cycle simulator is exact but costs O(MACs) per image — fine for
+//! validation networks, prohibitive for VGG-16 at 224x224 x thousands of
+//! images. This module computes the *same* event counters analytically
+//! (the engine's loops have closed forms) plus the pipelined timing the
+//! paper's Table IV execution times are built on:
+//!
+//! * **latency** (one image, layers back-to-back) = Σ stage busy slots —
+//!   matches `Simulator::run_image` exactly;
+//! * **pipeline period** = the slowest stage's busy slots — with every
+//!   layer's tile array streaming concurrently ("layer synchronization",
+//!   Section IV-B-2), a new image enters every period;
+//! * **throughput** = STEP_HZ / (period x 2 cycles/slot).
+//!
+//! `validated_against_engine` in the tests (and the
+//! `perfmodel_validation` bench, experiment A3) assert exact counter
+//! equality on small networks, so extrapolation to Table IV sizes is a
+//! matter of arithmetic, not modeling error.
+
+use anyhow::Result;
+
+use crate::coordinator::program::*;
+use crate::coordinator::schedule::{ConvGeometry, CYCLES_PER_SLOT};
+use crate::sim::stats::Counters;
+
+/// Analytic result for one stage.
+#[derive(Clone, Debug)]
+pub struct StageEstimate {
+    pub name: String,
+    /// Busy pixel slots per image (latency: includes chain fill).
+    pub slots: u64,
+    /// Steady-state pipeline period in pixel slots: with consecutive
+    /// images streaming back-to-back the chain never drains, so the
+    /// image period excludes the fill term.
+    pub period_slots: u64,
+    /// Event counters per image.
+    pub counters: Counters,
+    pub tiles: usize,
+}
+
+/// Analytic result for a whole network.
+#[derive(Clone, Debug)]
+pub struct NetworkEstimate {
+    pub stages: Vec<StageEstimate>,
+    /// Per-image counters (all stages merged).
+    pub counters: Counters,
+    /// One-image latency in cycles (stages back-to-back).
+    pub latency_cycles: u64,
+    /// Pipeline period in cycles (slowest stage).
+    pub period_cycles: u64,
+    pub total_tiles: usize,
+    pub chips: usize,
+}
+
+impl NetworkEstimate {
+    /// One-image latency in seconds.
+    pub fn latency_s(&self) -> f64 {
+        self.latency_cycles as f64 / crate::consts::STEP_HZ
+    }
+
+    /// Pipelined throughput in images per second.
+    pub fn images_per_s(&self) -> f64 {
+        crate::consts::STEP_HZ / self.period_cycles as f64
+    }
+
+    /// Paper's per-core inference speed (images/s/CIM core).
+    pub fn images_per_s_per_core(&self) -> f64 {
+        self.images_per_s() / self.total_tiles as f64
+    }
+}
+
+/// Estimate a compiled program analytically.
+pub fn estimate(program: &Program) -> Result<NetworkEstimate> {
+    let mut stages = Vec::new();
+    let mut total = Counters::new();
+    let mut latency_slots: u64 = 0;
+    let mut period_slots: u64 = 0;
+
+    // package I/O (mirrors engine)
+    total.offchip_io_bits += 8 * program.net.input_len() as u64;
+    let out_shape = program.net.output_shape()?;
+    total.offchip_io_bits += 8 * out_shape.len() as u64;
+
+    let mut prev_exit_chip: Option<usize> = None;
+    let mut cur_shape = program.net.input;
+
+    for stage in &program.stages {
+        let mut st = Counters::new();
+        let mut period = None; // set where it differs from `slots`
+        let slots = match &stage.kind {
+            StageKind::Conv(c) => {
+                let s = conv_counters(c, &mut st);
+                period = Some(conv_period_slots(c));
+                cur_shape = match c.fused_pool {
+                    Some(p) => crate::model::TensorShape::new(
+                        c.out_shape.c,
+                        (c.out_shape.h - p.kernel) / p.stride + 1,
+                        (c.out_shape.w - p.kernel) / p.stride + 1,
+                    ),
+                    None => c.out_shape,
+                };
+                s
+            }
+            StageKind::Fc(f) => {
+                let s = fc_counters(f, program.arch.n_c, &mut st);
+                cur_shape = crate::model::TensorShape::new(f.out_features, 1, 1);
+                s
+            }
+            StageKind::Pool(p) => {
+                let s = pool_counters(p, &mut st);
+                cur_shape = p.out_shape;
+                s
+            }
+            StageKind::Res(r) => {
+                let mut s = 0;
+                let mut per = 0;
+                if let Some(proj) = &r.proj {
+                    s += conv_counters(proj, &mut st);
+                    per = per.max(conv_period_slots(proj));
+                }
+                s += res_counters(r, &mut st);
+                per = per.max(res_period_slots(r));
+                period = Some(per);
+                cur_shape = r.shape;
+                s
+            }
+            StageKind::Flatten => {
+                cur_shape = crate::model::TensorShape::new(cur_shape.len(), 1, 1);
+                0
+            }
+        };
+
+        // stage hand-off across chips (mirrors engine)
+        let entry = entry_chip(stage);
+        if let (Some(prev), Some(this)) = (prev_exit_chip, entry) {
+            if prev != this {
+                st.interchip_bits += 8 * cur_shape.len() as u64;
+            }
+        }
+        prev_exit_chip = exit_chip(stage).or(prev_exit_chip);
+
+        let stage_period = period.unwrap_or(slots);
+        st.steps = slots * CYCLES_PER_SLOT as u64;
+        st.tiles_used = stage.tile_count() as u64;
+        latency_slots += slots;
+        period_slots = period_slots.max(stage_period);
+        total.merge(&st);
+        stages.push(StageEstimate {
+            name: stage.name.clone(),
+            slots,
+            period_slots: stage_period,
+            counters: st,
+            tiles: stage.tile_count(),
+        });
+    }
+
+    Ok(NetworkEstimate {
+        stages,
+        counters: total,
+        latency_cycles: latency_slots * CYCLES_PER_SLOT as u64,
+        period_cycles: (period_slots * CYCLES_PER_SLOT as u64).max(1),
+        total_tiles: program.total_tiles,
+        chips: program.chips,
+    })
+}
+
+fn entry_chip(stage: &Stage) -> Option<usize> {
+    match &stage.kind {
+        StageKind::Conv(c) => c.chains.first()?.tiles.first().map(|t| t.coord.chip),
+        StageKind::Fc(f) => f.columns.first()?.tiles.first().map(|t| t.coord.chip),
+        StageKind::Res(r) => r
+            .proj
+            .as_ref()
+            .and_then(|p| p.chains.first()?.tiles.first().map(|t| t.coord.chip)),
+        _ => None,
+    }
+}
+
+fn exit_chip(stage: &Stage) -> Option<usize> {
+    match &stage.kind {
+        StageKind::Conv(c) => c.chains.last()?.tiles.last().map(|t| t.coord.chip),
+        StageKind::Fc(f) => f.columns.last()?.tiles.last().map(|t| t.coord.chip),
+        StageKind::Res(r) => r
+            .proj
+            .as_ref()
+            .and_then(|p| p.chains.last()?.tiles.last().map(|t| t.coord.chip)),
+        _ => None,
+    }
+}
+
+/// Steady-state pipeline period of a conv stage in pixel slots.
+fn conv_period_slots(c: &ConvStage) -> u64 {
+    let g = ConvGeometry::new(c.k, c.stride, c.padding, c.in_shape.h, c.in_shape.w);
+    (g.stream_slots() as u64).div_ceil(c.dup as u64)
+}
+
+/// Steady-state period of the residual add junction.
+fn res_period_slots(r: &ResStage) -> u64 {
+    ((r.shape.h * r.shape.w) as u64).div_ceil(r.dup as u64)
+}
+
+/// Closed-form counters for a conv stage (mirrors
+/// `Simulator::run_conv_stage` term by term).
+fn conv_counters(c: &ConvStage, st: &mut Counters) -> u64 {
+    let g = ConvGeometry::new(c.k, c.stride, c.padding, c.in_shape.h, c.in_shape.w);
+    let (wp, hp) = (g.wp(), g.hp());
+    let total_pixels = (wp * hp) as u64;
+    let outs = (g.out_h * g.out_w) as u64;
+
+    let mut max_chain_len = 0u64;
+    for chain in &c.chains {
+        let n = chain.tiles.len() as u64;
+        max_chain_len = max_chain_len.max(n);
+        let m_lanes = (chain.m_hi - chain.m_lo) as u64;
+        for (ci, cfg) in chain.tiles.iter().enumerate() {
+            let pack = match cfg.rifm.shift_step {
+                64 => 4u64,
+                128 => 2,
+                _ => 1,
+            };
+            let beats = total_pixels.div_ceil(pack);
+            let bits = (cfg.rows * 8) as u64;
+            // RIFM stream
+            st.rifm_buffer_accesses += beats;
+            st.rifm_ctrl_steps += beats;
+            st.rifm_shifts += total_pixels - beats;
+            st.sched_fetches += 2 * total_pixels;
+            st.rofm_ctrl_steps += 2 * total_pixels;
+            if cfg.rifm.forward {
+                let cross = ci + 1 < chain.tiles.len()
+                    && chain.tiles[ci + 1].coord.chip != cfg.coord.chip;
+                let fwd_bits = bits * pack * beats;
+                if cross {
+                    st.interchip_bits += fwd_bits;
+                } else {
+                    st.onchip_link_bits += fwd_bits;
+                }
+            }
+            // valid slots (PE-feed reads are charged inside CIM j/MAC)
+            st.pe_mvms += outs;
+            st.pe_macs += (cfg.rows * cfg.cols) as u64 * outs;
+            if !cfg.is_chain_start {
+                // add of incoming psum (4 8b-adds per i32 lane)
+                st.adds_8b += 4 * cfg.cols as u64 * outs;
+                if cfg.is_row_head {
+                    st.rofm_buffer_accesses += outs; // pops
+                }
+            }
+            if cfg.is_last {
+                st.act_ops_8b += cfg.cols as u64 * outs;
+                let obits = m_lanes * 8;
+                st.rofm_reg_accesses += outs;
+                st.onchip_link_bits += obits * outs;
+            } else {
+                let pbits = (cfg.cols * 32) as u64;
+                st.rofm_reg_accesses += outs; // tx
+                let next = &chain.tiles[ci + 1];
+                if next.coord.chip != cfg.coord.chip {
+                    st.interchip_bits += pbits * outs;
+                } else {
+                    st.onchip_link_bits += pbits * outs;
+                }
+                if next.is_row_head {
+                    st.rofm_buffer_accesses += outs; // pushes
+                } else {
+                    st.rofm_reg_accesses += outs; // rx
+                }
+            }
+        }
+        // fused pooling on the OFM stream (block reuse; kernel == stride
+        // in every Table IV network)
+        if let Some(p) = c.fused_pool {
+            let win = (p.kernel * p.kernel) as u64;
+            let pooled = outs / win;
+            if p.max {
+                st.pool_ops_8b += m_lanes * outs; // one cmp per activation
+            } else {
+                st.adds_8b += m_lanes * outs;
+                st.pool_ops_8b += m_lanes * pooled; // scale at completion
+            }
+        }
+    }
+    // weight duplication: `dup` replica arrays each stream 1/dup of
+    // the pixels concurrently; chain fill is not divided
+    total_pixels.div_ceil(c.dup as u64) + max_chain_len
+}
+
+/// Closed-form counters for an FC stage (mirrors
+/// `Simulator::run_fc_stage`).
+fn fc_counters(f: &FcStage, _n_c: usize, st: &mut Counters) -> u64 {
+    let mut max_col = 0u64;
+    for col in &f.columns {
+        max_col = max_col.max(col.tiles.len() as u64);
+        for (rb, t) in col.tiles.iter().enumerate() {
+            st.rifm_buffer_accesses += 1;
+            st.rifm_ctrl_steps += 1;
+            st.sched_fetches += 1;
+            st.rofm_ctrl_steps += 1;
+            st.onchip_link_bits += (t.rows * 8) as u64;
+            st.pe_mvms += 1;
+            st.pe_macs += (t.rows * t.cols) as u64;
+            if rb > 0 {
+                let pbits = (t.cols * 32) as u64;
+                if col.tiles[rb - 1].coord.chip != t.coord.chip {
+                    st.interchip_bits += pbits;
+                } else {
+                    st.onchip_link_bits += pbits;
+                }
+                st.rofm_reg_accesses += 1;
+                st.adds_8b += 4 * t.cols as u64;
+            }
+        }
+        let cols = col.c_hi - col.c_lo;
+        st.act_ops_8b += cols as u64;
+        let obits = (cols * 8) as u64;
+        st.rofm_reg_accesses += 1;
+        st.onchip_link_bits += obits;
+    }
+    max_col + 1
+}
+
+/// Closed-form counters for a standalone pooling stage.
+fn pool_counters(p: &PoolStage, st: &mut Counters) -> u64 {
+    let c = p.in_shape.c as u64;
+    let pixels = (p.in_shape.h * p.in_shape.w) as u64;
+    let outs = (p.out_shape.h * p.out_shape.w) as u64;
+    let bits = c * 8;
+    st.onchip_link_bits += bits * pixels;
+    st.rofm_reg_accesses += pixels;
+    st.sched_fetches += pixels;
+    st.rofm_ctrl_steps += pixels;
+    if p.max {
+        st.pool_ops_8b += c * pixels;
+    } else {
+        st.adds_8b += c * pixels;
+        st.pool_ops_8b += c * outs;
+    }
+    pixels.div_ceil(p.dup as u64)
+}
+
+/// Closed-form counters for a residual-add stage (excluding its
+/// projection, which is a conv).
+fn res_counters(r: &ResStage, st: &mut Counters) -> u64 {
+    let c = r.shape.c as u64;
+    let pixels = (r.shape.h * r.shape.w) as u64;
+    let bits = c * 8;
+    st.onchip_link_bits += bits * pixels;
+    st.rofm_reg_accesses += pixels; // bypass tx
+    st.sched_fetches += pixels;
+    st.rofm_ctrl_steps += pixels;
+    st.adds_8b += c * pixels;
+    st.act_ops_8b += c * pixels;
+    pixels.div_ceil(r.dup as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{ArchConfig, Compiler};
+    use crate::model::{zoo, NetworkBuilder, TensorShape};
+    use crate::sim::Simulator;
+    use crate::testutil::Rng;
+
+    /// The heart of experiment A3: analytic counters must equal the
+    /// cycle simulator's counters exactly.
+    fn assert_model_matches_engine(net: &crate::model::Network, arch: ArchConfig) {
+        let program = Compiler::new(arch).compile(net).unwrap();
+        let est = estimate(&program).unwrap();
+        let mut sim = Simulator::new(&program);
+        let mut rng = Rng::new(42);
+        let out = sim.run_image(&rng.i8_vec(net.input_len(), 31)).unwrap();
+        let sim_stats = sim.stats();
+
+        assert_eq!(est.counters.pe_macs, sim_stats.pe_macs, "pe_macs");
+        assert_eq!(est.counters.pe_mvms, sim_stats.pe_mvms, "pe_mvms");
+        assert_eq!(
+            est.counters.rifm_buffer_accesses, sim_stats.rifm_buffer_accesses,
+            "rifm_buffer"
+        );
+        assert_eq!(est.counters.rifm_shifts, sim_stats.rifm_shifts, "shifts");
+        assert_eq!(est.counters.adds_8b, sim_stats.adds_8b, "adds");
+        assert_eq!(est.counters.act_ops_8b, sim_stats.act_ops_8b, "acts");
+        assert_eq!(est.counters.pool_ops_8b, sim_stats.pool_ops_8b, "pools");
+        assert_eq!(
+            est.counters.rofm_buffer_accesses, sim_stats.rofm_buffer_accesses,
+            "rofm_buffer"
+        );
+        assert_eq!(
+            est.counters.rofm_reg_accesses, sim_stats.rofm_reg_accesses,
+            "reg_words"
+        );
+        assert_eq!(
+            est.counters.onchip_link_bits, sim_stats.onchip_link_bits,
+            "onchip_bits"
+        );
+        assert_eq!(
+            est.counters.interchip_bits, sim_stats.interchip_bits,
+            "interchip_bits"
+        );
+        assert_eq!(
+            est.counters.offchip_io_bits, sim_stats.offchip_io_bits,
+            "offchip_bits"
+        );
+        assert_eq!(est.latency_cycles, out.latency_cycles, "latency");
+    }
+
+    #[test]
+    fn model_matches_engine_simple_conv() {
+        let net = NetworkBuilder::new("t", TensorShape::new(3, 6, 6))
+            .conv(4, 3, 1, 1)
+            .build();
+        assert_model_matches_engine(&net, ArchConfig::default());
+    }
+
+    #[test]
+    fn model_matches_engine_tiny_cnn() {
+        assert_model_matches_engine(&zoo::tiny_cnn(), ArchConfig::default());
+    }
+
+    #[test]
+    fn model_matches_engine_multiblock() {
+        let net = NetworkBuilder::new("t", TensorShape::new(6, 5, 5))
+            .conv(7, 3, 1, 1)
+            .max_pool(2, 2)
+            .flatten()
+            .fc(9)
+            .fc_logits(5)
+            .build();
+        assert_model_matches_engine(&net, ArchConfig::tiny(4));
+    }
+
+    #[test]
+    fn model_matches_engine_resnet_block() {
+        let net = NetworkBuilder::new("t", TensorShape::new(4, 8, 8))
+            .conv(4, 3, 1, 1)
+            .conv(8, 3, 2, 1)
+            .conv_linear(8, 3, 1, 1)
+            .res_add_proj(
+                0,
+                crate::model::Projection {
+                    out_ch: 8,
+                    stride: 2,
+                },
+            )
+            .build();
+        assert_model_matches_engine(&net, ArchConfig::default());
+    }
+
+    #[test]
+    fn pipeline_period_is_slowest_stage() {
+        let net = zoo::tiny_cnn();
+        let program = Compiler::default().compile(&net).unwrap();
+        let est = estimate(&program).unwrap();
+        let max = est.stages.iter().map(|s| s.period_slots).max().unwrap();
+        assert_eq!(est.period_cycles, max * CYCLES_PER_SLOT as u64);
+        // steady-state period excludes chain fill, so it never exceeds
+        // the per-stage latency
+        assert!(est.stages.iter().all(|s| s.period_slots <= s.slots));
+        assert!(est.latency_cycles >= est.period_cycles);
+    }
+
+    #[test]
+    fn vgg16_estimate_is_sane() {
+        let net = zoo::vgg16_imagenet();
+        let program = Compiler::default().compile(&net).unwrap();
+        let est = estimate(&program).unwrap();
+        // 15.5 GMACs must be preserved exactly.
+        assert_eq!(est.counters.pe_macs, net.total_macs().unwrap());
+        // The bottleneck stage is the 224x224 input layer: ~51k slots.
+        let period_slots = est.period_cycles / CYCLES_PER_SLOT as u64;
+        assert!(
+            period_slots >= (224 * 224) as u64,
+            "period {period_slots} slots"
+        );
+        assert!(est.images_per_s() > 10.0);
+        assert!(est.chips >= 9, "VGG-16 spans ~10 chips, got {}", est.chips);
+    }
+
+    #[test]
+    fn weight_duplication_shortens_period() {
+        let net = NetworkBuilder::new("t", TensorShape::new(3, 8, 8))
+            .conv(8, 3, 1, 1)
+            .max_pool(2, 2)
+            .build();
+        let block = Compiler::default().compile(&net).unwrap();
+        let mut arch = ArchConfig::default();
+        arch.pooling = crate::coordinator::PoolingScheme::WeightDuplication;
+        let dup = Compiler::new(arch).compile(&net).unwrap();
+        let e_block = estimate(&block).unwrap();
+        let e_dup = estimate(&dup).unwrap();
+        assert!(e_dup.period_cycles < e_block.period_cycles);
+        assert!(dup.total_tiles > block.total_tiles);
+    }
+}

@@ -1,0 +1,122 @@
+//! Golden-model cross-check: the AOT-compiled JAX tiny-cnn vs the
+//! Rust reference and the cycle simulator — exact int8 equality.
+//!
+//! This is the end-to-end proof that all three layers compose: the L1
+//! Pallas kernels and L2 JAX model (lowered once to HLO text), the
+//! PJRT runtime loading that text, and the L3 compiler+simulator all
+//! produce the *same bits* for the same network and weights.
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::refcompute::{LayerWeights, Weights};
+use crate::model::zoo;
+use crate::runtime::{artifact, Executable, I8Input, Runtime};
+
+/// The loaded tiny-cnn golden model (weights as inputs).
+pub struct GoldenTiny {
+    exe: Executable,
+}
+
+impl GoldenTiny {
+    pub fn load(rt: &Runtime) -> Result<Self> {
+        Ok(Self {
+            exe: rt.load(artifact::TINY_CNN)?,
+        })
+    }
+
+    /// Run the golden forward with explicit weights (refcompute
+    /// layouts: conv `[M][C][3][3]`, fc `[out][in]`).
+    pub fn run(&self, x: &[i8], weights: &Weights) -> Result<Vec<i8>> {
+        if x.len() != 3 * 16 * 16 {
+            bail!("tiny-cnn input must be 3x16x16");
+        }
+        // weight layers of zoo::tiny_cnn: 0, 2, 3, 6 conv; 9 fc
+        let w = |i: usize| -> Result<&[i8]> {
+            match &weights.per_layer[i] {
+                LayerWeights::Conv { w } | LayerWeights::Fc { w } => Ok(w),
+                other => bail!("layer {i}: unexpected weights {other:?}"),
+            }
+        };
+        let dims_conv = [
+            (w(0)?, vec![16i64, 3, 3, 3]),
+            (w(2)?, vec![32, 16, 3, 3]),
+            (w(3)?, vec![32, 32, 3, 3]),
+            (w(6)?, vec![32, 32, 3, 3]),
+        ];
+        let wfc = w(9)?;
+        let mut inputs = vec![I8Input {
+            data: x,
+            dims: &[3, 16, 16],
+        }];
+        for (data, dims) in &dims_conv {
+            inputs.push(I8Input { data, dims });
+        }
+        inputs.push(I8Input {
+            data: wfc,
+            dims: &[10, 32],
+        });
+        let outs = self.exe.run_i8(&inputs)?;
+        Ok(outs.into_iter().next().context("empty output tuple")?)
+    }
+}
+
+/// The trained tiny-cnn: the AOT HLO bakes the *calibrated requant
+/// shifts*; the int8 weights are loaded from `tiny_weights.bin` and
+/// passed as inputs (xla_extension 0.5.1's HLO text parser mis-decodes
+/// large baked s8 constants, so the weights stay host-side).
+pub struct TrainedTiny {
+    exe: Executable,
+    weights: crate::eval::accuracy::TrainedWeights,
+}
+
+impl TrainedTiny {
+    pub fn load(rt: &Runtime) -> Result<Self> {
+        let dir = crate::runtime::artifacts_dir();
+        let weights = crate::eval::accuracy::TrainedWeights::load(
+            &dir.join(artifact::WEIGHTS_BIN),
+        )?;
+        Ok(Self {
+            exe: rt.load(artifact::TINY_TRAINED)?,
+            weights,
+        })
+    }
+
+    pub fn run(&self, x: &[i8]) -> Result<Vec<i8>> {
+        if x.len() != 3 * 16 * 16 {
+            bail!("tiny-cnn input must be 3x16x16");
+        }
+        let w = &self.weights.layers;
+        let outs = self.exe.run_i8(&[
+            I8Input { data: x, dims: &[3, 16, 16] },
+            I8Input { data: &w[0].1, dims: &[16, 3, 3, 3] },
+            I8Input { data: &w[1].1, dims: &[32, 16, 3, 3] },
+            I8Input { data: &w[2].1, dims: &[32, 32, 3, 3] },
+            I8Input { data: &w[3].1, dims: &[32, 32, 3, 3] },
+            I8Input { data: &w[4].1, dims: &[10, 32] },
+        ])?;
+        Ok(outs.into_iter().next().context("empty output tuple")?)
+    }
+}
+
+/// Cross-check helper used by tests and the e2e example: golden HLO vs
+/// the Rust reference on `n` seeded images. Returns the number of
+/// compared images.
+pub fn check_golden_vs_reference(rt: &Runtime, n: usize, seed: u64) -> Result<usize> {
+    let net = zoo::tiny_cnn();
+    let weights = Weights::random(&net, crate::coordinator::Compiler::default().weight_seed)?;
+    let golden = GoldenTiny::load(rt)?;
+    let mut rng = crate::testutil::Rng::new(seed);
+    for i in 0..n {
+        let x = rng.i8_vec(net.input_len(), 31);
+        let got = golden.run(&x, &weights)?;
+        let want = crate::model::refcompute::forward(
+            &net,
+            &weights,
+            &crate::model::refcompute::Tensor::new(net.input, x.clone()),
+        )?;
+        if got != want.data {
+            bail!("image {i}: golden {got:?} != reference {:?}", want.data);
+        }
+    }
+    Ok(n)
+}

@@ -1,0 +1,175 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The bridge half of the three-layer architecture: `make artifacts`
+//! runs Python once to lower the L2/L1 functions to HLO *text*
+//! (`python/compile/aot.py`); this module loads that text through the
+//! `xla` crate (`HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile`) and executes it with concrete int8 buffers.
+//! Python never runs again — the compiled executable lives inside the
+//! Rust process.
+//!
+//! Text (not serialized proto) is the interchange format: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Used by integration tests, the `e2e_inference` example and the
+//! accuracy experiment to cross-check the cycle simulator's functional
+//! datapath against the JAX golden model — int8, so the comparison is
+//! exact equality, not allclose.
+
+pub mod golden;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Artifact file names produced by `python/compile/aot.py`.
+pub mod artifact {
+    /// tiny-cnn forward, weights as inputs (x, w0, w2, w3, w6, w9).
+    pub const TINY_CNN: &str = "tiny_cnn_int8.hlo.txt";
+    /// tiny-cnn with trained+calibrated weights baked in (input: x).
+    pub const TINY_TRAINED: &str = "tiny_trained_int8.hlo.txt";
+    /// One 256x256 crossbar MVM (x[1,256], w[256,256]).
+    pub const CIM_MVM: &str = "cim_mvm_256.hlo.txt";
+    /// One COM-dataflow conv layer (x[16,16,16], w[3,3,16,32]).
+    pub const COM_CONV: &str = "com_conv_k3.hlo.txt";
+    /// Trained int8 weights + shifts (binary, see model.py).
+    pub const WEIGHTS_BIN: &str = "tiny_weights.bin";
+    /// Held-out int8 test set (binary).
+    pub const TESTSET_BIN: &str = "tiny_testset.bin";
+    /// Build-time accuracy record.
+    pub const ACCURACY_JSON: &str = "accuracy.json";
+}
+
+/// Locate the artifacts directory: `$DOMINO_ARTIFACTS` or `artifacts/`
+/// relative to the workspace root / current directory.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("DOMINO_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    for base in [".", "..", env!("CARGO_MANIFEST_DIR")] {
+        let p = Path::new(base).join("artifacts");
+        if p.join("manifest.json").exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// True if the AOT artifacts have been built (`make artifacts`).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// A PJRT CPU runtime holding compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact by file name (resolved
+    /// against [`artifacts_dir`]) or by path.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let path = if Path::new(name).exists() {
+            PathBuf::from(name)
+        } else {
+            artifacts_dir().join(name)
+        };
+        if !path.exists() {
+            bail!(
+                "artifact {} not found (run `make artifacts`)",
+                path.display()
+            );
+        }
+        let path_str = path.to_string_lossy().to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path_str)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: name.to_string(),
+        })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// An int8 input buffer: flat values + dims.
+pub struct I8Input<'a> {
+    pub data: &'a [i8],
+    pub dims: &'a [i64],
+}
+
+/// Build an S8 literal from int8 data (the published crate's `vec1`
+/// only covers 32/64-bit native types; S8 goes through the untyped
+/// constructor + `ArrayElement`).
+pub fn literal_i8(data: &[i8], dims: &[i64]) -> Result<xla::Literal> {
+    let dims_usize: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S8,
+        &dims_usize,
+        bytes,
+    )?)
+}
+
+impl Executable {
+    /// Execute with int8 inputs; returns the flattened int8 elements of
+    /// every tuple output (aot.py lowers with `return_tuple=True`).
+    pub fn run_i8(&self, inputs: &[I8Input]) -> Result<Vec<Vec<i8>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| literal_i8(inp.data, inp.dims))
+            .collect::<Result<_>>()?;
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let tuple = result.decompose_tuple()?;
+        tuple
+            .into_iter()
+            .map(|lit| Ok(lit.to_vec::<i8>()?))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_is_resolvable() {
+        // must not panic regardless of build state
+        let _ = artifacts_dir();
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        if let Ok(rt) = Runtime::cpu() {
+            match rt.load("definitely_not_there.hlo.txt") {
+                Ok(_) => panic!("load of missing artifact succeeded"),
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    assert!(msg.contains("not found"), "{msg}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,326 @@
+//! Inference serving: the L3 request loop over the AOT artifact.
+//!
+//! After `make artifacts` the trained network is a self-contained HLO
+//! executable; this module serves it like a production endpoint:
+//! bounded request queue with backpressure, a configurable pool of
+//! worker threads (each owning its own PJRT client — the `xla` crate's
+//! raw handles are not `Send`), micro-batched dequeueing, and latency/
+//! throughput accounting (p50/p95/p99).
+//!
+//! Python is *never* on this path: workers execute the compiled
+//! artifact directly. The `serve_throughput` example drives a closed-
+//! loop load test over the held-out test set and cross-checks every
+//! response against the Rust int8 reference.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+/// One inference request.
+pub struct Request {
+    pub id: u64,
+    pub image: Vec<i8>,
+    enqueued: Instant,
+    resp: mpsc::Sender<Response>,
+}
+
+/// One inference response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<i8>,
+    /// Time spent queued before a worker picked the request up.
+    pub queue: Duration,
+    /// Executor time (batch time attributed per request).
+    pub exec: Duration,
+}
+
+/// Server configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Worker threads (each with a private PJRT client + executable).
+    pub workers: usize,
+    /// Max requests drained per dequeue (micro-batch).
+    pub max_batch: usize,
+    /// Queue capacity; `submit` fails fast beyond it (backpressure).
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            max_batch: 8,
+            queue_cap: 256,
+        }
+    }
+}
+
+#[derive(Default)]
+struct Shared {
+    queue: Mutex<VecDeque<Request>>,
+    cv: Condvar,
+    stop: AtomicBool,
+    served: AtomicU64,
+    rejected: AtomicU64,
+}
+
+/// A running inference server.
+pub struct Server {
+    shared: Arc<Shared>,
+    cfg: ServeConfig,
+    workers: Vec<std::thread::JoinHandle<Result<u64>>>,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    /// Start `cfg.workers` threads serving the trained tiny-cnn
+    /// artifact. Fails immediately if the artifacts are missing.
+    pub fn start(cfg: ServeConfig) -> Result<Self> {
+        if !crate::runtime::artifacts_available() {
+            bail!("artifacts not built (run `make artifacts`)");
+        }
+        anyhow::ensure!(cfg.workers >= 1 && cfg.max_batch >= 1);
+        let shared = Arc::new(Shared::default());
+        let mut workers = Vec::with_capacity(cfg.workers);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        for w in 0..cfg.workers {
+            let shared = Arc::clone(&shared);
+            let ready = ready_tx.clone();
+            let max_batch = cfg.max_batch;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("domino-worker-{w}"))
+                    .spawn(move || worker_loop(shared, max_batch, ready))
+                    .context("spawn worker")?,
+            );
+        }
+        drop(ready_tx);
+        // wait until every worker has compiled its executable
+        for _ in 0..cfg.workers {
+            ready_rx
+                .recv()
+                .context("worker died during startup")??;
+        }
+        Ok(Self {
+            shared,
+            cfg,
+            workers,
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// Submit one image; returns a receiver for the response. Fails
+    /// fast when the queue is full (backpressure) or the image is the
+    /// wrong size.
+    pub fn submit(&self, image: Vec<i8>) -> Result<mpsc::Receiver<Response>> {
+        if image.len() != 3 * 16 * 16 {
+            bail!("image must be 3x16x16 int8");
+        }
+        let (tx, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.len() >= self.cfg.queue_cap {
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                bail!("queue full ({}): backpressure", self.cfg.queue_cap);
+            }
+            q.push_back(Request {
+                id,
+                image,
+                enqueued: Instant::now(),
+                resp: tx,
+            });
+        }
+        self.shared.cv.notify_one();
+        Ok(rx)
+    }
+
+    /// Synchronous convenience: submit + wait.
+    pub fn infer(&self, image: Vec<i8>) -> Result<Response> {
+        let rx = self.submit(image)?;
+        rx.recv().context("worker dropped the request")
+    }
+
+    pub fn served(&self) -> u64 {
+        self.shared.served.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.shared.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Stop workers and join them; returns per-worker served counts.
+    pub fn shutdown(mut self) -> Result<Vec<u64>> {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        let mut counts = Vec::new();
+        for w in self.workers.drain(..) {
+            counts.push(w.join().map_err(|_| anyhow::anyhow!("worker panicked"))??);
+        }
+        Ok(counts)
+    }
+}
+
+fn worker_loop(
+    shared: Arc<Shared>,
+    max_batch: usize,
+    ready: mpsc::Sender<Result<()>>,
+) -> Result<u64> {
+    // each worker owns a full PJRT stack (handles are not Send)
+    let init = (|| -> Result<crate::runtime::golden::TrainedTiny> {
+        let rt = crate::runtime::Runtime::cpu()?;
+        crate::runtime::golden::TrainedTiny::load(&rt)
+    })();
+    let exe = match init {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let _ = ready.send(Err(e));
+            bail!("worker init failed: {msg}");
+        }
+    };
+
+    let mut served = 0u64;
+    let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
+    loop {
+        batch.clear();
+        {
+            let mut q = shared.queue.lock().unwrap();
+            while q.is_empty() && !shared.stop.load(Ordering::SeqCst) {
+                q = shared.cv.wait(q).unwrap();
+            }
+            if q.is_empty() && shared.stop.load(Ordering::SeqCst) {
+                return Ok(served);
+            }
+            for _ in 0..max_batch {
+                match q.pop_front() {
+                    Some(r) => batch.push(r),
+                    None => break,
+                }
+            }
+        }
+        let t0 = Instant::now();
+        let n = batch.len() as u32;
+        for req in batch.drain(..) {
+            let queue = req.enqueued.elapsed();
+            let logits = exe.run(&req.image)?;
+            let exec = t0.elapsed() / n;
+            shared.served.fetch_add(1, Ordering::Relaxed);
+            served += 1;
+            // client may have gone away; that's fine
+            let _ = req.resp.send(Response {
+                id: req.id,
+                logits,
+                queue,
+                exec,
+            });
+        }
+    }
+}
+
+/// Latency statistics helper for load tests.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    /// Percentile (0-100) by nearest-rank.
+    pub fn percentile(&self, p: f64) -> Option<u64> {
+        if self.samples_us.is_empty() {
+            return None;
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_unstable();
+        let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+        Some(v[rank.min(v.len() - 1)])
+    }
+
+    pub fn summary(&self) -> String {
+        match (
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+        ) {
+            (Some(p50), Some(p95), Some(p99)) => format!(
+                "p50 {p50} us, p95 {p95} us, p99 {p99} us (n={})",
+                self.count()
+            ),
+            _ => "no samples".to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles() {
+        let mut s = LatencyStats::default();
+        for i in 1..=100u64 {
+            s.record(Duration::from_micros(i));
+        }
+        assert_eq!(s.percentile(50.0), Some(51)); // nearest-rank on 1..=100
+        assert_eq!(s.percentile(99.0), Some(99));
+        assert_eq!(s.percentile(100.0), Some(100));
+        assert_eq!(LatencyStats::default().percentile(50.0), None);
+    }
+
+    #[test]
+    fn config_validation() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let bad = ServeConfig {
+            workers: 0,
+            ..Default::default()
+        };
+        assert!(Server::start(bad).is_err());
+    }
+
+    #[test]
+    fn serve_roundtrip_and_backpressure() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let server = Server::start(ServeConfig {
+            workers: 1,
+            max_batch: 4,
+            queue_cap: 8,
+        })
+        .unwrap();
+        // wrong-size image rejected up front
+        assert!(server.submit(vec![0i8; 3]).is_err());
+        // correct request round-trips
+        let r = server.infer(vec![1i8; 768]).unwrap();
+        assert_eq!(r.logits.len(), 10);
+        assert_eq!(server.served(), 1);
+        // responses are deterministic
+        let r2 = server.infer(vec![1i8; 768]).unwrap();
+        assert_eq!(r.logits, r2.logits);
+        let counts = server.shutdown().unwrap();
+        assert_eq!(counts.iter().sum::<u64>(), 2);
+    }
+}

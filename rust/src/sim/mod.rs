@@ -1,0 +1,9 @@
+//! Cycle-level simulation: engine, statistics, dataflow trace.
+
+pub mod engine;
+pub mod pipeline;
+pub mod stats;
+pub mod trace;
+
+pub use engine::Simulator;
+pub use stats::Counters;

@@ -1,0 +1,142 @@
+//! Raw event counters collected during simulation.
+//!
+//! The simulator counts *architectural events* (buffer accesses, adds,
+//! schedule fetches, link bits, MACs); the `energy` module converts the
+//! counts into joules using the paper's Table III per-event energies.
+//! Keeping counts and energy separate lets the same run be re-priced
+//! under different technology assumptions (the Table IV normalization).
+
+/// Event counters (one instance per simulation run; `merge` combines
+/// per-stage counters).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Counters {
+    /// Instruction steps simulated (10 MHz domain).
+    pub steps: u64,
+    /// PE multiply-accumulate operations (8b x 8b -> 32b each).
+    pub pe_macs: u64,
+    /// PE array activations (one per streamed input vector).
+    pub pe_mvms: u64,
+    /// RIFM 256 B buffer accesses (read or write of one beat).
+    pub rifm_buffer_accesses: u64,
+    /// RIFM in-buffer shift operations (step 64 / multiple of 128).
+    pub rifm_shifts: u64,
+    /// Steps in which a RIFM controller was active.
+    pub rifm_ctrl_steps: u64,
+    /// ROFM schedule-table fetches (16 b each).
+    pub sched_fetches: u64,
+    /// ROFM 16 KiB data-buffer accesses (group-sum push/pop).
+    pub rofm_buffer_accesses: u64,
+    /// ROFM input/output register accesses, in 64 b words.
+    pub rofm_reg_accesses: u64,
+    /// 8-bit adder-equivalent operations (an i32 add counts as 4).
+    pub adds_8b: u64,
+    /// Pooling comparisons/scales, in 8-bit units.
+    pub pool_ops_8b: u64,
+    /// Activation operations, in 8-bit units.
+    pub act_ops_8b: u64,
+    /// Steps in which an ROFM controller was active.
+    pub rofm_ctrl_steps: u64,
+    /// Bits moved over on-chip mesh links (per hop).
+    pub onchip_link_bits: u64,
+    /// Bits moved over inter-chip transceivers.
+    pub interchip_bits: u64,
+    /// Bits moved on/off package (DRAM or host I/O; network input and
+    /// final output only under COM dataflow).
+    pub offchip_io_bits: u64,
+    /// Peak ROFM group-sum buffer occupancy observed (bytes), for the
+    /// 16 KiB capacity fidelity check.
+    pub peak_rofm_buffer_bytes: u64,
+    /// Number of tiles that were configured (for ctrl/idle accounting).
+    pub tiles_used: u64,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Accumulate another counter set (e.g. per-layer into per-network).
+    pub fn merge(&mut self, other: &Counters) {
+        self.steps += other.steps;
+        self.pe_macs += other.pe_macs;
+        self.pe_mvms += other.pe_mvms;
+        self.rifm_buffer_accesses += other.rifm_buffer_accesses;
+        self.rifm_shifts += other.rifm_shifts;
+        self.rifm_ctrl_steps += other.rifm_ctrl_steps;
+        self.sched_fetches += other.sched_fetches;
+        self.rofm_buffer_accesses += other.rofm_buffer_accesses;
+        self.rofm_reg_accesses += other.rofm_reg_accesses;
+        self.adds_8b += other.adds_8b;
+        self.pool_ops_8b += other.pool_ops_8b;
+        self.act_ops_8b += other.act_ops_8b;
+        self.rofm_ctrl_steps += other.rofm_ctrl_steps;
+        self.onchip_link_bits += other.onchip_link_bits;
+        self.interchip_bits += other.interchip_bits;
+        self.offchip_io_bits += other.offchip_io_bits;
+        self.peak_rofm_buffer_bytes = self.peak_rofm_buffer_bytes.max(other.peak_rofm_buffer_bytes);
+        self.tiles_used += other.tiles_used;
+    }
+
+    /// Wall-clock seconds at the paper's 10 MHz step frequency — note
+    /// that for latency purposes `steps` of *pipelined* stages overlap;
+    /// the engine reports per-stage steps and the critical path
+    /// separately.
+    pub fn seconds(&self) -> f64 {
+        self.steps as f64 / crate::consts::STEP_HZ
+    }
+}
+
+impl std::fmt::Display for Counters {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "steps:               {}", self.steps)?;
+        writeln!(f, "pe_macs:             {}", self.pe_macs)?;
+        writeln!(f, "pe_mvms:             {}", self.pe_mvms)?;
+        writeln!(f, "rifm_buffer_access:  {}", self.rifm_buffer_accesses)?;
+        writeln!(f, "rifm_shifts:         {}", self.rifm_shifts)?;
+        writeln!(f, "sched_fetches:       {}", self.sched_fetches)?;
+        writeln!(f, "rofm_buffer_access:  {}", self.rofm_buffer_accesses)?;
+        writeln!(f, "rofm_reg_accesses:      {}", self.rofm_reg_accesses)?;
+        writeln!(f, "adds_8b:             {}", self.adds_8b)?;
+        writeln!(f, "pool_ops_8b:         {}", self.pool_ops_8b)?;
+        writeln!(f, "act_ops_8b:          {}", self.act_ops_8b)?;
+        writeln!(f, "onchip_link_bits:    {}", self.onchip_link_bits)?;
+        writeln!(f, "interchip_bits:      {}", self.interchip_bits)?;
+        writeln!(f, "offchip_io_bits:     {}", self.offchip_io_bits)?;
+        writeln!(f, "peak_rofm_buf_bytes: {}", self.peak_rofm_buffer_bytes)?;
+        write!(f, "tiles_used:          {}", self.tiles_used)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds_counts_and_maxes_peaks() {
+        let mut a = Counters {
+            steps: 10,
+            pe_macs: 100,
+            peak_rofm_buffer_bytes: 64,
+            ..Default::default()
+        };
+        let b = Counters {
+            steps: 5,
+            pe_macs: 50,
+            peak_rofm_buffer_bytes: 128,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.steps, 15);
+        assert_eq!(a.pe_macs, 150);
+        assert_eq!(a.peak_rofm_buffer_bytes, 128);
+    }
+
+    #[test]
+    fn seconds_at_10mhz() {
+        let c = Counters {
+            steps: 10_000_000,
+            ..Default::default()
+        };
+        assert!((c.seconds() - 1.0).abs() < 1e-12);
+    }
+}

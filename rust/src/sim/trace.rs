@@ -1,0 +1,170 @@
+//! COM dataflow trace: reproduces the timing/location diagram of paper
+//! Fig. 3(b) — "black circles represent partial-sums in registers while
+//! red ones represent group-sums in buffers".
+//!
+//! The simulator records one [`Action`](crate::sim::engine::Action) per
+//! tile event; this module renders them as a tiles x time grid in which
+//! each cell shows what moved through the tile at that pixel slot:
+//!
+//! * `U`  — a partial-sum accumulated in the tile's registers and
+//!   forwarded along the chain (black circles);
+//! * `G+` — a group-sum queued into the ROFM buffer (red circles);
+//! * `G-` — a group-sum popped to seed the next kernel row;
+//! * `Y`  — the last tile's M-type activation emitting an output.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::Result;
+
+use crate::coordinator::program::{Program, StageKind};
+use crate::sim::engine::{ActionKind, Simulator};
+use crate::testutil::Rng;
+
+/// One rendered trace.
+#[derive(Clone, Debug)]
+pub struct ComTrace {
+    /// Stage that was traced.
+    pub stage: usize,
+    pub stage_name: String,
+    /// Chain length (tiles down the page).
+    pub tiles: usize,
+    /// (tile, slot) -> cell label.
+    pub cells: BTreeMap<(usize, usize), &'static str>,
+    /// Highest slot index recorded.
+    pub max_slot: usize,
+}
+
+/// Simulate one image and capture the COM trace of `stage` (chain 0).
+pub fn trace_stage(program: &Program, stage: usize, seed: u64) -> Result<ComTrace> {
+    let mut sim = Simulator::with_action_recording(program);
+    let mut rng = Rng::new(seed);
+    sim.run_image(&rng.i8_vec(program.net.input_len(), 31))?;
+
+    let (tiles, name) = match &program.stages[stage].kind {
+        StageKind::Conv(c) => (
+            c.chains[0].tiles.len(),
+            program.stages[stage].name.clone(),
+        ),
+        _ => anyhow::bail!("trace_stage expects a conv stage"),
+    };
+
+    let mut cells = BTreeMap::new();
+    let mut max_slot = 0;
+    for a in sim.actions.iter().filter(|a| a.stage == stage && a.chain == 0) {
+        let label = match a.kind {
+            ActionKind::Acc { .. } => "U",
+            ActionKind::Push => "G+",
+            ActionKind::Pop => "G-",
+            ActionKind::Emit { .. } => "Y",
+        };
+        // pops and accs can hit the same (tile, slot); prefer showing
+        // the buffer event (the figure's red circles)
+        let e = cells.entry((a.ci, a.slot)).or_insert(label);
+        if label == "G+" || label == "G-" {
+            *e = label;
+        }
+        max_slot = max_slot.max(a.slot);
+    }
+    Ok(ComTrace {
+        stage,
+        stage_name: name,
+        tiles,
+        cells,
+        max_slot,
+    })
+}
+
+impl ComTrace {
+    /// Render the tiles x time grid (slots `lo..hi`).
+    pub fn render(&self, lo: usize, hi: usize) -> String {
+        let hi = hi.min(self.max_slot + 1);
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "COM trace of {} (chain 0, {} tiles): U=partial-sum  \
+             G+=group-sum queued  G-=group-sum popped  Y=output",
+            self.stage_name, self.tiles
+        );
+        let _ = write!(out, "{:>8} |", "tile\\slot");
+        for s in lo..hi {
+            let _ = write!(out, "{s:>4}");
+        }
+        let _ = writeln!(out);
+        let _ = writeln!(out, "{:-<width$}", "", width = 10 + 4 * (hi - lo));
+        for t in 0..self.tiles {
+            let _ = write!(out, "{t:>8} |");
+            for s in lo..hi {
+                let c = self.cells.get(&(t, s)).copied().unwrap_or("");
+                let _ = write!(out, "{c:>4}");
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+
+    /// Number of each event kind (for tests).
+    pub fn count(&self, label: &str) -> usize {
+        self.cells.values().filter(|&&v| v == label).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Compiler;
+    use crate::model::{NetworkBuilder, TensorShape};
+
+    fn small_conv_program() -> Program {
+        let net = NetworkBuilder::new("t", TensorShape::new(2, 5, 5))
+            .conv(3, 3, 1, 1)
+            .build();
+        Compiler::default().compile(&net).unwrap()
+    }
+
+    #[test]
+    fn trace_has_com_structure() {
+        let p = small_conv_program();
+        let tr = trace_stage(&p, 0, 7).unwrap();
+        assert_eq!(tr.tiles, 9, "K²=9 chain");
+        // the paper's sequence: partial sums flow, group sums queue at
+        // row heads (tiles 3 and 6), outputs leave the last tile
+        assert!(tr.count("U") > 0);
+        assert!(tr.count("G+") > 0);
+        assert!(tr.count("G-") > 0);
+        assert_eq!(tr.count("Y"), 25, "one emit per output pixel");
+    }
+
+    #[test]
+    fn group_sums_queue_exactly_at_row_heads() {
+        let p = small_conv_program();
+        let tr = trace_stage(&p, 0, 8).unwrap();
+        for (&(tile, _), &label) in &tr.cells {
+            if label == "G+" || label == "G-" {
+                assert!(tile == 3 || tile == 6, "buffer event at tile {tile}");
+            }
+            if label == "Y" {
+                assert_eq!(tile, 8, "emit only at the last tile");
+            }
+        }
+    }
+
+    #[test]
+    fn render_is_stable_and_bounded() {
+        let p = small_conv_program();
+        let tr = trace_stage(&p, 0, 7).unwrap();
+        let s1 = tr.render(0, 20);
+        let s2 = tr.render(0, 20);
+        assert_eq!(s1, s2);
+        assert!(s1.lines().count() == tr.tiles + 3);
+    }
+
+    #[test]
+    fn non_conv_stage_is_rejected() {
+        let net = NetworkBuilder::new("t", TensorShape::new(4, 1, 1))
+            .fc_logits(3)
+            .build();
+        let p = Compiler::default().compile(&net).unwrap();
+        assert!(trace_stage(&p, 0, 1).is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! Deterministic test utilities: a small PRNG and a property-testing
+//! helper.
+//!
+//! The build environment has no network access and only the `xla` crate's
+//! vendored dependency closure, so `proptest`/`quickcheck` are not
+//! available. This module provides the minimal equivalent we need:
+//! a seeded xorshift64* generator and [`for_all`], which runs a property
+//! over `n` generated cases and reports the failing seed for reproduction.
+
+/// Deterministic xorshift64* PRNG.
+///
+/// Not cryptographic; used for test-case generation and synthetic
+/// workloads. The same seed always yields the same sequence on every
+/// platform.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a new generator from a seed (0 is mapped to a fixed
+    /// non-zero value since xorshift requires non-zero state).
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed },
+        }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, bound)`. `bound` must be non-zero.
+    pub fn below(&mut self, bound: usize) -> usize {
+        assert!(bound > 0, "Rng::below(0)");
+        (self.next_u64() % bound as u64) as usize
+    }
+
+    /// Uniform in the inclusive range `[lo, hi]`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform i8 over the full range.
+    pub fn i8(&mut self) -> i8 {
+        (self.next_u64() & 0xFF) as u8 as i8
+    }
+
+    /// Uniform i8 in `[-bound, bound]` (useful to avoid accumulator
+    /// saturation in long reductions).
+    pub fn i8_bounded(&mut self, bound: i8) -> i8 {
+        let b = bound as i64;
+        ((self.next_u64() as i64).rem_euclid(2 * b + 1) - b) as i8
+    }
+
+    /// f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Bool with probability `p` of `true`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// A vector of `len` random i8 values bounded by `bound`.
+    ///
+    /// Batched: one xorshift draw yields eight bounded bytes (weight
+    /// generation for VGG-scale networks draws 10⁸ values — §Perf).
+    pub fn i8_vec(&mut self, len: usize, bound: i8) -> Vec<i8> {
+        let b = bound as i64;
+        let m = (2 * b + 1) as u64;
+        let mut out = Vec::with_capacity(len);
+        while out.len() < len {
+            let mut v = self.next_u64();
+            for _ in 0..8 {
+                if out.len() == len {
+                    break;
+                }
+                out.push((((v & 0xff) % m) as i64 - b) as i8);
+                v >>= 8;
+            }
+        }
+        out
+    }
+}
+
+/// Run `prop` over `n` cases, each with a fresh deterministic [`Rng`].
+///
+/// On failure the panic message includes the case index and seed so the
+/// exact case can be replayed with `Rng::new(seed)`.
+pub fn for_all<F: FnMut(&mut Rng)>(name: &str, n: usize, mut prop: F) {
+    for case in 0..n {
+        let seed = 0xD0A11A0_u64
+            .wrapping_mul(case as u64 + 1)
+            .wrapping_add(0x5EED);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property `{name}` failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_below_in_range() {
+        let mut rng = Rng::new(7);
+        for _ in 0..1000 {
+            assert!(rng.below(10) < 10);
+            let v = rng.range(3, 5);
+            assert!((3..=5).contains(&v));
+        }
+    }
+
+    #[test]
+    fn rng_i8_bounded_stays_in_bound() {
+        let mut rng = Rng::new(9);
+        for _ in 0..1000 {
+            let v = rng.i8_bounded(4);
+            assert!((-4..=4).contains(&v), "{v}");
+        }
+    }
+
+    #[test]
+    fn rng_f64_unit_interval() {
+        let mut rng = Rng::new(11);
+        for _ in 0..1000 {
+            let v = rng.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_fails` failed at case 0")]
+    fn for_all_reports_failing_case() {
+        for_all("always_fails", 5, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn rng_zero_seed_is_usable() {
+        let mut rng = Rng::new(0);
+        // must not loop or return all-zero
+        let vals: Vec<u64> = (0..4).map(|_| rng.next_u64()).collect();
+        assert!(vals.iter().any(|&v| v != 0));
+    }
+}

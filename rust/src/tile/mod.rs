@@ -1,0 +1,48 @@
+//! One Domino tile (paper Fig. 1(b)): a CIM crossbar [`pe::Pe`], an
+//! input-feature-map router [`rifm::Rifm`] and an output/partial-sum
+//! router [`rofm::Rofm`].
+//!
+//! The dual-router structure is the paper's first stated contribution:
+//! IFM traffic (streamed activations) and OFM/partial-sum traffic move on
+//! disjoint router networks, so input streaming and computing-on-the-move
+//! accumulation never contend.
+
+pub mod pe;
+pub mod rifm;
+pub mod rofm;
+
+pub use pe::Pe;
+pub use rifm::Rifm;
+pub use rofm::Rofm;
+
+/// A fully assembled tile.
+#[derive(Clone, Debug)]
+pub struct Tile<'w> {
+    pub pe: Pe<'w>,
+    pub rifm: Rifm,
+    pub rofm: Rofm,
+}
+
+impl<'w> Tile<'w> {
+    pub fn new(pe: Pe<'w>, rifm: Rifm, rofm: Rofm) -> Self {
+        Self { pe, rifm, rofm }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::isa::Schedule;
+
+    #[test]
+    fn tile_assembles_all_three_components() {
+        // Fig. 1(b): a tile contains an RIFM, an ROFM and a PE.
+        let tile = Tile::new(
+            Pe::new(vec![1, 2, 3, 4], 2, 2),
+            Rifm::new(2),
+            Rofm::new(Schedule::idle()),
+        );
+        assert_eq!(tile.pe.rows(), 2);
+        assert_eq!(tile.pe.cols(), 2);
+    }
+}

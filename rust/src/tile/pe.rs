@@ -1,0 +1,171 @@
+//! The Processing Element: a behavioral CIM crossbar array.
+//!
+//! The paper deliberately treats the PE as substitutable ("Domino adopts
+//! existing CIM arrays to enable flexible substitution", Section II-D):
+//! an `N_c x N_m` crossbar holding stationary int8 weights; streaming an
+//! input vector down the rows yields `N_m` analog column sums, digitised
+//! by ADCs into 32-bit partial sums. This model computes the same
+//! function digitally and bit-exactly (quantization error is the only
+//! error source the paper's accuracy evaluation considers).
+//!
+//! Weight layout: row-major `[row(=input channel)][col(=output channel)]`,
+//! i.e. `w[c * cols + m]` — the transpose of the `[M][C]` layout used by
+//! `model::refcompute`, reflecting how a crossbar is physically loaded
+//! (inputs enter rows, outputs leave columns).
+
+use crate::sim::stats::Counters;
+
+/// A weight-loaded CIM crossbar block (≤ 256 x 256). Weights are held
+/// by copy-on-write so the simulator can mount a compiled tile's block
+/// without cloning 64 KiB per tile per image (§Perf).
+#[derive(Clone, Debug)]
+pub struct Pe<'w> {
+    weights: std::borrow::Cow<'w, [i8]>,
+    rows: usize,
+    cols: usize,
+}
+
+impl<'w> Pe<'w> {
+    /// `weights[c * cols + m]`, `rows` input channels, `cols` output
+    /// channels.
+    pub fn new(weights: Vec<i8>, rows: usize, cols: usize) -> Pe<'static> {
+        Pe::check(&weights, rows, cols);
+        Pe { weights: std::borrow::Cow::Owned(weights), rows, cols }
+    }
+
+    /// Mount a stationary weight block without copying.
+    pub fn borrowed(weights: &'w [i8], rows: usize, cols: usize) -> Pe<'w> {
+        Pe::check(weights, rows, cols);
+        Pe { weights: std::borrow::Cow::Borrowed(weights), rows, cols }
+    }
+
+    fn check(weights: &[i8], rows: usize, cols: usize) {
+        assert_eq!(weights.len(), rows * cols, "PE weight block size");
+        assert!(
+            rows <= crate::consts::N_C && cols <= crate::consts::N_M,
+            "PE block exceeds crossbar dimensions"
+        );
+    }
+
+    /// An unloaded (all-zero) block.
+    pub fn zeros(rows: usize, cols: usize) -> Pe<'static> {
+        Pe::new(vec![0; rows * cols], rows, cols)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// In-memory matrix-vector multiply: `out[m] = Σ_c x[c] * w[c][m]`.
+    ///
+    /// `x` may be shorter than `rows` (the tail rows see zero input —
+    /// e.g. the last channel block of a layer whose C is not a multiple
+    /// of 256).
+    pub fn mvm(&self, x: &[i8], stats: &mut Counters) -> Vec<i32> {
+        assert!(x.len() <= self.rows, "input vector exceeds crossbar rows");
+        // MACs are charged uniformly per row activation — analog CIM
+        // drives the wordline regardless of value — so the zero-skip
+        // below is a pure simulator-speed optimization (§Perf), not an
+        // energy model change.
+        stats.pe_mvms += 1;
+        stats.pe_macs += (x.len() * self.cols) as u64;
+        let mut out = vec![0i32; self.cols];
+        for (c, &xv) in x.iter().enumerate() {
+            if xv == 0 {
+                continue;
+            }
+            let xv = xv as i32;
+            let row = &self.weights[c * self.cols..(c + 1) * self.cols];
+            // zip keeps the loop free of bounds checks => SIMD
+            for (o, &wv) in out.iter_mut().zip(row) {
+                *o += xv * wv as i32;
+            }
+        }
+        out
+    }
+
+    /// Weight of cell (row c, col m) — used by tests and the trace tool.
+    pub fn weight(&self, c: usize, m: usize) -> i8 {
+        self.weights[c * self.cols + m]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{for_all, Rng};
+
+    #[test]
+    fn mvm_known_values() {
+        // w = [[1, 2], [3, 4]] (c-major): out = x0*[1,2] + x1*[3,4]
+        let pe = Pe::new(vec![1, 2, 3, 4], 2, 2);
+        let mut stats = Counters::new();
+        let out = pe.mvm(&[1, 1], &mut stats);
+        assert_eq!(out, vec![4, 6]);
+        assert_eq!(stats.pe_mvms, 1);
+        assert_eq!(stats.pe_macs, 4);
+    }
+
+    #[test]
+    fn mvm_short_input_treats_tail_as_zero() {
+        let pe = Pe::new(vec![1, 2, 3, 4], 2, 2);
+        let mut stats = Counters::new();
+        let out = pe.mvm(&[2], &mut stats);
+        assert_eq!(out, vec![2, 4]);
+        assert_eq!(stats.pe_macs, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds crossbar rows")]
+    fn mvm_rejects_oversized_input() {
+        let pe = Pe::new(vec![0; 4], 2, 2);
+        pe.mvm(&[1, 2, 3], &mut Counters::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds crossbar dimensions")]
+    fn pe_rejects_oversized_block() {
+        Pe::zeros(257, 1);
+    }
+
+    #[test]
+    fn prop_mvm_matches_naive_dot() {
+        for_all("pe_mvm_vs_naive", 30, |rng: &mut Rng| {
+            let rows = rng.range(1, 64);
+            let cols = rng.range(1, 64);
+            let w = rng.i8_vec(rows * cols, 15);
+            let x = rng.i8_vec(rows, 15);
+            let pe = Pe::new(w.clone(), rows, cols);
+            let out = pe.mvm(&x, &mut Counters::new());
+            for m in 0..cols {
+                let want: i32 = (0..rows)
+                    .map(|c| x[c] as i32 * w[c * cols + m] as i32)
+                    .sum();
+                assert_eq!(out[m], want);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_mvm_is_linear() {
+        for_all("pe_mvm_linear", 20, |rng: &mut Rng| {
+            let rows = rng.range(1, 32);
+            let cols = rng.range(1, 32);
+            let pe = Pe::new(rng.i8_vec(rows * cols, 10), rows, cols);
+            let a = rng.i8_vec(rows, 5);
+            let b = rng.i8_vec(rows, 5);
+            let sum: Vec<i8> = a.iter().zip(&b).map(|(&x, &y)| x + y).collect();
+            let mut s = Counters::new();
+            let oa = pe.mvm(&a, &mut s);
+            let ob = pe.mvm(&b, &mut s);
+            let os = pe.mvm(&sum, &mut s);
+            for m in 0..cols {
+                assert_eq!(os[m], oa[m] + ob[m]);
+            }
+        });
+    }
+}

@@ -1,0 +1,208 @@
+//! The RIFM: router for Input Feature Maps (paper Section II-B).
+//!
+//! Each RIFM owns a 256 B buffer holding the current input beat, a
+//! counter + controller that steer the stream, and three outgoing paths:
+//! to the next tile's RIFM (stream forwarding), to the local PE (MAC
+//! input), and a *shortcut* straight into the local ROFM (used when MAC
+//! is skipped — the ResNet skip connection).
+//!
+//! The in-buffer shifting operation ("a step size of 64 or a multiple of
+//! 128") maximises in-tile reuse for early layers whose channel count is
+//! far below 256: several spatial positions share one 256 B beat, and the
+//! PE consumes them by shifting the buffer rather than re-receiving.
+
+use crate::sim::stats::Counters;
+
+/// RIFM configuration decided by the compiler at mapping time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RifmConfig {
+    /// How many channel values of each beat this tile's PE consumes.
+    pub channels: usize,
+    /// Whether the stream is forwarded to a next tile.
+    pub forward: bool,
+    /// Whether beats are also delivered to the ROFM via the shortcut
+    /// (skip-connection source).
+    pub shortcut: bool,
+    /// In-buffer shift step (0 = no shifting; otherwise 64 or k*128 —
+    /// enforced by [`Rifm::new_with_config`]).
+    pub shift_step: usize,
+}
+
+impl Default for RifmConfig {
+    fn default() -> Self {
+        Self {
+            channels: crate::consts::N_C,
+            forward: true,
+            shortcut: false,
+            shift_step: 0,
+        }
+    }
+}
+
+/// One RIFM instance.
+#[derive(Clone, Debug)]
+pub struct Rifm {
+    cfg: RifmConfig,
+    /// Current buffered beat (≤ 256 i8 values = 256 B).
+    buffer: Vec<i8>,
+    /// Beats received since configuration (the paper's counter).
+    pub counter: u64,
+    /// Current shift offset within the buffer.
+    shift_offset: usize,
+}
+
+impl Rifm {
+    pub fn new(channels: usize) -> Self {
+        Self::new_with_config(RifmConfig {
+            channels,
+            ..RifmConfig::default()
+        })
+    }
+
+    pub fn new_with_config(cfg: RifmConfig) -> Self {
+        assert!(
+            cfg.channels <= crate::consts::RIFM_BUFFER_BYTES,
+            "RIFM beat exceeds 256 B buffer"
+        );
+        assert!(
+            cfg.shift_step == 0 || cfg.shift_step == 64 || cfg.shift_step % 128 == 0,
+            "in-buffer shift step must be 64 or a multiple of 128 (got {})",
+            cfg.shift_step
+        );
+        Self {
+            cfg,
+            buffer: Vec::new(),
+            counter: 0,
+            shift_offset: 0,
+        }
+    }
+
+    pub fn config(&self) -> RifmConfig {
+        self.cfg
+    }
+
+    /// Receive one beat into the buffer. Charges one buffer access and
+    /// one active-controller step. Returns `true` if the beat should be
+    /// forwarded to the next tile (the engine moves the actual packet and
+    /// charges link energy).
+    pub fn receive(&mut self, data: &[i8], stats: &mut Counters) -> bool {
+        assert!(
+            data.len() <= crate::consts::RIFM_BUFFER_BYTES,
+            "RIFM beat exceeds 256 B buffer"
+        );
+        self.buffer.clear();
+        self.buffer.extend_from_slice(data);
+        self.shift_offset = 0;
+        self.counter += 1;
+        stats.rifm_buffer_accesses += 1; // write
+        stats.rifm_ctrl_steps += 1;
+        self.cfg.forward
+    }
+
+    /// The slice the PE consumes this step (after any shifting). Charges
+    /// a buffer read.
+    pub fn pe_view(&self, stats: &mut Counters) -> &[i8] {
+        stats.rifm_buffer_accesses += 1; // read
+        let start = self.shift_offset;
+        let end = (start + self.cfg.channels).min(self.buffer.len());
+        &self.buffer[start.min(self.buffer.len())..end]
+    }
+
+    /// Apply one in-buffer shift; returns `false` when the buffer is
+    /// exhausted (no more positions to expose).
+    pub fn shift(&mut self, stats: &mut Counters) -> bool {
+        if self.cfg.shift_step == 0 {
+            return false;
+        }
+        self.shift_offset += self.cfg.shift_step;
+        stats.rifm_shifts += 1;
+        self.shift_offset < self.buffer.len()
+    }
+
+    /// Whether the shortcut path to the ROFM is active.
+    pub fn shortcut_active(&self) -> bool {
+        self.cfg.shortcut
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn receive_buffers_and_counts() {
+        let mut r = Rifm::new(4);
+        let mut s = Counters::new();
+        assert!(r.receive(&[1, 2, 3, 4], &mut s));
+        assert_eq!(r.counter, 1);
+        assert_eq!(s.rifm_buffer_accesses, 1);
+        assert_eq!(r.pe_view(&mut s), &[1, 2, 3, 4]);
+        assert_eq!(s.rifm_buffer_accesses, 2);
+    }
+
+    #[test]
+    fn pe_view_respects_channel_count() {
+        let mut r = Rifm::new(2);
+        let mut s = Counters::new();
+        r.receive(&[9, 8, 7, 6], &mut s);
+        assert_eq!(r.pe_view(&mut s), &[9, 8]);
+    }
+
+    #[test]
+    fn in_buffer_shift_walks_positions() {
+        // 64-channel beats holding 4 spatial positions of a 64-channel
+        // layer: shift step 64 exposes each in turn.
+        let mut r = Rifm::new_with_config(RifmConfig {
+            channels: 64,
+            forward: false,
+            shortcut: false,
+            shift_step: 64,
+        });
+        let mut s = Counters::new();
+        let beat: Vec<i8> = (0..256).map(|i| (i / 64) as i8).collect();
+        assert!(!r.receive(&beat, &mut s));
+        assert_eq!(r.pe_view(&mut s)[0], 0);
+        assert!(r.shift(&mut s));
+        assert_eq!(r.pe_view(&mut s)[0], 1);
+        assert!(r.shift(&mut s));
+        assert_eq!(r.pe_view(&mut s)[0], 2);
+        assert!(r.shift(&mut s));
+        assert_eq!(r.pe_view(&mut s)[0], 3);
+        assert!(!r.shift(&mut s), "buffer exhausted after 4 positions");
+        assert_eq!(s.rifm_shifts, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "shift step must be 64 or a multiple of 128")]
+    fn invalid_shift_step_rejected() {
+        Rifm::new_with_config(RifmConfig {
+            channels: 64,
+            forward: false,
+            shortcut: false,
+            shift_step: 32,
+        });
+    }
+
+    #[test]
+    fn receive_resets_shift() {
+        let mut r = Rifm::new_with_config(RifmConfig {
+            channels: 64,
+            forward: false,
+            shortcut: false,
+            shift_step: 64,
+        });
+        let mut s = Counters::new();
+        r.receive(&vec![1i8; 256], &mut s);
+        r.shift(&mut s);
+        r.receive(&vec![2i8; 256], &mut s);
+        assert_eq!(r.pe_view(&mut s)[0], 2);
+        assert_eq!(r.pe_view(&mut s).len(), 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds 256 B buffer")]
+    fn oversized_beat_rejected() {
+        let mut r = Rifm::new(256);
+        r.receive(&vec![0i8; 257], &mut Counters::new());
+    }
+}

@@ -1,0 +1,448 @@
+//! The ROFM: router for Output Feature Maps and partial sums — "the key
+//! component for COM dataflow" (paper Section II-C).
+//!
+//! Microarchitecture (Fig. 1(b)): four-direction I/O ports, input/output
+//! registers, an instruction **schedule table** (16 b x 128) indexed by a
+//! counter, a 16 KiB **data buffer** queueing group-sums, reusable
+//! adders, and a computation unit implementing Table II's functions
+//! (Add / Act / Cmp / Mul / Bp) plus explicit requantization.
+//!
+//! The engine (`sim::engine`) orchestrates which method runs in which
+//! cycle according to the compiled schedule; every method charges its
+//! architectural events so the energy model sees exactly what the
+//! hardware would do.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::isa::{Instr, Schedule};
+use crate::model::refcompute::{clamp_i8, requant};
+use crate::noc::packet::PsumPacket;
+use crate::sim::stats::Counters;
+
+/// One ROFM instance.
+#[derive(Clone, Debug)]
+pub struct Rofm {
+    /// The periodic instruction schedule written at configuration time.
+    pub schedule: Schedule,
+    /// Cycle counter generating instruction indices.
+    pub counter: u64,
+    /// Group-sum FIFO modelling the 16 KiB data buffer.
+    fifo: VecDeque<PsumPacket>,
+    fifo_bytes: usize,
+    peak_fifo_bytes: usize,
+}
+
+impl Rofm {
+    pub fn new(schedule: Schedule) -> Self {
+        Self {
+            schedule,
+            counter: 0,
+            fifo: VecDeque::new(),
+            fifo_bytes: 0,
+            peak_fifo_bytes: 0,
+        }
+    }
+
+    /// Fetch the instruction for the current cycle and advance the
+    /// counter. Charges the schedule-table fetch (2.2 pJ/16 b) and an
+    /// active-controller step.
+    pub fn fetch(&mut self, stats: &mut Counters) -> Instr {
+        let i = self.schedule.at(self.counter as usize);
+        self.counter += 1;
+        stats.sched_fetches += 1;
+        stats.rofm_ctrl_steps += 1;
+        i
+    }
+
+    /// Receive a beat through the input registers. The 64 b x 2
+    /// double-buffer latches the head word of each beat while the
+    /// 160 MHz FDM link serialises the payload; Table III prices one
+    /// access of the structure per beat.
+    pub fn charge_rx(_bits: u64, stats: &mut Counters) {
+        stats.rofm_reg_accesses += 1;
+    }
+
+    /// Transmit a beat through the output registers.
+    pub fn charge_tx(_bits: u64, stats: &mut Counters) {
+        stats.rofm_reg_accesses += 1;
+    }
+
+    /// Add `incoming` into `acc` element-wise (the reusable adders).
+    /// Both packets must target the same output position — a mismatch is
+    /// a compiler/schedule bug, caught here.
+    pub fn add_psum(acc: &mut PsumPacket, incoming: &PsumPacket, stats: &mut Counters) {
+        assert_eq!(
+            acc.opos, incoming.opos,
+            "ROFM adder: partial sums for different outputs met (schedule misalignment)"
+        );
+        assert_eq!(acc.data.len(), incoming.data.len(), "psum width mismatch");
+        for (a, b) in acc.data.iter_mut().zip(incoming.data.iter()) {
+            *a += b;
+        }
+        // i32 adds = 4 x 8-bit adder-equivalents each (Table III prices
+        // the adder per 8 b).
+        stats.adds_8b += 4 * acc.data.len() as u64;
+    }
+
+    /// Push a group-sum into the data buffer (FIFO).
+    pub fn push_group(&mut self, p: PsumPacket, stats: &mut Counters) {
+        self.fifo_bytes += 4 * p.data.len();
+        self.peak_fifo_bytes = self.peak_fifo_bytes.max(self.fifo_bytes);
+        stats.rofm_buffer_accesses += 1;
+        stats.peak_rofm_buffer_bytes = stats
+            .peak_rofm_buffer_bytes
+            .max(self.peak_fifo_bytes as u64);
+        self.fifo.push_back(p);
+    }
+
+    /// Pop the oldest group-sum.
+    pub fn pop_group(&mut self, stats: &mut Counters) -> Option<PsumPacket> {
+        let p = self.fifo.pop_front()?;
+        self.fifo_bytes -= 4 * p.data.len();
+        stats.rofm_buffer_accesses += 1;
+        Some(p)
+    }
+
+    /// Front of the FIFO without popping (engine look-ahead).
+    pub fn peek_group(&self) -> Option<&PsumPacket> {
+        self.fifo.front()
+    }
+
+    pub fn fifo_len(&self) -> usize {
+        self.fifo.len()
+    }
+
+    /// Peak buffer occupancy (bytes) for the 16 KiB capacity check.
+    pub fn peak_fifo_bytes(&self) -> usize {
+        self.peak_fifo_bytes
+    }
+
+    /// Whether this ROFM ever exceeded the hardware buffer (Table III:
+    /// 16 KiB). Reported as a fidelity statistic, not a hard failure.
+    pub fn exceeded_hw_buffer(&self) -> bool {
+        self.peak_fifo_bytes > crate::consts::ROFM_BUFFER_BYTES
+    }
+
+    // ---- computation unit (Table II) ----
+
+    /// `Act.`: requantize + ReLU a finished sum to i8 (non-linear
+    /// function applied "in the last tile", Section III-B).
+    pub fn act(sum: &[i32], shift: u32, stats: &mut Counters) -> Vec<i8> {
+        stats.act_ops_8b += sum.len() as u64;
+        sum.iter().map(|&v| requant(v, shift, true)).collect()
+    }
+
+    /// Requantize without activation (linear conv output, e.g. before a
+    /// residual add).
+    pub fn quantize(sum: &[i32], shift: u32, stats: &mut Counters) -> Vec<i8> {
+        stats.act_ops_8b += sum.len() as u64;
+        sum.iter().map(|&v| requant(v, shift, false)).collect()
+    }
+
+    /// `Cmp.`: element-wise max (max pooling step).
+    pub fn cmp_max(acc: &mut [i8], incoming: &[i8], stats: &mut Counters) {
+        assert_eq!(acc.len(), incoming.len());
+        stats.pool_ops_8b += acc.len() as u64;
+        for (a, b) in acc.iter_mut().zip(incoming.iter()) {
+            *a = (*a).max(*b);
+        }
+    }
+
+    /// `Mul.`: scale by `1/divisor` with floor division (average
+    /// pooling's "multiplication with a scaling factor").
+    pub fn mul_scale(sum: &[i32], divisor: i32, stats: &mut Counters) -> Vec<i8> {
+        stats.pool_ops_8b += sum.len() as u64;
+        sum.iter()
+            .map(|&v| clamp_i8(v.div_euclid(divisor)))
+            .collect()
+    }
+
+    /// `Bp.`: direct transmission (skip connections). Only charges
+    /// register traffic — no compute.
+    pub fn bypass(data: &[i8], stats: &mut Counters) -> Vec<i8> {
+        Self::charge_tx(8 * data.len() as u64, stats);
+        data.to_vec()
+    }
+
+    /// Residual add of two i8 streams (skip + main), ReLU fused —
+    /// executed with the reusable adders + Act unit.
+    pub fn res_add(main: &[i8], skip: &[i8], stats: &mut Counters) -> Vec<i8> {
+        assert_eq!(main.len(), skip.len());
+        stats.adds_8b += main.len() as u64;
+        stats.act_ops_8b += main.len() as u64;
+        main.iter()
+            .zip(skip.iter())
+            .map(|(&a, &b)| crate::model::refcompute::res_add(a, b))
+            .collect()
+    }
+}
+
+/// Pooling unit state for the *block reuse* scheme (paper Fig. 4(c)):
+/// activation results are produced in the last tile; a comparison (or
+/// accumulation, for average pooling) is taken as each new result
+/// arrives, and a pooling result is emitted once its window completes.
+#[derive(Clone, Debug)]
+pub struct PoolUnit {
+    kernel: usize,
+    stride: usize,
+    /// In-flight windows keyed by output position.
+    max_partial: std::collections::HashMap<(usize, usize), (Vec<i8>, usize)>,
+    sum_partial: std::collections::HashMap<(usize, usize), (Vec<i32>, usize)>,
+    is_max: bool,
+}
+
+impl PoolUnit {
+    pub fn new_max(kernel: usize, stride: usize) -> Self {
+        Self {
+            kernel,
+            stride,
+            max_partial: Default::default(),
+            sum_partial: Default::default(),
+            is_max: true,
+        }
+    }
+
+    pub fn new_avg(kernel: usize, stride: usize) -> Self {
+        Self {
+            kernel,
+            stride,
+            max_partial: Default::default(),
+            sum_partial: Default::default(),
+            is_max: false,
+        }
+    }
+
+    /// Offer one activation result at input position (y, x). Returns any
+    /// completed pooling outputs `(opos, values)`.
+    pub fn offer(
+        &mut self,
+        (y, x): (usize, usize),
+        values: &[i8],
+        stats: &mut Counters,
+    ) -> Vec<((usize, usize), Vec<i8>)> {
+        let mut done = Vec::new();
+        // Which windows does (y, x) belong to?
+        let oy_min = y.saturating_sub(self.kernel - 1).div_ceil(self.stride);
+        let ox_min = x.saturating_sub(self.kernel - 1).div_ceil(self.stride);
+        let oy_max = y / self.stride;
+        let ox_max = x / self.stride;
+        for oy in oy_min..=oy_max {
+            for ox in ox_min..=ox_max {
+                // window (oy, ox) covers rows oy*s .. oy*s+k-1
+                if y < oy * self.stride
+                    || y >= oy * self.stride + self.kernel
+                    || x < ox * self.stride
+                    || x >= ox * self.stride + self.kernel
+                {
+                    continue;
+                }
+                let full = self.kernel * self.kernel;
+                if self.is_max {
+                    let entry = self
+                        .max_partial
+                        .entry((oy, ox))
+                        .or_insert_with(|| (vec![i8::MIN; values.len()], 0));
+                    let mut buf = std::mem::take(&mut entry.0);
+                    Rofm::cmp_max(&mut buf, values, stats);
+                    entry.0 = buf;
+                    entry.1 += 1;
+                    if entry.1 == full {
+                        let (v, _) = self.max_partial.remove(&(oy, ox)).unwrap();
+                        done.push(((oy, ox), v));
+                    }
+                } else {
+                    let entry = self
+                        .sum_partial
+                        .entry((oy, ox))
+                        .or_insert_with(|| (vec![0i32; values.len()], 0));
+                    for (a, &b) in entry.0.iter_mut().zip(values.iter()) {
+                        *a += b as i32;
+                    }
+                    stats.adds_8b += values.len() as u64;
+                    entry.1 += 1;
+                    if entry.1 == full {
+                        let (v, _) = self.sum_partial.remove(&(oy, ox)).unwrap();
+                        let scaled = Rofm::mul_scale(&v, full as i32, stats);
+                        done.push(((oy, ox), scaled));
+                    }
+                }
+            }
+        }
+        done
+    }
+
+    /// Number of in-flight (incomplete) windows — buffer-occupancy proxy.
+    pub fn in_flight(&self) -> usize {
+        self.max_partial.len() + self.sum_partial.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::for_all;
+
+    fn pkt(opos: (usize, usize), data: Vec<i32>) -> PsumPacket {
+        PsumPacket { opos, data }
+    }
+
+    #[test]
+    fn fetch_walks_schedule_and_charges() {
+        let mut r = Rofm::new(Schedule::idle());
+        let mut s = Counters::new();
+        let i = r.fetch(&mut s);
+        assert!(i.is_nop());
+        assert_eq!(r.counter, 1);
+        assert_eq!(s.sched_fetches, 1);
+        assert_eq!(s.rofm_ctrl_steps, 1);
+    }
+
+    #[test]
+    fn add_psum_accumulates() {
+        let mut s = Counters::new();
+        let mut a = pkt((0, 0), vec![1, 2]);
+        Rofm::add_psum(&mut a, &pkt((0, 0), vec![10, 20]), &mut s);
+        assert_eq!(a.data, vec![11, 22]);
+        assert_eq!(s.adds_8b, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "schedule misalignment")]
+    fn add_psum_rejects_mismatched_outputs() {
+        let mut a = pkt((0, 0), vec![1]);
+        Rofm::add_psum(&mut a, &pkt((0, 1), vec![1]), &mut Counters::new());
+    }
+
+    #[test]
+    fn fifo_tracks_occupancy_and_peak() {
+        let mut r = Rofm::new(Schedule::idle());
+        let mut s = Counters::new();
+        r.push_group(pkt((0, 0), vec![0; 8]), &mut s);
+        r.push_group(pkt((0, 1), vec![0; 8]), &mut s);
+        assert_eq!(r.fifo_len(), 2);
+        assert_eq!(r.peak_fifo_bytes(), 64);
+        let p = r.pop_group(&mut s).unwrap();
+        assert_eq!(p.opos, (0, 0), "FIFO order");
+        assert_eq!(r.peak_fifo_bytes(), 64, "peak is sticky");
+        assert_eq!(s.rofm_buffer_accesses, 3);
+        assert_eq!(s.peak_rofm_buffer_bytes, 64);
+        assert!(!r.exceeded_hw_buffer());
+    }
+
+    #[test]
+    fn hw_buffer_overflow_detected() {
+        let mut r = Rofm::new(Schedule::idle());
+        let mut s = Counters::new();
+        // 17 pushes x 256 lanes x 4 B = 17 KiB > 16 KiB
+        for i in 0..17 {
+            r.push_group(pkt((0, i), vec![0; 256]), &mut s);
+        }
+        assert!(r.exceeded_hw_buffer());
+    }
+
+    #[test]
+    fn act_and_quantize_semantics() {
+        let mut s = Counters::new();
+        assert_eq!(Rofm::act(&[-256, 256, 100000], 7, &mut s), vec![0, 2, 127]);
+        assert_eq!(
+            Rofm::quantize(&[-256, 256, -100000], 7, &mut s),
+            vec![-2, 2, -128]
+        );
+        assert_eq!(s.act_ops_8b, 6);
+    }
+
+    #[test]
+    fn cmp_and_mul_semantics() {
+        let mut s = Counters::new();
+        let mut acc = vec![1i8, -5, 7];
+        Rofm::cmp_max(&mut acc, &[2, -9, 7], &mut s);
+        assert_eq!(acc, vec![2, -5, 7]);
+        // floor(-3/4) = -1
+        assert_eq!(Rofm::mul_scale(&[-3, 9], 4, &mut s), vec![-1, 2]);
+        assert_eq!(s.pool_ops_8b, 5);
+    }
+
+    #[test]
+    fn res_add_fuses_relu() {
+        let mut s = Counters::new();
+        assert_eq!(Rofm::res_add(&[100, -3], &[100, 1], &mut s), vec![127, 0]);
+    }
+
+    #[test]
+    fn pool_unit_max_2x2_matches_reference() {
+        // Stream a 4x4 single-channel map through the unit in raster
+        // order; compare against refcompute::max_pool.
+        use crate::model::refcompute::{max_pool, Tensor};
+        use crate::model::TensorShape;
+        let mut rng = crate::testutil::Rng::new(5);
+        let data = rng.i8_vec(16, 100);
+        let t = Tensor::new(TensorShape::new(1, 4, 4), data.clone());
+        let want = max_pool(&t, 2, 2);
+        let mut unit = PoolUnit::new_max(2, 2);
+        let mut s = Counters::new();
+        let mut got = vec![0i8; 4];
+        for y in 0..4 {
+            for x in 0..4 {
+                for ((oy, ox), v) in unit.offer((y, x), &[t.at(0, y, x)], &mut s) {
+                    got[oy * 2 + ox] = v[0];
+                }
+            }
+        }
+        assert_eq!(got, want.data);
+        assert_eq!(unit.in_flight(), 0);
+    }
+
+    #[test]
+    fn prop_pool_unit_avg_matches_reference() {
+        use crate::model::refcompute::{avg_pool, Tensor};
+        use crate::model::TensorShape;
+        for_all("pool_unit_avg", 20, |rng| {
+            let k = rng.range(2, 3);
+            let stride = k; // non-overlapping (the paper's case)
+            let out = rng.range(1, 4);
+            let n = out * stride;
+            let c = rng.range(1, 3);
+            let data = rng.i8_vec(c * n * n, 50);
+            let t = Tensor::new(TensorShape::new(c, n, n), data);
+            let want = avg_pool(&t, k, stride);
+            let mut unit = PoolUnit::new_avg(k, stride);
+            let mut s = Counters::new();
+            let mut got = Tensor::zeros(want.shape);
+            for y in 0..n {
+                for x in 0..n {
+                    let vals: Vec<i8> = (0..c).map(|ch| t.at(ch, y, x)).collect();
+                    for ((oy, ox), v) in unit.offer((y, x), &vals, &mut s) {
+                        for (ch, &vv) in v.iter().enumerate() {
+                            got.set(ch, oy, ox, vv);
+                        }
+                    }
+                }
+            }
+            assert_eq!(got.data, want.data);
+        });
+    }
+
+    #[test]
+    fn prop_pool_unit_overlapping_windows() {
+        // kernel 3 stride 2 (overlapping) still matches the reference.
+        use crate::model::refcompute::{max_pool, Tensor};
+        use crate::model::TensorShape;
+        for_all("pool_unit_overlap", 10, |rng| {
+            let n = 5; // output = 2x2 for k=3 s=2
+            let data = rng.i8_vec(n * n, 100);
+            let t = Tensor::new(TensorShape::new(1, n, n), data);
+            let want = max_pool(&t, 3, 2);
+            let mut unit = PoolUnit::new_max(3, 2);
+            let mut s = Counters::new();
+            let mut got = Tensor::zeros(want.shape);
+            for y in 0..n {
+                for x in 0..n {
+                    for ((oy, ox), v) in unit.offer((y, x), &[t.at(0, y, x)], &mut s) {
+                        got.set(0, oy, ox, v[0]);
+                    }
+                }
+            }
+            assert_eq!(got.data, want.data);
+        });
+    }
+}

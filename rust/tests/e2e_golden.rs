@@ -1,0 +1,127 @@
+//! Integration: AOT artifacts (JAX/Pallas → HLO text) vs the Rust
+//! reference vs the cycle simulator. These tests skip gracefully when
+//! `make artifacts` has not been run.
+
+use domino::coordinator::Compiler;
+use domino::model::refcompute::{forward, Tensor, Weights};
+use domino::model::zoo;
+use domino::runtime::{artifact, artifacts_available, golden, I8Input, Runtime};
+use domino::sim::Simulator;
+use domino::testutil::Rng;
+
+fn rt_or_skip() -> Option<Runtime> {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::cpu().expect("PJRT CPU client"))
+}
+
+#[test]
+fn golden_hlo_matches_reference_on_many_images() {
+    let Some(rt) = rt_or_skip() else { return };
+    let n = golden::check_golden_vs_reference(&rt, 8, 2024).unwrap();
+    assert_eq!(n, 8);
+}
+
+#[test]
+fn golden_hlo_matches_cycle_simulator() {
+    let Some(rt) = rt_or_skip() else { return };
+    let net = zoo::tiny_cnn();
+    let compiler = Compiler::default();
+    let weights = Weights::random(&net, compiler.weight_seed).unwrap();
+    let program = compiler.compile_with_weights(&net, &weights).unwrap();
+    let g = golden::GoldenTiny::load(&rt).unwrap();
+    let mut rng = Rng::new(5);
+    let mut sim = Simulator::new(&program);
+    for _ in 0..4 {
+        let x = rng.i8_vec(net.input_len(), 31);
+        let hlo = g.run(&x, &weights).unwrap();
+        let simv = sim.run_image(&x).unwrap();
+        assert_eq!(hlo, simv.scores, "HLO vs cycle simulator");
+    }
+}
+
+#[test]
+fn cim_mvm_artifact_matches_reference() {
+    let Some(rt) = rt_or_skip() else { return };
+    let exe = rt.load(artifact::CIM_MVM).unwrap();
+    let mut rng = Rng::new(11);
+    let x = rng.i8_vec(256, 15);
+    let w = rng.i8_vec(256 * 256, 15);
+    let out = exe
+        .run_i8(&[
+            I8Input { data: &x, dims: &[1, 256] },
+            I8Input { data: &w, dims: &[256, 256] },
+        ])
+        .unwrap();
+    // reference: requant(x @ w, shift 7, relu)
+    let want: Vec<i8> = (0..256)
+        .map(|o| {
+            let acc: i32 = (0..256)
+                .map(|i| x[i] as i32 * w[i * 256 + o] as i32)
+                .sum();
+            domino::model::refcompute::requant(acc, 7, true)
+        })
+        .collect();
+    assert_eq!(out[0], want, "cim_mvm_256 artifact");
+}
+
+#[test]
+fn com_conv_artifact_matches_reference() {
+    let Some(rt) = rt_or_skip() else { return };
+    let exe = rt.load(artifact::COM_CONV).unwrap();
+    let mut rng = Rng::new(12);
+    let x = rng.i8_vec(16 * 16 * 16, 15);
+    // artifact weight layout: [K,K,C,M] (kkcm)
+    let w_kkcm = rng.i8_vec(3 * 3 * 16 * 32, 15);
+    let out = exe
+        .run_i8(&[
+            I8Input { data: &x, dims: &[16, 16, 16] },
+            I8Input { data: &w_kkcm, dims: &[3, 3, 16, 32] },
+        ])
+        .unwrap();
+    // reference via refcompute conv2d, converting layout to [M,C,K,K]
+    let mut w_mckk = vec![0i8; w_kkcm.len()];
+    for kr in 0..3 {
+        for kc in 0..3 {
+            for c in 0..16 {
+                for m in 0..32 {
+                    w_mckk[((m * 16 + c) * 3 + kr) * 3 + kc] =
+                        w_kkcm[((kr * 3 + kc) * 16 + c) * 32 + m];
+                }
+            }
+        }
+    }
+    let input = Tensor::new(domino::model::TensorShape::new(16, 16, 16), x);
+    let want = domino::model::refcompute::conv2d(&input, &w_mckk, 32, 3, 1, 1, 7, true);
+    assert_eq!(out[0], want.data, "com_conv_k3 artifact");
+}
+
+#[test]
+fn trained_artifact_end_to_end_accuracy() {
+    let Some(rt) = rt_or_skip() else { return };
+    let dir = domino::runtime::artifacts_dir();
+    let hlo = golden::TrainedTiny::load(&rt).unwrap();
+    let ts = domino::eval::accuracy::TestSet::load(
+        &dir.join(artifact::TESTSET_BIN),
+    )
+    .unwrap();
+    let tw = domino::eval::accuracy::TrainedWeights::load(
+        &dir.join(artifact::WEIGHTS_BIN),
+    )
+    .unwrap();
+    let net = domino::eval::accuracy::tiny_cnn_with_shifts(tw.shifts());
+    let weights = tw.as_weights();
+    // HLO vs rust reference, trained weights, 16 images
+    for i in 0..16 {
+        let got = hlo.run(&ts.images[i]).unwrap();
+        let want = forward(
+            &net,
+            &weights,
+            &Tensor::new(net.input, ts.images[i].clone()),
+        )
+        .unwrap();
+        assert_eq!(got, want.data, "image {i}");
+    }
+}

@@ -1,0 +1,138 @@
+//! Cross-module integration properties: random networks through the
+//! whole compile → simulate pipeline, checked against the int8
+//! reference and the analytic model.
+
+use domino::coordinator::{ArchConfig, Compiler};
+use domino::model::refcompute::{forward, Tensor, Weights};
+use domino::model::{Network, NetworkBuilder, TensorShape};
+use domino::perfmodel;
+use domino::sim::Simulator;
+use domino::testutil::{for_all, Rng};
+
+/// Generate a random small network exercising every layer kind.
+fn random_net(rng: &mut Rng) -> Network {
+    let c = rng.range(1, 5);
+    let h = rng.range(6, 11);
+    let mut b = NetworkBuilder::new("prop", TensorShape::new(c, h, h));
+    let n_blocks = rng.range(1, 4);
+    let mut ch = c;
+    let mut cur_h = h;
+    for _ in 0..n_blocks {
+        let out = rng.range(2, 9);
+        match rng.range(0, 4) {
+            0 => {
+                b = b.conv(out, 3, 1, 1);
+                ch = out;
+            }
+            1 => {
+                b = b.conv(out, 1, 1, 0);
+                ch = out;
+            }
+            2 if cur_h >= 5 => {
+                b = b.conv(out, 3, 2, 1);
+                ch = out;
+                cur_h = cur_h.div_ceil(2);
+            }
+            _ => {
+                // residual pair (identity skip)
+                b = b.conv(ch, 3, 1, 1).conv_linear(ch, 3, 1, 1);
+                let idx = b.next_index() - 2;
+                b = b.res_add(idx);
+            }
+        }
+        if cur_h >= 4 && rng.range(0, 2) == 0 {
+            b = b.max_pool(2, 2);
+            cur_h /= 2;
+        }
+    }
+    let _ = ch;
+    b.flatten().fc_logits(rng.range(2, 7)).build()
+}
+
+#[test]
+fn random_networks_simulate_exactly() {
+    for_all("sim_equals_reference", 25, |rng| {
+        let net = random_net(rng);
+        let arch = if rng.range(0, 2) == 0 {
+            ArchConfig::default()
+        } else {
+            ArchConfig::tiny(rng.range(4, 17))
+        };
+        let compiler = Compiler::new(arch);
+        let weights = Weights::random(&net, rng.next_u64()).unwrap();
+        let program = compiler.compile_with_weights(&net, &weights).unwrap();
+        let input = Tensor::new(net.input, rng.i8_vec(net.input_len(), 31));
+        let mut sim = Simulator::new(&program);
+        let got = sim.run_image(&input.data).unwrap();
+        let want = forward(&net, &weights, &input).unwrap();
+        assert_eq!(got.scores, want.data, "net {} mismatch", net.name);
+    });
+}
+
+#[test]
+fn random_networks_estimate_exactly() {
+    // A3 extended: the analytic model's counters equal the engine's on
+    // arbitrary generated networks, not just the zoo.
+    for_all("estimate_equals_engine", 20, |rng| {
+        let net = random_net(rng);
+        let program = Compiler::default().compile(&net).unwrap();
+        let est = perfmodel::estimate(&program).unwrap();
+        let mut sim = Simulator::new(&program);
+        let out = sim.run_image(&rng.i8_vec(net.input_len(), 31)).unwrap();
+        let s = sim.stats();
+        assert_eq!(est.counters.pe_macs, s.pe_macs);
+        assert_eq!(est.counters.rifm_buffer_accesses, s.rifm_buffer_accesses);
+        assert_eq!(est.counters.adds_8b, s.adds_8b);
+        assert_eq!(est.counters.onchip_link_bits, s.onchip_link_bits);
+        assert_eq!(est.counters.rofm_buffer_accesses, s.rofm_buffer_accesses);
+        assert_eq!(est.latency_cycles, out.latency_cycles);
+    });
+}
+
+#[test]
+fn random_networks_fit_hardware_tables() {
+    for_all("schedules_fit", 20, |rng| {
+        let net = random_net(rng);
+        let program = Compiler::default().compile(&net).unwrap();
+        assert!(program.schedules_fit_hardware(), "{}", net.name);
+    });
+}
+
+#[test]
+fn duplication_is_functionally_invisible() {
+    // water-filled duplication must not change any output bit
+    for_all("dup_invariant", 10, |rng| {
+        let net = random_net(rng);
+        let weights = Weights::random(&net, rng.next_u64()).unwrap();
+        let input = rng.i8_vec(net.input_len(), 31);
+        let base = Compiler::default()
+            .compile_with_weights(&net, &weights)
+            .unwrap();
+        let dup = Compiler::new(ArchConfig::table4(2))
+            .compile_with_weights(&net, &weights)
+            .unwrap();
+        let a = Simulator::new(&base).run_image(&input).unwrap();
+        let b = Simulator::new(&dup).run_image(&input).unwrap();
+        assert_eq!(a.scores, b.scores);
+        // and the event counts stay identical (same work, more tiles)
+        let ea = domino::perfmodel::estimate(&base).unwrap();
+        let eb = domino::perfmodel::estimate(&dup).unwrap();
+        assert_eq!(ea.counters.pe_macs, eb.counters.pe_macs);
+        assert!(eb.period_cycles <= ea.period_cycles);
+    });
+}
+
+#[test]
+fn zoo_models_compile_at_paper_operating_points() {
+    use domino::model::zoo;
+    for (net, chips) in [
+        (zoo::vgg11_cifar(), 5usize),
+        (zoo::resnet18_cifar(), 6),
+        (zoo::vgg16_imagenet(), 10),
+        (zoo::vgg19_imagenet(), 10),
+    ] {
+        let p = Compiler::new(ArchConfig::table4(chips)).compile(&net).unwrap();
+        assert!(p.total_tiles <= chips * 240, "{}", net.name);
+        assert!(p.schedules_fit_hardware(), "{}", net.name);
+    }
+}
