@@ -1,0 +1,75 @@
+//! Batched simulation: run a batch of images through the cycle engine
+//! data-parallel across threads, verify bit-exactness against the
+//! sequential path, and read the pipelined steady-state report that the
+//! paper's Table IV throughput numbers are built on.
+//!
+//!     cargo run --release --example batch_sim
+
+use domino::coordinator::Compiler;
+use domino::model::zoo;
+use domino::sim::Simulator;
+use domino::testutil::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let net = zoo::tiny_cnn();
+    let program = Compiler::default().compile(&net)?;
+    println!(
+        "network: {} mapped to {} tiles on {} chip(s)",
+        net.name, program.total_tiles, program.chips
+    );
+
+    // a batch of images
+    let mut rng = Rng::new(42);
+    let inputs: Vec<Vec<i8>> = (0..8)
+        .map(|_| rng.i8_vec(net.input_len(), 31))
+        .collect();
+
+    // 1. sequential reference: back-to-back run_image on one engine
+    //    (per-tile state is built once and reset between images)
+    let mut seq = Simulator::new(&program);
+    let t0 = std::time::Instant::now();
+    let seq_outs: Vec<_> = inputs
+        .iter()
+        .map(|x| seq.run_image(x))
+        .collect::<Result<_, _>>()?;
+    let t_seq = t0.elapsed();
+
+    // 2. the batched path: images data-parallel across threads,
+    //    per-thread counters merged deterministically
+    let mut batched = Simulator::new(&program);
+    let batch = batched.run_batch(&inputs)?;
+    println!(
+        "batch of {} on {} thread(s): {:.1} ms vs {:.1} ms sequential",
+        batch.outputs.len(),
+        batch.threads,
+        1e3 * batch.wall.as_secs_f64(),
+        1e3 * t_seq.as_secs_f64()
+    );
+
+    // 3. bit-exactness: same scores, same merged counters
+    for (b, s) in batch.outputs.iter().zip(&seq_outs) {
+        assert_eq!(b.scores, s.scores);
+    }
+    assert_eq!(batched.stats(), seq.stats());
+    println!("outputs and merged counters bit-exact with the sequential path");
+
+    // 4. the pipelined steady-state report (asserted against the
+    //    analytic perfmodel inside run_batch)
+    println!(
+        "pipelined: first-image latency {:.1} us, steady period {} cycles \
+         -> {:.0} img/s modeled at 10 MHz",
+        1e6 * batch.pipeline.first_latency_cycles as f64 / domino::consts::STEP_HZ,
+        batch.pipeline.steady_period_cycles,
+        batch.pipeline.images_per_s
+    );
+    for s in &batch.pipeline.stages {
+        println!(
+            "  {:<12} {:>6} slots/img, lead {:>3}, utilization {:>5.1}%",
+            s.name,
+            s.slots,
+            s.lead_slots,
+            100.0 * s.utilization
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,181 @@
+//! Serving throughput on the cycle-simulator backend, end to end:
+//!
+//! 1. `Simulator::run_batch` scaling — an 8-image batch, 1 vs N
+//!    threads, bit-exactness asserted against sequential `run_image`
+//!    and the wall-clock speedup printed (the PR's ≥2x-on-4-threads
+//!    acceptance gate);
+//! 2. a closed-loop load test of the `serve` bounded-queue /
+//!    micro-batch loop with the [`Server::start_sim`] backend —
+//!    concurrent clients, p50/p95/p99 latency, served images/s, and a
+//!    bit-exact cross-check of every response against
+//!    `model::refcompute`.
+//!
+//!     cargo bench --bench serve_sim_throughput            # full run
+//!     cargo bench --bench serve_sim_throughput -- --smoke # CI-sized
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use domino::benchutil::{stats, time_n};
+use domino::coordinator::ArchConfig;
+use domino::model::refcompute::{forward, Tensor};
+use domino::model::zoo;
+use domino::serve::{sim_program, LatencyStats, ServeConfig, Server};
+use domino::sim::Simulator;
+use domino::testutil::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!(
+        "serve_sim_throughput ({})\n",
+        if smoke { "smoke" } else { "full" }
+    );
+    let net = zoo::tiny_cnn();
+    let (program, weights) = sim_program(&net, ArchConfig::default())?;
+
+    // ---- 1. run_batch scaling ------------------------------------
+    let batch_n = if smoke { 4 } else { 8 };
+    let iters = if smoke { 1 } else { 3 };
+    let mut rng = Rng::new(0xBEEF);
+    let inputs: Vec<Vec<i8>> = (0..batch_n)
+        .map(|_| rng.i8_vec(net.input_len(), 31))
+        .collect();
+
+    // sequential reference (also the exactness oracle)
+    let mut seq_sim = Simulator::new(&program);
+    let seq_scores: Vec<Vec<i8>> = inputs
+        .iter()
+        .map(|x| seq_sim.run_image(x).map(|o| o.scores))
+        .collect::<anyhow::Result<_>>()?;
+    let seq_stats = stats(time_n(iters, || {
+        let mut sim = Simulator::new(&program);
+        for x in &inputs {
+            std::hint::black_box(sim.run_image(x).unwrap());
+        }
+    }));
+    println!(
+        "{batch_n}-image batch, sequential run_image:   {:>10.3?} ({:.1} img/s)",
+        seq_stats.median,
+        seq_stats.per_second(batch_n)
+    );
+
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut thread_counts = vec![1usize, 2, 4];
+    if hw > 4 {
+        thread_counts.push(hw);
+    }
+    let mut speedup_at_4 = None;
+    for threads in thread_counts {
+        // exactness first: every batched output must equal sequential
+        let mut sim = Simulator::new(&program);
+        let out = sim.run_batch_threads(&inputs, threads)?;
+        for (i, (o, want)) in out.outputs.iter().zip(&seq_scores).enumerate() {
+            assert_eq!(o.scores, *want, "image {i} diverged at {threads} threads");
+        }
+        let st = stats(time_n(iters, || {
+            let mut sim = Simulator::new(&program);
+            std::hint::black_box(sim.run_batch_threads(&inputs, threads).unwrap());
+        }));
+        let speedup = st.speedup_over(&seq_stats);
+        println!(
+            "{batch_n}-image batch, run_batch x{threads:>2} threads: {:>10.3?} \
+             ({:.1} img/s, {speedup:.2}x vs sequential, bit-exact)",
+            st.median,
+            st.per_second(batch_n)
+        );
+        if threads == 4 {
+            speedup_at_4 = Some(speedup);
+        }
+    }
+    if let Some(s) = speedup_at_4 {
+        println!(
+            "run_batch speedup on 4 threads: {s:.2}x {}",
+            if s >= 2.0 { "(>= 2x: PASS)" } else { "(< 2x)" }
+        );
+    }
+    {
+        let mut sim = Simulator::new(&program);
+        let out = sim.run_batch_threads(&inputs, 4.min(hw))?;
+        println!(
+            "pipeline report: steady period {} cycles -> {:.0} img/s modeled \
+             (asserted == perfmodel)\n",
+            out.pipeline.steady_period_cycles,
+            out.modeled_images_per_s()
+        );
+    }
+
+    // ---- 2. closed-loop serving on the sim backend ----------------
+    let cfg = ServeConfig {
+        workers: if smoke { 2 } else { 4 },
+        max_batch: 8,
+        queue_cap: 1024,
+    };
+    let clients = if smoke { 2 } else { 4 };
+    let per_client = if smoke { 8 } else { 64 };
+
+    // request pool with precomputed refcompute references
+    let pool: Vec<Vec<i8>> = (0..16)
+        .map(|_| rng.i8_vec(net.input_len(), 31))
+        .collect();
+    let expected: Vec<Vec<i8>> = pool
+        .iter()
+        .map(|img| {
+            forward(&net, &weights, &Tensor::new(net.input, img.clone()))
+                .map(|t| t.data)
+        })
+        .collect::<Result<_, _>>()?;
+    let pool = Arc::new(pool);
+    let expected = Arc::new(expected);
+
+    println!(
+        "closed-loop serve: {} workers, micro-batch {}, {} clients x {} requests",
+        cfg.workers, cfg.max_batch, clients, per_client
+    );
+    let server = Arc::new(Server::start_sim(cfg, Arc::clone(&program))?);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let server = Arc::clone(&server);
+        let pool = Arc::clone(&pool);
+        let expected = Arc::clone(&expected);
+        handles.push(std::thread::spawn(move || -> anyhow::Result<LatencyStats> {
+            let mut lat = LatencyStats::default();
+            for i in 0..per_client {
+                let idx = (c * per_client + i) % pool.len();
+                let t = Instant::now();
+                let resp = server.infer(pool[idx].clone())?;
+                lat.record(t.elapsed());
+                anyhow::ensure!(
+                    resp.logits == expected[idx],
+                    "response for image {idx} diverged from refcompute"
+                );
+            }
+            Ok(lat)
+        }));
+    }
+    let mut lat = LatencyStats::default();
+    for h in handles {
+        lat.merge(&h.join().expect("client thread")?);
+    }
+    let wall = t0.elapsed();
+    let total = clients * per_client;
+    println!(
+        "served {total} requests in {:.2} s -> {:.1} img/s (all bit-exact vs refcompute)",
+        wall.as_secs_f64(),
+        domino::sim::stats::safe_rate(total as f64, wall.as_secs_f64())
+    );
+    println!("latency: {}", lat.summary());
+    println!(
+        "server counters: served {}, rejected {}, failed {}",
+        server.served(),
+        server.rejected(),
+        server.failed()
+    );
+    let counts = Arc::try_unwrap(server)
+        .map_err(|_| anyhow::anyhow!("server still referenced"))?
+        .shutdown()?;
+    println!("per-worker served: {counts:?}");
+    Ok(())
+}

@@ -25,6 +25,23 @@ pub struct Stats {
     pub max: Duration,
 }
 
+impl Stats {
+    /// Items-per-second at the median duration; 0 for a degenerate
+    /// (zero-length) median instead of dividing by zero.
+    pub fn per_second(&self, items: usize) -> f64 {
+        crate::sim::stats::safe_rate(items as f64, self.median.as_secs_f64())
+    }
+
+    /// Speedup of this run over `baseline` (ratio of medians); 0 when
+    /// this run's median is degenerate.
+    pub fn speedup_over(&self, baseline: &Stats) -> f64 {
+        crate::sim::stats::safe_rate(
+            baseline.median.as_secs_f64(),
+            self.median.as_secs_f64(),
+        )
+    }
+}
+
 pub fn stats(mut samples: Vec<Duration>) -> Stats {
     samples.sort();
     Stats {
@@ -64,5 +81,17 @@ mod tests {
     fn time_n_returns_iters_samples() {
         let v = time_n(5, || { std::hint::black_box(1 + 1); });
         assert_eq!(v.len(), 5);
+    }
+
+    #[test]
+    fn per_second_and_speedup_guard_zero() {
+        let zero = stats(vec![Duration::ZERO]);
+        assert_eq!(zero.per_second(100), 0.0);
+        let one = stats(vec![Duration::from_secs(1)]);
+        assert_eq!(one.per_second(8), 8.0);
+        let two = stats(vec![Duration::from_secs(2)]);
+        assert!((two.speedup_over(&two) - 1.0).abs() < 1e-12);
+        assert!((one.speedup_over(&two) - 2.0).abs() < 1e-12);
+        assert_eq!(zero.speedup_over(&one), 0.0);
     }
 }

@@ -73,16 +73,21 @@ COMMANDS:
   breakdown              power breakdown (Section IV-B-3)
   accuracy [--limit N]   quantization-accuracy experiment (needs artifacts)
   map <model> [--chips N]      compile a model; print the tile mapping
-  run <model> [--images N] [--seed S] [--chips N]
+  run <model> [--images N] [--seed S] [--chips N] [--threads T]
                          cycle-simulate images; print stats + energy
+                         (--threads > 1 uses the batched parallel path)
   trace [--stage I]      print the Fig. 3(b) COM dataflow trace
   pipeline <model> [--images N] [--chips N]
                          steady-state layer-synchronized pipeline timing
   ablate                 dataflow (A1) + pooling (Fig. 4) ablations
   sweep [--models a,b]   mapping explorer across crossbar sizes
   golden [--images N]    check AOT golden model vs reference (needs artifacts)
-  serve [--workers N] [--batch B] [--requests R]
-                         run the inference server over the test set
+  serve [--backend pjrt|sim] [--model M] [--workers N] [--batch B]
+        [--requests R] [--queue Q] [--seed S]
+                         run the inference server: `pjrt` serves the AOT
+                         artifact over the test set (needs artifacts);
+                         `sim` serves the cycle-accurate simulator and
+                         cross-checks every response vs refcompute
   models                 list zoo models
 
 Models: vgg11-cifar10 resnet18-cifar10 vgg16-imagenet vgg19-imagenet

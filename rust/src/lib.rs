@@ -20,8 +20,12 @@
 //! * [`tile`] — microarchitecture of one tile: `tile::rifm`,
 //!   `tile::rofm`, `tile::pe`.
 //! * [`noc`] — 2-D mesh topology, packets and link models.
-//! * [`sim`] — the cycle-accurate engine, statistics and the COM dataflow
-//!   trace (reproduces the paper's Fig. 3(b)).
+//! * [`sim`] — the cycle-accurate engine (single-image `run_image` and
+//!   the batched, thread-parallel `run_batch`, bit-exact with each
+//!   other), statistics, the layer-synchronized pipeline timing model,
+//!   and the COM dataflow trace (reproduces the paper's Fig. 3(b)).
+//!   Per-tile runtime state is built once per simulator and reset
+//!   between images.
 //! * [`energy`] — Table III component energy/area constants, event-based
 //!   energy accounting and technology/voltage/precision normalization.
 //! * [`perfmodel`] — closed-form layer-level performance model validated
@@ -31,7 +35,14 @@
 //! * [`baselines`] — conventional WS+im2col dataflow and the two pooling
 //!   schemes of Fig. 4, for ablations.
 //! * [`runtime`] — PJRT runtime that loads the JAX/Pallas golden model
-//!   (AOT-lowered HLO text in `artifacts/`) for cross-validation.
+//!   (AOT-lowered HLO text in `artifacts/`) for cross-validation;
+//!   compiles against an API-compatible stub unless the `pjrt` feature
+//!   (and a vendored `xla` crate) is enabled.
+//! * [`serve`] — the production-style inference server: bounded queue
+//!   with backpressure, worker pool, micro-batched dequeueing and
+//!   p50/p95/p99 accounting, with two interchangeable backends — the
+//!   AOT artifact over PJRT and the cycle-accurate simulator
+//!   (`Server::start_sim`, artifact-free, refcompute-checkable).
 //! * [`eval`] — experiment drivers for every table and figure.
 
 pub mod baselines;

@@ -143,16 +143,47 @@ fn run(args: &Args) -> Result<()> {
     let mut sim = Simulator::new(&program);
     let images = args.get_usize("images", 1);
     let mut rng = Rng::new(args.get_u64("seed", 42));
-    for i in 0..images {
-        let out = sim.run_image(&rng.i8_vec(net.input_len(), 31))?;
+    let threads = args.get_usize("threads", 1);
+    if threads > 1 && images > 1 {
+        // batched, data-parallel path
+        let inputs: Vec<Vec<i8>> = (0..images)
+            .map(|_| rng.i8_vec(net.input_len(), 31))
+            .collect();
+        let batch = sim.run_batch_threads(&inputs, threads)?;
+        for (i, out) in batch.outputs.iter().enumerate() {
+            println!(
+                "image {i}: latency {} cycles ({:.1} us), scores {:?}",
+                out.latency_cycles,
+                1e6 * out.latency_cycles as f64 / domino::consts::STEP_HZ,
+                out.scores
+            );
+        }
         println!(
-            "image {i}: latency {} cycles ({:.1} us), scores {:?}",
-            out.latency_cycles,
-            1e6 * out.latency_cycles as f64 / domino::consts::STEP_HZ,
-            out.scores
+            "\nbatch: {} images on {} threads in {:.3} s ({:.1} img/s simulated); \
+             pipelined steady period {} cycles -> {:.0} img/s modeled",
+            batch.outputs.len(),
+            batch.threads,
+            batch.wall.as_secs_f64(),
+            batch.images_per_s_wall(),
+            batch.pipeline.steady_period_cycles,
+            batch.pipeline.images_per_s
         );
+    } else {
+        for i in 0..images {
+            let out = sim.run_image(&rng.i8_vec(net.input_len(), 31))?;
+            println!(
+                "image {i}: latency {} cycles ({:.1} us), scores {:?}",
+                out.latency_cycles,
+                1e6 * out.latency_cycles as f64 / domino::consts::STEP_HZ,
+                out.scores
+            );
+        }
     }
     println!("\ncounters over {images} image(s):\n{}", sim.stats());
+    println!(
+        "hardware MAC rate over busy steps: {:.2} GMAC/s",
+        sim.stats().macs_per_second() / 1e9
+    );
     let e = energy_of(sim.stats(), &CimModel::generic_sram());
     println!(
         "\nenergy: total {:.3} uJ (cim {:.3}, on-chip data {:.3}, off-chip {:.3})",
@@ -264,6 +295,82 @@ fn sweep(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
+    match args.get("backend").unwrap_or("pjrt") {
+        "pjrt" => serve_pjrt(args),
+        "sim" => serve_sim(args),
+        other => bail!("unknown serve backend {other:?} (use `pjrt` or `sim`)"),
+    }
+}
+
+/// Serve the cycle-accurate simulator: compile the model once, share
+/// the program across workers, drive a closed request loop, and
+/// cross-check every response against the int8 reference.
+fn serve_sim(args: &Args) -> Result<()> {
+    use domino::model::refcompute::{forward, Tensor};
+    use domino::serve::{sim_program, LatencyStats, ServeConfig, Server};
+    let name = args.get("model").unwrap_or("tiny-cnn");
+    let net = zoo::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {name:?} (see `domino models`)"))?;
+    let cfg = ServeConfig {
+        workers: args.get_usize("workers", 2),
+        max_batch: args.get_usize("batch", 8),
+        queue_cap: args.get_usize("queue", 256),
+    };
+    let n = args.get_usize("requests", 64);
+    let (program, weights) = sim_program(&net, arch_from(args))?;
+    let est = domino::perfmodel::estimate(&program)?;
+    println!(
+        "serving {n} requests of {name} on the cycle simulator \
+         ({} workers, micro-batch {}, {} tiles)",
+        cfg.workers, cfg.max_batch, program.total_tiles
+    );
+
+    // a small pool of distinct images with precomputed references
+    let mut rng = Rng::new(args.get_u64("seed", 42));
+    let pool: Vec<Vec<i8>> = (0..16.min(n.max(1)))
+        .map(|_| rng.i8_vec(net.input_len(), 31))
+        .collect();
+    let expected: Vec<Vec<i8>> = pool
+        .iter()
+        .map(|img| {
+            forward(&net, &weights, &Tensor::new(net.input, img.clone()))
+                .map(|t| t.data)
+        })
+        .collect::<Result<_, _>>()?;
+
+    let server = Server::start_sim(cfg, program)?;
+    let t0 = std::time::Instant::now();
+    let mut lat = LatencyStats::default();
+    for i in 0..n {
+        let idx = i % pool.len();
+        let t = std::time::Instant::now();
+        let r = server.infer(pool[idx].clone())?;
+        lat.record(t.elapsed());
+        anyhow::ensure!(
+            r.logits == expected[idx],
+            "response for image {idx} diverged from refcompute"
+        );
+    }
+    let wall = t0.elapsed();
+    println!(
+        "{} req in {:.2} s -> {:.0} req/s served; latency {}",
+        n,
+        wall.as_secs_f64(),
+        domino::sim::stats::safe_rate(n as f64, wall.as_secs_f64()),
+        lat.summary()
+    );
+    println!(
+        "all responses bit-exact vs refcompute; modeled hardware rate {:.0} img/s \
+         (pipeline period {} cycles)",
+        est.images_per_s(),
+        est.period_cycles
+    );
+    server.shutdown()?;
+    Ok(())
+}
+
+/// Serve the AOT artifact through PJRT over the held-out test set.
+fn serve_pjrt(args: &Args) -> Result<()> {
     use domino::serve::{LatencyStats, ServeConfig, Server};
     let dir = domino::runtime::artifacts_dir();
     let ts = domino::eval::accuracy::TestSet::load(
@@ -304,9 +411,9 @@ fn serve(args: &Args) -> Result<()> {
         "{} req in {:.2} s -> {:.0} req/s; latency {}; accuracy {:.4}",
         n,
         wall.as_secs_f64(),
-        n as f64 / wall.as_secs_f64(),
+        domino::sim::stats::safe_rate(n as f64, wall.as_secs_f64()),
         lat.summary(),
-        correct as f64 / n as f64
+        domino::sim::stats::safe_rate(correct as f64, n as f64)
     );
     server.shutdown()?;
     Ok(())

@@ -59,14 +59,16 @@ impl NetworkEstimate {
         self.latency_cycles as f64 / crate::consts::STEP_HZ
     }
 
-    /// Pipelined throughput in images per second.
+    /// Pipelined throughput in images per second (0 for a degenerate
+    /// zero-cycle period instead of dividing by zero).
     pub fn images_per_s(&self) -> f64 {
-        crate::consts::STEP_HZ / self.period_cycles as f64
+        crate::sim::pipeline::images_per_s_for_period(self.period_cycles)
     }
 
-    /// Paper's per-core inference speed (images/s/CIM core).
+    /// Paper's per-core inference speed (images/s/CIM core); 0 when no
+    /// tiles were allocated.
     pub fn images_per_s_per_core(&self) -> f64 {
-        self.images_per_s() / self.total_tiles as f64
+        crate::sim::stats::safe_rate(self.images_per_s(), self.total_tiles as f64)
     }
 }
 

@@ -19,6 +19,15 @@
 
 pub mod golden;
 
+/// The `xla` bindings. With the `pjrt` feature off (the default in the
+/// offline build image, which does not vendor the `xla` crate) this is
+/// an API-compatible stub whose client constructor returns a clean
+/// error — see [`xla_stub`](xla). With `--features pjrt` the real,
+/// vendored crate is used instead and every call site stays identical.
+#[cfg(not(feature = "pjrt"))]
+#[path = "xla_stub.rs"]
+pub mod xla;
+
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};

@@ -1,16 +1,34 @@
-//! Inference serving: the L3 request loop over the AOT artifact.
+//! Inference serving: the production-style request loop, with two
+//! interchangeable execution backends behind one queue.
 //!
-//! After `make artifacts` the trained network is a self-contained HLO
-//! executable; this module serves it like a production endpoint:
-//! bounded request queue with backpressure, a configurable pool of
-//! worker threads (each owning its own PJRT client — the `xla` crate's
-//! raw handles are not `Send`), micro-batched dequeueing, and latency/
-//! throughput accounting (p50/p95/p99).
+//! The server is a bounded request queue with backpressure, a
+//! configurable pool of worker threads, micro-batched dequeueing and
+//! latency/throughput accounting (p50/p95/p99). What executes a
+//! dequeued micro-batch is the **backend**:
 //!
-//! Python is *never* on this path: workers execute the compiled
-//! artifact directly. The `serve_throughput` example drives a closed-
-//! loop load test over the held-out test set and cross-checks every
-//! response against the Rust int8 reference.
+//! * **PJRT** ([`Server::start`]) — each worker owns a private PJRT
+//!   client executing the AOT-compiled JAX/Pallas artifact (`make
+//!   artifacts`; the `xla` crate's raw handles are not `Send`, hence
+//!   per-worker clients). Python is never on this path.
+//! * **Cycle simulator** ([`Server::start_sim`]) — each worker owns a
+//!   [`crate::sim::Simulator`] over one shared compiled [`Program`]
+//!   (the program is immutable and `Sync`; the per-tile runtime state
+//!   lives in the worker's engine and is reset between images). This
+//!   serves the paper's cycle-accurate datapath end-to-end —
+//!   submit → micro-batch → response — and is what
+//!   `benches/serve_sim_throughput.rs` load-tests. Build the shared
+//!   program with [`sim_program`] so responses can be cross-checked
+//!   bit-for-bit against `model::refcompute`.
+//!
+//! Shutdown is graceful under load: workers drain the queue completely
+//! before exiting, so every accepted request is resolved — answered on
+//! success, or its response channel closed on a per-request execution
+//! failure (the client's `recv` errors instead of hanging; workers
+//! keep serving and the failure is counted in [`Server::failed`]).
+//! The `stop` flag is published while holding the queue mutex — a
+//! store outside the lock could land between a worker's emptiness
+//! check and its `Condvar::wait`, and the notification would be lost
+//! (the classic missed-wakeup race; regression-tested below).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -18,6 +36,11 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{ArchConfig, Compiler, Program};
+use crate::model::refcompute::Weights;
+use crate::model::Network;
+use crate::sim::Simulator;
 
 /// One inference request.
 pub struct Request {
@@ -41,7 +64,7 @@ pub struct Response {
 /// Server configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
-    /// Worker threads (each with a private PJRT client + executable).
+    /// Worker threads (each with a private execution engine).
     pub workers: usize,
     /// Max requests drained per dequeue (micro-batch).
     pub max_batch: usize,
@@ -66,6 +89,29 @@ struct Shared {
     stop: AtomicBool,
     served: AtomicU64,
     rejected: AtomicU64,
+    /// Requests whose execution failed (the client's channel is closed
+    /// instead of answered; workers keep serving).
+    failed: AtomicU64,
+}
+
+/// Which execution engine the workers build (internal; selected by the
+/// `Server` constructor used).
+enum BackendSpec {
+    /// AOT artifact through a per-worker PJRT client.
+    Pjrt,
+    /// Cycle-accurate simulator over a shared compiled program.
+    Sim(Arc<Program>),
+}
+
+/// Compile `net` for the cycle-simulator backend with the compiler's
+/// deterministic weight seed. Returns the shared program and the exact
+/// weights it bakes in, so callers can cross-check every response
+/// against `model::refcompute::forward` bit-for-bit.
+pub fn sim_program(net: &Network, arch: ArchConfig) -> Result<(Arc<Program>, Weights)> {
+    let compiler = Compiler::new(arch);
+    let weights = Weights::random(net, compiler.weight_seed)?;
+    let program = compiler.compile_with_weights(net, &weights)?;
+    Ok((Arc::new(program), weights))
 }
 
 /// A running inference server.
@@ -74,15 +120,35 @@ pub struct Server {
     cfg: ServeConfig,
     workers: Vec<std::thread::JoinHandle<Result<u64>>>,
     next_id: AtomicU64,
+    input_len: usize,
+    backend: &'static str,
 }
 
 impl Server {
     /// Start `cfg.workers` threads serving the trained tiny-cnn
-    /// artifact. Fails immediately if the artifacts are missing.
+    /// artifact over PJRT. Fails immediately if the artifacts are
+    /// missing.
     pub fn start(cfg: ServeConfig) -> Result<Self> {
         if !crate::runtime::artifacts_available() {
             bail!("artifacts not built (run `make artifacts`)");
         }
+        Self::start_backend(cfg, BackendSpec::Pjrt, 3 * 16 * 16, "pjrt")
+    }
+
+    /// Start `cfg.workers` threads serving the cycle-accurate simulator
+    /// over a shared compiled program (see [`sim_program`]). Needs no
+    /// artifacts: the whole datapath is the Rust engine.
+    pub fn start_sim(cfg: ServeConfig, program: Arc<Program>) -> Result<Self> {
+        let input_len = program.net.input_len();
+        Self::start_backend(cfg, BackendSpec::Sim(program), input_len, "sim")
+    }
+
+    fn start_backend(
+        cfg: ServeConfig,
+        spec: BackendSpec,
+        input_len: usize,
+        backend: &'static str,
+    ) -> Result<Self> {
         anyhow::ensure!(cfg.workers >= 1 && cfg.max_batch >= 1);
         let shared = Arc::new(Shared::default());
         let mut workers = Vec::with_capacity(cfg.workers);
@@ -91,15 +157,19 @@ impl Server {
             let shared = Arc::clone(&shared);
             let ready = ready_tx.clone();
             let max_batch = cfg.max_batch;
+            let spec = match &spec {
+                BackendSpec::Pjrt => BackendSpec::Pjrt,
+                BackendSpec::Sim(p) => BackendSpec::Sim(Arc::clone(p)),
+            };
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("domino-worker-{w}"))
-                    .spawn(move || worker_loop(shared, max_batch, ready))
+                    .spawn(move || worker_entry(shared, max_batch, spec, ready))
                     .context("spawn worker")?,
             );
         }
         drop(ready_tx);
-        // wait until every worker has compiled its executable
+        // wait until every worker has built its execution engine
         for _ in 0..cfg.workers {
             ready_rx
                 .recv()
@@ -110,15 +180,31 @@ impl Server {
             cfg,
             workers,
             next_id: AtomicU64::new(0),
+            input_len,
+            backend,
         })
+    }
+
+    /// Flat input length this server accepts (backend model's input).
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    /// Which backend the workers run (`"pjrt"` or `"sim"`).
+    pub fn backend(&self) -> &'static str {
+        self.backend
     }
 
     /// Submit one image; returns a receiver for the response. Fails
     /// fast when the queue is full (backpressure) or the image is the
     /// wrong size.
     pub fn submit(&self, image: Vec<i8>) -> Result<mpsc::Receiver<Response>> {
-        if image.len() != 3 * 16 * 16 {
-            bail!("image must be 3x16x16 int8");
+        if image.len() != self.input_len {
+            bail!(
+                "image must be {} int8 values (got {})",
+                self.input_len,
+                image.len()
+            );
         }
         let (tx, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -153,9 +239,29 @@ impl Server {
         self.shared.rejected.load(Ordering::Relaxed)
     }
 
+    /// Requests whose execution failed after being accepted. Each one
+    /// had its response channel closed (the client's `recv` errors)
+    /// rather than hanging; the worker that hit the failure keeps
+    /// serving.
+    pub fn failed(&self) -> u64 {
+        self.shared.failed.load(Ordering::Relaxed)
+    }
+
     /// Stop workers and join them; returns per-worker served counts.
+    ///
+    /// Workers drain the queue before exiting, so every request
+    /// accepted by `submit` before this call is still resolved —
+    /// answered, or its channel closed if its execution failed.
     pub fn shutdown(mut self) -> Result<Vec<u64>> {
-        self.shared.stop.store(true, Ordering::SeqCst);
+        {
+            // Publish `stop` while holding the queue mutex: a worker is
+            // either before its predicate check (it will see the flag)
+            // or already parked in `wait` (it will see the notify).
+            // Storing without the lock could slot between a worker's
+            // check and its wait, losing the wakeup forever.
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.stop.store(true, Ordering::SeqCst);
+        }
         self.shared.cv.notify_all();
         let mut counts = Vec::new();
         for w in self.workers.drain(..) {
@@ -165,39 +271,74 @@ impl Server {
     }
 }
 
-fn worker_loop(
+/// Worker thread entry: build the backend's execution engine, signal
+/// readiness, then serve micro-batches until shutdown.
+fn worker_entry(
     shared: Arc<Shared>,
     max_batch: usize,
+    spec: BackendSpec,
     ready: mpsc::Sender<Result<()>>,
 ) -> Result<u64> {
-    // each worker owns a full PJRT stack (handles are not Send)
-    let init = (|| -> Result<crate::runtime::golden::TrainedTiny> {
-        let rt = crate::runtime::Runtime::cpu()?;
-        crate::runtime::golden::TrainedTiny::load(&rt)
-    })();
-    let exe = match init {
-        Ok(e) => {
+    match spec {
+        BackendSpec::Pjrt => {
+            // each worker owns a full PJRT stack (handles are not Send)
+            let init = (|| -> Result<crate::runtime::golden::TrainedTiny> {
+                let rt = crate::runtime::Runtime::cpu()?;
+                crate::runtime::golden::TrainedTiny::load(&rt)
+            })();
+            let exe = match init {
+                Ok(e) => {
+                    let _ = ready.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    let _ = ready.send(Err(e));
+                    bail!("worker init failed: {msg}");
+                }
+            };
+            Ok(serve_loop(&shared, max_batch, |img| exe.run(img)))
+        }
+        BackendSpec::Sim(program) => {
+            // per-worker engine over the shared immutable program; the
+            // engine's per-tile state is built once here and reset
+            // between images.
+            let mut sim = Simulator::new(&program);
             let _ = ready.send(Ok(()));
-            e
+            Ok(serve_loop(&shared, max_batch, move |img| {
+                sim.run_image(img).map(|out| out.scores)
+            }))
         }
-        Err(e) => {
-            let msg = format!("{e:#}");
-            let _ = ready.send(Err(e));
-            bail!("worker init failed: {msg}");
-        }
-    };
+    }
+}
 
+/// The backend-agnostic micro-batch loop: block until work or stop,
+/// drain up to `max_batch` requests, execute, respond. Returns the
+/// number of requests this worker served.
+///
+/// A per-request execution failure never kills the worker: the failed
+/// request's response channel is dropped (so the client's `recv`
+/// errors instead of hanging), the failure is counted, and serving
+/// continues — otherwise one poisoned request could strand every
+/// request still in the queue.
+fn serve_loop<F>(shared: &Shared, max_batch: usize, mut infer: F) -> u64
+where
+    F: FnMut(&[i8]) -> Result<Vec<i8>>,
+{
     let mut served = 0u64;
     let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
     loop {
         batch.clear();
         {
             let mut q = shared.queue.lock().unwrap();
+            // `stop` is re-checked on every wakeup; because `shutdown`
+            // publishes it under this mutex, the check-then-wait pair
+            // cannot miss it.
             while q.is_empty() && !shared.stop.load(Ordering::SeqCst) {
                 q = shared.cv.wait(q).unwrap();
             }
             if q.is_empty() && shared.stop.load(Ordering::SeqCst) {
-                return Ok(served);
+                return served;
             }
             for _ in 0..max_batch {
                 match q.pop_front() {
@@ -210,17 +351,26 @@ fn worker_loop(
         let n = batch.len() as u32;
         for req in batch.drain(..) {
             let queue = req.enqueued.elapsed();
-            let logits = exe.run(&req.image)?;
-            let exec = t0.elapsed() / n;
-            shared.served.fetch_add(1, Ordering::Relaxed);
-            served += 1;
-            // client may have gone away; that's fine
-            let _ = req.resp.send(Response {
-                id: req.id,
-                logits,
-                queue,
-                exec,
-            });
+            match infer(&req.image) {
+                Ok(logits) => {
+                    let exec = t0.elapsed() / n;
+                    shared.served.fetch_add(1, Ordering::Relaxed);
+                    served += 1;
+                    // client may have gone away; that's fine
+                    let _ = req.resp.send(Response {
+                        id: req.id,
+                        logits,
+                        queue,
+                        exec,
+                    });
+                }
+                Err(e) => {
+                    shared.failed.fetch_add(1, Ordering::Relaxed);
+                    eprintln!("domino-serve: request {} failed: {e:#}", req.id);
+                    // dropping req.resp closes the channel: the client
+                    // unblocks with a recv error instead of hanging
+                }
+            }
         }
     }
 }
@@ -273,6 +423,19 @@ impl LatencyStats {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::refcompute::{forward, Tensor};
+    use crate::model::{NetworkBuilder, TensorShape};
+    use crate::testutil::Rng;
+
+    /// A small conv net the sim backend can serve in well under a
+    /// millisecond per image.
+    fn small_net() -> Network {
+        NetworkBuilder::new("serve-test", TensorShape::new(2, 6, 6))
+            .conv(4, 3, 1, 1)
+            .flatten()
+            .fc_logits(5)
+            .build()
+    }
 
     #[test]
     fn latency_percentiles() {
@@ -284,6 +447,81 @@ mod tests {
         assert_eq!(s.percentile(99.0), Some(99));
         assert_eq!(s.percentile(100.0), Some(100));
         assert_eq!(LatencyStats::default().percentile(50.0), None);
+    }
+
+    #[test]
+    fn sim_backend_rejects_zero_workers() {
+        let net = small_net();
+        let (program, _) = sim_program(&net, ArchConfig::default()).unwrap();
+        let bad = ServeConfig {
+            workers: 0,
+            ..Default::default()
+        };
+        assert!(Server::start_sim(bad, program).is_err());
+    }
+
+    #[test]
+    fn sim_backend_roundtrip_matches_refcompute() {
+        let net = small_net();
+        let (program, weights) = sim_program(&net, ArchConfig::default()).unwrap();
+        let server = Server::start_sim(
+            ServeConfig {
+                workers: 2,
+                max_batch: 4,
+                queue_cap: 64,
+            },
+            Arc::clone(&program),
+        )
+        .unwrap();
+        assert_eq!(server.backend(), "sim");
+        assert_eq!(server.input_len(), net.input_len());
+        // wrong-size image rejected up front
+        assert!(server.submit(vec![0i8; 3]).is_err());
+        // responses are bit-exact vs the int8 reference
+        let mut rng = Rng::new(77);
+        for _ in 0..6 {
+            let image = rng.i8_vec(net.input_len(), 31);
+            let r = server.infer(image.clone()).unwrap();
+            let want = forward(&net, &weights, &Tensor::new(net.input, image)).unwrap();
+            assert_eq!(r.logits, want.data);
+        }
+        assert_eq!(server.served(), 6);
+        let counts = server.shutdown().unwrap();
+        assert_eq!(counts.iter().sum::<u64>(), 6);
+    }
+
+    #[test]
+    fn sim_backend_shutdown_under_load_answers_everything() {
+        // Regression test for the missed-wakeup shutdown race: repeat
+        // the submit-burst → immediate-shutdown cycle; with the old
+        // unsynchronized `stop` store a worker could park forever and
+        // `shutdown` would hang (the test would time out).
+        let net = small_net();
+        let (program, _) = sim_program(&net, ArchConfig::default()).unwrap();
+        let mut rng = Rng::new(99);
+        for round in 0..6 {
+            let server = Server::start_sim(
+                ServeConfig {
+                    workers: 2,
+                    max_batch: 3,
+                    queue_cap: 128,
+                },
+                Arc::clone(&program),
+            )
+            .unwrap();
+            let n = 4 + 3 * round as usize;
+            let receivers: Vec<_> = (0..n)
+                .map(|_| server.submit(rng.i8_vec(net.input_len(), 31)).unwrap())
+                .collect();
+            // shut down with the queue still loaded: workers must
+            // drain it and answer every accepted request
+            let counts = server.shutdown().unwrap();
+            assert_eq!(counts.iter().sum::<u64>(), n as u64, "round {round}");
+            for (i, rx) in receivers.into_iter().enumerate() {
+                let r = rx.recv().expect("accepted request must be answered");
+                assert_eq!(r.logits.len(), 5, "round {round} request {i}");
+            }
+        }
     }
 
     #[test]

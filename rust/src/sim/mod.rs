@@ -1,9 +1,26 @@
-//! Cycle-level simulation: engine, statistics, dataflow trace.
+//! Cycle-level simulation: engine, statistics, pipeline timing,
+//! dataflow trace.
+//!
+//! * [`engine`] — the cycle-accurate COM engine. Per-tile runtime
+//!   state is built once per [`Simulator`] and reset between images;
+//!   [`Simulator::run_image`] simulates one inference back-to-back,
+//!   [`Simulator::run_batch`] data-parallelizes a batch across threads
+//!   (bit-exact with sequential runs, per-thread [`Counters`] merged)
+//!   and reports the pipelined steady-state timing asserted against
+//!   `perfmodel`.
+//! * [`pipeline`] — the stage-granularity layer-synchronization model
+//!   ([`run_pipelined`]): while stage *i* processes image *n*, stage
+//!   *i−1* streams image *n+1*; its measured steady-state period is
+//!   the quantity Table IV throughput derives from.
+//! * [`stats`] — raw architectural event counters; the `energy` module
+//!   prices them.
+//! * [`trace`] — the Fig. 3(b) COM dataflow trace.
 
 pub mod engine;
 pub mod pipeline;
 pub mod stats;
 pub mod trace;
 
-pub use engine::Simulator;
+pub use engine::{BatchOutput, RunOutput, Simulator};
+pub use pipeline::{run_pipelined, PipelineRun};
 pub use stats::Counters;

@@ -157,8 +157,14 @@ pub fn run_pipelined(
         completions,
         first_latency_cycles,
         steady_period_cycles,
-        images_per_s: crate::consts::STEP_HZ / steady_period_cycles as f64,
+        images_per_s: images_per_s_for_period(steady_period_cycles),
     })
+}
+
+/// Throughput at the 10 MHz step clock for a steady-state period in
+/// cycles; 0 for a degenerate (zero-cycle) period instead of NaN/inf.
+pub fn images_per_s_for_period(period_cycles: u64) -> f64 {
+    crate::sim::stats::safe_rate(1.0, period_cycles as f64 / crate::consts::STEP_HZ)
 }
 
 #[cfg(test)]
@@ -237,6 +243,12 @@ mod tests {
                 .fold(1.0f64, f64::min)
         };
         assert!(conv_min(&filled) > conv_min(&r));
+    }
+
+    #[test]
+    fn zero_period_yields_zero_throughput() {
+        assert_eq!(images_per_s_for_period(0), 0.0);
+        assert!((images_per_s_for_period(10) - 1.0e6).abs() < 1e-6);
     }
 
     #[test]

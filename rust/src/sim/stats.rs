@@ -84,6 +84,30 @@ impl Counters {
     pub fn seconds(&self) -> f64 {
         self.steps as f64 / crate::consts::STEP_HZ
     }
+
+    /// Events per simulated second for an arbitrary count, at the
+    /// 10 MHz step clock. Returns 0 for a run with no simulated steps
+    /// (instead of dividing by zero).
+    pub fn rate_per_s(&self, count: u64) -> f64 {
+        safe_rate(count as f64, self.seconds())
+    }
+
+    /// Simulated MAC throughput (MACs per simulated second); 0 when
+    /// nothing was simulated.
+    pub fn macs_per_second(&self) -> f64 {
+        self.rate_per_s(self.pe_macs)
+    }
+}
+
+/// `count / seconds`, with every degenerate denominator (zero,
+/// negative, NaN) mapped to 0.0 instead of NaN/inf — rates derived
+/// from empty runs must stay plottable and comparable.
+pub fn safe_rate(count: f64, seconds: f64) -> f64 {
+    if seconds > 0.0 && seconds.is_finite() {
+        count / seconds
+    } else {
+        0.0
+    }
 }
 
 impl std::fmt::Display for Counters {
@@ -138,5 +162,23 @@ mod tests {
             ..Default::default()
         };
         assert!((c.seconds() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rates_guard_zero_denominators() {
+        // An empty run must produce 0, not NaN/inf.
+        let empty = Counters::new();
+        assert_eq!(empty.macs_per_second(), 0.0);
+        assert_eq!(empty.rate_per_s(123), 0.0);
+        assert_eq!(safe_rate(5.0, 0.0), 0.0);
+        assert_eq!(safe_rate(5.0, -1.0), 0.0);
+        assert_eq!(safe_rate(5.0, f64::NAN), 0.0);
+        // ... and a real run produces the plain ratio.
+        let c = Counters {
+            steps: 10_000_000, // 1 simulated second
+            pe_macs: 42,
+            ..Default::default()
+        };
+        assert!((c.macs_per_second() - 42.0).abs() < 1e-9);
     }
 }

@@ -81,6 +81,15 @@ impl Rifm {
         self.cfg
     }
 
+    /// Restore the configuration-time state (empty buffer, counter at
+    /// zero, no shift offset). Used by the engine to reuse one RIFM
+    /// instance across images.
+    pub fn reset(&mut self) {
+        self.buffer.clear();
+        self.counter = 0;
+        self.shift_offset = 0;
+    }
+
     /// Receive one beat into the buffer. Charges one buffer access and
     /// one active-controller step. Returns `true` if the beat should be
     /// forwarded to the next tile (the engine moves the actual packet and
@@ -197,6 +206,26 @@ mod tests {
         r.receive(&vec![2i8; 256], &mut s);
         assert_eq!(r.pe_view(&mut s)[0], 2);
         assert_eq!(r.pe_view(&mut s).len(), 64);
+    }
+
+    #[test]
+    fn reset_restores_configuration_state() {
+        let mut r = Rifm::new_with_config(RifmConfig {
+            channels: 64,
+            forward: false,
+            shortcut: false,
+            shift_step: 64,
+        });
+        let mut s = Counters::new();
+        r.receive(&vec![7i8; 256], &mut s);
+        r.shift(&mut s);
+        r.reset();
+        assert_eq!(r.counter, 0);
+        assert!(r.pe_view(&mut s).is_empty(), "buffer cleared");
+        // behaves like a fresh instance after reset
+        r.receive(&[1, 2], &mut s);
+        assert_eq!(r.counter, 1);
+        assert_eq!(r.pe_view(&mut s), &[1, 2]);
     }
 
     #[test]

@@ -43,6 +43,16 @@ impl Rofm {
         }
     }
 
+    /// Restore the configuration-time state: counter at zero, FIFO
+    /// empty. Used by the engine to reuse one ROFM instance across
+    /// images (the schedule itself is immutable after configuration).
+    pub fn reset(&mut self) {
+        self.counter = 0;
+        self.fifo.clear();
+        self.fifo_bytes = 0;
+        self.peak_fifo_bytes = 0;
+    }
+
     /// Fetch the instruction for the current cycle and advance the
     /// counter. Charges the schedule-table fetch (2.2 pJ/16 b) and an
     /// active-controller step.

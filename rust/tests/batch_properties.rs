@@ -1,0 +1,206 @@
+//! Batched-execution properties: `Simulator::run_batch` must be an
+//! exact data-parallel refactoring of sequential `run_image` — same
+//! bits out, same merged counters — over an exhaustive sweep of small
+//! geometries covering every stage kind, and its pipeline report must
+//! agree with the analytic model.
+
+use domino::coordinator::{ArchConfig, Compiler};
+use domino::model::{Network, NetworkBuilder, Projection, TensorShape};
+use domino::perfmodel;
+use domino::sim::{Counters, Simulator};
+use domino::testutil::Rng;
+
+/// The sweep: every layer kind, strides, padding, pooling flavors,
+/// multi-block channel splits, residuals with and without projection.
+fn sweep_nets() -> Vec<(Network, ArchConfig)> {
+    let mut nets = Vec::new();
+    // conv geometry sweep on the default crossbar
+    for (k, stride, padding) in [(1usize, 1usize, 0usize), (3, 1, 1), (3, 2, 1), (3, 1, 0)] {
+        let net = NetworkBuilder::new("sweep-conv", TensorShape::new(2, 6, 6))
+            .conv(4, k, stride, padding)
+            .build();
+        nets.push((net, ArchConfig::default()));
+    }
+    // fused pooling, both flavors
+    nets.push((
+        NetworkBuilder::new("sweep-maxpool", TensorShape::new(3, 8, 8))
+            .conv(4, 3, 1, 1)
+            .max_pool(2, 2)
+            .build(),
+        ArchConfig::default(),
+    ));
+    nets.push((
+        NetworkBuilder::new("sweep-avgpool", TensorShape::new(3, 8, 8))
+            .conv(4, 3, 1, 1)
+            .avg_pool(2, 2)
+            .build(),
+        ArchConfig::default(),
+    ));
+    // multi-block channels on a tiny crossbar + fc pipeline
+    nets.push((
+        NetworkBuilder::new("sweep-blocks", TensorShape::new(6, 5, 5))
+            .conv(7, 3, 1, 1)
+            .flatten()
+            .fc(9)
+            .fc_logits(5)
+            .build(),
+        ArchConfig::tiny(4),
+    ));
+    // residuals: identity and projected skip
+    nets.push((
+        NetworkBuilder::new("sweep-res", TensorShape::new(4, 6, 6))
+            .conv(4, 3, 1, 1)
+            .conv_linear(4, 3, 1, 1)
+            .res_add(0)
+            .build(),
+        ArchConfig::default(),
+    ));
+    nets.push((
+        NetworkBuilder::new("sweep-res-proj", TensorShape::new(4, 8, 8))
+            .conv(4, 3, 1, 1)
+            .conv(8, 3, 2, 1)
+            .conv_linear(8, 3, 1, 1)
+            .res_add_proj(
+                0,
+                Projection {
+                    out_ch: 8,
+                    stride: 2,
+                },
+            )
+            .build(),
+        ArchConfig::default(),
+    ));
+    nets
+}
+
+#[test]
+fn run_batch_is_bit_exact_with_sequential_runs() {
+    for (net, arch) in sweep_nets() {
+        let program = Compiler::new(arch).compile(&net).unwrap();
+        let mut rng = Rng::new(0xBA7C4);
+        let inputs: Vec<Vec<i8>> = (0..5)
+            .map(|_| rng.i8_vec(net.input_len(), 31))
+            .collect();
+
+        let mut seq = Simulator::new(&program);
+        let seq_outs: Vec<_> = inputs
+            .iter()
+            .map(|x| seq.run_image(x).unwrap())
+            .collect();
+
+        let mut batched = Simulator::new(&program);
+        let batch = batched.run_batch_threads(&inputs, 4).unwrap();
+
+        assert_eq!(batch.outputs.len(), seq_outs.len(), "{}", net.name);
+        for (i, (b, s)) in batch.outputs.iter().zip(&seq_outs).enumerate() {
+            assert_eq!(b.scores, s.scores, "{} image {i} scores", net.name);
+            assert_eq!(b.stage_slots, s.stage_slots, "{} image {i}", net.name);
+            assert_eq!(
+                b.latency_cycles, s.latency_cycles,
+                "{} image {i}",
+                net.name
+            );
+            for (si, (bt, st)) in
+                b.stage_outputs.iter().zip(&s.stage_outputs).enumerate()
+            {
+                assert_eq!(
+                    bt.data, st.data,
+                    "{} image {i} stage {si} tensor",
+                    net.name
+                );
+            }
+        }
+        assert_eq!(
+            batched.stats(),
+            seq.stats(),
+            "{}: merged batch counters != sequential counters",
+            net.name
+        );
+        assert_eq!(
+            batched.stage_stats(),
+            seq.stage_stats(),
+            "{}: per-stage counters",
+            net.name
+        );
+    }
+}
+
+#[test]
+fn merged_batch_counters_equal_sum_of_per_image_counters() {
+    for (net, arch) in sweep_nets() {
+        let program = Compiler::new(arch).compile(&net).unwrap();
+        let mut rng = Rng::new(0x5EED5);
+        let inputs: Vec<Vec<i8>> = (0..4)
+            .map(|_| rng.i8_vec(net.input_len(), 31))
+            .collect();
+
+        // per-image counters from fresh, independent simulators
+        let mut summed = Counters::new();
+        for x in &inputs {
+            let mut solo = Simulator::new(&program);
+            solo.run_image(x).unwrap();
+            summed.merge(solo.stats());
+        }
+
+        let mut batched = Simulator::new(&program);
+        batched.run_batch_threads(&inputs, 2).unwrap();
+        assert_eq!(
+            batched.stats(),
+            &summed,
+            "{}: batch merge != sum of per-image counters",
+            net.name
+        );
+    }
+}
+
+#[test]
+fn batch_pipeline_report_agrees_with_perfmodel() {
+    for (net, arch) in sweep_nets() {
+        let program = Compiler::new(arch).compile(&net).unwrap();
+        let est = perfmodel::estimate(&program).unwrap();
+        let mut rng = Rng::new(0xF00D);
+        let inputs: Vec<Vec<i8>> = (0..8)
+            .map(|_| rng.i8_vec(net.input_len(), 31))
+            .collect();
+        let mut sim = Simulator::new(&program);
+        // run_batch itself bails on any engine/perfmodel divergence;
+        // assert the reported steady state explicitly as well.
+        let batch = sim.run_batch_threads(&inputs, 4).unwrap();
+        assert_eq!(
+            batch.pipeline.steady_period_cycles, est.period_cycles,
+            "{}",
+            net.name
+        );
+        assert!(batch.pipeline.images_per_s > 0.0, "{}", net.name);
+        assert_eq!(batch.pipeline.completions.len(), inputs.len());
+    }
+}
+
+#[test]
+fn batch_thread_count_does_not_change_results() {
+    let net = NetworkBuilder::new("sweep-threads", TensorShape::new(3, 8, 8))
+        .conv(6, 3, 1, 1)
+        .max_pool(2, 2)
+        .flatten()
+        .fc_logits(4)
+        .build();
+    let program = Compiler::default().compile(&net).unwrap();
+    let mut rng = Rng::new(0x7EAD);
+    let inputs: Vec<Vec<i8>> = (0..6)
+        .map(|_| rng.i8_vec(net.input_len(), 31))
+        .collect();
+    let mut reference: Option<(Vec<Vec<i8>>, Counters)> = None;
+    for threads in [1usize, 2, 3, 6, 16] {
+        let mut sim = Simulator::new(&program);
+        let batch = sim.run_batch_threads(&inputs, threads).unwrap();
+        let scores: Vec<Vec<i8>> =
+            batch.outputs.iter().map(|o| o.scores.clone()).collect();
+        match &reference {
+            None => reference = Some((scores, sim.stats().clone())),
+            Some((want_scores, want_stats)) => {
+                assert_eq!(&scores, want_scores, "threads={threads}");
+                assert_eq!(sim.stats(), want_stats, "threads={threads}");
+            }
+        }
+    }
+}
