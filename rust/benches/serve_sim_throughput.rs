@@ -8,171 +8,383 @@
 //!    micro-batch loop with the [`Server::start_sim`] backend —
 //!    concurrent clients, p50/p95/p99 latency, served images/s, and a
 //!    bit-exact cross-check of every response against
-//!    `model::refcompute`.
+//!    `model::refcompute`;
+//! 3. a **multi-model** closed loop: several models loaded into one
+//!    `ModelRegistry`, concurrent clients interleaving requests across
+//!    all of them through per-worker engine pools, one model
+//!    hot-swapped (fresh weights) mid-traffic — every response is
+//!    verified bit-for-bit against refcompute for the exact model
+//!    *version* stamped on it, and zero requests may drop or fail.
 //!
 //!     cargo bench --bench serve_sim_throughput            # full run
 //!     cargo bench --bench serve_sim_throughput -- --smoke # CI-sized
+//!     # CI multi-model leg (router path only, ≥2 models):
+//!     cargo bench --bench serve_sim_throughput -- --smoke --multi-only \
+//!         --models tiny-cnn,tiny-mlp
+//!
+//! `--models a,b,c` picks the loaded set (default
+//! `tiny-cnn,tiny-mlp,tiny-resnet`).
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use domino::benchutil::{stats, time_n};
 use domino::coordinator::ArchConfig;
 use domino::model::refcompute::{forward, Tensor};
 use domino::model::zoo;
-use domino::serve::{sim_program, LatencyStats, ServeConfig, Server};
+use domino::serve::{sim_program, LatencyStats, ModelRegistry, ModelVersion, ServeConfig, Server};
 use domino::sim::Simulator;
 use domino::testutil::Rng;
 
+/// Refcompute reference outputs for `images` under a specific model
+/// version's weights.
+fn expected_for(mv: &ModelVersion, images: &[Vec<i8>]) -> anyhow::Result<Vec<Vec<i8>>> {
+    images.iter().map(|img| mv.refcompute(img)).collect()
+}
+
 fn main() -> anyhow::Result<()> {
-    let smoke = std::env::args().any(|a| a == "--smoke");
-    println!(
-        "serve_sim_throughput ({})\n",
-        if smoke { "smoke" } else { "full" }
-    );
-    let net = zoo::tiny_cnn();
-    let (program, weights) = sim_program(&net, ArchConfig::default())?;
-
-    // ---- 1. run_batch scaling ------------------------------------
-    let batch_n = if smoke { 4 } else { 8 };
-    let iters = if smoke { 1 } else { 3 };
-    let mut rng = Rng::new(0xBEEF);
-    let inputs: Vec<Vec<i8>> = (0..batch_n)
-        .map(|_| rng.i8_vec(net.input_len(), 31))
-        .collect();
-
-    // sequential reference (also the exactness oracle)
-    let mut seq_sim = Simulator::new(&program);
-    let seq_scores: Vec<Vec<i8>> = inputs
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let multi_only = argv.iter().any(|a| a == "--multi-only");
+    let model_list = argv
         .iter()
-        .map(|x| seq_sim.run_image(x).map(|o| o.scores))
-        .collect::<anyhow::Result<_>>()?;
-    let seq_stats = stats(time_n(iters, || {
-        let mut sim = Simulator::new(&program);
-        for x in &inputs {
-            std::hint::black_box(sim.run_image(x).unwrap());
-        }
-    }));
+        .position(|a| a == "--models")
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "tiny-cnn,tiny-mlp,tiny-resnet".to_string());
     println!(
-        "{batch_n}-image batch, sequential run_image:   {:>10.3?} ({:.1} img/s)",
-        seq_stats.median,
-        seq_stats.per_second(batch_n)
+        "serve_sim_throughput ({}{})\n",
+        if smoke { "smoke" } else { "full" },
+        if multi_only { ", multi-only" } else { "" }
     );
+    let mut rng = Rng::new(0xBEEF);
 
-    let hw = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1);
-    let mut thread_counts = vec![1usize, 2, 4];
-    if hw > 4 {
-        thread_counts.push(hw);
-    }
-    let mut speedup_at_4 = None;
-    for threads in thread_counts {
-        // exactness first: every batched output must equal sequential
-        let mut sim = Simulator::new(&program);
-        let out = sim.run_batch_threads(&inputs, threads)?;
-        for (i, (o, want)) in out.outputs.iter().zip(&seq_scores).enumerate() {
-            assert_eq!(o.scores, *want, "image {i} diverged at {threads} threads");
-        }
-        let st = stats(time_n(iters, || {
+    if !multi_only {
+        let net = zoo::tiny_cnn();
+        let (program, weights) = sim_program(&net, ArchConfig::default())?;
+
+        // ---- 1. run_batch scaling ------------------------------------
+        let batch_n = if smoke { 4 } else { 8 };
+        let iters = if smoke { 1 } else { 3 };
+        let inputs: Vec<Vec<i8>> = (0..batch_n)
+            .map(|_| rng.i8_vec(net.input_len(), 31))
+            .collect();
+
+        // sequential reference (also the exactness oracle)
+        let mut seq_sim = Simulator::new(&program);
+        let seq_scores: Vec<Vec<i8>> = inputs
+            .iter()
+            .map(|x| seq_sim.run_image(x).map(|o| o.scores))
+            .collect::<anyhow::Result<_>>()?;
+        let seq_stats = stats(time_n(iters, || {
             let mut sim = Simulator::new(&program);
-            std::hint::black_box(sim.run_batch_threads(&inputs, threads).unwrap());
+            for x in &inputs {
+                std::hint::black_box(sim.run_image(x).unwrap());
+            }
         }));
-        let speedup = st.speedup_over(&seq_stats);
         println!(
-            "{batch_n}-image batch, run_batch x{threads:>2} threads: {:>10.3?} \
-             ({:.1} img/s, {speedup:.2}x vs sequential, bit-exact)",
-            st.median,
-            st.per_second(batch_n)
+            "{batch_n}-image batch, sequential run_image:   {:>10.3?} ({:.1} img/s)",
+            seq_stats.median,
+            seq_stats.per_second(batch_n)
         );
-        if threads == 4 {
-            speedup_at_4 = Some(speedup);
+
+        let hw = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let mut thread_counts = vec![1usize, 2, 4];
+        if hw > 4 {
+            thread_counts.push(hw);
         }
-    }
-    if let Some(s) = speedup_at_4 {
+        let mut speedup_at_4 = None;
+        for threads in thread_counts {
+            // exactness first: every batched output must equal sequential
+            let mut sim = Simulator::new(&program);
+            let out = sim.run_batch_threads(&inputs, threads)?;
+            for (i, (o, want)) in out.outputs.iter().zip(&seq_scores).enumerate() {
+                assert_eq!(o.scores, *want, "image {i} diverged at {threads} threads");
+            }
+            let st = stats(time_n(iters, || {
+                let mut sim = Simulator::new(&program);
+                std::hint::black_box(sim.run_batch_threads(&inputs, threads).unwrap());
+            }));
+            let speedup = st.speedup_over(&seq_stats);
+            println!(
+                "{batch_n}-image batch, run_batch x{threads:>2} threads: {:>10.3?} \
+                 ({:.1} img/s, {speedup:.2}x vs sequential, bit-exact)",
+                st.median,
+                st.per_second(batch_n)
+            );
+            if threads == 4 {
+                speedup_at_4 = Some(speedup);
+            }
+        }
+        if let Some(s) = speedup_at_4 {
+            println!(
+                "run_batch speedup on 4 threads: {s:.2}x {}",
+                if s >= 2.0 { "(>= 2x: PASS)" } else { "(< 2x)" }
+            );
+        }
+        {
+            let mut sim = Simulator::new(&program);
+            let out = sim.run_batch_threads(&inputs, 4.min(hw))?;
+            println!(
+                "pipeline report: steady period {} cycles -> {:.0} img/s modeled \
+                 (asserted == perfmodel)\n",
+                out.pipeline.steady_period_cycles,
+                out.modeled_images_per_s()
+            );
+        }
+
+        // ---- 2. closed-loop serving on the sim backend ----------------
+        let cfg = ServeConfig {
+            workers: if smoke { 2 } else { 4 },
+            max_batch: 8,
+            queue_cap: 1024,
+        };
+        let clients = if smoke { 2 } else { 4 };
+        let per_client = if smoke { 8 } else { 64 };
+
+        // request pool with precomputed refcompute references
+        let pool: Vec<Vec<i8>> = (0..16)
+            .map(|_| rng.i8_vec(net.input_len(), 31))
+            .collect();
+        let expected: Vec<Vec<i8>> = pool
+            .iter()
+            .map(|img| {
+                forward(&net, &weights, &Tensor::new(net.input, img.clone()))
+                    .map(|t| t.data)
+            })
+            .collect::<Result<_, _>>()?;
+        let pool = Arc::new(pool);
+        let expected = Arc::new(expected);
+
         println!(
-            "run_batch speedup on 4 threads: {s:.2}x {}",
-            if s >= 2.0 { "(>= 2x: PASS)" } else { "(< 2x)" }
+            "closed-loop serve: {} workers, micro-batch {}, {} clients x {} requests",
+            cfg.workers, cfg.max_batch, clients, per_client
         );
-    }
-    {
-        let mut sim = Simulator::new(&program);
-        let out = sim.run_batch_threads(&inputs, 4.min(hw))?;
+        let server = Arc::new(Server::start_sim(cfg, Arc::clone(&program))?);
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let server = Arc::clone(&server);
+            let pool = Arc::clone(&pool);
+            let expected = Arc::clone(&expected);
+            handles.push(std::thread::spawn(move || -> anyhow::Result<LatencyStats> {
+                let mut lat = LatencyStats::default();
+                for i in 0..per_client {
+                    let idx = (c * per_client + i) % pool.len();
+                    let t = Instant::now();
+                    let resp = server.infer(pool[idx].clone())?;
+                    lat.record(t.elapsed());
+                    anyhow::ensure!(
+                        resp.logits == expected[idx],
+                        "response for image {idx} diverged from refcompute"
+                    );
+                }
+                Ok(lat)
+            }));
+        }
+        let mut lat = LatencyStats::default();
+        for h in handles {
+            lat.merge(&h.join().expect("client thread")?);
+        }
+        let wall = t0.elapsed();
+        let total = clients * per_client;
         println!(
-            "pipeline report: steady period {} cycles -> {:.0} img/s modeled \
-             (asserted == perfmodel)\n",
-            out.pipeline.steady_period_cycles,
-            out.modeled_images_per_s()
+            "served {total} requests in {:.2} s -> {:.1} img/s (all bit-exact vs refcompute)",
+            wall.as_secs_f64(),
+            domino::sim::stats::safe_rate(total as f64, wall.as_secs_f64())
         );
+        println!("latency: {}", lat.summary());
+        println!(
+            "server counters: served {}, rejected {}, failed {}",
+            server.served(),
+            server.rejected(),
+            server.failed()
+        );
+        let counts = Arc::try_unwrap(server)
+            .map_err(|_| anyhow::anyhow!("server still referenced"))?
+            .shutdown()?;
+        println!("per-worker served: {counts:?}\n");
     }
 
-    // ---- 2. closed-loop serving on the sim backend ----------------
+    // ---- 3. multi-model closed loop with a mid-traffic hot-swap ----
+    let names: Vec<String> = model_list
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    anyhow::ensure!(
+        names.len() >= 2,
+        "--models needs >= 2 models for the multi-model leg (got {names:?})"
+    );
+    let registry = Arc::new(ModelRegistry::new());
+    let mut models: Vec<Arc<ModelVersion>> = Vec::new();
+    for raw in &names {
+        let m = zoo::lookup(raw)?;
+        models.push(registry.load(&m.name, &m, ArchConfig::default())?);
+    }
     let cfg = ServeConfig {
         workers: if smoke { 2 } else { 4 },
         max_batch: 8,
-        queue_cap: 1024,
+        queue_cap: 4096,
     };
-    let clients = if smoke { 2 } else { 4 };
-    let per_client = if smoke { 8 } else { 64 };
-
-    // request pool with precomputed refcompute references
-    let pool: Vec<Vec<i8>> = (0..16)
-        .map(|_| rng.i8_vec(net.input_len(), 31))
-        .collect();
-    let expected: Vec<Vec<i8>> = pool
-        .iter()
-        .map(|img| {
-            forward(&net, &weights, &Tensor::new(net.input, img.clone()))
-                .map(|t| t.data)
-        })
-        .collect::<Result<_, _>>()?;
-    let pool = Arc::new(pool);
-    let expected = Arc::new(expected);
-
+    let clients = if smoke { 3 } else { 6 };
+    let per_client = if smoke { 12 } else { 48 };
     println!(
-        "closed-loop serve: {} workers, micro-batch {}, {} clients x {} requests",
-        cfg.workers, cfg.max_batch, clients, per_client
+        "multi-model closed loop: {} models [{}], {} workers, {} clients x {} requests, \
+         hot-swap of {} mid-traffic",
+        models.len(),
+        models.iter().map(|m| m.name()).collect::<Vec<_>>().join(", "),
+        cfg.workers,
+        clients,
+        per_client,
+        models[0].name()
     );
-    let server = Arc::new(Server::start_sim(cfg, Arc::clone(&program))?);
+
+    // per-model image pools; expected outputs per (model, version)
+    let pools: Arc<Vec<Vec<Vec<i8>>>> = Arc::new(
+        models
+            .iter()
+            .map(|mv| {
+                (0..8)
+                    .map(|_| rng.i8_vec(mv.input_len(), 31))
+                    .collect::<Vec<_>>()
+            })
+            .collect(),
+    );
+    // expected refcompute outputs keyed by (model index, version)
+    type ExpectedMap = HashMap<(usize, u64), Vec<Vec<i8>>>;
+    let expected: Arc<Mutex<ExpectedMap>> = Arc::new(Mutex::new(HashMap::new()));
+    for (mi, mv) in models.iter().enumerate() {
+        expected
+            .lock()
+            .unwrap()
+            .insert((mi, mv.version()), expected_for(mv, &pools[mi])?);
+    }
+
+    type Record = (usize, u64, usize, Vec<i8>); // (model idx, version, image idx, logits)
+    let server = Arc::new(Server::start_multi(cfg, Arc::clone(&registry))?);
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for c in 0..clients {
         let server = Arc::clone(&server);
-        let pool = Arc::clone(&pool);
-        let expected = Arc::clone(&expected);
-        handles.push(std::thread::spawn(move || -> anyhow::Result<LatencyStats> {
-            let mut lat = LatencyStats::default();
-            for i in 0..per_client {
-                let idx = (c * per_client + i) % pool.len();
-                let t = Instant::now();
-                let resp = server.infer(pool[idx].clone())?;
-                lat.record(t.elapsed());
-                anyhow::ensure!(
-                    resp.logits == expected[idx],
-                    "response for image {idx} diverged from refcompute"
-                );
-            }
-            Ok(lat)
-        }));
+        let pools = Arc::clone(&pools);
+        let model_names: Vec<String> =
+            models.iter().map(|m| m.name().to_string()).collect();
+        handles.push(std::thread::spawn(
+            move || -> anyhow::Result<(LatencyStats, Vec<Record>)> {
+                let mut lat = LatencyStats::default();
+                let mut records = Vec::with_capacity(per_client);
+                for i in 0..per_client {
+                    // every client cycles through every model
+                    let mi = (c + i) % model_names.len();
+                    let idx = i % pools[mi].len();
+                    let t = Instant::now();
+                    let resp = server.infer_on(&model_names[mi], pools[mi][idx].clone())?;
+                    lat.record(t.elapsed());
+                    let stamp = resp.model.expect("sim responses carry a stamp");
+                    anyhow::ensure!(
+                        &*stamp.name == model_names[mi].as_str(),
+                        "request for {} answered by {} (routing bug)",
+                        model_names[mi],
+                        stamp.name
+                    );
+                    records.push((mi, stamp.version, idx, resp.logits));
+                }
+                Ok((lat, records))
+            },
+        ));
     }
+
+    // Admin op while traffic flows: once a quarter of the requests are
+    // served, hot-swap model 0 to fresh weights. In-flight requests on
+    // v1 must drain; later requests pick up v2.
+    let total = clients * per_client;
+    let deadline = Instant::now() + std::time::Duration::from_secs(120);
+    while server.served() < (total / 4) as u64 && Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_micros(200));
+    }
+    let swap_net = zoo::lookup(models[0].name())?;
+    let v2 = registry.swap_seeded(
+        models[0].name(),
+        &swap_net,
+        ArchConfig::default(),
+        Some(0x5A_AB_5A),
+    )?;
+    expected
+        .lock()
+        .unwrap()
+        .insert((0, v2.version()), expected_for(&v2, &pools[0])?);
+    println!(
+        "swapped {} v{} -> v{} at ~{} served",
+        v2.name(),
+        v2.version() - 1,
+        v2.version(),
+        server.served()
+    );
+
     let mut lat = LatencyStats::default();
+    let mut records: Vec<Record> = Vec::new();
     for h in handles {
-        lat.merge(&h.join().expect("client thread")?);
+        let (l, r) = h.join().expect("client thread")?;
+        lat.merge(&l);
+        records.extend(r);
     }
     let wall = t0.elapsed();
-    let total = clients * per_client;
+
+    // Deterministic post-swap coverage: the closed-loop clients may
+    // race the swap, so drive the swapped model directly — these
+    // requests are submitted strictly after `swap_seeded` returned and
+    // MUST be served by v2, bit-exact under v2's weights.
+    {
+        let v2_expected = expected_for(&v2, &pools[0])?;
+        for (idx, img) in pools[0].iter().enumerate().take(4) {
+            let r = server.infer_on(v2.name(), img.clone())?;
+            let stamp = r.model.expect("stamped");
+            assert_eq!(
+                stamp.version,
+                v2.version(),
+                "post-swap request served by the old version"
+            );
+            assert_eq!(
+                r.logits, v2_expected[idx],
+                "post-swap response diverged from the new weights"
+            );
+        }
+    }
+
+    // verify every response against the exact (model, version) that
+    // served it
+    let expected = expected.lock().unwrap();
+    let mut by_version: HashMap<(usize, u64), usize> = HashMap::new();
+    for (mi, version, idx, logits) in &records {
+        let want = expected
+            .get(&(*mi, *version))
+            .unwrap_or_else(|| panic!("unexpected version {version} for model {mi}"));
+        assert_eq!(
+            logits, &want[*idx],
+            "model {mi} v{version} image {idx} diverged from refcompute"
+        );
+        *by_version.entry((*mi, *version)).or_insert(0) += 1;
+    }
+    assert_eq!(records.len(), total, "every request must be answered");
+    assert_eq!(server.failed(), 0, "no request may fail");
+    assert_eq!(server.rejected(), 0, "no request may be rejected");
     println!(
-        "served {total} requests in {:.2} s -> {:.1} img/s (all bit-exact vs refcompute)",
+        "served {total} mixed-model requests in {:.2} s -> {:.1} img/s \
+         (all bit-exact vs refcompute per model version: PASS)",
         wall.as_secs_f64(),
         domino::sim::stats::safe_rate(total as f64, wall.as_secs_f64())
     );
+    let mut split: Vec<_> = by_version.iter().collect();
+    split.sort();
+    for ((mi, version), count) in split {
+        println!("  {} v{version}: {count} responses", models[*mi].name());
+    }
     println!("latency: {}", lat.summary());
-    println!(
-        "server counters: served {}, rejected {}, failed {}",
-        server.served(),
-        server.rejected(),
-        server.failed()
-    );
     let counts = Arc::try_unwrap(server)
         .map_err(|_| anyhow::anyhow!("server still referenced"))?
         .shutdown()?;

@@ -82,16 +82,24 @@ COMMANDS:
   ablate                 dataflow (A1) + pooling (Fig. 4) ablations
   sweep [--models a,b]   mapping explorer across crossbar sizes
   golden [--images N]    check AOT golden model vs reference (needs artifacts)
-  serve [--backend pjrt|sim] [--model M] [--workers N] [--batch B]
-        [--requests R] [--queue Q] [--seed S]
+  serve [--backend pjrt|sim] [--model M | --models a,b,c] [--workers N]
+        [--batch B] [--requests R] [--queue Q] [--seed S]
+        [--swap M [--swap-after K]]
                          run the inference server: `pjrt` serves the AOT
                          artifact over the test set (needs artifacts);
-                         `sim` serves the cycle-accurate simulator and
-                         cross-checks every response vs refcompute
-  models                 list zoo models
+                         `sim` serves the cycle-accurate simulator —
+                         `--models` loads several models into one server
+                         and routes tagged requests, `--swap` hot-swaps
+                         a model (fresh weights) mid-traffic after K
+                         requests; every response is cross-checked vs
+                         refcompute for the exact model version that
+                         served it
+  models [list|info <m>] list zoo models (params/MACs/shapes), or show
+                         one model in detail
 
+Model names are case-insensitive; `_` and `-` are interchangeable.
 Models: vgg11-cifar10 resnet18-cifar10 vgg16-imagenet vgg19-imagenet
-        resnet18-imagenet tiny-cnn
+        resnet18-imagenet tiny-cnn tiny-mlp tiny-resnet
 ";
 
 #[cfg(test)]

@@ -24,8 +24,9 @@
 //!   the batched, thread-parallel `run_batch`, bit-exact with each
 //!   other), statistics, the layer-synchronized pipeline timing model,
 //!   and the COM dataflow trace (reproduces the paper's Fig. 3(b)).
-//!   Per-tile runtime state is built once per simulator and reset
-//!   between images.
+//!   Per-tile runtime state is built once per engine and reset between
+//!   images; `PooledEngine`/`EnginePool` keep one warm engine per
+//!   model for the serving and batch paths (no per-request spin-up).
 //! * [`energy`] — Table III component energy/area constants, event-based
 //!   energy accounting and technology/voltage/precision normalization.
 //! * [`perfmodel`] — closed-form layer-level performance model validated
@@ -42,7 +43,12 @@
 //!   with backpressure, worker pool, micro-batched dequeueing and
 //!   p50/p95/p99 accounting, with two interchangeable backends — the
 //!   AOT artifact over PJRT and the cycle-accurate simulator
-//!   (`Server::start_sim`, artifact-free, refcompute-checkable).
+//!   (`Server::start_sim`, artifact-free, refcompute-checkable). The
+//!   sim backend is multi-model: a versioned `ModelRegistry` routes
+//!   tagged requests, supports hot-swap/load/unload while serving
+//!   (in-flight requests drain on their version, never dropped), and
+//!   every response is stamped with the exact model version that
+//!   served it.
 //! * [`eval`] — experiment drivers for every table and figure.
 
 pub mod baselines;

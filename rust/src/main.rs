@@ -33,12 +33,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "sweep" => sweep(args),
         "golden" => golden(args),
         "serve" => serve(args),
-        "models" => {
-            for m in zoo::MODEL_NAMES {
-                println!("{m}");
-            }
-            Ok(())
-        }
+        "models" => models_cmd(args),
         "" | "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -95,8 +90,53 @@ fn net_arg(args: &Args) -> Result<domino::model::Network> {
         .cloned()
         .or(from_cfg)
         .unwrap_or_else(|| "tiny-cnn".to_string());
-    zoo::by_name(&name)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {name:?} (see `domino models`)"))
+    zoo::lookup(&name)
+}
+
+/// `domino models [list | info <model>]`.
+fn models_cmd(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        None | Some("list") => {
+            println!(
+                "{:<18} {:>12} {:>16} {:>12} {:>8}",
+                "model", "params", "macs", "input", "classes"
+            );
+            for name in zoo::MODEL_NAMES {
+                let net = zoo::lookup(name)?;
+                let input = net.input.to_string();
+                println!(
+                    "{:<18} {:>12} {:>16} {:>12} {:>8}",
+                    name,
+                    net.total_params()?,
+                    net.total_macs()?,
+                    input,
+                    net.output_shape()?.c
+                );
+            }
+            Ok(())
+        }
+        Some("info") => {
+            let name = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("usage: domino models info <model>"))?;
+            let net = zoo::lookup(name)?;
+            println!(
+                "{}: input {}, output {}, {} layers, {} params, {} MACs",
+                net.name,
+                net.input,
+                net.output_shape()?,
+                net.layers.len(),
+                net.total_params()?,
+                net.total_macs()?
+            );
+            for (i, shape) in net.shapes()?.iter().enumerate() {
+                println!("  layer {i:>2}: {shape}");
+            }
+            Ok(())
+        }
+        Some(other) => bail!("unknown models subcommand {other:?} (use `list` or `info <model>`)"),
+    }
 }
 
 fn map(args: &Args) -> Result<()> {
@@ -272,8 +312,7 @@ fn sweep(args: &Args) -> Result<()> {
         "model", "Nc=Nm", "tiles", "chips", "period cyc", "img/s"
     );
     for name in &models {
-        let net = zoo::by_name(name)
-            .ok_or_else(|| anyhow::anyhow!("unknown model {name:?}"))?;
+        let net = zoo::lookup(name)?;
         for n in [64usize, 128, 256, 512] {
             let mut arch = ArchConfig::default();
             arch.n_c = n;
@@ -302,54 +341,140 @@ fn serve(args: &Args) -> Result<()> {
     }
 }
 
-/// Serve the cycle-accurate simulator: compile the model once, share
-/// the program across workers, drive a closed request loop, and
-/// cross-check every response against the int8 reference.
+/// Serve the cycle-accurate simulator: load one or more models into a
+/// registry, route tagged requests through one server, optionally
+/// hot-swap a model mid-traffic, and cross-check every response
+/// against the int8 reference of the exact model version that served
+/// it.
 fn serve_sim(args: &Args) -> Result<()> {
-    use domino::model::refcompute::{forward, Tensor};
-    use domino::serve::{sim_program, LatencyStats, ServeConfig, Server};
-    let name = args.get("model").unwrap_or("tiny-cnn");
-    let net = zoo::by_name(name)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {name:?} (see `domino models`)"))?;
+    use domino::serve::{LatencyStats, ModelRegistry, ServeConfig, Server};
+    use std::sync::Arc;
+
+    let names: Vec<String> = match args.get("models") {
+        Some(list) => list
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(String::from)
+            .collect(),
+        None => vec![args.get("model").unwrap_or("tiny-cnn").to_string()],
+    };
+    anyhow::ensure!(!names.is_empty(), "--models needs at least one model name");
+    let arch = arch_from(args);
     let cfg = ServeConfig {
         workers: args.get_usize("workers", 2),
         max_batch: args.get_usize("batch", 8),
         queue_cap: args.get_usize("queue", 256),
     };
     let n = args.get_usize("requests", 64);
-    let (program, weights) = sim_program(&net, arch_from(args))?;
-    let est = domino::perfmodel::estimate(&program)?;
+
+    // Compile every model into the shared registry (registry key = the
+    // network's canonical name, so `--models tiny,TINY_MLP` works).
+    let registry = Arc::new(ModelRegistry::new());
+    let mut models = Vec::new();
+    for raw in &names {
+        let net = zoo::lookup(raw)?;
+        models.push(registry.load(&net.name, &net, arch)?);
+    }
     println!(
-        "serving {n} requests of {name} on the cycle simulator \
-         ({} workers, micro-batch {}, {} tiles)",
-        cfg.workers, cfg.max_batch, program.total_tiles
+        "serving {n} requests across {} model(s) on the cycle simulator \
+         ({} workers, micro-batch {})",
+        models.len(),
+        cfg.workers,
+        cfg.max_batch
     );
+    for mv in &models {
+        let est = domino::perfmodel::estimate(mv.program())?;
+        println!(
+            "  {} v{}: {} tiles, modeled {:.0} img/s (pipeline period {} cycles)",
+            mv.name(),
+            mv.version(),
+            mv.program().total_tiles,
+            est.images_per_s(),
+            est.period_cycles
+        );
+    }
 
-    // a small pool of distinct images with precomputed references
+    // Per model: a small pool of distinct images with precomputed
+    // refcompute references (recomputed when the model is swapped).
     let mut rng = Rng::new(args.get_u64("seed", 42));
-    let pool: Vec<Vec<i8>> = (0..16.min(n.max(1)))
-        .map(|_| rng.i8_vec(net.input_len(), 31))
-        .collect();
-    let expected: Vec<Vec<i8>> = pool
-        .iter()
-        .map(|img| {
-            forward(&net, &weights, &Tensor::new(net.input, img.clone()))
-                .map(|t| t.data)
-        })
-        .collect::<Result<_, _>>()?;
+    let pool_sz = 16.min(n.max(1));
+    let expected_of = |mv: &domino::serve::ModelVersion,
+                       images: &[Vec<i8>]|
+     -> Result<Vec<Vec<i8>>> {
+        images.iter().map(|img| mv.refcompute(img)).collect()
+    };
+    let mut pools: Vec<Vec<Vec<i8>>> = Vec::new();
+    let mut expected: Vec<Vec<Vec<i8>>> = Vec::new();
+    for mv in &models {
+        let images: Vec<Vec<i8>> = (0..pool_sz)
+            .map(|_| rng.i8_vec(mv.input_len(), 31))
+            .collect();
+        expected.push(expected_of(mv, &images)?);
+        pools.push(images);
+    }
 
-    let server = Server::start_sim(cfg, program)?;
+    // Optional admin op: hot-swap a model (fresh weights) mid-traffic.
+    // Validated up front so a typo'd name or an out-of-range
+    // `--swap-after` fails loudly instead of silently never swapping.
+    let swap_name: Option<String> = args
+        .get("swap")
+        .map(|s| zoo::lookup(s).map(|net| net.name))
+        .transpose()?;
+    let swap_after = args.get_usize("swap-after", n / 2);
+    if let Some(sn) = &swap_name {
+        anyhow::ensure!(
+            models.iter().any(|m| m.name() == sn.as_str()),
+            "--swap {sn:?} is not among the served models"
+        );
+        anyhow::ensure!(
+            swap_after < n,
+            "--swap-after {swap_after} is past the last request (--requests {n})"
+        );
+    }
+
+    let server = Server::start_multi(cfg, Arc::clone(&registry))?;
     let t0 = std::time::Instant::now();
     let mut lat = LatencyStats::default();
+    let mut served_per_model = vec![0u64; models.len()];
     for i in 0..n {
-        let idx = i % pool.len();
+        if let Some(sn) = &swap_name {
+            if i == swap_after {
+                let mi = models
+                    .iter()
+                    .position(|m| m.name() == sn.as_str())
+                    .expect("swap target validated before the loop");
+                let net = zoo::lookup(sn)?;
+                let new_mv =
+                    registry.swap_seeded(sn, &net, arch, Some(0xD0_31_10 ^ (i as u64 + 1)))?;
+                println!(
+                    "hot-swapped {} -> v{} after {i} requests (new weights; traffic uninterrupted)",
+                    sn,
+                    new_mv.version()
+                );
+                expected[mi] = expected_of(&new_mv, &pools[mi])?;
+                models[mi] = new_mv;
+            }
+        }
+        let mi = i % models.len();
+        let idx = (i / models.len()) % pools[mi].len();
         let t = std::time::Instant::now();
-        let r = server.infer(pool[idx].clone())?;
+        let r = server.infer_on(models[mi].name(), pools[mi][idx].clone())?;
         lat.record(t.elapsed());
+        let stamp = r.model.as_ref().expect("sim responses carry a stamp");
         anyhow::ensure!(
-            r.logits == expected[idx],
-            "response for image {idx} diverged from refcompute"
+            stamp.id == models[mi].id(),
+            "request for {} answered by {} v{} (routing bug)",
+            models[mi].name(),
+            stamp.name,
+            stamp.version
         );
+        anyhow::ensure!(
+            r.logits == expected[mi][idx],
+            "response for {} image {idx} diverged from refcompute",
+            models[mi].name()
+        );
+        served_per_model[mi] += 1;
     }
     let wall = t0.elapsed();
     println!(
@@ -359,11 +484,15 @@ fn serve_sim(args: &Args) -> Result<()> {
         domino::sim::stats::safe_rate(n as f64, wall.as_secs_f64()),
         lat.summary()
     );
+    for (mv, count) in models.iter().zip(&served_per_model) {
+        println!("  {} v{}: {count} responses", mv.name(), mv.version());
+    }
     println!(
-        "all responses bit-exact vs refcompute; modeled hardware rate {:.0} img/s \
-         (pipeline period {} cycles)",
-        est.images_per_s(),
-        est.period_cycles
+        "all responses bit-exact vs refcompute for the model version that served them \
+         (served {}, rejected {}, failed {})",
+        server.served(),
+        server.rejected(),
+        server.failed()
     );
     server.shutdown()?;
     Ok(())

@@ -170,6 +170,32 @@ pub fn tiny_cnn() -> Network {
         .build()
 }
 
+/// A small MLP (flatten + two FC layers), sized so a full cycle
+/// simulation finishes in microseconds. One of the fast trio used to
+/// exercise multi-model serving (its 8-class output is deliberately
+/// distinct from `tiny_cnn`'s 10 and `tiny_resnet`'s 6, so a
+/// cross-model misroute cannot even be shape-correct).
+pub fn tiny_mlp() -> Network {
+    NetworkBuilder::new("tiny-mlp", TensorShape::new(24, 1, 1))
+        .fc(16)
+        .fc_logits(8)
+        .build()
+}
+
+/// A minimal residual network (conv, linear conv, identity skip,
+/// pooling, FC) for fast multi-model serving tests: every response can
+/// be refcompute-checked in well under a millisecond.
+pub fn tiny_resnet() -> Network {
+    NetworkBuilder::new("tiny-resnet", TensorShape::new(4, 8, 8))
+        .conv(8, 3, 1, 1)
+        .conv_linear(8, 3, 1, 1)
+        .res_add(0)
+        .avg_pool(2, 2)
+        .flatten()
+        .fc_logits(6)
+        .build()
+}
+
 /// The Table IV workload set: (network, dataset label, counterpart keys).
 pub fn table4_workloads() -> Vec<(Network, &'static str)> {
     vec![
@@ -180,17 +206,34 @@ pub fn table4_workloads() -> Vec<(Network, &'static str)> {
     ]
 }
 
-/// All zoo constructors by name (CLI access).
+/// All zoo constructors by name (CLI access). Lookup is
+/// case-insensitive and treats `_` and `-` as the same separator, so
+/// `TINY_CNN` and `tiny-cnn` both resolve.
 pub fn by_name(name: &str) -> Option<Network> {
-    match name {
+    let key = name.trim().to_ascii_lowercase().replace('_', "-");
+    match key.as_str() {
         "vgg11" | "vgg11-cifar10" => Some(vgg11_cifar()),
         "vgg16" | "vgg16-imagenet" => Some(vgg16_imagenet()),
         "vgg19" | "vgg19-imagenet" => Some(vgg19_imagenet()),
         "resnet18" | "resnet18-cifar10" => Some(resnet18_cifar()),
         "resnet18-imagenet" => Some(resnet18_imagenet()),
         "tiny" | "tiny-cnn" => Some(tiny_cnn()),
+        "tiny-mlp" => Some(tiny_mlp()),
+        "tiny-resnet" => Some(tiny_resnet()),
         _ => None,
     }
+}
+
+/// [`by_name`], with an error that lists every valid name. CLI and
+/// serving paths should prefer this over unwrapping the `Option` so a
+/// typo tells the user what *is* available.
+pub fn lookup(name: &str) -> anyhow::Result<Network> {
+    by_name(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown model {name:?}; available models: {}",
+            MODEL_NAMES.join(", ")
+        )
+    })
 }
 
 /// Names accepted by [`by_name`].
@@ -201,6 +244,8 @@ pub const MODEL_NAMES: &[&str] = &[
     "vgg19-imagenet",
     "resnet18-imagenet",
     "tiny-cnn",
+    "tiny-mlp",
+    "tiny-resnet",
 ];
 
 #[cfg(test)]
@@ -298,5 +343,40 @@ mod tests {
     #[test]
     fn by_name_rejects_unknown() {
         assert!(by_name("alexnet").is_none());
+    }
+
+    #[test]
+    fn by_name_is_case_and_separator_insensitive() {
+        for alias in ["TINY-CNN", "Tiny_Cnn", "  tiny-cnn  ", "TiNy"] {
+            assert_eq!(by_name(alias).unwrap().name, "tiny-cnn", "{alias:?}");
+        }
+        assert_eq!(by_name("RESNET18_CIFAR10").unwrap().name, "resnet18-cifar10");
+    }
+
+    #[test]
+    fn lookup_error_lists_available_models() {
+        let err = lookup("alexnet").unwrap_err().to_string();
+        for name in MODEL_NAMES {
+            assert!(err.contains(name), "error {err:?} should list {name}");
+        }
+        assert_eq!(lookup("tiny-mlp").unwrap().name, "tiny-mlp");
+    }
+
+    #[test]
+    fn fast_trio_has_distinct_shapes() {
+        // The multi-model serving tests rely on the three fast models
+        // disagreeing on both input and output geometry.
+        let trio = [tiny_cnn(), tiny_mlp(), tiny_resnet()];
+        for net in &trio {
+            net.shapes().unwrap();
+            assert!(net.total_macs().unwrap() < 10_000_000, "{}", net.name);
+        }
+        let ins: Vec<usize> = trio.iter().map(|n| n.input_len()).collect();
+        let outs: Vec<usize> = trio
+            .iter()
+            .map(|n| n.output_shape().unwrap().c)
+            .collect();
+        assert_eq!(outs, vec![10, 8, 6]);
+        assert!(ins[0] != ins[1] && ins[1] != ins[2] && ins[0] != ins[2]);
     }
 }

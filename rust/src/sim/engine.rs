@@ -20,14 +20,24 @@
 //! tested here, property-tested in `rust/tests/`), and every
 //! architectural event is charged into [`Counters`].
 //!
-//! ## Runtime state & the batched path
+//! ## Runtime state, pooling & the batched path
 //!
-//! All per-tile runtime state (the borrowed PE weight mounts, RIFM and
-//! ROFM instances, the ROFM group-sum FIFOs and the psum register
-//! queues) is built **once per [`Simulator`]** from the compiled
-//! program and *reset* between images — `run_image` allocates no tile
-//! state, which is what makes back-to-back and batched simulation
-//! cheap.
+//! All per-tile runtime state (RIFM and ROFM instances, the ROFM
+//! group-sum FIFOs and the psum register queues) is built **once per
+//! engine** from the compiled program and *reset* between images —
+//! `run_image` allocates no tile state, which is what makes
+//! back-to-back and batched simulation cheap. The state owns no borrow
+//! of the program (PE weight blocks are mounted on the fly, a
+//! zero-alloc `Cow::Borrowed`, exactly like the FC path), so the same
+//! engine core can sit behind a borrow ([`Simulator`]) or share
+//! ownership of its program ([`PooledEngine`]) and live as long as the
+//! process does.
+//!
+//! [`EnginePool`] caches one [`PooledEngine`] per model key; the serve
+//! workers key it by registry version id so a multi-model server keeps
+//! one warm engine per loaded model per worker thread, and
+//! [`Simulator::run_batch_threads`] keeps its per-thread worker engines
+//! alive across batch calls instead of spinning state up per batch.
 //!
 //! [`Simulator::run_batch`] data-parallelizes a batch of images across
 //! OS threads (each thread owns an independent engine over the same
@@ -46,7 +56,8 @@
 //! times arise) is derived from the same per-stage periods and
 //! validated against these counts.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -130,13 +141,14 @@ impl BatchOutput {
     }
 }
 
-/// Per-tile runtime state, built once per [`Simulator`] and reset
-/// between images. The PE mounts the compiled tile's stationary weight
-/// block by reference (no per-image copy); the ROFM owns its compiled
-/// schedule (cloned once, at construction — not per image as the
-/// pre-batching engine did).
-struct TileRt<'p> {
-    pe: Pe<'p>,
+/// Per-tile runtime state, built once per engine and reset between
+/// images. Owns no borrow of the program: the PE weight block is
+/// mounted on the fly each MVM (a zero-alloc `Cow::Borrowed`, same as
+/// the FC path), which is what lets an engine be pooled behind an
+/// `Arc<Program>` and reused across images, batches and server
+/// workers. The ROFM owns its compiled schedule (cloned once, at
+/// construction — not per image as the pre-batching engine did).
+struct TileRt {
     rifm: Rifm,
     rofm: Rofm,
     /// Register-path psums from the previous chain tile.
@@ -146,10 +158,9 @@ struct TileRt<'p> {
     xbuf: Vec<i8>,
 }
 
-impl<'p> TileRt<'p> {
-    fn new(t: &'p ConvTile) -> Self {
+impl TileRt {
+    fn new(t: &ConvTile) -> Self {
         Self {
-            pe: Pe::borrowed(&t.weights, t.rows, t.cols),
             rifm: Rifm::new_with_config(t.rifm),
             rofm: Rofm::new(t.schedule.clone()),
             incoming: VecDeque::new(),
@@ -169,16 +180,16 @@ impl<'p> TileRt<'p> {
 }
 
 /// Runtime state of one conv chain.
-struct ChainRt<'p> {
-    tiles: Vec<TileRt<'p>>,
+struct ChainRt {
+    tiles: Vec<TileRt>,
 }
 
 /// Build the per-stage runtime state for a program: one `ChainRt` per
 /// conv chain (residual projections included), empty for tile-less
 /// stages. FC stages mount their PEs on the fly (a zero-alloc borrow)
 /// and keep no router state in the engine, so they need no slot here.
-fn build_state(program: &Program) -> Vec<Vec<ChainRt<'_>>> {
-    fn conv_state(c: &ConvStage) -> Vec<ChainRt<'_>> {
+fn build_state(program: &Program) -> Vec<Vec<ChainRt>> {
+    fn conv_state(c: &ConvStage) -> Vec<ChainRt> {
         c.chains
             .iter()
             .map(|chain| ChainRt {
@@ -197,25 +208,26 @@ fn build_state(program: &Program) -> Vec<Vec<ChainRt<'_>>> {
         .collect()
 }
 
-/// The simulator. Holds the per-tile runtime state for its program and
-/// aggregate statistics across all images run.
-pub struct Simulator<'p> {
-    program: &'p Program,
+/// The owned runtime core of a cycle engine: per-tile state plus
+/// aggregate statistics. Borrows nothing from the program — every run
+/// method takes the program as a parameter — so one core can sit
+/// behind a borrow ([`Simulator`]) or behind shared ownership
+/// ([`PooledEngine`]) and stay alive across batches and requests.
+struct EngineCore {
     /// Per-stage tile runtime state (indexed by stage; a `Res` stage's
     /// slot holds its projection's chains).
-    state: Vec<Vec<ChainRt<'p>>>,
+    state: Vec<Vec<ChainRt>>,
     stats: Counters,
     stage_stats: Vec<Counters>,
     /// When set, tile actions are recorded (tests/trace tooling).
-    pub record_actions: bool,
-    pub actions: Vec<Action>,
+    record_actions: bool,
+    actions: Vec<Action>,
 }
 
-impl<'p> Simulator<'p> {
-    pub fn new(program: &'p Program) -> Self {
+impl EngineCore {
+    fn new(program: &Program) -> Self {
         let n = program.stages.len();
         Self {
-            program,
             state: build_state(program),
             stats: Counters::new(),
             stage_stats: vec![Counters::new(); n],
@@ -224,52 +236,46 @@ impl<'p> Simulator<'p> {
         }
     }
 
-    pub fn with_action_recording(program: &'p Program) -> Self {
-        let mut s = Self::new(program);
-        s.record_actions = true;
-        s
+    /// Zero the aggregate counters. Tile state needs no reset here — it
+    /// is restored at the start of every image (and after errors).
+    fn reset_stats(&mut self) {
+        self.stats = Counters::new();
+        for s in &mut self.stage_stats {
+            *s = Counters::new();
+        }
     }
 
-    /// Aggregate counters across all images simulated so far.
-    pub fn stats(&self) -> &Counters {
-        &self.stats
-    }
-
-    /// Per-stage counters.
-    pub fn stage_stats(&self) -> &[Counters] {
-        &self.stage_stats
-    }
-
-    /// Simulate one inference.
-    pub fn run_image(&mut self, input: &[i8]) -> Result<RunOutput> {
-        if input.len() != self.program.net.input_len() {
+    /// Simulate one inference on `program` (the program this core was
+    /// built for; stage shapes are asserted).
+    fn run_image(&mut self, program: &Program, input: &[i8]) -> Result<RunOutput> {
+        if input.len() != program.net.input_len() {
             bail!(
                 "input length {} != network input {}",
                 input.len(),
-                self.program.net.input_len()
+                program.net.input_len()
             );
         }
-        let mut cur = Tensor::new(self.program.net.input, input.to_vec());
-        let mut stage_outputs: Vec<Tensor> = Vec::with_capacity(self.program.stages.len());
-        let mut stage_slots: Vec<u64> = Vec::with_capacity(self.program.stages.len());
+        let mut cur = Tensor::new(program.net.input, input.to_vec());
+        let mut stage_outputs: Vec<Tensor> = Vec::with_capacity(program.stages.len());
+        let mut stage_slots: Vec<u64> = Vec::with_capacity(program.stages.len());
         let mut total_cycles: u64 = 0;
 
         // Network input enters / final output leaves the package.
         self.stats.offchip_io_bits += 8 * input.len() as u64;
 
-        let program = self.program;
         let mut prev_exit_chip: Option<usize> = None;
         for (si, stage) in program.stages.iter().enumerate() {
             let mut st = Counters::new();
             let (out, slots) = match &stage.kind {
-                StageKind::Conv(c) => self.run_conv_stage(si, c, &cur, &mut st)?,
-                StageKind::Fc(f) => self.run_fc_stage(f, &cur, &mut st)?,
+                StageKind::Conv(c) => self.run_conv_stage(program, si, c, &cur, &mut st)?,
+                StageKind::Fc(f) => self.run_fc_stage(program, f, &cur, &mut st)?,
                 StageKind::Pool(p) => run_pool_stage(p, &cur, &mut st)?,
                 StageKind::Res(r) => {
                     let skip_src = &stage_outputs[r.from_stage];
                     let skip = match &r.proj {
                         Some(pstage) => {
-                            let (t, s2) = self.run_conv_stage(si, pstage, skip_src, &mut st)?;
+                            let (t, s2) =
+                                self.run_conv_stage(program, si, pstage, skip_src, &mut st)?;
                             total_cycles += s2 * CYCLES_PER_SLOT as u64;
                             t
                         }
@@ -314,152 +320,10 @@ impl<'p> Simulator<'p> {
         })
     }
 
-    /// Simulate a batch of images, data-parallel across up to
-    /// `available_parallelism` threads. See [`Self::run_batch_threads`].
-    pub fn run_batch<T: AsRef<[i8]> + Sync>(&mut self, inputs: &[T]) -> Result<BatchOutput> {
-        let threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
-        self.run_batch_threads(inputs, threads)
-    }
-
-    /// Simulate a batch of images with at most `threads` worker
-    /// threads.
-    ///
-    /// Each worker owns an independent engine over the same shared
-    /// program and simulates a contiguous chunk of the batch; per-image
-    /// outputs come back in input order and are **bit-exact** with
-    /// sequential [`Self::run_image`] calls. The per-thread
-    /// [`Counters`] are merged (in chunk order, deterministically) into
-    /// this simulator's aggregate stats, so `stats()` after a batch
-    /// equals `stats()` after the same images run sequentially.
-    ///
-    /// The returned [`BatchOutput::pipeline`] carries the
-    /// layer-synchronized steady-state timing of the batch; the
-    /// measured per-stage busy slots and the measured steady-state
-    /// period are asserted against the analytic `perfmodel` (an error
-    /// here means the engine and the throughput model diverged, which
-    /// Table IV numbers must never silently survive).
-    ///
-    /// When `record_actions` is set the batch falls back to one thread
-    /// so the action log stays in deterministic image order.
-    pub fn run_batch_threads<T: AsRef<[i8]> + Sync>(
-        &mut self,
-        inputs: &[T],
-        threads: usize,
-    ) -> Result<BatchOutput> {
-        if inputs.is_empty() {
-            bail!("run_batch needs at least one image");
-        }
-        let mut threads = threads.clamp(1, inputs.len());
-        if self.record_actions {
-            threads = 1;
-        }
-        let t0 = Instant::now();
-        let program = self.program;
-        let chunk_size = inputs.len().div_ceil(threads);
-        // With contiguous chunking the spawned-worker count is the
-        // chunk count, which can be below the requested thread count
-        // (5 images / 4 threads -> 3 chunks of 2). Report what runs.
-        let threads = inputs.len().div_ceil(chunk_size);
-
-        let mut outputs: Vec<RunOutput> = Vec::with_capacity(inputs.len());
-        if threads == 1 {
-            // Run on *this* engine (keeps action recording coherent).
-            for input in inputs {
-                outputs.push(self.run_image(input.as_ref())?);
-            }
-        } else {
-            type WorkerOut = (Vec<RunOutput>, Counters, Vec<Counters>);
-            let joined: Vec<std::thread::Result<Result<WorkerOut>>> =
-                std::thread::scope(|s| {
-                    let handles: Vec<_> = inputs
-                        .chunks(chunk_size)
-                        .map(|chunk| {
-                            s.spawn(move || -> Result<WorkerOut> {
-                                let mut sim = Simulator::new(program);
-                                let mut outs = Vec::with_capacity(chunk.len());
-                                for input in chunk {
-                                    outs.push(sim.run_image(input.as_ref())?);
-                                }
-                                Ok((outs, sim.stats, sim.stage_stats))
-                            })
-                        })
-                        .collect();
-                    handles.into_iter().map(|h| h.join()).collect()
-                });
-            // Merge per-thread results in chunk order (deterministic).
-            for res in joined {
-                let (outs, stats, stage_stats) = res
-                    .map_err(|_| anyhow::anyhow!("batch worker thread panicked"))??;
-                outputs.extend(outs);
-                self.stats.merge(&stats);
-                for (agg, st) in self.stage_stats.iter_mut().zip(&stage_stats) {
-                    agg.merge(st);
-                }
-            }
-        }
-        let wall = t0.elapsed();
-
-        let pipeline = self.pipeline_report(&outputs)?;
-        Ok(BatchOutput {
-            outputs,
-            threads,
-            wall,
-            pipeline,
-        })
-    }
-
-    /// Pipelined steady-state timing for a set of simulated images:
-    /// checks the measured per-stage busy slots against the analytic
-    /// model, runs the layer-synchronized pipeline simulation, and
-    /// asserts its measured steady-state period equals the analytic
-    /// period (the quantity Table IV throughput is derived from).
-    fn pipeline_report(&self, outputs: &[RunOutput]) -> Result<PipelineRun> {
-        let est = crate::perfmodel::estimate(self.program)
-            .context("analytic estimate for pipeline report")?;
-        // Measured busy slots are input-independent: check image 0.
-        // (`Res` stages book their projection conv separately from
-        // their own slot count, so they are compared via total latency
-        // instead — which covers every stage including projections.)
-        if let Some(out) = outputs.first() {
-            for (si, stage) in self.program.stages.iter().enumerate() {
-                if matches!(stage.kind, StageKind::Res(_)) {
-                    continue;
-                }
-                let measured = out.stage_slots[si];
-                let analytic = est.stages[si].slots;
-                if measured != analytic {
-                    bail!(
-                        "stage {si} ({}): measured {measured} busy slots != analytic {analytic} \
-                         (engine/perfmodel divergence)",
-                        stage.name
-                    );
-                }
-            }
-            if out.latency_cycles != est.latency_cycles {
-                bail!(
-                    "measured latency {} cycles != analytic {} (engine/perfmodel divergence)",
-                    out.latency_cycles,
-                    est.latency_cycles
-                );
-            }
-        }
-        let run = run_pipelined(self.program, &est, outputs.len().max(1))?;
-        if run.steady_period_cycles != est.period_cycles {
-            bail!(
-                "measured steady-state period {} cycles != analytic {} \
-                 (pipeline/perfmodel divergence)",
-                run.steady_period_cycles,
-                est.period_cycles
-            );
-        }
-        Ok(run)
-    }
-
     /// Simulate one conv stage (also used for 1x1 residual projections).
     fn run_conv_stage(
         &mut self,
+        program: &Program,
         si: usize,
         c: &ConvStage,
         input: &Tensor,
@@ -482,15 +346,17 @@ impl<'p> Simulator<'p> {
         }
         let mut pooled = Tensor::zeros(pool_out_shape);
 
-        // Mount this stage's persistent tile state (built once in
-        // `Simulator::new`, reset per image inside). Taken out of
+        // Mount this stage's persistent tile state (built once when the
+        // engine was constructed, reset per image inside). Taken out of
         // `self` for the duration of the stage so the recorder can
         // still borrow `self` mutably; restored before any error
         // propagates so a caught simulation error cannot leave the
         // stage with silently-empty state.
         let mut chains_rt = std::mem::take(&mut self.state[si]);
         assert_eq!(chains_rt.len(), c.chains.len(), "stage state shape");
-        let result = self.run_conv_chains(si, c, &g, input, st, &mut chains_rt, &mut conv_out, &mut pooled);
+        let result = self.run_conv_chains(
+            program, si, c, &g, input, st, &mut chains_rt, &mut conv_out, &mut pooled,
+        );
         self.state[si] = chains_rt;
         result?;
 
@@ -514,12 +380,13 @@ impl<'p> Simulator<'p> {
     #[allow(clippy::too_many_arguments)]
     fn run_conv_chains(
         &mut self,
+        program: &Program,
         si: usize,
         c: &ConvStage,
         g: &ConvGeometry,
         input: &Tensor,
         st: &mut Counters,
-        chains_rt: &mut [ChainRt<'p>],
+        chains_rt: &mut [ChainRt],
         conv_out: &mut Tensor,
         pooled: &mut Tensor,
     ) -> Result<()> {
@@ -587,7 +454,7 @@ impl<'p> Simulator<'p> {
                         pr as isize - c.padding as isize,
                         u as isize - c.padding as isize,
                     );
-                    let c_lo = cfg.cb * self.program.arch.n_c;
+                    let c_lo = cfg.cb * program.arch.n_c;
 
                     // ---- validity: does this slot contribute?
                     let (Some(oy), Some(ox)) = (g.out_row(pr, cfg.kr), g.out_col(u, cfg.kc))
@@ -605,7 +472,10 @@ impl<'p> Simulator<'p> {
                     rt.xbuf.extend(
                         (0..cfg.rows).map(|dc| input.at_padded(c_lo + dc, py, px)),
                     );
-                    let mac = rt.pe.mvm(&rt.xbuf, st);
+                    // Stationary weight block mounted per MVM (zero-alloc
+                    // borrow, like the FC path) so the runtime state owns
+                    // no program borrow and the engine can be pooled.
+                    let mac = Pe::borrowed(&cfg.weights, cfg.rows, cfg.cols).mvm(&rt.xbuf, st);
                     let opos = (oy, ox);
 
                     // ---- psum accumulation (COM)
@@ -705,6 +575,7 @@ impl<'p> Simulator<'p> {
     /// activates and emits its output slice.
     fn run_fc_stage(
         &mut self,
+        program: &Program,
         f: &FcStage,
         input: &Tensor,
         st: &mut Counters,
@@ -722,7 +593,7 @@ impl<'p> Simulator<'p> {
             let mut acc: Option<PsumPacket> = None;
             for (rb, t) in col.tiles.iter().enumerate() {
                 // slice of the input vector this tile multiplies
-                let i_lo = rb * self.program.arch.n_c;
+                let i_lo = rb * program.arch.n_c;
                 let x: Vec<i8> = (0..t.rows).map(|d| input.data[i_lo + d]).collect();
                 // RIFM receives the slice (one beat write; the PE-feed
                 // read is the CIM wordline activation, charged in j/MAC)
@@ -781,6 +652,304 @@ impl<'p> Simulator<'p> {
                 kind,
             });
         }
+    }
+}
+
+/// The simulator: a cycle engine borrowing its compiled program. Holds
+/// the per-tile runtime state and aggregate statistics across all
+/// images run, plus a pool of per-thread worker engines that
+/// [`Self::run_batch_threads`] builds once and reuses across batch
+/// calls (no per-batch state spin-up).
+pub struct Simulator<'p> {
+    program: &'p Program,
+    core: EngineCore,
+    /// Reusable worker engines for the batched path: grown on first
+    /// use, counters reset and tile state reused on every subsequent
+    /// batch.
+    batch_workers: Vec<EngineCore>,
+}
+
+impl<'p> Simulator<'p> {
+    pub fn new(program: &'p Program) -> Self {
+        Self {
+            program,
+            core: EngineCore::new(program),
+            batch_workers: Vec::new(),
+        }
+    }
+
+    pub fn with_action_recording(program: &'p Program) -> Self {
+        let mut s = Self::new(program);
+        s.core.record_actions = true;
+        s
+    }
+
+    /// Aggregate counters across all images simulated so far.
+    pub fn stats(&self) -> &Counters {
+        &self.core.stats
+    }
+
+    /// Per-stage counters.
+    pub fn stage_stats(&self) -> &[Counters] {
+        &self.core.stage_stats
+    }
+
+    /// Recorded tile actions (populated only with action recording on,
+    /// see [`Self::with_action_recording`]).
+    pub fn actions(&self) -> &[Action] {
+        &self.core.actions
+    }
+
+    /// Simulate one inference.
+    pub fn run_image(&mut self, input: &[i8]) -> Result<RunOutput> {
+        self.core.run_image(self.program, input)
+    }
+
+    /// Simulate a batch of images, data-parallel across up to
+    /// `available_parallelism` threads. See [`Self::run_batch_threads`].
+    pub fn run_batch<T: AsRef<[i8]> + Sync>(&mut self, inputs: &[T]) -> Result<BatchOutput> {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        self.run_batch_threads(inputs, threads)
+    }
+
+    /// Simulate a batch of images with at most `threads` worker
+    /// threads.
+    ///
+    /// Each worker owns a persistent engine over the same shared
+    /// program — built the first time a batch needs it, kept on this
+    /// simulator and reused (counters reset) by every later batch —
+    /// and simulates a contiguous chunk of the batch; per-image
+    /// outputs come back in input order and are **bit-exact** with
+    /// sequential [`Self::run_image`] calls. The per-thread
+    /// [`Counters`] are merged (in chunk order, deterministically) into
+    /// this simulator's aggregate stats, so `stats()` after a batch
+    /// equals `stats()` after the same images run sequentially.
+    ///
+    /// The returned [`BatchOutput::pipeline`] carries the
+    /// layer-synchronized steady-state timing of the batch; the
+    /// measured per-stage busy slots and the measured steady-state
+    /// period are asserted against the analytic `perfmodel` (an error
+    /// here means the engine and the throughput model diverged, which
+    /// Table IV numbers must never silently survive).
+    ///
+    /// When `record_actions` is set the batch falls back to one thread
+    /// so the action log stays in deterministic image order.
+    pub fn run_batch_threads<T: AsRef<[i8]> + Sync>(
+        &mut self,
+        inputs: &[T],
+        threads: usize,
+    ) -> Result<BatchOutput> {
+        if inputs.is_empty() {
+            bail!("run_batch needs at least one image");
+        }
+        let mut threads = threads.clamp(1, inputs.len());
+        if self.core.record_actions {
+            threads = 1;
+        }
+        let t0 = Instant::now();
+        let program = self.program;
+        let chunk_size = inputs.len().div_ceil(threads);
+        // With contiguous chunking the spawned-worker count is the
+        // chunk count, which can be below the requested thread count
+        // (5 images / 4 threads -> 3 chunks of 2). Report what runs.
+        let threads = inputs.len().div_ceil(chunk_size);
+
+        let mut outputs: Vec<RunOutput> = Vec::with_capacity(inputs.len());
+        if threads == 1 {
+            // Run on *this* engine (keeps action recording coherent).
+            for input in inputs {
+                outputs.push(self.core.run_image(program, input.as_ref())?);
+            }
+        } else {
+            // Grow the persistent worker-engine pool to the spawned
+            // worker count, then lend one engine to each scoped thread.
+            while self.batch_workers.len() < threads {
+                self.batch_workers.push(EngineCore::new(program));
+            }
+            let workers = &mut self.batch_workers[..threads];
+            for w in workers.iter_mut() {
+                w.reset_stats();
+            }
+            let joined: Vec<std::thread::Result<Result<Vec<RunOutput>>>> =
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = inputs
+                        .chunks(chunk_size)
+                        .zip(workers.iter_mut())
+                        .map(|(chunk, core)| {
+                            s.spawn(move || -> Result<Vec<RunOutput>> {
+                                let mut outs = Vec::with_capacity(chunk.len());
+                                for input in chunk {
+                                    outs.push(core.run_image(program, input.as_ref())?);
+                                }
+                                Ok(outs)
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join()).collect()
+                });
+            for res in joined {
+                let outs =
+                    res.map_err(|_| anyhow::anyhow!("batch worker thread panicked"))??;
+                outputs.extend(outs);
+            }
+            // Merge per-worker counters in chunk order (deterministic).
+            // Reached only when every chunk succeeded, so a failed
+            // batch never pollutes the aggregate stats (worker counters
+            // are reset at the top of the next batch either way).
+            for w in &self.batch_workers[..threads] {
+                self.core.stats.merge(&w.stats);
+                for (agg, st) in self.core.stage_stats.iter_mut().zip(&w.stage_stats) {
+                    agg.merge(st);
+                }
+            }
+        }
+        let wall = t0.elapsed();
+
+        let pipeline = self.pipeline_report(&outputs)?;
+        Ok(BatchOutput {
+            outputs,
+            threads,
+            wall,
+            pipeline,
+        })
+    }
+
+    /// Pipelined steady-state timing for a set of simulated images:
+    /// checks the measured per-stage busy slots against the analytic
+    /// model, runs the layer-synchronized pipeline simulation, and
+    /// asserts its measured steady-state period equals the analytic
+    /// period (the quantity Table IV throughput is derived from).
+    fn pipeline_report(&self, outputs: &[RunOutput]) -> Result<PipelineRun> {
+        let est = crate::perfmodel::estimate(self.program)
+            .context("analytic estimate for pipeline report")?;
+        // Measured busy slots are input-independent: check image 0.
+        // (`Res` stages book their projection conv separately from
+        // their own slot count, so they are compared via total latency
+        // instead — which covers every stage including projections.)
+        if let Some(out) = outputs.first() {
+            for (si, stage) in self.program.stages.iter().enumerate() {
+                if matches!(stage.kind, StageKind::Res(_)) {
+                    continue;
+                }
+                let measured = out.stage_slots[si];
+                let analytic = est.stages[si].slots;
+                if measured != analytic {
+                    bail!(
+                        "stage {si} ({}): measured {measured} busy slots != analytic {analytic} \
+                         (engine/perfmodel divergence)",
+                        stage.name
+                    );
+                }
+            }
+            if out.latency_cycles != est.latency_cycles {
+                bail!(
+                    "measured latency {} cycles != analytic {} (engine/perfmodel divergence)",
+                    out.latency_cycles,
+                    est.latency_cycles
+                );
+            }
+        }
+        let run = run_pipelined(self.program, &est, outputs.len().max(1))?;
+        if run.steady_period_cycles != est.period_cycles {
+            bail!(
+                "measured steady-state period {} cycles != analytic {} \
+                 (pipeline/perfmodel divergence)",
+                run.steady_period_cycles,
+                est.period_cycles
+            );
+        }
+        Ok(run)
+    }
+}
+
+/// A cycle engine that shares ownership of its compiled program, for
+/// long-lived reuse: built once, kept in an [`EnginePool`], reset
+/// between uses. Runs are bit-exact with a fresh [`Simulator`] over
+/// the same program (property-tested in
+/// `rust/tests/batch_properties.rs`).
+pub struct PooledEngine {
+    program: Arc<Program>,
+    core: EngineCore,
+}
+
+impl PooledEngine {
+    /// Build the per-tile runtime state once for `program`.
+    pub fn new(program: Arc<Program>) -> Self {
+        let core = EngineCore::new(&program);
+        Self { program, core }
+    }
+
+    /// The program this engine executes.
+    pub fn program(&self) -> &Arc<Program> {
+        &self.program
+    }
+
+    /// Simulate one inference — identical semantics to
+    /// [`Simulator::run_image`]. Counters accumulate across calls until
+    /// [`Self::reset_stats`].
+    pub fn run_image(&mut self, input: &[i8]) -> Result<RunOutput> {
+        self.core.run_image(&self.program, input)
+    }
+
+    /// Aggregate counters across all images run since the last reset.
+    pub fn stats(&self) -> &Counters {
+        &self.core.stats
+    }
+
+    /// Per-stage counters.
+    pub fn stage_stats(&self) -> &[Counters] {
+        &self.core.stage_stats
+    }
+
+    /// Zero the counters (for callers that want per-run counters out of
+    /// a reused engine). Tile state needs no reset — it is restored at
+    /// the start of every image.
+    pub fn reset_stats(&mut self) {
+        self.core.reset_stats();
+    }
+}
+
+/// A cache of reusable engines keyed by the caller's model key (the
+/// serve layer keys it by registry version id): each engine is built
+/// once per key and reused for every subsequent image, replacing the
+/// per-batch / per-request state spin-up. One pool per worker thread —
+/// the pool itself is not shared across threads.
+#[derive(Default)]
+pub struct EnginePool {
+    engines: HashMap<u64, PooledEngine>,
+}
+
+impl EnginePool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The engine for `key`, built from `program` on first use. The
+    /// key must uniquely identify the program (e.g. a model-registry
+    /// version id): an existing engine is returned as-is.
+    pub fn engine(&mut self, key: u64, program: &Arc<Program>) -> &mut PooledEngine {
+        self.engines
+            .entry(key)
+            .or_insert_with(|| PooledEngine::new(Arc::clone(program)))
+    }
+
+    /// Drop every engine whose key is not in `live` (its model was
+    /// unloaded or swapped away). A key that comes back later — e.g. a
+    /// still-queued request holding an unloaded model version — simply
+    /// rebuilds its engine on demand.
+    pub fn retain_keys(&mut self, live: &HashSet<u64>) {
+        self.engines.retain(|k, _| live.contains(k));
+    }
+
+    /// Number of cached engines.
+    pub fn len(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.engines.is_empty()
     }
 }
 
@@ -1152,5 +1321,106 @@ mod tests {
         let ok = sim.run_image(&a).unwrap();
         let mut fresh = Simulator::new(&program);
         assert_eq!(ok.scores, fresh.run_image(&a).unwrap().scores);
+    }
+
+    #[test]
+    fn run_batch_stays_usable_after_error() {
+        // A failed batch (bad input in a worker's chunk) must leave the
+        // persistent worker engines reusable, and must not pollute the
+        // aggregate counters.
+        let net = NetworkBuilder::new("t", TensorShape::new(3, 6, 6))
+            .conv(4, 3, 1, 1)
+            .build();
+        let program = Compiler::default().compile(&net).unwrap();
+        let mut rng = Rng::new(21);
+        let good: Vec<Vec<i8>> = (0..4).map(|_| rng.i8_vec(net.input_len(), 31)).collect();
+        let mut bad = good.clone();
+        bad[3] = vec![0i8; 3]; // wrong length, fails in the second chunk
+
+        let mut sim = Simulator::new(&program);
+        assert!(sim.run_batch_threads(&bad, 2).is_err());
+        let batch = sim.run_batch_threads(&good, 2).unwrap();
+
+        let mut fresh = Simulator::new(&program);
+        let fresh_batch = fresh.run_batch_threads(&good, 2).unwrap();
+        for (a, b) in batch.outputs.iter().zip(&fresh_batch.outputs) {
+            assert_eq!(a.scores, b.scores);
+        }
+        assert_eq!(sim.stats(), fresh.stats(), "failed batch leaked counters");
+    }
+
+    #[test]
+    fn pooled_engine_matches_fresh_simulator() {
+        let net = zoo::tiny_cnn();
+        let program = Arc::new(Compiler::default().compile(&net).unwrap());
+        let mut engine = PooledEngine::new(Arc::clone(&program));
+        let mut rng = Rng::new(22);
+        for _ in 0..3 {
+            let img = rng.i8_vec(net.input_len(), 31);
+            engine.reset_stats();
+            let got = engine.run_image(&img).unwrap();
+            let mut fresh = Simulator::new(&program);
+            let want = fresh.run_image(&img).unwrap();
+            assert_eq!(got.scores, want.scores);
+            assert_eq!(got.stage_slots, want.stage_slots);
+            assert_eq!(got.latency_cycles, want.latency_cycles);
+            assert_eq!(engine.stats(), fresh.stats());
+            assert_eq!(engine.stage_stats(), fresh.stage_stats());
+        }
+    }
+
+    #[test]
+    fn engine_pool_caches_builds_once_and_evicts() {
+        let net_a = NetworkBuilder::new("a", TensorShape::new(2, 6, 6))
+            .conv(4, 3, 1, 1)
+            .build();
+        let net_b = NetworkBuilder::new("b", TensorShape::new(3, 5, 5))
+            .conv(3, 3, 1, 0)
+            .build();
+        let pa = Arc::new(Compiler::default().compile(&net_a).unwrap());
+        let pb = Arc::new(Compiler::default().compile(&net_b).unwrap());
+        let mut pool = EnginePool::new();
+        assert!(pool.is_empty());
+        let mut rng = Rng::new(23);
+        let ia = rng.i8_vec(net_a.input_len(), 31);
+        let ib = rng.i8_vec(net_b.input_len(), 31);
+        // interleave the two models; one engine per key, reused
+        for _ in 0..3 {
+            pool.engine(1, &pa).run_image(&ia).unwrap();
+            pool.engine(2, &pb).run_image(&ib).unwrap();
+        }
+        assert_eq!(pool.len(), 2);
+        // evict key 1 (model unloaded); key 2 survives
+        let live: HashSet<u64> = [2].into_iter().collect();
+        pool.retain_keys(&live);
+        assert_eq!(pool.len(), 1);
+        // an evicted key rebuilds on demand and still answers correctly
+        let out = pool.engine(1, &pa).run_image(&ia).unwrap();
+        let want = Simulator::new(&pa).run_image(&ia).unwrap();
+        assert_eq!(out.scores, want.scores);
+        assert_eq!(pool.len(), 2);
+    }
+
+    #[test]
+    fn repeated_batches_reuse_worker_engines_bit_exactly() {
+        // run_batch_threads keeps its worker engines across calls; the
+        // second batch must be bit-exact with the first and the
+        // aggregate counters must be exactly the sum of both batches.
+        let net = zoo::tiny_cnn();
+        let program = Compiler::default().compile(&net).unwrap();
+        let mut rng = Rng::new(24);
+        let inputs: Vec<Vec<i8>> =
+            (0..4).map(|_| rng.i8_vec(net.input_len(), 31)).collect();
+        let mut sim = Simulator::new(&program);
+        let first = sim.run_batch_threads(&inputs, 2).unwrap();
+        let one_batch_stats = sim.stats().clone();
+        let second = sim.run_batch_threads(&inputs, 2).unwrap();
+        for (a, b) in first.outputs.iter().zip(&second.outputs) {
+            assert_eq!(a.scores, b.scores);
+            assert_eq!(a.latency_cycles, b.latency_cycles);
+        }
+        let mut twice = one_batch_stats.clone();
+        twice.merge(&one_batch_stats);
+        assert_eq!(sim.stats(), &twice);
     }
 }

@@ -2,12 +2,15 @@
 //! dataflow trace.
 //!
 //! * [`engine`] — the cycle-accurate COM engine. Per-tile runtime
-//!   state is built once per [`Simulator`] and reset between images;
+//!   state is built once per engine and reset between images;
 //!   [`Simulator::run_image`] simulates one inference back-to-back,
-//!   [`Simulator::run_batch`] data-parallelizes a batch across threads
-//!   (bit-exact with sequential runs, per-thread [`Counters`] merged)
-//!   and reports the pipelined steady-state timing asserted against
-//!   `perfmodel`.
+//!   [`Simulator::run_batch`] data-parallelizes a batch across
+//!   persistent worker engines (bit-exact with sequential runs,
+//!   per-thread [`Counters`] merged) and reports the pipelined
+//!   steady-state timing asserted against `perfmodel`. [`PooledEngine`]
+//!   is the same engine behind an `Arc<Program>`; [`EnginePool`] caches
+//!   one per model so multi-model serve workers never rebuild state
+//!   per request.
 //! * [`pipeline`] — the stage-granularity layer-synchronization model
 //!   ([`run_pipelined`]): while stage *i* processes image *n*, stage
 //!   *i−1* streams image *n+1*; its measured steady-state period is
@@ -21,6 +24,6 @@ pub mod pipeline;
 pub mod stats;
 pub mod trace;
 
-pub use engine::{BatchOutput, RunOutput, Simulator};
+pub use engine::{BatchOutput, EnginePool, PooledEngine, RunOutput, Simulator};
 pub use pipeline::{run_pipelined, PipelineRun};
 pub use stats::Counters;

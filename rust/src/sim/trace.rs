@@ -51,7 +51,7 @@ pub fn trace_stage(program: &Program, stage: usize, seed: u64) -> Result<ComTrac
 
     let mut cells = BTreeMap::new();
     let mut max_slot = 0;
-    for a in sim.actions.iter().filter(|a| a.stage == stage && a.chain == 0) {
+    for a in sim.actions().iter().filter(|a| a.stage == stage && a.chain == 0) {
         let label = match a.kind {
             ActionKind::Acc { .. } => "U",
             ActionKind::Push => "G+",

@@ -4,10 +4,12 @@
 //! geometries covering every stage kind, and its pipeline report must
 //! agree with the analytic model.
 
-use domino::coordinator::{ArchConfig, Compiler};
+use std::sync::Arc;
+
+use domino::coordinator::{ArchConfig, Compiler, Program};
 use domino::model::{Network, NetworkBuilder, Projection, TensorShape};
 use domino::perfmodel;
-use domino::sim::{Counters, Simulator};
+use domino::sim::{Counters, EnginePool, Simulator};
 use domino::testutil::Rng;
 
 /// The sweep: every layer kind, strides, padding, pooling flavors,
@@ -174,6 +176,89 @@ fn batch_pipeline_report_agrees_with_perfmodel() {
         assert!(batch.pipeline.images_per_s > 0.0, "{}", net.name);
         assert_eq!(batch.pipeline.completions.len(), inputs.len());
     }
+}
+
+#[test]
+fn pooled_engines_interleaved_across_models_match_fresh_simulators() {
+    // The engine-pool property: one pool holding a reusable engine per
+    // model, with runs interleaved across models and images, produces
+    // outputs AND counters identical to building a fresh `Simulator`
+    // for every single run — over the full small-geometry sweep (every
+    // stage kind), several rounds deep.
+    let programs: Vec<(Network, Arc<Program>)> = sweep_nets()
+        .into_iter()
+        .map(|(net, arch)| {
+            let program = Arc::new(Compiler::new(arch).compile(&net).unwrap());
+            (net, program)
+        })
+        .collect();
+    let mut pool = EnginePool::new();
+    let mut rng = Rng::new(0x900D);
+    for round in 0..3 {
+        for (k, (net, program)) in programs.iter().enumerate() {
+            let img = rng.i8_vec(net.input_len(), 31);
+            let engine = pool.engine(k as u64, program);
+            engine.reset_stats();
+            let got = engine.run_image(&img).unwrap();
+
+            let mut fresh = Simulator::new(program);
+            let want = fresh.run_image(&img).unwrap();
+            assert_eq!(got.scores, want.scores, "{} round {round}", net.name);
+            assert_eq!(got.stage_slots, want.stage_slots, "{}", net.name);
+            assert_eq!(got.latency_cycles, want.latency_cycles, "{}", net.name);
+            for (si, (a, b)) in got
+                .stage_outputs
+                .iter()
+                .zip(&want.stage_outputs)
+                .enumerate()
+            {
+                assert_eq!(a.data, b.data, "{} round {round} stage {si}", net.name);
+            }
+            assert_eq!(
+                engine.stats(),
+                fresh.stats(),
+                "{} round {round}: pooled counters != fresh counters",
+                net.name
+            );
+            assert_eq!(
+                engine.stage_stats(),
+                fresh.stage_stats(),
+                "{} round {round}: per-stage counters",
+                net.name
+            );
+        }
+    }
+    assert_eq!(
+        pool.len(),
+        programs.len(),
+        "one engine per model, reused across rounds"
+    );
+}
+
+#[test]
+fn pooled_engine_without_reset_accumulates_like_one_simulator() {
+    // Leaving the counters alone between runs must behave exactly like
+    // one long-lived Simulator over the same image sequence.
+    let net = NetworkBuilder::new("pool-accum", TensorShape::new(3, 8, 8))
+        .conv(6, 3, 1, 1)
+        .max_pool(2, 2)
+        .flatten()
+        .fc_logits(4)
+        .build();
+    let program = Arc::new(Compiler::default().compile(&net).unwrap());
+    let mut rng = Rng::new(0xACC);
+    let inputs: Vec<Vec<i8>> = (0..5)
+        .map(|_| rng.i8_vec(net.input_len(), 31))
+        .collect();
+
+    let mut pool = EnginePool::new();
+    let mut seq = Simulator::new(&program);
+    for (i, img) in inputs.iter().enumerate() {
+        let got = pool.engine(9, &program).run_image(img).unwrap();
+        let want = seq.run_image(img).unwrap();
+        assert_eq!(got.scores, want.scores, "image {i}");
+    }
+    assert_eq!(pool.engine(9, &program).stats(), seq.stats());
 }
 
 #[test]

@@ -1,0 +1,341 @@
+//! Multi-model serving properties: tagged requests are answered by the
+//! model (and version) they were submitted to — cross-checked
+//! bit-for-bit against `refcompute` per model — under client
+//! concurrency, under shutdown-while-loaded, and across hot-swap and
+//! unload mid-traffic. A routing bug anywhere in the
+//! registry/queue/engine-pool path is a correctness failure here, not
+//! a silent misroute.
+
+use std::sync::Arc;
+
+use domino::coordinator::ArchConfig;
+use domino::model::{zoo, Network, NetworkBuilder, TensorShape};
+use domino::serve::{ModelRegistry, ModelVersion, ServeConfig, Server};
+use domino::testutil::Rng;
+
+/// Refcompute oracle for one image under a specific model version.
+fn expected_for(mv: &ModelVersion, img: &[i8]) -> Vec<i8> {
+    mv.refcompute(img).expect("registry models carry weights")
+}
+
+/// A conv+fc net small enough to cycle-simulate in well under a
+/// millisecond (used where zoo models would make the test slow).
+fn small_net(name: &str, logits: usize) -> Network {
+    NetworkBuilder::new(name, TensorShape::new(2, 6, 6))
+        .conv(4, 3, 1, 1)
+        .flatten()
+        .fc_logits(logits)
+        .build()
+}
+
+/// The fast zoo trio loaded into a fresh registry. Their outputs have
+/// three different widths (10/8/6 classes) and three different input
+/// lengths, so a cross-model misroute cannot even be shape-correct.
+fn trio_registry() -> (Arc<ModelRegistry>, Vec<Arc<ModelVersion>>) {
+    let registry = Arc::new(ModelRegistry::new());
+    let mut models = Vec::new();
+    for name in ["tiny-cnn", "tiny-mlp", "tiny-resnet"] {
+        let net = zoo::by_name(name).unwrap();
+        models.push(registry.load(name, &net, ArchConfig::default()).unwrap());
+    }
+    (registry, models)
+}
+
+#[test]
+fn concurrent_clients_across_three_models_are_answered_by_their_model() {
+    let (registry, models) = trio_registry();
+    let server = Arc::new(
+        Server::start_multi(
+            ServeConfig {
+                workers: 3,
+                max_batch: 4,
+                queue_cap: 256,
+            },
+            Arc::clone(&registry),
+        )
+        .unwrap(),
+    );
+
+    // two clients per model, all hammering the server concurrently
+    let mut handles = Vec::new();
+    for (mi, mv) in models.iter().enumerate() {
+        for c in 0..2 {
+            let server = Arc::clone(&server);
+            let mv = Arc::clone(mv);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(0xC0FFEE + (mi * 7 + c) as u64);
+                for _ in 0..6 {
+                    let img = rng.i8_vec(mv.input_len(), 31);
+                    let r = server.infer_on(mv.name(), img.clone()).unwrap();
+                    let stamp = r.model.expect("sim responses carry a model stamp");
+                    assert_eq!(&*stamp.name, mv.name(), "answered by the wrong model");
+                    assert_eq!(stamp.id, mv.id());
+                    assert_eq!(stamp.version, 1);
+                    assert_eq!(
+                        r.logits,
+                        expected_for(&mv, &img),
+                        "{}: response diverged from refcompute",
+                        mv.name()
+                    );
+                }
+            }));
+        }
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(server.served(), 36);
+    assert_eq!(server.failed(), 0);
+    assert_eq!(server.rejected(), 0);
+
+    // per-model input validation: a tiny-mlp-sized image is refused by
+    // tiny-cnn up front (not routed and crashed later)
+    assert!(server.submit_to("tiny-cnn", vec![0i8; 24]).is_err());
+    // unknown model errors name the loaded set
+    let err = server
+        .submit_to("alexnet", vec![0i8; 24])
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("tiny-cnn") && err.contains("tiny-mlp") && err.contains("tiny-resnet"),
+        "{err}"
+    );
+
+    let server = Arc::try_unwrap(server).ok().expect("sole reference");
+    let counts = server.shutdown().unwrap();
+    assert_eq!(counts.iter().sum::<u64>(), 36);
+}
+
+#[test]
+fn shutdown_while_loaded_answers_every_accepted_request_per_model() {
+    let (registry, models) = trio_registry();
+    let mut rng = Rng::new(0x5EED);
+    // several rounds of burst-submit-then-shutdown, queue still full
+    for round in 0..3 {
+        let server = Server::start_multi(
+            ServeConfig {
+                workers: 2,
+                max_batch: 3,
+                queue_cap: 256,
+            },
+            Arc::clone(&registry),
+        )
+        .unwrap();
+        let n = 9 + 6 * round;
+        let mut pending = Vec::new();
+        for i in 0..n {
+            let mv = &models[i % models.len()];
+            let img = rng.i8_vec(mv.input_len(), 31);
+            let rx = server.submit_to(mv.name(), img.clone()).unwrap();
+            pending.push((Arc::clone(mv), img, rx));
+        }
+        // shut down with the queue loaded: workers must drain it and
+        // answer every accepted request with its own model's output
+        let counts = server.shutdown().unwrap();
+        assert_eq!(counts.iter().sum::<u64>(), n as u64, "round {round}");
+        for (i, (mv, img, rx)) in pending.into_iter().enumerate() {
+            let r = rx.recv().expect("accepted request must be answered");
+            let stamp = r.model.expect("stamped");
+            assert_eq!(&*stamp.name, mv.name(), "round {round} request {i}");
+            assert_eq!(
+                r.logits,
+                expected_for(&mv, &img),
+                "round {round} request {i} diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn hot_swap_under_load_drains_old_version_and_routes_new() {
+    let registry = Arc::new(ModelRegistry::new());
+    let net = small_net("swapper", 5);
+    let v1 = registry.load("swapper", &net, ArchConfig::default()).unwrap();
+    let server = Arc::new(
+        Server::start_multi(
+            ServeConfig {
+                workers: 2,
+                max_batch: 4,
+                queue_cap: 1024,
+            },
+            Arc::clone(&registry),
+        )
+        .unwrap(),
+    );
+
+    // Clients run two phases of traffic with a barrier between them;
+    // the main thread performs the swap before releasing the barrier,
+    // so phase 1 requests are all submitted against v1 and phase 2
+    // requests strictly after the swap — deterministically exercising
+    // both sides regardless of machine speed.
+    let clients = 3;
+    let half = 15; // requests per client per phase
+    let barrier = Arc::new(std::sync::Barrier::new(clients + 1));
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let server = Arc::clone(&server);
+        let barrier = Arc::clone(&barrier);
+        let input_len = net.input_len();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xAB + c as u64);
+            let mut out = Vec::with_capacity(2 * half);
+            for phase in 0..2 {
+                for _ in 0..half {
+                    let img = rng.i8_vec(input_len, 31);
+                    // every accepted request must be answered — a
+                    // dropped or hung request fails (or times out) the
+                    // test here
+                    let r = server
+                        .infer_on("swapper", img.clone())
+                        .expect("request dropped during hot-swap");
+                    out.push((phase, img, r));
+                }
+                if phase == 0 {
+                    barrier.wait();
+                }
+            }
+            out
+        }));
+    }
+
+    // Let v1 demonstrably serve first: responses completed before the
+    // swap is published are guaranteed v1. Phase 1 carries 45 requests,
+    // so this wait always terminates before the clients park at the
+    // barrier.
+    while server.served() < 15 {
+        std::thread::sleep(std::time::Duration::from_micros(200));
+    }
+    // hot-swap to fresh weights while phase-1 traffic is in flight,
+    // then release phase 2
+    let v2 = registry
+        .swap_seeded("swapper", &net, ArchConfig::default(), Some(0xFEED))
+        .unwrap();
+    assert_eq!(v2.version(), 2);
+    barrier.wait();
+
+    let mut seen = [0u64; 2];
+    for h in handles {
+        for (phase, img, r) in h.join().unwrap() {
+            let stamp = r.model.expect("stamped");
+            let mv = match stamp.version {
+                1 => &v1,
+                2 => &v2,
+                v => panic!("unexpected version {v}"),
+            };
+            assert_eq!(stamp.id, mv.id());
+            assert_eq!(
+                r.logits,
+                expected_for(mv, &img),
+                "v{} response diverged from its own version's weights",
+                stamp.version
+            );
+            // phase 2 was released only after the swap returned, so it
+            // must run on the new program (phase 1 may be either: a
+            // request can race the swap and legitimately land on v2)
+            if phase == 1 {
+                assert_eq!(stamp.version, 2, "post-swap request served by v1");
+            }
+            seen[(stamp.version - 1) as usize] += 1;
+        }
+    }
+    let total = (clients * 2 * half) as u64;
+    assert_eq!(seen[0] + seen[1], total, "zero dropped or hung requests");
+    assert!(
+        seen[0] >= 15,
+        "the >=15 responses completed before the swap must be v1"
+    );
+    assert!(
+        seen[1] >= (clients * half) as u64,
+        "every phase-2 request must use the new program"
+    );
+    assert_eq!(server.served(), total);
+    assert_eq!(server.failed(), 0);
+
+    let server = Arc::try_unwrap(server).ok().expect("sole reference");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn unload_keeps_inflight_requests_and_rejects_new_ones() {
+    let registry = Arc::new(ModelRegistry::new());
+    let net_a = small_net("alpha", 4);
+    let net_b = small_net("beta", 7);
+    let va = registry.load("alpha", &net_a, ArchConfig::default()).unwrap();
+    registry.load("beta", &net_b, ArchConfig::default()).unwrap();
+    let server = Server::start_multi(
+        ServeConfig {
+            workers: 1,
+            max_batch: 2,
+            queue_cap: 64,
+        },
+        Arc::clone(&registry),
+    )
+    .unwrap();
+
+    // burst-submit to alpha, then unload it while requests are queued
+    let mut rng = Rng::new(0xDEAD);
+    let pending: Vec<_> = (0..6)
+        .map(|_| {
+            let img = rng.i8_vec(net_a.input_len(), 31);
+            let rx = server.submit_to("alpha", img.clone()).unwrap();
+            (img, rx)
+        })
+        .collect();
+    let unloaded = registry.unload("alpha").unwrap();
+    assert_eq!(unloaded.id(), va.id());
+
+    // new submissions for the unloaded name are refused, naming what is
+    // still loaded
+    let err = server
+        .submit_to("alpha", vec![0i8; net_a.input_len()])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("beta"), "{err}");
+
+    // every already-accepted alpha request still completes on the
+    // unloaded version (drain semantics)
+    for (i, (img, rx)) in pending.into_iter().enumerate() {
+        let r = rx.recv().expect("in-flight request must survive unload");
+        assert_eq!(r.logits, expected_for(&va, &img), "request {i}");
+        assert_eq!(r.model.unwrap().id, va.id());
+    }
+
+    // beta is unaffected
+    let img = rng.i8_vec(net_b.input_len(), 31);
+    let r = server.infer_on("beta", img).unwrap();
+    assert_eq!(r.logits.len(), 7);
+    assert_eq!(server.failed(), 0);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn load_while_serving_makes_model_routable_without_restart() {
+    let registry = Arc::new(ModelRegistry::new());
+    let net_a = small_net("first", 3);
+    registry.load("first", &net_a, ArchConfig::default()).unwrap();
+    let server = Server::start_multi(
+        ServeConfig {
+            workers: 2,
+            max_batch: 4,
+            queue_cap: 64,
+        },
+        Arc::clone(&registry),
+    )
+    .unwrap();
+    let mut rng = Rng::new(0x10AD);
+    // serve a request, then load a second model live and serve it too
+    // (its engines are built lazily by the workers on first request)
+    let img = rng.i8_vec(net_a.input_len(), 31);
+    server.infer_on("first", img).unwrap();
+    let net_b = small_net("second", 9);
+    let vb = registry.load("second", &net_b, ArchConfig::default()).unwrap();
+    for _ in 0..4 {
+        let img = rng.i8_vec(net_b.input_len(), 31);
+        let r = server.infer_on("second", img.clone()).unwrap();
+        assert_eq!(r.logits, expected_for(&vb, &img));
+    }
+    // with two models loaded, untagged submit demands a name
+    assert!(server.submit(vec![0i8; net_a.input_len()]).is_err());
+    assert_eq!(server.served(), 5);
+    server.shutdown().unwrap();
+}
