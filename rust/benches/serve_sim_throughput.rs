@@ -14,13 +14,21 @@
 //!    all of them through per-worker engine pools, one model
 //!    hot-swapped (fresh weights) mid-traffic — every response is
 //!    verified bit-for-bit against refcompute for the exact model
-//!    *version* stamped on it, and zero requests may drop or fail.
+//!    *version* stamped on it, and zero requests may drop or fail;
+//! 4. the same mixed-model load driven over the **remote path**: a
+//!    `serve::net` TCP endpoint on an ephemeral port, concurrent
+//!    `serve::client::Client` connections, a mid-traffic hot-swap and
+//!    the final unload issued remotely through the typed admin plane —
+//!    every remote response cross-checked against the refcompute of
+//!    its stamped model version, plus the per-model `Stats` split.
 //!
 //!     cargo bench --bench serve_sim_throughput            # full run
 //!     cargo bench --bench serve_sim_throughput -- --smoke # CI-sized
 //!     # CI multi-model leg (router path only, ≥2 models):
 //!     cargo bench --bench serve_sim_throughput -- --smoke --multi-only \
 //!         --models tiny-cnn,tiny-mlp
+//!     # CI remote-protocol leg (TCP path only):
+//!     cargo bench --bench serve_sim_throughput -- --smoke --remote-only
 //!
 //! `--models a,b,c` picks the loaded set (default
 //! `tiny-cnn,tiny-mlp,tiny-resnet`).
@@ -33,7 +41,11 @@ use domino::benchutil::{stats, time_n};
 use domino::coordinator::ArchConfig;
 use domino::model::refcompute::{forward, Tensor};
 use domino::model::zoo;
-use domino::serve::{sim_program, LatencyStats, ModelRegistry, ModelVersion, ServeConfig, Server};
+use domino::serve::client::Client;
+use domino::serve::net::NetServer;
+use domino::serve::{
+    sim_program, LatencyStats, ModelRegistry, ModelVersion, ServeConfig, Server, Service,
+};
 use domino::sim::Simulator;
 use domino::testutil::Rng;
 
@@ -47,6 +59,7 @@ fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().collect();
     let smoke = argv.iter().any(|a| a == "--smoke");
     let multi_only = argv.iter().any(|a| a == "--multi-only");
+    let remote_only = argv.iter().any(|a| a == "--remote-only");
     let model_list = argv
         .iter()
         .position(|a| a == "--models")
@@ -54,13 +67,14 @@ fn main() -> anyhow::Result<()> {
         .cloned()
         .unwrap_or_else(|| "tiny-cnn,tiny-mlp,tiny-resnet".to_string());
     println!(
-        "serve_sim_throughput ({}{})\n",
+        "serve_sim_throughput ({}{}{})\n",
         if smoke { "smoke" } else { "full" },
-        if multi_only { ", multi-only" } else { "" }
+        if multi_only { ", multi-only" } else { "" },
+        if remote_only { ", remote-only" } else { "" }
     );
     let mut rng = Rng::new(0xBEEF);
 
-    if !multi_only {
+    if !multi_only && !remote_only {
         let net = zoo::tiny_cnn();
         let (program, weights) = sim_program(&net, ArchConfig::default())?;
 
@@ -209,7 +223,6 @@ fn main() -> anyhow::Result<()> {
         println!("per-worker served: {counts:?}\n");
     }
 
-    // ---- 3. multi-model closed loop with a mid-traffic hot-swap ----
     let names: Vec<String> = model_list
         .split(',')
         .map(str::trim)
@@ -220,6 +233,9 @@ fn main() -> anyhow::Result<()> {
         names.len() >= 2,
         "--models needs >= 2 models for the multi-model leg (got {names:?})"
     );
+
+    // ---- 3. multi-model closed loop with a mid-traffic hot-swap ----
+    if !remote_only {
     let registry = Arc::new(ModelRegistry::new());
     let mut models: Vec<Arc<ModelVersion>> = Vec::new();
     for raw in &names {
@@ -388,6 +404,193 @@ fn main() -> anyhow::Result<()> {
     let counts = Arc::try_unwrap(server)
         .map_err(|_| anyhow::anyhow!("server still referenced"))?
         .shutdown()?;
-    println!("per-worker served: {counts:?}");
+    println!("per-worker served: {counts:?}\n");
+    }
+
+    // ---- 4. the same mixed-model load over the remote path (TCP) ----
+    // A remote call routes through the identical Service::dispatch the
+    // in-process path uses, so every guarantee above must hold
+    // byte-for-byte across the wire: stamps, refcompute exactness,
+    // drain on swap, per-model stats.
+    if !multi_only {
+        let registry = Arc::new(ModelRegistry::new());
+        let mut models: Vec<Arc<ModelVersion>> = Vec::new();
+        for raw in &names {
+            let m = zoo::lookup(raw)?;
+            models.push(registry.load_seeded(&m.name, &m, ArchConfig::default(), Some(0xC0DE))?);
+        }
+        let cfg = ServeConfig {
+            workers: if smoke { 2 } else { 4 },
+            max_batch: 8,
+            queue_cap: 4096,
+        };
+        let server = Server::start_multi(cfg, Arc::clone(&registry))?;
+        let service = Arc::new(Service::new(server, ArchConfig::default()));
+        let net = NetServer::bind("127.0.0.1:0", Arc::clone(&service))?;
+        let addr = net.local_addr().to_string();
+        let clients = if smoke { 2 } else { 4 };
+        let per_client = if smoke { 8 } else { 32 };
+        println!(
+            "remote closed loop over TCP {addr}: {} models [{}], {} clients x {} requests, \
+             remote hot-swap of {}",
+            models.len(),
+            models.iter().map(|m| m.name()).collect::<Vec<_>>().join(", "),
+            clients,
+            per_client,
+            models[0].name()
+        );
+
+        let pools: Arc<Vec<Vec<Vec<i8>>>> = Arc::new(
+            models
+                .iter()
+                .map(|mv| {
+                    (0..8)
+                        .map(|_| rng.i8_vec(mv.input_len(), 31))
+                        .collect::<Vec<_>>()
+                })
+                .collect(),
+        );
+        let mut expected: HashMap<(usize, u64), Vec<Vec<i8>>> = HashMap::new();
+        for (mi, mv) in models.iter().enumerate() {
+            expected.insert((mi, mv.version()), expected_for(mv, &pools[mi])?);
+        }
+
+        type Record = (usize, u64, usize, Vec<i8>); // (model idx, version, image idx, logits)
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let addr = addr.clone();
+            let pools = Arc::clone(&pools);
+            let model_names: Vec<String> =
+                models.iter().map(|m| m.name().to_string()).collect();
+            handles.push(std::thread::spawn(
+                move || -> anyhow::Result<(LatencyStats, Vec<Record>)> {
+                    let mut client = Client::connect(&addr)?;
+                    client.set_read_timeout(Some(std::time::Duration::from_secs(120)))?;
+                    let mut lat = LatencyStats::default();
+                    let mut records = Vec::with_capacity(per_client);
+                    for i in 0..per_client {
+                        let mi = (c + i) % model_names.len();
+                        let idx = i % pools[mi].len();
+                        let t = Instant::now();
+                        let reply =
+                            client.infer(Some(model_names[mi].as_str()), pools[mi][idx].clone())?;
+                        lat.record(t.elapsed());
+                        let stamp = reply.model.expect("remote responses carry a stamp");
+                        anyhow::ensure!(
+                            &*stamp.name == model_names[mi].as_str(),
+                            "request for {} answered by {} (routing bug over TCP)",
+                            model_names[mi],
+                            stamp.name
+                        );
+                        records.push((mi, stamp.version, idx, reply.logits));
+                    }
+                    Ok((lat, records))
+                },
+            ));
+        }
+
+        // remote admin op while traffic flows: hot-swap model 0
+        // through a second client connection
+        let total = clients * per_client;
+        let deadline = Instant::now() + std::time::Duration::from_secs(120);
+        while service.server().served() < (total / 4) as u64 && Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+        let mut admin = Client::connect(&addr)?;
+        admin.set_read_timeout(Some(std::time::Duration::from_secs(120)))?;
+        let st = admin.swap(models[0].name(), Some(0x5A_5A))?;
+        let v2 = registry.get(models[0].name()).expect("just swapped");
+        anyhow::ensure!(v2.id() == st.id, "swap stamp does not match the registry");
+        expected.insert((0, v2.version()), expected_for(&v2, &pools[0])?);
+        println!(
+            "remote-swapped {} -> v{} at ~{} served",
+            st.name,
+            st.version,
+            service.server().served()
+        );
+
+        let mut lat = LatencyStats::default();
+        let mut records: Vec<Record> = Vec::new();
+        for h in handles {
+            let (l, r) = h.join().expect("client thread")?;
+            lat.merge(&l);
+            records.extend(r);
+        }
+        let wall = t0.elapsed();
+
+        // deterministic post-swap coverage through the remote path:
+        // these are submitted strictly after the remote swap returned
+        // and MUST be served by v2 with v2's weights
+        {
+            let v2_expected = expected_for(&v2, &pools[0])?;
+            for (idx, img) in pools[0].iter().enumerate().take(4) {
+                let r = admin.infer(Some(v2.name()), img.clone())?;
+                assert_eq!(
+                    r.model.expect("stamped").version,
+                    v2.version(),
+                    "post-swap remote request served by the old version"
+                );
+                assert_eq!(
+                    r.logits, v2_expected[idx],
+                    "post-swap remote response diverged from the new weights"
+                );
+            }
+        }
+
+        // every remote response verified against the exact
+        // (model, version) that served it
+        for (mi, version, idx, logits) in &records {
+            let want = expected
+                .get(&(*mi, *version))
+                .unwrap_or_else(|| panic!("unexpected version {version} for model {mi}"));
+            assert_eq!(
+                logits, &want[*idx],
+                "model {mi} v{version} image {idx} diverged from refcompute over TCP"
+            );
+        }
+        assert_eq!(records.len(), total, "every remote request must be answered");
+
+        // remote per-model stats: zero failures, queue drained
+        let stats_reply = admin.stats()?;
+        assert_eq!(stats_reply.failed, 0, "no remote request may fail");
+        assert_eq!(stats_reply.rejected, 0, "no remote request may be rejected");
+        println!(
+            "remote stats: served {} across {} per-model entries",
+            stats_reply.served,
+            stats_reply.models.len()
+        );
+        for m in &stats_reply.models {
+            anyhow::ensure!(m.queue_depth == 0, "queue must be drained");
+            println!(
+                "  {}: served {}, p50 {} us, p95 {} us, p99 {} us",
+                m.model,
+                m.served,
+                m.p50_us.unwrap_or(0),
+                m.p95_us.unwrap_or(0),
+                m.p99_us.unwrap_or(0)
+            );
+        }
+
+        // remote unload, then clean shutdown (drain + join everything)
+        admin.unload(models[1].name())?;
+        anyhow::ensure!(
+            registry.get(models[1].name()).is_none(),
+            "remote unload must mutate the registry"
+        );
+        drop(admin);
+        net.shutdown()?;
+        let service = Arc::try_unwrap(service)
+            .map_err(|_| anyhow::anyhow!("service still referenced"))?;
+        let counts = service.shutdown()?;
+        println!(
+            "served {total} remote requests in {:.2} s -> {:.1} img/s \
+             (all bit-exact vs refcompute per model version over TCP: PASS)",
+            wall.as_secs_f64(),
+            domino::sim::stats::safe_rate(total as f64, wall.as_secs_f64())
+        );
+        println!("latency: {}", lat.summary());
+        println!("per-worker served: {counts:?}");
+    }
     Ok(())
 }

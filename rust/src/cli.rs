@@ -85,6 +85,7 @@ COMMANDS:
   serve [--backend pjrt|sim] [--model M | --models a,b,c] [--workers N]
         [--batch B] [--requests R] [--queue Q] [--seed S]
         [--swap M [--swap-after K]]
+        [--listen ADDR [--serve-secs N]] [--registry-file PATH]
                          run the inference server: `pjrt` serves the AOT
                          artifact over the test set (needs artifacts);
                          `sim` serves the cycle-accurate simulator —
@@ -93,9 +94,20 @@ COMMANDS:
                          a model (fresh weights) mid-traffic after K
                          requests; every response is cross-checked vs
                          refcompute for the exact model version that
-                         served it
-  models [list|info <m>] list zoo models (params/MACs/shapes), or show
-                         one model in detail
+                         served it. `--listen HOST:PORT` (sim only)
+                         exposes the typed service API over TCP instead
+                         (port 0 picks an ephemeral port and prints the
+                         bound address); `--registry-file` persists the
+                         loaded-model set across restarts
+  client <op> --addr HOST:PORT [--json]
+                         drive a `serve --listen` endpoint: infer <m>
+                         [--requests N] [--seed S] [--verify-seed S],
+                         load <m> [--seed S], swap <m> [--seed S],
+                         unload <m>, models, info <m>, stats
+  models [list|info <m>] [--json]
+                         list zoo models (params/MACs/shapes), or show
+                         one model in detail; --json emits the wire-
+                         protocol ModelDesc representation
 
 Model names are case-insensitive; `_` and `-` are interchangeable.
 Models: vgg11-cifar10 resnet18-cifar10 vgg16-imagenet vgg19-imagenet

@@ -40,15 +40,21 @@
 //!   compiles against an API-compatible stub unless the `pjrt` feature
 //!   (and a vendored `xla` crate) is enabled.
 //! * [`serve`] — the production-style inference server: bounded queue
-//!   with backpressure, worker pool, micro-batched dequeueing and
-//!   p50/p95/p99 accounting, with two interchangeable backends — the
-//!   AOT artifact over PJRT and the cycle-accurate simulator
-//!   (`Server::start_sim`, artifact-free, refcompute-checkable). The
-//!   sim backend is multi-model: a versioned `ModelRegistry` routes
-//!   tagged requests, supports hot-swap/load/unload while serving
-//!   (in-flight requests drain on their version, never dropped), and
-//!   every response is stamped with the exact model version that
-//!   served it.
+//!   with backpressure, worker pool, micro-batched dequeueing, with
+//!   two interchangeable backends — the AOT artifact over PJRT and the
+//!   cycle-accurate simulator (`Server::start_sim`, artifact-free,
+//!   refcompute-checkable). The sim backend is multi-model: a
+//!   versioned `ModelRegistry` routes tagged requests, supports
+//!   hot-swap/load/unload while serving (in-flight requests drain on
+//!   their version, never dropped), and every response is stamped with
+//!   the exact model version that served it. Around the core sits one
+//!   typed service API (`serve::api`: data/admin/observability planes
+//!   through a single `Service::dispatch`), a std-only wire protocol
+//!   (`serve::wire`: length-prefixed hand-rolled JSON frames), a TCP
+//!   endpoint (`serve::net`, `domino serve --listen`), an in-crate
+//!   client (`serve::client`, `domino client …`), per-model metrics
+//!   (`serve::metrics`: p50/p95/p99, counts, queue-depth gauges) and
+//!   registry persistence (`serve --registry-file`).
 //! * [`eval`] — experiment drivers for every table and figure.
 
 pub mod baselines;

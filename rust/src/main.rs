@@ -33,6 +33,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "sweep" => sweep(args),
         "golden" => golden(args),
         "serve" => serve(args),
+        "client" => client_cmd(args),
         "models" => models_cmd(args),
         "" | "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -93,10 +94,28 @@ fn net_arg(args: &Args) -> Result<domino::model::Network> {
     zoo::lookup(&name)
 }
 
-/// `domino models [list | info <model>]`.
+/// `domino models [list | info <model>] [--json]`. `--json` emits the
+/// same `ModelDesc` representation the wire protocol speaks (via the
+/// `serve::wire` encoder), so scripts can parse one format for local
+/// listings and remote `client models` alike (`id`/`version` are 0
+/// for zoo entries that are not loaded anywhere).
 fn models_cmd(args: &Args) -> Result<()> {
+    use domino::serve::api::ModelDesc;
+    use domino::serve::wire;
+    let json = args.get("json").is_some();
     match args.positional.first().map(String::as_str) {
         None | Some("list") => {
+            if json {
+                let descs = zoo::MODEL_NAMES
+                    .iter()
+                    .map(|name| {
+                        let net = zoo::lookup(name)?;
+                        Ok(wire::desc_to_json(&ModelDesc::of_network(&net)?))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                println!("{}", wire::encode(&wire::Json::Arr(descs)));
+                return Ok(());
+            }
             println!(
                 "{:<18} {:>12} {:>16} {:>12} {:>8}",
                 "model", "params", "macs", "input", "classes"
@@ -119,8 +138,15 @@ fn models_cmd(args: &Args) -> Result<()> {
             let name = args
                 .positional
                 .get(1)
-                .ok_or_else(|| anyhow::anyhow!("usage: domino models info <model>"))?;
+                .ok_or_else(|| anyhow::anyhow!("usage: domino models info <model> [--json]"))?;
             let net = zoo::lookup(name)?;
+            if json {
+                println!(
+                    "{}",
+                    wire::encode(&wire::desc_to_json(&ModelDesc::of_network(&net)?))
+                );
+                return Ok(());
+            }
             println!(
                 "{}: input {}, output {}, {} layers, {} params, {} MACs",
                 net.name,
@@ -335,19 +361,32 @@ fn sweep(args: &Args) -> Result<()> {
 
 fn serve(args: &Args) -> Result<()> {
     match args.get("backend").unwrap_or("pjrt") {
-        "pjrt" => serve_pjrt(args),
+        "pjrt" => {
+            // reject loudly rather than silently ignore: the typed
+            // API endpoint and registry persistence are sim-only
+            anyhow::ensure!(
+                args.get("listen").is_none() && args.get("registry-file").is_none(),
+                "--listen and --registry-file are only supported on the sim backend \
+                 (run with --backend sim)"
+            );
+            serve_pjrt(args)
+        }
         "sim" => serve_sim(args),
         other => bail!("unknown serve backend {other:?} (use `pjrt` or `sim`)"),
     }
 }
 
 /// Serve the cycle-accurate simulator: load one or more models into a
-/// registry, route tagged requests through one server, optionally
-/// hot-swap a model mid-traffic, and cross-check every response
-/// against the int8 reference of the exact model version that served
-/// it.
+/// registry (optionally restored from / persisted to a manifest),
+/// then either expose the typed service API over TCP (`--listen`) or
+/// drive a local closed loop through the same `Service::dispatch` the
+/// network path uses — hot-swapping a model mid-traffic on request,
+/// and cross-checking every response against the int8 reference of
+/// the exact model version stamped on it.
 fn serve_sim(args: &Args) -> Result<()> {
-    use domino::serve::{LatencyStats, ModelRegistry, ServeConfig, Server};
+    use domino::serve::api::{self, RegistryManifest};
+    use domino::serve::net::NetServer;
+    use domino::serve::{LatencyStats, ModelRegistry, ServeConfig, Server, Service};
     use std::sync::Arc;
 
     let names: Vec<String> = match args.get("models") {
@@ -368,17 +407,42 @@ fn serve_sim(args: &Args) -> Result<()> {
     };
     let n = args.get_usize("requests", 64);
 
-    // Compile every model into the shared registry (registry key = the
-    // network's canonical name, so `--models tiny,TINY_MLP` works).
+    // Registry, optionally persistent: `--registry-file` reloads the
+    // model set a previous run recorded (exact versions and weight
+    // seeds), then every API-plane mutation rewrites the manifest.
+    let manifest = match args.get("registry-file") {
+        Some(p) => Some(Arc::new(RegistryManifest::open(std::path::Path::new(p))?)),
+        None => None,
+    };
     let registry = Arc::new(ModelRegistry::new());
-    let mut models = Vec::new();
+    if let Some(man) = &manifest {
+        let restored = man.restore(&registry, arch)?;
+        if restored > 0 {
+            println!(
+                "restored {restored} model(s) from {}",
+                man.path().display()
+            );
+        }
+    }
+    // Compile the requested models into the shared registry (registry
+    // key = the network's canonical name, so `--models tiny,TINY_MLP`
+    // works); names already restored from the manifest stay as-is.
     for raw in &names {
         let net = zoo::lookup(raw)?;
-        models.push(registry.load(&net.name, &net, arch)?);
+        if registry.get(&net.name).is_none() {
+            let mv = registry.load(&net.name, &net, arch)?;
+            if let Some(man) = &manifest {
+                man.record(&net.name, &net.name, None, mv.version());
+            }
+        }
     }
+    if let Some(man) = &manifest {
+        man.save()?;
+    }
+    let mut models = registry.list();
+
     println!(
-        "serving {n} requests across {} model(s) on the cycle simulator \
-         ({} workers, micro-batch {})",
+        "{} model(s) on the cycle simulator ({} workers, micro-batch {})",
         models.len(),
         cfg.workers,
         cfg.max_batch
@@ -395,8 +459,52 @@ fn serve_sim(args: &Args) -> Result<()> {
         );
     }
 
-    // Per model: a small pool of distinct images with precomputed
-    // refcompute references (recomputed when the model is swapped).
+    let server = Server::start_multi(cfg, Arc::clone(&registry))?;
+    let service = match &manifest {
+        Some(man) => Service::with_manifest(server, arch, Arc::clone(man)),
+        None => Service::new(server, arch),
+    };
+
+    // --listen: expose the typed API (data/admin/observability planes)
+    // over TCP instead of driving local traffic. Flags that only make
+    // sense for the local closed loop are rejected loudly rather than
+    // silently ignored.
+    if let Some(addr) = args.get("listen") {
+        anyhow::ensure!(
+            args.get("swap").is_none() && args.get("swap-after").is_none(),
+            "--swap/--swap-after drive the local closed loop and do nothing with \
+             --listen; use `domino client swap <model> --addr <addr>` against the \
+             endpoint instead"
+        );
+        anyhow::ensure!(
+            args.get("requests").is_none(),
+            "--requests drives the local closed loop and does nothing with --listen; \
+             use `domino client infer <model> --requests N --addr <addr>` instead"
+        );
+        let service = Arc::new(service);
+        let net = NetServer::bind(addr, Arc::clone(&service))?;
+        // port 0 resolves to the actually-bound ephemeral port here
+        println!("listening on {addr_real} (length-prefixed JSON frames; drive with `domino client <op> --addr {addr_real}`)",
+            addr_real = net.local_addr());
+        let secs = args.get_u64("serve-secs", 0);
+        if secs == 0 {
+            println!("serving until killed (pass --serve-secs N for a bounded run)");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_secs(secs));
+        net.shutdown()?;
+        let service = Arc::try_unwrap(service)
+            .map_err(|_| anyhow::anyhow!("service still referenced after net shutdown"))?;
+        print_stats(&service.dispatch(api::Request::Stats))?;
+        service.shutdown()?;
+        return Ok(());
+    }
+
+    // Local closed loop. Per model: a small pool of distinct images
+    // with precomputed refcompute references (recomputed when the
+    // model is swapped).
     let mut rng = Rng::new(args.get_u64("seed", 42));
     let pool_sz = 16.min(n.max(1));
     let expected_of = |mv: &domino::serve::ModelVersion,
@@ -433,7 +541,7 @@ fn serve_sim(args: &Args) -> Result<()> {
         );
     }
 
-    let server = Server::start_multi(cfg, Arc::clone(&registry))?;
+    println!("driving {n} requests through the typed service API (local dispatch)");
     let t0 = std::time::Instant::now();
     let mut lat = LatencyStats::default();
     let mut served_per_model = vec![0u64; models.len()];
@@ -444,14 +552,20 @@ fn serve_sim(args: &Args) -> Result<()> {
                     .iter()
                     .position(|m| m.name() == sn.as_str())
                     .expect("swap target validated before the loop");
-                let net = zoo::lookup(sn)?;
-                let new_mv =
-                    registry.swap_seeded(sn, &net, arch, Some(0xD0_31_10 ^ (i as u64 + 1)))?;
+                // the same typed request a remote admin client sends
+                let stamp = match service.dispatch(api::Request::Swap {
+                    model: sn.clone(),
+                    seed: Some(0xD0_31_10 ^ (i as u64 + 1)),
+                }) {
+                    api::Response::Swapped(st) => st,
+                    api::Response::Error { message } => bail!("swap failed: {message}"),
+                    other => bail!("unexpected response to swap: {other:?}"),
+                };
                 println!(
                     "hot-swapped {} -> v{} after {i} requests (new weights; traffic uninterrupted)",
-                    sn,
-                    new_mv.version()
+                    sn, stamp.version
                 );
+                let new_mv = registry.get(sn).expect("just swapped");
                 expected[mi] = expected_of(&new_mv, &pools[mi])?;
                 models[mi] = new_mv;
             }
@@ -459,9 +573,16 @@ fn serve_sim(args: &Args) -> Result<()> {
         let mi = i % models.len();
         let idx = (i / models.len()) % pools[mi].len();
         let t = std::time::Instant::now();
-        let r = server.infer_on(models[mi].name(), pools[mi][idx].clone())?;
+        let reply = match service.dispatch(api::Request::Infer {
+            model: Some(models[mi].name().to_string()),
+            image: pools[mi][idx].clone(),
+        }) {
+            api::Response::Infer(r) => r,
+            api::Response::Error { message } => bail!("request {i} failed: {message}"),
+            other => bail!("unexpected response to infer: {other:?}"),
+        };
         lat.record(t.elapsed());
-        let stamp = r.model.as_ref().expect("sim responses carry a stamp");
+        let stamp = reply.model.as_ref().expect("sim responses carry a stamp");
         anyhow::ensure!(
             stamp.id == models[mi].id(),
             "request for {} answered by {} v{} (routing bug)",
@@ -470,7 +591,7 @@ fn serve_sim(args: &Args) -> Result<()> {
             stamp.version
         );
         anyhow::ensure!(
-            r.logits == expected[mi][idx],
+            reply.logits == expected[mi][idx],
             "response for {} image {idx} diverged from refcompute",
             models[mi].name()
         );
@@ -490,12 +611,203 @@ fn serve_sim(args: &Args) -> Result<()> {
     println!(
         "all responses bit-exact vs refcompute for the model version that served them \
          (served {}, rejected {}, failed {})",
-        server.served(),
-        server.rejected(),
-        server.failed()
+        service.server().served(),
+        service.server().rejected(),
+        service.server().failed()
     );
-    server.shutdown()?;
+    print_stats(&service.dispatch(api::Request::Stats))?;
+    service.shutdown()?;
     Ok(())
+}
+
+/// Render a `Stats` response: the aggregate counters plus the
+/// per-model split (counts, live queue depth, latency percentiles).
+fn print_stats(resp: &domino::serve::api::Response) -> Result<()> {
+    use domino::serve::api::Response;
+    let stats = match resp {
+        Response::Stats(s) => s,
+        Response::Error { message } => bail!("stats failed: {message}"),
+        other => bail!("unexpected response to stats: {other:?}"),
+    };
+    println!(
+        "stats: served {}, rejected {}, failed {}",
+        stats.served, stats.rejected, stats.failed
+    );
+    println!(
+        "  {:<18} {:>8} {:>8} {:>9} {:>7} {:>9} {:>9} {:>9}",
+        "model", "served", "failed", "rejected", "queued", "p50 us", "p95 us", "p99 us"
+    );
+    let fmt = |v: Option<u64>| v.map(|x| x.to_string()).unwrap_or_else(|| "-".into());
+    for m in &stats.models {
+        println!(
+            "  {:<18} {:>8} {:>8} {:>9} {:>7} {:>9} {:>9} {:>9}",
+            m.model,
+            m.served,
+            m.failed,
+            m.rejected,
+            m.queue_depth,
+            fmt(m.p50_us),
+            fmt(m.p95_us),
+            fmt(m.p99_us)
+        );
+    }
+    Ok(())
+}
+
+/// `domino client <op> --addr HOST:PORT` — drive a `serve --listen`
+/// endpoint over TCP through the in-crate typed client. Ops: `infer
+/// <model>`, `load <model> [--seed S]`, `swap <model> [--seed S]`,
+/// `unload <model>`, `models`, `info <model>`, `stats`; `--json`
+/// prints the raw wire representation.
+fn client_cmd(args: &Args) -> Result<()> {
+    use domino::serve::client::Client;
+    use domino::serve::{api, wire};
+
+    let addr = args.get("addr").ok_or_else(|| {
+        anyhow::anyhow!("client needs --addr HOST:PORT (the address `serve --listen` printed)")
+    })?;
+    let op = args.positional.first().map(String::as_str).unwrap_or("stats");
+    let json = args.get("json").is_some();
+    fn second_positional<'a>(args: &'a Args, what: &str, addr: &str) -> Result<&'a str> {
+        args.positional.get(1).map(String::as_str).ok_or_else(|| {
+            anyhow::anyhow!("usage: domino client {what} <model> --addr {addr}")
+        })
+    }
+    let mut client = Client::connect(addr)?;
+    client.set_read_timeout(Some(std::time::Duration::from_secs(120)))?;
+    match op {
+        "infer" => {
+            let model = second_positional(args, "infer", addr)?;
+            let info = client.model_info(model)?;
+            let reqs = args.get_usize("requests", 1);
+            let mut rng = Rng::new(args.get_u64("seed", 42));
+            // --verify-seed S: reconstruct the weights locally (they
+            // are a pure function of the network and the seed the
+            // model was loaded/swapped with) and cross-check every
+            // remote response bit-for-bit against refcompute.
+            let verify = match args.get("verify-seed") {
+                Some(v) => {
+                    let seed: u64 = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--verify-seed must be a u64"))?;
+                    let net = zoo::lookup(model)?;
+                    let weights = domino::model::refcompute::Weights::random(&net, seed)?;
+                    Some((net, weights))
+                }
+                None => None,
+            };
+            let mut lat = domino::serve::LatencyStats::default();
+            for i in 0..reqs {
+                let image = rng.i8_vec(info.input_len as usize, 31);
+                let t = std::time::Instant::now();
+                let r = client.infer(Some(model), image.clone())?;
+                lat.record(t.elapsed());
+                let stamp = r
+                    .model
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("response carried no model stamp"))?;
+                if let Some((net, weights)) = &verify {
+                    let want = domino::model::refcompute::forward(
+                        net,
+                        weights,
+                        &domino::model::refcompute::Tensor::new(net.input, image),
+                    )?;
+                    anyhow::ensure!(
+                        r.logits == want.data,
+                        "response {i} diverged from refcompute under --verify-seed"
+                    );
+                }
+                println!(
+                    "#{i}: {} v{} -> {:?} (queue {} us, exec {} us)",
+                    stamp.name, stamp.version, r.logits, r.queue_us, r.exec_us
+                );
+            }
+            if reqs > 1 {
+                println!("latency over {reqs} requests: {}", lat.summary());
+            }
+            if verify.is_some() {
+                println!("all {reqs} response(s) bit-exact vs refcompute (seed-verified)");
+            }
+            Ok(())
+        }
+        "load" => {
+            let model = second_positional(args, "load", addr)?;
+            let st = match args.get("seed") {
+                Some(s) => {
+                    let seed: u64 = s
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--seed must be a u64"))?;
+                    client.load_seeded(model, seed)?
+                }
+                None => client.load(model)?,
+            };
+            println!("loaded {} v{} (id {})", st.name, st.version, st.id);
+            Ok(())
+        }
+        "swap" => {
+            let model = second_positional(args, "swap", addr)?;
+            let seed = match args.get("seed") {
+                Some(s) => Some(
+                    s.parse::<u64>()
+                        .map_err(|_| anyhow::anyhow!("--seed must be a u64"))?,
+                ),
+                None => None,
+            };
+            let st = client.swap(model, seed)?;
+            println!("swapped {} -> v{} (id {})", st.name, st.version, st.id);
+            Ok(())
+        }
+        "unload" => {
+            let model = second_positional(args, "unload", addr)?;
+            let st = client.unload(model)?;
+            println!("unloaded {} v{} (id {})", st.name, st.version, st.id);
+            Ok(())
+        }
+        "models" => {
+            let models = client.models()?;
+            if json {
+                let arr = wire::Json::Arr(models.iter().map(wire::desc_to_json).collect());
+                println!("{}", wire::encode(&arr));
+                return Ok(());
+            }
+            println!(
+                "{:<18} {:>4} {:>8} {:>12} {:>16} {:>10} {:>8}",
+                "model", "ver", "id", "params", "macs", "input", "classes"
+            );
+            for d in &models {
+                println!(
+                    "{:<18} {:>4} {:>8} {:>12} {:>16} {:>10} {:>8}",
+                    d.name, d.version, d.id, d.params, d.macs, d.input_len, d.classes
+                );
+            }
+            Ok(())
+        }
+        "info" => {
+            let model = second_positional(args, "info", addr)?;
+            let d = client.model_info(model)?;
+            if json {
+                println!("{}", wire::encode(&wire::desc_to_json(&d)));
+                return Ok(());
+            }
+            println!(
+                "{} v{} (id {}): input {} values, {} classes, {} layers, {} params, {} MACs",
+                d.name, d.version, d.id, d.input_len, d.classes, d.layers, d.params, d.macs
+            );
+            Ok(())
+        }
+        "stats" => {
+            let stats = client.stats()?;
+            if json {
+                let resp = api::Response::Stats(stats);
+                println!("{}", String::from_utf8(wire::encode_response(&resp))?);
+                return Ok(());
+            }
+            print_stats(&api::Response::Stats(stats))
+        }
+        other => bail!(
+            "unknown client op {other:?} (use infer | load | swap | unload | models | info | stats)"
+        ),
+    }
 }
 
 /// Serve the AOT artifact through PJRT over the held-out test set.

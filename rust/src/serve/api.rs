@@ -1,0 +1,645 @@
+//! The typed service API: every operation the serving layer supports —
+//! data plane (`Infer`), admin plane (`Load`/`LoadSeeded`/`Swap`/
+//! `Unload`) and observability plane (`ListModels`/`ModelInfo`/
+//! `Stats`) — expressed as one [`Request`]/[`Response`] pair, with a
+//! single [`Service::dispatch`] both the in-process callers and the
+//! TCP endpoint (`serve::net`) route through. A remote call is
+//! therefore the same call: same registry mutation, same
+//! [`ModelStamp`] on the response, same refcompute cross-checkability.
+//!
+//! Errors never escape as `Err`: `dispatch` folds every failure into
+//! [`Response::Error`], so the wire protocol needs exactly one
+//! response envelope and local callers can match on it the same way a
+//! remote client does.
+//!
+//! [`RegistryManifest`] is the persistence satellite: with
+//! `serve --registry-file PATH`, every API-plane registry mutation
+//! rewrites a small JSON manifest (name, zoo id, weight seed,
+//! version), and a restarted server reloads the exact model set —
+//! versions and weights bit-identical, because weights are a pure
+//! function of (network, seed).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::ArchConfig;
+use crate::model::{zoo, Network};
+
+use super::metrics::ModelMetricsSnapshot;
+use super::registry::{ModelRegistry, ModelStamp, ModelVersion};
+use super::server::Server;
+
+/// A typed request on the service API. `Infer` is the data plane;
+/// `Load`/`LoadSeeded`/`Swap`/`Unload` the admin plane (zoo model
+/// names, case-insensitive); `ListModels`/`ModelInfo`/`Stats` the
+/// observability plane.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    /// Run one image. `model: None` routes to the sole loaded model
+    /// (exactly like `Server::submit`); `Some(name)` routes by name.
+    Infer { model: Option<String>, image: Vec<i8> },
+    /// Compile and publish a zoo model under its canonical name, with
+    /// the compiler's deterministic default weight seed.
+    Load { model: String },
+    /// [`Request::Load`] with an explicit weight seed.
+    LoadSeeded { model: String, seed: u64 },
+    /// Hot-swap a loaded model to a freshly compiled version;
+    /// `seed: Some(_)` makes the swap observable in the outputs.
+    Swap { model: String, seed: Option<u64> },
+    /// Remove a model; in-flight requests drain on their version.
+    Unload { model: String },
+    /// Describe every loaded model.
+    ListModels,
+    /// Describe one loaded model.
+    ModelInfo { model: String },
+    /// Per-model serving metrics (p50/p95/p99, counts, queue depth).
+    Stats,
+}
+
+/// The response envelope for every [`Request`]. Failures are
+/// [`Response::Error`] — never a transport-level error — so local and
+/// remote callers handle them identically.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Response {
+    Infer(InferReply),
+    Loaded(ModelStamp),
+    Swapped(ModelStamp),
+    Unloaded(ModelStamp),
+    Models(Vec<ModelDesc>),
+    Info(ModelDesc),
+    Stats(StatsReply),
+    Error { message: String },
+}
+
+/// A served inference: the logits plus the exact model version that
+/// produced them ([`ModelStamp`], for refcompute cross-checks) and the
+/// server-side timing split.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InferReply {
+    pub logits: Vec<i8>,
+    /// `None` only on the single-model PJRT backend.
+    pub model: Option<ModelStamp>,
+    /// Time the request spent queued (microseconds).
+    pub queue_us: u64,
+    /// Executor time attributed to the request (microseconds).
+    pub exec_us: u64,
+}
+
+/// Static description of a model. `id`/`version` are 0 when the model
+/// is described from the zoo rather than a live registry entry
+/// (`domino models --json`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelDesc {
+    pub name: String,
+    pub id: u64,
+    pub version: u64,
+    pub input_len: u64,
+    pub classes: u64,
+    pub layers: u64,
+    pub params: u64,
+    pub macs: u64,
+}
+
+impl ModelDesc {
+    /// Describe a network that is not (necessarily) loaded.
+    pub fn of_network(net: &Network) -> Result<Self> {
+        Ok(Self {
+            name: net.name.clone(),
+            id: 0,
+            version: 0,
+            input_len: net.input_len() as u64,
+            classes: net.output_shape()?.c as u64,
+            layers: net.layers.len() as u64,
+            params: net.total_params()?,
+            macs: net.total_macs()?,
+        })
+    }
+
+    /// Describe a live registry entry.
+    pub fn of_version(mv: &ModelVersion) -> Result<Self> {
+        let mut d = Self::of_network(&mv.program().net)?;
+        d.name = mv.name().to_string();
+        d.id = mv.id();
+        d.version = mv.version();
+        Ok(d)
+    }
+}
+
+/// The `Stats` payload: the former aggregate counters plus the
+/// per-model split ([`ModelMetricsSnapshot`]: served/failed/rejected
+/// counts, live queue-depth gauge, p50/p95/p99 latency).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StatsReply {
+    pub served: u64,
+    pub rejected: u64,
+    pub failed: u64,
+    pub models: Vec<ModelMetricsSnapshot>,
+}
+
+/// One persisted registry entry: enough to recompile the exact same
+/// model version after a restart.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// Canonical zoo name to recompile from.
+    pub zoo: String,
+    /// Weight seed (`None` = the compiler's deterministic default).
+    pub seed: Option<u64>,
+    /// Version to republish at (preserved across restarts).
+    pub version: u64,
+}
+
+/// The on-disk registry manifest behind `serve --registry-file PATH`:
+/// a JSON document (written with the `serve::wire` encoder) rewritten
+/// atomically on every API-plane registry mutation and replayed into a
+/// fresh [`ModelRegistry`] on restart.
+pub struct RegistryManifest {
+    path: PathBuf,
+    entries: Mutex<BTreeMap<String, ManifestEntry>>,
+}
+
+impl RegistryManifest {
+    /// Open (and parse) the manifest at `path`; a missing file is an
+    /// empty manifest, a malformed one is an error.
+    pub fn open(path: &Path) -> Result<Self> {
+        let entries = if path.exists() {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("read registry manifest {}", path.display()))?;
+            Self::parse(&text)
+                .with_context(|| format!("parse registry manifest {}", path.display()))?
+        } else {
+            BTreeMap::new()
+        };
+        Ok(Self {
+            path: path.to_path_buf(),
+            entries: Mutex::new(entries),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.lock().unwrap().is_empty()
+    }
+
+    fn parse(text: &str) -> Result<BTreeMap<String, ManifestEntry>> {
+        use super::wire::{self, Json};
+        let doc = wire::decode(text)?;
+        let models = doc
+            .get("models")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest has no \"models\" array"))?;
+        let mut entries = BTreeMap::new();
+        for m in models {
+            let name = wire::str_field(m, "name")?;
+            let entry = ManifestEntry {
+                zoo: wire::str_field(m, "zoo")?,
+                seed: wire::opt_u64_field(m, "seed")?,
+                version: wire::u64_field(m, "version")?,
+            };
+            entries.insert(name, entry);
+        }
+        Ok(entries)
+    }
+
+    fn entries_to_json(entries: &BTreeMap<String, ManifestEntry>) -> super::wire::Json {
+        use super::wire::Json;
+        let models: Vec<Json> = entries
+            .iter()
+            .map(|(name, e)| {
+                Json::Obj(vec![
+                    ("name".to_string(), Json::Str(name.clone())),
+                    ("zoo".to_string(), Json::Str(e.zoo.clone())),
+                    (
+                        "seed".to_string(),
+                        match e.seed {
+                            Some(s) => Json::Int(s as i128),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("version".to_string(), Json::Int(e.version as i128)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![("models".to_string(), Json::Arr(models))])
+    }
+
+    /// Record (or update) one entry in memory; call [`Self::save`] to
+    /// persist.
+    pub fn record(&self, name: &str, zoo: &str, seed: Option<u64>, version: u64) {
+        self.entries.lock().unwrap().insert(
+            name.to_string(),
+            ManifestEntry {
+                zoo: zoo.to_string(),
+                seed,
+                version,
+            },
+        );
+    }
+
+    /// Drop one entry in memory; call [`Self::save`] to persist.
+    pub fn remove(&self, name: &str) {
+        self.entries.lock().unwrap().remove(name);
+    }
+
+    /// Atomically rewrite the manifest file (write temp + rename, so a
+    /// crash mid-write never leaves a truncated manifest). The entries
+    /// lock is held across encode + write + rename: concurrent admin
+    /// dispatches share one temp file, and unsynchronized writers
+    /// could interleave bytes and publish a mangled manifest.
+    pub fn save(&self) -> Result<()> {
+        let entries = self.entries.lock().unwrap();
+        let text = super::wire::encode(&Self::entries_to_json(&entries));
+        let tmp = self.path.with_extension("tmp");
+        std::fs::write(&tmp, text.as_bytes())
+            .with_context(|| format!("write registry manifest {}", tmp.display()))?;
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("publish registry manifest {}", self.path.display()))?;
+        Ok(())
+    }
+
+    /// Replay every entry into `registry` (recompiling each model from
+    /// its recorded zoo name and seed at its recorded version). Names
+    /// already loaded are left untouched. Returns how many models were
+    /// restored.
+    pub fn restore(&self, registry: &ModelRegistry, arch: ArchConfig) -> Result<usize> {
+        let entries = self.entries.lock().unwrap().clone();
+        let mut restored = 0;
+        for (name, e) in &entries {
+            if registry.get(name).is_some() {
+                continue;
+            }
+            let net = zoo::lookup(&e.zoo)
+                .with_context(|| format!("restore manifest entry {name:?}"))?;
+            registry
+                .load_restored(name, &net, arch, e.seed, e.version)
+                .with_context(|| format!("restore manifest entry {name:?}"))?;
+            restored += 1;
+        }
+        Ok(restored)
+    }
+}
+
+/// The one front door for every plane: wraps a running [`Server`] and
+/// dispatches typed [`Request`]s, locally or (through `serve::net`)
+/// over TCP. Admin mutations optionally persist through a
+/// [`RegistryManifest`].
+pub struct Service {
+    server: Server,
+    arch: ArchConfig,
+    manifest: Option<Arc<RegistryManifest>>,
+}
+
+impl Service {
+    pub fn new(server: Server, arch: ArchConfig) -> Self {
+        Self {
+            server,
+            arch,
+            manifest: None,
+        }
+    }
+
+    /// [`Self::new`], persisting every API-plane registry mutation to
+    /// `manifest` (see [`RegistryManifest`]).
+    pub fn with_manifest(server: Server, arch: ArchConfig, manifest: Arc<RegistryManifest>) -> Self {
+        Self {
+            server,
+            arch,
+            manifest: Some(manifest),
+        }
+    }
+
+    /// The wrapped server (counters, registry, direct submit paths).
+    pub fn server(&self) -> &Server {
+        &self.server
+    }
+
+    /// Shut the wrapped server down (graceful drain; see
+    /// `Server::shutdown`).
+    pub fn shutdown(self) -> Result<Vec<u64>> {
+        self.server.shutdown()
+    }
+
+    /// Execute one typed request. This is the single entry point both
+    /// the in-process path and the TCP endpoint use; failures become
+    /// [`Response::Error`], never `Err`.
+    pub fn dispatch(&self, req: Request) -> Response {
+        let r = match req {
+            Request::Infer { model, image } => self.do_infer(model, image),
+            Request::Load { model } => self.do_load(&model, None),
+            Request::LoadSeeded { model, seed } => self.do_load(&model, Some(seed)),
+            Request::Swap { model, seed } => self.do_swap(&model, seed),
+            Request::Unload { model } => self.do_unload(&model),
+            Request::ListModels => self.do_list(),
+            Request::ModelInfo { model } => self.do_info(&model),
+            Request::Stats => Ok(self.do_stats()),
+        };
+        r.unwrap_or_else(|e| Response::Error {
+            message: format!("{e:#}"),
+        })
+    }
+
+    fn registry(&self) -> Result<&Arc<ModelRegistry>> {
+        self.server.registry().ok_or_else(|| {
+            anyhow!(
+                "the {} backend has no model registry (admin and model \
+                 requests need the sim backend)",
+                self.server.backend()
+            )
+        })
+    }
+
+    /// Resolve a user-supplied model name to the registry key it is
+    /// published under. An exact registry match wins (a prebuilt model
+    /// may be published under a name that happens to alias a zoo
+    /// entry); otherwise zoo names are canonicalized (`TINY_CNN` →
+    /// `tiny-cnn`), and unknown names pass through so registry errors
+    /// can list what *is* loaded. Borrowed (allocation-free) in the
+    /// common already-canonical case; the registry probe here plus
+    /// the lookup inside the eventual registry operation is two cheap
+    /// uncontended read-lock hits — noise next to a cycle-accurate
+    /// image simulation.
+    fn registry_key<'a>(&self, model: &'a str) -> std::borrow::Cow<'a, str> {
+        use std::borrow::Cow;
+        if let Some(reg) = self.server.registry() {
+            if reg.get(model).is_some() {
+                return Cow::Borrowed(model);
+            }
+        }
+        match zoo::by_name(model) {
+            Some(net) => Cow::Owned(net.name),
+            None => Cow::Borrowed(model),
+        }
+    }
+
+    fn persist(&self) -> Result<()> {
+        match &self.manifest {
+            Some(m) => m
+                .save()
+                .context("registry mutation applied, but the manifest write failed"),
+            None => Ok(()),
+        }
+    }
+
+    fn do_infer(&self, model: Option<String>, image: Vec<i8>) -> Result<Response> {
+        let r = match &model {
+            // canonicalize like every other plane, so the name that
+            // worked for Load/ModelInfo also works for Infer
+            Some(m) => self.server.infer_on(&self.registry_key(m), image)?,
+            None => self.server.infer(image)?,
+        };
+        Ok(Response::Infer(InferReply {
+            logits: r.logits,
+            model: r.model,
+            queue_us: r.queue.as_micros() as u64,
+            exec_us: r.exec.as_micros() as u64,
+        }))
+    }
+
+    fn do_load(&self, model: &str, seed: Option<u64>) -> Result<Response> {
+        let reg = self.registry()?;
+        let net = zoo::lookup(model)?;
+        let mv = reg.load_seeded(&net.name, &net, self.arch, seed)?;
+        if let Some(man) = &self.manifest {
+            man.record(&net.name, &net.name, seed, mv.version());
+        }
+        self.persist()?;
+        Ok(Response::Loaded(mv.stamp()))
+    }
+
+    fn do_swap(&self, model: &str, seed: Option<u64>) -> Result<Response> {
+        let reg = self.registry()?;
+        let net = zoo::lookup(model)?;
+        let mv = reg.swap_seeded(&net.name, &net, self.arch, seed)?;
+        if let Some(man) = &self.manifest {
+            man.record(&net.name, &net.name, seed, mv.version());
+        }
+        self.persist()?;
+        Ok(Response::Swapped(mv.stamp()))
+    }
+
+    fn do_unload(&self, model: &str) -> Result<Response> {
+        let reg = self.registry()?;
+        let key = self.registry_key(model);
+        let mv = reg.unload(&key)?;
+        if let Some(man) = &self.manifest {
+            man.remove(&key);
+        }
+        self.persist()?;
+        Ok(Response::Unloaded(mv.stamp()))
+    }
+
+    fn do_list(&self) -> Result<Response> {
+        let reg = self.registry()?;
+        let descs: Vec<ModelDesc> = reg
+            .list()
+            .iter()
+            .map(|mv| ModelDesc::of_version(mv))
+            .collect::<Result<_>>()?;
+        Ok(Response::Models(descs))
+    }
+
+    fn do_info(&self, model: &str) -> Result<Response> {
+        let reg = self.registry()?;
+        let key = self.registry_key(model);
+        let mv = reg.get(&key).ok_or_else(|| {
+            anyhow!(
+                "model {model:?} is not loaded (loaded: [{}])",
+                reg.names().join(", ")
+            )
+        })?;
+        Ok(Response::Info(ModelDesc::of_version(&mv)?))
+    }
+
+    fn do_stats(&self) -> Response {
+        Response::Stats(StatsReply {
+            served: self.server.served(),
+            rejected: self.server.rejected(),
+            failed: self.server.failed(),
+            models: self.server.metrics_snapshot(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::ServeConfig;
+
+    fn start_service() -> Service {
+        let registry = Arc::new(ModelRegistry::new());
+        let net = zoo::tiny_mlp();
+        registry.load(&net.name, &net, ArchConfig::default()).unwrap();
+        let server = Server::start_multi(
+            ServeConfig {
+                workers: 1,
+                max_batch: 4,
+                queue_cap: 64,
+            },
+            registry,
+        )
+        .unwrap();
+        Service::new(server, ArchConfig::default())
+    }
+
+    #[test]
+    fn dispatch_covers_all_three_planes_and_matches_inprocess() {
+        let service = start_service();
+
+        // admin plane: load a second model by (case-insensitive) name
+        let stamp = match service.dispatch(Request::LoadSeeded {
+            model: "TINY_RESNET".into(),
+            seed: 0xAB,
+        }) {
+            Response::Loaded(s) => s,
+            other => panic!("expected Loaded, got {other:?}"),
+        };
+        assert_eq!(&*stamp.name, "tiny-resnet");
+        assert_eq!(stamp.version, 1);
+
+        // observability plane: both models described
+        let models = match service.dispatch(Request::ListModels) {
+            Response::Models(m) => m,
+            other => panic!("expected Models, got {other:?}"),
+        };
+        let names: Vec<&str> = models.iter().map(|d| d.name.as_str()).collect();
+        assert_eq!(names, ["tiny-mlp", "tiny-resnet"]);
+        assert!(models.iter().all(|d| d.params > 0 && d.macs > 0));
+
+        // data plane: dispatch(Infer) is the same call as infer_on —
+        // same model version stamp, same logits
+        let mv = service
+            .server()
+            .registry()
+            .unwrap()
+            .get("tiny-resnet")
+            .unwrap();
+        let image = vec![5i8; mv.input_len()];
+        let reply = match service.dispatch(Request::Infer {
+            model: Some("tiny-resnet".into()),
+            image: image.clone(),
+        }) {
+            Response::Infer(r) => r,
+            other => panic!("expected Infer, got {other:?}"),
+        };
+        let direct = service.server().infer_on("tiny-resnet", image.clone()).unwrap();
+        assert_eq!(reply.logits, direct.logits);
+        assert_eq!(reply.model.as_ref(), direct.model.as_ref());
+        assert_eq!(reply.logits, mv.refcompute(&image).unwrap());
+
+        // swap bumps the stamp; infer after swap runs the new version
+        let swapped = match service.dispatch(Request::Swap {
+            model: "tiny-resnet".into(),
+            seed: Some(0xCD),
+        }) {
+            Response::Swapped(s) => s,
+            other => panic!("expected Swapped, got {other:?}"),
+        };
+        assert_eq!(swapped.version, 2);
+        let reply2 = match service.dispatch(Request::Infer {
+            model: Some("tiny-resnet".into()),
+            image: image.clone(),
+        }) {
+            Response::Infer(r) => r,
+            other => panic!("expected Infer, got {other:?}"),
+        };
+        assert_eq!(reply2.model.as_ref().unwrap().version, 2);
+        let mv2 = service
+            .server()
+            .registry()
+            .unwrap()
+            .get("tiny-resnet")
+            .unwrap();
+        assert_eq!(reply2.logits, mv2.refcompute(&image).unwrap());
+
+        // stats plane: per-model entries with counts and percentiles
+        let stats = match service.dispatch(Request::Stats) {
+            Response::Stats(s) => s,
+            other => panic!("expected Stats, got {other:?}"),
+        };
+        assert_eq!(stats.served, 3);
+        let resnet = stats
+            .models
+            .iter()
+            .find(|m| m.model == "tiny-resnet")
+            .expect("per-model stats entry");
+        assert_eq!(resnet.served, 3, "all three infers targeted tiny-resnet");
+        assert!(resnet.p50_us.is_some());
+
+        // unload, then errors are typed — never panics or Err
+        match service.dispatch(Request::Unload {
+            model: "tiny-resnet".into(),
+        }) {
+            Response::Unloaded(s) => assert_eq!(&*s.name, "tiny-resnet"),
+            other => panic!("expected Unloaded, got {other:?}"),
+        }
+        match service.dispatch(Request::Infer {
+            model: Some("tiny-resnet".into()),
+            image,
+        }) {
+            Response::Error { message } => {
+                assert!(message.contains("tiny-mlp"), "{message}")
+            }
+            other => panic!("expected Error, got {other:?}"),
+        }
+        match service.dispatch(Request::ModelInfo {
+            model: "nope".into(),
+        }) {
+            Response::Error { message } => {
+                assert!(message.contains("not loaded") || message.contains("unknown"), "{message}")
+            }
+            other => panic!("expected Error, got {other:?}"),
+        }
+
+        service.shutdown().unwrap();
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_restores_exact_versions() {
+        let path = std::env::temp_dir().join(format!(
+            "domino-manifest-test-{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+
+        // first life: load + swap through the manifest
+        let man = RegistryManifest::open(&path).unwrap();
+        assert!(man.is_empty());
+        man.record("tiny-mlp", "tiny-mlp", Some(0xAA), 1);
+        man.record("tiny-resnet", "tiny-resnet", None, 3);
+        man.save().unwrap();
+        assert!(path.exists());
+
+        // second life: reopen and replay into a fresh registry
+        let man2 = RegistryManifest::open(&path).unwrap();
+        assert_eq!(man2.len(), 2);
+        let registry = ModelRegistry::new();
+        let restored = man2.restore(&registry, ArchConfig::default()).unwrap();
+        assert_eq!(restored, 2);
+        let mlp = registry.get("tiny-mlp").unwrap();
+        assert_eq!(mlp.version(), 1);
+        let resnet = registry.get("tiny-resnet").unwrap();
+        assert_eq!(resnet.version(), 3, "version survives the restart");
+
+        // the restored weights are the same pure function of the seed
+        let direct = ModelRegistry::new();
+        let want = direct
+            .load_seeded("tiny-mlp", &zoo::tiny_mlp(), ArchConfig::default(), Some(0xAA))
+            .unwrap();
+        let img = vec![7i8; mlp.input_len()];
+        assert_eq!(mlp.refcompute(&img).unwrap(), want.refcompute(&img).unwrap());
+
+        // restore skips names that are already loaded
+        assert_eq!(man2.restore(&registry, ArchConfig::default()).unwrap(), 0);
+
+        let _ = std::fs::remove_file(&path);
+    }
+}

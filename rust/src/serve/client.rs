@@ -1,0 +1,147 @@
+//! The in-crate client for the TCP endpoint: typed wrappers over one
+//! `serve::wire` framed connection. Every method is a thin
+//! `Request -> Response` round-trip through [`Client::call`]; typed
+//! helpers unwrap the expected variant and turn
+//! [`api::Response::Error`] into an `Err`, so call sites read like the
+//! in-process API. The benches, the protocol smoke test and the
+//! `domino client …` CLI subcommands all drive the server through
+//! this type.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::api::{InferReply, ModelDesc, Request, Response, StatsReply};
+use super::registry::ModelStamp;
+use super::wire;
+
+/// One framed connection to a `serve::net` endpoint.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    /// Connect to `addr` (e.g. `127.0.0.1:7700`).
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| anyhow!("failed to connect to {addr}: {e}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Self { stream })
+    }
+
+    /// Bound how long a single response may take; `None` (the
+    /// default) waits indefinitely. A timeout surfaces as an error
+    /// from the next call.
+    pub fn set_read_timeout(&mut self, dur: Option<Duration>) -> Result<()> {
+        self.stream
+            .set_read_timeout(dur)
+            .map_err(|e| anyhow!("set read timeout: {e}"))
+    }
+
+    /// One raw round-trip: send `req`, receive the typed response
+    /// (which may be [`Response::Error`] — the typed helpers below
+    /// convert that into `Err`).
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        wire::write_frame(&mut self.stream, &wire::encode_request(req))?;
+        let frame = wire::read_frame(&mut self.stream)?
+            .ok_or_else(|| anyhow!("server closed the connection"))?;
+        wire::decode_response(&frame)
+    }
+
+    fn ok(resp: Response) -> Result<Response> {
+        match resp {
+            Response::Error { message } => bail!("server error: {message}"),
+            other => Ok(other),
+        }
+    }
+
+    /// Data plane: run one image on `model` (`None` = the sole loaded
+    /// model). The reply carries the serving model version's stamp for
+    /// refcompute cross-checks.
+    pub fn infer(&mut self, model: Option<&str>, image: Vec<i8>) -> Result<InferReply> {
+        let resp = self.call(&Request::Infer {
+            model: model.map(str::to_string),
+            image,
+        })?;
+        match Self::ok(resp)? {
+            Response::Infer(r) => Ok(r),
+            other => bail!("unexpected response to infer: {other:?}"),
+        }
+    }
+
+    /// Admin plane: load a zoo model (compiler-default weight seed).
+    pub fn load(&mut self, model: &str) -> Result<ModelStamp> {
+        let resp = self.call(&Request::Load {
+            model: model.to_string(),
+        })?;
+        match Self::ok(resp)? {
+            Response::Loaded(st) => Ok(st),
+            other => bail!("unexpected response to load: {other:?}"),
+        }
+    }
+
+    /// Admin plane: load a zoo model with an explicit weight seed.
+    pub fn load_seeded(&mut self, model: &str, seed: u64) -> Result<ModelStamp> {
+        let resp = self.call(&Request::LoadSeeded {
+            model: model.to_string(),
+            seed,
+        })?;
+        match Self::ok(resp)? {
+            Response::Loaded(st) => Ok(st),
+            other => bail!("unexpected response to load_seeded: {other:?}"),
+        }
+    }
+
+    /// Admin plane: hot-swap a loaded model (`seed: Some(_)` makes the
+    /// new weights observable).
+    pub fn swap(&mut self, model: &str, seed: Option<u64>) -> Result<ModelStamp> {
+        let resp = self.call(&Request::Swap {
+            model: model.to_string(),
+            seed,
+        })?;
+        match Self::ok(resp)? {
+            Response::Swapped(st) => Ok(st),
+            other => bail!("unexpected response to swap: {other:?}"),
+        }
+    }
+
+    /// Admin plane: unload a model (in-flight requests drain on their
+    /// version).
+    pub fn unload(&mut self, model: &str) -> Result<ModelStamp> {
+        let resp = self.call(&Request::Unload {
+            model: model.to_string(),
+        })?;
+        match Self::ok(resp)? {
+            Response::Unloaded(st) => Ok(st),
+            other => bail!("unexpected response to unload: {other:?}"),
+        }
+    }
+
+    /// Observability plane: describe every loaded model.
+    pub fn models(&mut self) -> Result<Vec<ModelDesc>> {
+        match Self::ok(self.call(&Request::ListModels)?)? {
+            Response::Models(m) => Ok(m),
+            other => bail!("unexpected response to list_models: {other:?}"),
+        }
+    }
+
+    /// Observability plane: describe one loaded model.
+    pub fn model_info(&mut self, model: &str) -> Result<ModelDesc> {
+        let resp = self.call(&Request::ModelInfo {
+            model: model.to_string(),
+        })?;
+        match Self::ok(resp)? {
+            Response::Info(d) => Ok(d),
+            other => bail!("unexpected response to model_info: {other:?}"),
+        }
+    }
+
+    /// Observability plane: per-model serving metrics.
+    pub fn stats(&mut self) -> Result<StatsReply> {
+        match Self::ok(self.call(&Request::Stats)?)? {
+            Response::Stats(s) => Ok(s),
+            other => bail!("unexpected response to stats: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! Per-model serving observability: latency percentiles, request
+//! counts and queue-depth gauges, split by model name (the former
+//! aggregate-only counters live on through `Server::served()` etc.).
+//!
+//! The hub is updated inline by the submit path (enqueue / reject) and
+//! the worker loop (dequeue / served / failed). Latency samples are
+//! kept in a bounded sliding window per model, so a long-running
+//! server's percentiles track *recent* behaviour and memory stays
+//! constant; totals are monotonic counters. A snapshot of the whole
+//! hub is what the `serve::api` `Stats` request returns — local and
+//! remote callers read the identical structure.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Metric key used for requests that carry no model tag (the PJRT
+/// backend and single-model `submit` on servers without a registry).
+pub const UNTAGGED_MODEL: &str = "default";
+
+/// Sliding-window size for per-model latency percentiles.
+const LATENCY_WINDOW: usize = 4096;
+
+/// Nearest-rank percentile of `samples` (microseconds). `None` when
+/// empty. Shared by [`LatencyStats`] and the per-model windows so both
+/// report identically.
+pub fn percentile_us(samples: &[u64], p: f64) -> Option<u64> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut v = samples.to_vec();
+    v.sort_unstable();
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    Some(v[rank.min(v.len() - 1)])
+}
+
+/// Latency statistics helper for load tests (unbounded sample set;
+/// use [`MetricsHub`] for long-running per-model accounting).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    /// Percentile (0-100) by nearest-rank.
+    pub fn percentile(&self, p: f64) -> Option<u64> {
+        percentile_us(&self.samples_us, p)
+    }
+
+    pub fn summary(&self) -> String {
+        match (
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+        ) {
+            (Some(p50), Some(p95), Some(p99)) => format!(
+                "p50 {p50} us, p95 {p95} us, p99 {p99} us (n={})",
+                self.count()
+            ),
+            _ => "no samples".to_string(),
+        }
+    }
+}
+
+/// Live counters for one model name.
+#[derive(Default)]
+struct ModelMetrics {
+    served: u64,
+    failed: u64,
+    rejected: u64,
+    /// Requests currently sitting in the bounded queue (gauge:
+    /// incremented at enqueue, decremented when a worker dequeues).
+    queue_depth: u64,
+    /// Total latency samples ever recorded (may exceed the window).
+    samples: u64,
+    /// Sliding window of the most recent end-to-end latencies (us).
+    window: Vec<u64>,
+    /// Next slot to overwrite once the window is full (ring cursor).
+    cursor: usize,
+}
+
+impl ModelMetrics {
+    fn record_latency(&mut self, us: u64) {
+        self.samples += 1;
+        if self.window.len() < LATENCY_WINDOW {
+            self.window.push(us);
+        } else {
+            self.window[self.cursor] = us;
+            self.cursor = (self.cursor + 1) % LATENCY_WINDOW;
+        }
+    }
+}
+
+/// Point-in-time view of one model's metrics.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelMetricsSnapshot {
+    pub model: String,
+    pub served: u64,
+    pub failed: u64,
+    pub rejected: u64,
+    pub queue_depth: u64,
+    /// Total latency samples recorded (percentiles cover the most
+    /// recent window of them).
+    pub samples: u64,
+    pub p50_us: Option<u64>,
+    pub p95_us: Option<u64>,
+    pub p99_us: Option<u64>,
+}
+
+/// The per-model metrics hub shared by the submit path and the worker
+/// loop. One mutex over a name-keyed map: the serving path takes it a
+/// handful of times per request, which is noise next to a cycle-level
+/// simulation, and keeps every counter and its latency window in one
+/// consistent place.
+#[derive(Default)]
+pub struct MetricsHub {
+    models: Mutex<BTreeMap<String, ModelMetrics>>,
+}
+
+impl MetricsHub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn with<F: FnOnce(&mut ModelMetrics)>(&self, model: &str, f: F) {
+        let mut map = self.models.lock().unwrap();
+        // fast path: the entry almost always exists, so the steady
+        // state pays no key allocation — only the first request for a
+        // new model name allocates
+        if let Some(m) = map.get_mut(model) {
+            f(m);
+            return;
+        }
+        f(map.entry(model.to_string()).or_default());
+    }
+
+    /// A request for `model` entered the queue.
+    pub(crate) fn on_enqueue(&self, model: &str) {
+        self.with(model, |m| m.queue_depth += 1);
+    }
+
+    /// A request for `model` was refused by backpressure (queue full).
+    pub(crate) fn on_reject(&self, model: &str) {
+        self.with(model, |m| m.rejected += 1);
+    }
+
+    /// A worker pulled a request for `model` out of the queue.
+    pub(crate) fn on_dequeue(&self, model: &str) {
+        self.with(model, |m| m.queue_depth = m.queue_depth.saturating_sub(1));
+    }
+
+    /// A request for `model` was answered; `latency` is its end-to-end
+    /// time (queue wait + attributed execution).
+    pub(crate) fn on_served(&self, model: &str, latency: Duration) {
+        self.with(model, |m| {
+            m.served += 1;
+            m.record_latency(latency.as_micros() as u64);
+        });
+    }
+
+    /// A request for `model` failed in execution after being accepted.
+    pub(crate) fn on_failed(&self, model: &str) {
+        self.with(model, |m| m.failed += 1);
+    }
+
+    /// Snapshot every model's counters and window percentiles, in name
+    /// order.
+    pub fn snapshot(&self) -> Vec<ModelMetricsSnapshot> {
+        let map = self.models.lock().unwrap();
+        map.iter()
+            .map(|(name, m)| ModelMetricsSnapshot {
+                model: name.clone(),
+                served: m.served,
+                failed: m.failed,
+                rejected: m.rejected,
+                queue_depth: m.queue_depth,
+                samples: m.samples,
+                p50_us: percentile_us(&m.window, 50.0),
+                p95_us: percentile_us(&m.window, 95.0),
+                p99_us: percentile_us(&m.window, 99.0),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles() {
+        let mut s = LatencyStats::default();
+        for i in 1..=100u64 {
+            s.record(Duration::from_micros(i));
+        }
+        assert_eq!(s.percentile(50.0), Some(51)); // nearest-rank on 1..=100
+        assert_eq!(s.percentile(99.0), Some(99));
+        assert_eq!(s.percentile(100.0), Some(100));
+        assert_eq!(LatencyStats::default().percentile(50.0), None);
+    }
+
+    #[test]
+    fn hub_tracks_counts_gauges_and_percentiles_per_model() {
+        let hub = MetricsHub::new();
+        // queue depth is a gauge: up on enqueue, down on dequeue
+        hub.on_enqueue("a");
+        hub.on_enqueue("a");
+        hub.on_enqueue("b");
+        let snap = hub.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].model, "a");
+        assert_eq!(snap[0].queue_depth, 2);
+        assert_eq!(snap[1].model, "b");
+        assert_eq!(snap[1].queue_depth, 1);
+        // no samples yet -> no percentiles
+        assert_eq!(snap[0].p50_us, None);
+
+        hub.on_dequeue("a");
+        hub.on_served("a", Duration::from_micros(100));
+        hub.on_dequeue("a");
+        hub.on_served("a", Duration::from_micros(300));
+        hub.on_dequeue("b");
+        hub.on_failed("b");
+        hub.on_reject("b");
+
+        let snap = hub.snapshot();
+        let a = &snap[0];
+        assert_eq!((a.served, a.failed, a.rejected, a.queue_depth), (2, 0, 0, 0));
+        assert_eq!(a.samples, 2);
+        // nearest-rank on 2 samples: rank = (0.5 * 1).round() = 1, so
+        // the p50 of [100, 300] is 300 (same formula LatencyStats has
+        // always used — pinned by `latency_percentiles` above)
+        assert_eq!(a.p50_us, Some(300));
+        assert_eq!(a.p99_us, Some(300));
+        let b = &snap[1];
+        assert_eq!((b.served, b.failed, b.rejected, b.queue_depth), (0, 1, 1, 0));
+        assert_eq!(b.p50_us, None);
+    }
+
+    #[test]
+    fn window_is_bounded_but_totals_are_not() {
+        let hub = MetricsHub::new();
+        let n = (LATENCY_WINDOW + 100) as u64;
+        for i in 0..n {
+            hub.on_served("m", Duration::from_micros(i));
+        }
+        let snap = hub.snapshot();
+        assert_eq!(snap[0].served, n);
+        assert_eq!(snap[0].samples, n);
+        // the window slid: the smallest retained sample is >= 100
+        assert!(snap[0].p50_us.unwrap() >= 100);
+    }
+
+    #[test]
+    fn dequeue_never_underflows() {
+        let hub = MetricsHub::new();
+        hub.on_dequeue("ghost");
+        assert_eq!(hub.snapshot()[0].queue_depth, 0);
+    }
+}

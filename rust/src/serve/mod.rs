@@ -1,42 +1,50 @@
-//! Inference serving: the production-style request loop, with two
-//! interchangeable execution backends behind one queue — and, on the
-//! simulator backend, a multi-model registry with hot-swap.
+//! Inference serving: the production-style request loop, the
+//! multi-model registry with hot-swap — and, around them, one typed
+//! service API that local callers and remote clients share.
 //!
-//! The server is a bounded request queue with backpressure, a
-//! configurable pool of worker threads, micro-batched dequeueing and
-//! latency/throughput accounting (p50/p95/p99). What executes a
-//! dequeued micro-batch is the **backend**:
+//! ## Layout
 //!
-//! * **PJRT** ([`Server::start`]) — each worker owns a private PJRT
-//!   client executing the AOT-compiled JAX/Pallas artifact (`make
-//!   artifacts`; the `xla` crate's raw handles are not `Send`, hence
-//!   per-worker clients). Python is never on this path.
-//! * **Cycle simulator** ([`Server::start_sim`], [`Server::start_multi`])
-//!   — requests are routed by model tag through a shared
-//!   [`ModelRegistry`] of compiled [`Program`]s; each worker keeps one
-//!   warm [`crate::sim::PooledEngine`] per loaded model in a
-//!   [`crate::sim::EnginePool`] (built once, tile state reset between
-//!   images — never rebuilt per request or per batch). This serves the
-//!   paper's cycle-accurate datapath end-to-end — submit → route →
-//!   micro-batch → response — and is what
-//!   `benches/serve_sim_throughput.rs` load-tests. Every response is
-//!   stamped with the exact model *version* that served it
-//!   ([`Response::model`]), so callers cross-check it bit-for-bit
-//!   against `model::refcompute` with that version's weights
-//!   ([`ModelVersion::weights`]): a routing bug is a correctness
-//!   failure, not a silent misroute.
+//! * [`server`](self) core ([`Server`], [`ServeConfig`]) — a bounded
+//!   request queue with backpressure, a configurable worker pool,
+//!   micro-batched dequeueing and graceful drain-on-shutdown, over two
+//!   interchangeable execution backends: the AOT artifact through
+//!   PJRT ([`Server::start`]) and the cycle-accurate simulator
+//!   ([`Server::start_sim`], [`Server::start_multi`]).
+//! * [`ModelRegistry`] / [`ModelVersion`] — versioned compiled
+//!   programs, load/hot-swap/unload safe under traffic; every response
+//!   is stamped ([`ModelStamp`]) with the exact version that served it
+//!   so callers can cross-check bit-for-bit against
+//!   [`ModelVersion::refcompute`]. A request resolves its version at
+//!   **submit** time and carries the `Arc` through the queue, so
+//!   swap/unload never drop or reroute in-flight work.
+//! * [`api`] — the typed service surface: `Request`/`Response` enums
+//!   covering the data plane (`Infer`), the admin plane
+//!   (`Load`/`LoadSeeded`/`Swap`/`Unload`) and the observability plane
+//!   (`ListModels`/`ModelInfo`/`Stats`), all executed by one
+//!   [`Service::dispatch`] — the in-process path and the network path
+//!   are the same call. [`api::RegistryManifest`] persists the loaded
+//!   set across restarts (`serve --registry-file`).
+//! * [`wire`] — the dependency-free wire protocol: length-prefixed
+//!   frames of hand-rolled, escaping-correct JSON (std only; the
+//!   build image is offline, so no serde).
+//! * [`net`] — the TCP endpoint (`domino serve --listen ADDR`):
+//!   bounded accept loop feeding the existing bounded queue, graceful
+//!   drain on shutdown.
+//! * [`client`] — the in-crate typed client (`domino client …`, the
+//!   benches and the protocol smoke test).
+//! * [`metrics`] — per-model observability: p50/p95/p99 latency,
+//!   served/failed/rejected counts and live queue-depth gauges, keyed
+//!   by model name and served through the `Stats` request.
 //!
 //! ## Hot-swap semantics
 //!
 //! [`ModelRegistry::swap`] compiles the replacement *outside* the
-//! registry lock, then atomically republishes the name. A request
-//! resolves its model version at **submit** time and carries the
-//! `Arc<ModelVersion>` through the queue, so swap/unload never drops or
-//! reroutes in-flight work: requests accepted against the old version
-//! drain on the old program, requests submitted after the swap run on
-//! the new one. Workers prune engines of dead versions from their pools
-//! after a micro-batch; a still-queued request of a pruned version just
-//! rebuilds its engine on demand.
+//! registry lock, then atomically republishes the name: requests
+//! accepted against the old version drain on the old program,
+//! requests submitted after the swap run on the new one. Workers keep
+//! one warm [`crate::sim::PooledEngine`] per loaded model in a
+//! [`crate::sim::EnginePool`] and prune engines of dead versions after
+//! a micro-batch.
 //!
 //! Shutdown is graceful under load: workers drain the queue completely
 //! before exiting, so every accepted request is resolved — answered on
@@ -46,1103 +54,17 @@
 //! The `stop` flag is published while holding the queue mutex — a
 //! store outside the lock could land between a worker's emptiness
 //! check and its `Condvar::wait`, and the notification would be lost
-//! (the classic missed-wakeup race; regression-tested below).
-
-use std::collections::btree_map::Entry;
-use std::collections::{BTreeMap, HashSet, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
-use std::time::{Duration, Instant};
-
-use anyhow::{anyhow, bail, Context, Result};
-
-use crate::coordinator::{ArchConfig, Compiler, Program};
-use crate::model::refcompute::Weights;
-use crate::model::Network;
-use crate::sim::EnginePool;
-
-/// Compile `net` into a shared program + the exact weights it bakes in.
-/// `weight_seed` of `None` uses the compiler's deterministic default
-/// seed; a swap that must be *observable* passes a different seed.
-fn compile_model(
-    net: &Network,
-    arch: ArchConfig,
-    weight_seed: Option<u64>,
-) -> Result<(Arc<Program>, Weights)> {
-    let mut compiler = Compiler::new(arch);
-    if let Some(seed) = weight_seed {
-        compiler.weight_seed = seed;
-    }
-    let weights = Weights::random(net, compiler.weight_seed)?;
-    let program = compiler.compile_with_weights(net, &weights)?;
-    Ok((Arc::new(program), weights))
-}
-
-/// Compile `net` for the cycle-simulator backend with the compiler's
-/// deterministic weight seed. Returns the shared program and the exact
-/// weights it bakes in, so callers can cross-check every response
-/// against `model::refcompute::forward` bit-for-bit.
-pub fn sim_program(net: &Network, arch: ArchConfig) -> Result<(Arc<Program>, Weights)> {
-    compile_model(net, arch, None)
-}
-
-/// One loaded, immutable model version: a compiled program plus the
-/// weights baked into it (when the registry compiled it — prebuilt
-/// programs may not carry weights). Versions are never mutated; a swap
-/// publishes a *new* `ModelVersion` under the same name.
-#[derive(Debug)]
-pub struct ModelVersion {
-    /// Globally unique id across the registry (every load and swap
-    /// mints a fresh one) — the engine-pool cache key.
-    id: u64,
-    name: Arc<str>,
-    /// Per-name version counter: 1 on load, +1 per swap.
-    version: u64,
-    program: Arc<Program>,
-    weights: Option<Weights>,
-}
-
-impl ModelVersion {
-    /// Globally unique id (fresh per load/swap; engine-pool key).
-    pub fn id(&self) -> u64 {
-        self.id
-    }
-
-    /// Registry name requests are routed by.
-    pub fn name(&self) -> &str {
-        &self.name
-    }
-
-    /// 1 on first load, incremented by every swap of this name.
-    pub fn version(&self) -> u64 {
-        self.version
-    }
-
-    pub fn program(&self) -> &Arc<Program> {
-        &self.program
-    }
-
-    /// The weights this version's program was compiled with (for
-    /// refcompute cross-checks). `None` only for
-    /// [`ModelRegistry::load_prebuilt`] entries registered without
-    /// weights.
-    pub fn weights(&self) -> Option<&Weights> {
-        self.weights.as_ref()
-    }
-
-    /// Flat int8 input length this model accepts.
-    pub fn input_len(&self) -> usize {
-        self.program.net.input_len()
-    }
-
-    /// Lightweight identity stamp attached to every response.
-    pub fn stamp(&self) -> ModelStamp {
-        ModelStamp {
-            name: Arc::clone(&self.name),
-            id: self.id,
-            version: self.version,
-        }
-    }
-
-    /// Run the int8 reference network over one image with exactly this
-    /// version's weights — the per-response correctness oracle used by
-    /// the CLI, the load bench and the serving tests. Errors when the
-    /// version was registered without weights
-    /// ([`ModelRegistry::load_prebuilt`]).
-    pub fn refcompute(&self, image: &[i8]) -> Result<Vec<i8>> {
-        let weights = self.weights.as_ref().ok_or_else(|| {
-            anyhow!("model {:?} was registered without weights", &*self.name)
-        })?;
-        let net = &self.program.net;
-        let out = crate::model::refcompute::forward(
-            net,
-            weights,
-            &crate::model::refcompute::Tensor::new(net.input, image.to_vec()),
-        )?;
-        Ok(out.data)
-    }
-}
-
-/// Which model version served a response.
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub struct ModelStamp {
-    pub name: Arc<str>,
-    pub id: u64,
-    pub version: u64,
-}
-
-/// A concurrent, versioned registry of compiled models, shared by the
-/// serve workers (read side) and an admin path (load/swap/unload). All
-/// operations are safe while the server is taking traffic; see the
-/// module docs for the drain semantics.
-pub struct ModelRegistry {
-    models: RwLock<BTreeMap<String, Arc<ModelVersion>>>,
-    next_id: AtomicU64,
-    /// Monotonic mutation counter, bumped by every successful
-    /// load/swap/unload. Workers compare it against the last value
-    /// they saw to skip engine-cache pruning (and its read lock +
-    /// allocation) on the steady-state serving path.
-    generation: AtomicU64,
-}
-
-impl Default for ModelRegistry {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl ModelRegistry {
-    pub fn new() -> Self {
-        Self {
-            models: RwLock::new(BTreeMap::new()),
-            next_id: AtomicU64::new(1),
-            generation: AtomicU64::new(0),
-        }
-    }
-
-    /// Current mutation generation (bumped by load/swap/unload).
-    pub fn generation(&self) -> u64 {
-        self.generation.load(Ordering::Relaxed)
-    }
-
-    fn bump_generation(&self) {
-        self.generation.fetch_add(1, Ordering::Relaxed);
-    }
-
-    fn mint(
-        &self,
-        name: &str,
-        version: u64,
-        program: Arc<Program>,
-        weights: Option<Weights>,
-    ) -> Arc<ModelVersion> {
-        Arc::new(ModelVersion {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            name: Arc::from(name),
-            version,
-            program,
-            weights,
-        })
-    }
-
-    /// Compile `net` and publish it as `name` (version 1). Refuses a
-    /// name that is already loaded — use [`Self::swap`] to replace.
-    pub fn load(&self, name: &str, net: &Network, arch: ArchConfig) -> Result<Arc<ModelVersion>> {
-        self.load_seeded(name, net, arch, None)
-    }
-
-    /// [`Self::load`] with an explicit weight seed.
-    pub fn load_seeded(
-        &self,
-        name: &str,
-        net: &Network,
-        arch: ArchConfig,
-        weight_seed: Option<u64>,
-    ) -> Result<Arc<ModelVersion>> {
-        if self.get(name).is_some() {
-            bail!("model {name:?} is already loaded (use swap to replace it)");
-        }
-        let (program, weights) =
-            compile_model(net, arch, weight_seed).with_context(|| format!("compile {name:?}"))?;
-        let mv = self.mint(name, 1, program, Some(weights));
-        let mut m = self.models.write().unwrap();
-        match m.entry(name.to_string()) {
-            Entry::Occupied(_) => bail!("model {name:?} was loaded concurrently"),
-            Entry::Vacant(v) => {
-                v.insert(Arc::clone(&mv));
-            }
-        }
-        drop(m);
-        self.bump_generation();
-        Ok(mv)
-    }
-
-    /// Publish an already-compiled program as `name` (version 1).
-    /// `weights` may be `None` when the caller keeps its own copy for
-    /// cross-checks.
-    pub fn load_prebuilt(
-        &self,
-        name: &str,
-        program: Arc<Program>,
-        weights: Option<Weights>,
-    ) -> Result<Arc<ModelVersion>> {
-        let mv = self.mint(name, 1, program, weights);
-        let mut m = self.models.write().unwrap();
-        match m.entry(name.to_string()) {
-            Entry::Occupied(_) => bail!("model {name:?} is already loaded (use swap to replace it)"),
-            Entry::Vacant(v) => {
-                v.insert(Arc::clone(&mv));
-            }
-        }
-        drop(m);
-        self.bump_generation();
-        Ok(mv)
-    }
-
-    /// Hot-swap `name` to a freshly compiled version of `net` (version
-    /// bumped). Compilation happens outside the lock: traffic keeps
-    /// serving the old version until the new one is published; requests
-    /// already queued against the old version drain on it.
-    pub fn swap(&self, name: &str, net: &Network, arch: ArchConfig) -> Result<Arc<ModelVersion>> {
-        self.swap_seeded(name, net, arch, None)
-    }
-
-    /// [`Self::swap`] with an explicit weight seed (pass a new seed to
-    /// make the swap observable in the outputs).
-    pub fn swap_seeded(
-        &self,
-        name: &str,
-        net: &Network,
-        arch: ArchConfig,
-        weight_seed: Option<u64>,
-    ) -> Result<Arc<ModelVersion>> {
-        if self.get(name).is_none() {
-            bail!(
-                "model {name:?} is not loaded (loaded: [{}])",
-                self.names().join(", ")
-            );
-        }
-        let (program, weights) =
-            compile_model(net, arch, weight_seed).with_context(|| format!("compile {name:?}"))?;
-        let mut m = self.models.write().unwrap();
-        // Re-check under the write lock: a concurrent unload between
-        // our pre-check and here must not turn a swap into a load.
-        let Some(old_version) = m.get(name).map(|old| old.version) else {
-            bail!("model {name:?} was unloaded during the swap");
-        };
-        let mv = self.mint(name, old_version + 1, program, Some(weights));
-        m.insert(name.to_string(), Arc::clone(&mv));
-        drop(m);
-        self.bump_generation();
-        Ok(mv)
-    }
-
-    /// Remove `name`. Requests already accepted keep their
-    /// `Arc<ModelVersion>` and complete normally; new submissions for
-    /// the name are rejected.
-    pub fn unload(&self, name: &str) -> Result<Arc<ModelVersion>> {
-        let mut m = self.models.write().unwrap();
-        match m.remove(name) {
-            Some(mv) => {
-                drop(m);
-                self.bump_generation();
-                Ok(mv)
-            }
-            None => {
-                let names: Vec<&str> = m.keys().map(String::as_str).collect();
-                bail!(
-                    "model {name:?} is not loaded (loaded: [{}])",
-                    names.join(", ")
-                )
-            }
-        }
-    }
-
-    /// Current version published under `name`.
-    pub fn get(&self, name: &str) -> Option<Arc<ModelVersion>> {
-        self.models.read().unwrap().get(name).cloned()
-    }
-
-    /// The single loaded model, iff exactly one is loaded (the
-    /// single-model [`Server::submit`] routing rule).
-    pub fn sole(&self) -> Option<Arc<ModelVersion>> {
-        let m = self.models.read().unwrap();
-        if m.len() == 1 {
-            m.values().next().cloned()
-        } else {
-            None
-        }
-    }
-
-    /// All loaded versions, in name order.
-    pub fn list(&self) -> Vec<Arc<ModelVersion>> {
-        self.models.read().unwrap().values().cloned().collect()
-    }
-
-    /// Loaded names, sorted.
-    pub fn names(&self) -> Vec<String> {
-        self.models.read().unwrap().keys().cloned().collect()
-    }
-
-    /// Ids of every currently-published version (engine-pool pruning).
-    pub fn live_ids(&self) -> HashSet<u64> {
-        self.models.read().unwrap().values().map(|m| m.id).collect()
-    }
-
-    pub fn len(&self) -> usize {
-        self.models.read().unwrap().len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.models.read().unwrap().is_empty()
-    }
-}
-
-/// One inference request.
-pub struct Request {
-    pub id: u64,
-    pub image: Vec<i8>,
-    /// Model version resolved at submit time (`None` on the PJRT
-    /// path). A swap or unload after submission does not affect this
-    /// request: it executes on exactly this version (drain semantics).
-    model: Option<Arc<ModelVersion>>,
-    enqueued: Instant,
-    resp: mpsc::Sender<Response>,
-}
-
-/// One inference response.
-#[derive(Clone, Debug)]
-pub struct Response {
-    pub id: u64,
-    pub logits: Vec<i8>,
-    /// Exactly which model version served this request (`None` on the
-    /// PJRT path). Cross-check `logits` against this version's weights.
-    pub model: Option<ModelStamp>,
-    /// Time spent queued before a worker picked the request up.
-    pub queue: Duration,
-    /// Executor time (batch time attributed per request).
-    pub exec: Duration,
-}
-
-/// Server configuration.
-#[derive(Clone, Copy, Debug)]
-pub struct ServeConfig {
-    /// Worker threads (each with a private execution engine pool).
-    pub workers: usize,
-    /// Max requests drained per dequeue (micro-batch).
-    pub max_batch: usize,
-    /// Queue capacity; `submit` fails fast beyond it (backpressure).
-    pub queue_cap: usize,
-}
-
-impl Default for ServeConfig {
-    fn default() -> Self {
-        Self {
-            workers: 2,
-            max_batch: 8,
-            queue_cap: 256,
-        }
-    }
-}
-
-#[derive(Default)]
-struct Shared {
-    queue: Mutex<VecDeque<Request>>,
-    cv: Condvar,
-    stop: AtomicBool,
-    served: AtomicU64,
-    rejected: AtomicU64,
-    /// Requests whose execution failed (the client's channel is closed
-    /// instead of answered; workers keep serving).
-    failed: AtomicU64,
-}
-
-/// Which execution engine the workers build (internal; selected by the
-/// `Server` constructor used).
-enum BackendSpec {
-    /// AOT artifact through a per-worker PJRT client.
-    Pjrt,
-    /// Cycle-accurate engines over a shared model registry; requests
-    /// are routed by the model version they carry.
-    Sim(Arc<ModelRegistry>),
-}
-
-/// What a worker thread runs per request. `batch_done` fires after each
-/// drained micro-batch (engine-cache pruning and similar bookkeeping).
-trait Backend {
-    fn infer(&mut self, req: &Request) -> Result<Vec<i8>>;
-    fn batch_done(&mut self) {}
-}
-
-/// PJRT worker state: one full client per worker (handles aren't Send).
-struct PjrtBackend {
-    exe: crate::runtime::golden::TrainedTiny,
-}
-
-impl Backend for PjrtBackend {
-    fn infer(&mut self, req: &Request) -> Result<Vec<i8>> {
-        self.exe.run(&req.image)
-    }
-}
-
-/// Simulator worker state: one warm engine per loaded model, keyed by
-/// model-version id.
-struct SimBackend {
-    registry: Arc<ModelRegistry>,
-    pool: EnginePool,
-    /// Registry generation last reconciled against; pruning runs only
-    /// when it moves, keeping the steady-state serving path free of
-    /// registry locks and allocations.
-    seen_generation: u64,
-}
-
-impl Backend for SimBackend {
-    fn infer(&mut self, req: &Request) -> Result<Vec<i8>> {
-        let mv = req
-            .model
-            .as_ref()
-            .ok_or_else(|| anyhow!("sim request without a model tag"))?;
-        let out = self.pool.engine(mv.id(), mv.program()).run_image(&req.image)?;
-        Ok(out.scores)
-    }
-
-    fn batch_done(&mut self) {
-        // Drop engines of swapped-away / unloaded versions so a dead
-        // version's compiled program is released promptly (a
-        // length-based check would miss a swap, which replaces a key
-        // without changing the count and would pin the old program for
-        // the process lifetime). Gated on the registry's mutation
-        // generation so unchanged registries cost nothing here. A
-        // still-queued request that holds a pruned version simply
-        // rebuilds its engine on demand.
-        let generation = self.registry.generation();
-        if generation != self.seen_generation {
-            self.seen_generation = generation;
-            self.pool.retain_keys(&self.registry.live_ids());
-        }
-    }
-}
-
-/// A running inference server.
-pub struct Server {
-    shared: Arc<Shared>,
-    cfg: ServeConfig,
-    workers: Vec<std::thread::JoinHandle<Result<u64>>>,
-    next_id: AtomicU64,
-    input_len: usize,
-    backend: &'static str,
-    registry: Option<Arc<ModelRegistry>>,
-}
-
-impl Server {
-    /// Start `cfg.workers` threads serving the trained tiny-cnn
-    /// artifact over PJRT. Fails immediately if the artifacts are
-    /// missing.
-    pub fn start(cfg: ServeConfig) -> Result<Self> {
-        if !crate::runtime::artifacts_available() {
-            bail!("artifacts not built (run `make artifacts`)");
-        }
-        Self::start_backend(cfg, BackendSpec::Pjrt, 3 * 16 * 16, "pjrt")
-    }
-
-    /// Start `cfg.workers` threads serving the cycle-accurate simulator
-    /// over one shared compiled program (see [`sim_program`]). Needs no
-    /// artifacts: the whole datapath is the Rust engine. Internally
-    /// this is a single-entry [`ModelRegistry`] (named after the
-    /// network), so [`Self::submit`] routes without a model tag.
-    pub fn start_sim(cfg: ServeConfig, program: Arc<Program>) -> Result<Self> {
-        let input_len = program.net.input_len();
-        let registry = Arc::new(ModelRegistry::new());
-        let name = program.net.name.clone();
-        registry.load_prebuilt(&name, program, None)?;
-        Self::start_backend(cfg, BackendSpec::Sim(registry), input_len, "sim")
-    }
-
-    /// Start `cfg.workers` threads serving every model in `registry`,
-    /// with requests routed by model name ([`Self::submit_to`]) and
-    /// hot-swap/load/unload available through the registry while
-    /// serving. Each worker pre-builds one engine per model loaded at
-    /// startup; models loaded later get engines lazily on first
-    /// request.
-    pub fn start_multi(cfg: ServeConfig, registry: Arc<ModelRegistry>) -> Result<Self> {
-        anyhow::ensure!(
-            !registry.is_empty(),
-            "model registry has no models loaded"
-        );
-        let input_len = registry.sole().map(|m| m.input_len()).unwrap_or(0);
-        Self::start_backend(cfg, BackendSpec::Sim(registry), input_len, "sim")
-    }
-
-    fn start_backend(
-        cfg: ServeConfig,
-        spec: BackendSpec,
-        input_len: usize,
-        backend: &'static str,
-    ) -> Result<Self> {
-        anyhow::ensure!(cfg.workers >= 1 && cfg.max_batch >= 1);
-        let registry = match &spec {
-            BackendSpec::Sim(r) => Some(Arc::clone(r)),
-            BackendSpec::Pjrt => None,
-        };
-        let shared = Arc::new(Shared::default());
-        let mut workers = Vec::with_capacity(cfg.workers);
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        for w in 0..cfg.workers {
-            let shared = Arc::clone(&shared);
-            let ready = ready_tx.clone();
-            let max_batch = cfg.max_batch;
-            let spec = match &spec {
-                BackendSpec::Pjrt => BackendSpec::Pjrt,
-                BackendSpec::Sim(r) => BackendSpec::Sim(Arc::clone(r)),
-            };
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("domino-worker-{w}"))
-                    .spawn(move || worker_entry(shared, max_batch, spec, ready))
-                    .context("spawn worker")?,
-            );
-        }
-        drop(ready_tx);
-        // wait until every worker has built its execution engine(s)
-        for _ in 0..cfg.workers {
-            ready_rx
-                .recv()
-                .context("worker died during startup")??;
-        }
-        Ok(Self {
-            shared,
-            cfg,
-            workers,
-            next_id: AtomicU64::new(0),
-            input_len,
-            backend,
-            registry,
-        })
-    }
-
-    /// Flat input length this server accepts through [`Self::submit`]:
-    /// the sole loaded model's input on the sim backend (tracking the
-    /// live registry, so 0 once several models are loaded — use
-    /// [`ModelVersion::input_len`] per model then), or the fixed
-    /// artifact input on PJRT.
-    pub fn input_len(&self) -> usize {
-        match &self.registry {
-            None => self.input_len,
-            Some(reg) => reg.sole().map(|m| m.input_len()).unwrap_or(0),
-        }
-    }
-
-    /// Which backend the workers run (`"pjrt"` or `"sim"`).
-    pub fn backend(&self) -> &'static str {
-        self.backend
-    }
-
-    /// The model registry behind a sim server (`None` on PJRT). Use it
-    /// to load/swap/unload models while serving.
-    pub fn registry(&self) -> Option<&Arc<ModelRegistry>> {
-        self.registry.as_ref()
-    }
-
-    /// Submit one image to the server's sole model; returns a receiver
-    /// for the response. Fails fast when the queue is full
-    /// (backpressure), the image is the wrong size, or more than one
-    /// model is loaded (use [`Self::submit_to`] then).
-    pub fn submit(&self, image: Vec<i8>) -> Result<mpsc::Receiver<Response>> {
-        match &self.registry {
-            None => self.enqueue(None, image),
-            Some(reg) => {
-                let mv = reg.sole().ok_or_else(|| {
-                    anyhow!(
-                        "{} models loaded ([{}]); name one with submit_to",
-                        reg.len(),
-                        reg.names().join(", ")
-                    )
-                })?;
-                self.enqueue(Some(mv), image)
-            }
-        }
-    }
-
-    /// Submit one image to the named model. The model version is
-    /// resolved now and travels with the request: a swap or unload
-    /// between submit and execution does not affect it.
-    pub fn submit_to(&self, model: &str, image: Vec<i8>) -> Result<mpsc::Receiver<Response>> {
-        let reg = self.registry.as_ref().ok_or_else(|| {
-            anyhow!(
-                "the {} backend is single-model; use submit",
-                self.backend
-            )
-        })?;
-        let mv = reg.get(model).ok_or_else(|| {
-            anyhow!(
-                "model {model:?} is not loaded (loaded: [{}])",
-                reg.names().join(", ")
-            )
-        })?;
-        self.enqueue(Some(mv), image)
-    }
-
-    fn enqueue(
-        &self,
-        model: Option<Arc<ModelVersion>>,
-        image: Vec<i8>,
-    ) -> Result<mpsc::Receiver<Response>> {
-        let want = model
-            .as_ref()
-            .map(|m| m.input_len())
-            .unwrap_or(self.input_len);
-        if image.len() != want {
-            match &model {
-                Some(m) => bail!(
-                    "image for model {:?} must be {want} int8 values (got {})",
-                    m.name(),
-                    image.len()
-                ),
-                None => bail!("image must be {want} int8 values (got {})", image.len()),
-            }
-        }
-        let (tx, rx) = mpsc::channel();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            if q.len() >= self.cfg.queue_cap {
-                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
-                bail!("queue full ({}): backpressure", self.cfg.queue_cap);
-            }
-            q.push_back(Request {
-                id,
-                image,
-                model,
-                enqueued: Instant::now(),
-                resp: tx,
-            });
-        }
-        self.shared.cv.notify_one();
-        Ok(rx)
-    }
-
-    /// Synchronous convenience: submit + wait.
-    pub fn infer(&self, image: Vec<i8>) -> Result<Response> {
-        let rx = self.submit(image)?;
-        rx.recv().context("worker dropped the request")
-    }
-
-    /// Synchronous convenience: submit to a named model + wait.
-    pub fn infer_on(&self, model: &str, image: Vec<i8>) -> Result<Response> {
-        let rx = self.submit_to(model, image)?;
-        rx.recv().context("worker dropped the request")
-    }
-
-    pub fn served(&self) -> u64 {
-        self.shared.served.load(Ordering::Relaxed)
-    }
-
-    pub fn rejected(&self) -> u64 {
-        self.shared.rejected.load(Ordering::Relaxed)
-    }
-
-    /// Requests whose execution failed after being accepted. Each one
-    /// had its response channel closed (the client's `recv` errors)
-    /// rather than hanging; the worker that hit the failure keeps
-    /// serving.
-    pub fn failed(&self) -> u64 {
-        self.shared.failed.load(Ordering::Relaxed)
-    }
-
-    /// Stop workers and join them; returns per-worker served counts.
-    ///
-    /// Workers drain the queue before exiting, so every request
-    /// accepted by `submit` before this call is still resolved —
-    /// answered, or its channel closed if its execution failed. This
-    /// holds with any number of models loaded, including versions
-    /// unloaded or swapped away while their requests were queued.
-    pub fn shutdown(mut self) -> Result<Vec<u64>> {
-        {
-            // Publish `stop` while holding the queue mutex: a worker is
-            // either before its predicate check (it will see the flag)
-            // or already parked in `wait` (it will see the notify).
-            // Storing without the lock could slot between a worker's
-            // check and its wait, losing the wakeup forever.
-            let _q = self.shared.queue.lock().unwrap();
-            self.shared.stop.store(true, Ordering::SeqCst);
-        }
-        self.shared.cv.notify_all();
-        let mut counts = Vec::new();
-        for w in self.workers.drain(..) {
-            counts.push(w.join().map_err(|_| anyhow::anyhow!("worker panicked"))??);
-        }
-        Ok(counts)
-    }
-}
-
-/// Worker thread entry: build the backend's execution engine(s), signal
-/// readiness, then serve micro-batches until shutdown.
-fn worker_entry(
-    shared: Arc<Shared>,
-    max_batch: usize,
-    spec: BackendSpec,
-    ready: mpsc::Sender<Result<()>>,
-) -> Result<u64> {
-    match spec {
-        BackendSpec::Pjrt => {
-            // each worker owns a full PJRT stack (handles are not Send)
-            let init = (|| -> Result<crate::runtime::golden::TrainedTiny> {
-                let rt = crate::runtime::Runtime::cpu()?;
-                crate::runtime::golden::TrainedTiny::load(&rt)
-            })();
-            let exe = match init {
-                Ok(e) => {
-                    let _ = ready.send(Ok(()));
-                    e
-                }
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    let _ = ready.send(Err(e));
-                    bail!("worker init failed: {msg}");
-                }
-            };
-            Ok(serve_loop(&shared, max_batch, PjrtBackend { exe }))
-        }
-        BackendSpec::Sim(registry) => {
-            // Warm the per-worker engine cache for every model loaded
-            // at startup, so `ready` means "engines built" (models
-            // loaded later build lazily on their first request). The
-            // generation is sampled *before* warming: a registry
-            // mutation racing the warm-up is then caught by the first
-            // batch_done prune.
-            let seen_generation = registry.generation();
-            let mut pool = EnginePool::new();
-            for mv in registry.list() {
-                pool.engine(mv.id(), mv.program());
-            }
-            let _ = ready.send(Ok(()));
-            Ok(serve_loop(
-                &shared,
-                max_batch,
-                SimBackend {
-                    registry,
-                    pool,
-                    seen_generation,
-                },
-            ))
-        }
-    }
-}
-
-/// The backend-agnostic micro-batch loop: block until work or stop,
-/// drain up to `max_batch` requests, execute, respond. Returns the
-/// number of requests this worker served.
-///
-/// A per-request execution failure never kills the worker: the failed
-/// request's response channel is dropped (so the client's `recv`
-/// errors instead of hanging), the failure is counted, and serving
-/// continues — otherwise one poisoned request could strand every
-/// request still in the queue.
-fn serve_loop<B: Backend>(shared: &Shared, max_batch: usize, mut backend: B) -> u64 {
-    let mut served = 0u64;
-    let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
-    loop {
-        batch.clear();
-        {
-            let mut q = shared.queue.lock().unwrap();
-            // `stop` is re-checked on every wakeup; because `shutdown`
-            // publishes it under this mutex, the check-then-wait pair
-            // cannot miss it.
-            while q.is_empty() && !shared.stop.load(Ordering::SeqCst) {
-                q = shared.cv.wait(q).unwrap();
-            }
-            if q.is_empty() && shared.stop.load(Ordering::SeqCst) {
-                return served;
-            }
-            for _ in 0..max_batch {
-                match q.pop_front() {
-                    Some(r) => batch.push(r),
-                    None => break,
-                }
-            }
-        }
-        let t0 = Instant::now();
-        let n = batch.len() as u32;
-        for req in batch.drain(..) {
-            let queue = req.enqueued.elapsed();
-            match backend.infer(&req) {
-                Ok(logits) => {
-                    let exec = t0.elapsed() / n;
-                    shared.served.fetch_add(1, Ordering::Relaxed);
-                    served += 1;
-                    // client may have gone away; that's fine
-                    let _ = req.resp.send(Response {
-                        id: req.id,
-                        logits,
-                        model: req.model.as_ref().map(|m| m.stamp()),
-                        queue,
-                        exec,
-                    });
-                }
-                Err(e) => {
-                    shared.failed.fetch_add(1, Ordering::Relaxed);
-                    eprintln!("domino-serve: request {} failed: {e:#}", req.id);
-                    // dropping req.resp closes the channel: the client
-                    // unblocks with a recv error instead of hanging
-                }
-            }
-        }
-        backend.batch_done();
-    }
-}
-
-/// Latency statistics helper for load tests.
-#[derive(Clone, Debug, Default)]
-pub struct LatencyStats {
-    samples_us: Vec<u64>,
-}
-
-impl LatencyStats {
-    pub fn record(&mut self, d: Duration) {
-        self.samples_us.push(d.as_micros() as u64);
-    }
-
-    pub fn merge(&mut self, other: &LatencyStats) {
-        self.samples_us.extend_from_slice(&other.samples_us);
-    }
-
-    pub fn count(&self) -> usize {
-        self.samples_us.len()
-    }
-
-    /// Percentile (0-100) by nearest-rank.
-    pub fn percentile(&self, p: f64) -> Option<u64> {
-        if self.samples_us.is_empty() {
-            return None;
-        }
-        let mut v = self.samples_us.clone();
-        v.sort_unstable();
-        let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-        Some(v[rank.min(v.len() - 1)])
-    }
-
-    pub fn summary(&self) -> String {
-        match (
-            self.percentile(50.0),
-            self.percentile(95.0),
-            self.percentile(99.0),
-        ) {
-            (Some(p50), Some(p95), Some(p99)) => format!(
-                "p50 {p50} us, p95 {p95} us, p99 {p99} us (n={})",
-                self.count()
-            ),
-            _ => "no samples".to_string(),
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::model::refcompute::{forward, Tensor};
-    use crate::model::{NetworkBuilder, TensorShape};
-    use crate::testutil::Rng;
-
-    /// A small conv net the sim backend can serve in well under a
-    /// millisecond per image.
-    fn small_net() -> Network {
-        NetworkBuilder::new("serve-test", TensorShape::new(2, 6, 6))
-            .conv(4, 3, 1, 1)
-            .flatten()
-            .fc_logits(5)
-            .build()
-    }
-
-    #[test]
-    fn latency_percentiles() {
-        let mut s = LatencyStats::default();
-        for i in 1..=100u64 {
-            s.record(Duration::from_micros(i));
-        }
-        assert_eq!(s.percentile(50.0), Some(51)); // nearest-rank on 1..=100
-        assert_eq!(s.percentile(99.0), Some(99));
-        assert_eq!(s.percentile(100.0), Some(100));
-        assert_eq!(LatencyStats::default().percentile(50.0), None);
-    }
-
-    #[test]
-    fn sim_backend_rejects_zero_workers() {
-        let net = small_net();
-        let (program, _) = sim_program(&net, ArchConfig::default()).unwrap();
-        let bad = ServeConfig {
-            workers: 0,
-            ..Default::default()
-        };
-        assert!(Server::start_sim(bad, program).is_err());
-    }
-
-    #[test]
-    fn sim_backend_roundtrip_matches_refcompute() {
-        let net = small_net();
-        let (program, weights) = sim_program(&net, ArchConfig::default()).unwrap();
-        let server = Server::start_sim(
-            ServeConfig {
-                workers: 2,
-                max_batch: 4,
-                queue_cap: 64,
-            },
-            Arc::clone(&program),
-        )
-        .unwrap();
-        assert_eq!(server.backend(), "sim");
-        assert_eq!(server.input_len(), net.input_len());
-        // wrong-size image rejected up front
-        assert!(server.submit(vec![0i8; 3]).is_err());
-        // responses are bit-exact vs the int8 reference, and stamped
-        // with the (sole) model that served them
-        let mut rng = Rng::new(77);
-        for _ in 0..6 {
-            let image = rng.i8_vec(net.input_len(), 31);
-            let r = server.infer(image.clone()).unwrap();
-            let want = forward(&net, &weights, &Tensor::new(net.input, image)).unwrap();
-            assert_eq!(r.logits, want.data);
-            let stamp = r.model.expect("sim responses carry a model stamp");
-            assert_eq!(&*stamp.name, "serve-test");
-            assert_eq!(stamp.version, 1);
-        }
-        assert_eq!(server.served(), 6);
-        let counts = server.shutdown().unwrap();
-        assert_eq!(counts.iter().sum::<u64>(), 6);
-    }
-
-    #[test]
-    fn sim_backend_shutdown_under_load_answers_everything() {
-        // Regression test for the missed-wakeup shutdown race: repeat
-        // the submit-burst → immediate-shutdown cycle; with the old
-        // unsynchronized `stop` store a worker could park forever and
-        // `shutdown` would hang (the test would time out).
-        let net = small_net();
-        let (program, _) = sim_program(&net, ArchConfig::default()).unwrap();
-        let mut rng = Rng::new(99);
-        for round in 0..6 {
-            let server = Server::start_sim(
-                ServeConfig {
-                    workers: 2,
-                    max_batch: 3,
-                    queue_cap: 128,
-                },
-                Arc::clone(&program),
-            )
-            .unwrap();
-            let n = 4 + 3 * round as usize;
-            let receivers: Vec<_> = (0..n)
-                .map(|_| server.submit(rng.i8_vec(net.input_len(), 31)).unwrap())
-                .collect();
-            // shut down with the queue still loaded: workers must
-            // drain it and answer every accepted request
-            let counts = server.shutdown().unwrap();
-            assert_eq!(counts.iter().sum::<u64>(), n as u64, "round {round}");
-            for (i, rx) in receivers.into_iter().enumerate() {
-                let r = rx.recv().expect("accepted request must be answered");
-                assert_eq!(r.logits.len(), 5, "round {round} request {i}");
-            }
-        }
-    }
-
-    #[test]
-    fn registry_load_swap_unload_lifecycle() {
-        let registry = ModelRegistry::new();
-        let net = small_net();
-        let gen0 = registry.generation();
-        let v1 = registry.load("alpha", &net, ArchConfig::default()).unwrap();
-        assert!(registry.generation() > gen0, "load bumps the generation");
-        assert_eq!(v1.version(), 1);
-        assert_eq!(v1.name(), "alpha");
-        assert_eq!(registry.names(), vec!["alpha".to_string()]);
-        // duplicate load refused, pointing at swap
-        let err = registry
-            .load("alpha", &net, ArchConfig::default())
-            .unwrap_err()
-            .to_string();
-        assert!(err.contains("swap"), "{err}");
-        // swap of an unknown name lists what is loaded
-        let err = registry
-            .swap("nope", &net, ArchConfig::default())
-            .unwrap_err()
-            .to_string();
-        assert!(err.contains("alpha"), "{err}");
-        // swap bumps the version and mints a fresh id
-        let v2 = registry.swap("alpha", &net, ArchConfig::default()).unwrap();
-        assert_eq!(v2.version(), 2);
-        assert_ne!(v2.id(), v1.id());
-        // a seeded swap actually changes the weights
-        let v3 = registry
-            .swap_seeded("alpha", &net, ArchConfig::default(), Some(0xFEED))
-            .unwrap();
-        assert_eq!(v3.version(), 3);
-        assert_ne!(
-            v3.weights().unwrap().per_layer[0].as_slice(),
-            v1.weights().unwrap().per_layer[0].as_slice(),
-            "seeded swap must produce different weights"
-        );
-        // unload empties the registry; repeating it errors (and a
-        // failed mutation leaves the generation alone)
-        let gen_before = registry.generation();
-        registry.unload("alpha").unwrap();
-        assert!(registry.generation() > gen_before, "unload bumps the generation");
-        assert!(registry.is_empty());
-        let gen_after = registry.generation();
-        assert!(registry.unload("alpha").is_err());
-        assert_eq!(registry.generation(), gen_after);
-        assert!(registry.get("alpha").is_none());
-    }
-
-    #[test]
-    fn submit_requires_model_name_with_multiple_models() {
-        let registry = Arc::new(ModelRegistry::new());
-        let net = small_net();
-        registry.load("a", &net, ArchConfig::default()).unwrap();
-        registry.load("b", &net, ArchConfig::default()).unwrap();
-        let server = Server::start_multi(
-            ServeConfig {
-                workers: 1,
-                max_batch: 2,
-                queue_cap: 16,
-            },
-            Arc::clone(&registry),
-        )
-        .unwrap();
-        let img = vec![0i8; net.input_len()];
-        let err = server.submit(img.clone()).unwrap_err().to_string();
-        assert!(err.contains("submit_to"), "{err}");
-        // named routing works for both
-        assert_eq!(server.infer_on("a", img.clone()).unwrap().logits.len(), 5);
-        assert_eq!(server.infer_on("b", img).unwrap().logits.len(), 5);
-        // unknown model error lists the loaded names
-        let err = server
-            .submit_to("c", vec![0i8; net.input_len()])
-            .unwrap_err()
-            .to_string();
-        assert!(err.contains("[a, b]"), "{err}");
-        server.shutdown().unwrap();
-    }
-
-    #[test]
-    fn start_multi_rejects_empty_registry() {
-        let registry = Arc::new(ModelRegistry::new());
-        assert!(Server::start_multi(ServeConfig::default(), registry).is_err());
-    }
-
-    #[test]
-    fn config_validation() {
-        if !crate::runtime::artifacts_available() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let bad = ServeConfig {
-            workers: 0,
-            ..Default::default()
-        };
-        assert!(Server::start(bad).is_err());
-    }
-
-    #[test]
-    fn serve_roundtrip_and_backpressure() {
-        if !crate::runtime::artifacts_available() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let server = Server::start(ServeConfig {
-            workers: 1,
-            max_batch: 4,
-            queue_cap: 8,
-        })
-        .unwrap();
-        // wrong-size image rejected up front
-        assert!(server.submit(vec![0i8; 3]).is_err());
-        // correct request round-trips
-        let r = server.infer(vec![1i8; 768]).unwrap();
-        assert_eq!(r.logits.len(), 10);
-        assert_eq!(server.served(), 1);
-        // responses are deterministic
-        let r2 = server.infer(vec![1i8; 768]).unwrap();
-        assert_eq!(r.logits, r2.logits);
-        let counts = server.shutdown().unwrap();
-        assert_eq!(counts.iter().sum::<u64>(), 2);
-    }
-}
+//! (the classic missed-wakeup race; regression-tested in `server`).
+
+pub mod api;
+pub mod client;
+pub mod metrics;
+pub mod net;
+mod registry;
+mod server;
+pub mod wire;
+
+pub use api::Service;
+pub use metrics::{LatencyStats, ModelMetricsSnapshot};
+pub use registry::{sim_program, ModelRegistry, ModelStamp, ModelVersion};
+pub use server::{Request, Response, ServeConfig, Server};

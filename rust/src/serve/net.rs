@@ -1,0 +1,228 @@
+//! The TCP endpoint: `serve::api` over `serve::wire` frames. One
+//! accept thread, one thread per connection (bounded by
+//! [`NetConfig::max_conns`]), every decoded request routed through the
+//! same [`Service::dispatch`] the in-process path uses — so a remote
+//! call *is* the local call, stamp and all. The accept loop feeds the
+//! server's existing bounded queue; backpressure and per-model
+//! validation errors come back as typed [`api::Response::Error`]
+//! frames, exactly like any other failure.
+//!
+//! Shutdown is a graceful drain: the accept loop stops taking
+//! connections, each connection thread finishes the request it is
+//! already dispatching and writes its response, idle connections
+//! close at their next poll tick, and [`NetServer::shutdown`] joins
+//! them all before returning. A frame only *partially* received when
+//! the stop lands is abandoned with a framing error — a stalled peer
+//! must not be able to block shutdown indefinitely.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::api::{self, Service};
+use super::wire;
+
+/// Endpoint tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// Maximum concurrent client connections; further connections get
+    /// a typed `Error` response and are closed (bounded accept loop).
+    pub max_conns: usize,
+    /// How often idle reads and the accept loop wake to poll the stop
+    /// flag (drain latency at shutdown).
+    pub poll: Duration,
+    /// Deadline for writing one response frame. A client that stops
+    /// reading (full send buffer) is treated as dead once this
+    /// elapses, so a stalled connection can never block
+    /// [`NetServer::shutdown`]'s drain-and-join.
+    pub write_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            max_conns: 64,
+            poll: Duration::from_millis(100),
+            write_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// A running TCP endpoint. Dropping it (or calling
+/// [`Self::shutdown`]) stops the accept loop and drains every
+/// connection.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `127.0.0.1:7700`; port 0 picks an ephemeral
+    /// port — read the result off [`Self::local_addr`]) and start
+    /// serving `service`. A bind failure names the address that
+    /// failed, so "port in use" is diagnosable from the message alone.
+    pub fn bind(addr: &str, service: Arc<Service>) -> Result<Self> {
+        Self::bind_with(addr, service, NetConfig::default())
+    }
+
+    /// [`Self::bind`] with explicit [`NetConfig`].
+    pub fn bind_with(addr: &str, service: Arc<Service>, cfg: NetConfig) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("failed to bind {addr}"))?;
+        let local_addr = listener
+            .local_addr()
+            .with_context(|| format!("local_addr of listener on {addr}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("set listener non-blocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_stop = Arc::clone(&stop);
+        let accept_handle = std::thread::Builder::new()
+            .name("domino-net-accept".to_string())
+            .spawn(move || accept_loop(listener, service, accept_stop, cfg))
+            .context("spawn accept thread")?;
+        Ok(Self {
+            local_addr,
+            stop,
+            accept_handle: Some(accept_handle),
+        })
+    }
+
+    /// The actually-bound address (resolves port 0 to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting, drain every live connection, join the threads.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            h.join()
+                .map_err(|_| anyhow::anyhow!("net accept thread panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    service: Arc<Service>,
+    stop: Arc<AtomicBool>,
+    cfg: NetConfig,
+) {
+    let live = Arc::new(AtomicUsize::new(0));
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                conns.retain(|h| !h.is_finished());
+                if live.load(Ordering::SeqCst) >= cfg.max_conns {
+                    refuse(stream, &cfg);
+                    continue;
+                }
+                live.fetch_add(1, Ordering::SeqCst);
+                let service = Arc::clone(&service);
+                let stop = Arc::clone(&stop);
+                let live_conn = Arc::clone(&live);
+                let spawned = std::thread::Builder::new()
+                    .name(format!("domino-net-conn-{peer}"))
+                    .spawn(move || {
+                        if let Err(e) = handle_conn(stream, &service, &stop, cfg) {
+                            eprintln!("domino-net: connection {peer}: {e:#}");
+                        }
+                        live_conn.fetch_sub(1, Ordering::SeqCst);
+                    });
+                match spawned {
+                    Ok(h) => conns.push(h),
+                    Err(e) => {
+                        live.fetch_sub(1, Ordering::SeqCst);
+                        eprintln!("domino-net: spawn connection thread: {e}");
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(cfg.poll);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => {
+                eprintln!("domino-net: accept error: {e}");
+                std::thread::sleep(cfg.poll);
+            }
+        }
+    }
+    // graceful drain: every connection thread finishes its in-flight
+    // request and observes `stop` at its next idle poll
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// Over-capacity connection: answer with a typed error, then close.
+fn refuse(mut stream: TcpStream, cfg: &NetConfig) {
+    let _ = stream.set_write_timeout(Some(cfg.write_timeout));
+    let resp = api::Response::Error {
+        message: format!(
+            "server at connection capacity ({}); retry later",
+            cfg.max_conns
+        ),
+    };
+    let _ = wire::write_frame(&mut stream, &wire::encode_response(&resp));
+}
+
+/// One connection: read a frame, dispatch, answer, repeat. A frame
+/// that decodes but fails in dispatch is a typed `Error` *response*;
+/// a frame that does not decode gets a typed `Error` response too and
+/// the connection stays usable (framing is still intact). A framing
+/// error (oversized length prefix, truncation) is unrecoverable: we
+/// best-effort send one last `Error` frame and close.
+fn handle_conn(
+    mut stream: TcpStream,
+    service: &Service,
+    stop: &AtomicBool,
+    cfg: NetConfig,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(cfg.poll))
+        .context("set read timeout")?;
+    // a client that stops reading must look dead, not immortal: a
+    // blocked write would otherwise pin this thread past shutdown
+    stream
+        .set_write_timeout(Some(cfg.write_timeout))
+        .context("set write timeout")?;
+    let stop_fn = || stop.load(Ordering::SeqCst);
+    loop {
+        let frame = match wire::read_frame_cancellable(&mut stream, &stop_fn) {
+            Ok(Some(f)) => f,
+            Ok(None) => return Ok(()), // client closed, or drained at stop
+            Err(e) => {
+                let resp = api::Response::Error {
+                    message: format!("framing error: {e:#}"),
+                };
+                let _ = wire::write_frame(&mut stream, &wire::encode_response(&resp));
+                return Err(e);
+            }
+        };
+        let resp = match wire::decode_request(&frame) {
+            Ok(req) => service.dispatch(req),
+            Err(e) => api::Response::Error {
+                message: format!("bad request: {e:#}"),
+            },
+        };
+        wire::write_frame(&mut stream, &wire::encode_response(&resp))
+            .context("write response frame")?;
+    }
+}

@@ -1,0 +1,451 @@
+//! The versioned model registry: compiled programs published under
+//! names, with load / hot-swap / unload safe while serving. This is
+//! the data plane's source of truth — requests resolve their
+//! [`ModelVersion`] here at submit time and carry it through the
+//! queue, so registry mutations never drop or reroute in-flight work.
+
+use std::collections::btree_map::Entry;
+use std::collections::{BTreeMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::{ArchConfig, Compiler, Program};
+use crate::model::refcompute::Weights;
+use crate::model::Network;
+
+/// Compile `net` into a shared program + the exact weights it bakes in.
+/// `weight_seed` of `None` uses the compiler's deterministic default
+/// seed; a swap that must be *observable* passes a different seed.
+fn compile_model(
+    net: &Network,
+    arch: ArchConfig,
+    weight_seed: Option<u64>,
+) -> Result<(Arc<Program>, Weights)> {
+    let mut compiler = Compiler::new(arch);
+    if let Some(seed) = weight_seed {
+        compiler.weight_seed = seed;
+    }
+    let weights = Weights::random(net, compiler.weight_seed)?;
+    let program = compiler.compile_with_weights(net, &weights)?;
+    Ok((Arc::new(program), weights))
+}
+
+/// Compile `net` for the cycle-simulator backend with the compiler's
+/// deterministic weight seed. Returns the shared program and the exact
+/// weights it bakes in, so callers can cross-check every response
+/// against `model::refcompute::forward` bit-for-bit.
+pub fn sim_program(net: &Network, arch: ArchConfig) -> Result<(Arc<Program>, Weights)> {
+    compile_model(net, arch, None)
+}
+
+/// One loaded, immutable model version: a compiled program plus the
+/// weights baked into it (when the registry compiled it — prebuilt
+/// programs may not carry weights). Versions are never mutated; a swap
+/// publishes a *new* `ModelVersion` under the same name.
+#[derive(Debug)]
+pub struct ModelVersion {
+    /// Globally unique id across the registry (every load and swap
+    /// mints a fresh one) — the engine-pool cache key.
+    id: u64,
+    name: Arc<str>,
+    /// Per-name version counter: 1 on load, +1 per swap.
+    version: u64,
+    program: Arc<Program>,
+    weights: Option<Weights>,
+}
+
+impl ModelVersion {
+    /// Globally unique id (fresh per load/swap; engine-pool key).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Registry name requests are routed by.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// 1 on first load, incremented by every swap of this name.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn program(&self) -> &Arc<Program> {
+        &self.program
+    }
+
+    /// The weights this version's program was compiled with (for
+    /// refcompute cross-checks). `None` only for
+    /// [`ModelRegistry::load_prebuilt`] entries registered without
+    /// weights.
+    pub fn weights(&self) -> Option<&Weights> {
+        self.weights.as_ref()
+    }
+
+    /// Flat int8 input length this model accepts.
+    pub fn input_len(&self) -> usize {
+        self.program.net.input_len()
+    }
+
+    /// Lightweight identity stamp attached to every response.
+    pub fn stamp(&self) -> ModelStamp {
+        ModelStamp {
+            name: Arc::clone(&self.name),
+            id: self.id,
+            version: self.version,
+        }
+    }
+
+    /// Run the int8 reference network over one image with exactly this
+    /// version's weights — the per-response correctness oracle used by
+    /// the CLI, the load bench and the serving tests. Errors when the
+    /// version was registered without weights
+    /// ([`ModelRegistry::load_prebuilt`]).
+    pub fn refcompute(&self, image: &[i8]) -> Result<Vec<i8>> {
+        let weights = self.weights.as_ref().ok_or_else(|| {
+            anyhow!("model {:?} was registered without weights", &*self.name)
+        })?;
+        let net = &self.program.net;
+        let out = crate::model::refcompute::forward(
+            net,
+            weights,
+            &crate::model::refcompute::Tensor::new(net.input, image.to_vec()),
+        )?;
+        Ok(out.data)
+    }
+}
+
+/// Which model version served a response.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelStamp {
+    pub name: Arc<str>,
+    pub id: u64,
+    pub version: u64,
+}
+
+/// A concurrent, versioned registry of compiled models, shared by the
+/// serve workers (read side) and an admin path (load/swap/unload). All
+/// operations are safe while the server is taking traffic; see the
+/// module docs for the drain semantics.
+pub struct ModelRegistry {
+    models: RwLock<BTreeMap<String, Arc<ModelVersion>>>,
+    next_id: AtomicU64,
+    /// Monotonic mutation counter, bumped by every successful
+    /// load/swap/unload. Workers compare it against the last value
+    /// they saw to skip engine-cache pruning (and its read lock +
+    /// allocation) on the steady-state serving path.
+    generation: AtomicU64,
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self {
+            models: RwLock::new(BTreeMap::new()),
+            next_id: AtomicU64::new(1),
+            generation: AtomicU64::new(0),
+        }
+    }
+
+    /// Current mutation generation (bumped by load/swap/unload).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
+    }
+
+    fn bump_generation(&self) {
+        self.generation.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn mint(
+        &self,
+        name: &str,
+        version: u64,
+        program: Arc<Program>,
+        weights: Option<Weights>,
+    ) -> Arc<ModelVersion> {
+        Arc::new(ModelVersion {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            name: Arc::from(name),
+            version,
+            program,
+            weights,
+        })
+    }
+
+    /// Publish `mv` under a name that must still be vacant.
+    fn publish_new(&self, name: &str, mv: &Arc<ModelVersion>) -> Result<()> {
+        let mut m = self.models.write().unwrap();
+        match m.entry(name.to_string()) {
+            Entry::Occupied(_) => {
+                bail!("model {name:?} is already loaded (use swap to replace it)")
+            }
+            Entry::Vacant(v) => {
+                v.insert(Arc::clone(mv));
+            }
+        }
+        drop(m);
+        self.bump_generation();
+        Ok(())
+    }
+
+    /// Compile `net` and publish it as `name` (version 1). Refuses a
+    /// name that is already loaded — use [`Self::swap`] to replace.
+    pub fn load(&self, name: &str, net: &Network, arch: ArchConfig) -> Result<Arc<ModelVersion>> {
+        self.load_seeded(name, net, arch, None)
+    }
+
+    /// [`Self::load`] with an explicit weight seed.
+    pub fn load_seeded(
+        &self,
+        name: &str,
+        net: &Network,
+        arch: ArchConfig,
+        weight_seed: Option<u64>,
+    ) -> Result<Arc<ModelVersion>> {
+        self.load_restored(name, net, arch, weight_seed, 1)
+    }
+
+    /// [`Self::load_seeded`] publishing at an explicit starting
+    /// `version` — the registry-persistence reload path, where a model
+    /// that had been swapped to version N before the restart must come
+    /// back as version N (its weights are reproduced from the recorded
+    /// seed, so pre- and post-restart responses are bit-identical).
+    pub fn load_restored(
+        &self,
+        name: &str,
+        net: &Network,
+        arch: ArchConfig,
+        weight_seed: Option<u64>,
+        version: u64,
+    ) -> Result<Arc<ModelVersion>> {
+        anyhow::ensure!(version >= 1, "model version must be >= 1 (got {version})");
+        if self.get(name).is_some() {
+            bail!("model {name:?} is already loaded (use swap to replace it)");
+        }
+        let (program, weights) =
+            compile_model(net, arch, weight_seed).with_context(|| format!("compile {name:?}"))?;
+        let mv = self.mint(name, version, program, Some(weights));
+        self.publish_new(name, &mv)?;
+        Ok(mv)
+    }
+
+    /// Publish an already-compiled program as `name` (version 1).
+    /// `weights` may be `None` when the caller keeps its own copy for
+    /// cross-checks.
+    pub fn load_prebuilt(
+        &self,
+        name: &str,
+        program: Arc<Program>,
+        weights: Option<Weights>,
+    ) -> Result<Arc<ModelVersion>> {
+        let mv = self.mint(name, 1, program, weights);
+        self.publish_new(name, &mv)?;
+        Ok(mv)
+    }
+
+    /// Hot-swap `name` to a freshly compiled version of `net` (version
+    /// bumped). Compilation happens outside the lock: traffic keeps
+    /// serving the old version until the new one is published; requests
+    /// already queued against the old version drain on it.
+    pub fn swap(&self, name: &str, net: &Network, arch: ArchConfig) -> Result<Arc<ModelVersion>> {
+        self.swap_seeded(name, net, arch, None)
+    }
+
+    /// [`Self::swap`] with an explicit weight seed (pass a new seed to
+    /// make the swap observable in the outputs).
+    pub fn swap_seeded(
+        &self,
+        name: &str,
+        net: &Network,
+        arch: ArchConfig,
+        weight_seed: Option<u64>,
+    ) -> Result<Arc<ModelVersion>> {
+        if self.get(name).is_none() {
+            bail!(
+                "model {name:?} is not loaded (loaded: [{}])",
+                self.names().join(", ")
+            );
+        }
+        let (program, weights) =
+            compile_model(net, arch, weight_seed).with_context(|| format!("compile {name:?}"))?;
+        let mut m = self.models.write().unwrap();
+        // Re-check under the write lock: a concurrent unload between
+        // our pre-check and here must not turn a swap into a load.
+        let Some(old_version) = m.get(name).map(|old| old.version) else {
+            bail!("model {name:?} was unloaded during the swap");
+        };
+        let mv = self.mint(name, old_version + 1, program, Some(weights));
+        m.insert(name.to_string(), Arc::clone(&mv));
+        drop(m);
+        self.bump_generation();
+        Ok(mv)
+    }
+
+    /// Remove `name`. Requests already accepted keep their
+    /// `Arc<ModelVersion>` and complete normally; new submissions for
+    /// the name are rejected.
+    pub fn unload(&self, name: &str) -> Result<Arc<ModelVersion>> {
+        let mut m = self.models.write().unwrap();
+        match m.remove(name) {
+            Some(mv) => {
+                drop(m);
+                self.bump_generation();
+                Ok(mv)
+            }
+            None => {
+                let names: Vec<&str> = m.keys().map(String::as_str).collect();
+                bail!(
+                    "model {name:?} is not loaded (loaded: [{}])",
+                    names.join(", ")
+                )
+            }
+        }
+    }
+
+    /// Current version published under `name`.
+    pub fn get(&self, name: &str) -> Option<Arc<ModelVersion>> {
+        self.models.read().unwrap().get(name).cloned()
+    }
+
+    /// The single loaded model, iff exactly one is loaded (the
+    /// single-model `Server::submit` routing rule).
+    pub fn sole(&self) -> Option<Arc<ModelVersion>> {
+        let m = self.models.read().unwrap();
+        if m.len() == 1 {
+            m.values().next().cloned()
+        } else {
+            None
+        }
+    }
+
+    /// All loaded versions, in name order.
+    pub fn list(&self) -> Vec<Arc<ModelVersion>> {
+        self.models.read().unwrap().values().cloned().collect()
+    }
+
+    /// Loaded names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.models.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Ids of every currently-published version (engine-pool pruning).
+    pub fn live_ids(&self) -> HashSet<u64> {
+        self.models.read().unwrap().values().map(|m| m.id).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.read().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{NetworkBuilder, TensorShape};
+
+    fn small_net() -> Network {
+        NetworkBuilder::new("registry-test", TensorShape::new(2, 6, 6))
+            .conv(4, 3, 1, 1)
+            .flatten()
+            .fc_logits(5)
+            .build()
+    }
+
+    #[test]
+    fn registry_load_swap_unload_lifecycle() {
+        let registry = ModelRegistry::new();
+        let net = small_net();
+        let gen0 = registry.generation();
+        let v1 = registry.load("alpha", &net, ArchConfig::default()).unwrap();
+        assert!(registry.generation() > gen0, "load bumps the generation");
+        assert_eq!(v1.version(), 1);
+        assert_eq!(v1.name(), "alpha");
+        assert_eq!(registry.names(), vec!["alpha".to_string()]);
+        // duplicate load refused, pointing at swap
+        let err = registry
+            .load("alpha", &net, ArchConfig::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("swap"), "{err}");
+        // swap of an unknown name lists what is loaded
+        let err = registry
+            .swap("nope", &net, ArchConfig::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("alpha"), "{err}");
+        // swap bumps the version and mints a fresh id
+        let v2 = registry.swap("alpha", &net, ArchConfig::default()).unwrap();
+        assert_eq!(v2.version(), 2);
+        assert_ne!(v2.id(), v1.id());
+        // a seeded swap actually changes the weights
+        let v3 = registry
+            .swap_seeded("alpha", &net, ArchConfig::default(), Some(0xFEED))
+            .unwrap();
+        assert_eq!(v3.version(), 3);
+        assert_ne!(
+            v3.weights().unwrap().per_layer[0].as_slice(),
+            v1.weights().unwrap().per_layer[0].as_slice(),
+            "seeded swap must produce different weights"
+        );
+        // unload empties the registry; repeating it errors (and a
+        // failed mutation leaves the generation alone)
+        let gen_before = registry.generation();
+        registry.unload("alpha").unwrap();
+        assert!(registry.generation() > gen_before, "unload bumps the generation");
+        assert!(registry.is_empty());
+        let gen_after = registry.generation();
+        assert!(registry.unload("alpha").is_err());
+        assert_eq!(registry.generation(), gen_after);
+        assert!(registry.get("alpha").is_none());
+    }
+
+    #[test]
+    fn load_restored_reproduces_version_and_weights() {
+        let net = small_net();
+        let a = ModelRegistry::new();
+        a.load_seeded("m", &net, ArchConfig::default(), Some(0xAB))
+            .unwrap();
+        let a3 = a
+            .swap_seeded("m", &net, ArchConfig::default(), Some(0xCD))
+            .unwrap();
+        assert_eq!(a3.version(), 2);
+
+        // "restart": a fresh registry restored from (seed, version)
+        let b = ModelRegistry::new();
+        let b3 = b
+            .load_restored("m", &net, ArchConfig::default(), Some(0xCD), 2)
+            .unwrap();
+        assert_eq!(b3.version(), 2);
+        let (aw, bw) = (a3.weights().unwrap(), b3.weights().unwrap());
+        assert_eq!(aw.per_layer.len(), bw.per_layer.len());
+        for (li, (x, y)) in aw.per_layer.iter().zip(&bw.per_layer).enumerate() {
+            assert_eq!(
+                x.as_slice(),
+                y.as_slice(),
+                "restored weights must be bit-identical (layer {li})"
+            );
+        }
+        // and refcompute agrees on an actual image
+        let img = vec![3i8; net.input_len()];
+        assert_eq!(a3.refcompute(&img).unwrap(), b3.refcompute(&img).unwrap());
+
+        // version 0 is invalid, duplicate restore refused
+        assert!(b
+            .load_restored("x", &net, ArchConfig::default(), None, 0)
+            .is_err());
+        assert!(b
+            .load_restored("m", &net, ArchConfig::default(), None, 1)
+            .is_err());
+    }
+}

@@ -1,0 +1,731 @@
+//! The bounded-queue / micro-batch server core: worker pool, the two
+//! execution backends (PJRT, cycle simulator over a [`ModelRegistry`])
+//! and the graceful-shutdown drain semantics. See the `serve` module
+//! docs for the full contract.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::Program;
+use crate::sim::EnginePool;
+
+use super::metrics::{MetricsHub, ModelMetricsSnapshot, UNTAGGED_MODEL};
+use super::registry::{ModelRegistry, ModelStamp, ModelVersion};
+
+/// One inference request.
+pub struct Request {
+    pub id: u64,
+    pub image: Vec<i8>,
+    /// Model version resolved at submit time (`None` on the PJRT
+    /// path). A swap or unload after submission does not affect this
+    /// request: it executes on exactly this version (drain semantics).
+    model: Option<Arc<ModelVersion>>,
+    enqueued: Instant,
+    resp: mpsc::Sender<Response>,
+}
+
+/// The per-model metrics key for a queued request.
+fn metric_name(req: &Request) -> &str {
+    req.model.as_ref().map(|m| m.name()).unwrap_or(UNTAGGED_MODEL)
+}
+
+/// One inference response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<i8>,
+    /// Exactly which model version served this request (`None` on the
+    /// PJRT path). Cross-check `logits` against this version's weights.
+    pub model: Option<ModelStamp>,
+    /// Time spent queued before a worker picked the request up.
+    pub queue: Duration,
+    /// Executor time (batch time attributed per request).
+    pub exec: Duration,
+}
+
+/// Server configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Worker threads (each with a private execution engine pool).
+    pub workers: usize,
+    /// Max requests drained per dequeue (micro-batch).
+    pub max_batch: usize,
+    /// Queue capacity; `submit` fails fast beyond it (backpressure).
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            max_batch: 8,
+            queue_cap: 256,
+        }
+    }
+}
+
+#[derive(Default)]
+struct Shared {
+    queue: Mutex<VecDeque<Request>>,
+    cv: Condvar,
+    stop: AtomicBool,
+    served: AtomicU64,
+    rejected: AtomicU64,
+    /// Requests whose execution failed (the client's channel is closed
+    /// instead of answered; workers keep serving).
+    failed: AtomicU64,
+    /// Per-model counters, gauges and latency windows.
+    metrics: MetricsHub,
+}
+
+/// Which execution engine the workers build (internal; selected by the
+/// `Server` constructor used).
+enum BackendSpec {
+    /// AOT artifact through a per-worker PJRT client.
+    Pjrt,
+    /// Cycle-accurate engines over a shared model registry; requests
+    /// are routed by the model version they carry.
+    Sim(Arc<ModelRegistry>),
+}
+
+/// What a worker thread runs per request. `batch_done` fires after each
+/// drained micro-batch (engine-cache pruning and similar bookkeeping).
+trait Backend {
+    fn infer(&mut self, req: &Request) -> Result<Vec<i8>>;
+    fn batch_done(&mut self) {}
+}
+
+/// PJRT worker state: one full client per worker (handles aren't Send).
+struct PjrtBackend {
+    exe: crate::runtime::golden::TrainedTiny,
+}
+
+impl Backend for PjrtBackend {
+    fn infer(&mut self, req: &Request) -> Result<Vec<i8>> {
+        self.exe.run(&req.image)
+    }
+}
+
+/// Simulator worker state: one warm engine per loaded model, keyed by
+/// model-version id.
+struct SimBackend {
+    registry: Arc<ModelRegistry>,
+    pool: EnginePool,
+    /// Registry generation last reconciled against; pruning runs only
+    /// when it moves, keeping the steady-state serving path free of
+    /// registry locks and allocations.
+    seen_generation: u64,
+}
+
+impl Backend for SimBackend {
+    fn infer(&mut self, req: &Request) -> Result<Vec<i8>> {
+        let mv = req
+            .model
+            .as_ref()
+            .ok_or_else(|| anyhow!("sim request without a model tag"))?;
+        let out = self.pool.engine(mv.id(), mv.program()).run_image(&req.image)?;
+        Ok(out.scores)
+    }
+
+    fn batch_done(&mut self) {
+        // Drop engines of swapped-away / unloaded versions so a dead
+        // version's compiled program is released promptly (a
+        // length-based check would miss a swap, which replaces a key
+        // without changing the count and would pin the old program for
+        // the process lifetime). Gated on the registry's mutation
+        // generation so unchanged registries cost nothing here. A
+        // still-queued request that holds a pruned version simply
+        // rebuilds its engine on demand.
+        let generation = self.registry.generation();
+        if generation != self.seen_generation {
+            self.seen_generation = generation;
+            self.pool.retain_keys(&self.registry.live_ids());
+        }
+    }
+}
+
+/// A running inference server.
+pub struct Server {
+    shared: Arc<Shared>,
+    cfg: ServeConfig,
+    workers: Vec<std::thread::JoinHandle<Result<u64>>>,
+    next_id: AtomicU64,
+    input_len: usize,
+    backend: &'static str,
+    registry: Option<Arc<ModelRegistry>>,
+}
+
+impl Server {
+    /// Start `cfg.workers` threads serving the trained tiny-cnn
+    /// artifact over PJRT. Fails immediately if the artifacts are
+    /// missing.
+    pub fn start(cfg: ServeConfig) -> Result<Self> {
+        if !crate::runtime::artifacts_available() {
+            bail!("artifacts not built (run `make artifacts`)");
+        }
+        Self::start_backend(cfg, BackendSpec::Pjrt, 3 * 16 * 16, "pjrt")
+    }
+
+    /// Start `cfg.workers` threads serving the cycle-accurate simulator
+    /// over one shared compiled program (see [`super::sim_program`]).
+    /// Needs no artifacts: the whole datapath is the Rust engine.
+    /// Internally this is a single-entry [`ModelRegistry`] (named after
+    /// the network), so [`Self::submit`] routes without a model tag.
+    pub fn start_sim(cfg: ServeConfig, program: Arc<Program>) -> Result<Self> {
+        let input_len = program.net.input_len();
+        let registry = Arc::new(ModelRegistry::new());
+        let name = program.net.name.clone();
+        registry.load_prebuilt(&name, program, None)?;
+        Self::start_backend(cfg, BackendSpec::Sim(registry), input_len, "sim")
+    }
+
+    /// Start `cfg.workers` threads serving every model in `registry`,
+    /// with requests routed by model name ([`Self::submit_to`]) and
+    /// hot-swap/load/unload available through the registry while
+    /// serving. Each worker pre-builds one engine per model loaded at
+    /// startup; models loaded later get engines lazily on first
+    /// request.
+    pub fn start_multi(cfg: ServeConfig, registry: Arc<ModelRegistry>) -> Result<Self> {
+        anyhow::ensure!(
+            !registry.is_empty(),
+            "model registry has no models loaded"
+        );
+        let input_len = registry.sole().map(|m| m.input_len()).unwrap_or(0);
+        Self::start_backend(cfg, BackendSpec::Sim(registry), input_len, "sim")
+    }
+
+    fn start_backend(
+        cfg: ServeConfig,
+        spec: BackendSpec,
+        input_len: usize,
+        backend: &'static str,
+    ) -> Result<Self> {
+        anyhow::ensure!(cfg.workers >= 1 && cfg.max_batch >= 1);
+        let registry = match &spec {
+            BackendSpec::Sim(r) => Some(Arc::clone(r)),
+            BackendSpec::Pjrt => None,
+        };
+        let shared = Arc::new(Shared::default());
+        let mut workers = Vec::with_capacity(cfg.workers);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        for w in 0..cfg.workers {
+            let shared = Arc::clone(&shared);
+            let ready = ready_tx.clone();
+            let max_batch = cfg.max_batch;
+            let spec = match &spec {
+                BackendSpec::Pjrt => BackendSpec::Pjrt,
+                BackendSpec::Sim(r) => BackendSpec::Sim(Arc::clone(r)),
+            };
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("domino-worker-{w}"))
+                    .spawn(move || worker_entry(shared, max_batch, spec, ready))
+                    .context("spawn worker")?,
+            );
+        }
+        drop(ready_tx);
+        // wait until every worker has built its execution engine(s)
+        for _ in 0..cfg.workers {
+            ready_rx
+                .recv()
+                .context("worker died during startup")??;
+        }
+        Ok(Self {
+            shared,
+            cfg,
+            workers,
+            next_id: AtomicU64::new(0),
+            input_len,
+            backend,
+            registry,
+        })
+    }
+
+    /// Flat input length this server accepts through [`Self::submit`]:
+    /// the sole loaded model's input on the sim backend (tracking the
+    /// live registry, so 0 once several models are loaded — use
+    /// [`ModelVersion::input_len`] per model then), or the fixed
+    /// artifact input on PJRT.
+    pub fn input_len(&self) -> usize {
+        match &self.registry {
+            None => self.input_len,
+            Some(reg) => reg.sole().map(|m| m.input_len()).unwrap_or(0),
+        }
+    }
+
+    /// Which backend the workers run (`"pjrt"` or `"sim"`).
+    pub fn backend(&self) -> &'static str {
+        self.backend
+    }
+
+    /// The model registry behind a sim server (`None` on PJRT). Use it
+    /// to load/swap/unload models while serving.
+    pub fn registry(&self) -> Option<&Arc<ModelRegistry>> {
+        self.registry.as_ref()
+    }
+
+    /// Submit one image to the server's sole model; returns a receiver
+    /// for the response. Fails fast when the queue is full
+    /// (backpressure), the image is the wrong size, or more than one
+    /// model is loaded (use [`Self::submit_to`] then).
+    pub fn submit(&self, image: Vec<i8>) -> Result<mpsc::Receiver<Response>> {
+        match &self.registry {
+            None => self.enqueue(None, image),
+            Some(reg) => {
+                let mv = reg.sole().ok_or_else(|| {
+                    anyhow!(
+                        "{} models loaded ([{}]); name one with submit_to",
+                        reg.len(),
+                        reg.names().join(", ")
+                    )
+                })?;
+                self.enqueue(Some(mv), image)
+            }
+        }
+    }
+
+    /// Submit one image to the named model. The model version is
+    /// resolved now and travels with the request: a swap or unload
+    /// between submit and execution does not affect it.
+    pub fn submit_to(&self, model: &str, image: Vec<i8>) -> Result<mpsc::Receiver<Response>> {
+        let reg = self.registry.as_ref().ok_or_else(|| {
+            anyhow!(
+                "the {} backend is single-model; use submit",
+                self.backend
+            )
+        })?;
+        let mv = reg.get(model).ok_or_else(|| {
+            anyhow!(
+                "model {model:?} is not loaded (loaded: [{}])",
+                reg.names().join(", ")
+            )
+        })?;
+        self.enqueue(Some(mv), image)
+    }
+
+    fn enqueue(
+        &self,
+        model: Option<Arc<ModelVersion>>,
+        image: Vec<i8>,
+    ) -> Result<mpsc::Receiver<Response>> {
+        let want = model
+            .as_ref()
+            .map(|m| m.input_len())
+            .unwrap_or(self.input_len);
+        if image.len() != want {
+            match &model {
+                Some(m) => bail!(
+                    "image for model {:?} must be {want} int8 values (got {})",
+                    m.name(),
+                    image.len()
+                ),
+                None => bail!("image must be {want} int8 values (got {})", image.len()),
+            }
+        }
+        let (tx, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.len() >= self.cfg.queue_cap {
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                self.shared
+                    .metrics
+                    .on_reject(model.as_ref().map(|m| m.name()).unwrap_or(UNTAGGED_MODEL));
+                bail!("queue full ({}): backpressure", self.cfg.queue_cap);
+            }
+            // Gauge up while holding the queue lock, *before* the
+            // request becomes visible to workers: a worker cannot
+            // have dequeued it yet, so the depth gauge can never
+            // transiently go negative (and saturate into a permanent
+            // off-by-one). Borrowing the name here (instead of
+            // allocating a String) is why this runs before `model`
+            // moves into the queue entry.
+            self.shared
+                .metrics
+                .on_enqueue(model.as_ref().map(|m| m.name()).unwrap_or(UNTAGGED_MODEL));
+            q.push_back(Request {
+                id,
+                image,
+                model,
+                enqueued: Instant::now(),
+                resp: tx,
+            });
+        }
+        self.shared.cv.notify_one();
+        Ok(rx)
+    }
+
+    /// Synchronous convenience: submit + wait.
+    pub fn infer(&self, image: Vec<i8>) -> Result<Response> {
+        let rx = self.submit(image)?;
+        rx.recv().context("worker dropped the request")
+    }
+
+    /// Synchronous convenience: submit to a named model + wait.
+    pub fn infer_on(&self, model: &str, image: Vec<i8>) -> Result<Response> {
+        let rx = self.submit_to(model, image)?;
+        rx.recv().context("worker dropped the request")
+    }
+
+    pub fn served(&self) -> u64 {
+        self.shared.served.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.shared.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Requests whose execution failed after being accepted. Each one
+    /// had its response channel closed (the client's `recv` errors)
+    /// rather than hanging; the worker that hit the failure keeps
+    /// serving.
+    pub fn failed(&self) -> u64 {
+        self.shared.failed.load(Ordering::Relaxed)
+    }
+
+    /// Per-model counters, queue-depth gauges and latency percentiles
+    /// (the aggregate counters above stay available for cheap checks).
+    pub fn metrics_snapshot(&self) -> Vec<ModelMetricsSnapshot> {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Stop workers and join them; returns per-worker served counts.
+    ///
+    /// Workers drain the queue before exiting, so every request
+    /// accepted by `submit` before this call is still resolved —
+    /// answered, or its channel closed if its execution failed. This
+    /// holds with any number of models loaded, including versions
+    /// unloaded or swapped away while their requests were queued.
+    pub fn shutdown(mut self) -> Result<Vec<u64>> {
+        {
+            // Publish `stop` while holding the queue mutex: a worker is
+            // either before its predicate check (it will see the flag)
+            // or already parked in `wait` (it will see the notify).
+            // Storing without the lock could slot between a worker's
+            // check and its wait, losing the wakeup forever.
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.stop.store(true, Ordering::SeqCst);
+        }
+        self.shared.cv.notify_all();
+        let mut counts = Vec::new();
+        for w in self.workers.drain(..) {
+            counts.push(w.join().map_err(|_| anyhow::anyhow!("worker panicked"))??);
+        }
+        Ok(counts)
+    }
+}
+
+/// Worker thread entry: build the backend's execution engine(s), signal
+/// readiness, then serve micro-batches until shutdown.
+fn worker_entry(
+    shared: Arc<Shared>,
+    max_batch: usize,
+    spec: BackendSpec,
+    ready: mpsc::Sender<Result<()>>,
+) -> Result<u64> {
+    match spec {
+        BackendSpec::Pjrt => {
+            // each worker owns a full PJRT stack (handles are not Send)
+            let init = (|| -> Result<crate::runtime::golden::TrainedTiny> {
+                let rt = crate::runtime::Runtime::cpu()?;
+                crate::runtime::golden::TrainedTiny::load(&rt)
+            })();
+            let exe = match init {
+                Ok(e) => {
+                    let _ = ready.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    let _ = ready.send(Err(e));
+                    bail!("worker init failed: {msg}");
+                }
+            };
+            Ok(serve_loop(&shared, max_batch, PjrtBackend { exe }))
+        }
+        BackendSpec::Sim(registry) => {
+            // Warm the per-worker engine cache for every model loaded
+            // at startup, so `ready` means "engines built" (models
+            // loaded later build lazily on their first request). The
+            // generation is sampled *before* warming: a registry
+            // mutation racing the warm-up is then caught by the first
+            // batch_done prune.
+            let seen_generation = registry.generation();
+            let mut pool = EnginePool::new();
+            for mv in registry.list() {
+                pool.engine(mv.id(), mv.program());
+            }
+            let _ = ready.send(Ok(()));
+            Ok(serve_loop(
+                &shared,
+                max_batch,
+                SimBackend {
+                    registry,
+                    pool,
+                    seen_generation,
+                },
+            ))
+        }
+    }
+}
+
+/// The backend-agnostic micro-batch loop: block until work or stop,
+/// drain up to `max_batch` requests, execute, respond. Returns the
+/// number of requests this worker served.
+///
+/// A per-request execution failure never kills the worker: the failed
+/// request's response channel is dropped (so the client's `recv`
+/// errors instead of hanging), the failure is counted, and serving
+/// continues — otherwise one poisoned request could strand every
+/// request still in the queue.
+fn serve_loop<B: Backend>(shared: &Shared, max_batch: usize, mut backend: B) -> u64 {
+    let mut served = 0u64;
+    let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
+    loop {
+        batch.clear();
+        {
+            let mut q = shared.queue.lock().unwrap();
+            // `stop` is re-checked on every wakeup; because `shutdown`
+            // publishes it under this mutex, the check-then-wait pair
+            // cannot miss it.
+            while q.is_empty() && !shared.stop.load(Ordering::SeqCst) {
+                q = shared.cv.wait(q).unwrap();
+            }
+            if q.is_empty() && shared.stop.load(Ordering::SeqCst) {
+                return served;
+            }
+            for _ in 0..max_batch {
+                match q.pop_front() {
+                    Some(r) => batch.push(r),
+                    None => break,
+                }
+            }
+        }
+        for req in &batch {
+            shared.metrics.on_dequeue(metric_name(req));
+        }
+        let t0 = Instant::now();
+        let n = batch.len() as u32;
+        for req in batch.drain(..) {
+            let queue = req.enqueued.elapsed();
+            match backend.infer(&req) {
+                Ok(logits) => {
+                    let exec = t0.elapsed() / n;
+                    shared.served.fetch_add(1, Ordering::Relaxed);
+                    shared.metrics.on_served(metric_name(&req), queue + exec);
+                    served += 1;
+                    // client may have gone away; that's fine
+                    let _ = req.resp.send(Response {
+                        id: req.id,
+                        logits,
+                        model: req.model.as_ref().map(|m| m.stamp()),
+                        queue,
+                        exec,
+                    });
+                }
+                Err(e) => {
+                    shared.failed.fetch_add(1, Ordering::Relaxed);
+                    shared.metrics.on_failed(metric_name(&req));
+                    eprintln!("domino-serve: request {} failed: {e:#}", req.id);
+                    // dropping req.resp closes the channel: the client
+                    // unblocks with a recv error instead of hanging
+                }
+            }
+        }
+        backend.batch_done();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ArchConfig;
+    use crate::model::refcompute::{forward, Tensor};
+    use crate::model::{Network, NetworkBuilder, TensorShape};
+    use crate::serve::sim_program;
+    use crate::testutil::Rng;
+
+    /// A small conv net the sim backend can serve in well under a
+    /// millisecond per image.
+    fn small_net() -> Network {
+        NetworkBuilder::new("serve-test", TensorShape::new(2, 6, 6))
+            .conv(4, 3, 1, 1)
+            .flatten()
+            .fc_logits(5)
+            .build()
+    }
+
+    #[test]
+    fn sim_backend_rejects_zero_workers() {
+        let net = small_net();
+        let (program, _) = sim_program(&net, ArchConfig::default()).unwrap();
+        let bad = ServeConfig {
+            workers: 0,
+            ..Default::default()
+        };
+        assert!(Server::start_sim(bad, program).is_err());
+    }
+
+    #[test]
+    fn sim_backend_roundtrip_matches_refcompute() {
+        let net = small_net();
+        let (program, weights) = sim_program(&net, ArchConfig::default()).unwrap();
+        let server = Server::start_sim(
+            ServeConfig {
+                workers: 2,
+                max_batch: 4,
+                queue_cap: 64,
+            },
+            Arc::clone(&program),
+        )
+        .unwrap();
+        assert_eq!(server.backend(), "sim");
+        assert_eq!(server.input_len(), net.input_len());
+        // wrong-size image rejected up front
+        assert!(server.submit(vec![0i8; 3]).is_err());
+        // responses are bit-exact vs the int8 reference, and stamped
+        // with the (sole) model that served them
+        let mut rng = Rng::new(77);
+        for _ in 0..6 {
+            let image = rng.i8_vec(net.input_len(), 31);
+            let r = server.infer(image.clone()).unwrap();
+            let want = forward(&net, &weights, &Tensor::new(net.input, image)).unwrap();
+            assert_eq!(r.logits, want.data);
+            let stamp = r.model.expect("sim responses carry a model stamp");
+            assert_eq!(&*stamp.name, "serve-test");
+            assert_eq!(stamp.version, 1);
+        }
+        assert_eq!(server.served(), 6);
+        // per-model metrics tracked the traffic under the model's name
+        let snap = server.metrics_snapshot();
+        let m = snap
+            .iter()
+            .find(|s| s.model == "serve-test")
+            .expect("per-model metrics entry");
+        assert_eq!(m.served, 6);
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.rejected, 0);
+        assert_eq!(m.queue_depth, 0, "queue drained");
+        assert_eq!(m.samples, 6);
+        assert!(m.p50_us.is_some() && m.p99_us.is_some());
+        assert!(m.p50_us <= m.p99_us);
+        let counts = server.shutdown().unwrap();
+        assert_eq!(counts.iter().sum::<u64>(), 6);
+    }
+
+    #[test]
+    fn sim_backend_shutdown_under_load_answers_everything() {
+        // Regression test for the missed-wakeup shutdown race: repeat
+        // the submit-burst → immediate-shutdown cycle; with the old
+        // unsynchronized `stop` store a worker could park forever and
+        // `shutdown` would hang (the test would time out).
+        let net = small_net();
+        let (program, _) = sim_program(&net, ArchConfig::default()).unwrap();
+        let mut rng = Rng::new(99);
+        for round in 0..6 {
+            let server = Server::start_sim(
+                ServeConfig {
+                    workers: 2,
+                    max_batch: 3,
+                    queue_cap: 128,
+                },
+                Arc::clone(&program),
+            )
+            .unwrap();
+            let n = 4 + 3 * round as usize;
+            let receivers: Vec<_> = (0..n)
+                .map(|_| server.submit(rng.i8_vec(net.input_len(), 31)).unwrap())
+                .collect();
+            // shut down with the queue still loaded: workers must
+            // drain it and answer every accepted request
+            let counts = server.shutdown().unwrap();
+            assert_eq!(counts.iter().sum::<u64>(), n as u64, "round {round}");
+            for (i, rx) in receivers.into_iter().enumerate() {
+                let r = rx.recv().expect("accepted request must be answered");
+                assert_eq!(r.logits.len(), 5, "round {round} request {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn submit_requires_model_name_with_multiple_models() {
+        let registry = Arc::new(ModelRegistry::new());
+        let net = small_net();
+        registry.load("a", &net, ArchConfig::default()).unwrap();
+        registry.load("b", &net, ArchConfig::default()).unwrap();
+        let server = Server::start_multi(
+            ServeConfig {
+                workers: 1,
+                max_batch: 2,
+                queue_cap: 16,
+            },
+            Arc::clone(&registry),
+        )
+        .unwrap();
+        let img = vec![0i8; net.input_len()];
+        let err = server.submit(img.clone()).unwrap_err().to_string();
+        assert!(err.contains("submit_to"), "{err}");
+        // named routing works for both
+        assert_eq!(server.infer_on("a", img.clone()).unwrap().logits.len(), 5);
+        assert_eq!(server.infer_on("b", img).unwrap().logits.len(), 5);
+        // unknown model error lists the loaded names
+        let err = server
+            .submit_to("c", vec![0i8; net.input_len()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("[a, b]"), "{err}");
+        // metrics split by model name
+        let snap = server.metrics_snapshot();
+        let names: Vec<&str> = snap.iter().map(|s| s.model.as_str()).collect();
+        assert!(names.contains(&"a") && names.contains(&"b"), "{names:?}");
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn start_multi_rejects_empty_registry() {
+        let registry = Arc::new(ModelRegistry::new());
+        assert!(Server::start_multi(ServeConfig::default(), registry).is_err());
+    }
+
+    #[test]
+    fn config_validation() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let bad = ServeConfig {
+            workers: 0,
+            ..Default::default()
+        };
+        assert!(Server::start(bad).is_err());
+    }
+
+    #[test]
+    fn serve_roundtrip_and_backpressure() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let server = Server::start(ServeConfig {
+            workers: 1,
+            max_batch: 4,
+            queue_cap: 8,
+        })
+        .unwrap();
+        // wrong-size image rejected up front
+        assert!(server.submit(vec![0i8; 3]).is_err());
+        // correct request round-trips
+        let r = server.infer(vec![1i8; 768]).unwrap();
+        assert_eq!(r.logits.len(), 10);
+        assert_eq!(server.served(), 1);
+        // responses are deterministic
+        let r2 = server.infer(vec![1i8; 768]).unwrap();
+        assert_eq!(r.logits, r2.logits);
+        let counts = server.shutdown().unwrap();
+        assert_eq!(counts.iter().sum::<u64>(), 2);
+    }
+}

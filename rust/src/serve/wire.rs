@@ -1,0 +1,977 @@
+//! The dependency-free wire protocol: length-prefixed frames carrying
+//! a hand-rolled JSON encoding of [`super::api::Request`] /
+//! [`super::api::Response`]. The build image is offline (no serde),
+//! so the codec is ~std-only by design — and deliberately small: the
+//! only JSON the protocol needs is null/bool/integer/string/array/
+//! object. Floating-point numbers are rejected on decode (nothing in
+//! the API produces one, and refusing them keeps every value
+//! bit-exactly round-trippable).
+//!
+//! ## Framing
+//!
+//! A frame is a 4-byte big-endian length followed by that many bytes
+//! of UTF-8 JSON. Frames above [`MAX_FRAME`] are rejected *before*
+//! the payload is read, so an oversized (or hostile) length prefix
+//! can't allocate unbounded memory. A clean EOF between frames reads
+//! as `None`; an EOF inside a frame is an error ("truncated frame").
+//!
+//! ## Strings
+//!
+//! Encoding escapes `"`/`\\` and every control character; decoding
+//! understands the full JSON escape set including `\uXXXX` with
+//! surrogate pairs. Model names are arbitrary user strings, so the
+//! codec is property-tested against quoting/escaping round-trips in
+//! `rust/tests/wire_properties.rs`.
+
+use std::io::{self, Read, Write};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::api;
+use super::metrics::ModelMetricsSnapshot;
+use super::registry::ModelStamp;
+
+/// Hard cap on a single frame's payload (64 MiB) — far above any real
+/// request (the largest zoo input is ~150 k int8 values, well under
+/// 1 MiB of JSON) but small enough that a hostile length prefix
+/// cannot OOM the server.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Maximum JSON nesting depth accepted by the decoder (the protocol
+/// itself never nests deeper than 4; the cap stops a `[[[[…` depth
+/// bomb from overflowing the parser's stack).
+const MAX_DEPTH: usize = 64;
+
+// ---------------------------------------------------------------------------
+// JSON value model
+// ---------------------------------------------------------------------------
+
+/// The wire protocol's JSON value. Numbers are integers only (i128
+/// holds the full u64 and i64 ranges losslessly).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Int(i128),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i128> {
+        match self {
+            Json::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+
+    /// Object field lookup (first match; the encoder never emits
+    /// duplicate keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encoder
+// ---------------------------------------------------------------------------
+
+/// Serialize a [`Json`] value to compact JSON text.
+pub fn encode(v: &Json) -> String {
+    let mut out = String::new();
+    write_value(v, &mut out);
+    out
+}
+
+fn write_value(v: &Json, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Int(i) => {
+            out.push_str(&i.to_string());
+        }
+        Json::Str(s) => write_string(s, out),
+        Json::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(item, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(fields) => {
+            out.push('{');
+            for (i, (k, val)) in fields.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_string(k, out);
+                out.push(':');
+                write_value(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+// ---------------------------------------------------------------------------
+// Decoder
+// ---------------------------------------------------------------------------
+
+/// Parse JSON text into a [`Json`] value. Rejects floats, lone
+/// surrogates, unescaped control characters, trailing data and
+/// nesting beyond [`MAX_DEPTH`] — always with an error, never a
+/// panic.
+pub fn decode(text: &str) -> Result<Json> {
+    let mut p = Parser {
+        s: text,
+        b: text.as_bytes(),
+        i: 0,
+    };
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.i != p.b.len() {
+        bail!("trailing data after JSON value at offset {}", p.i);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    s: &'a str,
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at offset {}", self.i)
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        if depth > MAX_DEPTH {
+            bail!("JSON nesting deeper than {MAX_DEPTH}");
+        }
+        self.skip_ws();
+        match self.peek() {
+            None => bail!("unexpected end of JSON at offset {}", self.i),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(depth),
+            Some(b'{') => self.object(depth),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.int(),
+            Some(c) => bail!("unexpected byte {:?} at offset {}", c as char, self.i),
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json> {
+        self.i += 1; // consume '['
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => bail!("expected ',' or ']' at offset {}", self.i),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json> {
+        self.i += 1; // consume '{'
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            if self.peek() != Some(b'"') {
+                bail!("expected a string key at offset {}", self.i);
+            }
+            let key = self.string()?;
+            self.skip_ws();
+            if self.peek() != Some(b':') {
+                bail!("expected ':' at offset {}", self.i);
+            }
+            self.i += 1;
+            let val = self.value(depth + 1)?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.i += 1;
+                }
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => bail!("expected ',' or '}}' at offset {}", self.i),
+            }
+        }
+    }
+
+    fn int(&mut self) -> Result<Json> {
+        let start = self.i;
+        let neg = if self.peek() == Some(b'-') {
+            self.i += 1;
+            true
+        } else {
+            false
+        };
+        let mut val: i128 = 0;
+        let mut digits = 0usize;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() {
+                digits += 1;
+                val = val
+                    .checked_mul(10)
+                    .and_then(|v| v.checked_add((c - b'0') as i128))
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("integer too large at offset {start}")
+                    })?;
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        if digits == 0 {
+            bail!("expected digits at offset {}", self.i);
+        }
+        if matches!(self.peek(), Some(b'.' | b'e' | b'E')) {
+            bail!(
+                "floating-point numbers are not part of the wire protocol (offset {start})"
+            );
+        }
+        Ok(Json::Int(if neg { -val } else { val }))
+    }
+
+    /// Parse a string starting at a `"` byte. Raw runs are copied by
+    /// byte range (every slice boundary sits on an ASCII `"` or `\`,
+    /// so the str indexing is always on a char boundary).
+    fn string(&mut self) -> Result<String> {
+        self.i += 1; // consume '"'
+        let mut out = String::new();
+        let mut run_start = self.i;
+        loop {
+            let Some(c) = self.peek() else {
+                bail!("unterminated string at offset {}", self.i)
+            };
+            match c {
+                b'"' => {
+                    out.push_str(&self.s[run_start..self.i]);
+                    self.i += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    out.push_str(&self.s[run_start..self.i]);
+                    self.i += 1;
+                    let Some(e) = self.peek() else {
+                        bail!("unterminated escape at offset {}", self.i)
+                    };
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            if (0xD800..=0xDBFF).contains(&hi) {
+                                // high surrogate: a \uXXXX low surrogate
+                                // must follow
+                                if self.peek() == Some(b'\\')
+                                    && self.b.get(self.i + 1) == Some(&b'u')
+                                {
+                                    self.i += 2;
+                                    let lo = self.hex4()?;
+                                    if !(0xDC00..=0xDFFF).contains(&lo) {
+                                        bail!(
+                                            "invalid low surrogate \\u{lo:04x} at offset {}",
+                                            self.i
+                                        );
+                                    }
+                                    let cp =
+                                        0x10000 + (((hi - 0xD800) << 10) | (lo - 0xDC00));
+                                    out.push(char::from_u32(cp).ok_or_else(|| {
+                                        anyhow::anyhow!("invalid surrogate pair")
+                                    })?);
+                                } else {
+                                    bail!("lone high surrogate at offset {}", self.i);
+                                }
+                            } else if (0xDC00..=0xDFFF).contains(&hi) {
+                                bail!("lone low surrogate at offset {}", self.i);
+                            } else {
+                                out.push(char::from_u32(hi).ok_or_else(|| {
+                                    anyhow::anyhow!("invalid \\u escape")
+                                })?);
+                            }
+                        }
+                        other => bail!(
+                            "invalid escape \\{} at offset {}",
+                            other as char,
+                            self.i
+                        ),
+                    }
+                    run_start = self.i;
+                }
+                c if c < 0x20 => {
+                    bail!("unescaped control character in string at offset {}", self.i)
+                }
+                _ => {
+                    self.i += 1;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let Some(c) = self.peek() else {
+                bail!("truncated \\u escape at offset {}", self.i)
+            };
+            let d = match c {
+                b'0'..=b'9' => (c - b'0') as u32,
+                b'a'..=b'f' => (c - b'a') as u32 + 10,
+                b'A'..=b'F' => (c - b'A') as u32 + 10,
+                _ => bail!("invalid hex digit in \\u escape at offset {}", self.i),
+            };
+            v = v * 16 + d;
+            self.i += 1;
+        }
+        Ok(v)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed field extraction
+// ---------------------------------------------------------------------------
+
+/// Required object field.
+pub fn field<'a>(v: &'a Json, key: &str) -> Result<&'a Json> {
+    v.get(key)
+        .ok_or_else(|| anyhow::anyhow!("missing field {key:?}"))
+}
+
+pub fn str_field(v: &Json, key: &str) -> Result<String> {
+    field(v, key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| anyhow::anyhow!("field {key:?} must be a string"))
+}
+
+/// Missing or `null` reads as `None`.
+pub fn opt_str_field(v: &Json, key: &str) -> Result<Option<String>> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Str(s)) => Ok(Some(s.clone())),
+        Some(_) => bail!("field {key:?} must be a string or null"),
+    }
+}
+
+fn int_as_u64(j: &Json, what: &str) -> Result<u64> {
+    let i = j
+        .as_int()
+        .ok_or_else(|| anyhow::anyhow!("{what} must be an integer"))?;
+    u64::try_from(i).map_err(|_| anyhow::anyhow!("{what} out of u64 range: {i}"))
+}
+
+pub fn u64_field(v: &Json, key: &str) -> Result<u64> {
+    int_as_u64(field(v, key)?, &format!("field {key:?}"))
+}
+
+/// Missing or `null` reads as `None`.
+pub fn opt_u64_field(v: &Json, key: &str) -> Result<Option<u64>> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(j) => Ok(Some(int_as_u64(j, &format!("field {key:?}"))?)),
+    }
+}
+
+/// An array of integers, each within i8 range.
+pub fn i8_vec_field(v: &Json, key: &str) -> Result<Vec<i8>> {
+    let arr = field(v, key)?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("field {key:?} must be an array"))?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, j)| {
+            let x = j
+                .as_int()
+                .ok_or_else(|| anyhow::anyhow!("{key}[{i}] must be an integer"))?;
+            i8::try_from(x).map_err(|_| anyhow::anyhow!("{key}[{i}] out of i8 range: {x}"))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// api::Request / api::Response <-> JSON
+// ---------------------------------------------------------------------------
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn s(x: &str) -> Json {
+    Json::Str(x.to_string())
+}
+
+fn u(x: u64) -> Json {
+    Json::Int(x as i128)
+}
+
+fn opt_u(x: Option<u64>) -> Json {
+    x.map(u).unwrap_or(Json::Null)
+}
+
+fn i8s(v: &[i8]) -> Json {
+    Json::Arr(v.iter().map(|&b| Json::Int(b as i128)).collect())
+}
+
+pub fn request_to_json(req: &api::Request) -> Json {
+    use api::Request as R;
+    match req {
+        R::Infer { model, image } => obj(vec![
+            ("type", s("infer")),
+            ("model", model.as_deref().map(s).unwrap_or(Json::Null)),
+            ("image", i8s(image)),
+        ]),
+        R::Load { model } => obj(vec![("type", s("load")), ("model", s(model))]),
+        R::LoadSeeded { model, seed } => obj(vec![
+            ("type", s("load_seeded")),
+            ("model", s(model)),
+            ("seed", u(*seed)),
+        ]),
+        R::Swap { model, seed } => obj(vec![
+            ("type", s("swap")),
+            ("model", s(model)),
+            ("seed", opt_u(*seed)),
+        ]),
+        R::Unload { model } => obj(vec![("type", s("unload")), ("model", s(model))]),
+        R::ListModels => obj(vec![("type", s("list_models"))]),
+        R::ModelInfo { model } => obj(vec![("type", s("model_info")), ("model", s(model))]),
+        R::Stats => obj(vec![("type", s("stats"))]),
+    }
+}
+
+pub fn decode_request(frame: &[u8]) -> Result<api::Request> {
+    let text = std::str::from_utf8(frame).context("request frame is not UTF-8")?;
+    let v = decode(text)?;
+    let t = str_field(&v, "type")?;
+    match t.as_str() {
+        "infer" => Ok(api::Request::Infer {
+            model: opt_str_field(&v, "model")?,
+            image: i8_vec_field(&v, "image")?,
+        }),
+        "load" => Ok(api::Request::Load {
+            model: str_field(&v, "model")?,
+        }),
+        "load_seeded" => Ok(api::Request::LoadSeeded {
+            model: str_field(&v, "model")?,
+            seed: u64_field(&v, "seed")?,
+        }),
+        "swap" => Ok(api::Request::Swap {
+            model: str_field(&v, "model")?,
+            seed: opt_u64_field(&v, "seed")?,
+        }),
+        "unload" => Ok(api::Request::Unload {
+            model: str_field(&v, "model")?,
+        }),
+        "list_models" => Ok(api::Request::ListModels),
+        "model_info" => Ok(api::Request::ModelInfo {
+            model: str_field(&v, "model")?,
+        }),
+        "stats" => Ok(api::Request::Stats),
+        other => bail!("unknown request type {other:?}"),
+    }
+}
+
+pub fn encode_request(req: &api::Request) -> Vec<u8> {
+    encode(&request_to_json(req)).into_bytes()
+}
+
+fn stamp_to_json(st: &ModelStamp) -> Json {
+    obj(vec![
+        ("name", s(&st.name)),
+        ("id", u(st.id)),
+        ("version", u(st.version)),
+    ])
+}
+
+fn stamp_from_json(v: &Json) -> Result<ModelStamp> {
+    Ok(ModelStamp {
+        name: Arc::from(str_field(v, "name")?.as_str()),
+        id: u64_field(v, "id")?,
+        version: u64_field(v, "version")?,
+    })
+}
+
+/// The `ModelDesc` JSON shape — also what `domino models --json`
+/// emits, so scripts parse the same representation the network speaks.
+pub fn desc_to_json(d: &api::ModelDesc) -> Json {
+    obj(vec![
+        ("name", s(&d.name)),
+        ("id", u(d.id)),
+        ("version", u(d.version)),
+        ("input_len", u(d.input_len)),
+        ("classes", u(d.classes)),
+        ("layers", u(d.layers)),
+        ("params", u(d.params)),
+        ("macs", u(d.macs)),
+    ])
+}
+
+fn desc_from_json(v: &Json) -> Result<api::ModelDesc> {
+    Ok(api::ModelDesc {
+        name: str_field(v, "name")?,
+        id: u64_field(v, "id")?,
+        version: u64_field(v, "version")?,
+        input_len: u64_field(v, "input_len")?,
+        classes: u64_field(v, "classes")?,
+        layers: u64_field(v, "layers")?,
+        params: u64_field(v, "params")?,
+        macs: u64_field(v, "macs")?,
+    })
+}
+
+fn snapshot_to_json(m: &ModelMetricsSnapshot) -> Json {
+    obj(vec![
+        ("model", s(&m.model)),
+        ("served", u(m.served)),
+        ("failed", u(m.failed)),
+        ("rejected", u(m.rejected)),
+        ("queue_depth", u(m.queue_depth)),
+        ("samples", u(m.samples)),
+        ("p50_us", opt_u(m.p50_us)),
+        ("p95_us", opt_u(m.p95_us)),
+        ("p99_us", opt_u(m.p99_us)),
+    ])
+}
+
+fn snapshot_from_json(v: &Json) -> Result<ModelMetricsSnapshot> {
+    Ok(ModelMetricsSnapshot {
+        model: str_field(v, "model")?,
+        served: u64_field(v, "served")?,
+        failed: u64_field(v, "failed")?,
+        rejected: u64_field(v, "rejected")?,
+        queue_depth: u64_field(v, "queue_depth")?,
+        samples: u64_field(v, "samples")?,
+        p50_us: opt_u64_field(v, "p50_us")?,
+        p95_us: opt_u64_field(v, "p95_us")?,
+        p99_us: opt_u64_field(v, "p99_us")?,
+    })
+}
+
+pub fn response_to_json(resp: &api::Response) -> Json {
+    use api::Response as R;
+    match resp {
+        R::Infer(r) => obj(vec![
+            ("type", s("infer")),
+            ("logits", i8s(&r.logits)),
+            (
+                "model",
+                r.model.as_ref().map(stamp_to_json).unwrap_or(Json::Null),
+            ),
+            ("queue_us", u(r.queue_us)),
+            ("exec_us", u(r.exec_us)),
+        ]),
+        R::Loaded(st) => obj(vec![("type", s("loaded")), ("model", stamp_to_json(st))]),
+        R::Swapped(st) => obj(vec![("type", s("swapped")), ("model", stamp_to_json(st))]),
+        R::Unloaded(st) => obj(vec![("type", s("unloaded")), ("model", stamp_to_json(st))]),
+        R::Models(list) => obj(vec![
+            ("type", s("models")),
+            ("models", Json::Arr(list.iter().map(desc_to_json).collect())),
+        ]),
+        R::Info(d) => obj(vec![("type", s("info")), ("model", desc_to_json(d))]),
+        R::Stats(st) => obj(vec![
+            ("type", s("stats")),
+            ("served", u(st.served)),
+            ("rejected", u(st.rejected)),
+            ("failed", u(st.failed)),
+            (
+                "models",
+                Json::Arr(st.models.iter().map(snapshot_to_json).collect()),
+            ),
+        ]),
+        R::Error { message } => obj(vec![("type", s("error")), ("message", s(message))]),
+    }
+}
+
+pub fn decode_response(frame: &[u8]) -> Result<api::Response> {
+    let text = std::str::from_utf8(frame).context("response frame is not UTF-8")?;
+    let v = decode(text)?;
+    let t = str_field(&v, "type")?;
+    match t.as_str() {
+        "infer" => Ok(api::Response::Infer(api::InferReply {
+            logits: i8_vec_field(&v, "logits")?,
+            model: match v.get("model") {
+                None | Some(Json::Null) => None,
+                Some(m) => Some(stamp_from_json(m)?),
+            },
+            queue_us: u64_field(&v, "queue_us")?,
+            exec_us: u64_field(&v, "exec_us")?,
+        })),
+        "loaded" => Ok(api::Response::Loaded(stamp_from_json(field(&v, "model")?)?)),
+        "swapped" => Ok(api::Response::Swapped(stamp_from_json(field(&v, "model")?)?)),
+        "unloaded" => Ok(api::Response::Unloaded(stamp_from_json(field(
+            &v, "model",
+        )?)?)),
+        "models" => {
+            let arr = field(&v, "models")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("field \"models\" must be an array"))?;
+            Ok(api::Response::Models(
+                arr.iter().map(desc_from_json).collect::<Result<_>>()?,
+            ))
+        }
+        "info" => Ok(api::Response::Info(desc_from_json(field(&v, "model")?)?)),
+        "stats" => {
+            let arr = field(&v, "models")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("field \"models\" must be an array"))?;
+            Ok(api::Response::Stats(api::StatsReply {
+                served: u64_field(&v, "served")?,
+                rejected: u64_field(&v, "rejected")?,
+                failed: u64_field(&v, "failed")?,
+                models: arr.iter().map(snapshot_from_json).collect::<Result<_>>()?,
+            }))
+        }
+        "error" => Ok(api::Response::Error {
+            message: str_field(&v, "message")?,
+        }),
+        other => bail!("unknown response type {other:?}"),
+    }
+}
+
+pub fn encode_response(resp: &api::Response) -> Vec<u8> {
+    encode(&response_to_json(resp)).into_bytes()
+}
+
+// ---------------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------------
+
+/// Write one length-prefixed frame and flush.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        bail!(
+            "frame of {} bytes exceeds the {MAX_FRAME}-byte limit",
+            payload.len()
+        );
+    }
+    w.write_all(&(payload.len() as u32).to_be_bytes())
+        .context("write frame header")?;
+    w.write_all(payload).context("write frame payload")?;
+    w.flush().context("flush frame")?;
+    Ok(())
+}
+
+enum Fill {
+    Full,
+    /// Clean EOF (or a requested stop) before the first byte.
+    End,
+}
+
+/// Fill `buf` completely. `clean_end` permits an EOF (or stop) before
+/// any byte arrived; mid-buffer it is always an error. Timeouts
+/// (`WouldBlock`/`TimedOut`) poll the `stop` callback when one is
+/// given; without one they surface as errors (the blocking client
+/// path, where a read timeout set by the caller is a real deadline).
+fn fill<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    stop: Option<&dyn Fn() -> bool>,
+    clean_end: bool,
+) -> Result<Fill> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 && clean_end {
+                    return Ok(Fill::End);
+                }
+                bail!(
+                    "connection closed mid-frame ({filled} of {} bytes)",
+                    buf.len()
+                );
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                ) =>
+            {
+                match stop {
+                    Some(should_stop) => {
+                        if should_stop() {
+                            if filled == 0 && clean_end {
+                                return Ok(Fill::End);
+                            }
+                            bail!("shutdown interrupted a partially received frame");
+                        }
+                        // not stopping: keep waiting for the peer
+                    }
+                    None => return Err(e).context("read frame timed out"),
+                }
+            }
+            Err(e) => return Err(e).context("read frame"),
+        }
+    }
+    Ok(Fill::Full)
+}
+
+fn read_frame_impl<R: Read>(
+    r: &mut R,
+    stop: Option<&dyn Fn() -> bool>,
+) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    match fill(r, &mut len_buf, stop, true)? {
+        Fill::End => return Ok(None),
+        Fill::Full => {}
+    }
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds the {MAX_FRAME}-byte limit");
+    }
+    let mut buf = vec![0u8; len];
+    match fill(r, &mut buf, stop, false)? {
+        Fill::End => unreachable!("clean_end is false for the payload"),
+        Fill::Full => Ok(Some(buf)),
+    }
+}
+
+/// Read one frame. `Ok(None)` on a clean EOF between frames; errors on
+/// truncation or an oversized length prefix (before reading the
+/// payload).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    read_frame_impl(r, None)
+}
+
+/// [`read_frame`] for readers with a read timeout: each timeout polls
+/// `stop`, so an idle connection drains promptly at shutdown
+/// (`Ok(None)`). A frame that keeps making progress is still received
+/// whole, but a frame stuck *partially* received when `stop` is set
+/// errors out — a stalled peer must not block shutdown.
+pub fn read_frame_cancellable<R: Read>(
+    r: &mut R,
+    stop: &dyn Fn() -> bool,
+) -> Result<Option<Vec<u8>>> {
+    read_frame_impl(r, Some(stop))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn scalar_roundtrips() {
+        for v in [
+            Json::Null,
+            Json::Bool(true),
+            Json::Bool(false),
+            Json::Int(0),
+            Json::Int(-128),
+            Json::Int(127),
+            Json::Int(u64::MAX as i128),
+            Json::Int(-(u64::MAX as i128)),
+            Json::Str(String::new()),
+            Json::Arr(vec![]),
+            Json::Obj(vec![]),
+        ] {
+            assert_eq!(decode(&encode(&v)).unwrap(), v, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn string_escaping_roundtrips() {
+        for raw in [
+            "plain",
+            "with \"quotes\" and \\backslashes\\",
+            "newline\nreturn\rtab\tnull\u{0}bell\u{7}",
+            "unicode: caffè 日本語 😀",
+            "/slashes/ are fine",
+            "\u{1F} edge of control range",
+        ] {
+            let v = Json::Str(raw.to_string());
+            let text = encode(&v);
+            assert_eq!(decode(&text).unwrap(), v, "{text}");
+        }
+    }
+
+    #[test]
+    fn decoder_accepts_standard_json_forms() {
+        // whitespace, \u escapes (incl. a surrogate pair), nested
+        // structures written by other encoders
+        let v = decode(" { \"a\" : [ 1 , -2 , null , true ] , \"s\" : \"\\u0041\\ud83d\\ude00\" } ")
+            .unwrap();
+        assert_eq!(v.get("s").unwrap().as_str().unwrap(), "A😀");
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[1], Json::Int(-2));
+    }
+
+    #[test]
+    fn decoder_rejects_malformed_input_without_panicking() {
+        for bad in [
+            "",
+            "{",
+            "[1,",
+            "\"unterminated",
+            "{\"a\":}",
+            "{\"a\" 1}",
+            "nul",
+            "tru",
+            "1.5",
+            "1e9",
+            "-",
+            "[1] trailing",
+            "\"\\q\"",
+            "\"\\u12\"",
+            "\"\\ud800\"",
+            "\"\\udc00\"",
+            "\"\u{1}\"",
+            "{\"a\":1,}",
+            "[1 2]",
+            "123456789012345678901234567890123456789012345",
+        ] {
+            assert!(decode(bad).is_err(), "{bad:?} should be rejected");
+        }
+        // depth bomb: deeper than MAX_DEPTH must error, not overflow
+        let bomb = "[".repeat(MAX_DEPTH + 8);
+        assert!(decode(&bomb).is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip_and_clean_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF -> None");
+    }
+
+    #[test]
+    fn truncated_and_oversized_frames_error() {
+        // truncated header
+        let mut r = Cursor::new(vec![0u8, 0]);
+        assert!(read_frame(&mut r).is_err());
+        // truncated payload
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        buf.truncate(buf.len() - 2);
+        let mut r = Cursor::new(buf);
+        assert!(read_frame(&mut r).is_err());
+        // hostile length prefix: rejected before any allocation
+        let mut r = Cursor::new(((MAX_FRAME + 1) as u32).to_be_bytes().to_vec());
+        let err = read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
+        // writer side refuses oversize too
+        let big = vec![0u8; MAX_FRAME + 1];
+        assert!(write_frame(&mut Vec::new(), &big).is_err());
+    }
+
+    #[test]
+    fn request_json_is_stable() {
+        let req = api::Request::Infer {
+            model: Some("tiny-cnn".to_string()),
+            image: vec![-128, 0, 127],
+        };
+        assert_eq!(
+            String::from_utf8(encode_request(&req)).unwrap(),
+            r#"{"type":"infer","model":"tiny-cnn","image":[-128,0,127]}"#
+        );
+        assert_eq!(decode_request(&encode_request(&req)).unwrap(), req);
+    }
+
+    #[test]
+    fn unknown_types_and_bad_fields_are_typed_errors() {
+        assert!(decode_request(br#"{"type":"frobnicate"}"#).is_err());
+        assert!(decode_request(br#"{"model":"x"}"#).is_err());
+        // i8 range enforced
+        assert!(decode_request(br#"{"type":"infer","model":null,"image":[128]}"#).is_err());
+        assert!(decode_request(br#"{"type":"infer","model":null,"image":[-129]}"#).is_err());
+        // seeds are u64: negatives rejected
+        assert!(decode_request(br#"{"type":"load_seeded","model":"m","seed":-1}"#).is_err());
+        assert!(decode_response(br#"{"type":"nope"}"#).is_err());
+        assert!(decode_response(b"\xff\xfe").is_err(), "non-UTF-8 frame");
+    }
+}

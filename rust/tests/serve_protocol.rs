@@ -1,0 +1,371 @@
+//! End-to-end tests of the TCP service endpoint: the full admin cycle
+//! (load → mixed-model infer → swap → stats → unload) driven through
+//! the in-crate `Client`, every response cross-checked against the
+//! refcompute oracle of the model version stamped on it; registry
+//! persistence across a simulated restart; hostile-input handling;
+//! and the bound-address / port-in-use ergonomics.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use domino::coordinator::ArchConfig;
+use domino::model::zoo;
+use domino::serve::api::{RegistryManifest, Request, Response};
+use domino::serve::client::Client;
+use domino::serve::net::{NetConfig, NetServer};
+use domino::serve::{wire, ModelRegistry, ServeConfig, Server, Service};
+use domino::testutil::Rng;
+
+fn fast_net_cfg() -> NetConfig {
+    NetConfig {
+        max_conns: 64,
+        poll: Duration::from_millis(20),
+        ..NetConfig::default()
+    }
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        workers: 2,
+        max_batch: 4,
+        queue_cap: 256,
+    }
+}
+
+/// Start a sim server over the given seeded zoo models and expose it
+/// on an ephemeral TCP port.
+fn start_endpoint(models: &[(&str, u64)]) -> (Arc<Service>, NetServer, String) {
+    let registry = Arc::new(ModelRegistry::new());
+    for (name, seed) in models {
+        let net = zoo::lookup(name).unwrap();
+        registry
+            .load_seeded(&net.name, &net, ArchConfig::default(), Some(*seed))
+            .unwrap();
+    }
+    let server = Server::start_multi(serve_cfg(), registry).unwrap();
+    let service = Arc::new(Service::new(server, ArchConfig::default()));
+    let net = NetServer::bind_with("127.0.0.1:0", Arc::clone(&service), fast_net_cfg()).unwrap();
+    let addr = net.local_addr().to_string();
+    (service, net, addr)
+}
+
+fn connect(addr: &str) -> Client {
+    let mut c = Client::connect(addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    c
+}
+
+#[test]
+fn full_admin_cycle_over_tcp_with_refcompute_crosschecks() {
+    let (service, net, addr) = start_endpoint(&[("tiny-mlp", 0x11)]);
+    // port 0 resolved to a real ephemeral port
+    assert_ne!(net.local_addr().port(), 0);
+
+    let mut admin = connect(&addr);
+
+    // admin plane: load a second model remotely
+    let st = admin.load_seeded("tiny-resnet", 0x22).unwrap();
+    assert_eq!(&*st.name, "tiny-resnet");
+    assert_eq!(st.version, 1);
+
+    // observability plane: both models described
+    let models = admin.models().unwrap();
+    let names: Vec<&str> = models.iter().map(|d| d.name.as_str()).collect();
+    assert_eq!(names, ["tiny-mlp", "tiny-resnet"]);
+    let info = admin.model_info("tiny-resnet").unwrap();
+    let resnet_net = zoo::tiny_resnet();
+    assert_eq!(info.input_len as usize, resnet_net.input_len());
+    assert_eq!(info.classes, 6);
+
+    // data plane: concurrent clients interleave both models; every
+    // response must be stamped with its own model and bit-exact under
+    // that version's weights
+    let registry = Arc::clone(service.server().registry().unwrap());
+    let model_names = ["tiny-mlp", "tiny-resnet"];
+    let versions: Vec<_> = model_names
+        .iter()
+        .map(|n| registry.get(n).unwrap())
+        .collect();
+    let mut handles = Vec::new();
+    for c in 0..3 {
+        let addr = addr.clone();
+        let versions = versions.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = connect(&addr);
+            let mut rng = Rng::new(0xC11E + c as u64);
+            for i in 0..8 {
+                let mi = (c + i) % 2;
+                let mv = &versions[mi];
+                let img = rng.i8_vec(mv.input_len(), 31);
+                let reply = client.infer(Some(mv.name()), img.clone()).unwrap();
+                let stamp = reply.model.as_ref().expect("stamped");
+                assert_eq!(&*stamp.name, mv.name(), "routed to the wrong model");
+                assert_eq!(stamp.id, mv.id());
+                assert_eq!(
+                    reply.logits,
+                    mv.refcompute(&img).unwrap(),
+                    "{} response diverged from refcompute over TCP",
+                    mv.name()
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // admin plane: hot-swap tiny-resnet remotely; a request after the
+    // swap must be served by v2 with the new weights
+    let st2 = admin.swap("tiny-resnet", Some(0x33)).unwrap();
+    assert_eq!(st2.version, 2);
+    let v2 = registry.get("tiny-resnet").unwrap();
+    assert_eq!(v2.id(), st2.id);
+    let img = Rng::new(7).i8_vec(v2.input_len(), 31);
+    let reply = admin.infer(Some("tiny-resnet"), img.clone()).unwrap();
+    assert_eq!(reply.model.as_ref().unwrap().version, 2);
+    assert_eq!(reply.logits, v2.refcompute(&img).unwrap());
+
+    // unload: new requests refused with a typed error naming the
+    // survivors; the other model is unaffected
+    admin.unload("tiny-resnet").unwrap();
+    let err = admin
+        .infer(Some("tiny-resnet"), img.clone())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("tiny-mlp"), "{err}");
+    let mlp = registry.get("tiny-mlp").unwrap();
+    let mlp_img = Rng::new(9).i8_vec(mlp.input_len(), 31);
+    let mlp_reply = admin.infer(Some("tiny-mlp"), mlp_img.clone()).unwrap();
+    assert_eq!(mlp_reply.logits, mlp.refcompute(&mlp_img).unwrap());
+
+    // observability plane: per-model stats — 24 concurrent + 1
+    // post-swap resnet + 1 mlp = 26 served; metrics history survives
+    // the unload
+    let stats = admin.stats().unwrap();
+    assert_eq!(stats.served, 26);
+    assert_eq!(stats.rejected, 0);
+    assert_eq!(stats.failed, 0);
+    let by_name = |n: &str| {
+        stats
+            .models
+            .iter()
+            .find(|m| m.model == n)
+            .unwrap_or_else(|| panic!("no stats entry for {n}"))
+            .clone()
+    };
+    let mlp_stats = by_name("tiny-mlp");
+    let resnet_stats = by_name("tiny-resnet");
+    assert_eq!(mlp_stats.served, 13);
+    assert_eq!(resnet_stats.served, 13);
+    assert_eq!(mlp_stats.queue_depth, 0, "queue drained");
+    assert_eq!(resnet_stats.queue_depth, 0);
+    assert!(mlp_stats.p50_us.is_some() && mlp_stats.p99_us.is_some());
+    assert!(mlp_stats.p50_us <= mlp_stats.p99_us);
+    assert_eq!(mlp_stats.samples, 13);
+
+    // clean shutdown: drain the endpoint, then the server; every
+    // accepted request was answered
+    drop(admin);
+    net.shutdown().unwrap();
+    let Ok(service) = Arc::try_unwrap(service) else {
+        panic!("sole service ref")
+    };
+    let counts = service.shutdown().unwrap();
+    assert_eq!(counts.iter().sum::<u64>(), 26);
+}
+
+#[test]
+fn untagged_infer_routes_to_sole_model_over_tcp() {
+    let (service, net, addr) = start_endpoint(&[("tiny-mlp", 0x44)]);
+    let mv = service
+        .server()
+        .registry()
+        .unwrap()
+        .get("tiny-mlp")
+        .unwrap();
+    let mut client = connect(&addr);
+    let img = Rng::new(3).i8_vec(mv.input_len(), 31);
+    // model: None = "the sole loaded model", exactly like Server::submit
+    let reply = client.infer(None, img.clone()).unwrap();
+    assert_eq!(&*reply.model.as_ref().unwrap().name, "tiny-mlp");
+    assert_eq!(reply.logits, mv.refcompute(&img).unwrap());
+    // wrong-size image comes back as a typed error, not a dropped
+    // connection
+    let err = client.infer(None, vec![0i8; 3]).unwrap_err().to_string();
+    assert!(err.contains("24"), "{err}");
+    drop(client);
+    net.shutdown().unwrap();
+    let Ok(service) = Arc::try_unwrap(service) else {
+        panic!("sole service ref")
+    };
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn port_in_use_error_names_the_address() {
+    let (service, net, addr) = start_endpoint(&[("tiny-mlp", 0x55)]);
+    let err = match NetServer::bind_with(&addr, Arc::clone(&service), fast_net_cfg()) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("rebinding a bound address must fail"),
+    };
+    assert!(err.contains(&addr), "error must name the address: {err}");
+    net.shutdown().unwrap();
+    let Ok(service) = Arc::try_unwrap(service) else {
+        panic!("sole service ref")
+    };
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn malformed_truncated_and_oversized_frames_reject_cleanly() {
+    let (service, net, addr) = start_endpoint(&[("tiny-mlp", 0x66)]);
+
+    // 1. garbage payload: typed error response, connection stays usable
+    {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        wire::write_frame(&mut stream, b"this is not json").unwrap();
+        let frame = wire::read_frame(&mut stream).unwrap().expect("error frame");
+        match wire::decode_response(&frame).unwrap() {
+            Response::Error { message } => assert!(message.contains("bad request"), "{message}"),
+            other => panic!("expected Error, got {other:?}"),
+        }
+        // the same connection still serves a valid request afterwards
+        wire::write_frame(&mut stream, &wire::encode_request(&Request::Stats)).unwrap();
+        let frame = wire::read_frame(&mut stream).unwrap().expect("stats frame");
+        assert!(matches!(
+            wire::decode_response(&frame).unwrap(),
+            Response::Stats(_)
+        ));
+    }
+
+    // 2. hostile oversized length prefix: one framing-error frame, then
+    // the connection is closed — and the server keeps accepting
+    {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        use std::io::Write;
+        stream
+            .write_all(&((wire::MAX_FRAME + 1) as u32).to_be_bytes())
+            .unwrap();
+        stream.flush().unwrap();
+        let frame = wire::read_frame(&mut stream)
+            .unwrap()
+            .expect("framing-error frame");
+        match wire::decode_response(&frame).unwrap() {
+            Response::Error { message } => assert!(message.contains("framing"), "{message}"),
+            other => panic!("expected Error, got {other:?}"),
+        }
+        assert!(
+            wire::read_frame(&mut stream).unwrap().is_none(),
+            "server closes after a framing error"
+        );
+    }
+
+    // 3. truncated frame then disconnect: the server must survive
+    {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        use std::io::Write;
+        stream.write_all(&[0u8, 0]).unwrap(); // half a header
+        stream.flush().unwrap();
+        drop(stream);
+    }
+
+    // the endpoint is still healthy for new typed clients
+    let mut client = connect(&addr);
+    assert!(client.stats().is_ok());
+    drop(client);
+    net.shutdown().unwrap();
+    let Ok(service) = Arc::try_unwrap(service) else {
+        panic!("sole service ref")
+    };
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn registry_file_persists_across_restart_bit_exactly() {
+    let path = std::env::temp_dir().join(format!(
+        "domino-registry-protocol-{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+
+    // ---- first life: CLI-style startup with a manifest ----
+    let man = Arc::new(RegistryManifest::open(&path).unwrap());
+    let registry = Arc::new(ModelRegistry::new());
+    let mlp = zoo::tiny_mlp();
+    let mv = registry
+        .load_seeded(&mlp.name, &mlp, ArchConfig::default(), Some(0x7))
+        .unwrap();
+    man.record(&mlp.name, &mlp.name, Some(0x7), mv.version());
+    man.save().unwrap();
+    let server = Server::start_multi(serve_cfg(), Arc::clone(&registry)).unwrap();
+    let service = Arc::new(Service::with_manifest(
+        server,
+        ArchConfig::default(),
+        Arc::clone(&man),
+    ));
+    let net = NetServer::bind_with("127.0.0.1:0", Arc::clone(&service), fast_net_cfg()).unwrap();
+    let addr = net.local_addr().to_string();
+
+    // remote admin ops persist through the manifest: load, then swap
+    // to v2 with a recorded seed
+    let mut client = connect(&addr);
+    client.load_seeded("tiny-resnet", 0x21).unwrap();
+    let st = client.swap("tiny-resnet", Some(0x22)).unwrap();
+    assert_eq!(st.version, 2);
+    let pre = registry.get("tiny-resnet").unwrap();
+    let img = Rng::new(1).i8_vec(pre.input_len(), 31);
+    let pre_logits = client.infer(Some("tiny-resnet"), img.clone()).unwrap().logits;
+    drop(client);
+    net.shutdown().unwrap();
+    let Ok(service) = Arc::try_unwrap(service) else {
+        panic!("sole service ref")
+    };
+    service.shutdown().unwrap();
+
+    // ---- second life: reload the manifest into a fresh registry ----
+    let man2 = Arc::new(RegistryManifest::open(&path).unwrap());
+    assert_eq!(man2.len(), 2);
+    let registry2 = Arc::new(ModelRegistry::new());
+    let restored = man2.restore(&registry2, ArchConfig::default()).unwrap();
+    assert_eq!(restored, 2);
+    let r2 = registry2.get("tiny-resnet").unwrap();
+    assert_eq!(r2.version(), 2, "swap version survives the restart");
+    assert_eq!(
+        r2.refcompute(&img).unwrap(),
+        pre_logits,
+        "restored weights are bit-identical"
+    );
+
+    // the restarted endpoint answers the same image identically
+    let server2 = Server::start_multi(serve_cfg(), Arc::clone(&registry2)).unwrap();
+    let service2 = Arc::new(Service::with_manifest(
+        server2,
+        ArchConfig::default(),
+        Arc::clone(&man2),
+    ));
+    let net2 = NetServer::bind_with("127.0.0.1:0", Arc::clone(&service2), fast_net_cfg()).unwrap();
+    let mut client2 = connect(&net2.local_addr().to_string());
+    let reply = client2.infer(Some("tiny-resnet"), img.clone()).unwrap();
+    assert_eq!(reply.model.as_ref().unwrap().version, 2);
+    assert_eq!(reply.logits, pre_logits, "remote restart round-trip");
+
+    // unload drops the entry from the manifest
+    client2.unload("tiny-mlp").unwrap();
+    drop(client2);
+    net2.shutdown().unwrap();
+    let Ok(service2) = Arc::try_unwrap(service2) else {
+        panic!("sole service ref")
+    };
+    service2.shutdown().unwrap();
+    let man3 = RegistryManifest::open(&path).unwrap();
+    assert_eq!(man3.len(), 1, "unload persisted");
+
+    let _ = std::fs::remove_file(&path);
+}

@@ -1,0 +1,313 @@
+//! Property tests for the `serve::wire` codec: every `Request` /
+//! `Response` variant must round-trip bit-exactly — including images
+//! with extreme i8 values, u64-extreme ids/seeds and names that need
+//! JSON escaping — and malformed / truncated / oversized inputs must
+//! reject with a typed error, never a panic.
+
+use std::sync::Arc;
+
+use domino::serve::api::{InferReply, ModelDesc, Request, Response, StatsReply};
+use domino::serve::wire;
+use domino::serve::{ModelMetricsSnapshot, ModelStamp};
+use domino::testutil::{for_all, Rng};
+
+fn roundtrip_req(req: &Request) {
+    let bytes = wire::encode_request(req);
+    let back = wire::decode_request(&bytes)
+        .unwrap_or_else(|e| panic!("decode of {req:?} failed: {e:#}\nencoded: {bytes:?}"));
+    assert_eq!(&back, req, "request round-trip mismatch");
+}
+
+fn roundtrip_resp(resp: &Response) {
+    let bytes = wire::encode_response(resp);
+    let back = wire::decode_response(&bytes)
+        .unwrap_or_else(|e| panic!("decode of {resp:?} failed: {e:#}"));
+    assert_eq!(&back, resp, "response round-trip mismatch");
+}
+
+/// A name drawn from pieces that stress the string escaper: quotes,
+/// backslashes, control characters, JSON syntax, multi-byte UTF-8
+/// (incl. an astral-plane char, which some encoders emit as a
+/// surrogate pair).
+fn tricky_name(rng: &mut Rng) -> String {
+    const PIECES: &[&str] = &[
+        "m", "tiny-cnn", "\"", "\\", "\\\\\"", "\n", "\r", "\t", "\u{0}", "\u{1}",
+        "\u{1f}", "caffè", "日本語", "😀", " ", "/", "{}", "[],:", "null", "-12",
+    ];
+    let n = rng.range(0, 6);
+    let mut s = String::new();
+    for _ in 0..n {
+        s.push_str(PIECES[rng.below(PIECES.len())]);
+    }
+    s
+}
+
+/// An image mixing uniform draws with guaranteed i8 extremes.
+fn tricky_image(rng: &mut Rng) -> Vec<i8> {
+    let mut img: Vec<i8> = (0..rng.range(0, 24)).map(|_| rng.i8()).collect();
+    img.push(i8::MIN);
+    img.push(i8::MAX);
+    img.push(0);
+    img
+}
+
+fn tricky_u64(rng: &mut Rng) -> u64 {
+    match rng.below(4) {
+        0 => 0,
+        1 => u64::MAX,
+        2 => i64::MAX as u64 + 1, // past the i64 boundary
+        _ => rng.next_u64(),
+    }
+}
+
+fn tricky_stamp(rng: &mut Rng) -> ModelStamp {
+    ModelStamp {
+        name: Arc::from(tricky_name(rng).as_str()),
+        id: tricky_u64(rng),
+        version: tricky_u64(rng),
+    }
+}
+
+fn tricky_desc(rng: &mut Rng) -> ModelDesc {
+    ModelDesc {
+        name: tricky_name(rng),
+        id: tricky_u64(rng),
+        version: tricky_u64(rng),
+        input_len: tricky_u64(rng),
+        classes: tricky_u64(rng),
+        layers: tricky_u64(rng),
+        params: tricky_u64(rng),
+        macs: tricky_u64(rng),
+    }
+}
+
+fn tricky_snapshot(rng: &mut Rng) -> ModelMetricsSnapshot {
+    let opt = |rng: &mut Rng| {
+        if rng.chance(0.5) {
+            Some(rng.next_u64())
+        } else {
+            None
+        }
+    };
+    ModelMetricsSnapshot {
+        model: tricky_name(rng),
+        served: tricky_u64(rng),
+        failed: tricky_u64(rng),
+        rejected: tricky_u64(rng),
+        queue_depth: tricky_u64(rng),
+        samples: tricky_u64(rng),
+        p50_us: opt(rng),
+        p95_us: opt(rng),
+        p99_us: opt(rng),
+    }
+}
+
+#[test]
+fn every_request_variant_roundtrips() {
+    // fixed edge cases first
+    roundtrip_req(&Request::Infer {
+        model: None,
+        image: vec![],
+    });
+    roundtrip_req(&Request::Infer {
+        model: Some(String::new()),
+        image: vec![i8::MIN, -1, 0, 1, i8::MAX],
+    });
+    roundtrip_req(&Request::Load {
+        model: "a \"quoted\\name\"\nwith\tcontrol\u{1}chars".to_string(),
+    });
+    roundtrip_req(&Request::LoadSeeded {
+        model: "m".to_string(),
+        seed: u64::MAX,
+    });
+    roundtrip_req(&Request::Swap {
+        model: "m".to_string(),
+        seed: None,
+    });
+    roundtrip_req(&Request::Swap {
+        model: "m".to_string(),
+        seed: Some(0),
+    });
+    roundtrip_req(&Request::Unload {
+        model: "😀".to_string(),
+    });
+    roundtrip_req(&Request::ListModels);
+    roundtrip_req(&Request::ModelInfo {
+        model: "tiny-cnn".to_string(),
+    });
+    roundtrip_req(&Request::Stats);
+
+    // randomized sweep across all variants
+    for_all("request_roundtrip", 200, |rng| {
+        let req = match rng.below(8) {
+            0 => Request::Infer {
+                model: if rng.chance(0.3) {
+                    None
+                } else {
+                    Some(tricky_name(rng))
+                },
+                image: tricky_image(rng),
+            },
+            1 => Request::Load {
+                model: tricky_name(rng),
+            },
+            2 => Request::LoadSeeded {
+                model: tricky_name(rng),
+                seed: tricky_u64(rng),
+            },
+            3 => Request::Swap {
+                model: tricky_name(rng),
+                seed: if rng.chance(0.5) {
+                    Some(tricky_u64(rng))
+                } else {
+                    None
+                },
+            },
+            4 => Request::Unload {
+                model: tricky_name(rng),
+            },
+            5 => Request::ListModels,
+            6 => Request::ModelInfo {
+                model: tricky_name(rng),
+            },
+            _ => Request::Stats,
+        };
+        roundtrip_req(&req);
+    });
+}
+
+#[test]
+fn every_response_variant_roundtrips() {
+    roundtrip_resp(&Response::Infer(InferReply {
+        logits: vec![i8::MIN, i8::MAX],
+        model: None,
+        queue_us: 0,
+        exec_us: u64::MAX,
+    }));
+    roundtrip_resp(&Response::Error {
+        message: "nested \"error\": a\\b\nline2 \u{0}".to_string(),
+    });
+    roundtrip_resp(&Response::Models(vec![]));
+    roundtrip_resp(&Response::Stats(StatsReply {
+        served: 0,
+        rejected: 0,
+        failed: 0,
+        models: vec![],
+    }));
+
+    for_all("response_roundtrip", 200, |rng| {
+        let resp = match rng.below(8) {
+            0 => Response::Infer(InferReply {
+                logits: tricky_image(rng),
+                model: if rng.chance(0.3) {
+                    None
+                } else {
+                    Some(tricky_stamp(rng))
+                },
+                queue_us: tricky_u64(rng),
+                exec_us: tricky_u64(rng),
+            }),
+            1 => Response::Loaded(tricky_stamp(rng)),
+            2 => Response::Swapped(tricky_stamp(rng)),
+            3 => Response::Unloaded(tricky_stamp(rng)),
+            4 => Response::Models((0..rng.range(0, 4)).map(|_| tricky_desc(rng)).collect()),
+            5 => Response::Info(tricky_desc(rng)),
+            6 => Response::Stats(StatsReply {
+                served: tricky_u64(rng),
+                rejected: tricky_u64(rng),
+                failed: tricky_u64(rng),
+                models: (0..rng.range(0, 4)).map(|_| tricky_snapshot(rng)).collect(),
+            }),
+            _ => Response::Error {
+                message: tricky_name(rng),
+            },
+        };
+        roundtrip_resp(&resp);
+    });
+}
+
+#[test]
+fn truncated_encodings_reject_cleanly() {
+    // every strict prefix of a valid encoding must error (or, for the
+    // empty prefix at the JSON level, error too) — and never panic
+    let req = Request::Infer {
+        model: Some("tiny-cnn \"escaped\" 😀".to_string()),
+        image: vec![i8::MIN, 0, i8::MAX],
+    };
+    let bytes = wire::encode_request(&req);
+    for cut in 0..bytes.len() {
+        assert!(
+            wire::decode_request(&bytes[..cut]).is_err(),
+            "prefix of {cut} bytes should not decode"
+        );
+    }
+
+    // the same at the framing level: a frame cut anywhere must read as
+    // an error (truncated header or payload) — except a cut at 0
+    // bytes, which is a clean EOF (None)
+    let mut framed = Vec::new();
+    wire::write_frame(&mut framed, &bytes).unwrap();
+    for cut in 0..framed.len() {
+        let mut r = std::io::Cursor::new(framed[..cut].to_vec());
+        match wire::read_frame(&mut r) {
+            Ok(None) => assert_eq!(cut, 0, "only an empty stream is a clean EOF"),
+            Ok(Some(_)) => panic!("truncated frame of {cut} bytes should not read"),
+            Err(_) => {} // expected
+        }
+    }
+    // the intact frame reads back whole
+    let mut r = std::io::Cursor::new(framed);
+    assert_eq!(wire::read_frame(&mut r).unwrap().unwrap(), bytes);
+}
+
+#[test]
+fn corrupted_bytes_never_panic() {
+    // random single-byte corruptions of valid encodings: the decoder
+    // may accept (the mutation can hit a value byte) or reject, but
+    // must never panic
+    for_all("corruption", 300, |rng| {
+        let req = Request::LoadSeeded {
+            model: tricky_name(rng),
+            seed: tricky_u64(rng),
+        };
+        let mut bytes = wire::encode_request(&req);
+        if bytes.is_empty() {
+            return;
+        }
+        let at = rng.below(bytes.len());
+        bytes[at] = (rng.next_u64() & 0xFF) as u8;
+        let _ = wire::decode_request(&bytes); // must not panic
+    });
+}
+
+#[test]
+fn oversized_frames_reject_before_allocation() {
+    // a hostile length prefix is rejected without reading the payload
+    let mut header = ((wire::MAX_FRAME + 1) as u32).to_be_bytes().to_vec();
+    header.extend_from_slice(b"ignored");
+    let mut r = std::io::Cursor::new(header);
+    let err = wire::read_frame(&mut r).unwrap_err().to_string();
+    assert!(err.contains("exceeds"), "{err}");
+}
+
+#[test]
+fn wire_json_matches_manifest_and_script_consumers() {
+    // the ModelDesc JSON `domino models --json` emits decodes with the
+    // same field extractors the protocol uses
+    let desc = ModelDesc {
+        name: "tiny-cnn".to_string(),
+        id: 7,
+        version: 2,
+        input_len: 768,
+        classes: 10,
+        layers: 10,
+        params: 12345,
+        macs: 678901,
+    };
+    let text = wire::encode(&wire::desc_to_json(&desc));
+    let v = wire::decode(&text).unwrap();
+    assert_eq!(wire::str_field(&v, "name").unwrap(), "tiny-cnn");
+    assert_eq!(wire::u64_field(&v, "version").unwrap(), 2);
+    assert_eq!(wire::u64_field(&v, "macs").unwrap(), 678901);
+    assert_eq!(wire::opt_u64_field(&v, "not-there").unwrap(), None);
+}
