@@ -31,13 +31,16 @@
 //!     cargo bench --bench serve_sim_throughput -- --smoke --remote-only
 //!
 //! `--models a,b,c` picks the loaded set (default
-//! `tiny-cnn,tiny-mlp,tiny-resnet`).
+//! `tiny-cnn,tiny-mlp,tiny-resnet`). `--json PATH` additionally writes
+//! the run's numbers (images/s, p50/p95/p99, run_batch speedups) as a
+//! machine-readable `BENCH_serve.json` so the perf trajectory is
+//! recorded run over run.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use domino::benchutil::{stats, time_n};
+use domino::benchutil::{arg_value, json_array, stats, time_n, write_json, JsonObj};
 use domino::coordinator::ArchConfig;
 use domino::model::refcompute::{forward, Tensor};
 use domino::model::zoo;
@@ -46,7 +49,7 @@ use domino::serve::net::NetServer;
 use domino::serve::{
     sim_program, LatencyStats, ModelRegistry, ModelVersion, ServeConfig, Server, Service,
 };
-use domino::sim::Simulator;
+use domino::sim::{CaptureMode, Simulator};
 use domino::testutil::Rng;
 
 /// Refcompute reference outputs for `images` under a specific model
@@ -55,16 +58,29 @@ fn expected_for(mv: &ModelVersion, images: &[Vec<i8>]) -> anyhow::Result<Vec<Vec
     images.iter().map(|img| mv.refcompute(img)).collect()
 }
 
+/// One section's record for the `--json` report.
+fn section_json(name: &str, served: usize, secs: f64, lat: &LatencyStats) -> String {
+    let mut o = JsonObj::new();
+    o.str_field("section", name)
+        .u64_field("requests", served as u64)
+        .f64_field(
+            "images_per_s",
+            domino::sim::stats::safe_rate(served as f64, secs),
+        )
+        .u64_field("p50_us", lat.percentile(50.0).unwrap_or(0))
+        .u64_field("p95_us", lat.percentile(95.0).unwrap_or(0))
+        .u64_field("p99_us", lat.percentile(99.0).unwrap_or(0));
+    o.finish()
+}
+
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().collect();
     let smoke = argv.iter().any(|a| a == "--smoke");
     let multi_only = argv.iter().any(|a| a == "--multi-only");
     let remote_only = argv.iter().any(|a| a == "--remote-only");
-    let model_list = argv
-        .iter()
-        .position(|a| a == "--models")
-        .and_then(|i| argv.get(i + 1))
-        .cloned()
+    let json_path = arg_value(&argv, "--json");
+    let mut sections: Vec<String> = Vec::new();
+    let model_list = arg_value(&argv, "--models")
         .unwrap_or_else(|| "tiny-cnn,tiny-mlp,tiny-resnet".to_string());
     println!(
         "serve_sim_throughput ({}{}{})\n",
@@ -85,14 +101,15 @@ fn main() -> anyhow::Result<()> {
             .map(|_| rng.i8_vec(net.input_len(), 31))
             .collect();
 
-        // sequential reference (also the exactness oracle)
-        let mut seq_sim = Simulator::new(&program);
+        // sequential reference (also the exactness oracle); the
+        // throughput paths run `CaptureMode::Final` — what serving uses
+        let mut seq_sim = Simulator::with_capture(&program, CaptureMode::Final);
         let seq_scores: Vec<Vec<i8>> = inputs
             .iter()
             .map(|x| seq_sim.run_image(x).map(|o| o.scores))
             .collect::<anyhow::Result<_>>()?;
         let seq_stats = stats(time_n(iters, || {
-            let mut sim = Simulator::new(&program);
+            let mut sim = Simulator::with_capture(&program, CaptureMode::Final);
             for x in &inputs {
                 std::hint::black_box(sim.run_image(x).unwrap());
             }
@@ -111,15 +128,16 @@ fn main() -> anyhow::Result<()> {
             thread_counts.push(hw);
         }
         let mut speedup_at_4 = None;
+        let mut scaling_json: Vec<String> = Vec::new();
         for threads in thread_counts {
             // exactness first: every batched output must equal sequential
-            let mut sim = Simulator::new(&program);
+            let mut sim = Simulator::with_capture(&program, CaptureMode::Final);
             let out = sim.run_batch_threads(&inputs, threads)?;
             for (i, (o, want)) in out.outputs.iter().zip(&seq_scores).enumerate() {
                 assert_eq!(o.scores, *want, "image {i} diverged at {threads} threads");
             }
             let st = stats(time_n(iters, || {
-                let mut sim = Simulator::new(&program);
+                let mut sim = Simulator::with_capture(&program, CaptureMode::Final);
                 std::hint::black_box(sim.run_batch_threads(&inputs, threads).unwrap());
             }));
             let speedup = st.speedup_over(&seq_stats);
@@ -129,6 +147,11 @@ fn main() -> anyhow::Result<()> {
                 st.median,
                 st.per_second(batch_n)
             );
+            let mut o = JsonObj::new();
+            o.u64_field("threads", threads as u64)
+                .f64_field("images_per_s", st.per_second(batch_n))
+                .f64_field("speedup_vs_sequential", speedup);
+            scaling_json.push(o.finish());
             if threads == 4 {
                 speedup_at_4 = Some(speedup);
             }
@@ -138,6 +161,15 @@ fn main() -> anyhow::Result<()> {
                 "run_batch speedup on 4 threads: {s:.2}x {}",
                 if s >= 2.0 { "(>= 2x: PASS)" } else { "(< 2x)" }
             );
+        }
+        {
+            let mut o = JsonObj::new();
+            o.str_field("section", "run_batch_scaling")
+                .u64_field("batch", batch_n as u64)
+                .f64_field("sequential_images_per_s", seq_stats.per_second(batch_n))
+                .f64_field("speedup_at_4_threads", speedup_at_4.unwrap_or(0.0))
+                .raw_field("threads", &json_array(&scaling_json));
+            sections.push(o.finish());
         }
         {
             let mut sim = Simulator::new(&program);
@@ -211,6 +243,12 @@ fn main() -> anyhow::Result<()> {
             domino::sim::stats::safe_rate(total as f64, wall.as_secs_f64())
         );
         println!("latency: {}", lat.summary());
+        sections.push(section_json(
+            "closed_loop_sim",
+            total,
+            wall.as_secs_f64(),
+            &lat,
+        ));
         println!(
             "server counters: served {}, rejected {}, failed {}",
             server.served(),
@@ -401,6 +439,12 @@ fn main() -> anyhow::Result<()> {
         println!("  {} v{version}: {count} responses", models[*mi].name());
     }
     println!("latency: {}", lat.summary());
+    sections.push(section_json(
+        "multi_model_closed_loop",
+        total,
+        wall.as_secs_f64(),
+        &lat,
+    ));
     let counts = Arc::try_unwrap(server)
         .map_err(|_| anyhow::anyhow!("server still referenced"))?
         .shutdown()?;
@@ -590,7 +634,17 @@ fn main() -> anyhow::Result<()> {
             domino::sim::stats::safe_rate(total as f64, wall.as_secs_f64())
         );
         println!("latency: {}", lat.summary());
+        sections.push(section_json("remote_tcp", total, wall.as_secs_f64(), &lat));
         println!("per-worker served: {counts:?}");
+    }
+
+    if let Some(path) = json_path {
+        let mut doc = JsonObj::new();
+        doc.str_field("bench", "serve_sim_throughput")
+            .str_field("mode", if smoke { "smoke" } else { "full" })
+            .str_field("models", &model_list)
+            .raw_field("sections", &json_array(&sections));
+        write_json(&path, &doc.finish())?;
     }
     Ok(())
 }

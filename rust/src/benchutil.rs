@@ -1,6 +1,9 @@
 //! Minimal benchmarking helpers shared by the `benches/` harnesses
 //! (criterion is unavailable offline; these are deliberately simple:
-//! monotonic wallclock, warmup + median-of-N).
+//! monotonic wallclock, warmup + median-of-N), plus the tiny JSON
+//! writer the benches use to emit machine-readable results
+//! (`BENCH_engine.json` / `BENCH_serve.json`) so the perf trajectory
+//! is recorded run over run.
 
 use std::time::{Duration, Instant};
 
@@ -42,6 +45,18 @@ impl Stats {
     }
 }
 
+/// Percentile (0..=100) of a timing run; `Duration::ZERO` for an empty
+/// set. Delegates to [`crate::serve::metrics::percentile_us`] (the
+/// rank formula is unit-agnostic) so both bench JSON reports and the
+/// serve metrics rank identically — but feeds it nanoseconds, keeping
+/// sub-microsecond per-image times non-zero in `BENCH_engine.json`.
+pub fn percentile(samples: &[Duration], p: f64) -> Duration {
+    let ns: Vec<u64> = samples.iter().map(|d| d.as_nanos() as u64).collect();
+    crate::serve::metrics::percentile_us(&ns, p)
+        .map(Duration::from_nanos)
+        .unwrap_or(Duration::ZERO)
+}
+
 pub fn stats(mut samples: Vec<Duration>) -> Stats {
     samples.sort();
     Stats {
@@ -59,6 +74,104 @@ pub fn bench<F: FnMut()>(name: &str, iters: usize, f: F) -> Stats {
         s.median, s.min, s.max
     );
     s
+}
+
+/// A hand-rolled JSON object builder (the offline image has no serde;
+/// the `serve::wire` codec is request-shaped, so benches use this tiny
+/// writer instead). Keys are caller-controlled identifiers; string
+/// values are escaped.
+#[derive(Default)]
+pub struct JsonObj {
+    buf: String,
+    any: bool,
+}
+
+impl JsonObj {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn key(&mut self, k: &str) {
+        if self.any {
+            self.buf.push(',');
+        }
+        self.any = true;
+        self.buf.push_str(&json_string(k));
+        self.buf.push(':');
+    }
+
+    pub fn str_field(&mut self, k: &str, v: &str) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(&json_string(v));
+        self
+    }
+
+    /// Finite floats are written in Rust's shortest round-trippable
+    /// decimal form (full precision — bench medians can be
+    /// microseconds expressed in seconds); NaN/inf become `null`
+    /// (JSON has no non-finite numbers).
+    pub fn f64_field(&mut self, k: &str, v: f64) -> &mut Self {
+        self.key(k);
+        if v.is_finite() {
+            self.buf.push_str(&format!("{v}"));
+        } else {
+            self.buf.push_str("null");
+        }
+        self
+    }
+
+    pub fn u64_field(&mut self, k: &str, v: u64) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    pub fn bool_field(&mut self, k: &str, v: bool) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// A pre-encoded JSON value (nested object or array).
+    pub fn raw_field(&mut self, k: &str, v: &str) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(v);
+        self
+    }
+
+    pub fn finish(&self) -> String {
+        format!("{{{}}}", self.buf)
+    }
+}
+
+/// Encode a list of pre-encoded JSON values as an array.
+pub fn json_array(items: &[String]) -> String {
+    format!("[{}]", items.join(","))
+}
+
+/// Encode a string as a JSON string literal (quotes included). There
+/// is exactly one string-escaping implementation in this crate: the
+/// wire codec's, which is property-tested against its own strict
+/// decoder — this delegates to it.
+pub fn json_string(s: &str) -> String {
+    crate::serve::wire::encode(&crate::serve::wire::Json::Str(s.to_string()))
+}
+
+/// Write a JSON document to `path` (plus a trailing newline) and print
+/// where it went.
+pub fn write_json(path: &str, doc: &str) -> std::io::Result<()> {
+    std::fs::write(path, format!("{doc}\n"))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// The value following `flag` in an argv slice (`--flag VALUE` style),
+/// shared by the bench harnesses.
+pub fn arg_value(argv: &[String], flag: &str) -> Option<String> {
+    argv.iter()
+        .position(|a| a == flag)
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
 }
 
 #[cfg(test)]
@@ -81,6 +194,70 @@ mod tests {
     fn time_n_returns_iters_samples() {
         let v = time_n(5, || { std::hint::black_box(1 + 1); });
         assert_eq!(v.len(), 5);
+    }
+
+    #[test]
+    fn json_obj_builds_valid_documents() {
+        let mut inner = JsonObj::new();
+        inner.str_field("name", "a\"b\\c\n").u64_field("n", 3);
+        let mut o = JsonObj::new();
+        o.f64_field("rate", 1.5)
+            .f64_field("nan", f64::NAN)
+            .bool_field("pass", true)
+            .raw_field("items", &json_array(&[inner.finish()]));
+        let doc = o.finish();
+        assert_eq!(
+            doc,
+            "{\"rate\":1.5,\"nan\":null,\"pass\":true,\
+             \"items\":[{\"name\":\"a\\\"b\\\\c\\n\",\"n\":3}]}"
+        );
+        // tiny second-valued fields keep full precision
+        let mut p = JsonObj::new();
+        p.f64_field("s", 2.5e-6);
+        assert_eq!(p.finish(), "{\"s\":0.0000025}");
+    }
+
+    #[test]
+    fn integer_json_round_trips_through_wire_decoder() {
+        // The crate's strict wire decoder accepts integer-only JSON —
+        // an escaping bug in the builder would fail this parse.
+        let mut inner = JsonObj::new();
+        inner.str_field("name", "quo\"te\\slash\n").u64_field("n", 3);
+        let mut o = JsonObj::new();
+        o.u64_field("count", 42)
+            .raw_field("items", &json_array(&[inner.finish()]));
+        let parsed = crate::serve::wire::decode(&o.finish()).unwrap();
+        assert_eq!(
+            crate::serve::wire::u64_field(&parsed, "count").unwrap(),
+            42
+        );
+        let items = crate::serve::wire::field(&parsed, "items")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .to_vec();
+        assert_eq!(
+            crate::serve::wire::str_field(&items[0], "name").unwrap(),
+            "quo\"te\\slash\n"
+        );
+    }
+
+    #[test]
+    fn json_string_escapes_via_wire_codec() {
+        assert_eq!(json_string("plain"), "\"plain\"");
+        // control chars and quotes survive a strict decode round-trip
+        let lit = json_string("a\u{1}\"b\\c\n");
+        let parsed = crate::serve::wire::decode(&lit).unwrap();
+        assert_eq!(parsed.as_str().unwrap(), "a\u{1}\"b\\c\n");
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let ms: Vec<Duration> = (1..=10).map(Duration::from_millis).collect();
+        assert_eq!(percentile(&ms, 0.0), Duration::from_millis(1));
+        assert_eq!(percentile(&ms, 50.0), Duration::from_millis(6));
+        assert_eq!(percentile(&ms, 100.0), Duration::from_millis(10));
+        assert_eq!(percentile(&[], 50.0), Duration::ZERO);
     }
 
     #[test]

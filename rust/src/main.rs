@@ -8,7 +8,7 @@ use domino::coordinator::{ArchConfig, Compiler};
 use domino::counterparts::all_comparisons;
 use domino::energy::{energy_of, CimModel};
 use domino::model::zoo;
-use domino::sim::Simulator;
+use domino::sim::{CaptureMode, Simulator};
 use domino::testutil::Rng;
 use domino::{baselines, eval};
 
@@ -206,7 +206,9 @@ fn map(args: &Args) -> Result<()> {
 fn run(args: &Args) -> Result<()> {
     let net = net_arg(args)?;
     let program = Compiler::new(arch_from(args)).compile(&net)?;
-    let mut sim = Simulator::new(&program);
+    // the CLI prints scores and counters only — skip per-stage tensor
+    // capture on this throughput path
+    let mut sim = Simulator::with_capture(&program, CaptureMode::Final);
     let images = args.get_usize("images", 1);
     let mut rng = Rng::new(args.get_u64("seed", 42));
     let threads = args.get_usize("threads", 1);

@@ -7,7 +7,7 @@ pub mod link;
 pub mod packet;
 
 pub use link::{InterChipLink, LinkKind};
-pub use packet::{IfmPacket, OfmPacket, Packet, PsumPacket};
+pub use packet::{IfmPacket, OfmPacket, Packet, PsumArena, PsumPacket, PsumRef};
 
 /// Mesh coordinate (row, col) of a tile; `chip` distinguishes chips when
 /// a network does not fit on one (Table IV: "240 x N chips").

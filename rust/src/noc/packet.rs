@@ -19,12 +19,138 @@ pub struct IfmPacket {
 }
 
 /// A partial-sum / group-sum beat moving along a tile chain.
+///
+/// This is the *owned* form, kept for [`Packet`] payloads, tests and
+/// trace tooling. The cycle engine's hot path moves [`PsumRef`]
+/// handles into a [`PsumArena`] instead, so a psum hop is a small
+/// `Copy` header move rather than a `Vec<i32>` reallocation (§Perf).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PsumPacket {
     /// Output position (oy, ox) this sum belongs to.
     pub opos: (usize, usize),
     /// Running 32-bit sums for the chain's output-channel block.
     pub data: Vec<i32>,
+}
+
+/// A slim partial-sum handle: the lane values live in a [`PsumArena`]
+/// slab, so ROFM FIFOs and inter-tile register queues move this `Copy`
+/// header instead of an owned buffer. The tag (`opos`) stays on the
+/// handle — it is what the engine's schedule-agreement checks compare.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PsumRef {
+    /// Output position (oy, ox) this sum belongs to.
+    pub opos: (usize, usize),
+    /// Slab slot index inside the owning arena.
+    pub slot: u32,
+}
+
+/// A preallocated slab of fixed-width psum lane buffers plus a free
+/// list. One arena per conv chain: every psum in a chain has the same
+/// lane count (the chain's output-channel block width), so slots are
+/// uniform and allocation is a free-list pop.
+///
+/// The arena is sized at engine construction from the chain's geometry
+/// (tiles in flight + one row period per row-head FIFO). If the event
+/// stream ever needs more, the slab grows — counted in
+/// [`Self::grows`], which the engine debug-asserts stable once an
+/// image has completed (the conv event sequence is input-independent,
+/// so steady state never grows).
+#[derive(Clone, Debug)]
+pub struct PsumArena {
+    lanes: usize,
+    slab: Vec<i32>,
+    /// Free slot indices (LIFO; refilled wholesale by [`Self::reset`]).
+    free: Vec<u32>,
+    slots: u32,
+    grows: u64,
+}
+
+impl PsumArena {
+    /// An arena of `slots` buffers, `lanes` i32 values each.
+    pub fn new(lanes: usize, slots: usize) -> Self {
+        assert!(lanes > 0, "psum lane width must be positive");
+        let slots = slots.clamp(1, u32::MAX as usize) as u32;
+        Self {
+            lanes,
+            slab: vec![0; lanes * slots as usize],
+            free: (0..slots).rev().collect(),
+            slots,
+            grows: 0,
+        }
+    }
+
+    /// Lane count of every slot.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Total slot capacity.
+    pub fn slots(&self) -> usize {
+        self.slots as usize
+    }
+
+    /// Slots currently allocated (drain check: must be 0 between
+    /// images).
+    pub fn in_use(&self) -> usize {
+        self.slots as usize - self.free.len()
+    }
+
+    /// Times the slab had to grow past its construction-time estimate.
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+
+    /// Allocate a slot for output position `opos`. The lane values are
+    /// *not* zeroed — the caller overwrites them (e.g. via
+    /// `Pe::mvm_into`). Grows the slab by ~50% when the free list is
+    /// empty.
+    pub fn alloc(&mut self, opos: (usize, usize)) -> PsumRef {
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                let add = (self.slots / 2).max(1);
+                let total = self.slots as usize + add as usize;
+                self.slab.resize(total * self.lanes, 0);
+                // keep the free list's capacity at the full slot count
+                // so a later `reset` (which refills it wholesale) stays
+                // allocation-free
+                self.free.reserve(total - self.free.len());
+                for s in (self.slots + 1..self.slots + add).rev() {
+                    self.free.push(s);
+                }
+                let slot = self.slots;
+                self.slots += add;
+                self.grows += 1;
+                slot
+            }
+        };
+        PsumRef { opos, slot }
+    }
+
+    /// Return a slot to the free list.
+    pub fn free(&mut self, r: PsumRef) {
+        debug_assert!(r.slot < self.slots, "freeing a foreign psum slot");
+        self.free.push(r.slot);
+    }
+
+    /// The lane values of `r`.
+    pub fn data(&self, r: PsumRef) -> &[i32] {
+        let o = r.slot as usize * self.lanes;
+        &self.slab[o..o + self.lanes]
+    }
+
+    /// Mutable lane values of `r`.
+    pub fn data_mut(&mut self, r: PsumRef) -> &mut [i32] {
+        let o = r.slot as usize * self.lanes;
+        &mut self.slab[o..o + self.lanes]
+    }
+
+    /// Return every slot to the free list (image boundary). Performs no
+    /// allocation: the free list always has capacity for every slot.
+    pub fn reset(&mut self) {
+        self.free.clear();
+        self.free.extend((0..self.slots).rev());
+    }
 }
 
 /// A finished output-feature-map beat (post activation/pooling, i8).
@@ -78,5 +204,76 @@ mod tests {
             data: vec![0; 16],
         });
         assert_eq!(ofm.bits(), 128);
+    }
+
+    #[test]
+    fn arena_alloc_free_reuse() {
+        let mut a = PsumArena::new(4, 2);
+        assert_eq!(a.lanes(), 4);
+        assert_eq!(a.slots(), 2);
+        assert_eq!(a.in_use(), 0);
+        let r1 = a.alloc((0, 0));
+        let r2 = a.alloc((0, 1));
+        assert_eq!(a.in_use(), 2);
+        assert_ne!(r1.slot, r2.slot);
+        a.data_mut(r1).copy_from_slice(&[1, 2, 3, 4]);
+        a.data_mut(r2).copy_from_slice(&[5, 6, 7, 8]);
+        assert_eq!(a.data(r1), &[1, 2, 3, 4]);
+        assert_eq!(a.data(r2), &[5, 6, 7, 8]);
+        a.free(r1);
+        assert_eq!(a.in_use(), 1);
+        // freed slot is reused; no growth needed
+        let r3 = a.alloc((1, 0));
+        assert_eq!(r3.slot, r1.slot);
+        assert_eq!(a.grows(), 0);
+    }
+
+    #[test]
+    fn arena_grows_past_estimate_and_reset_restores_all() {
+        let mut a = PsumArena::new(2, 1);
+        let refs: Vec<PsumRef> = (0..5).map(|i| a.alloc((0, i))).collect();
+        assert_eq!(a.in_use(), 5);
+        assert!(a.grows() > 0, "had to grow past the 1-slot estimate");
+        assert!(a.slots() >= 5);
+        // every slot is distinct and addressable
+        for (i, r) in refs.iter().enumerate() {
+            a.data_mut(*r).fill(i as i32);
+        }
+        for (i, r) in refs.iter().enumerate() {
+            assert_eq!(a.data(*r), &[i as i32, i as i32]);
+        }
+        let grown = a.slots();
+        a.reset();
+        assert_eq!(a.in_use(), 0);
+        assert_eq!(a.slots(), grown, "reset keeps the grown capacity");
+        // a full re-allocation round needs no further growth
+        let g = a.grows();
+        for i in 0..grown {
+            a.alloc((1, i));
+        }
+        assert_eq!(a.grows(), g);
+    }
+
+    #[test]
+    fn arena_reset_is_allocation_free() {
+        // `reset` refills the free list in place; capacity must already
+        // cover every slot (including slots added by growth).
+        let mut a = PsumArena::new(3, 2);
+        for i in 0..7 {
+            a.alloc((0, i));
+        }
+        a.reset();
+        let cap = {
+            // drain the free list fully, then reset again: the refill
+            // stays within the existing capacity
+            let total = a.slots();
+            for i in 0..total {
+                a.alloc((0, i));
+            }
+            total
+        };
+        a.reset();
+        assert_eq!(a.in_use(), 0);
+        assert_eq!(a.slots(), cap);
     }
 }

@@ -11,6 +11,18 @@
 //!   is the same engine behind an `Arc<Program>`; [`EnginePool`] caches
 //!   one per model so multi-model serve workers never rebuild state
 //!   per request.
+//!
+//!   The steady-state loop is free of **per-event** allocation (§Perf;
+//!   what remains is a handful of per-stage output tensors per image):
+//!   partial sums live in per-chain psum slab arenas and move between
+//!   tiles as `Copy` handles, MVMs/activations write into reused
+//!   scratch, and pooling units recycle their window buffers. [`CaptureMode`]
+//!   selects what `run_image` copies out: `AllStages` (every stage
+//!   tensor — tests, tracing) or `Final` (scores only — the serving
+//!   path; one tensor clone per stage per image saved). Capture is
+//!   host-side only: scores and counters are bit-identical across
+//!   modes. `cargo bench --bench engine_perf` gates the speedup of
+//!   this design against a frozen copy of the pre-arena hot path.
 //! * [`pipeline`] — the stage-granularity layer-synchronization model
 //!   ([`run_pipelined`]): while stage *i* processes image *n*, stage
 //!   *i−1* streams image *n+1*; its measured steady-state period is
@@ -24,6 +36,6 @@ pub mod pipeline;
 pub mod stats;
 pub mod trace;
 
-pub use engine::{BatchOutput, EnginePool, PooledEngine, RunOutput, Simulator};
+pub use engine::{BatchOutput, CaptureMode, EnginePool, PooledEngine, RunOutput, Simulator};
 pub use pipeline::{run_pipelined, PipelineRun};
 pub use stats::Counters;

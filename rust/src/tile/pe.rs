@@ -64,16 +64,28 @@ impl<'w> Pe<'w> {
     ///
     /// `x` may be shorter than `rows` (the tail rows see zero input —
     /// e.g. the last channel block of a layer whose C is not a multiple
-    /// of 256).
+    /// of 256). Allocates the result; the steady-state engine path uses
+    /// [`Self::mvm_into`] with caller scratch instead.
     pub fn mvm(&self, x: &[i8], stats: &mut Counters) -> Vec<i32> {
+        let mut out = vec![0i32; self.cols];
+        self.mvm_into(x, &mut out, stats);
+        out
+    }
+
+    /// [`Self::mvm`] writing into caller-owned scratch (`out.len()`
+    /// must equal `cols`); the hot path of the cycle engine, which
+    /// points `out` at a psum-arena slot or a reused scratch buffer so
+    /// no MVM allocates (§Perf).
+    pub fn mvm_into(&self, x: &[i8], out: &mut [i32], stats: &mut Counters) {
         assert!(x.len() <= self.rows, "input vector exceeds crossbar rows");
+        assert_eq!(out.len(), self.cols, "MVM output width");
         // MACs are charged uniformly per row activation — analog CIM
         // drives the wordline regardless of value — so the zero-skip
         // below is a pure simulator-speed optimization (§Perf), not an
         // energy model change.
         stats.pe_mvms += 1;
         stats.pe_macs += (x.len() * self.cols) as u64;
-        let mut out = vec![0i32; self.cols];
+        out.fill(0);
         for (c, &xv) in x.iter().enumerate() {
             if xv == 0 {
                 continue;
@@ -85,7 +97,6 @@ impl<'w> Pe<'w> {
                 *o += xv * wv as i32;
             }
         }
-        out
     }
 
     /// Weight of cell (row c, col m) — used by tests and the trace tool.
@@ -130,6 +141,26 @@ mod tests {
     #[should_panic(expected = "exceeds crossbar dimensions")]
     fn pe_rejects_oversized_block() {
         Pe::zeros(257, 1);
+    }
+
+    #[test]
+    fn mvm_into_matches_mvm_and_overwrites_scratch() {
+        let pe = Pe::new(vec![1, 2, 3, 4], 2, 2);
+        let mut s1 = Counters::new();
+        let want = pe.mvm(&[3, -1], &mut s1);
+        // dirty scratch must be fully overwritten, charges identical
+        let mut out = vec![i32::MIN; 2];
+        let mut s2 = Counters::new();
+        pe.mvm_into(&[3, -1], &mut out, &mut s2);
+        assert_eq!(out, want);
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    #[should_panic(expected = "MVM output width")]
+    fn mvm_into_rejects_wrong_width_scratch() {
+        let pe = Pe::new(vec![0; 4], 2, 2);
+        pe.mvm_into(&[1], &mut [0i32; 3], &mut Counters::new());
     }
 
     #[test]

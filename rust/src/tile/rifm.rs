@@ -83,9 +83,12 @@ impl Rifm {
 
     /// Restore the configuration-time state (empty buffer, counter at
     /// zero, no shift offset). Used by the engine to reuse one RIFM
-    /// instance across images.
+    /// instance across images. Performs no allocation: `Vec::clear`
+    /// retains the buffer's capacity.
     pub fn reset(&mut self) {
+        let cap = self.buffer.capacity();
         self.buffer.clear();
+        debug_assert_eq!(self.buffer.capacity(), cap, "reset must retain capacity");
         self.counter = 0;
         self.shift_offset = 0;
     }

@@ -16,18 +16,24 @@ use std::collections::VecDeque;
 
 use crate::coordinator::isa::{Instr, Schedule};
 use crate::model::refcompute::{clamp_i8, requant};
-use crate::noc::packet::PsumPacket;
+use crate::noc::packet::{PsumPacket, PsumRef};
 use crate::sim::stats::Counters;
 
 /// One ROFM instance.
+///
+/// The group-sum FIFO queues [`PsumRef`] handles: the lane values live
+/// in the owning chain's `PsumArena` slab, so a push/pop moves a small
+/// `Copy` header while the byte-occupancy model (the 16 KiB capacity
+/// check) is tracked from the lane count passed at push time (§Perf).
 #[derive(Clone, Debug)]
 pub struct Rofm {
     /// The periodic instruction schedule written at configuration time.
     pub schedule: Schedule,
     /// Cycle counter generating instruction indices.
     pub counter: u64,
-    /// Group-sum FIFO modelling the 16 KiB data buffer.
-    fifo: VecDeque<PsumPacket>,
+    /// Group-sum FIFO modelling the 16 KiB data buffer: (handle, lane
+    /// count) — lanes are carried per entry for byte accounting.
+    fifo: VecDeque<(PsumRef, u32)>,
     fifo_bytes: usize,
     peak_fifo_bytes: usize,
 }
@@ -46,9 +52,13 @@ impl Rofm {
     /// Restore the configuration-time state: counter at zero, FIFO
     /// empty. Used by the engine to reuse one ROFM instance across
     /// images (the schedule itself is immutable after configuration).
+    /// Performs no allocation: `VecDeque::clear` retains the FIFO's
+    /// grown capacity, so steady-state images never re-grow it.
     pub fn reset(&mut self) {
-        self.counter = 0;
+        let cap = self.fifo.capacity();
         self.fifo.clear();
+        debug_assert_eq!(self.fifo.capacity(), cap, "reset must retain capacity");
+        self.counter = 0;
         self.fifo_bytes = 0;
         self.peak_fifo_bytes = 0;
     }
@@ -85,37 +95,45 @@ impl Rofm {
             acc.opos, incoming.opos,
             "ROFM adder: partial sums for different outputs met (schedule misalignment)"
         );
-        assert_eq!(acc.data.len(), incoming.data.len(), "psum width mismatch");
-        for (a, b) in acc.data.iter_mut().zip(incoming.data.iter()) {
+        Self::add_psum_slices(&mut acc.data, &incoming.data, stats);
+    }
+
+    /// The adder datapath of [`Self::add_psum`] over raw lane slices —
+    /// the engine's arena path (tags are checked by the engine before
+    /// the lanes meet; this charges the adds).
+    pub fn add_psum_slices(acc: &mut [i32], incoming: &[i32], stats: &mut Counters) {
+        assert_eq!(acc.len(), incoming.len(), "psum width mismatch");
+        for (a, b) in acc.iter_mut().zip(incoming.iter()) {
             *a += b;
         }
         // i32 adds = 4 x 8-bit adder-equivalents each (Table III prices
         // the adder per 8 b).
-        stats.adds_8b += 4 * acc.data.len() as u64;
+        stats.adds_8b += 4 * acc.len() as u64;
     }
 
-    /// Push a group-sum into the data buffer (FIFO).
-    pub fn push_group(&mut self, p: PsumPacket, stats: &mut Counters) {
-        self.fifo_bytes += 4 * p.data.len();
+    /// Push a group-sum handle into the data buffer (FIFO). `lanes` is
+    /// the psum's lane count in the owning arena (byte accounting).
+    pub fn push_group(&mut self, p: PsumRef, lanes: usize, stats: &mut Counters) {
+        self.fifo_bytes += 4 * lanes;
         self.peak_fifo_bytes = self.peak_fifo_bytes.max(self.fifo_bytes);
         stats.rofm_buffer_accesses += 1;
         stats.peak_rofm_buffer_bytes = stats
             .peak_rofm_buffer_bytes
             .max(self.peak_fifo_bytes as u64);
-        self.fifo.push_back(p);
+        self.fifo.push_back((p, lanes as u32));
     }
 
-    /// Pop the oldest group-sum.
-    pub fn pop_group(&mut self, stats: &mut Counters) -> Option<PsumPacket> {
-        let p = self.fifo.pop_front()?;
-        self.fifo_bytes -= 4 * p.data.len();
+    /// Pop the oldest group-sum handle.
+    pub fn pop_group(&mut self, stats: &mut Counters) -> Option<PsumRef> {
+        let (p, lanes) = self.fifo.pop_front()?;
+        self.fifo_bytes -= 4 * lanes as usize;
         stats.rofm_buffer_accesses += 1;
         Some(p)
     }
 
     /// Front of the FIFO without popping (engine look-ahead).
-    pub fn peek_group(&self) -> Option<&PsumPacket> {
-        self.fifo.front()
+    pub fn peek_group(&self) -> Option<&PsumRef> {
+        self.fifo.front().map(|(p, _)| p)
     }
 
     pub fn fifo_len(&self) -> usize {
@@ -138,15 +156,32 @@ impl Rofm {
     /// `Act.`: requantize + ReLU a finished sum to i8 (non-linear
     /// function applied "in the last tile", Section III-B).
     pub fn act(sum: &[i32], shift: u32, stats: &mut Counters) -> Vec<i8> {
+        let mut out = Vec::with_capacity(sum.len());
+        Self::act_into(sum, shift, &mut out, stats);
+        out
+    }
+
+    /// [`Self::act`] into reused caller scratch (cleared first) — the
+    /// engine's zero-alloc emit path.
+    pub fn act_into(sum: &[i32], shift: u32, out: &mut Vec<i8>, stats: &mut Counters) {
         stats.act_ops_8b += sum.len() as u64;
-        sum.iter().map(|&v| requant(v, shift, true)).collect()
+        out.clear();
+        out.extend(sum.iter().map(|&v| requant(v, shift, true)));
     }
 
     /// Requantize without activation (linear conv output, e.g. before a
     /// residual add).
     pub fn quantize(sum: &[i32], shift: u32, stats: &mut Counters) -> Vec<i8> {
+        let mut out = Vec::with_capacity(sum.len());
+        Self::quantize_into(sum, shift, &mut out, stats);
+        out
+    }
+
+    /// [`Self::quantize`] into reused caller scratch (cleared first).
+    pub fn quantize_into(sum: &[i32], shift: u32, out: &mut Vec<i8>, stats: &mut Counters) {
         stats.act_ops_8b += sum.len() as u64;
-        sum.iter().map(|&v| requant(v, shift, false)).collect()
+        out.clear();
+        out.extend(sum.iter().map(|&v| requant(v, shift, false)));
     }
 
     /// `Cmp.`: element-wise max (max pooling step).
@@ -161,29 +196,53 @@ impl Rofm {
     /// `Mul.`: scale by `1/divisor` with floor division (average
     /// pooling's "multiplication with a scaling factor").
     pub fn mul_scale(sum: &[i32], divisor: i32, stats: &mut Counters) -> Vec<i8> {
+        let mut out = Vec::with_capacity(sum.len());
+        Self::mul_scale_into(sum, divisor, &mut out, stats);
+        out
+    }
+
+    /// [`Self::mul_scale`] into reused caller scratch (cleared first).
+    pub fn mul_scale_into(sum: &[i32], divisor: i32, out: &mut Vec<i8>, stats: &mut Counters) {
         stats.pool_ops_8b += sum.len() as u64;
-        sum.iter()
-            .map(|&v| clamp_i8(v.div_euclid(divisor)))
-            .collect()
+        out.clear();
+        out.extend(sum.iter().map(|&v| clamp_i8(v.div_euclid(divisor))));
     }
 
     /// `Bp.`: direct transmission (skip connections). Only charges
     /// register traffic — no compute.
     pub fn bypass(data: &[i8], stats: &mut Counters) -> Vec<i8> {
+        let mut out = Vec::with_capacity(data.len());
+        Self::bypass_into(data, &mut out, stats);
+        out
+    }
+
+    /// [`Self::bypass`] into reused caller scratch (cleared first).
+    pub fn bypass_into(data: &[i8], out: &mut Vec<i8>, stats: &mut Counters) {
         Self::charge_tx(8 * data.len() as u64, stats);
-        data.to_vec()
+        out.clear();
+        out.extend_from_slice(data);
     }
 
     /// Residual add of two i8 streams (skip + main), ReLU fused —
     /// executed with the reusable adders + Act unit.
     pub fn res_add(main: &[i8], skip: &[i8], stats: &mut Counters) -> Vec<i8> {
+        let mut out = Vec::with_capacity(main.len());
+        Self::res_add_into(main, skip, &mut out, stats);
+        out
+    }
+
+    /// [`Self::res_add`] into reused caller scratch (cleared first;
+    /// must not alias either input).
+    pub fn res_add_into(main: &[i8], skip: &[i8], out: &mut Vec<i8>, stats: &mut Counters) {
         assert_eq!(main.len(), skip.len());
         stats.adds_8b += main.len() as u64;
         stats.act_ops_8b += main.len() as u64;
-        main.iter()
-            .zip(skip.iter())
-            .map(|(&a, &b)| crate::model::refcompute::res_add(a, b))
-            .collect()
+        out.clear();
+        out.extend(
+            main.iter()
+                .zip(skip.iter())
+                .map(|(&a, &b)| crate::model::refcompute::res_add(a, b)),
+        );
     }
 }
 
@@ -191,13 +250,23 @@ impl Rofm {
 /// activation results are produced in the last tile; a comparison (or
 /// accumulation, for average pooling) is taken as each new result
 /// arrives, and a pooling result is emitted once its window completes.
-#[derive(Clone, Debug)]
+///
+/// The unit is built once per chain/stage and [`Self::reset`] between
+/// images: window buffers are recycled through spare lists and the
+/// window maps keep their capacity, so the steady-state pooling path
+/// performs no allocation (§Perf).
+#[derive(Clone, Debug, Default)]
 pub struct PoolUnit {
     kernel: usize,
     stride: usize,
     /// In-flight windows keyed by output position.
     max_partial: std::collections::HashMap<(usize, usize), (Vec<i8>, usize)>,
     sum_partial: std::collections::HashMap<(usize, usize), (Vec<i32>, usize)>,
+    /// Recycled window buffers (completed windows return theirs here).
+    spare8: Vec<Vec<i8>>,
+    spare32: Vec<Vec<i32>>,
+    /// Reused output buffer for average-pool scaling.
+    scaled: Vec<i8>,
     is_max: bool,
 }
 
@@ -206,9 +275,8 @@ impl PoolUnit {
         Self {
             kernel,
             stride,
-            max_partial: Default::default(),
-            sum_partial: Default::default(),
             is_max: true,
+            ..Default::default()
         }
     }
 
@@ -216,21 +284,48 @@ impl PoolUnit {
         Self {
             kernel,
             stride,
-            max_partial: Default::default(),
-            sum_partial: Default::default(),
             is_max: false,
+            ..Default::default()
+        }
+    }
+
+    /// Restore the image-start state. In-flight window buffers are
+    /// recycled (not dropped) and the maps keep their capacity, so a
+    /// steady-state reset allocates nothing.
+    pub fn reset(&mut self) {
+        for (_, (b, _)) in self.max_partial.drain() {
+            self.spare8.push(b);
+        }
+        for (_, (b, _)) in self.sum_partial.drain() {
+            self.spare32.push(b);
         }
     }
 
     /// Offer one activation result at input position (y, x). Returns any
-    /// completed pooling outputs `(opos, values)`.
+    /// completed pooling outputs `(opos, values)`. Allocates the result
+    /// list; the engine's zero-alloc path is [`Self::offer_each`].
     pub fn offer(
         &mut self,
-        (y, x): (usize, usize),
+        pos: (usize, usize),
         values: &[i8],
         stats: &mut Counters,
     ) -> Vec<((usize, usize), Vec<i8>)> {
         let mut done = Vec::new();
+        self.offer_each(pos, values, stats, |opos, v| done.push((opos, v.to_vec())));
+        done
+    }
+
+    /// [`Self::offer`] with a completion callback instead of an
+    /// allocated result list: `emit(opos, values)` is called for each
+    /// window that completes, and the window's buffer is recycled
+    /// afterwards.
+    pub fn offer_each(
+        &mut self,
+        (y, x): (usize, usize),
+        values: &[i8],
+        stats: &mut Counters,
+        mut emit: impl FnMut((usize, usize), &[i8]),
+    ) {
         // Which windows does (y, x) belong to?
         let oy_min = y.saturating_sub(self.kernel - 1).div_ceil(self.stride);
         let ox_min = x.saturating_sub(self.kernel - 1).div_ceil(self.stride);
@@ -248,23 +343,28 @@ impl PoolUnit {
                 }
                 let full = self.kernel * self.kernel;
                 if self.is_max {
-                    let entry = self
-                        .max_partial
-                        .entry((oy, ox))
-                        .or_insert_with(|| (vec![i8::MIN; values.len()], 0));
-                    let mut buf = std::mem::take(&mut entry.0);
-                    Rofm::cmp_max(&mut buf, values, stats);
-                    entry.0 = buf;
+                    let spare8 = &mut self.spare8;
+                    let entry = self.max_partial.entry((oy, ox)).or_insert_with(|| {
+                        let mut b = spare8.pop().unwrap_or_default();
+                        b.clear();
+                        b.resize(values.len(), i8::MIN);
+                        (b, 0)
+                    });
+                    Rofm::cmp_max(&mut entry.0, values, stats);
                     entry.1 += 1;
                     if entry.1 == full {
                         let (v, _) = self.max_partial.remove(&(oy, ox)).unwrap();
-                        done.push(((oy, ox), v));
+                        emit((oy, ox), &v);
+                        self.spare8.push(v);
                     }
                 } else {
-                    let entry = self
-                        .sum_partial
-                        .entry((oy, ox))
-                        .or_insert_with(|| (vec![0i32; values.len()], 0));
+                    let spare32 = &mut self.spare32;
+                    let entry = self.sum_partial.entry((oy, ox)).or_insert_with(|| {
+                        let mut b = spare32.pop().unwrap_or_default();
+                        b.clear();
+                        b.resize(values.len(), 0);
+                        (b, 0)
+                    });
                     for (a, &b) in entry.0.iter_mut().zip(values.iter()) {
                         *a += b as i32;
                     }
@@ -272,13 +372,13 @@ impl PoolUnit {
                     entry.1 += 1;
                     if entry.1 == full {
                         let (v, _) = self.sum_partial.remove(&(oy, ox)).unwrap();
-                        let scaled = Rofm::mul_scale(&v, full as i32, stats);
-                        done.push(((oy, ox), scaled));
+                        Rofm::mul_scale_into(&v, full as i32, &mut self.scaled, stats);
+                        emit((oy, ox), &self.scaled);
+                        self.spare32.push(v);
                     }
                 }
             }
         }
-        done
     }
 
     /// Number of in-flight (incomplete) windows — buffer-occupancy proxy.
@@ -323,16 +423,22 @@ mod tests {
         Rofm::add_psum(&mut a, &pkt((0, 1), vec![1]), &mut Counters::new());
     }
 
+    fn pref(opos: (usize, usize), slot: u32) -> PsumRef {
+        PsumRef { opos, slot }
+    }
+
     #[test]
     fn fifo_tracks_occupancy_and_peak() {
         let mut r = Rofm::new(Schedule::idle());
         let mut s = Counters::new();
-        r.push_group(pkt((0, 0), vec![0; 8]), &mut s);
-        r.push_group(pkt((0, 1), vec![0; 8]), &mut s);
+        r.push_group(pref((0, 0), 0), 8, &mut s);
+        r.push_group(pref((0, 1), 1), 8, &mut s);
         assert_eq!(r.fifo_len(), 2);
         assert_eq!(r.peak_fifo_bytes(), 64);
+        assert_eq!(r.peek_group().unwrap().opos, (0, 0));
         let p = r.pop_group(&mut s).unwrap();
         assert_eq!(p.opos, (0, 0), "FIFO order");
+        assert_eq!(p.slot, 0);
         assert_eq!(r.peak_fifo_bytes(), 64, "peak is sticky");
         assert_eq!(s.rofm_buffer_accesses, 3);
         assert_eq!(s.peak_rofm_buffer_bytes, 64);
@@ -345,9 +451,25 @@ mod tests {
         let mut s = Counters::new();
         // 17 pushes x 256 lanes x 4 B = 17 KiB > 16 KiB
         for i in 0..17 {
-            r.push_group(pkt((0, i), vec![0; 256]), &mut s);
+            r.push_group(pref((0, i), i as u32), 256, &mut s);
         }
         assert!(r.exceeded_hw_buffer());
+    }
+
+    #[test]
+    fn reset_retains_fifo_capacity_and_clears_occupancy() {
+        let mut r = Rofm::new(Schedule::idle());
+        let mut s = Counters::new();
+        for i in 0..8 {
+            r.push_group(pref((0, i), i as u32), 4, &mut s);
+        }
+        r.reset();
+        assert_eq!(r.fifo_len(), 0);
+        assert_eq!(r.peak_fifo_bytes(), 0);
+        assert_eq!(r.counter, 0);
+        // usable again after reset
+        r.push_group(pref((1, 0), 9), 4, &mut s);
+        assert_eq!(r.pop_group(&mut s).unwrap().slot, 9);
     }
 
     #[test]
@@ -376,6 +498,52 @@ mod tests {
     fn res_add_fuses_relu() {
         let mut s = Counters::new();
         assert_eq!(Rofm::res_add(&[100, -3], &[100, 1], &mut s), vec![127, 0]);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_forms() {
+        // Each scratch-writing variant must produce the same bytes and
+        // charge the same counters as its allocating wrapper, and must
+        // fully overwrite dirty scratch.
+        let mut buf8 = vec![99i8; 7];
+        let mut s1 = Counters::new();
+        let mut s2 = Counters::new();
+        Rofm::act_into(&[-256, 256, 100000], 7, &mut buf8, &mut s1);
+        assert_eq!(buf8, Rofm::act(&[-256, 256, 100000], 7, &mut s2));
+        Rofm::quantize_into(&[-256, 256, -100000], 7, &mut buf8, &mut s1);
+        assert_eq!(buf8, Rofm::quantize(&[-256, 256, -100000], 7, &mut s2));
+        Rofm::mul_scale_into(&[-3, 9], 4, &mut buf8, &mut s1);
+        assert_eq!(buf8, Rofm::mul_scale(&[-3, 9], 4, &mut s2));
+        Rofm::bypass_into(&[1, 2, 3], &mut buf8, &mut s1);
+        assert_eq!(buf8, Rofm::bypass(&[1, 2, 3], &mut s2));
+        Rofm::res_add_into(&[100, -3], &[100, 1], &mut buf8, &mut s1);
+        assert_eq!(buf8, Rofm::res_add(&[100, -3], &[100, 1], &mut s2));
+        assert_eq!(s1, s2, "scratch variants must charge identically");
+    }
+
+    #[test]
+    fn pool_unit_reset_recycles_buffers_and_stays_correct() {
+        use crate::model::refcompute::{max_pool, Tensor};
+        use crate::model::TensorShape;
+        let mut rng = crate::testutil::Rng::new(11);
+        let mut unit = PoolUnit::new_max(2, 2);
+        let mut s = Counters::new();
+        for _ in 0..3 {
+            let data = rng.i8_vec(16, 100);
+            let t = Tensor::new(TensorShape::new(1, 4, 4), data);
+            let want = max_pool(&t, 2, 2);
+            let mut got = vec![0i8; 4];
+            for y in 0..4 {
+                for x in 0..4 {
+                    unit.offer_each((y, x), &[t.at(0, y, x)], &mut s, |(oy, ox), v| {
+                        got[oy * 2 + ox] = v[0];
+                    });
+                }
+            }
+            assert_eq!(got, want.data);
+            assert_eq!(unit.in_flight(), 0);
+            unit.reset();
+        }
     }
 
     #[test]

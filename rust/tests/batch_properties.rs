@@ -9,7 +9,7 @@ use std::sync::Arc;
 use domino::coordinator::{ArchConfig, Compiler, Program};
 use domino::model::{Network, NetworkBuilder, Projection, TensorShape};
 use domino::perfmodel;
-use domino::sim::{Counters, EnginePool, Simulator};
+use domino::sim::{CaptureMode, Counters, EnginePool, Simulator};
 use domino::testutil::Rng;
 
 /// The sweep: every layer kind, strides, padding, pooling flavors,
@@ -198,8 +198,17 @@ fn pooled_engines_interleaved_across_models_match_fresh_simulators() {
         for (k, (net, program)) in programs.iter().enumerate() {
             let img = rng.i8_vec(net.input_len(), 31);
             let engine = pool.engine(k as u64, program);
+            // pooled engines default to CaptureMode::Final (serving);
+            // this property compares intermediate tensors too
+            engine.set_capture(CaptureMode::AllStages);
             engine.reset_stats();
             let got = engine.run_image(&img).unwrap();
+            assert_eq!(
+                got.stage_outputs.len(),
+                program.stages.len(),
+                "{}: AllStages capture must include every stage",
+                net.name
+            );
 
             let mut fresh = Simulator::new(program);
             let want = fresh.run_image(&img).unwrap();

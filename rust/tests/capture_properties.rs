@@ -1,0 +1,210 @@
+//! Capture-mode and psum-arena properties over the full small-geometry
+//! sweep (every stage kind: conv geometries, fused max/avg pooling,
+//! multi-block channel splits with FC pipelines, residuals with and
+//! without projection):
+//!
+//! * the arena engine is bit-exact with `model::refcompute` under both
+//!   capture modes;
+//! * [`CaptureMode::Final`] and [`CaptureMode::AllStages`] produce
+//!   identical scores, slots, latency and — critically — identical
+//!   [`Counters`] (counters feed the energy model; any drift is a
+//!   correctness bug, not a perf trade-off);
+//! * warm (reused) engines charge exactly what fresh engines charge,
+//!   image after image — the reset paths restore everything.
+//!
+//! The direct pre-refactor comparison (scores + counters vs the frozen
+//! pre-arena engine) runs on every `cargo bench --bench engine_perf`.
+
+use domino::coordinator::{ArchConfig, Compiler};
+use domino::model::refcompute::{forward_all, Weights};
+use domino::model::{Network, NetworkBuilder, Projection, TensorShape};
+use domino::sim::{CaptureMode, Simulator};
+use domino::testutil::Rng;
+
+/// The sweep (mirrors `batch_properties.rs`).
+fn sweep_nets() -> Vec<(Network, ArchConfig)> {
+    let mut nets = Vec::new();
+    for (k, stride, padding) in [(1usize, 1usize, 0usize), (3, 1, 1), (3, 2, 1), (3, 1, 0)] {
+        let net = NetworkBuilder::new("sweep-conv", TensorShape::new(2, 6, 6))
+            .conv(4, k, stride, padding)
+            .build();
+        nets.push((net, ArchConfig::default()));
+    }
+    nets.push((
+        NetworkBuilder::new("sweep-maxpool", TensorShape::new(3, 8, 8))
+            .conv(4, 3, 1, 1)
+            .max_pool(2, 2)
+            .build(),
+        ArchConfig::default(),
+    ));
+    nets.push((
+        NetworkBuilder::new("sweep-avgpool", TensorShape::new(3, 8, 8))
+            .conv(4, 3, 1, 1)
+            .avg_pool(2, 2)
+            .build(),
+        ArchConfig::default(),
+    ));
+    nets.push((
+        NetworkBuilder::new("sweep-blocks", TensorShape::new(6, 5, 5))
+            .conv(7, 3, 1, 1)
+            .flatten()
+            .fc(9)
+            .fc_logits(5)
+            .build(),
+        ArchConfig::tiny(4),
+    ));
+    nets.push((
+        NetworkBuilder::new("sweep-res", TensorShape::new(4, 6, 6))
+            .conv(4, 3, 1, 1)
+            .conv_linear(4, 3, 1, 1)
+            .res_add(0)
+            .build(),
+        ArchConfig::default(),
+    ));
+    nets.push((
+        NetworkBuilder::new("sweep-res-proj", TensorShape::new(4, 8, 8))
+            .conv(4, 3, 1, 1)
+            .conv(8, 3, 2, 1)
+            .conv_linear(8, 3, 1, 1)
+            .res_add_proj(
+                0,
+                Projection {
+                    out_ch: 8,
+                    stride: 2,
+                },
+            )
+            .build(),
+        ArchConfig::default(),
+    ));
+    nets
+}
+
+#[test]
+fn arena_engine_matches_refcompute_under_both_captures() {
+    for (net, arch) in sweep_nets() {
+        let compiler = Compiler::new(arch);
+        let weights = Weights::random(&net, compiler.weight_seed).unwrap();
+        let program = compiler.compile_with_weights(&net, &weights).unwrap();
+        let mut all = Simulator::new(&program);
+        let mut fin = Simulator::with_capture(&program, CaptureMode::Final);
+        let mut rng = Rng::new(0xCAFE);
+        for i in 0..3 {
+            let input = domino::model::refcompute::Tensor::new(
+                net.input,
+                rng.i8_vec(net.input_len(), 31),
+            );
+            let want = forward_all(&net, &weights, &input).unwrap();
+            let a = all.run_image(&input.data).unwrap();
+            let f = fin.run_image(&input.data).unwrap();
+            assert_eq!(
+                a.scores,
+                want.last().unwrap().data,
+                "{} image {i}: AllStages vs refcompute",
+                net.name
+            );
+            assert_eq!(
+                f.scores,
+                want.last().unwrap().data,
+                "{} image {i}: Final vs refcompute",
+                net.name
+            );
+            assert!(f.stage_outputs.is_empty(), "{}", net.name);
+            assert_eq!(a.stage_slots, f.stage_slots, "{}", net.name);
+            assert_eq!(a.latency_cycles, f.latency_cycles, "{}", net.name);
+        }
+        // counters are the energy model's input: any capture-mode or
+        // arena-path drift is a correctness bug
+        assert_eq!(
+            all.stats(),
+            fin.stats(),
+            "{}: counters differ across capture modes",
+            net.name
+        );
+        assert_eq!(all.stage_stats(), fin.stage_stats(), "{}", net.name);
+    }
+}
+
+#[test]
+fn batched_final_capture_matches_all_stages() {
+    // run_batch workers inherit the simulator's capture mode; scores,
+    // merged counters and the pipeline report must not depend on it.
+    for (net, arch) in sweep_nets() {
+        let program = Compiler::new(arch).compile(&net).unwrap();
+        let mut rng = Rng::new(0xF1A7);
+        let inputs: Vec<Vec<i8>> = (0..5)
+            .map(|_| rng.i8_vec(net.input_len(), 31))
+            .collect();
+
+        let mut all = Simulator::new(&program);
+        let batch_all = all.run_batch_threads(&inputs, 3).unwrap();
+        let mut fin = Simulator::with_capture(&program, CaptureMode::Final);
+        let batch_fin = fin.run_batch_threads(&inputs, 3).unwrap();
+
+        for (i, (a, f)) in batch_all
+            .outputs
+            .iter()
+            .zip(&batch_fin.outputs)
+            .enumerate()
+        {
+            assert_eq!(a.scores, f.scores, "{} image {i}", net.name);
+            assert_eq!(a.stage_slots, f.stage_slots, "{} image {i}", net.name);
+            assert_eq!(a.latency_cycles, f.latency_cycles, "{} image {i}", net.name);
+            assert_eq!(
+                a.stage_outputs.len(),
+                program.stages.len(),
+                "{}: AllStages batch keeps stage tensors",
+                net.name
+            );
+            assert!(
+                f.stage_outputs.is_empty(),
+                "{}: Final batch must not capture stage tensors",
+                net.name
+            );
+        }
+        assert_eq!(all.stats(), fin.stats(), "{}: batched counters", net.name);
+        assert_eq!(
+            batch_all.pipeline.steady_period_cycles,
+            batch_fin.pipeline.steady_period_cycles,
+            "{}",
+            net.name
+        );
+    }
+}
+
+#[test]
+fn warm_engines_charge_exactly_like_fresh_engines() {
+    // Image after image on one engine (arena + scratch reused) must be
+    // indistinguishable — outputs and counters — from a fresh engine
+    // per image. This is the reset-path audit as a property.
+    for (net, arch) in sweep_nets() {
+        let program = Compiler::new(arch).compile(&net).unwrap();
+        let mut rng = Rng::new(0x5EAD);
+        let images: Vec<Vec<i8>> = (0..4)
+            .map(|_| rng.i8_vec(net.input_len(), 31))
+            .collect();
+        let mut warm = Simulator::new(&program);
+        let mut summed = domino::sim::Counters::new();
+        for (i, img) in images.iter().enumerate() {
+            let got = warm.run_image(img).unwrap();
+            let mut fresh = Simulator::new(&program);
+            let want = fresh.run_image(img).unwrap();
+            assert_eq!(got.scores, want.scores, "{} image {i}", net.name);
+            assert_eq!(got.latency_cycles, want.latency_cycles, "{}", net.name);
+            for (si, (a, b)) in got
+                .stage_outputs
+                .iter()
+                .zip(&want.stage_outputs)
+                .enumerate()
+            {
+                assert_eq!(a.data, b.data, "{} image {i} stage {si}", net.name);
+            }
+            summed.merge(fresh.stats());
+        }
+        assert_eq!(
+            warm.stats(),
+            &summed,
+            "{}: warm-engine counters drifted from fresh-engine counters",
+            net.name
+        );
+    }
+}
