@@ -68,5 +68,40 @@ fn main() -> anyhow::Result<()> {
             eb.period_cycles
         );
     }
+
+    // The cost-model-driven explorer: the same search, but as a
+    // first-class ranked object (pooling x placement x mesh shape x
+    // chip alignment, scored analytically) — what `domino map explore`
+    // prints and what `serve::api::MappingSpec` ships over the wire.
+    println!("\n== cost-model-driven explorer (coordinator::explore) ==");
+    use domino::coordinator::explore::{self, ExploreBounds, Objective};
+    let net = zoo::resnet18_cifar();
+    let cands = explore::explore(
+        &net,
+        &ArchConfig::default(),
+        &ExploreBounds::default(),
+        Objective::Latency,
+    )?;
+    println!(
+        "{}: top candidates of {} by latency:",
+        net.name,
+        cands.len()
+    );
+    for (i, c) in cands.iter().take(6).enumerate() {
+        println!(
+            "  #{} {:<18} {:<13} mesh {:>2} aligned {:<3} -> {:>6} tiles, {:>8} cyc, \
+             {:>6.0} img/s, {:>7.0} pJ/img, link {:>4.1}%",
+            i + 1,
+            c.choice.pooling.name(),
+            c.choice.placement.name(),
+            c.choice.mesh_cols,
+            if c.choice.chip_aligned { "yes" } else { "no" },
+            c.tiles,
+            c.latency_cycles,
+            c.images_per_s,
+            c.energy_per_image_j * 1e12,
+            c.worst_link_utilization * 100.0
+        );
+    }
     Ok(())
 }

@@ -73,6 +73,15 @@ COMMANDS:
   breakdown              power breakdown (Section IV-B-3)
   accuracy [--limit N]   quantization-accuracy experiment (needs artifacts)
   map <model> [--chips N]      compile a model; print the tile mapping
+  map explore <model> [--objective latency|energy|tiles] [--top N]
+        [--verify] [--load-into HOST:PORT]
+                         rank candidate mappings (pooling x placement x
+                         mesh shape x chip alignment) by analytic cost
+                         (perfmodel timing, Table III energy, worst-link
+                         NoC load); --verify compiles the winner and
+                         serves one refcompute-checked inference,
+                         --load-into feeds the winner straight into a
+                         running `serve --listen` endpoint
   run <model> [--images N] [--seed S] [--chips N] [--threads T]
                          cycle-simulate images; print stats + energy
                          (--threads > 1 uses the batched parallel path)
@@ -102,12 +111,18 @@ COMMANDS:
   client <op> --addr HOST:PORT [--json]
                          drive a `serve --listen` endpoint: infer <m>
                          [--requests N] [--seed S] [--verify-seed S],
-                         load <m> [--seed S], swap <m> [--seed S],
-                         unload <m>, models, info <m>, stats
+                         load <m> [--seed S] [--pooling P] [--placement P]
+                         [--mesh-cols N] [--chip-aligned [true|false]]
+                         [--sync-chips N]
+                         (per-model mapping; defaults to the server's),
+                         swap <m> [--seed S] (keeps the model's mapping),
+                         unload <m>, models, info <m> (incl. mapping +
+                         placement stats), stats
   models [list|info <m>] [--json]
                          list zoo models (params/MACs/shapes), or show
-                         one model in detail; --json emits the wire-
-                         protocol ModelDesc representation
+                         one model in detail incl. its mapping stats at
+                         the default (or --config/--chips) arch; --json
+                         emits the wire-protocol ModelDesc representation
 
 Model names are case-insensitive; `_` and `-` are interchangeable.
 Models: vgg11-cifar10 resnet18-cifar10 vgg16-imagenet vgg19-imagenet

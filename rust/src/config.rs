@@ -10,6 +10,8 @@
 //! tiles_per_chip = 240
 //! mesh_cols = 16
 //! pooling = "block-reuse"      # or "weight-duplication"
+//! placement = "serpentine"     # or "column-major"
+//! chip_aligned = false         # pad chains to chip boundaries
 //! sync_chips = 5               # omit to disable water-filling
 //!
 //! [run]
@@ -26,7 +28,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{ArchConfig, PoolingScheme};
+use crate::coordinator::{ArchConfig, Placement, PoolingScheme};
 
 /// A parsed value.
 #[derive(Clone, Debug, PartialEq)]
@@ -54,6 +56,13 @@ impl Value {
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
@@ -144,11 +153,13 @@ impl Config {
             a.mesh_cols = v;
         }
         if let Some(p) = self.get_str("arch", "pooling") {
-            a.pooling = match p {
-                "block-reuse" => PoolingScheme::BlockReuse,
-                "weight-duplication" => PoolingScheme::WeightDuplication,
-                other => bail!("[arch] pooling: unknown scheme {other:?}"),
-            };
+            a.pooling = PoolingScheme::parse(p).context("[arch] pooling")?;
+        }
+        if let Some(p) = self.get_str("arch", "placement") {
+            a.placement = Placement::parse(p).context("[arch] placement")?;
+        }
+        if let Some(b) = self.get("arch", "chip_aligned").and_then(Value::as_bool) {
+            a.chip_aligned_chains = b;
         }
         if let Some(v) = self.get_usize("arch", "sync_chips") {
             a.sync_chips = Some(v);
@@ -233,5 +244,23 @@ verbose = true
     fn weight_duplication_scheme_parses() {
         let c = Config::parse("[arch]\npooling = \"weight-duplication\"").unwrap();
         assert_eq!(c.arch().unwrap().pooling, PoolingScheme::WeightDuplication);
+    }
+
+    #[test]
+    fn placement_and_alignment_parse() {
+        let c = Config::parse(
+            "[arch]\nplacement = \"column-major\"\nchip_aligned = true",
+        )
+        .unwrap();
+        let a = c.arch().unwrap();
+        assert_eq!(a.placement, Placement::ColumnMajor);
+        assert!(a.chip_aligned_chains);
+        // defaults when absent
+        let a = Config::parse("").unwrap().arch().unwrap();
+        assert_eq!(a.placement, Placement::Serpentine);
+        assert!(!a.chip_aligned_chains);
+        // bad placement rejected
+        let c = Config::parse("[arch]\nplacement = \"diagonal\"").unwrap();
+        assert!(c.arch().is_err());
     }
 }

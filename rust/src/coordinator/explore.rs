@@ -1,0 +1,352 @@
+//! The cost-model-driven mapping explorer.
+//!
+//! The paper's headline system claim is that Domino's distributed NoC
+//! scheduling "attains mapping flexibility"; this module makes that
+//! flexibility a searchable, first-class object. It enumerates
+//! candidate [`MappingChoice`]s (pooling scheme × placement strategy ×
+//! mesh shape × chip alignment, within bounds), scores each one purely
+//! analytically — no cycle simulation:
+//!
+//! * **timing** from `perfmodel::estimate` (one-image latency, the
+//!   pipelined steady-state period, images/s);
+//! * **energy per image** from the Table III `energy` model over the
+//!   estimate's event counters;
+//! * **NoC feasibility** from the `noc::flit` static link analysis
+//!   (worst offered link load on either router network must fit the
+//!   40 Gb/s links) plus the 128-entry schedule-table bound;
+//!
+//! and returns a table ranked per [`Objective`] (latency,
+//! energy-per-image, or tile count), feasible candidates first. A
+//! candidate's [`Candidate::arch`] drops straight into
+//! `Compiler::new(..)`, the serving registry, or — through
+//! `serve::api::MappingSpec` — a remote `Load` request
+//! (`domino map explore <model>` / `domino client load --placement …`).
+
+use anyhow::Result;
+
+use crate::coordinator::mapper::{ArchConfig, Compiler, PoolingScheme};
+use crate::coordinator::plan::Placement;
+use crate::energy::{energy_of, CimModel};
+use crate::model::Network;
+use crate::noc::flit;
+use crate::perfmodel;
+
+/// One point of the mapping space the explorer searches: the
+/// per-model arch knobs. Crossbar geometry (`n_c`/`n_m`), chip size
+/// and the `sync_chips` duplication budget come from the base
+/// [`ArchConfig`] and are not swept.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MappingChoice {
+    pub pooling: PoolingScheme,
+    pub placement: Placement,
+    pub mesh_cols: usize,
+    pub chip_aligned: bool,
+}
+
+impl MappingChoice {
+    /// The mapping knobs a base config currently has.
+    pub fn of_arch(a: &ArchConfig) -> Self {
+        Self {
+            pooling: a.pooling,
+            placement: a.placement,
+            mesh_cols: a.mesh_cols,
+            chip_aligned: a.chip_aligned_chains,
+        }
+    }
+
+    /// Apply this choice onto a base config.
+    pub fn apply(&self, mut base: ArchConfig) -> ArchConfig {
+        base.pooling = self.pooling;
+        base.placement = self.placement;
+        base.mesh_cols = self.mesh_cols;
+        base.chip_aligned_chains = self.chip_aligned;
+        base
+    }
+}
+
+/// Ranking objective for [`explore`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Minimize one-image latency (ties: period, then tiles).
+    Latency,
+    /// Minimize analytic energy per image (ties: tiles).
+    Energy,
+    /// Minimize allocated tiles (ties: latency).
+    Tiles,
+}
+
+impl Objective {
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Energy => "energy",
+            Objective::Tiles => "tiles",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "latency" => Ok(Objective::Latency),
+            "energy" | "energy-per-image" => Ok(Objective::Energy),
+            "tiles" | "tile-count" => Ok(Objective::Tiles),
+            other => anyhow::bail!(
+                "unknown objective {other:?} (use \"latency\", \"energy\" or \"tiles\")"
+            ),
+        }
+    }
+}
+
+/// Sweep bounds for [`enumerate`]. Defaults: both pooling schemes,
+/// both placement strategies, mesh widths {12, 16, 20}, chip alignment
+/// on and off — 24 candidates.
+#[derive(Clone, Debug)]
+pub struct ExploreBounds {
+    pub poolings: Vec<PoolingScheme>,
+    pub placements: Vec<Placement>,
+    pub mesh_cols: Vec<usize>,
+    pub chip_aligned: Vec<bool>,
+}
+
+impl Default for ExploreBounds {
+    fn default() -> Self {
+        Self {
+            poolings: PoolingScheme::ALL.to_vec(),
+            placements: Placement::ALL.to_vec(),
+            mesh_cols: vec![12, 16, 20],
+            chip_aligned: vec![false, true],
+        }
+    }
+}
+
+/// The analytic measurement of one compiled program — the single
+/// source of truth shared by the explorer's candidate scoring and the
+/// observability plane's `serve::api::MappingDesc`, so the ranked
+/// table and `ModelInfo` can never disagree on the math.
+#[derive(Clone, Copy, Debug)]
+pub struct ProgramScore {
+    pub tiles: usize,
+    pub chips: usize,
+    /// One-image latency (layers back-to-back), cycles.
+    pub latency_cycles: u64,
+    /// Pipelined steady-state period, cycles.
+    pub period_cycles: u64,
+    pub images_per_s: f64,
+    /// Analytic energy per image (generic SRAM CIM model), joules.
+    pub energy_per_image_j: f64,
+    /// Worst offered link load across both router networks
+    /// (1.0 = a saturated 40 Gb/s link).
+    pub worst_link_utilization: f64,
+    /// Link loads fit the dual-router mesh and every schedule fits the
+    /// 128-entry hardware table.
+    pub feasible: bool,
+}
+
+/// Measure a compiled program analytically (weight-independent, so
+/// skeleton programs work): perfmodel timing, Table III energy per
+/// image, and the static worst-link NoC load.
+pub fn analyze(program: &crate::coordinator::Program) -> Result<ProgramScore> {
+    let est = perfmodel::estimate(program)?;
+    let report = flit::dual_router_report(&flit::program_flows(program));
+    let worst = report
+        .rifm
+        .peak_utilization
+        .max(report.rofm.peak_utilization);
+    let energy = energy_of(&est.counters, &CimModel::generic_sram()).total();
+    Ok(ProgramScore {
+        tiles: program.total_tiles,
+        chips: program.chips,
+        latency_cycles: est.latency_cycles,
+        period_cycles: est.period_cycles,
+        images_per_s: est.images_per_s(),
+        energy_per_image_j: energy,
+        worst_link_utilization: worst,
+        feasible: worst <= 1.0 + 1e-9 && program.schedules_fit_hardware(),
+    })
+}
+
+/// One scored candidate mapping.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub choice: MappingChoice,
+    /// The base config with `choice` applied — ready for
+    /// `Compiler::new` or a registry load.
+    pub arch: ArchConfig,
+    pub tiles: usize,
+    pub chips: usize,
+    /// One-image latency (layers back-to-back), cycles.
+    pub latency_cycles: u64,
+    /// Pipelined steady-state period, cycles.
+    pub period_cycles: u64,
+    pub images_per_s: f64,
+    /// Analytic energy per image (generic SRAM CIM model), joules.
+    pub energy_per_image_j: f64,
+    /// Worst offered link load across both router networks
+    /// (1.0 = a saturated 40 Gb/s link).
+    pub worst_link_utilization: f64,
+    /// Link loads fit the dual-router mesh and every schedule fits the
+    /// 128-entry hardware table.
+    pub feasible: bool,
+}
+
+/// Enumerate the candidate choices within `bounds`, dropping mesh
+/// widths the base chip cannot hold.
+pub fn enumerate(base: &ArchConfig, bounds: &ExploreBounds) -> Vec<MappingChoice> {
+    let mut out = Vec::new();
+    for &pooling in &bounds.poolings {
+        for &placement in &bounds.placements {
+            for &mesh_cols in &bounds.mesh_cols {
+                if mesh_cols == 0 || mesh_cols > base.tiles_per_chip {
+                    continue;
+                }
+                for &chip_aligned in &bounds.chip_aligned {
+                    out.push(MappingChoice {
+                        pooling,
+                        placement,
+                        mesh_cols,
+                        chip_aligned,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Score one choice analytically (skeleton compile — no weights, no
+/// cycle simulation).
+pub fn score(net: &Network, base: &ArchConfig, choice: MappingChoice) -> Result<Candidate> {
+    let arch = choice.apply(*base);
+    let program = Compiler::new(arch).compile_analysis(net)?;
+    let s = analyze(&program)?;
+    Ok(Candidate {
+        choice,
+        arch,
+        tiles: s.tiles,
+        chips: s.chips,
+        latency_cycles: s.latency_cycles,
+        period_cycles: s.period_cycles,
+        images_per_s: s.images_per_s,
+        energy_per_image_j: s.energy_per_image_j,
+        worst_link_utilization: s.worst_link_utilization,
+        feasible: s.feasible,
+    })
+}
+
+/// Rank candidates in place: feasible first, then by the objective
+/// (stable, so the deterministic enumeration order breaks exact ties).
+pub fn rank(candidates: &mut [Candidate], objective: Objective) {
+    candidates.sort_by(|a, b| {
+        b.feasible.cmp(&a.feasible).then_with(|| match objective {
+            Objective::Latency => a
+                .latency_cycles
+                .cmp(&b.latency_cycles)
+                .then_with(|| a.period_cycles.cmp(&b.period_cycles))
+                .then_with(|| a.tiles.cmp(&b.tiles)),
+            Objective::Energy => a
+                .energy_per_image_j
+                .total_cmp(&b.energy_per_image_j)
+                .then_with(|| a.tiles.cmp(&b.tiles)),
+            Objective::Tiles => a
+                .tiles
+                .cmp(&b.tiles)
+                .then_with(|| a.latency_cycles.cmp(&b.latency_cycles)),
+        })
+    });
+}
+
+/// Enumerate, score and rank: the full explorer pass.
+pub fn explore(
+    net: &Network,
+    base: &ArchConfig,
+    bounds: &ExploreBounds,
+    objective: Objective,
+) -> Result<Vec<Candidate>> {
+    let mut candidates = enumerate(base, bounds)
+        .into_iter()
+        .map(|c| score(net, base, c))
+        .collect::<Result<Vec<_>>>()?;
+    rank(&mut candidates, objective);
+    Ok(candidates)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn enumeration_respects_bounds_and_chip_size() {
+        let base = ArchConfig::default();
+        let all = enumerate(&base, &ExploreBounds::default());
+        assert_eq!(all.len(), 2 * 2 * 3 * 2);
+        // a mesh wider than the chip is dropped, not scored
+        let mut bounds = ExploreBounds::default();
+        bounds.mesh_cols = vec![16, 10_000];
+        assert_eq!(enumerate(&base, &bounds).len(), 2 * 2 * 2);
+    }
+
+    #[test]
+    fn explorer_ranks_tiny_cnn_per_objective() {
+        let net = zoo::tiny_cnn();
+        let base = ArchConfig::default();
+        for objective in [Objective::Latency, Objective::Energy, Objective::Tiles] {
+            let cands = explore(&net, &base, &ExploreBounds::default(), objective).unwrap();
+            assert!(!cands.is_empty());
+            assert!(cands[0].feasible, "tiny-cnn must have a feasible mapping");
+            for w in cands.windows(2) {
+                if !(w[0].feasible && w[1].feasible) {
+                    // infeasible candidates sort after all feasible ones
+                    assert!(w[0].feasible || !w[1].feasible);
+                    continue;
+                }
+                match objective {
+                    Objective::Latency => {
+                        assert!(w[0].latency_cycles <= w[1].latency_cycles)
+                    }
+                    Objective::Energy => {
+                        assert!(w[0].energy_per_image_j <= w[1].energy_per_image_j)
+                    }
+                    Objective::Tiles => assert!(w[0].tiles <= w[1].tiles),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn candidate_tiles_match_a_real_compile() {
+        let net = zoo::tiny_resnet();
+        let base = ArchConfig::default();
+        for cand in explore(&net, &base, &ExploreBounds::default(), Objective::Tiles).unwrap() {
+            let p = Compiler::new(cand.arch).compile_analysis(&net).unwrap();
+            assert_eq!(p.total_tiles, cand.tiles, "{:?}", cand.choice);
+            assert_eq!(p.chips, cand.chips, "{:?}", cand.choice);
+        }
+    }
+
+    #[test]
+    fn weight_duplication_candidates_trade_tiles_for_speed() {
+        // on a pooled conv net, the duplication scheme must appear in
+        // the sweep with more tiles and a shorter period
+        let net = zoo::tiny_cnn();
+        let base = ArchConfig::default();
+        let cands = explore(&net, &base, &ExploreBounds::default(), Objective::Latency).unwrap();
+        let block = cands
+            .iter()
+            .find(|c| c.choice.pooling == PoolingScheme::BlockReuse)
+            .unwrap();
+        let dup = cands
+            .iter()
+            .find(|c| c.choice.pooling == PoolingScheme::WeightDuplication)
+            .unwrap();
+        assert!(dup.tiles > block.tiles);
+        assert!(dup.period_cycles < block.period_cycles);
+    }
+
+    #[test]
+    fn choice_roundtrips_through_arch() {
+        let base = ArchConfig::default();
+        for choice in enumerate(&base, &ExploreBounds::default()) {
+            assert_eq!(MappingChoice::of_arch(&choice.apply(base)), choice);
+        }
+    }
+}

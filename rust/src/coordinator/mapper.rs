@@ -1,32 +1,39 @@
 //! The Domino mapping compiler (paper Sections II-C, III).
 //!
-//! Turns a [`Network`] + weights into a [`Program`]: for every weight
-//! layer it allocates a tile array —
+//! Turns a [`Network`] + weights into a [`Program`] through the
+//! explicit phases of the mapping plane (`super::plan`):
 //!
-//! * CONV: `K² · ⌈C/N_c⌉ · ⌈M/N_m⌉` tiles (Section III-B), kernel pixel
-//!   (kr, kc) and channel block (cb, mb) each getting their own
-//!   crossbar block; chains are placed serpentine so every partial-sum
-//!   hop is mesh-local;
-//! * FC: `⌈C_in/N_c⌉ × ⌈C_out/N_m⌉` tiles (Section III-A, Fig. 2);
-//! * pooling directly after a conv is fused into the conv's hand-off
-//!   (Section III-C) — under block reuse it costs no tiles, under
-//!   weight duplication the conv array is replicated `K_p²` times;
-//! * residual skips route through RIFM→ROFM shortcuts; projected skips
-//!   get a 1x1 conv array.
+//! 1. **allocate** — every weight layer becomes a logical tile array:
+//!    CONV gets `K² · ⌈C/N_c⌉ · ⌈M/N_m⌉` tiles (Section III-B), FC a
+//!    `⌈C_in/N_c⌉ × ⌈C_out/N_m⌉` grid (Section III-A, Fig. 2); pooling
+//!    directly after a conv is fused into the conv's hand-off (Section
+//!    III-C) — under block reuse it costs no tiles, under weight
+//!    duplication the conv array is replicated `K_p²` times; residual
+//!    skips route through RIFM→ROFM shortcuts, projected skips get a
+//!    1x1 conv array;
+//! 2. **place** — chains are pinned to mesh coordinates through the
+//!    arch's pluggable [`Placement`] strategy (serpentine baseline or
+//!    column-major; every partial-sum hop stays mesh-local either way);
+//! 3. **schedule** — [`Compiler::materialize`] generates every placed
+//!    tile's periodic ROFM schedule (`super::schedule`), RIFM
+//!    configuration and stationary weight block;
+//! 4. **partition** — the placed span is cut into chips (240 tiles
+//!    each in the paper's evaluation).
 //!
-//! It then generates every tile's periodic ROFM schedule
-//! (`super::schedule`) and RIFM configuration, and partitions the
-//! result across chips (240 tiles each in the paper's evaluation).
+//! [`Compiler::compile`] is the thin composition of
+//! [`Compiler::plan`] (phases 1, 2, 4 — the [`MappingPlan`] IR) and
+//! [`Compiler::materialize`] (phase 3), bit-identical to the former
+//! single-pass compiler.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
+use crate::coordinator::plan::{ConvPlan, FcPlan, LayerPlan, MappingPlan, Placement};
 use crate::coordinator::program::*;
 use crate::coordinator::schedule::{
     conv_tile_schedule, fc_tile_schedule, ConvGeometry, ConvRole,
 };
 use crate::model::refcompute::{LayerWeights, Weights};
 use crate::model::{LayerKind, Network, Projection, TensorShape};
-use crate::noc::serpentine;
 use crate::tile::rifm::RifmConfig;
 
 /// How pooling after a conv layer is realised (paper Fig. 4).
@@ -41,8 +48,35 @@ pub enum PoolingScheme {
     WeightDuplication,
 }
 
+impl PoolingScheme {
+    /// Canonical config/wire name.
+    pub fn name(self) -> &'static str {
+        match self {
+            PoolingScheme::BlockReuse => "block-reuse",
+            PoolingScheme::WeightDuplication => "weight-duplication",
+        }
+    }
+
+    /// Parse a config/wire name (case-insensitive, `_`/`-`
+    /// interchangeable).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().replace('_', "-").as_str() {
+            "block-reuse" => Ok(PoolingScheme::BlockReuse),
+            "weight-duplication" => Ok(PoolingScheme::WeightDuplication),
+            other => bail!(
+                "unknown pooling scheme {other:?} (use \"block-reuse\" or \
+                 \"weight-duplication\")"
+            ),
+        }
+    }
+
+    /// Both schemes, for sweeps.
+    pub const ALL: [PoolingScheme; 2] =
+        [PoolingScheme::BlockReuse, PoolingScheme::WeightDuplication];
+}
+
 /// Architecture parameters (paper Section IV-A defaults).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ArchConfig {
     /// Crossbar rows per PE.
     pub n_c: usize,
@@ -53,6 +87,9 @@ pub struct ArchConfig {
     /// Mesh width (columns) per chip; 240 tiles = 16 x 15.
     pub mesh_cols: usize,
     pub pooling: PoolingScheme,
+    /// How chains are pinned to mesh coordinates (the place phase's
+    /// strategy; see `coordinator::plan`).
+    pub placement: Placement,
     /// Keep every psum chain within one chip: when a chain would
     /// straddle a 240-tile chip boundary, pad the allocation cursor to
     /// the next chip so all its partial-sum hops stay on the cheap
@@ -78,6 +115,7 @@ impl Default for ArchConfig {
             tiles_per_chip: crate::consts::TILES_PER_CHIP,
             mesh_cols: 16,
             pooling: PoolingScheme::BlockReuse,
+            placement: Placement::Serpentine,
             chip_aligned_chains: false,
             sync_chips: None,
         }
@@ -91,11 +129,7 @@ impl ArchConfig {
         Self {
             n_c: n,
             n_m: n,
-            tiles_per_chip: 240,
-            mesh_cols: 16,
-            pooling: PoolingScheme::BlockReuse,
-            chip_aligned_chains: false,
-            sync_chips: None,
+            ..Self::default()
         }
     }
 
@@ -162,16 +196,49 @@ impl Compiler {
         c.compile(net)
     }
 
+    /// Build the mapping plan (allocate → place → partition; see
+    /// `super::plan`): the explicit IR between "what tile arrays does
+    /// this network need" and the scheduled, weight-bearing
+    /// [`Program`]. Weight-free and cheap — the mapping explorer
+    /// builds many of these per model.
+    pub fn plan(&self, net: &Network) -> Result<MappingPlan> {
+        crate::coordinator::plan::build(net, &self.arch)
+    }
+
     /// Compile with caller-provided weights (e.g. trained weights loaded
-    /// from the JAX golden model).
+    /// from the JAX golden model): the thin composition of
+    /// [`Self::plan`] and [`Self::materialize`].
     pub fn compile_with_weights(&self, net: &Network, weights: &Weights) -> Result<Program> {
+        let plan = self.plan(net)?;
+        self.materialize(net, weights, &plan)
+    }
+
+    /// The schedule phase: turn a [`MappingPlan`] into the runnable
+    /// [`Program`] — per-tile periodic ROFM schedules, RIFM
+    /// configuration and stationary weight blocks, at the plan's
+    /// placement. The plan must have been built for this compiler's
+    /// [`ArchConfig`].
+    pub fn materialize(
+        &self,
+        net: &Network,
+        weights: &Weights,
+        plan: &MappingPlan,
+    ) -> Result<Program> {
+        ensure!(
+            plan.arch == self.arch,
+            "mapping plan was built for a different ArchConfig"
+        );
         let shapes = net.shapes()?;
         if weights.per_layer.len() != net.layers.len() {
             bail!("weights cover {} layers, network has {}", weights.per_layer.len(), net.layers.len());
         }
-        let dups = self.plan_duplication(net, &shapes)?;
+        ensure!(
+            plan.layers.len() == net.layers.len(),
+            "mapping plan covers {} layers, network has {}",
+            plan.layers.len(),
+            net.layers.len()
+        );
         let mut stages: Vec<Stage> = Vec::new();
-        let mut tile_cursor = 0usize;
         let mut in_shape = net.input;
         // map network layer index -> stage index (for ResAdd sources)
         let mut layer_to_stage: Vec<Option<usize>> = vec![None; net.layers.len()];
@@ -211,6 +278,9 @@ impl Compiler {
                         LayerWeights::None if self.skeleton => &[],
                         _ => bail!("layer {i}: conv weights missing"),
                     };
+                    let LayerPlan::Conv(cp) = &plan.layers[i] else {
+                        bail!("layer {i}: mapping plan expected a conv allocation");
+                    };
                     let stage = self.build_conv_stage(
                         in_shape,
                         out_shape,
@@ -222,11 +292,10 @@ impl Compiler {
                         layer.requant_shift,
                         lw,
                         fused_pool,
-                        dups[i],
-                        &mut tile_cursor,
+                        cp,
                     )?;
                     layer_to_stage[i] = Some(stages.len());
-                    prev_dup = dups[i];
+                    prev_dup = cp.dup;
                     let fused = fused_pool.is_some();
                     stages.push(Stage {
                         layer: i,
@@ -247,13 +316,16 @@ impl Compiler {
                         LayerWeights::None if self.skeleton => &[],
                         _ => bail!("layer {i}: fc weights missing"),
                     };
+                    let LayerPlan::Fc(fp) = &plan.layers[i] else {
+                        bail!("layer {i}: mapping plan expected an fc allocation");
+                    };
                     let stage = self.build_fc_stage(
                         in_shape.c,
                         *out_features,
                         *relu,
                         layer.requant_shift,
                         lw,
-                        &mut tile_cursor,
+                        fp,
                     )?;
                     layer_to_stage[i] = Some(stages.len());
                     prev_dup = 1;
@@ -303,13 +375,17 @@ impl Compiler {
                                 LayerWeights::None if self.skeleton => &[],
                                 _ => bail!("layer {i}: projection weights missing"),
                             };
+                            let LayerPlan::Conv(cp) = &plan.layers[i] else {
+                                bail!(
+                                    "layer {i}: mapping plan expected a projection allocation"
+                                );
+                            };
                             Some(self.build_projection_stage(
                                 shapes[*from],
                                 p,
                                 layer.requant_shift,
                                 lw,
-                                dups[i],
-                                &mut tile_cursor,
+                                cp,
                             )?)
                         }
                         None => None,
@@ -351,29 +427,13 @@ impl Compiler {
             i += 1;
         }
 
-        let total_tiles = tile_cursor;
-        let chips = total_tiles.div_ceil(self.arch.tiles_per_chip).max(1);
         Ok(Program {
             net: net.clone(),
             arch: self.arch,
             stages,
-            total_tiles,
-            chips,
+            total_tiles: plan.total_tiles,
+            chips: plan.chips,
         })
-    }
-
-    /// Under `chip_aligned_chains`, advance the cursor to the next chip
-    /// boundary when an `n`-tile chain would otherwise straddle one
-    /// (chains longer than a chip must straddle regardless).
-    fn align_chain(&self, cursor: &mut usize, n: usize) {
-        if !self.arch.chip_aligned_chains || n > self.arch.tiles_per_chip {
-            return;
-        }
-        let per = self.arch.tiles_per_chip;
-        let used = *cursor % per;
-        if used + n > per {
-            *cursor += per - used; // pad tiles: unused crossbars
-        }
     }
 
     /// Split `n` into blocks of at most `cap`: returns (lo, hi) pairs.
@@ -381,117 +441,6 @@ impl Compiler {
         (0..n.div_ceil(cap))
             .map(|b| (b * cap, ((b + 1) * cap).min(n)))
             .collect()
-    }
-
-    /// Plan per-layer weight-duplication factors.
-    ///
-    /// Without a `sync_chips` budget this returns the pooling-scheme
-    /// factors only (1 under block reuse, `K_p²` for pre-pool convs
-    /// under weight duplication, Fig. 4(b)). With a budget it
-    /// *water-fills*: repeatedly duplicate the stage with the longest
-    /// steady-state period (`⌈pixels/dup⌉`) until the chip budget is
-    /// exhausted — this is how the paper's Table IV tile counts
-    /// (240 x 5 for VGG-11 vs the 168-tile Section III-B minimum) and
-    /// "layer synchronization" throughput arise. Each replica streams
-    /// `1/dup` of the IFM, so per-image event counts are unchanged
-    /// (window-halo traffic between replicas is below model
-    /// resolution); only the stage period shrinks.
-    fn plan_duplication(&self, net: &Network, shapes: &[TensorShape]) -> Result<Vec<usize>> {
-        struct Entry {
-            layer: usize,
-            tiles: usize,
-            pixels: usize,
-            dup: usize,
-        }
-        let mut dups = vec![1usize; net.layers.len()];
-        let mut entries: Vec<Entry> = Vec::new();
-        let mut fixed = 0usize; // non-duplicable tiles (FC grids)
-        let mut in_shape = net.input;
-        let mut i = 0usize;
-        while i < net.layers.len() {
-            let layer = &net.layers[i];
-            let out_shape = shapes[i];
-            match &layer.kind {
-                LayerKind::Conv2d {
-                    out_ch,
-                    kernel,
-                    stride,
-                    padding,
-                    ..
-                } => {
-                    let pool_k = match net.layers.get(i + 1).map(|l| &l.kind) {
-                        Some(LayerKind::MaxPool2d { kernel, .. })
-                        | Some(LayerKind::AvgPool2d { kernel, .. }) => Some(*kernel),
-                        _ => None,
-                    };
-                    let g = ConvGeometry::new(*kernel, *stride, *padding, in_shape.h, in_shape.w);
-                    let cb = in_shape.c.div_ceil(self.arch.n_c);
-                    let mb = out_ch.div_ceil(self.arch.n_m);
-                    let chain = kernel * kernel * cb;
-                    let dup0 = match (pool_k, self.arch.pooling) {
-                        (Some(kp), PoolingScheme::WeightDuplication) => kp * kp,
-                        _ => 1,
-                    };
-                    entries.push(Entry {
-                        layer: i,
-                        tiles: chain * mb,
-                        pixels: g.stream_slots(),
-                        dup: dup0,
-                    });
-                    if pool_k.is_some() {
-                        in_shape = shapes[i + 1];
-                        i += 2;
-                        continue;
-                    }
-                }
-                LayerKind::Fc { out_features, .. } => {
-                    fixed += in_shape.c.div_ceil(self.arch.n_c)
-                        * out_features.div_ceil(self.arch.n_m);
-                }
-                LayerKind::ResAdd { proj: Some(p), from } => {
-                    let src = shapes[*from];
-                    let g = ConvGeometry::new(1, p.stride, 0, src.h, src.w);
-                    let cb = src.c.div_ceil(self.arch.n_c);
-                    let mb = p.out_ch.div_ceil(self.arch.n_m);
-                    entries.push(Entry {
-                        layer: i,
-                        tiles: cb * mb,
-                        pixels: g.stream_slots(),
-                        dup: 1,
-                    });
-                }
-                _ => {}
-            }
-            in_shape = out_shape;
-            i += 1;
-        }
-
-        if let Some(chips) = self.arch.sync_chips {
-            let budget = chips * self.arch.tiles_per_chip;
-            let mut used =
-                fixed + entries.iter().map(|e| e.tiles * e.dup).sum::<usize>();
-            loop {
-                // current bottleneck stage
-                let Some(bi) = (0..entries.len()).max_by_key(|&j| {
-                    let e = &entries[j];
-                    e.pixels.div_ceil(e.dup)
-                }) else {
-                    break;
-                };
-                let e = &entries[bi];
-                // one replica cannot stream less than one pixel, and an
-                // unaffordable bottleneck means no further period gain
-                if e.dup >= e.pixels || used + e.tiles > budget {
-                    break;
-                }
-                entries[bi].dup += 1;
-                used += entries[bi].tiles;
-            }
-        }
-        for e in &entries {
-            dups[e.layer] = e.dup;
-        }
-        Ok(dups)
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -507,26 +456,35 @@ impl Compiler {
         shift: u32,
         w: &[i8], // [M][C][K][K]
         fused_pool: Option<PoolSpec>,
-        dup: usize,
-        tile_cursor: &mut usize,
+        plan: &ConvPlan,
     ) -> Result<ConvStage> {
         let c_in = in_shape.c;
+        let dup = plan.dup;
         let g = ConvGeometry::new(k, stride, padding, in_shape.h, in_shape.w);
         let cblks = Self::blocks(c_in, self.arch.n_c);
         let mblks = Self::blocks(out_ch, self.arch.n_m);
+        ensure!(
+            plan.chains.len() == mblks.len() && plan.chain_len == k * k * cblks.len(),
+            "conv stage needs {} chains of {} tiles, plan has {} of {}",
+            mblks.len(),
+            k * k * cblks.len(),
+            plan.chains.len(),
+            plan.chain_len
+        );
         let mut chains = Vec::new();
         for (mb, &(m_lo, m_hi)) in mblks.iter().enumerate() {
             let cols = m_hi - m_lo;
             let mut tiles = Vec::new();
             let chain_len = k * k * cblks.len();
-            self.align_chain(tile_cursor, chain_len * dup);
-            let coords = serpentine(
-                *tile_cursor,
-                chain_len * dup,
-                self.arch.mesh_cols,
-                self.arch.tiles_per_chip,
+            // placed by the plan: `chain_len * dup` coordinates; the
+            // `dup` replicas share the leading replica's schedule
+            let coords = &plan.chains[mb].coords;
+            ensure!(
+                coords.len() == chain_len * dup,
+                "chain {mb}: plan placed {} tiles, stage needs {}",
+                coords.len(),
+                chain_len * dup
             );
-            *tile_cursor += chain_len * dup;
             let mut ci = 0usize;
             for kr in 0..k {
                 for kc in 0..k {
@@ -619,21 +577,21 @@ impl Compiler {
         relu: bool,
         shift: u32,
         w: &[i8], // [out][in]
-        tile_cursor: &mut usize,
+        plan: &FcPlan,
     ) -> Result<FcStage> {
         let rblks = Self::blocks(in_features, self.arch.n_c);
         let cblks = Self::blocks(out_features, self.arch.n_m);
+        ensure!(
+            plan.columns.len() == cblks.len()
+                && plan.columns.iter().all(|c| c.coords.len() == rblks.len()),
+            "fc stage needs {} columns of {} tiles each",
+            cblks.len(),
+            rblks.len()
+        );
         let mut columns = Vec::new();
         for (cb, &(o_lo, o_hi)) in cblks.iter().enumerate() {
             let cols = o_hi - o_lo;
-            self.align_chain(tile_cursor, rblks.len());
-            let coords = serpentine(
-                *tile_cursor,
-                rblks.len(),
-                self.arch.mesh_cols,
-                self.arch.tiles_per_chip,
-            );
-            *tile_cursor += rblks.len();
+            let coords = &plan.columns[cb].coords;
             let mut tiles = Vec::new();
             for (rb, &(i_lo, i_hi)) in rblks.iter().enumerate() {
                 let rows = i_hi - i_lo;
@@ -689,8 +647,7 @@ impl Compiler {
         proj: &Projection,
         shift: u32,
         w: &[i8], // [M][C]
-        dup: usize,
-        tile_cursor: &mut usize,
+        plan: &ConvPlan,
     ) -> Result<ConvStage> {
         // A 1x1 conv: reuse the conv builder with K = 1; expand the
         // [M][C] weight layout to [M][C][1][1] (identical memory).
@@ -708,8 +665,7 @@ impl Compiler {
             shift,
             w,
             None,
-            dup,
-            tile_cursor,
+            plan,
         )
     }
 }
@@ -1008,6 +964,101 @@ mod tests {
                 assert_eq!(c.chains[0].tiles[0].rifm.shift_step, 64);
             }
             _ => panic!(),
+        }
+    }
+
+    /// The phase split's core contract: the materialized program pins
+    /// every tile to exactly the coordinate its plan placed, and the
+    /// plan's totals are the program's totals.
+    #[test]
+    fn materialized_program_matches_its_plan() {
+        for (net, arch) in [
+            (zoo::tiny_cnn(), ArchConfig::default()),
+            (zoo::tiny_resnet(), ArchConfig::tiny(4)),
+            (zoo::resnet18_cifar(), ArchConfig::table4(6)),
+        ] {
+            let compiler = Compiler::new(arch);
+            let plan = compiler.plan(&net).unwrap();
+            let p = compiler.compile_analysis(&net).unwrap();
+            assert_eq!(p.total_tiles, plan.total_tiles, "{}", net.name);
+            assert_eq!(p.chips, plan.chips, "{}", net.name);
+            for stage in &p.stages {
+                match (&stage.kind, &plan.layers[stage.layer]) {
+                    (StageKind::Conv(c), LayerPlan::Conv(cp)) => {
+                        for (ch, chp) in c.chains.iter().zip(&cp.chains) {
+                            for (t, want) in ch.tiles.iter().zip(&chp.coords) {
+                                assert_eq!(t.coord, *want, "{} {}", net.name, stage.name);
+                            }
+                        }
+                    }
+                    (StageKind::Fc(f), LayerPlan::Fc(fp)) => {
+                        for (col, colp) in f.columns.iter().zip(&fp.columns) {
+                            for (t, want) in col.tiles.iter().zip(&colp.coords) {
+                                assert_eq!(t.coord, *want, "{} {}", net.name, stage.name);
+                            }
+                        }
+                    }
+                    (StageKind::Res(r), lp) => {
+                        if let (Some(pr), LayerPlan::Conv(cp)) = (&r.proj, lp) {
+                            for (ch, chp) in pr.chains.iter().zip(&cp.chains) {
+                                for (t, want) in ch.tiles.iter().zip(&chp.coords) {
+                                    assert_eq!(t.coord, *want, "{} {}", net.name, stage.name);
+                                }
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn materialize_rejects_a_foreign_plan() {
+        let net = zoo::tiny_cnn();
+        let other = Compiler::new(ArchConfig::tiny(4)).plan(&net).unwrap();
+        let weights = Weights::random(&net, 1).unwrap();
+        assert!(Compiler::default()
+            .materialize(&net, &weights, &other)
+            .is_err());
+    }
+
+    #[test]
+    fn column_major_placement_changes_coords_not_structure() {
+        let net = zoo::tiny_cnn();
+        let base = Compiler::default().compile(&net).unwrap();
+        let mut arch = ArchConfig::default();
+        arch.placement = Placement::ColumnMajor;
+        let cm = Compiler::new(arch).compile(&net).unwrap();
+        assert_eq!(cm.total_tiles, base.total_tiles);
+        assert_eq!(cm.chips, base.chips);
+        assert_eq!(cm.stages.len(), base.stages.len());
+        // chains stay mesh-local, but at least one tile moved
+        let mut moved = false;
+        for (a, b) in cm.stages.iter().zip(&base.stages) {
+            if let (StageKind::Conv(ca), StageKind::Conv(cb)) = (&a.kind, &b.kind) {
+                for (cha, chb) in ca.chains.iter().zip(&cb.chains) {
+                    let coords: Vec<_> = cha.tiles.iter().map(|t| t.coord).collect();
+                    assert!(chain_is_local(&coords), "{}: chain not local", a.name);
+                    moved |= cha
+                        .tiles
+                        .iter()
+                        .zip(&chb.tiles)
+                        .any(|(x, y)| x.coord != y.coord);
+                }
+            }
+        }
+        assert!(moved, "column-major must actually relocate tiles");
+        // weights and schedules are placement-independent
+        for (a, b) in cm.stages.iter().zip(&base.stages) {
+            if let (StageKind::Conv(ca), StageKind::Conv(cb)) = (&a.kind, &b.kind) {
+                for (cha, chb) in ca.chains.iter().zip(&cb.chains) {
+                    for (x, y) in cha.tiles.iter().zip(&chb.tiles) {
+                        assert_eq!(x.weights, y.weights);
+                        assert_eq!(x.schedule, y.schedule);
+                    }
+                }
+            }
         }
     }
 }

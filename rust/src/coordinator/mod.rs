@@ -1,11 +1,24 @@
-//! The Domino coordinator — the paper's system contribution.
+//! The Domino coordinator — the paper's system contribution, organised
+//! as an explicit mapping plane.
 //!
 //! * [`isa`] — the 16-bit C-type/M-type instruction encoding (Table I)
 //!   and the periodic [`isa::Schedule`] abstraction.
-//! * [`mapper`] — allocates each weight layer onto a tile array
-//!   (`K² x ⌈C/N_c⌉ x ⌈M/N_m⌉` tiles for conv, `⌈C_in/N_c⌉ x
-//!   ⌈C_out/N_m⌉` for FC), places chains serpentine in the mesh and
-//!   partitions across chips (240 tiles/chip).
+//! * [`plan`] — the mapping-plane IR: **allocate** (logical tile
+//!   arrays & duplication per layer) → **place** (pluggable
+//!   [`Placement`] strategy: serpentine baseline or column-major, plus
+//!   chip-aligned variants) → **partition** (240-tile chips), yielding
+//!   a weight-free [`MappingPlan`].
+//! * [`mapper`] — the compiler around the plan: [`Compiler::plan`]
+//!   builds the IR, [`Compiler::materialize`] schedules it (per-tile
+//!   periodic instruction programs, RIFM configs, stationary weight
+//!   blocks), and [`Compiler::compile`] is the thin composition of the
+//!   two.
+//! * [`explore`] — the cost-model-driven mapping explorer: enumerate
+//!   candidate `MappingChoice`s (pooling × placement × mesh shape ×
+//!   chip alignment), score each analytically (perfmodel timing,
+//!   Table III energy, worst-link NoC load — no cycle simulation) and
+//!   rank per objective. Winners feed the serving layer's per-model
+//!   mappings (`domino map explore`, `serve::api::MappingSpec`).
 //! * [`schedule`] — generates each tile's periodic instruction program
 //!   (period `2(P+W)` for stride-1 conv rows, `2·S_p` for pooling,
 //!   Section II-C) including stride shielding.
@@ -13,10 +26,13 @@
 //!   (weights, RIFM config, ROFM schedule, placement) grouped into
 //!   pipeline stages, consumed by `sim::engine`.
 
+pub mod explore;
 pub mod isa;
 pub mod mapper;
+pub mod plan;
 pub mod program;
 pub mod schedule;
 
 pub use mapper::{ArchConfig, Compiler, PoolingScheme};
+pub use plan::{MappingPlan, Placement};
 pub use program::{Program, Stage, StageKind};

@@ -1,0 +1,517 @@
+//! The mapping plane's explicit plan IR and its build phases.
+//!
+//! [`super::mapper::Compiler::compile`] used to be a monolith that
+//! fused allocation, placement, scheduling and chip partitioning in
+//! one pass. The pipeline is now four explicit phases around the
+//! [`MappingPlan`] IR:
+//!
+//! 1. **allocate** — turn every weight layer into its logical tile
+//!    array (`K² x ⌈C/N_c⌉` chains per output-channel block for conv,
+//!    `⌈C_in/N_c⌉`-tile columns for FC, a 1x1 conv array per projected
+//!    skip) and plan the per-layer duplication factors (pooling-scheme
+//!    replication and the `sync_chips` water-fill) — [`allocate`] and
+//!    [`plan_duplication`];
+//! 2. **place** — walk the allocations in layer order and pin every
+//!    chain to mesh coordinates through a pluggable [`Placement`]
+//!    strategy (serpentine baseline or column-major; both keep every
+//!    partial-sum hop mesh-local), honoring
+//!    [`ArchConfig::chip_aligned_chains`] — [`place`];
+//! 3. **schedule** — generate each placed tile's periodic ROFM program
+//!    and RIFM config (this stays in
+//!    [`super::mapper::Compiler::materialize`], which consumes the
+//!    plan);
+//! 4. **partition** — cut the placed tile span into
+//!    `tiles_per_chip`-sized chips — [`partition`].
+//!
+//! The IR is deliberately weight-free: a `MappingPlan` is a pure
+//! function of `(Network, ArchConfig)`, cheap enough for the mapping
+//! explorer (`super::explore`) to build dozens of them per model.
+
+use anyhow::Result;
+
+use crate::coordinator::mapper::ArchConfig;
+use crate::coordinator::schedule::ConvGeometry;
+use crate::model::{LayerKind, Network, TensorShape};
+use crate::noc::{column_major, serpentine, Coord};
+
+/// Pluggable placement strategy for the **place** phase: how a chain of
+/// `n` logically-consecutive tiles is pinned to mesh coordinates. Every
+/// strategy must keep consecutive chain positions mesh-adjacent (the
+/// COM locality invariant, checked by `noc::chain_is_local`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Row-serpentine (boustrophedon) — the paper's baseline layout.
+    Serpentine,
+    /// Column-serpentine: chains run down columns, transposing the
+    /// link-traffic landscape (`noc::column_major`).
+    ColumnMajor,
+}
+
+impl Placement {
+    /// Coordinates for a chain of `n` tiles starting at flat index
+    /// `start`.
+    pub fn coords(
+        self,
+        start: usize,
+        n: usize,
+        mesh_cols: usize,
+        tiles_per_chip: usize,
+    ) -> Vec<Coord> {
+        match self {
+            Placement::Serpentine => serpentine(start, n, mesh_cols, tiles_per_chip),
+            Placement::ColumnMajor => column_major(start, n, mesh_cols, tiles_per_chip),
+        }
+    }
+
+    /// Canonical config/wire name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Placement::Serpentine => "serpentine",
+            Placement::ColumnMajor => "column-major",
+        }
+    }
+
+    /// Parse a config/wire name (case-insensitive, `_`/`-`
+    /// interchangeable).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().replace('_', "-").as_str() {
+            "serpentine" => Ok(Placement::Serpentine),
+            "column-major" => Ok(Placement::ColumnMajor),
+            other => anyhow::bail!(
+                "unknown placement {other:?} (use \"serpentine\" or \"column-major\")"
+            ),
+        }
+    }
+
+    /// Every strategy, for sweeps.
+    pub const ALL: [Placement; 2] = [Placement::Serpentine, Placement::ColumnMajor];
+}
+
+/// Output of the **allocate** phase for one network layer: the logical
+/// tile array, before any coordinate is assigned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerAlloc {
+    /// Conv layer or 1x1 projection: `chains` chains (one per
+    /// output-channel block) of `chain_len * dup` tiles each.
+    Conv {
+        chains: usize,
+        chain_len: usize,
+        dup: usize,
+    },
+    /// FC layer: `columns` columns (one per output-feature block) of
+    /// `column_len` tiles each.
+    Fc { columns: usize, column_len: usize },
+    /// No tiles: pooling (fused or in-network), identity residual add,
+    /// flatten.
+    None,
+}
+
+/// One placed chain: the flat cursor position it starts at (after any
+/// chip alignment) and the mesh coordinate of every tile.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChainPlan {
+    pub start: usize,
+    pub coords: Vec<Coord>,
+}
+
+/// Placed plan for a conv (or projection) layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConvPlan {
+    /// Tiles per replica chain (`K² x ⌈C/N_c⌉`).
+    pub chain_len: usize,
+    /// Weight-duplication replicas per chain.
+    pub dup: usize,
+    /// One placed chain per output-channel block; each covers
+    /// `chain_len * dup` tiles.
+    pub chains: Vec<ChainPlan>,
+}
+
+/// Placed plan for an FC layer: one placed column per output-feature
+/// block.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FcPlan {
+    pub columns: Vec<ChainPlan>,
+}
+
+/// Placed plan for one network layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LayerPlan {
+    Conv(ConvPlan),
+    Fc(FcPlan),
+    None,
+}
+
+/// The mapping-plane IR: every weight layer's tile allocation pinned to
+/// mesh coordinates, plus the chip partition. Built by [`build`]
+/// (allocate → place → partition); consumed by
+/// [`super::mapper::Compiler::materialize`] (schedule) and inspected by
+/// the explorer and observability planes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MappingPlan {
+    pub arch: ArchConfig,
+    /// Indexed by network layer (fused pool layers are `None`; their
+    /// tiles belong to the preceding conv's plan).
+    pub layers: Vec<LayerPlan>,
+    /// Total tiles allocated, including chip-alignment padding.
+    pub total_tiles: usize,
+    /// Chips required at `arch.tiles_per_chip`.
+    pub chips: usize,
+}
+
+impl MappingPlan {
+    /// Tiles allocated to one layer (replicas included; alignment
+    /// padding is not attributed to any layer).
+    pub fn layer_tiles(&self, layer: usize) -> usize {
+        match &self.layers[layer] {
+            LayerPlan::Conv(c) => c.chains.iter().map(|ch| ch.coords.len()).sum(),
+            LayerPlan::Fc(f) => f.columns.iter().map(|col| col.coords.len()).sum(),
+            LayerPlan::None => 0,
+        }
+    }
+}
+
+/// Build the full plan: allocate → place → partition.
+pub fn build(net: &Network, arch: &ArchConfig) -> Result<MappingPlan> {
+    let shapes = net.shapes()?;
+    let dups = plan_duplication(net, &shapes, arch)?;
+    let allocs = allocate(net, &shapes, arch, &dups)?;
+    Ok(place(&allocs, arch))
+}
+
+/// Phase 1 (**allocate**, tile arrays): the logical tile array of every
+/// layer, mirroring the Section III formulas — `K² · ⌈C/N_c⌉` tiles per
+/// chain and `⌈M/N_m⌉` chains for conv, a `⌈C_in/N_c⌉ x ⌈C_out/N_m⌉`
+/// grid for FC, a 1x1 conv array per projected skip. Walks layers in
+/// network order with the same fused-pool skipping the materializer
+/// uses, so the two phases can never disagree on which layer owns which
+/// allocation.
+pub fn allocate(
+    net: &Network,
+    shapes: &[TensorShape],
+    arch: &ArchConfig,
+    dups: &[usize],
+) -> Result<Vec<LayerAlloc>> {
+    let mut allocs = vec![LayerAlloc::None; net.layers.len()];
+    let mut in_shape = net.input;
+    let mut i = 0usize;
+    while i < net.layers.len() {
+        let out_shape = shapes[i];
+        match &net.layers[i].kind {
+            LayerKind::Conv2d {
+                out_ch, kernel, ..
+            } => {
+                let cb = in_shape.c.div_ceil(arch.n_c);
+                let mb = out_ch.div_ceil(arch.n_m);
+                allocs[i] = LayerAlloc::Conv {
+                    chains: mb,
+                    chain_len: kernel * kernel * cb,
+                    dup: dups[i],
+                };
+                // a directly following pool layer is fused into this
+                // conv's hand-off and owns no tiles of its own
+                if matches!(
+                    net.layers.get(i + 1).map(|l| &l.kind),
+                    Some(LayerKind::MaxPool2d { .. }) | Some(LayerKind::AvgPool2d { .. })
+                ) {
+                    in_shape = shapes[i + 1];
+                    i += 2;
+                    continue;
+                }
+            }
+            LayerKind::Fc { out_features, .. } => {
+                allocs[i] = LayerAlloc::Fc {
+                    columns: out_features.div_ceil(arch.n_m),
+                    column_len: in_shape.c.div_ceil(arch.n_c),
+                };
+            }
+            LayerKind::ResAdd {
+                from,
+                proj: Some(p),
+            } => {
+                let src = shapes[*from];
+                allocs[i] = LayerAlloc::Conv {
+                    chains: p.out_ch.div_ceil(arch.n_m),
+                    chain_len: src.c.div_ceil(arch.n_c),
+                    dup: dups[i],
+                };
+            }
+            _ => {}
+        }
+        in_shape = out_shape;
+        i += 1;
+    }
+    Ok(allocs)
+}
+
+/// Phase 1 (**allocate**, stream rates): per-layer weight-duplication
+/// factors.
+///
+/// Without a `sync_chips` budget this returns the pooling-scheme
+/// factors only (1 under block reuse, `K_p²` for pre-pool convs under
+/// weight duplication, Fig. 4(b)). With a budget it *water-fills*:
+/// repeatedly duplicate the stage with the longest steady-state period
+/// (`⌈pixels/dup⌉`) until the chip budget is exhausted — this is how
+/// the paper's Table IV tile counts (240 x 5 for VGG-11 vs the
+/// 168-tile Section III-B minimum) and "layer synchronization"
+/// throughput arise. Each replica streams `1/dup` of the IFM, so
+/// per-image event counts are unchanged (window-halo traffic between
+/// replicas is below model resolution); only the stage period shrinks.
+pub fn plan_duplication(
+    net: &Network,
+    shapes: &[TensorShape],
+    arch: &ArchConfig,
+) -> Result<Vec<usize>> {
+    use super::mapper::PoolingScheme;
+    struct Entry {
+        layer: usize,
+        tiles: usize,
+        pixels: usize,
+        dup: usize,
+    }
+    let mut dups = vec![1usize; net.layers.len()];
+    let mut entries: Vec<Entry> = Vec::new();
+    let mut fixed = 0usize; // non-duplicable tiles (FC grids)
+    let mut in_shape = net.input;
+    let mut i = 0usize;
+    while i < net.layers.len() {
+        let layer = &net.layers[i];
+        let out_shape = shapes[i];
+        match &layer.kind {
+            LayerKind::Conv2d {
+                out_ch,
+                kernel,
+                stride,
+                padding,
+                ..
+            } => {
+                let pool_k = match net.layers.get(i + 1).map(|l| &l.kind) {
+                    Some(LayerKind::MaxPool2d { kernel, .. })
+                    | Some(LayerKind::AvgPool2d { kernel, .. }) => Some(*kernel),
+                    _ => None,
+                };
+                let g = ConvGeometry::new(*kernel, *stride, *padding, in_shape.h, in_shape.w);
+                let cb = in_shape.c.div_ceil(arch.n_c);
+                let mb = out_ch.div_ceil(arch.n_m);
+                let chain = kernel * kernel * cb;
+                let dup0 = match (pool_k, arch.pooling) {
+                    (Some(kp), PoolingScheme::WeightDuplication) => kp * kp,
+                    _ => 1,
+                };
+                entries.push(Entry {
+                    layer: i,
+                    tiles: chain * mb,
+                    pixels: g.stream_slots(),
+                    dup: dup0,
+                });
+                if pool_k.is_some() {
+                    in_shape = shapes[i + 1];
+                    i += 2;
+                    continue;
+                }
+            }
+            LayerKind::Fc { out_features, .. } => {
+                fixed +=
+                    in_shape.c.div_ceil(arch.n_c) * out_features.div_ceil(arch.n_m);
+            }
+            LayerKind::ResAdd { proj: Some(p), from } => {
+                let src = shapes[*from];
+                let g = ConvGeometry::new(1, p.stride, 0, src.h, src.w);
+                let cb = src.c.div_ceil(arch.n_c);
+                let mb = p.out_ch.div_ceil(arch.n_m);
+                entries.push(Entry {
+                    layer: i,
+                    tiles: cb * mb,
+                    pixels: g.stream_slots(),
+                    dup: 1,
+                });
+            }
+            _ => {}
+        }
+        in_shape = out_shape;
+        i += 1;
+    }
+
+    if let Some(chips) = arch.sync_chips {
+        let budget = chips * arch.tiles_per_chip;
+        let mut used = fixed + entries.iter().map(|e| e.tiles * e.dup).sum::<usize>();
+        loop {
+            // current bottleneck stage
+            let Some(bi) = (0..entries.len()).max_by_key(|&j| {
+                let e = &entries[j];
+                e.pixels.div_ceil(e.dup)
+            }) else {
+                break;
+            };
+            let e = &entries[bi];
+            // one replica cannot stream less than one pixel, and an
+            // unaffordable bottleneck means no further period gain
+            if e.dup >= e.pixels || used + e.tiles > budget {
+                break;
+            }
+            entries[bi].dup += 1;
+            used += entries[bi].tiles;
+        }
+    }
+    for e in &entries {
+        dups[e.layer] = e.dup;
+    }
+    Ok(dups)
+}
+
+/// Phase 2 (**place**) + phase 4 (**partition**): walk the allocations
+/// in layer order, advancing one flat tile cursor, aligning chains to
+/// chip boundaries when configured, and pinning every chain through the
+/// arch's [`Placement`] strategy; then cut the span into chips.
+pub fn place(allocs: &[LayerAlloc], arch: &ArchConfig) -> MappingPlan {
+    let mut layers = Vec::with_capacity(allocs.len());
+    let mut cursor = 0usize;
+    for alloc in allocs {
+        layers.push(match alloc {
+            LayerAlloc::None => LayerPlan::None,
+            LayerAlloc::Conv {
+                chains,
+                chain_len,
+                dup,
+            } => {
+                let mut placed = Vec::with_capacity(*chains);
+                for _ in 0..*chains {
+                    placed.push(place_chain(&mut cursor, chain_len * dup, arch));
+                }
+                LayerPlan::Conv(ConvPlan {
+                    chain_len: *chain_len,
+                    dup: *dup,
+                    chains: placed,
+                })
+            }
+            LayerAlloc::Fc {
+                columns,
+                column_len,
+            } => {
+                let mut placed = Vec::with_capacity(*columns);
+                for _ in 0..*columns {
+                    placed.push(place_chain(&mut cursor, *column_len, arch));
+                }
+                LayerPlan::Fc(FcPlan { columns: placed })
+            }
+        });
+    }
+    let total_tiles = cursor;
+    MappingPlan {
+        arch: *arch,
+        layers,
+        total_tiles,
+        chips: partition(total_tiles, arch),
+    }
+}
+
+fn place_chain(cursor: &mut usize, n: usize, arch: &ArchConfig) -> ChainPlan {
+    align_chain(cursor, n, arch);
+    let start = *cursor;
+    let coords = arch
+        .placement
+        .coords(start, n, arch.mesh_cols, arch.tiles_per_chip);
+    *cursor += n;
+    ChainPlan { start, coords }
+}
+
+/// Under `chip_aligned_chains`, advance the cursor to the next chip
+/// boundary when an `n`-tile chain would otherwise straddle one (chains
+/// longer than a chip must straddle regardless). Costs a few pad tiles;
+/// saves inter-chip energy (ablation `benches/ablation_chip_align.rs`).
+fn align_chain(cursor: &mut usize, n: usize, arch: &ArchConfig) {
+    if !arch.chip_aligned_chains || n > arch.tiles_per_chip {
+        return;
+    }
+    let per = arch.tiles_per_chip;
+    let used = *cursor % per;
+    if used + n > per {
+        *cursor += per - used; // pad tiles: unused crossbars
+    }
+}
+
+/// Phase 4 (**partition**): chips required for a placed tile span.
+pub fn partition(total_tiles: usize, arch: &ArchConfig) -> usize {
+    total_tiles.div_ceil(arch.tiles_per_chip).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::noc::chain_is_local;
+
+    #[test]
+    fn placement_names_roundtrip() {
+        for p in Placement::ALL {
+            assert_eq!(Placement::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(
+            Placement::parse("COLUMN_MAJOR").unwrap(),
+            Placement::ColumnMajor
+        );
+        assert!(Placement::parse("diagonal").is_err());
+    }
+
+    #[test]
+    fn plan_matches_section3_formulas() {
+        // tiny-cnn at the default arch: every chain's span is
+        // chain_len * dup, placed contiguously and mesh-locally
+        let net = zoo::tiny_cnn();
+        let arch = ArchConfig::default();
+        let plan = build(&net, &arch).unwrap();
+        assert_eq!(plan.layers.len(), net.layers.len());
+        assert!(plan.total_tiles > 0);
+        assert_eq!(plan.chips, plan.total_tiles.div_ceil(arch.tiles_per_chip));
+        let mut seen = 0usize;
+        for (li, lp) in plan.layers.iter().enumerate() {
+            match lp {
+                LayerPlan::Conv(c) => {
+                    for ch in &c.chains {
+                        assert_eq!(ch.coords.len(), c.chain_len * c.dup, "layer {li}");
+                        assert!(chain_is_local(&ch.coords), "layer {li}");
+                        assert!(ch.start >= seen);
+                        seen = ch.start + ch.coords.len();
+                    }
+                }
+                LayerPlan::Fc(f) => {
+                    for col in &f.columns {
+                        assert!(chain_is_local(&col.coords), "layer {li}");
+                        assert!(col.start >= seen);
+                        seen = col.start + col.coords.len();
+                    }
+                }
+                LayerPlan::None => {}
+            }
+        }
+        assert_eq!(seen, plan.total_tiles, "cursor accounts for every tile");
+    }
+
+    #[test]
+    fn column_major_plan_is_mesh_local_too() {
+        let net = zoo::resnet18_cifar();
+        let mut arch = ArchConfig::default();
+        arch.placement = Placement::ColumnMajor;
+        let plan = build(&net, &arch).unwrap();
+        for lp in &plan.layers {
+            if let LayerPlan::Conv(c) = lp {
+                for ch in &c.chains {
+                    assert!(chain_is_local(&ch.coords));
+                }
+            }
+        }
+        // placement changes coordinates, never the tile budget
+        let base = build(&net, &ArchConfig::default()).unwrap();
+        assert_eq!(plan.total_tiles, base.total_tiles);
+        assert_eq!(plan.chips, base.chips);
+    }
+
+    #[test]
+    fn layer_tiles_sums_replicas() {
+        let net = zoo::vgg11_cifar();
+        let arch = ArchConfig::table4(5);
+        let plan = build(&net, &arch).unwrap();
+        let sum: usize = (0..plan.layers.len()).map(|i| plan.layer_tiles(i)).sum();
+        // no alignment configured: every allocated tile belongs to a layer
+        assert_eq!(sum, plan.total_tiles);
+    }
+}

@@ -13,9 +13,14 @@
 //! * [`model`] — DNN graph IR, the model zoo (VGG-11/16/19, ResNet-18) and
 //!   an int8 functional reference (`refcompute`) used as the correctness
 //!   oracle for the simulator.
-//! * [`coordinator`] — the paper's contribution: the Domino compiler that
-//!   allocates layers onto tile arrays (`coordinator::mapper`) and
-//!   generates the periodic C-type/M-type instruction schedules
+//! * [`coordinator`] — the paper's contribution as an explicit mapping
+//!   plane: the phase-split compiler (`coordinator::plan`: allocate →
+//!   place → schedule → partition around the `MappingPlan` IR, with
+//!   pluggable serpentine/column-major `Placement`;
+//!   `coordinator::mapper` materializes plans into programs), the
+//!   cost-model-driven mapping explorer (`coordinator::explore`:
+//!   pooling × placement × mesh × alignment ranked analytically per
+//!   objective) and the periodic C-type/M-type instruction schedules
 //!   (`coordinator::schedule`, `coordinator::isa`).
 //! * [`tile`] — microarchitecture of one tile: `tile::rifm`,
 //!   `tile::rofm`, `tile::pe`.
@@ -54,7 +59,11 @@
 //!   endpoint (`serve::net`, `domino serve --listen`), an in-crate
 //!   client (`serve::client`, `domino client …`), per-model metrics
 //!   (`serve::metrics`: p50/p95/p99, counts, queue-depth gauges) and
-//!   registry persistence (`serve --registry-file`).
+//!   registry persistence (`serve --registry-file`). Mappings are
+//!   per-model: `Load` requests carry an optional
+//!   `serve::api::MappingSpec`, `ModelInfo` reports mapping +
+//!   placement stats, and the manifest persists each model's exact
+//!   `ArchConfig` across restarts.
 //! * [`eval`] — experiment drivers for every table and figure.
 
 pub mod baselines;

@@ -82,6 +82,44 @@ fn arch_from(args: &Args) -> ArchConfig {
     a
 }
 
+/// Build an optional per-model [`MappingSpec`] from the CLI mapping
+/// flags (`--pooling`, `--placement`, `--mesh-cols`, `--chip-aligned`,
+/// `--sync-chips`). Returns `None` when no mapping flag was given, so
+/// the server applies its service-wide defaults.
+fn mapping_from(args: &Args) -> Result<Option<domino::serve::api::MappingSpec>> {
+    use domino::coordinator::{Placement, PoolingScheme};
+    let mut spec = domino::serve::api::MappingSpec::default();
+    if let Some(p) = args.get("pooling") {
+        spec.pooling = Some(PoolingScheme::parse(p)?);
+    }
+    if let Some(p) = args.get("placement") {
+        spec.placement = Some(Placement::parse(p)?);
+    }
+    if let Some(m) = args.get("mesh-cols") {
+        spec.mesh_cols = Some(
+            m.parse()
+                .map_err(|_| anyhow::anyhow!("--mesh-cols must be a positive integer"))?,
+        );
+    }
+    if let Some(v) = args.get("chip-aligned") {
+        // bare `--chip-aligned` parses as "true"; an explicit value
+        // lets the flag also express *disabling* alignment against a
+        // chip-aligned server default
+        spec.chip_aligned = Some(match v {
+            "true" => true,
+            "false" => false,
+            other => bail!("--chip-aligned takes true|false (got {other:?})"),
+        });
+    }
+    if let Some(s) = args.get("sync-chips") {
+        spec.sync_chips = Some(
+            s.parse()
+                .map_err(|_| anyhow::anyhow!("--sync-chips must be a non-negative integer"))?,
+        );
+    }
+    Ok((!spec.is_empty()).then_some(spec))
+}
+
 fn net_arg(args: &Args) -> Result<domino::model::Network> {
     let from_cfg = config_from(args)?
         .and_then(|c| c.get_str("run", "model").map(String::from));
@@ -140,11 +178,11 @@ fn models_cmd(args: &Args) -> Result<()> {
                 .get(1)
                 .ok_or_else(|| anyhow::anyhow!("usage: domino models info <model> [--json]"))?;
             let net = zoo::lookup(name)?;
+            // mapping/placement stats at the requested (or default)
+            // arch: analysis-only compile, no weights
+            let desc = ModelDesc::of_network_mapped(&net, arch_from(args))?;
             if json {
-                println!(
-                    "{}",
-                    wire::encode(&wire::desc_to_json(&ModelDesc::of_network(&net)?))
-                );
+                println!("{}", wire::encode(&wire::desc_to_json(&desc)));
                 return Ok(());
             }
             println!(
@@ -156,6 +194,7 @@ fn models_cmd(args: &Args) -> Result<()> {
                 net.total_params()?,
                 net.total_macs()?
             );
+            print_mapping(&desc.mapping);
             for (i, shape) in net.shapes()?.iter().enumerate() {
                 println!("  layer {i:>2}: {shape}");
             }
@@ -165,7 +204,152 @@ fn models_cmd(args: &Args) -> Result<()> {
     }
 }
 
+/// Render the mapping/placement stats block shared by `models info`
+/// and `client info`.
+fn print_mapping(mapping: &Option<domino::serve::api::MappingDesc>) {
+    if let Some(m) = mapping {
+        println!(
+            "mapping: {} pooling, {} placement, {} mesh cols{}{}",
+            m.pooling,
+            m.placement,
+            m.mesh_cols,
+            if m.chip_aligned { ", chip-aligned" } else { "" },
+            m.sync_chips
+                .map(|c| format!(", sync budget {c} chips"))
+                .unwrap_or_default()
+        );
+        println!(
+            "  {} tiles on {} chip(s), worst link {:.1}%, est {} img/s, {} pJ/image",
+            m.tiles,
+            m.chips,
+            m.worst_link_permille as f64 / 10.0,
+            m.images_per_s,
+            m.pj_per_image
+        );
+    }
+}
+
+/// `domino map explore <model> [--objective latency|energy|tiles]
+/// [--top N] [--verify] [--load-into ADDR]` — rank candidate mappings
+/// analytically; optionally prove the winner end-to-end (compile,
+/// serve one refcompute-verified inference) or feed it straight into a
+/// running `serve --listen` endpoint.
+fn map_explore(args: &Args) -> Result<()> {
+    use domino::coordinator::explore::{self, ExploreBounds, Objective};
+
+    let name = args
+        .positional
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| "tiny-cnn".to_string());
+    let net = zoo::lookup(&name)?;
+    let objective = Objective::parse(args.get("objective").unwrap_or("latency"))?;
+    let base = arch_from(args);
+    let cands = explore::explore(&net, &base, &ExploreBounds::default(), objective)?;
+    anyhow::ensure!(!cands.is_empty(), "explorer produced no candidates");
+
+    println!(
+        "{}: {} candidate mappings ranked by {} (analytic: perfmodel + energy + worst-link)",
+        net.name,
+        cands.len(),
+        objective.name()
+    );
+    println!(
+        "{:>4} {:<18} {:<13} {:>4} {:>7} {:>7} {:>5} {:>12} {:>8} {:>10} {:>6} {:>3}",
+        "rank", "pooling", "placement", "mesh", "aligned", "tiles", "chips", "latency cyc",
+        "img/s", "pJ/img", "link%", "ok"
+    );
+    let top = args.get_usize("top", cands.len());
+    for (i, c) in cands.iter().take(top).enumerate() {
+        println!(
+            "{:>4} {:<18} {:<13} {:>4} {:>7} {:>7} {:>5} {:>12} {:>8.0} {:>10.0} {:>6.1} {:>3}",
+            i + 1,
+            c.choice.pooling.name(),
+            c.choice.placement.name(),
+            c.choice.mesh_cols,
+            if c.choice.chip_aligned { "yes" } else { "no" },
+            c.tiles,
+            c.chips,
+            c.latency_cycles,
+            c.images_per_s,
+            c.energy_per_image_j * 1e12,
+            c.worst_link_utilization * 100.0,
+            if c.feasible { "yes" } else { "NO" }
+        );
+    }
+
+    let best = &cands[0];
+    anyhow::ensure!(
+        best.feasible,
+        "no feasible mapping candidate for {} (every choice oversubscribes the links \
+         or overflows the schedule table)",
+        net.name
+    );
+    // print every mapping knob explicitly (incl. chip_aligned false
+    // and the base sync budget), so the command reproduces the scored
+    // winner even against a server whose defaults differ
+    println!(
+        "winner: domino client load {} --pooling {} --placement {} --mesh-cols {} \
+         --chip-aligned {}{}",
+        net.name,
+        best.choice.pooling.name(),
+        best.choice.placement.name(),
+        best.choice.mesh_cols,
+        best.choice.chip_aligned,
+        best.arch
+            .sync_chips
+            .map(|c| format!(" --sync-chips {c}"))
+            .unwrap_or_default()
+    );
+
+    if args.flag("verify") {
+        // prove the winner end-to-end: compile it with weights, serve
+        // one request through the real server, cross-check refcompute
+        use domino::serve::{ModelRegistry, ServeConfig, Server};
+        use std::sync::Arc;
+        let registry = Arc::new(ModelRegistry::new());
+        let mv = registry.load(&net.name, &net, best.arch)?;
+        let server = Server::start_multi(
+            ServeConfig {
+                workers: 1,
+                max_batch: 4,
+                queue_cap: 16,
+            },
+            Arc::clone(&registry),
+        )?;
+        let mut rng = Rng::new(args.get_u64("seed", 42));
+        let img = rng.i8_vec(net.input_len(), 31);
+        let r = server.infer_on(&net.name, img.clone())?;
+        anyhow::ensure!(
+            r.logits == mv.refcompute(&img)?,
+            "winner mapping diverged from refcompute"
+        );
+        server.shutdown()?;
+        println!("winner verified: served one inference bit-exact vs refcompute");
+    }
+
+    if let Some(addr) = args.get("load-into") {
+        // feed the winner straight into a running serve --listen; the
+        // spec carries the scored base's sync budget too, so the
+        // remote load reproduces exactly the mapping that was ranked
+        let mut client = domino::serve::client::Client::connect(addr)?;
+        let mut spec = domino::serve::api::MappingSpec::of_choice(&best.choice);
+        spec.sync_chips = best.arch.sync_chips.map(|c| c as u64);
+        let seed = args.get("seed").map(|s| s.parse::<u64>()).transpose()
+            .map_err(|_| anyhow::anyhow!("--seed must be a u64"))?;
+        let st = client.load_mapped(&net.name, seed, Some(spec))?;
+        println!(
+            "loaded {} v{} at the winning mapping via {addr}",
+            st.name, st.version
+        );
+    }
+    Ok(())
+}
+
 fn map(args: &Args) -> Result<()> {
+    if args.positional.first().map(String::as_str) == Some("explore") {
+        return map_explore(args);
+    }
     let net = net_arg(args)?;
     let program = Compiler::new(arch_from(args)).compile_analysis(&net)?;
     println!(
@@ -434,7 +618,7 @@ fn serve_sim(args: &Args) -> Result<()> {
         if registry.get(&net.name).is_none() {
             let mv = registry.load(&net.name, &net, arch)?;
             if let Some(man) = &manifest {
-                man.record(&net.name, &net.name, None, mv.version());
+                man.record(&net.name, &net.name, None, mv.version(), Some(arch));
             }
         }
     }
@@ -734,16 +918,26 @@ fn client_cmd(args: &Args) -> Result<()> {
         }
         "load" => {
             let model = second_positional(args, "load", addr)?;
-            let st = match args.get("seed") {
-                Some(s) => {
-                    let seed: u64 = s
-                        .parse()
-                        .map_err(|_| anyhow::anyhow!("--seed must be a u64"))?;
-                    client.load_seeded(model, seed)?
-                }
-                None => client.load(model)?,
+            let seed = match args.get("seed") {
+                Some(s) => Some(
+                    s.parse::<u64>()
+                        .map_err(|_| anyhow::anyhow!("--seed must be a u64"))?,
+                ),
+                None => None,
             };
-            println!("loaded {} v{} (id {})", st.name, st.version, st.id);
+            let mapping = mapping_from(args)?;
+            let st = client.load_mapped(model, seed, mapping)?;
+            println!(
+                "loaded {} v{} (id {}){}",
+                st.name,
+                st.version,
+                st.id,
+                if mapping.is_some() {
+                    " at the requested mapping"
+                } else {
+                    ""
+                }
+            );
             Ok(())
         }
         "swap" => {
@@ -795,6 +989,7 @@ fn client_cmd(args: &Args) -> Result<()> {
                 "{} v{} (id {}): input {} values, {} classes, {} layers, {} params, {} MACs",
                 d.name, d.version, d.id, d.input_len, d.classes, d.layers, d.params, d.macs
             );
+            print_mapping(&d.mapping);
             Ok(())
         }
         "stats" => {

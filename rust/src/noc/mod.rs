@@ -103,6 +103,34 @@ pub fn serpentine(start: usize, n: usize, mesh_cols: usize, tiles_per_chip: usiz
         .collect()
 }
 
+/// Column-serpentine placement: the same boustrophedon walk as
+/// [`serpentine`], rotated 90° — chains run *down* columns (odd columns
+/// bottom-to-top), so consecutive chain positions are still always
+/// mesh-adjacent but the traffic landscape is transposed: long chains
+/// stack their psum hops on vertical links instead of horizontal ones.
+/// This is the mapping explorer's alternative `Placement` strategy.
+pub fn column_major(start: usize, n: usize, mesh_cols: usize, tiles_per_chip: usize) -> Vec<Coord> {
+    assert!(mesh_cols > 0 && tiles_per_chip >= mesh_cols);
+    let mesh_rows = tiles_per_chip.div_ceil(mesh_cols);
+    (0..n)
+        .map(|i| {
+            let flat = start + i;
+            let chip = flat / tiles_per_chip;
+            let within = flat % tiles_per_chip;
+            let col = within / mesh_rows;
+            let row_in_col = within % mesh_rows;
+            // odd columns run bottom-to-top so column transitions stay
+            // adjacent
+            let row = if col % 2 == 0 {
+                row_in_col
+            } else {
+                mesh_rows - 1 - row_in_col
+            };
+            Coord::new(chip, row, col)
+        })
+        .collect()
+}
+
 /// Check that consecutive coords of a chain are mesh-adjacent (or cross a
 /// chip boundary, which uses the inter-chip transceivers).
 pub fn chain_is_local(coords: &[Coord]) -> bool {
@@ -154,6 +182,54 @@ mod tests {
             assert_eq!(coords.len(), n);
             assert!(chain_is_local(&coords), "{coords:?}");
         });
+    }
+
+    #[test]
+    fn column_major_chains_are_mesh_local() {
+        for_all("column_major_local", 50, |rng| {
+            let cols = rng.range(2, 16);
+            let rows = rng.range(2, 15);
+            let per_chip = cols * rows;
+            let start = rng.below(per_chip);
+            let n = rng.range(1, 3 * per_chip);
+            let coords = column_major(start, n, cols, per_chip);
+            assert_eq!(coords.len(), n);
+            assert!(chain_is_local(&coords), "{coords:?}");
+        });
+    }
+
+    #[test]
+    fn column_major_snake_layout() {
+        // 3x3 chip: column 0 top-down, column 1 reversed
+        let coords = column_major(0, 6, 3, 9);
+        assert_eq!(coords[0], Coord::new(0, 0, 0));
+        assert_eq!(coords[2], Coord::new(0, 2, 0));
+        assert_eq!(coords[3], Coord::new(0, 2, 1));
+        assert_eq!(coords[5], Coord::new(0, 0, 1));
+    }
+
+    #[test]
+    fn column_major_crosses_chips() {
+        // 4 tiles/chip (2x2): a 6-tile chain spans 2 chips.
+        let coords = column_major(0, 6, 2, 4);
+        assert_eq!(coords[3].chip, 0);
+        assert_eq!(coords[4].chip, 1);
+        assert_eq!(coords[4], Coord::new(1, 0, 0));
+    }
+
+    #[test]
+    fn column_major_stays_inside_the_serpentine_bounding_box() {
+        // default chip geometry: 240 tiles as 15 rows x 16 cols either way
+        let s = serpentine(0, 240, 16, 240);
+        let c = column_major(0, 240, 16, 240);
+        let bound = |v: &[Coord]| {
+            (
+                v.iter().map(|x| x.row).max().unwrap(),
+                v.iter().map(|x| x.col).max().unwrap(),
+            )
+        };
+        assert_eq!(bound(&s), (14, 15));
+        assert_eq!(bound(&c), (14, 15));
     }
 
     #[test]

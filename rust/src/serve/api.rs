@@ -15,9 +15,11 @@
 //! [`RegistryManifest`] is the persistence satellite: with
 //! `serve --registry-file PATH`, every API-plane registry mutation
 //! rewrites a small JSON manifest (name, zoo id, weight seed,
-//! version), and a restarted server reloads the exact model set —
-//! versions and weights bit-identical, because weights are a pure
-//! function of (network, seed).
+//! version, and the model's full per-model [`ArchConfig`]), and a
+//! restarted server reloads the exact model set — versions, weights
+//! *and mappings* bit-identical, because weights are a pure function
+//! of (network, seed) and the program is a pure function of
+//! (network, weights, arch).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -25,12 +27,89 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::coordinator::ArchConfig;
+use crate::coordinator::explore::MappingChoice;
+use crate::coordinator::{ArchConfig, Placement, PoolingScheme, Program};
 use crate::model::{zoo, Network};
 
 use super::metrics::ModelMetricsSnapshot;
 use super::registry::{ModelRegistry, ModelStamp, ModelVersion};
 use super::server::Server;
+
+/// Per-model mapping overrides carried by `Load`/`LoadSeeded`: every
+/// field is optional and falls back to the service-wide default arch.
+/// This is how an explorer winner (`domino map explore`) travels over
+/// the wire into a registry load.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MappingSpec {
+    pub pooling: Option<PoolingScheme>,
+    pub placement: Option<Placement>,
+    pub mesh_cols: Option<u64>,
+    pub chip_aligned: Option<bool>,
+    pub sync_chips: Option<u64>,
+}
+
+impl MappingSpec {
+    /// A fully-specified spec carrying an explorer choice. A
+    /// `MappingChoice` does not sweep `sync_chips`, so that field is
+    /// left `None` here — when the scored candidate's base arch had a
+    /// duplication budget, copy it in (`spec.sync_chips =
+    /// cand.arch.sync_chips.map(..)`) before shipping the spec to a
+    /// server whose defaults may differ, or the loaded mapping will
+    /// not match the ranked table.
+    pub fn of_choice(c: &MappingChoice) -> Self {
+        Self {
+            pooling: Some(c.pooling),
+            placement: Some(c.placement),
+            mesh_cols: Some(c.mesh_cols as u64),
+            chip_aligned: Some(c.chip_aligned),
+            sync_chips: None,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        *self == Self::default()
+    }
+
+    /// Apply the overrides onto the service default, validating the
+    /// resulting geometry.
+    pub fn apply(&self, mut arch: ArchConfig) -> Result<ArchConfig> {
+        if let Some(p) = self.pooling {
+            arch.pooling = p;
+        }
+        if let Some(p) = self.placement {
+            arch.placement = p;
+        }
+        if let Some(m) = self.mesh_cols {
+            // checked conversion: a value past usize must be the typed
+            // range error below, not a silent truncation on 32-bit
+            arch.mesh_cols = usize::try_from(m).unwrap_or(usize::MAX);
+        }
+        if let Some(b) = self.chip_aligned {
+            arch.chip_aligned_chains = b;
+        }
+        if let Some(s) = self.sync_chips {
+            // bound the budget so `chips * tiles_per_chip` (the
+            // water-fill arithmetic) cannot overflow on a hostile
+            // request — a typed error, not a panic
+            let chips = usize::try_from(s).ok().filter(|c| {
+                c.checked_mul(arch.tiles_per_chip).is_some()
+            });
+            anyhow::ensure!(
+                chips.is_some(),
+                "mapping: sync_chips {s} is out of range for {} tiles/chip",
+                arch.tiles_per_chip
+            );
+            arch.sync_chips = chips;
+        }
+        anyhow::ensure!(
+            arch.mesh_cols > 0 && arch.mesh_cols <= arch.tiles_per_chip,
+            "mapping: mesh_cols {} must be in 1..={} (tiles per chip)",
+            arch.mesh_cols,
+            arch.tiles_per_chip
+        );
+        Ok(arch)
+    }
+}
 
 /// A typed request on the service API. `Infer` is the data plane;
 /// `Load`/`LoadSeeded`/`Swap`/`Unload` the admin plane (zoo model
@@ -42,10 +121,18 @@ pub enum Request {
     /// (exactly like `Server::submit`); `Some(name)` routes by name.
     Infer { model: Option<String>, image: Vec<i8> },
     /// Compile and publish a zoo model under its canonical name, with
-    /// the compiler's deterministic default weight seed.
-    Load { model: String },
+    /// the compiler's deterministic default weight seed and an
+    /// optional per-model mapping.
+    Load {
+        model: String,
+        mapping: Option<MappingSpec>,
+    },
     /// [`Request::Load`] with an explicit weight seed.
-    LoadSeeded { model: String, seed: u64 },
+    LoadSeeded {
+        model: String,
+        seed: u64,
+        mapping: Option<MappingSpec>,
+    },
     /// Hot-swap a loaded model to a freshly compiled version;
     /// `seed: Some(_)` makes the swap observable in the outputs.
     Swap { model: String, seed: Option<u64> },
@@ -88,9 +175,56 @@ pub struct InferReply {
     pub exec_us: u64,
 }
 
+/// The mapping a model runs at, plus its analytic placement stats —
+/// the observability plane's view of the mapping plane. Integer-only
+/// so it is wire-exact (`worst_link_permille` is load x1000;
+/// `pj_per_image` is picojoules).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MappingDesc {
+    pub pooling: String,
+    pub placement: String,
+    pub mesh_cols: u64,
+    pub chip_aligned: bool,
+    pub sync_chips: Option<u64>,
+    pub tiles: u64,
+    pub chips: u64,
+    /// Worst offered mesh-link load across both router networks, in
+    /// permille of a 40 Gb/s link (1000 = saturated).
+    pub worst_link_permille: u64,
+    /// Analytic pipelined throughput (perfmodel), rounded.
+    pub images_per_s: u64,
+    /// Analytic energy per image (generic SRAM CIM model), picojoules.
+    pub pj_per_image: u64,
+}
+
+impl MappingDesc {
+    /// Describe a compiled program's mapping. Weight-independent, so
+    /// analysis-only (skeleton) programs work too. The numbers come
+    /// from `coordinator::explore::analyze` — the same function the
+    /// explorer scores candidates with, so `ModelInfo` can never
+    /// disagree with the ranked table.
+    pub fn of_program(p: &Program) -> Result<Self> {
+        let s = crate::coordinator::explore::analyze(p)?;
+        Ok(Self {
+            pooling: p.arch.pooling.name().to_string(),
+            placement: p.arch.placement.name().to_string(),
+            mesh_cols: p.arch.mesh_cols as u64,
+            chip_aligned: p.arch.chip_aligned_chains,
+            sync_chips: p.arch.sync_chips.map(|c| c as u64),
+            tiles: s.tiles as u64,
+            chips: s.chips as u64,
+            worst_link_permille: (s.worst_link_utilization * 1000.0).round() as u64,
+            images_per_s: s.images_per_s.round() as u64,
+            pj_per_image: (s.energy_per_image_j * 1e12).round() as u64,
+        })
+    }
+}
+
 /// Static description of a model. `id`/`version` are 0 when the model
 /// is described from the zoo rather than a live registry entry
-/// (`domino models --json`).
+/// (`domino models --json`); `mapping` is present for live registry
+/// entries and for zoo descriptions computed at an explicit arch
+/// ([`ModelDesc::of_network_mapped`]).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ModelDesc {
     pub name: String,
@@ -101,6 +235,7 @@ pub struct ModelDesc {
     pub layers: u64,
     pub params: u64,
     pub macs: u64,
+    pub mapping: Option<MappingDesc>,
 }
 
 impl ModelDesc {
@@ -115,15 +250,28 @@ impl ModelDesc {
             layers: net.layers.len() as u64,
             params: net.total_params()?,
             macs: net.total_macs()?,
+            mapping: None,
         })
     }
 
-    /// Describe a live registry entry.
+    /// [`Self::of_network`] plus the mapping stats the network would
+    /// have at `arch` (analysis-only compile; `domino models info`).
+    pub fn of_network_mapped(net: &Network, arch: ArchConfig) -> Result<Self> {
+        let mut d = Self::of_network(net)?;
+        let program = crate::coordinator::Compiler::new(arch).compile_analysis(net)?;
+        d.mapping = Some(MappingDesc::of_program(&program)?);
+        Ok(d)
+    }
+
+    /// Describe a live registry entry, including its actual mapping
+    /// (cached on the version — observability polling does not rerun
+    /// the analysis).
     pub fn of_version(mv: &ModelVersion) -> Result<Self> {
         let mut d = Self::of_network(&mv.program().net)?;
         d.name = mv.name().to_string();
         d.id = mv.id();
         d.version = mv.version();
+        d.mapping = Some(mv.mapping_desc()?.clone());
         Ok(d)
     }
 }
@@ -140,7 +288,11 @@ pub struct StatsReply {
 }
 
 /// One persisted registry entry: enough to recompile the exact same
-/// model version after a restart.
+/// model version after a restart — including its full per-model
+/// [`ArchConfig`], so a model loaded at a non-default mapping comes
+/// back at *that* mapping (restoring with the service-wide default
+/// used to silently re-map it, changing all its energy/latency
+/// numbers across a restart).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ManifestEntry {
     /// Canonical zoo name to recompile from.
@@ -149,6 +301,10 @@ pub struct ManifestEntry {
     pub seed: Option<u64>,
     /// Version to republish at (preserved across restarts).
     pub version: u64,
+    /// The exact arch the model was compiled with. `None` only for
+    /// manifests written before mappings were persisted; those restore
+    /// at the service-wide default.
+    pub arch: Option<ArchConfig>,
 }
 
 /// The on-disk registry manifest behind `serve --registry-file PATH`:
@@ -204,6 +360,10 @@ impl RegistryManifest {
                 zoo: wire::str_field(m, "zoo")?,
                 seed: wire::opt_u64_field(m, "seed")?,
                 version: wire::u64_field(m, "version")?,
+                arch: match m.get("arch") {
+                    None | Some(Json::Null) => None,
+                    Some(a) => Some(wire::arch_from_json(a)?),
+                },
             };
             entries.insert(name, entry);
         }
@@ -226,6 +386,13 @@ impl RegistryManifest {
                         },
                     ),
                     ("version".to_string(), Json::Int(e.version as i128)),
+                    (
+                        "arch".to_string(),
+                        match &e.arch {
+                            Some(a) => super::wire::arch_to_json(a),
+                            None => Json::Null,
+                        },
+                    ),
                 ])
             })
             .collect();
@@ -233,14 +400,23 @@ impl RegistryManifest {
     }
 
     /// Record (or update) one entry in memory; call [`Self::save`] to
-    /// persist.
-    pub fn record(&self, name: &str, zoo: &str, seed: Option<u64>, version: u64) {
+    /// persist. `arch` is the exact config the model was compiled
+    /// with, so a restart republishes the same mapping.
+    pub fn record(
+        &self,
+        name: &str,
+        zoo: &str,
+        seed: Option<u64>,
+        version: u64,
+        arch: Option<ArchConfig>,
+    ) {
         self.entries.lock().unwrap().insert(
             name.to_string(),
             ManifestEntry {
                 zoo: zoo.to_string(),
                 seed,
                 version,
+                arch,
             },
         );
     }
@@ -267,10 +443,12 @@ impl RegistryManifest {
     }
 
     /// Replay every entry into `registry` (recompiling each model from
-    /// its recorded zoo name and seed at its recorded version). Names
-    /// already loaded are left untouched. Returns how many models were
+    /// its recorded zoo name and seed at its recorded version and
+    /// recorded per-model arch — `default_arch` is used only for
+    /// legacy entries that predate mapping persistence). Names already
+    /// loaded are left untouched. Returns how many models were
     /// restored.
-    pub fn restore(&self, registry: &ModelRegistry, arch: ArchConfig) -> Result<usize> {
+    pub fn restore(&self, registry: &ModelRegistry, default_arch: ArchConfig) -> Result<usize> {
         let entries = self.entries.lock().unwrap().clone();
         let mut restored = 0;
         for (name, e) in &entries {
@@ -280,7 +458,7 @@ impl RegistryManifest {
             let net = zoo::lookup(&e.zoo)
                 .with_context(|| format!("restore manifest entry {name:?}"))?;
             registry
-                .load_restored(name, &net, arch, e.seed, e.version)
+                .load_restored(name, &net, e.arch.unwrap_or(default_arch), e.seed, e.version)
                 .with_context(|| format!("restore manifest entry {name:?}"))?;
             restored += 1;
         }
@@ -334,8 +512,12 @@ impl Service {
     pub fn dispatch(&self, req: Request) -> Response {
         let r = match req {
             Request::Infer { model, image } => self.do_infer(model, image),
-            Request::Load { model } => self.do_load(&model, None),
-            Request::LoadSeeded { model, seed } => self.do_load(&model, Some(seed)),
+            Request::Load { model, mapping } => self.do_load(&model, None, mapping.as_ref()),
+            Request::LoadSeeded {
+                model,
+                seed,
+                mapping,
+            } => self.do_load(&model, Some(seed), mapping.as_ref()),
             Request::Swap { model, seed } => self.do_swap(&model, seed),
             Request::Unload { model } => self.do_unload(&model),
             Request::ListModels => self.do_list(),
@@ -404,12 +586,21 @@ impl Service {
         }))
     }
 
-    fn do_load(&self, model: &str, seed: Option<u64>) -> Result<Response> {
+    fn do_load(
+        &self,
+        model: &str,
+        seed: Option<u64>,
+        mapping: Option<&MappingSpec>,
+    ) -> Result<Response> {
         let reg = self.registry()?;
         let net = zoo::lookup(model)?;
-        let mv = reg.load_seeded(&net.name, &net, self.arch, seed)?;
+        let arch = match mapping {
+            Some(spec) => spec.apply(self.arch)?,
+            None => self.arch,
+        };
+        let mv = reg.load_seeded(&net.name, &net, arch, seed)?;
         if let Some(man) = &self.manifest {
-            man.record(&net.name, &net.name, seed, mv.version());
+            man.record(&net.name, &net.name, seed, mv.version(), Some(arch));
         }
         self.persist()?;
         Ok(Response::Loaded(mv.stamp()))
@@ -418,9 +609,16 @@ impl Service {
     fn do_swap(&self, model: &str, seed: Option<u64>) -> Result<Response> {
         let reg = self.registry()?;
         let net = zoo::lookup(model)?;
-        let mv = reg.swap_seeded(&net.name, &net, self.arch, seed)?;
+        // a swap preserves the model's current per-model mapping —
+        // recompiling at the service-wide default would silently
+        // re-map a model loaded with a custom one
+        let arch = reg
+            .get(&net.name)
+            .map(|mv| mv.program().arch)
+            .unwrap_or(self.arch);
+        let mv = reg.swap_seeded(&net.name, &net, arch, seed)?;
         if let Some(man) = &self.manifest {
-            man.record(&net.name, &net.name, seed, mv.version());
+            man.record(&net.name, &net.name, seed, mv.version(), Some(arch));
         }
         self.persist()?;
         Ok(Response::Swapped(mv.stamp()))
@@ -498,6 +696,7 @@ mod tests {
         let stamp = match service.dispatch(Request::LoadSeeded {
             model: "TINY_RESNET".into(),
             seed: 0xAB,
+            mapping: None,
         }) {
             Response::Loaded(s) => s,
             other => panic!("expected Loaded, got {other:?}"),
@@ -613,8 +812,8 @@ mod tests {
         // first life: load + swap through the manifest
         let man = RegistryManifest::open(&path).unwrap();
         assert!(man.is_empty());
-        man.record("tiny-mlp", "tiny-mlp", Some(0xAA), 1);
-        man.record("tiny-resnet", "tiny-resnet", None, 3);
+        man.record("tiny-mlp", "tiny-mlp", Some(0xAA), 1, Some(ArchConfig::default()));
+        man.record("tiny-resnet", "tiny-resnet", None, 3, None);
         man.save().unwrap();
         assert!(path.exists());
 
@@ -639,6 +838,152 @@ mod tests {
 
         // restore skips names that are already loaded
         assert_eq!(man2.restore(&registry, ArchConfig::default()).unwrap(), 0);
+
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_with_mapping_applies_and_reports_it() {
+        let service = start_service();
+        let spec = MappingSpec {
+            pooling: Some(PoolingScheme::WeightDuplication),
+            placement: Some(Placement::ColumnMajor),
+            mesh_cols: Some(12),
+            chip_aligned: Some(true),
+            sync_chips: None,
+        };
+        match service.dispatch(Request::LoadSeeded {
+            model: "tiny-cnn".into(),
+            seed: 0x99,
+            mapping: Some(spec),
+        }) {
+            Response::Loaded(st) => assert_eq!(&*st.name, "tiny-cnn"),
+            other => panic!("expected Loaded, got {other:?}"),
+        }
+        let mv = service
+            .server()
+            .registry()
+            .unwrap()
+            .get("tiny-cnn")
+            .unwrap();
+        let arch = mv.program().arch;
+        assert_eq!(arch.pooling, PoolingScheme::WeightDuplication);
+        assert_eq!(arch.placement, Placement::ColumnMajor);
+        assert_eq!(arch.mesh_cols, 12);
+        assert!(arch.chip_aligned_chains);
+
+        // the mapped model still serves refcompute-exact responses
+        let image = vec![2i8; mv.input_len()];
+        match service.dispatch(Request::Infer {
+            model: Some("tiny-cnn".into()),
+            image: image.clone(),
+        }) {
+            Response::Infer(r) => assert_eq!(r.logits, mv.refcompute(&image).unwrap()),
+            other => panic!("expected Infer, got {other:?}"),
+        }
+
+        // ModelInfo reports the mapping + placement stats
+        let info = match service.dispatch(Request::ModelInfo {
+            model: "tiny-cnn".into(),
+        }) {
+            Response::Info(d) => d,
+            other => panic!("expected Info, got {other:?}"),
+        };
+        let m = info.mapping.expect("live models report their mapping");
+        assert_eq!(m.pooling, "weight-duplication");
+        assert_eq!(m.placement, "column-major");
+        assert_eq!(m.mesh_cols, 12);
+        assert!(m.chip_aligned);
+        assert_eq!(m.tiles, mv.program().total_tiles as u64);
+        assert!(m.images_per_s > 0 && m.pj_per_image > 0);
+
+        // a swap keeps the custom mapping instead of re-applying the
+        // service default
+        match service.dispatch(Request::Swap {
+            model: "tiny-cnn".into(),
+            seed: Some(0xA1),
+        }) {
+            Response::Swapped(st) => assert_eq!(st.version, 2),
+            other => panic!("expected Swapped, got {other:?}"),
+        }
+        let mv2 = service
+            .server()
+            .registry()
+            .unwrap()
+            .get("tiny-cnn")
+            .unwrap();
+        assert_eq!(mv2.program().arch, arch, "swap must preserve the mapping");
+
+        // a geometry that cannot fit is a typed error, not a panic
+        match service.dispatch(Request::Load {
+            model: "tiny-mlp".into(),
+            mapping: Some(MappingSpec {
+                mesh_cols: Some(100_000),
+                ..MappingSpec::default()
+            }),
+        }) {
+            Response::Error { message } => assert!(message.contains("mesh_cols"), "{message}"),
+            other => panic!("expected Error, got {other:?}"),
+        }
+        // ...and so is a sync budget whose tile arithmetic would
+        // overflow (hostile wire input must never panic the server)
+        match service.dispatch(Request::Load {
+            model: "tiny-mlp".into(),
+            mapping: Some(MappingSpec {
+                sync_chips: Some(u64::MAX),
+                ..MappingSpec::default()
+            }),
+        }) {
+            Response::Error { message } => assert!(message.contains("sync_chips"), "{message}"),
+            other => panic!("expected Error, got {other:?}"),
+        }
+
+        service.shutdown().unwrap();
+    }
+
+    /// The satellite regression: two models at *different* mappings
+    /// must restore at their own mappings, not the service-wide
+    /// default (the old manifest dropped the per-model arch entirely).
+    #[test]
+    fn manifest_restores_two_models_at_their_own_mappings() {
+        let path = std::env::temp_dir().join(format!(
+            "domino-manifest-mapping-test-{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+
+        let default_arch = ArchConfig::default();
+        let mut custom = default_arch;
+        custom.pooling = PoolingScheme::WeightDuplication;
+        custom.placement = Placement::ColumnMajor;
+        custom.mesh_cols = 12;
+
+        let man = RegistryManifest::open(&path).unwrap();
+        man.record("tiny-cnn", "tiny-cnn", Some(0x1), 1, Some(custom));
+        man.record("tiny-resnet", "tiny-resnet", Some(0x2), 2, Some(default_arch));
+        man.save().unwrap();
+
+        let man2 = RegistryManifest::open(&path).unwrap();
+        let registry = ModelRegistry::new();
+        assert_eq!(man2.restore(&registry, default_arch).unwrap(), 2);
+        let cnn = registry.get("tiny-cnn").unwrap();
+        let resnet = registry.get("tiny-resnet").unwrap();
+        assert_eq!(
+            cnn.program().arch, custom,
+            "custom mapping must survive the restart"
+        );
+        assert_eq!(resnet.program().arch, default_arch);
+        assert_ne!(cnn.program().arch, resnet.program().arch);
+        assert_eq!(resnet.version(), 2);
+
+        // and the restored custom-mapped model is the same pure
+        // function of (net, seed, arch): weights + outputs bit-equal
+        let direct = ModelRegistry::new();
+        let want = direct
+            .load_seeded("tiny-cnn", &zoo::tiny_cnn(), custom, Some(0x1))
+            .unwrap();
+        let img = vec![4i8; cnn.input_len()];
+        assert_eq!(cnn.refcompute(&img).unwrap(), want.refcompute(&img).unwrap());
 
         let _ = std::fs::remove_file(&path);
     }

@@ -12,7 +12,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::api::{InferReply, ModelDesc, Request, Response, StatsReply};
+use super::api::{InferReply, MappingSpec, ModelDesc, Request, Response, StatsReply};
 use super::registry::ModelStamp;
 use super::wire;
 
@@ -70,26 +70,41 @@ impl Client {
         }
     }
 
-    /// Admin plane: load a zoo model (compiler-default weight seed).
+    /// Admin plane: load a zoo model (compiler-default weight seed,
+    /// service-default mapping).
     pub fn load(&mut self, model: &str) -> Result<ModelStamp> {
-        let resp = self.call(&Request::Load {
-            model: model.to_string(),
-        })?;
-        match Self::ok(resp)? {
-            Response::Loaded(st) => Ok(st),
-            other => bail!("unexpected response to load: {other:?}"),
-        }
+        self.load_mapped(model, None, None)
     }
 
     /// Admin plane: load a zoo model with an explicit weight seed.
     pub fn load_seeded(&mut self, model: &str, seed: u64) -> Result<ModelStamp> {
-        let resp = self.call(&Request::LoadSeeded {
-            model: model.to_string(),
-            seed,
-        })?;
-        match Self::ok(resp)? {
+        self.load_mapped(model, Some(seed), None)
+    }
+
+    /// Admin plane: load a zoo model with an optional weight seed and
+    /// an optional per-model mapping (e.g. a `domino map explore`
+    /// winner). Mapping fields left `None` fall back to the server's
+    /// service-wide defaults.
+    pub fn load_mapped(
+        &mut self,
+        model: &str,
+        seed: Option<u64>,
+        mapping: Option<MappingSpec>,
+    ) -> Result<ModelStamp> {
+        let req = match seed {
+            Some(seed) => Request::LoadSeeded {
+                model: model.to_string(),
+                seed,
+                mapping,
+            },
+            None => Request::Load {
+                model: model.to_string(),
+                mapping,
+            },
+        };
+        match Self::ok(self.call(&req)?)? {
             Response::Loaded(st) => Ok(st),
-            other => bail!("unexpected response to load_seeded: {other:?}"),
+            other => bail!("unexpected response to load: {other:?}"),
         }
     }
 

@@ -7,10 +7,11 @@
 use std::collections::btree_map::Entry;
 use std::collections::{BTreeMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, OnceLock, RwLock};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::api::MappingDesc;
 use crate::coordinator::{ArchConfig, Compiler, Program};
 use crate::model::refcompute::Weights;
 use crate::model::Network;
@@ -54,6 +55,10 @@ pub struct ModelVersion {
     version: u64,
     program: Arc<Program>,
     weights: Option<Weights>,
+    /// Mapping + placement stats, computed lazily once (the version is
+    /// immutable, so `ModelInfo`/`ListModels` polling must not rerun
+    /// the perfmodel + NoC flow analysis per request).
+    mapping_desc: OnceLock<MappingDesc>,
 }
 
 impl ModelVersion {
@@ -74,6 +79,24 @@ impl ModelVersion {
 
     pub fn program(&self) -> &Arc<Program> {
         &self.program
+    }
+
+    /// The arch (mapping) this version's program was compiled at —
+    /// per-model, not the service-wide default.
+    pub fn arch(&self) -> ArchConfig {
+        self.program.arch
+    }
+
+    /// Mapping + placement stats of this version's program, computed
+    /// on first use and cached for the version's lifetime.
+    pub fn mapping_desc(&self) -> Result<&MappingDesc> {
+        if let Some(m) = self.mapping_desc.get() {
+            return Ok(m);
+        }
+        let m = MappingDesc::of_program(&self.program)?;
+        // a concurrent initializer may have won the race; both computed
+        // the same pure function of the immutable program
+        Ok(self.mapping_desc.get_or_init(|| m))
     }
 
     /// The weights this version's program was compiled with (for
@@ -176,6 +199,7 @@ impl ModelRegistry {
             version,
             program,
             weights,
+            mapping_desc: OnceLock::new(),
         })
     }
 

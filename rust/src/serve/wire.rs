@@ -31,6 +31,7 @@ use anyhow::{bail, Context, Result};
 use super::api;
 use super::metrics::ModelMetricsSnapshot;
 use super::registry::ModelStamp;
+use crate::coordinator::{ArchConfig, Placement, PoolingScheme};
 
 /// Hard cap on a single frame's payload (64 MiB) — far above any real
 /// request (the largest zoo input is ~150 k int8 values, well under
@@ -464,6 +465,22 @@ pub fn opt_u64_field(v: &Json, key: &str) -> Result<Option<u64>> {
     }
 }
 
+pub fn bool_field(v: &Json, key: &str) -> Result<bool> {
+    match field(v, key)? {
+        Json::Bool(b) => Ok(*b),
+        _ => bail!("field {key:?} must be a boolean"),
+    }
+}
+
+/// Missing or `null` reads as `None`.
+pub fn opt_bool_field(v: &Json, key: &str) -> Result<Option<bool>> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Bool(b)) => Ok(Some(*b)),
+        Some(_) => bail!("field {key:?} must be a boolean or null"),
+    }
+}
+
 /// An array of integers, each within i8 range.
 pub fn i8_vec_field(v: &Json, key: &str) -> Result<Vec<i8>> {
     let arr = field(v, key)?
@@ -504,6 +521,101 @@ fn i8s(v: &[i8]) -> Json {
     Json::Arr(v.iter().map(|&b| Json::Int(b as i128)).collect())
 }
 
+fn opt_s(x: Option<&str>) -> Json {
+    x.map(s).unwrap_or(Json::Null)
+}
+
+fn opt_b(x: Option<bool>) -> Json {
+    x.map(Json::Bool).unwrap_or(Json::Null)
+}
+
+/// The optional per-model mapping carried by `load` / `load_seeded`.
+pub fn mapping_spec_to_json(m: &api::MappingSpec) -> Json {
+    obj(vec![
+        ("pooling", opt_s(m.pooling.map(PoolingScheme::name))),
+        ("placement", opt_s(m.placement.map(Placement::name))),
+        ("mesh_cols", opt_u(m.mesh_cols)),
+        ("chip_aligned", opt_b(m.chip_aligned)),
+        ("sync_chips", opt_u(m.sync_chips)),
+    ])
+}
+
+pub fn mapping_spec_from_json(v: &Json) -> Result<api::MappingSpec> {
+    Ok(api::MappingSpec {
+        pooling: opt_str_field(v, "pooling")?
+            .map(|p| PoolingScheme::parse(&p))
+            .transpose()?,
+        placement: opt_str_field(v, "placement")?
+            .map(|p| Placement::parse(&p))
+            .transpose()?,
+        mesh_cols: opt_u64_field(v, "mesh_cols")?,
+        chip_aligned: opt_bool_field(v, "chip_aligned")?,
+        sync_chips: opt_u64_field(v, "sync_chips")?,
+    })
+}
+
+fn opt_mapping_field(v: &Json) -> Result<Option<api::MappingSpec>> {
+    match v.get("mapping") {
+        None | Some(Json::Null) => Ok(None),
+        Some(m) => Ok(Some(mapping_spec_from_json(m)?)),
+    }
+}
+
+/// A complete [`ArchConfig`] record — the registry manifest's
+/// per-model mapping persistence.
+pub fn arch_to_json(a: &ArchConfig) -> Json {
+    obj(vec![
+        ("n_c", u(a.n_c as u64)),
+        ("n_m", u(a.n_m as u64)),
+        ("tiles_per_chip", u(a.tiles_per_chip as u64)),
+        ("mesh_cols", u(a.mesh_cols as u64)),
+        ("pooling", s(a.pooling.name())),
+        ("placement", s(a.placement.name())),
+        ("chip_aligned", Json::Bool(a.chip_aligned_chains)),
+        ("sync_chips", opt_u(a.sync_chips.map(|c| c as u64))),
+    ])
+}
+
+pub fn arch_from_json(v: &Json) -> Result<ArchConfig> {
+    let usize_field = |key: &str| -> Result<usize> {
+        usize::try_from(u64_field(v, key)?)
+            .map_err(|_| anyhow::anyhow!("field {key:?} out of range"))
+    };
+    let a = ArchConfig {
+        n_c: usize_field("n_c")?,
+        n_m: usize_field("n_m")?,
+        tiles_per_chip: usize_field("tiles_per_chip")?,
+        mesh_cols: usize_field("mesh_cols")?,
+        pooling: PoolingScheme::parse(&str_field(v, "pooling")?)?,
+        placement: Placement::parse(&str_field(v, "placement")?)?,
+        chip_aligned_chains: bool_field(v, "chip_aligned")?,
+        sync_chips: match opt_u64_field(v, "sync_chips")? {
+            None => None,
+            Some(c) => Some(
+                usize::try_from(c)
+                    .map_err(|_| anyhow::anyhow!("field \"sync_chips\" out of range"))?,
+            ),
+        },
+    };
+    // validate the geometry here, at the parse boundary: a corrupted
+    // or hand-edited manifest must surface as a typed error, not as a
+    // panic inside the placement asserts or a divide-by-zero in the
+    // water-fill when the entry is restored
+    if a.n_c == 0
+        || a.n_m == 0
+        || a.mesh_cols == 0
+        || a.tiles_per_chip < a.mesh_cols
+        || a.sync_chips
+            .is_some_and(|c| c.checked_mul(a.tiles_per_chip).is_none())
+    {
+        bail!(
+            "arch record has invalid geometry (n_c/n_m/mesh_cols must be > 0, \
+             tiles_per_chip >= mesh_cols, sync_chips within tile arithmetic range)"
+        );
+    }
+    Ok(a)
+}
+
 pub fn request_to_json(req: &api::Request) -> Json {
     use api::Request as R;
     match req {
@@ -512,11 +624,32 @@ pub fn request_to_json(req: &api::Request) -> Json {
             ("model", model.as_deref().map(s).unwrap_or(Json::Null)),
             ("image", i8s(image)),
         ]),
-        R::Load { model } => obj(vec![("type", s("load")), ("model", s(model))]),
-        R::LoadSeeded { model, seed } => obj(vec![
+        R::Load { model, mapping } => obj(vec![
+            ("type", s("load")),
+            ("model", s(model)),
+            (
+                "mapping",
+                mapping
+                    .as_ref()
+                    .map(mapping_spec_to_json)
+                    .unwrap_or(Json::Null),
+            ),
+        ]),
+        R::LoadSeeded {
+            model,
+            seed,
+            mapping,
+        } => obj(vec![
             ("type", s("load_seeded")),
             ("model", s(model)),
             ("seed", u(*seed)),
+            (
+                "mapping",
+                mapping
+                    .as_ref()
+                    .map(mapping_spec_to_json)
+                    .unwrap_or(Json::Null),
+            ),
         ]),
         R::Swap { model, seed } => obj(vec![
             ("type", s("swap")),
@@ -541,10 +674,12 @@ pub fn decode_request(frame: &[u8]) -> Result<api::Request> {
         }),
         "load" => Ok(api::Request::Load {
             model: str_field(&v, "model")?,
+            mapping: opt_mapping_field(&v)?,
         }),
         "load_seeded" => Ok(api::Request::LoadSeeded {
             model: str_field(&v, "model")?,
             seed: u64_field(&v, "seed")?,
+            mapping: opt_mapping_field(&v)?,
         }),
         "swap" => Ok(api::Request::Swap {
             model: str_field(&v, "model")?,
@@ -582,6 +717,36 @@ fn stamp_from_json(v: &Json) -> Result<ModelStamp> {
     })
 }
 
+fn mapping_desc_to_json(m: &api::MappingDesc) -> Json {
+    obj(vec![
+        ("pooling", s(&m.pooling)),
+        ("placement", s(&m.placement)),
+        ("mesh_cols", u(m.mesh_cols)),
+        ("chip_aligned", Json::Bool(m.chip_aligned)),
+        ("sync_chips", opt_u(m.sync_chips)),
+        ("tiles", u(m.tiles)),
+        ("chips", u(m.chips)),
+        ("worst_link_permille", u(m.worst_link_permille)),
+        ("images_per_s", u(m.images_per_s)),
+        ("pj_per_image", u(m.pj_per_image)),
+    ])
+}
+
+fn mapping_desc_from_json(v: &Json) -> Result<api::MappingDesc> {
+    Ok(api::MappingDesc {
+        pooling: str_field(v, "pooling")?,
+        placement: str_field(v, "placement")?,
+        mesh_cols: u64_field(v, "mesh_cols")?,
+        chip_aligned: bool_field(v, "chip_aligned")?,
+        sync_chips: opt_u64_field(v, "sync_chips")?,
+        tiles: u64_field(v, "tiles")?,
+        chips: u64_field(v, "chips")?,
+        worst_link_permille: u64_field(v, "worst_link_permille")?,
+        images_per_s: u64_field(v, "images_per_s")?,
+        pj_per_image: u64_field(v, "pj_per_image")?,
+    })
+}
+
 /// The `ModelDesc` JSON shape — also what `domino models --json`
 /// emits, so scripts parse the same representation the network speaks.
 pub fn desc_to_json(d: &api::ModelDesc) -> Json {
@@ -594,6 +759,13 @@ pub fn desc_to_json(d: &api::ModelDesc) -> Json {
         ("layers", u(d.layers)),
         ("params", u(d.params)),
         ("macs", u(d.macs)),
+        (
+            "mapping",
+            d.mapping
+                .as_ref()
+                .map(mapping_desc_to_json)
+                .unwrap_or(Json::Null),
+        ),
     ])
 }
 
@@ -607,6 +779,10 @@ fn desc_from_json(v: &Json) -> Result<api::ModelDesc> {
         layers: u64_field(v, "layers")?,
         params: u64_field(v, "params")?,
         macs: u64_field(v, "macs")?,
+        mapping: match v.get("mapping") {
+            None | Some(Json::Null) => None,
+            Some(m) => Some(mapping_desc_from_json(m)?),
+        },
     })
 }
 
@@ -960,6 +1136,74 @@ mod tests {
             r#"{"type":"infer","model":"tiny-cnn","image":[-128,0,127]}"#
         );
         assert_eq!(decode_request(&encode_request(&req)).unwrap(), req);
+    }
+
+    #[test]
+    fn load_with_mapping_roundtrips_and_stays_stable() {
+        let req = api::Request::LoadSeeded {
+            model: "tiny-cnn".to_string(),
+            seed: 7,
+            mapping: Some(api::MappingSpec {
+                pooling: Some(PoolingScheme::WeightDuplication),
+                placement: Some(Placement::ColumnMajor),
+                mesh_cols: Some(12),
+                chip_aligned: Some(true),
+                sync_chips: None,
+            }),
+        };
+        assert_eq!(
+            String::from_utf8(encode_request(&req)).unwrap(),
+            r#"{"type":"load_seeded","model":"tiny-cnn","seed":7,"mapping":{"pooling":"weight-duplication","placement":"column-major","mesh_cols":12,"chip_aligned":true,"sync_chips":null}}"#
+        );
+        assert_eq!(decode_request(&encode_request(&req)).unwrap(), req);
+        // a mapping-free load decodes whether the field is absent or null
+        let bare = decode_request(br#"{"type":"load","model":"m"}"#).unwrap();
+        assert_eq!(
+            bare,
+            api::Request::Load {
+                model: "m".to_string(),
+                mapping: None
+            }
+        );
+        // invalid names inside a mapping are typed errors
+        assert!(decode_request(
+            br#"{"type":"load","model":"m","mapping":{"pooling":"diagonal"}}"#
+        )
+        .is_err());
+        assert!(decode_request(
+            br#"{"type":"load","model":"m","mapping":{"chip_aligned":3}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn arch_config_roundtrips_bit_exactly() {
+        let mut a = ArchConfig::default();
+        a.pooling = PoolingScheme::WeightDuplication;
+        a.placement = Placement::ColumnMajor;
+        a.mesh_cols = 20;
+        a.chip_aligned_chains = true;
+        a.sync_chips = Some(5);
+        for arch in [ArchConfig::default(), a] {
+            let text = encode(&arch_to_json(&arch));
+            assert_eq!(arch_from_json(&decode(&text).unwrap()).unwrap(), arch);
+        }
+        // a partial record is rejected (the manifest writes full ones)
+        assert!(arch_from_json(&decode(r#"{"n_c":256}"#).unwrap()).is_err());
+        // corrupted geometry is a typed error at the parse boundary,
+        // never a panic when the entry is later restored
+        for bad in [
+            r#"{"n_c":0,"n_m":256,"tiles_per_chip":240,"mesh_cols":16,"pooling":"block-reuse","placement":"serpentine","chip_aligned":false,"sync_chips":null}"#,
+            r#"{"n_c":256,"n_m":256,"tiles_per_chip":240,"mesh_cols":0,"pooling":"block-reuse","placement":"serpentine","chip_aligned":false,"sync_chips":null}"#,
+            r#"{"n_c":256,"n_m":256,"tiles_per_chip":8,"mesh_cols":16,"pooling":"block-reuse","placement":"serpentine","chip_aligned":false,"sync_chips":null}"#,
+            r#"{"n_c":256,"n_m":256,"tiles_per_chip":240,"mesh_cols":16,"pooling":"block-reuse","placement":"serpentine","chip_aligned":false,"sync_chips":18446744073709551615}"#,
+            r#"{"n_c":256,"n_m":256,"tiles_per_chip":240,"mesh_cols":16,"pooling":"diagonal","placement":"serpentine","chip_aligned":false,"sync_chips":null}"#,
+        ] {
+            assert!(
+                arch_from_json(&decode(bad).unwrap()).is_err(),
+                "{bad} should be rejected"
+            );
+        }
     }
 
     #[test]

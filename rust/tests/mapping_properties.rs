@@ -1,0 +1,199 @@
+//! Mapping-invariance properties: the mapping plane may move tiles,
+//! replicate arrays and reshape the mesh, but it must never change the
+//! *math*. Every placement strategy × pooling scheme (× chip
+//! alignment) over the small-geometry sweep must produce
+//! refcompute-bit-exact outputs, and the simulated pipeline report
+//! must equal the analytic `perfmodel` at every mapping. On top, every
+//! explorer-ranked candidate must simulate correctly end-to-end.
+
+use domino::coordinator::explore::{self, ExploreBounds, Objective};
+use domino::coordinator::{ArchConfig, Compiler, Placement, PoolingScheme};
+use domino::model::refcompute::{forward, Tensor, Weights};
+use domino::model::{Network, NetworkBuilder, Projection, TensorShape};
+use domino::perfmodel;
+use domino::sim::Simulator;
+use domino::testutil::Rng;
+
+/// The sweep: every stage kind the compiler can map — conv geometries,
+/// both pooling flavors (fused and standalone), multi-block channel
+/// splits with FC, residuals with and without projection.
+fn sweep_nets() -> Vec<(Network, ArchConfig)> {
+    let mut nets = Vec::new();
+    for (k, stride, padding) in [(1usize, 1usize, 0usize), (3, 1, 1), (3, 2, 1)] {
+        let net = NetworkBuilder::new("map-conv", TensorShape::new(2, 6, 6))
+            .conv(4, k, stride, padding)
+            .build();
+        nets.push((net, ArchConfig::default()));
+    }
+    nets.push((
+        NetworkBuilder::new("map-maxpool", TensorShape::new(3, 8, 8))
+            .conv(4, 3, 1, 1)
+            .max_pool(2, 2)
+            .build(),
+        ArchConfig::default(),
+    ));
+    nets.push((
+        NetworkBuilder::new("map-avgpool", TensorShape::new(3, 8, 8))
+            .conv(4, 3, 1, 1)
+            .avg_pool(2, 2)
+            .build(),
+        ArchConfig::default(),
+    ));
+    nets.push((
+        NetworkBuilder::new("map-blocks", TensorShape::new(6, 5, 5))
+            .conv(7, 3, 1, 1)
+            .max_pool(2, 2)
+            .flatten()
+            .fc(9)
+            .fc_logits(5)
+            .build(),
+        ArchConfig::tiny(4),
+    ));
+    nets.push((
+        NetworkBuilder::new("map-res-proj", TensorShape::new(4, 8, 8))
+            .conv(4, 3, 1, 1)
+            .conv(8, 3, 2, 1)
+            .conv_linear(8, 3, 1, 1)
+            .res_add_proj(
+                0,
+                Projection {
+                    out_ch: 8,
+                    stride: 2,
+                },
+            )
+            .build(),
+        ArchConfig::default(),
+    ));
+    nets
+}
+
+/// Every placement × pooling (× alignment) maps to a program whose
+/// simulated outputs are bit-exact with the int8 reference, whose
+/// batch pipeline report equals the analytic model, and whose MAC
+/// count is mapping-invariant.
+#[test]
+fn every_placement_and_pooling_is_bit_exact_and_matches_perfmodel() {
+    for (net, base) in sweep_nets() {
+        let weights = Weights::random(&net, 0x5EED).unwrap();
+        let mut rng = Rng::new(0xABCD);
+        let inputs: Vec<Vec<i8>> = (0..4)
+            .map(|_| rng.i8_vec(net.input_len(), 31))
+            .collect();
+        // the oracle is mapping-independent by construction
+        let expect: Vec<Vec<i8>> = inputs
+            .iter()
+            .map(|x| {
+                forward(&net, &weights, &Tensor::new(net.input, x.clone()))
+                    .unwrap()
+                    .data
+            })
+            .collect();
+        for placement in Placement::ALL {
+            for pooling in PoolingScheme::ALL {
+                for aligned in [false, true] {
+                    let mut arch = base;
+                    arch.placement = placement;
+                    arch.pooling = pooling;
+                    arch.chip_aligned_chains = aligned;
+                    let program = Compiler::new(arch)
+                        .compile_with_weights(&net, &weights)
+                        .unwrap();
+                    let ctx = format!(
+                        "{} {}/{}/aligned={aligned}",
+                        net.name,
+                        placement.name(),
+                        pooling.name()
+                    );
+                    let mut sim = Simulator::new(&program);
+                    // run_batch internally errors if its measured
+                    // pipeline report disagrees with perfmodel
+                    let batch = sim.run_batch_threads(&inputs, 2).unwrap();
+                    for (out, want) in batch.outputs.iter().zip(&expect) {
+                        assert_eq!(&out.scores, want, "{ctx}: scores diverged");
+                    }
+                    let est = perfmodel::estimate(&program).unwrap();
+                    assert_eq!(
+                        batch.pipeline.steady_period_cycles, est.period_cycles,
+                        "{ctx}: pipeline report != perfmodel"
+                    );
+                    assert_eq!(
+                        sim.stats().pe_macs,
+                        4 * est.counters.pe_macs,
+                        "{ctx}: per-image MACs are mapping-dependent"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Every candidate the explorer ranks must be a *runnable* mapping:
+/// compile with weights, simulate, and match the reference bit-for-bit
+/// — and the explorer's analytic tile/chip counts must match the real
+/// compile.
+#[test]
+fn explorer_ranked_candidates_all_simulate_end_to_end() {
+    let net = NetworkBuilder::new("map-explore", TensorShape::new(2, 6, 6))
+        .conv(4, 3, 1, 1)
+        .max_pool(2, 2)
+        .flatten()
+        .fc_logits(5)
+        .build();
+    let base = ArchConfig::default();
+    let cands = explore::explore(&net, &base, &ExploreBounds::default(), Objective::Latency)
+        .unwrap();
+    assert!(!cands.is_empty(), "explorer produced no candidates");
+    assert!(cands[0].feasible, "the winner must be feasible");
+
+    let weights = Weights::random(&net, 7).unwrap();
+    let img = Rng::new(3).i8_vec(net.input_len(), 31);
+    let want = forward(&net, &weights, &Tensor::new(net.input, img.clone()))
+        .unwrap()
+        .data;
+    for c in &cands {
+        let program = Compiler::new(c.arch)
+            .compile_with_weights(&net, &weights)
+            .unwrap();
+        assert_eq!(program.total_tiles, c.tiles, "{:?}: tile count", c.choice);
+        assert_eq!(program.chips, c.chips, "{:?}: chip count", c.choice);
+        let mut sim = Simulator::new(&program);
+        let out = sim.run_image(&img).unwrap();
+        assert_eq!(out.scores, want, "{:?}: candidate diverged", c.choice);
+        // the analytic scores the ranking used must match this program
+        let est = perfmodel::estimate(&program).unwrap();
+        assert_eq!(est.latency_cycles, c.latency_cycles, "{:?}", c.choice);
+        assert_eq!(est.period_cycles, c.period_cycles, "{:?}", c.choice);
+    }
+
+    // rankings are monotone in the objective among feasible candidates
+    for w in cands.windows(2) {
+        if w[0].feasible && w[1].feasible {
+            assert!(w[0].latency_cycles <= w[1].latency_cycles);
+        }
+    }
+}
+
+/// The plan IR is the single source of truth for placement: a
+/// default-config compile is bit-identical whether driven through
+/// `compile` or through an explicit plan + materialize.
+#[test]
+fn explicit_plan_then_materialize_equals_compile() {
+    let net = NetworkBuilder::new("map-phase", TensorShape::new(3, 8, 8))
+        .conv(4, 3, 1, 1)
+        .max_pool(2, 2)
+        .flatten()
+        .fc_logits(5)
+        .build();
+    let weights = Weights::random(&net, 0xC0FFEE).unwrap();
+    let compiler = Compiler::default();
+    let direct = compiler.compile_with_weights(&net, &weights).unwrap();
+    let plan = compiler.plan(&net).unwrap();
+    let staged = compiler.materialize(&net, &weights, &plan).unwrap();
+    assert_eq!(direct.total_tiles, staged.total_tiles);
+    assert_eq!(direct.chips, staged.chips);
+    let img = Rng::new(9).i8_vec(net.input_len(), 31);
+    let a = Simulator::new(&direct).run_image(&img).unwrap();
+    let b = Simulator::new(&staged).run_image(&img).unwrap();
+    assert_eq!(a.scores, b.scores);
+    assert_eq!(a.latency_cycles, b.latency_cycles);
+}

@@ -9,9 +9,10 @@ use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::Duration;
 
+use domino::coordinator::explore::{self, ExploreBounds, Objective};
 use domino::coordinator::ArchConfig;
 use domino::model::zoo;
-use domino::serve::api::{RegistryManifest, Request, Response};
+use domino::serve::api::{MappingSpec, RegistryManifest, Request, Response};
 use domino::serve::client::Client;
 use domino::serve::net::{NetConfig, NetServer};
 use domino::serve::{wire, ModelRegistry, ServeConfig, Server, Service};
@@ -287,6 +288,124 @@ fn malformed_truncated_and_oversized_frames_reject_cleanly() {
     service.shutdown().unwrap();
 }
 
+/// The acceptance path for the mapping plane: a *non-default* mapping
+/// picked by the explorer is loadable over TCP, reported by
+/// `ModelInfo`, served with refcompute-verified responses, and
+/// survives a manifest restart at exactly the same mapping (the old
+/// manifest restored every model at the service-wide default).
+#[test]
+fn explored_mapping_loads_over_tcp_and_survives_restart() {
+    let path = std::env::temp_dir().join(format!(
+        "domino-registry-mapping-{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+
+    // pick a feasible candidate whose arch differs from the default
+    let tnet = zoo::tiny_resnet();
+    let cands =
+        explore::explore(&tnet, &ArchConfig::default(), &ExploreBounds::default(), Objective::Tiles)
+            .unwrap();
+    assert!(!cands.is_empty(), "explorer must rank candidates");
+    let cand = cands
+        .iter()
+        .find(|c| c.feasible && c.arch != ArchConfig::default())
+        .expect("a feasible non-default candidate");
+    let spec = MappingSpec::of_choice(&cand.choice);
+
+    // ---- first life ----
+    let man = Arc::new(RegistryManifest::open(&path).unwrap());
+    let registry = Arc::new(ModelRegistry::new());
+    let mlp = zoo::tiny_mlp();
+    let mv0 = registry
+        .load_seeded(&mlp.name, &mlp, ArchConfig::default(), Some(0x5))
+        .unwrap();
+    man.record(&mlp.name, &mlp.name, Some(0x5), mv0.version(), Some(ArchConfig::default()));
+    man.save().unwrap();
+    let server = Server::start_multi(serve_cfg(), Arc::clone(&registry)).unwrap();
+    let service = Arc::new(Service::with_manifest(
+        server,
+        ArchConfig::default(),
+        Arc::clone(&man),
+    ));
+    let net = NetServer::bind_with("127.0.0.1:0", Arc::clone(&service), fast_net_cfg()).unwrap();
+    let addr = net.local_addr().to_string();
+
+    // load the winner remotely, at its mapping, with a recorded seed
+    let mut client = connect(&addr);
+    let st = client
+        .load_mapped("tiny-resnet", Some(0x77), Some(spec))
+        .unwrap();
+    assert_eq!(&*st.name, "tiny-resnet");
+    let mv = registry.get("tiny-resnet").unwrap();
+    assert_eq!(
+        mv.program().arch, cand.arch,
+        "load must apply the requested mapping"
+    );
+
+    // ModelInfo reports the chosen mapping + placement stats
+    let info = client.model_info("tiny-resnet").unwrap();
+    let m = info.mapping.expect("live models report their mapping");
+    assert_eq!(m.pooling, cand.choice.pooling.name());
+    assert_eq!(m.placement, cand.choice.placement.name());
+    assert_eq!(m.mesh_cols as usize, cand.choice.mesh_cols);
+    assert_eq!(m.chip_aligned, cand.choice.chip_aligned);
+    assert_eq!(m.tiles as usize, cand.tiles);
+    assert_eq!(m.chips as usize, cand.chips);
+
+    // served responses at this mapping are refcompute-exact
+    let img = Rng::new(11).i8_vec(mv.input_len(), 31);
+    let reply = client.infer(Some("tiny-resnet"), img.clone()).unwrap();
+    assert_eq!(reply.logits, mv.refcompute(&img).unwrap());
+    let logits = reply.logits;
+
+    drop(client);
+    net.shutdown().unwrap();
+    let Ok(service) = Arc::try_unwrap(service) else {
+        panic!("sole service ref")
+    };
+    service.shutdown().unwrap();
+
+    // ---- second life: restore with the service-wide DEFAULT arch ----
+    let man2 = Arc::new(RegistryManifest::open(&path).unwrap());
+    assert_eq!(man2.len(), 2);
+    let registry2 = Arc::new(ModelRegistry::new());
+    assert_eq!(man2.restore(&registry2, ArchConfig::default()).unwrap(), 2);
+    let r2 = registry2.get("tiny-resnet").unwrap();
+    assert_eq!(
+        r2.program().arch, cand.arch,
+        "the per-model mapping must survive the restart (not the service default)"
+    );
+    assert_eq!(registry2.get(&mlp.name).unwrap().arch(), ArchConfig::default());
+    assert_eq!(
+        r2.refcompute(&img).unwrap(),
+        logits,
+        "restored weights + mapping answer bit-identically"
+    );
+
+    // and the restarted endpoint serves it the same
+    let server2 = Server::start_multi(serve_cfg(), Arc::clone(&registry2)).unwrap();
+    let service2 = Arc::new(Service::with_manifest(
+        server2,
+        ArchConfig::default(),
+        Arc::clone(&man2),
+    ));
+    let net2 = NetServer::bind_with("127.0.0.1:0", Arc::clone(&service2), fast_net_cfg()).unwrap();
+    let mut client2 = connect(&net2.local_addr().to_string());
+    let reply2 = client2.infer(Some("tiny-resnet"), img.clone()).unwrap();
+    assert_eq!(reply2.logits, logits);
+    let info2 = client2.model_info("tiny-resnet").unwrap();
+    assert_eq!(info2.mapping.unwrap(), m, "identical mapping stats after restart");
+
+    drop(client2);
+    net2.shutdown().unwrap();
+    let Ok(service2) = Arc::try_unwrap(service2) else {
+        panic!("sole service ref")
+    };
+    service2.shutdown().unwrap();
+    let _ = std::fs::remove_file(&path);
+}
+
 #[test]
 fn registry_file_persists_across_restart_bit_exactly() {
     let path = std::env::temp_dir().join(format!(
@@ -302,7 +421,7 @@ fn registry_file_persists_across_restart_bit_exactly() {
     let mv = registry
         .load_seeded(&mlp.name, &mlp, ArchConfig::default(), Some(0x7))
         .unwrap();
-    man.record(&mlp.name, &mlp.name, Some(0x7), mv.version());
+    man.record(&mlp.name, &mlp.name, Some(0x7), mv.version(), Some(ArchConfig::default()));
     man.save().unwrap();
     let server = Server::start_multi(serve_cfg(), Arc::clone(&registry)).unwrap();
     let service = Arc::new(Service::with_manifest(

@@ -6,7 +6,10 @@
 
 use std::sync::Arc;
 
-use domino::serve::api::{InferReply, ModelDesc, Request, Response, StatsReply};
+use domino::coordinator::{Placement, PoolingScheme};
+use domino::serve::api::{
+    InferReply, MappingDesc, MappingSpec, ModelDesc, Request, Response, StatsReply,
+};
 use domino::serve::wire;
 use domino::serve::{ModelMetricsSnapshot, ModelStamp};
 use domino::testutil::{for_all, Rng};
@@ -68,6 +71,51 @@ fn tricky_stamp(rng: &mut Rng) -> ModelStamp {
     }
 }
 
+/// A per-model mapping spec with every Option drawn independently
+/// (typed enums travel as their canonical names).
+fn tricky_mapping_spec(rng: &mut Rng) -> Option<MappingSpec> {
+    if rng.chance(0.3) {
+        return None;
+    }
+    let opt_u = |rng: &mut Rng| rng.chance(0.5).then(|| tricky_u64(rng));
+    Some(MappingSpec {
+        pooling: rng.chance(0.5).then(|| {
+            if rng.chance(0.5) {
+                PoolingScheme::BlockReuse
+            } else {
+                PoolingScheme::WeightDuplication
+            }
+        }),
+        placement: rng.chance(0.5).then(|| {
+            if rng.chance(0.5) {
+                Placement::Serpentine
+            } else {
+                Placement::ColumnMajor
+            }
+        }),
+        mesh_cols: opt_u(rng),
+        chip_aligned: rng.chance(0.5).then(|| rng.chance(0.5)),
+        sync_chips: opt_u(rng),
+    })
+}
+
+/// Mapping stats as seen on the wire: pooling/placement are free
+/// strings there, so stress them with the tricky-name generator.
+fn tricky_mapping_desc(rng: &mut Rng) -> MappingDesc {
+    MappingDesc {
+        pooling: tricky_name(rng),
+        placement: tricky_name(rng),
+        mesh_cols: tricky_u64(rng),
+        chip_aligned: rng.chance(0.5),
+        sync_chips: rng.chance(0.5).then(|| tricky_u64(rng)),
+        tiles: tricky_u64(rng),
+        chips: tricky_u64(rng),
+        worst_link_permille: tricky_u64(rng),
+        images_per_s: tricky_u64(rng),
+        pj_per_image: tricky_u64(rng),
+    }
+}
+
 fn tricky_desc(rng: &mut Rng) -> ModelDesc {
     ModelDesc {
         name: tricky_name(rng),
@@ -78,6 +126,7 @@ fn tricky_desc(rng: &mut Rng) -> ModelDesc {
         layers: tricky_u64(rng),
         params: tricky_u64(rng),
         macs: tricky_u64(rng),
+        mapping: rng.chance(0.5).then(|| tricky_mapping_desc(rng)),
     }
 }
 
@@ -115,10 +164,27 @@ fn every_request_variant_roundtrips() {
     });
     roundtrip_req(&Request::Load {
         model: "a \"quoted\\name\"\nwith\tcontrol\u{1}chars".to_string(),
+        mapping: None,
     });
     roundtrip_req(&Request::LoadSeeded {
         model: "m".to_string(),
         seed: u64::MAX,
+        mapping: None,
+    });
+    roundtrip_req(&Request::Load {
+        model: "m".to_string(),
+        mapping: Some(MappingSpec::default()),
+    });
+    roundtrip_req(&Request::LoadSeeded {
+        model: "m".to_string(),
+        seed: 0,
+        mapping: Some(MappingSpec {
+            pooling: Some(PoolingScheme::WeightDuplication),
+            placement: Some(Placement::ColumnMajor),
+            mesh_cols: Some(u64::MAX),
+            chip_aligned: Some(false),
+            sync_chips: Some(0),
+        }),
     });
     roundtrip_req(&Request::Swap {
         model: "m".to_string(),
@@ -150,10 +216,12 @@ fn every_request_variant_roundtrips() {
             },
             1 => Request::Load {
                 model: tricky_name(rng),
+                mapping: tricky_mapping_spec(rng),
             },
             2 => Request::LoadSeeded {
                 model: tricky_name(rng),
                 seed: tricky_u64(rng),
+                mapping: tricky_mapping_spec(rng),
             },
             3 => Request::Swap {
                 model: tricky_name(rng),
@@ -269,6 +337,7 @@ fn corrupted_bytes_never_panic() {
         let req = Request::LoadSeeded {
             model: tricky_name(rng),
             seed: tricky_u64(rng),
+            mapping: tricky_mapping_spec(rng),
         };
         let mut bytes = wire::encode_request(&req);
         if bytes.is_empty() {
@@ -303,6 +372,18 @@ fn wire_json_matches_manifest_and_script_consumers() {
         layers: 10,
         params: 12345,
         macs: 678901,
+        mapping: Some(MappingDesc {
+            pooling: "block-reuse".to_string(),
+            placement: "serpentine".to_string(),
+            mesh_cols: 16,
+            chip_aligned: false,
+            sync_chips: None,
+            tiles: 22,
+            chips: 1,
+            worst_link_permille: 523,
+            images_per_s: 40000,
+            pj_per_image: 123456,
+        }),
     };
     let text = wire::encode(&wire::desc_to_json(&desc));
     let v = wire::decode(&text).unwrap();
@@ -310,4 +391,7 @@ fn wire_json_matches_manifest_and_script_consumers() {
     assert_eq!(wire::u64_field(&v, "version").unwrap(), 2);
     assert_eq!(wire::u64_field(&v, "macs").unwrap(), 678901);
     assert_eq!(wire::opt_u64_field(&v, "not-there").unwrap(), None);
+    let m = v.get("mapping").expect("mapping object present");
+    assert_eq!(wire::str_field(m, "placement").unwrap(), "serpentine");
+    assert_eq!(wire::u64_field(m, "tiles").unwrap(), 22);
 }
