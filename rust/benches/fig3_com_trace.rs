@@ -26,7 +26,7 @@ fn main() {
     assert!(tr.count("G+") > 0 && tr.count("G-") > 0);
 
     println!();
-    bench("fig3: trace capture (record_actions on)", 10, || {
+    bench("fig3: trace capture (flight recorder on)", 10, || {
         std::hint::black_box(trace_stage(&program, 0, 7).unwrap());
     });
 }

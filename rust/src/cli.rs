@@ -86,6 +86,17 @@ COMMANDS:
                          cycle-simulate images; print stats + energy
                          (--threads > 1 uses the batched parallel path)
   trace [--stage I]      print the Fig. 3(b) COM dataflow trace
+  debug <model> [--seed S] [--break tile,cycle[,kind][;spec...]]
+        [--steps N] [--heatmap] [--stage I] [--buckets N]
+                         flight-recorder debug stepper: record one
+                         seeded image, stop at breakpoints (`*` is a
+                         wildcard; kinds: acc push pop emit link enter
+                         exit fifo arena), single-step N events, and
+                         inspect engine state (stage, FIFO depths, psum
+                         arenas, link bits); --heatmap renders link
+                         utilization over time for --stage (default:
+                         the busiest stage). A breakpoint that never
+                         hits exits 0 (the stream just ends)
   pipeline <model> [--images N] [--chips N]
                          steady-state layer-synchronized pipeline timing
   ablate                 dataflow (A1) + pooling (Fig. 4) ablations
@@ -117,7 +128,10 @@ COMMANDS:
                          (per-model mapping; defaults to the server's),
                          swap <m> [--seed S] (keeps the model's mapping),
                          unload <m>, models, info <m> (incl. mapping +
-                         placement stats), stats
+                         placement stats), stats,
+                         trace <m> [--seed S] [--window N] (pull a
+                         flight recording + link heatmap off the live
+                         endpoint)
   models [list|info <m>] [--json]
                          list zoo models (params/MACs/shapes), or show
                          one model in detail incl. its mapping stats at

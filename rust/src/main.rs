@@ -28,6 +28,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "map" => map(args),
         "run" => run(args),
         "trace" => trace(args),
+        "debug" => debug_cmd(args),
         "pipeline" => pipeline(args),
         "ablate" => ablate(),
         "sweep" => sweep(args),
@@ -461,6 +462,95 @@ fn trace(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `domino debug <model> [--seed S] [--break tile,cycle[,kind][;…]]
+/// [--steps N] [--heatmap] [--stage S] [--buckets N]` — record one
+/// seeded image under the flight recorder, then walk the event stream:
+/// stop at breakpoints, single-step, and inspect the derived engine
+/// state (current stage, FIFO depths, psum arena occupancy, link
+/// bits). Non-interactive by design so CI can smoke it; a breakpoint
+/// that never hits is a normal outcome (exit 0), not an error.
+fn debug_cmd(args: &Args) -> Result<()> {
+    use domino::sim::flight::{Breakpoint, LinkHeatmap, RecorderConfig, Stepper};
+
+    let net = net_arg(args)?;
+    let program = Compiler::new(arch_from(args)).compile(&net)?;
+    let mut sim = Simulator::with_recorder(&program, RecorderConfig::default());
+    let seed = args.get_u64("seed", 7);
+    let mut rng = Rng::new(seed);
+    sim.run_image(&rng.i8_vec(net.input_len(), 31))?;
+    let rec = sim.recording();
+    println!(
+        "{}: recorded 1 image (seed {seed}) -> {} events over {} stage(s), {} dropped",
+        net.name,
+        rec.events.len(),
+        rec.stage_count(),
+        rec.dropped
+    );
+
+    let mut stepper = Stepper::new(rec.clone());
+    let breaks: Vec<Breakpoint> = match args.get("break") {
+        Some(specs) => specs
+            .split(';')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(Breakpoint::parse)
+            .collect::<Result<_>>()?,
+        None => Vec::new(),
+    };
+    for bp in &breaks {
+        stepper.add_breakpoint(*bp);
+    }
+
+    if !breaks.is_empty() {
+        match stepper.run_to_break() {
+            Some((i, e)) => {
+                println!("break at event #{i}: {}", e.describe());
+                print!("{}", stepper.state().render());
+            }
+            None => println!(
+                "no breakpoint hit in {} events (stream fully consumed)",
+                stepper.len()
+            ),
+        }
+    }
+
+    let steps = args.get_usize("steps", 0);
+    for _ in 0..steps {
+        match stepper.step() {
+            Some(e) => println!("#{}: {}", stepper.pos() - 1, e.describe()),
+            None => {
+                println!("end of stream at event {}", stepper.len());
+                break;
+            }
+        }
+    }
+    if steps > 0 {
+        print!("{}", stepper.state().render());
+    }
+
+    if breaks.is_empty() && steps == 0 {
+        // no navigation requested: consume the whole stream and show
+        // the end-state inspection (a one-shot post-mortem view)
+        while stepper.step().is_some() {}
+        print!("{}", stepper.state().render());
+    }
+
+    if args.flag("heatmap") {
+        let stage = match args.get("stage") {
+            Some(s) => s
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--stage must be a stage index"))?,
+            None => LinkHeatmap::busiest_stage(&rec)
+                .ok_or_else(|| anyhow::anyhow!("recording holds no link events"))?,
+        };
+        match LinkHeatmap::build(&rec, stage, args.get_usize("buckets", 40)) {
+            Some(h) => print!("{}", h.render()),
+            None => println!("stage {stage} moved no tile-scoped link bits"),
+        }
+    }
+    Ok(())
+}
+
 fn pipeline(args: &Args) -> Result<()> {
     let net = net_arg(args)?;
     let program = Compiler::new(arch_from(args)).compile_analysis(&net)?;
@@ -820,17 +910,19 @@ fn print_stats(resp: &domino::serve::api::Response) -> Result<()> {
         stats.served, stats.rejected, stats.failed
     );
     println!(
-        "  {:<18} {:>8} {:>8} {:>9} {:>7} {:>9} {:>9} {:>9}",
-        "model", "served", "failed", "rejected", "queued", "p50 us", "p95 us", "p99 us"
+        "  {:<18} {:>8} {:>8} {:>9} {:>7} {:>7} {:>9} {:>9} {:>9}",
+        "model", "served", "failed", "rejected", "traced", "queued", "p50 us", "p95 us",
+        "p99 us"
     );
     let fmt = |v: Option<u64>| v.map(|x| x.to_string()).unwrap_or_else(|| "-".into());
     for m in &stats.models {
         println!(
-            "  {:<18} {:>8} {:>8} {:>9} {:>7} {:>9} {:>9} {:>9}",
+            "  {:<18} {:>8} {:>8} {:>9} {:>7} {:>7} {:>9} {:>9} {:>9}",
             m.model,
             m.served,
             m.failed,
             m.rejected,
+            m.traced,
             m.queue_depth,
             fmt(m.p50_us),
             fmt(m.p95_us),
@@ -843,8 +935,9 @@ fn print_stats(resp: &domino::serve::api::Response) -> Result<()> {
 /// `domino client <op> --addr HOST:PORT` — drive a `serve --listen`
 /// endpoint over TCP through the in-crate typed client. Ops: `infer
 /// <model>`, `load <model> [--seed S]`, `swap <model> [--seed S]`,
-/// `unload <model>`, `models`, `info <model>`, `stats`; `--json`
-/// prints the raw wire representation.
+/// `unload <model>`, `models`, `info <model>`, `stats`, `trace
+/// <model> [--seed S] [--window N]`; `--json` prints the raw wire
+/// representation.
 fn client_cmd(args: &Args) -> Result<()> {
     use domino::serve::client::Client;
     use domino::serve::{api, wire};
@@ -1001,8 +1094,39 @@ fn client_cmd(args: &Args) -> Result<()> {
             }
             print_stats(&api::Response::Stats(stats))
         }
+        "trace" => {
+            let model = second_positional(args, "trace", addr)?;
+            let t = client.trace(
+                model,
+                args.get_u64("seed", 7),
+                args.get_u64("window", 32),
+            )?;
+            if json {
+                let resp = api::Response::Trace(t);
+                println!("{}", String::from_utf8(wire::encode_response(&resp))?);
+                return Ok(());
+            }
+            println!(
+                "{} v{} (image seed {}): {} events recorded ({} dropped), {} returned",
+                t.model.name,
+                t.model.version,
+                t.image_seed,
+                t.events_total,
+                t.dropped,
+                t.events.len()
+            );
+            for (i, e) in t.events.iter().enumerate() {
+                println!("  #{i}: {}", e.describe());
+            }
+            if !t.heatmap.is_empty() {
+                print!("{}", t.heatmap);
+            }
+            println!("scores: {:?}", t.scores);
+            Ok(())
+        }
         other => bail!(
-            "unknown client op {other:?} (use infer | load | swap | unload | models | info | stats)"
+            "unknown client op {other:?} (use infer | load | swap | unload | models | info \
+             | stats | trace)"
         ),
     }
 }

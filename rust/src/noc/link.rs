@@ -16,6 +16,19 @@ pub enum LinkKind {
     InterChip,
 }
 
+impl LinkKind {
+    /// The link class a transfer between chips `a` and `b` rides on:
+    /// the on-chip mesh when both endpoints share a chip, a serial
+    /// transceiver otherwise.
+    pub fn between(a: usize, b: usize) -> Self {
+        if a == b {
+            LinkKind::OnChip
+        } else {
+            LinkKind::InterChip
+        }
+    }
+}
+
 /// Aggregate inter-chip transceiver: checks bandwidth feasibility and
 /// accounts transferred bits.
 #[derive(Clone, Debug, Default)]
@@ -70,6 +83,14 @@ mod tests {
         // 256-lane i8 IFM beat (2048 b) but requiring 2 steps for a
         // 256-lane i32 psum beat - the paper's two-subcycle structure.
         assert_eq!(onchip_bits_per_step(), 4000.0);
+    }
+
+    #[test]
+    fn between_classifies_by_chip() {
+        assert_eq!(LinkKind::between(0, 0), LinkKind::OnChip);
+        assert_eq!(LinkKind::between(2, 2), LinkKind::OnChip);
+        assert_eq!(LinkKind::between(0, 1), LinkKind::InterChip);
+        assert_eq!(LinkKind::between(3, 1), LinkKind::InterChip);
     }
 
     #[test]

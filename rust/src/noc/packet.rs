@@ -100,6 +100,11 @@ impl PsumArena {
         self.grows
     }
 
+    /// `(in_use, slots)` snapshot for occupancy probes.
+    pub fn occupancy(&self) -> (usize, usize) {
+        (self.in_use(), self.slots as usize)
+    }
+
     /// Allocate a slot for output position `opos`. The lane values are
     /// *not* zeroed — the caller overwrites them (e.g. via
     /// `Pe::mvm_into`). Grows the slab by ~50% when the free list is

@@ -30,6 +30,9 @@ use anyhow::{anyhow, Context, Result};
 use crate::coordinator::explore::MappingChoice;
 use crate::coordinator::{ArchConfig, Placement, PoolingScheme, Program};
 use crate::model::{zoo, Network};
+use crate::sim::flight::{self, LinkHeatmap, RecorderConfig};
+use crate::sim::Simulator;
+use crate::testutil::Rng;
 
 use super::metrics::ModelMetricsSnapshot;
 use super::registry::{ModelRegistry, ModelStamp, ModelVersion};
@@ -144,6 +147,15 @@ pub enum Request {
     ModelInfo { model: String },
     /// Per-model serving metrics (p50/p95/p99, counts, queue depth).
     Stats,
+    /// Record one seeded image on `model` under a flight recorder and
+    /// return the first `window` events plus a link-utilization
+    /// heatmap of the busiest stage — the observability plane's answer
+    /// to "*why* did p99 move" (see [`crate::sim::flight`]).
+    Trace {
+        model: String,
+        image_seed: u64,
+        window: u64,
+    },
 }
 
 /// The response envelope for every [`Request`]. Failures are
@@ -158,6 +170,7 @@ pub enum Response {
     Models(Vec<ModelDesc>),
     Info(ModelDesc),
     Stats(StatsReply),
+    Trace(TraceReply),
     Error { message: String },
 }
 
@@ -285,6 +298,26 @@ pub struct StatsReply {
     pub rejected: u64,
     pub failed: u64,
     pub models: Vec<ModelMetricsSnapshot>,
+}
+
+/// The `Trace` payload: a flight recording of one seeded image on the
+/// stamped model version. `events` carries the first `window` events
+/// of the stream (`events_total` is the full recorded length, so a
+/// client knows it saw a prefix); `heatmap` is the rendered
+/// link-utilization grid of the busiest stage. `scores` lets a client
+/// cross-check the traced run against `Infer`/refcompute — a
+/// recording of a run that computed the wrong thing is worthless.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceReply {
+    pub model: ModelStamp,
+    pub image_seed: u64,
+    /// Events in the full recording (before the `window` cut).
+    pub events_total: u64,
+    /// Events the recorder's ring evicted during the run.
+    pub dropped: u64,
+    pub events: Vec<flight::Event>,
+    pub scores: Vec<i8>,
+    pub heatmap: String,
 }
 
 /// One persisted registry entry: enough to recompile the exact same
@@ -523,6 +556,11 @@ impl Service {
             Request::ListModels => self.do_list(),
             Request::ModelInfo { model } => self.do_info(&model),
             Request::Stats => Ok(self.do_stats()),
+            Request::Trace {
+                model,
+                image_seed,
+                window,
+            } => self.do_trace(&model, image_seed, window),
         };
         r.unwrap_or_else(|e| Response::Error {
             message: format!("{e:#}"),
@@ -664,6 +702,42 @@ impl Service {
             failed: self.server.failed(),
             models: self.server.metrics_snapshot(),
         })
+    }
+
+    fn do_trace(&self, model: &str, image_seed: u64, window: u64) -> Result<Response> {
+        let reg = self.registry()?;
+        let key = self.registry_key(model);
+        let mv = reg.get(&key).ok_or_else(|| {
+            anyhow!(
+                "model {model:?} is not loaded (loaded: [{}])",
+                reg.names().join(", ")
+            )
+        })?;
+        let program = mv.program();
+        // A fresh instrumented engine per trace: traces are a
+        // diagnostic plane, not the serving hot path, and recordings
+        // must not bleed between requests.
+        let mut sim = Simulator::with_recorder(program, RecorderConfig::default());
+        let mut rng = Rng::new(image_seed);
+        let out = sim
+            .run_image(&rng.i8_vec(program.net.input_len(), 31))
+            .context("traced simulation")?;
+        let rec = sim.recording();
+        let heatmap = LinkHeatmap::busiest_stage(&rec)
+            .and_then(|si| LinkHeatmap::build(&rec, si, 40))
+            .map(|h| h.render())
+            .unwrap_or_default();
+        let window = (window as usize).min(rec.events.len());
+        self.server.note_trace(&key);
+        Ok(Response::Trace(TraceReply {
+            model: mv.stamp(),
+            image_seed,
+            events_total: rec.events.len() as u64,
+            dropped: rec.dropped,
+            events: rec.events[..window].to_vec(),
+            scores: out.scores,
+            heatmap,
+        }))
     }
 }
 
@@ -938,6 +1012,66 @@ mod tests {
             other => panic!("expected Error, got {other:?}"),
         }
 
+        service.shutdown().unwrap();
+    }
+
+    #[test]
+    fn trace_is_deterministic_and_cross_checks_scores() {
+        let service = start_service();
+        let req = Request::Trace {
+            model: "tiny-mlp".into(),
+            image_seed: 7,
+            window: 16,
+        };
+        let reply = match service.dispatch(req.clone()) {
+            Response::Trace(t) => t,
+            other => panic!("expected Trace, got {other:?}"),
+        };
+        assert_eq!(&*reply.model.name, "tiny-mlp");
+        assert!(reply.events_total > 0, "a traced run records events");
+        assert_eq!(
+            reply.events.len(),
+            16usize.min(reply.events_total as usize),
+            "window cuts the stream"
+        );
+        assert!(reply.heatmap.contains("link utilization"), "{}", reply.heatmap);
+
+        // the traced run computed the right thing: scores match
+        // refcompute on the same seeded image
+        let mv = service
+            .server()
+            .registry()
+            .unwrap()
+            .get("tiny-mlp")
+            .unwrap();
+        let img = Rng::new(7).i8_vec(mv.input_len(), 31);
+        assert_eq!(reply.scores, mv.refcompute(&img).unwrap());
+
+        // same seed, same recording prefix — traces are deterministic
+        let again = match service.dispatch(req) {
+            Response::Trace(t) => t,
+            other => panic!("expected Trace, got {other:?}"),
+        };
+        assert_eq!(reply, again);
+
+        // per-model metrics count the traces
+        let snap = service
+            .server()
+            .metrics_snapshot()
+            .into_iter()
+            .find(|m| m.model == "tiny-mlp")
+            .unwrap();
+        assert_eq!(snap.traced, 2);
+
+        // unknown model is a typed error
+        match service.dispatch(Request::Trace {
+            model: "nope".into(),
+            image_seed: 1,
+            window: 4,
+        }) {
+            Response::Error { message } => assert!(message.contains("not loaded"), "{message}"),
+            other => panic!("expected Error, got {other:?}"),
+        }
         service.shutdown().unwrap();
     }
 

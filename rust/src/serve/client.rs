@@ -12,7 +12,9 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::api::{InferReply, MappingSpec, ModelDesc, Request, Response, StatsReply};
+use super::api::{
+    InferReply, MappingSpec, ModelDesc, Request, Response, StatsReply, TraceReply,
+};
 use super::registry::ModelStamp;
 use super::wire;
 
@@ -157,6 +159,21 @@ impl Client {
         match Self::ok(self.call(&Request::Stats)?)? {
             Response::Stats(s) => Ok(s),
             other => bail!("unexpected response to stats: {other:?}"),
+        }
+    }
+
+    /// Observability plane: record one seeded image on `model` under a
+    /// flight recorder and pull back the first `window` events plus a
+    /// link-utilization heatmap of the busiest stage.
+    pub fn trace(&mut self, model: &str, image_seed: u64, window: u64) -> Result<TraceReply> {
+        let resp = self.call(&Request::Trace {
+            model: model.to_string(),
+            image_seed,
+            window,
+        })?;
+        match Self::ok(resp)? {
+            Response::Trace(t) => Ok(t),
+            other => bail!("unexpected response to trace: {other:?}"),
         }
     }
 }

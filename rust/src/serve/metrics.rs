@@ -80,6 +80,8 @@ struct ModelMetrics {
     served: u64,
     failed: u64,
     rejected: u64,
+    /// Flight-recorder traces served for this model (`Request::Trace`).
+    traced: u64,
     /// Requests currently sitting in the bounded queue (gauge:
     /// incremented at enqueue, decremented when a worker dequeues).
     queue_depth: u64,
@@ -110,6 +112,8 @@ pub struct ModelMetricsSnapshot {
     pub served: u64,
     pub failed: u64,
     pub rejected: u64,
+    /// Flight-recorder traces served (`Request::Trace`).
+    pub traced: u64,
     pub queue_depth: u64,
     /// Total latency samples recorded (percentiles cover the most
     /// recent window of them).
@@ -175,6 +179,13 @@ impl MetricsHub {
         self.with(model, |m| m.failed += 1);
     }
 
+    /// A flight-recorder trace was served for `model`
+    /// (`Request::Trace` — the observability plane, not the data
+    /// plane: traced runs do not count as served inferences).
+    pub(crate) fn on_trace(&self, model: &str) {
+        self.with(model, |m| m.traced += 1);
+    }
+
     /// Snapshot every model's counters and window percentiles, in name
     /// order.
     pub fn snapshot(&self) -> Vec<ModelMetricsSnapshot> {
@@ -185,6 +196,7 @@ impl MetricsHub {
                 served: m.served,
                 failed: m.failed,
                 rejected: m.rejected,
+                traced: m.traced,
                 queue_depth: m.queue_depth,
                 samples: m.samples,
                 p50_us: percentile_us(&m.window, 50.0),
@@ -261,6 +273,16 @@ mod tests {
         assert_eq!(snap[0].samples, n);
         // the window slid: the smallest retained sample is >= 100
         assert!(snap[0].p50_us.unwrap() >= 100);
+    }
+
+    #[test]
+    fn traces_count_separately_from_serving() {
+        let hub = MetricsHub::new();
+        hub.on_trace("m");
+        hub.on_trace("m");
+        let snap = hub.snapshot();
+        assert_eq!(snap[0].traced, 2);
+        assert_eq!(snap[0].served, 0, "a trace is not a served inference");
     }
 
     #[test]

@@ -393,6 +393,12 @@ impl Server {
         self.shared.metrics.snapshot()
     }
 
+    /// Count a served flight-recorder trace for `model`
+    /// (`serve::api`'s `Request::Trace` plane).
+    pub(crate) fn note_trace(&self, model: &str) {
+        self.shared.metrics.on_trace(model);
+    }
+
     /// Stop workers and join them; returns per-worker served counts.
     ///
     /// Workers drain the queue before exiting, so every request

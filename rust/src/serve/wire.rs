@@ -32,6 +32,7 @@ use super::api;
 use super::metrics::ModelMetricsSnapshot;
 use super::registry::ModelStamp;
 use crate::coordinator::{ArchConfig, Placement, PoolingScheme};
+use crate::sim::flight::{Event, EventKind};
 
 /// Hard cap on a single frame's payload (64 MiB) — far above any real
 /// request (the largest zoo input is ~150 k int8 values, well under
@@ -660,6 +661,16 @@ pub fn request_to_json(req: &api::Request) -> Json {
         R::ListModels => obj(vec![("type", s("list_models"))]),
         R::ModelInfo { model } => obj(vec![("type", s("model_info")), ("model", s(model))]),
         R::Stats => obj(vec![("type", s("stats"))]),
+        R::Trace {
+            model,
+            image_seed,
+            window,
+        } => obj(vec![
+            ("type", s("trace")),
+            ("model", s(model)),
+            ("image_seed", u(*image_seed)),
+            ("window", u(*window)),
+        ]),
     }
 }
 
@@ -693,6 +704,11 @@ pub fn decode_request(frame: &[u8]) -> Result<api::Request> {
             model: str_field(&v, "model")?,
         }),
         "stats" => Ok(api::Request::Stats),
+        "trace" => Ok(api::Request::Trace {
+            model: str_field(&v, "model")?,
+            image_seed: u64_field(&v, "image_seed")?,
+            window: u64_field(&v, "window")?,
+        }),
         other => bail!("unknown request type {other:?}"),
     }
 }
@@ -792,6 +808,7 @@ fn snapshot_to_json(m: &ModelMetricsSnapshot) -> Json {
         ("served", u(m.served)),
         ("failed", u(m.failed)),
         ("rejected", u(m.rejected)),
+        ("traced", u(m.traced)),
         ("queue_depth", u(m.queue_depth)),
         ("samples", u(m.samples)),
         ("p50_us", opt_u(m.p50_us)),
@@ -806,11 +823,85 @@ fn snapshot_from_json(v: &Json) -> Result<ModelMetricsSnapshot> {
         served: u64_field(v, "served")?,
         failed: u64_field(v, "failed")?,
         rejected: u64_field(v, "rejected")?,
+        traced: u64_field(v, "traced")?,
         queue_depth: u64_field(v, "queue_depth")?,
         samples: u64_field(v, "samples")?,
         p50_us: opt_u64_field(v, "p50_us")?,
         p95_us: opt_u64_field(v, "p95_us")?,
         p99_us: opt_u64_field(v, "p99_us")?,
+    })
+}
+
+/// One flight-recorder [`Event`] as a compact 7-integer array
+/// `[kind, stage, chain, ci, slot, a, b]` (field order of the binary
+/// record). An object per event would triple the payload of a trace
+/// window for no information.
+fn event_to_json(e: &Event) -> Json {
+    Json::Arr(vec![
+        u(e.kind as u8 as u64),
+        u(e.stage as u64),
+        u(e.chain as u64),
+        u(e.ci as u64),
+        u(e.slot as u64),
+        u(e.a as u64),
+        u(e.b as u64),
+    ])
+}
+
+fn event_from_json(v: &Json) -> Result<Event> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("event must be a 7-integer array"))?;
+    if arr.len() != 7 {
+        bail!("event array has {} elements, expected 7", arr.len());
+    }
+    let int = |i: usize, what: &str, max: u64| -> Result<u64> {
+        let x = int_as_u64(&arr[i], what)?;
+        if x > max {
+            bail!("{what} out of range: {x}");
+        }
+        Ok(x)
+    };
+    let tag = int(0, "event kind", u8::MAX as u64)? as u8;
+    Ok(Event {
+        kind: EventKind::from_u8(tag)
+            .ok_or_else(|| anyhow::anyhow!("unknown event kind tag {tag}"))?,
+        stage: int(1, "event stage", u16::MAX as u64)? as u16,
+        chain: int(2, "event chain", u16::MAX as u64)? as u16,
+        ci: int(3, "event ci", u16::MAX as u64)? as u16,
+        slot: int(4, "event slot", u32::MAX as u64)? as u32,
+        a: int(5, "event a", u32::MAX as u64)? as u32,
+        b: int(6, "event b", u32::MAX as u64)? as u32,
+    })
+}
+
+fn trace_reply_to_json(t: &api::TraceReply) -> Json {
+    obj(vec![
+        ("model", stamp_to_json(&t.model)),
+        ("image_seed", u(t.image_seed)),
+        ("events_total", u(t.events_total)),
+        ("dropped", u(t.dropped)),
+        (
+            "events",
+            Json::Arr(t.events.iter().map(event_to_json).collect()),
+        ),
+        ("scores", i8s(&t.scores)),
+        ("heatmap", s(&t.heatmap)),
+    ])
+}
+
+fn trace_reply_from_json(v: &Json) -> Result<api::TraceReply> {
+    let arr = field(v, "events")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("field \"events\" must be an array"))?;
+    Ok(api::TraceReply {
+        model: stamp_from_json(field(v, "model")?)?,
+        image_seed: u64_field(v, "image_seed")?,
+        events_total: u64_field(v, "events_total")?,
+        dropped: u64_field(v, "dropped")?,
+        events: arr.iter().map(event_from_json).collect::<Result<_>>()?,
+        scores: i8_vec_field(v, "scores")?,
+        heatmap: str_field(v, "heatmap")?,
     })
 }
 
@@ -845,6 +936,13 @@ pub fn response_to_json(resp: &api::Response) -> Json {
                 Json::Arr(st.models.iter().map(snapshot_to_json).collect()),
             ),
         ]),
+        R::Trace(t) => {
+            let mut fields = vec![("type".to_string(), s("trace"))];
+            if let Json::Obj(body) = trace_reply_to_json(t) {
+                fields.extend(body);
+            }
+            Json::Obj(fields)
+        }
         R::Error { message } => obj(vec![("type", s("error")), ("message", s(message))]),
     }
 }
@@ -888,6 +986,7 @@ pub fn decode_response(frame: &[u8]) -> Result<api::Response> {
                 models: arr.iter().map(snapshot_from_json).collect::<Result<_>>()?,
             }))
         }
+        "trace" => Ok(api::Response::Trace(trace_reply_from_json(&v)?)),
         "error" => Ok(api::Response::Error {
             message: str_field(&v, "message")?,
         }),
@@ -1203,6 +1302,81 @@ mod tests {
                 arch_from_json(&decode(bad).unwrap()).is_err(),
                 "{bad} should be rejected"
             );
+        }
+    }
+
+    #[test]
+    fn trace_request_json_is_stable() {
+        let req = api::Request::Trace {
+            model: "tiny-cnn".to_string(),
+            image_seed: 7,
+            window: 64,
+        };
+        assert_eq!(
+            String::from_utf8(encode_request(&req)).unwrap(),
+            r#"{"type":"trace","model":"tiny-cnn","image_seed":7,"window":64}"#
+        );
+        assert_eq!(decode_request(&encode_request(&req)).unwrap(), req);
+    }
+
+    #[test]
+    fn trace_reply_roundtrips_bit_exactly() {
+        let reply = api::TraceReply {
+            model: ModelStamp {
+                name: Arc::from("tiny-cnn"),
+                id: 3,
+                version: 2,
+            },
+            image_seed: 7,
+            events_total: 9000,
+            dropped: 12,
+            events: vec![
+                Event {
+                    kind: EventKind::Acc,
+                    stage: 0,
+                    chain: 1,
+                    ci: 4,
+                    slot: 19,
+                    a: 2,
+                    b: 3,
+                },
+                Event {
+                    kind: EventKind::LinkTx,
+                    stage: 2,
+                    chain: u16::MAX,
+                    ci: u16::MAX,
+                    slot: u32::MAX,
+                    a: 4096,
+                    b: 1,
+                },
+            ],
+            scores: vec![-128, 0, 127],
+            heatmap: "link utilization\n####".to_string(),
+        };
+        let resp = api::Response::Trace(reply.clone());
+        let bytes = encode_response(&resp);
+        assert_eq!(decode_response(&bytes).unwrap(), resp);
+        // the events travel as compact 7-int arrays in record order
+        let v = decode(std::str::from_utf8(&bytes).unwrap()).unwrap();
+        assert_eq!(
+            v.get("events").unwrap().as_arr().unwrap()[0],
+            Json::Arr(vec![
+                Json::Int(0),
+                Json::Int(0),
+                Json::Int(1),
+                Json::Int(4),
+                Json::Int(19),
+                Json::Int(2),
+                Json::Int(3),
+            ])
+        );
+        // malformed events are typed errors, never panics
+        for bad in [
+            r#"{"type":"trace","model":{"name":"m","id":1,"version":1},"image_seed":0,"events_total":0,"dropped":0,"events":[[0,0,0,0,0,0]],"scores":[],"heatmap":""}"#,
+            r#"{"type":"trace","model":{"name":"m","id":1,"version":1},"image_seed":0,"events_total":0,"dropped":0,"events":[[99,0,0,0,0,0,0]],"scores":[],"heatmap":""}"#,
+            r#"{"type":"trace","model":{"name":"m","id":1,"version":1},"image_seed":0,"events_total":0,"dropped":0,"events":[[0,70000,0,0,0,0,0]],"scores":[],"heatmap":""}"#,
+        ] {
+            assert!(decode_response(bad.as_bytes()).is_err(), "{bad}");
         }
     }
 

@@ -100,7 +100,9 @@ use crate::coordinator::program::*;
 use crate::coordinator::schedule::{ConvGeometry, CYCLES_PER_SLOT};
 use crate::model::refcompute::Tensor;
 use crate::model::TensorShape;
+use crate::noc::link::LinkKind;
 use crate::noc::packet::{PsumArena, PsumRef};
+use crate::sim::flight::{FlightRecorder, NullProbe, Probe, RecorderConfig, Recording, NO_TILE};
 use crate::sim::pipeline::{run_pipelined, PipelineRun};
 use crate::sim::stats::Counters;
 use crate::tile::rofm::{PoolUnit, Rofm};
@@ -120,19 +122,10 @@ pub enum CaptureMode {
     Final,
 }
 
-/// What a tile did in a slot — recorded (optionally) for the
-/// schedule-agreement validation test and the Fig. 3(b) trace.
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub struct Action {
-    pub stage: usize,
-    pub chain: usize,
-    /// Chain position of the tile.
-    pub ci: usize,
-    /// Global pixel slot.
-    pub slot: usize,
-    pub kind: ActionKind,
-}
-
+/// What a tile did in a slot — offered to the engine's
+/// [`Probe`](crate::sim::flight::Probe) (the Fig. 3(b) trace and the
+/// flight recorder consume these via
+/// [`Probe::action`](crate::sim::flight::Probe::action)).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ActionKind {
     /// Accumulated (rx [+ PE]) and forwarded a partial sum.
@@ -321,7 +314,14 @@ struct Scratch {
 /// method takes the program as a parameter — so one core can sit
 /// behind a borrow ([`Simulator`]) or behind shared ownership
 /// ([`PooledEngine`]) and stay alive across batches and requests.
-struct EngineCore {
+///
+/// Instrumentation is a type parameter: the core is monomorphized over
+/// its [`Probe`]. With the default [`NullProbe`] every probe call
+/// compiles to nothing (its callbacks are empty `#[inline(always)]`
+/// bodies and `P::ENABLED` is a false constant), so the seam costs
+/// zero on the hot path — the `engine_perf` frozen-baseline gate runs
+/// against exactly this instantiation.
+struct EngineCore<P: Probe = NullProbe> {
     /// Per-stage tile runtime state (indexed by stage; a `Res` stage's
     /// slot holds its projection's chains).
     state: Vec<Vec<ChainRt>>,
@@ -337,13 +337,19 @@ struct EngineCore {
     capture: CaptureMode,
     stats: Counters,
     stage_stats: Vec<Counters>,
-    /// When set, tile actions are recorded (tests/trace tooling).
-    record_actions: bool,
-    actions: Vec<Action>,
+    /// The instrumentation sink (statically compiled out for
+    /// [`NullProbe`]).
+    probe: P,
 }
 
 impl EngineCore {
     fn new(program: &Program) -> Self {
+        Self::with_probe(program, NullProbe)
+    }
+}
+
+impl<P: Probe> EngineCore<P> {
+    fn with_probe(program: &Program, probe: P) -> Self {
         let n = program.stages.len();
         let mut skip_needed = vec![false; n];
         for stage in &program.stages {
@@ -374,8 +380,7 @@ impl EngineCore {
             capture: CaptureMode::default(),
             stats: Counters::new(),
             stage_stats: vec![Counters::new(); n],
-            record_actions: false,
-            actions: Vec::new(),
+            probe,
         }
     }
 
@@ -393,7 +398,7 @@ impl EngineCore {
     fn run_image(&mut self, program: &Program, input: &[i8]) -> Result<RunOutput> {
         // Scratch is taken out of `self` for the duration so the stage
         // methods can use it while `self` stays mutably borrowed for
-        // state/recording; restored unconditionally (its capacity is
+        // state/probe; restored unconditionally (its capacity is
         // the point — contents carry nothing across calls).
         let mut scratch = std::mem::take(&mut self.scratch);
         let result = self.run_image_inner(program, input, &mut scratch);
@@ -432,18 +437,21 @@ impl EngineCore {
         // result, so the final tensor is not copied twice any more.
         let mut final_out: Option<Tensor> = None;
         for (si, stage) in program.stages.iter().enumerate() {
+            self.probe.stage_enter(si);
             let mut st = Counters::new();
             let (out, slots) = match &stage.kind {
                 StageKind::Conv(c) => {
                     self.run_conv_stage(program, si, c, &cur, scratch, &mut st)?
                 }
-                StageKind::Fc(f) => self.run_fc_stage(program, f, &cur, scratch, &mut st)?,
+                StageKind::Fc(f) => {
+                    self.run_fc_stage(program, si, f, &cur, scratch, &mut st)?
+                }
                 StageKind::Pool(p) => {
                     let unit = self.pool_state[si]
                         .as_mut()
                         .expect("pool unit built at engine construction");
                     unit.reset();
-                    run_pool_stage(p, &cur, unit, scratch, &mut st)?
+                    run_pool_stage(p, si, &cur, unit, scratch, &mut st, &mut self.probe)?
                 }
                 StageKind::Res(r) => {
                     // The skip source: the captured stage tensor
@@ -476,7 +484,8 @@ impl EngineCore {
                         None => None,
                     };
                     let skip: &Tensor = projected.as_ref().unwrap_or(skip_src);
-                    let res = run_res_stage(r, &cur, skip, scratch, &mut st)?;
+                    let res =
+                        run_res_stage(r, si, &cur, skip, scratch, &mut st, &mut self.probe)?;
                     // put the retained skip back (a later stage may
                     // also read it, and its buffer is reused next image)
                     if let Some(t) = taken {
@@ -497,7 +506,16 @@ impl EngineCore {
             let entry = stage_entry_chip(stage);
             if let (Some(prev), Some(this)) = (prev_exit_chip, entry) {
                 if prev != this {
-                    st.interchip_bits += 8 * cur.shape.len() as u64;
+                    let bits = 8 * cur.shape.len() as u64;
+                    st.interchip_bits += bits;
+                    self.probe.link(
+                        si,
+                        NO_TILE as usize,
+                        NO_TILE as usize,
+                        0,
+                        LinkKind::InterChip,
+                        bits,
+                    );
                 }
             }
             prev_exit_chip = stage_exit_chip(stage).or(prev_exit_chip);
@@ -505,6 +523,7 @@ impl EngineCore {
             st.steps += slots * CYCLES_PER_SLOT as u64;
             st.tiles_used += stage.tile_count() as u64;
             total_cycles += slots * CYCLES_PER_SLOT as u64;
+            self.probe.stage_exit(si, slots as usize);
             self.stage_stats[si].merge(&st);
             self.stats.merge(&st);
             stage_slots.push(slots);
@@ -680,13 +699,20 @@ impl EngineCore {
                         st.rifm_buffer_accesses += 1;
                         st.rifm_ctrl_steps += 1;
                         if cfg.rifm.forward {
-                            let cross = ci + 1 < n
-                                && chain.tiles[ci + 1].coord.chip != cfg.coord.chip;
-                            if cross {
-                                st.interchip_bits += bits * pack as u64;
+                            let kind = if ci + 1 < n {
+                                LinkKind::between(
+                                    cfg.coord.chip,
+                                    chain.tiles[ci + 1].coord.chip,
+                                )
                             } else {
-                                st.onchip_link_bits += bits * pack as u64;
+                                LinkKind::OnChip
+                            };
+                            match kind {
+                                LinkKind::InterChip => st.interchip_bits += bits * pack as u64,
+                                LinkKind::OnChip => st.onchip_link_bits += bits * pack as u64,
                             }
+                            self.probe
+                                .link(si, chain.mblock, ci, slot, kind, bits * pack as u64);
                         }
                     } else {
                         st.rifm_shifts += 1;
@@ -742,7 +768,7 @@ impl EngineCore {
                     } else {
                         let prev = if cfg.is_row_head {
                             let popped = tiles[ci].rofm.pop_group(st);
-                            self.record(si, chain.mblock, ci, slot, ActionKind::Pop);
+                            self.probe.action(si, chain.mblock, ci, slot, ActionKind::Pop);
                             popped
                         } else {
                             tiles[ci].incoming.pop_front()
@@ -779,7 +805,8 @@ impl EngineCore {
                         } else {
                             Rofm::quantize_into(sum, c.shift, &mut scratch.vals, st);
                         }
-                        self.record(si, chain.mblock, ci, slot, ActionKind::Emit { opos });
+                        self.probe
+                            .action(si, chain.mblock, ci, slot, ActionKind::Emit { opos });
                         for (lane, &v) in scratch.vals.iter().enumerate() {
                             conv_out.set(chain.m_lo + lane, oy, ox, v);
                         }
@@ -795,6 +822,8 @@ impl EngineCore {
                         let obits = (m_lanes * 8) as u64;
                         Rofm::charge_tx(obits, st);
                         st.onchip_link_bits += obits;
+                        self.probe
+                            .link(si, chain.mblock, ci, slot, LinkKind::OnChip, obits);
                         if let Some(r) = sum_ref {
                             arena.free(r);
                         }
@@ -803,21 +832,44 @@ impl EngineCore {
                         let r = sum_ref.expect("non-last tiles always carry a slab psum");
                         let pbits = (lanes * 32) as u64;
                         Rofm::charge_tx(pbits, st);
-                        if chain.tiles[ci + 1].coord.chip != cfg.coord.chip {
-                            st.interchip_bits += pbits;
-                        } else {
-                            st.onchip_link_bits += pbits;
+                        let kind =
+                            LinkKind::between(cfg.coord.chip, chain.tiles[ci + 1].coord.chip);
+                        match kind {
+                            LinkKind::InterChip => st.interchip_bits += pbits,
+                            LinkKind::OnChip => st.onchip_link_bits += pbits,
                         }
-                        self.record(si, chain.mblock, ci, slot, ActionKind::Acc { opos });
+                        self.probe.link(si, chain.mblock, ci, slot, kind, pbits);
+                        self.probe
+                            .action(si, chain.mblock, ci, slot, ActionKind::Acc { opos });
                         let next_is_row_head = chain.tiles[ci + 1].is_row_head;
                         if next_is_row_head {
                             tiles[ci + 1].rofm.push_group(r, lanes, st);
-                            self.record(si, chain.mblock, ci + 1, slot, ActionKind::Push);
+                            self.probe
+                                .action(si, chain.mblock, ci + 1, slot, ActionKind::Push);
                         } else {
                             Rofm::charge_rx(pbits, st);
                             tiles[ci + 1].incoming.push_back(r);
                         }
                     }
+                }
+                // End-of-slot occupancy samples (Fig. 6-style timelines):
+                // group-sums queued per row-head FIFO + psum slab usage.
+                // Guarded on the probe's static switch so the NullProbe
+                // engine never even walks the tiles.
+                if P::ENABLED {
+                    for (ci, t) in tiles.iter().enumerate() {
+                        if chain.tiles[ci].is_row_head {
+                            self.probe.fifo_depth(
+                                si,
+                                chain.mblock,
+                                ci,
+                                slot,
+                                t.rofm.fifo_len(),
+                            );
+                        }
+                    }
+                    let (in_use, cap) = arena.occupancy();
+                    self.probe.arena_in_use(si, chain.mblock, slot, in_use, cap);
                 }
             }
 
@@ -863,6 +915,7 @@ impl EngineCore {
     fn run_fc_stage(
         &mut self,
         program: &Program,
+        si: usize,
         f: &FcStage,
         input: &Tensor,
         scratch: &mut Scratch,
@@ -877,7 +930,7 @@ impl EngineCore {
         }
         let mut out = vec![0i8; f.out_features];
         let mut max_slot = 0u64;
-        for col in &f.columns {
+        for (coli, col) in f.columns.iter().enumerate() {
             for (rb, t) in col.tiles.iter().enumerate() {
                 // slice of the input vector this tile multiplies
                 let i_lo = rb * program.arch.n_c;
@@ -891,7 +944,9 @@ impl EngineCore {
                 st.rifm_ctrl_steps += 1;
                 st.sched_fetches += 1;
                 st.rofm_ctrl_steps += 1;
-                st.onchip_link_bits += (t.rows * 8) as u64;
+                let ibits = (t.rows * 8) as u64;
+                st.onchip_link_bits += ibits;
+                self.probe.link(si, coli, rb, rb, LinkKind::OnChip, ibits);
                 let pe = Pe::borrowed(&t.weights, t.rows, t.cols);
                 if rb == 0 {
                     // column head: the accumulator starts from this MVM
@@ -904,11 +959,13 @@ impl EngineCore {
                     pe.mvm_into(&scratch.fc_x, &mut scratch.mac, st);
                     // psum moved one hop down the column
                     let pbits = (scratch.fc_acc.len() * 32) as u64;
-                    if col.tiles[rb - 1].coord.chip != t.coord.chip {
-                        st.interchip_bits += pbits;
-                    } else {
-                        st.onchip_link_bits += pbits;
+                    let kind =
+                        LinkKind::between(col.tiles[rb - 1].coord.chip, t.coord.chip);
+                    match kind {
+                        LinkKind::InterChip => st.interchip_bits += pbits,
+                        LinkKind::OnChip => st.onchip_link_bits += pbits,
                     }
+                    self.probe.link(si, coli, rb, rb, kind, pbits);
                     Rofm::charge_rx(pbits, st);
                     Rofm::add_psum_slices(&mut scratch.fc_acc, &scratch.mac, st);
                 }
@@ -923,24 +980,20 @@ impl EngineCore {
             let obits = (scratch.vals.len() * 8) as u64;
             Rofm::charge_tx(obits, st);
             st.onchip_link_bits += obits;
+            self.probe.link(
+                si,
+                coli,
+                col.tiles.len() - 1,
+                col.tiles.len(),
+                LinkKind::OnChip,
+                obits,
+            );
             out[col.c_lo..col.c_hi].copy_from_slice(&scratch.vals);
         }
         Ok((
             Tensor::new(TensorShape::new(f.out_features, 1, 1), out),
             max_slot + 1,
         ))
-    }
-
-    fn record(&mut self, stage: usize, chain: usize, ci: usize, slot: usize, kind: ActionKind) {
-        if self.record_actions {
-            self.actions.push(Action {
-                stage,
-                chain,
-                ci,
-                slot,
-                kind,
-            });
-        }
     }
 }
 
@@ -949,25 +1002,23 @@ impl EngineCore {
 /// images run, plus a pool of per-thread worker engines that
 /// [`Self::run_batch_threads`] builds once and reuses across batch
 /// calls (no per-batch state spin-up).
-pub struct Simulator<'p> {
+pub struct Simulator<'p, P: Probe = NullProbe> {
     program: &'p Program,
-    core: EngineCore,
+    core: EngineCore<P>,
     /// Reusable worker engines for the batched path: grown on first
     /// use, counters reset and tile state reused on every subsequent
-    /// batch.
-    batch_workers: Vec<EngineCore>,
+    /// batch. Worker probes are forked from the main probe and merged
+    /// back in chunk order after every batch.
+    batch_workers: Vec<EngineCore<P>>,
 }
 
 impl<'p> Simulator<'p> {
     /// A simulator capturing every stage tensor
     /// ([`CaptureMode::AllStages`], the historical default — tests and
-    /// tooling read intermediate tensors).
+    /// tooling read intermediate tensors). Instrumentation is the
+    /// zero-cost [`NullProbe`].
     pub fn new(program: &'p Program) -> Self {
-        Self {
-            program,
-            core: EngineCore::new(program),
-            batch_workers: Vec::new(),
-        }
+        Self::with_probe(program, NullProbe)
     }
 
     /// A simulator with an explicit [`CaptureMode`] — use
@@ -978,11 +1029,40 @@ impl<'p> Simulator<'p> {
         s.core.capture = capture;
         s
     }
+}
 
-    pub fn with_action_recording(program: &'p Program) -> Self {
-        let mut s = Self::new(program);
-        s.core.record_actions = true;
-        s
+impl<'p> Simulator<'p, FlightRecorder> {
+    /// A simulator whose engine streams every instrumentation event
+    /// (tile actions, link transfers, stage boundaries, occupancy
+    /// samples) into a bounded flight-recorder ring — see
+    /// [`crate::sim::flight`].
+    pub fn with_recorder(program: &'p Program, cfg: RecorderConfig) -> Self {
+        Self::with_probe(program, FlightRecorder::new(cfg))
+    }
+
+    /// Snapshot the recorded event stream. After a threaded batch the
+    /// per-worker recordings are already merged in chunk order, so the
+    /// stream is in sequential image order regardless of thread count.
+    pub fn recording(&self) -> Recording {
+        self.core.probe.recording()
+    }
+
+    /// Drop buffered events and restart the eviction counter.
+    pub fn clear_recording(&mut self) {
+        self.core.probe.clear();
+    }
+}
+
+impl<'p, P: Probe> Simulator<'p, P> {
+    /// A simulator over an explicit probe (see [`crate::sim::flight`]
+    /// for the event seam; [`Simulator::with_recorder`] is the common
+    /// instrumented constructor).
+    pub fn with_probe(program: &'p Program, probe: P) -> Self {
+        Self {
+            program,
+            core: EngineCore::with_probe(program, probe),
+            batch_workers: Vec::new(),
+        }
     }
 
     /// Change the capture mode for subsequent runs (batch workers pick
@@ -1004,12 +1084,6 @@ impl<'p> Simulator<'p> {
     /// Per-stage counters.
     pub fn stage_stats(&self) -> &[Counters] {
         &self.core.stage_stats
-    }
-
-    /// Recorded tile actions (populated only with action recording on,
-    /// see [`Self::with_action_recording`]).
-    pub fn actions(&self) -> &[Action] {
-        &self.core.actions
     }
 
     /// Simulate one inference.
@@ -1046,8 +1120,11 @@ impl<'p> Simulator<'p> {
     /// here means the engine and the throughput model diverged, which
     /// Table IV numbers must never silently survive).
     ///
-    /// When `record_actions` is set the batch falls back to one thread
-    /// so the action log stays in deterministic image order.
+    /// Recording probes do **not** serialize the batch: each worker
+    /// runs its own forked probe, and the per-worker event streams are
+    /// absorbed back in chunk order, so the recorded stream equals the
+    /// sequential-image-order stream for any thread count (as long as
+    /// no single worker overflows its ring).
     pub fn run_batch_threads<T: AsRef<[i8]> + Sync>(
         &mut self,
         inputs: &[T],
@@ -1056,10 +1133,7 @@ impl<'p> Simulator<'p> {
         if inputs.is_empty() {
             bail!("run_batch needs at least one image");
         }
-        let mut threads = threads.clamp(1, inputs.len());
-        if self.core.record_actions {
-            threads = 1;
-        }
+        let threads = threads.clamp(1, inputs.len());
         let t0 = Instant::now();
         let program = self.program;
         let chunk_size = inputs.len().div_ceil(threads);
@@ -1070,22 +1144,28 @@ impl<'p> Simulator<'p> {
 
         let mut outputs: Vec<RunOutput> = Vec::with_capacity(inputs.len());
         if threads == 1 {
-            // Run on *this* engine (keeps action recording coherent).
+            // Run on *this* engine (its probe records directly).
             for input in inputs {
                 outputs.push(self.core.run_image(program, input.as_ref())?);
             }
         } else {
             // Grow the persistent worker-engine pool to the spawned
             // worker count, then lend one engine to each scoped thread.
+            // Worker probes are forked from the main probe (same
+            // configuration, empty buffers).
             while self.batch_workers.len() < threads {
-                self.batch_workers.push(EngineCore::new(program));
+                self.batch_workers
+                    .push(EngineCore::with_probe(program, self.core.probe.fork()));
             }
             let capture = self.core.capture;
             let workers = &mut self.batch_workers[..threads];
             for w in workers.iter_mut() {
                 w.reset_stats();
-                // workers inherit this simulator's capture mode
+                // workers inherit this simulator's capture mode; any
+                // events left from a previous (possibly failed) batch
+                // are dropped
                 w.capture = capture;
+                w.probe.clear();
             }
             let joined: Vec<std::thread::Result<Result<Vec<RunOutput>>>> =
                 std::thread::scope(|s| {
@@ -1109,15 +1189,18 @@ impl<'p> Simulator<'p> {
                     res.map_err(|_| anyhow::anyhow!("batch worker thread panicked"))??;
                 outputs.extend(outs);
             }
-            // Merge per-worker counters in chunk order (deterministic).
-            // Reached only when every chunk succeeded, so a failed
-            // batch never pollutes the aggregate stats (worker counters
+            // Merge per-worker counters and probe events in chunk
+            // order (deterministic: concatenating contiguous chunks in
+            // order reproduces the sequential image order). Reached
+            // only when every chunk succeeded, so a failed batch never
+            // pollutes the aggregate stats or the recording (workers
             // are reset at the top of the next batch either way).
-            for w in &self.batch_workers[..threads] {
+            for w in &mut self.batch_workers[..threads] {
                 self.core.stats.merge(&w.stats);
                 for (agg, st) in self.core.stage_stats.iter_mut().zip(&w.stage_stats) {
                     agg.merge(st);
                 }
+                self.core.probe.absorb(&mut w.probe);
             }
         }
         let wall = t0.elapsed();
@@ -1321,12 +1404,14 @@ fn stage_exit_chip(stage: &Stage) -> Option<usize> {
 /// pooled "during data transmission between arrays" (Section III-C).
 /// The pooling unit persists on the engine (reset by the caller); the
 /// per-pixel lane gather uses reused scratch (§Perf).
-fn run_pool_stage(
+fn run_pool_stage<P: Probe>(
     p: &PoolStage,
+    si: usize,
     input: &Tensor,
     unit: &mut PoolUnit,
     scratch: &mut Scratch,
     st: &mut Counters,
+    probe: &mut P,
 ) -> Result<(Tensor, u64)> {
     assert_eq!(input.shape, p.in_shape, "pool stage input shape");
     let mut out = Tensor::zeros(p.out_shape);
@@ -1340,6 +1425,14 @@ fn run_pool_stage(
             // stream hop between arrays
             let bits = (scratch.lanes_a.len() * 8) as u64;
             st.onchip_link_bits += bits;
+            probe.link(
+                si,
+                NO_TILE as usize,
+                NO_TILE as usize,
+                slots as usize,
+                LinkKind::OnChip,
+                bits,
+            );
             Rofm::charge_rx(bits, st);
             st.sched_fetches += 1;
             st.rofm_ctrl_steps += 1;
@@ -1358,12 +1451,14 @@ fn run_pool_stage(
 /// shortcut (Table II `Bp.`) and is added to the main stream, ReLU
 /// fused. §Perf: pixel-lane gathers, the bypass copy and the add
 /// result all live in reused scratch.
-fn run_res_stage(
+fn run_res_stage<P: Probe>(
     r: &ResStage,
+    si: usize,
     main: &Tensor,
     skip: &Tensor,
     scratch: &mut Scratch,
     st: &mut Counters,
+    probe: &mut P,
 ) -> Result<(Tensor, u64)> {
     if main.shape != skip.shape {
         bail!("res stage: main {} != skip {}", main.shape, skip.shape);
@@ -1384,6 +1479,14 @@ fn run_res_stage(
             // skip beat bypasses through the shortcut: one link hop
             let bits = (scratch.lanes_b.len() * 8) as u64;
             st.onchip_link_bits += bits;
+            probe.link(
+                si,
+                NO_TILE as usize,
+                NO_TILE as usize,
+                slots as usize,
+                LinkKind::OnChip,
+                bits,
+            );
             Rofm::bypass_into(&scratch.lanes_b, &mut scratch.vals, st);
             st.sched_fetches += 1;
             st.rofm_ctrl_steps += 1;

@@ -1,0 +1,1354 @@
+//! Flight recorder: the engine's pluggable observability plane.
+//!
+//! The paper's whole argument is *where data moves* — Fig. 3(b) and
+//! Fig. 6 are timing/occupancy diagrams, not endpoint numbers. This
+//! module turns the engine's instrumentation into a first-class
+//! subsystem with three pieces:
+//!
+//! * [`Probe`] — the event seam threaded through `EngineCore`. Every
+//!   architectural event the engine charges (tile actions, psum
+//!   push/pop, link transfers with their [`LinkKind`], stage
+//!   enter/exit, FIFO/arena occupancy samples) is also offered to the
+//!   engine's probe. [`NullProbe`] is the statically zero-cost default:
+//!   its callbacks are empty `#[inline(always)]` bodies and its
+//!   [`Probe::ENABLED`] constant is `false`, so with the default
+//!   `Simulator` the monomorphized hot path contains no probe code at
+//!   all — the `engine_perf` frozen-baseline gate measures this.
+//! * [`FlightRecorder`] — a probe that appends fixed-width binary
+//!   event records ([`Event`], [`EVENT_BYTES`] bytes each) to a
+//!   bounded ring buffer. Memory is capped by
+//!   [`RecorderConfig::capacity`]; once full, the oldest events are
+//!   evicted and counted in [`Recording::dropped`]. Recorders fork
+//!   per batch worker and merge back in chunk order, so recording no
+//!   longer serializes `run_batch_threads`.
+//! * Analysis over a [`Recording`]: per-link/per-tile
+//!   [`StageTimelines`], a terminal [`LinkHeatmap`] of link
+//!   utilization over time, [`diff`] between two recordings (first
+//!   divergent event + per-stage deltas — the frozen-baseline trick
+//!   from the perf gate, generalized), and a [`Stepper`] with
+//!   breakpoints on (tile, cycle, event kind) for `domino debug`.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt::Write as _;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::schedule::CYCLES_PER_SLOT;
+use crate::noc::link::LinkKind;
+use crate::sim::engine::ActionKind;
+
+/// Sentinel for events that are not scoped to one tile (stage
+/// boundaries, arena samples).
+pub const NO_TILE: u16 = u16::MAX;
+
+/// The engine's instrumentation seam. One probe instance lives inside
+/// each `EngineCore`; the engine invokes the callbacks at the exact
+/// points where it charges the corresponding [`Counters`]
+/// (crate::sim::stats::Counters) events, so a recording is a faithful
+/// event-level expansion of the counters.
+///
+/// `ENABLED` is a `const`: call sites that do extra work to assemble
+/// probe arguments guard on `P::ENABLED`, which constant-folds away
+/// for [`NullProbe`]. Implementations must be cheap and infallible —
+/// they run on the hot path when enabled.
+pub trait Probe: Send {
+    /// Statically `true` when this probe observes events. `false`
+    /// compiles every probe call site out of the monomorphized engine.
+    const ENABLED: bool;
+
+    /// A tile action: psum accumulate/forward, group-sum push/pop, or
+    /// output emit (the Fig. 3(b) vocabulary).
+    fn action(&mut self, stage: usize, chain: usize, ci: usize, slot: usize, kind: ActionKind);
+
+    /// `bits` moved over one link of `link` kind, leaving tile `ci`.
+    fn link(
+        &mut self,
+        stage: usize,
+        chain: usize,
+        ci: usize,
+        slot: usize,
+        link: LinkKind,
+        bits: u64,
+    );
+
+    /// Stage `stage` starts processing the current image.
+    fn stage_enter(&mut self, stage: usize);
+
+    /// Stage `stage` finished after `slots` pixel slots.
+    fn stage_exit(&mut self, stage: usize, slots: usize);
+
+    /// Row-head ROFM FIFO depth (group-sums queued) after slot `slot`.
+    fn fifo_depth(&mut self, stage: usize, chain: usize, ci: usize, slot: usize, depth: usize);
+
+    /// Psum arena occupancy after slot `slot`: `in_use` of `slots`
+    /// slab slots allocated.
+    fn arena_in_use(
+        &mut self,
+        stage: usize,
+        chain: usize,
+        slot: usize,
+        in_use: usize,
+        slots: usize,
+    );
+
+    /// A fresh probe of the same configuration for a batch worker
+    /// (empty event buffer).
+    fn fork(&self) -> Self
+    where
+        Self: Sized;
+
+    /// Drop any buffered events (batch start for reused workers).
+    fn clear(&mut self);
+
+    /// Merge a worker probe's events into this one, in order. Called
+    /// once per worker in chunk order after a threaded batch, so the
+    /// merged stream is the sequential-image-order stream.
+    fn absorb(&mut self, worker: &mut Self)
+    where
+        Self: Sized;
+}
+
+/// The default probe: observes nothing, costs nothing. Every callback
+/// is an empty `#[inline(always)]` body and [`Probe::ENABLED`] is
+/// `false`, so the `EngineCore<NullProbe>` instantiation — the one
+/// every existing constructor produces — is bit-for-bit the
+/// uninstrumented engine.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NullProbe;
+
+impl Probe for NullProbe {
+    const ENABLED: bool = false;
+    #[inline(always)]
+    fn action(&mut self, _: usize, _: usize, _: usize, _: usize, _: ActionKind) {}
+    #[inline(always)]
+    fn link(&mut self, _: usize, _: usize, _: usize, _: usize, _: LinkKind, _: u64) {}
+    #[inline(always)]
+    fn stage_enter(&mut self, _: usize) {}
+    #[inline(always)]
+    fn stage_exit(&mut self, _: usize, _: usize) {}
+    #[inline(always)]
+    fn fifo_depth(&mut self, _: usize, _: usize, _: usize, _: usize, _: usize) {}
+    #[inline(always)]
+    fn arena_in_use(&mut self, _: usize, _: usize, _: usize, _: usize, _: usize) {}
+    #[inline(always)]
+    fn fork(&self) -> Self {
+        NullProbe
+    }
+    #[inline(always)]
+    fn clear(&mut self) {}
+    #[inline(always)]
+    fn absorb(&mut self, _: &mut Self) {}
+}
+
+/// Event discriminant, stored as one byte in the fixed-width record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum EventKind {
+    /// Partial-sum accumulated in tile registers and forwarded
+    /// (`a`/`b` = output position). Fig. 3(b)'s black circles.
+    Acc = 0,
+    /// Group-sum queued into a row-head ROFM FIFO (red circles).
+    Push = 1,
+    /// Group-sum popped to seed the next kernel row.
+    Pop = 2,
+    /// The last tile's activation emitted an output (`a`/`b` = opos).
+    Emit = 3,
+    /// Link transfer: `a` = bits, `b` = 1 for inter-chip, 0 on-chip.
+    LinkTx = 4,
+    /// Stage started processing the image.
+    StageEnter = 5,
+    /// Stage finished; `a` = pixel slots it ran.
+    StageExit = 6,
+    /// Row-head FIFO depth sample: `a` = group-sums queued.
+    FifoDepth = 7,
+    /// Psum arena sample: `a` = slab slots in use, `b` = capacity.
+    ArenaInUse = 8,
+}
+
+impl EventKind {
+    /// All kinds, in tag order.
+    pub const ALL: [EventKind; 9] = [
+        EventKind::Acc,
+        EventKind::Push,
+        EventKind::Pop,
+        EventKind::Emit,
+        EventKind::LinkTx,
+        EventKind::StageEnter,
+        EventKind::StageExit,
+        EventKind::FifoDepth,
+        EventKind::ArenaInUse,
+    ];
+
+    /// Decode the one-byte tag.
+    pub fn from_u8(v: u8) -> Option<EventKind> {
+        EventKind::ALL.get(v as usize).copied()
+    }
+
+    /// Short name, accepted back by [`EventKind::parse`] (CLI
+    /// breakpoint specs).
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventKind::Acc => "acc",
+            EventKind::Push => "push",
+            EventKind::Pop => "pop",
+            EventKind::Emit => "emit",
+            EventKind::LinkTx => "link",
+            EventKind::StageEnter => "enter",
+            EventKind::StageExit => "exit",
+            EventKind::FifoDepth => "fifo",
+            EventKind::ArenaInUse => "arena",
+        }
+    }
+
+    /// Parse a short name (case-insensitive).
+    pub fn parse(s: &str) -> Option<EventKind> {
+        let s = s.to_ascii_lowercase();
+        EventKind::ALL.into_iter().find(|k| k.label() == s)
+    }
+}
+
+/// Serialized size of one [`Event`] record.
+pub const EVENT_BYTES: usize = 20;
+
+/// One fixed-width flight-recorder record. `slot` is the stage-local
+/// pixel slot ([`Event::cycle`] converts to cycles at the schedule's
+/// [`CYCLES_PER_SLOT`]); `a`/`b` are the kind-specific payload (see
+/// [`EventKind`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub kind: EventKind,
+    pub stage: u16,
+    /// Conv chain id (`mblock`) / FC column; [`NO_TILE`] when not
+    /// chain-scoped.
+    pub chain: u16,
+    /// Tile position along the chain; [`NO_TILE`] when not tile-scoped.
+    pub ci: u16,
+    pub slot: u32,
+    pub a: u32,
+    pub b: u32,
+}
+
+impl Event {
+    /// Stage-local cycle this event's slot starts at.
+    pub fn cycle(&self) -> u64 {
+        self.slot as u64 * CYCLES_PER_SLOT as u64
+    }
+
+    /// Link kind for [`EventKind::LinkTx`] events.
+    pub fn link_kind(&self) -> Option<LinkKind> {
+        match self.kind {
+            EventKind::LinkTx if self.b == 1 => Some(LinkKind::InterChip),
+            EventKind::LinkTx => Some(LinkKind::OnChip),
+            _ => None,
+        }
+    }
+
+    /// Fixed-width little-endian encoding (the "compact binary" form;
+    /// determinism tests byte-compare whole streams).
+    pub fn to_bytes(&self) -> [u8; EVENT_BYTES] {
+        let mut out = [0u8; EVENT_BYTES];
+        out[0] = self.kind as u8;
+        // out[1] is a pad byte, kept zero
+        out[2..4].copy_from_slice(&self.stage.to_le_bytes());
+        out[4..6].copy_from_slice(&self.chain.to_le_bytes());
+        out[6..8].copy_from_slice(&self.ci.to_le_bytes());
+        out[8..12].copy_from_slice(&self.slot.to_le_bytes());
+        out[12..16].copy_from_slice(&self.a.to_le_bytes());
+        out[16..20].copy_from_slice(&self.b.to_le_bytes());
+        out
+    }
+
+    /// Decode one fixed-width record.
+    pub fn from_bytes(b: &[u8; EVENT_BYTES]) -> Result<Event> {
+        let kind = EventKind::from_u8(b[0])
+            .with_context(|| format!("unknown flight event tag {}", b[0]))?;
+        Ok(Event {
+            kind,
+            stage: u16::from_le_bytes([b[2], b[3]]),
+            chain: u16::from_le_bytes([b[4], b[5]]),
+            ci: u16::from_le_bytes([b[6], b[7]]),
+            slot: u32::from_le_bytes([b[8], b[9], b[10], b[11]]),
+            a: u32::from_le_bytes([b[12], b[13], b[14], b[15]]),
+            b: u32::from_le_bytes([b[16], b[17], b[18], b[19]]),
+        })
+    }
+
+    /// One-line human rendering for the stepper/CLI.
+    pub fn describe(&self) -> String {
+        let loc = if self.ci == NO_TILE {
+            format!("stage {}", self.stage)
+        } else {
+            format!("stage {} chain {} tile {}", self.stage, self.chain, self.ci)
+        };
+        match self.kind {
+            EventKind::Acc => format!(
+                "{loc} slot {} cycle {}: partial-sum acc -> opos ({}, {})",
+                self.slot,
+                self.cycle(),
+                self.a,
+                self.b
+            ),
+            EventKind::Push => format!(
+                "{loc} slot {} cycle {}: group-sum queued (ROFM push)",
+                self.slot,
+                self.cycle()
+            ),
+            EventKind::Pop => format!(
+                "{loc} slot {} cycle {}: group-sum popped (ROFM pop)",
+                self.slot,
+                self.cycle()
+            ),
+            EventKind::Emit => format!(
+                "{loc} slot {} cycle {}: output emit -> opos ({}, {})",
+                self.slot,
+                self.cycle(),
+                self.a,
+                self.b
+            ),
+            EventKind::LinkTx => format!(
+                "{loc} slot {} cycle {}: {} b over {} link",
+                self.slot,
+                self.cycle(),
+                self.a,
+                if self.b == 1 { "inter-chip" } else { "on-chip" }
+            ),
+            EventKind::StageEnter => format!("{loc}: enter"),
+            EventKind::StageExit => format!("{loc}: exit after {} slots", self.a),
+            EventKind::FifoDepth => format!(
+                "{loc} slot {}: ROFM FIFO depth {}",
+                self.slot, self.a
+            ),
+            EventKind::ArenaInUse => format!(
+                "{loc} slot {}: psum arena {}/{} slots in use",
+                self.slot, self.a, self.b
+            ),
+        }
+    }
+}
+
+/// Recorder sizing. The ring holds at most `capacity` events
+/// ([`EVENT_BYTES`] bytes each once serialized); the buffer itself
+/// never exceeds `capacity` in-memory records, which is the bounded-
+/// memory guarantee across arbitrarily long runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecorderConfig {
+    /// Maximum events retained; oldest evicted first.
+    pub capacity: usize,
+}
+
+impl RecorderConfig {
+    /// A recorder keeping at most `capacity` events.
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self { capacity }
+    }
+}
+
+impl Default for RecorderConfig {
+    fn default() -> Self {
+        // ~20 MiB ceiling: comfortably one image of any zoo model, a
+        // hard cap for long batches.
+        Self { capacity: 1 << 20 }
+    }
+}
+
+/// A probe that records every event into a bounded ring buffer.
+#[derive(Clone, Debug)]
+pub struct FlightRecorder {
+    cap: usize,
+    buf: VecDeque<Event>,
+    dropped: u64,
+}
+
+impl FlightRecorder {
+    pub fn new(cfg: RecorderConfig) -> Self {
+        Self {
+            cap: cfg.capacity.max(1),
+            buf: VecDeque::new(),
+            dropped: 0,
+        }
+    }
+
+    fn push(&mut self, e: Event) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(e);
+    }
+
+    /// Events currently buffered (≤ capacity, always).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Ring capacity in events.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Events evicted so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Snapshot the buffered stream (oldest first).
+    pub fn recording(&self) -> Recording {
+        Recording {
+            events: self.buf.iter().copied().collect(),
+            dropped: self.dropped,
+        }
+    }
+}
+
+impl Probe for FlightRecorder {
+    const ENABLED: bool = true;
+
+    fn action(&mut self, stage: usize, chain: usize, ci: usize, slot: usize, kind: ActionKind) {
+        let (kind, a, b) = match kind {
+            ActionKind::Acc { opos } => (EventKind::Acc, opos.0 as u32, opos.1 as u32),
+            ActionKind::Push => (EventKind::Push, 0, 0),
+            ActionKind::Pop => (EventKind::Pop, 0, 0),
+            ActionKind::Emit { opos } => (EventKind::Emit, opos.0 as u32, opos.1 as u32),
+        };
+        self.push(Event {
+            kind,
+            stage: stage as u16,
+            chain: chain as u16,
+            ci: ci as u16,
+            slot: slot as u32,
+            a,
+            b,
+        });
+    }
+
+    fn link(
+        &mut self,
+        stage: usize,
+        chain: usize,
+        ci: usize,
+        slot: usize,
+        link: LinkKind,
+        bits: u64,
+    ) {
+        self.push(Event {
+            kind: EventKind::LinkTx,
+            stage: stage as u16,
+            chain: chain as u16,
+            ci: ci as u16,
+            slot: slot as u32,
+            a: bits.min(u32::MAX as u64) as u32,
+            b: (link == LinkKind::InterChip) as u32,
+        });
+    }
+
+    fn stage_enter(&mut self, stage: usize) {
+        self.push(Event {
+            kind: EventKind::StageEnter,
+            stage: stage as u16,
+            chain: NO_TILE,
+            ci: NO_TILE,
+            slot: 0,
+            a: 0,
+            b: 0,
+        });
+    }
+
+    fn stage_exit(&mut self, stage: usize, slots: usize) {
+        self.push(Event {
+            kind: EventKind::StageExit,
+            stage: stage as u16,
+            chain: NO_TILE,
+            ci: NO_TILE,
+            slot: 0,
+            a: slots.min(u32::MAX as usize) as u32,
+            b: 0,
+        });
+    }
+
+    fn fifo_depth(&mut self, stage: usize, chain: usize, ci: usize, slot: usize, depth: usize) {
+        self.push(Event {
+            kind: EventKind::FifoDepth,
+            stage: stage as u16,
+            chain: chain as u16,
+            ci: ci as u16,
+            slot: slot as u32,
+            a: depth.min(u32::MAX as usize) as u32,
+            b: 0,
+        });
+    }
+
+    fn arena_in_use(
+        &mut self,
+        stage: usize,
+        chain: usize,
+        slot: usize,
+        in_use: usize,
+        slots: usize,
+    ) {
+        self.push(Event {
+            kind: EventKind::ArenaInUse,
+            stage: stage as u16,
+            chain: chain as u16,
+            ci: NO_TILE,
+            slot: slot as u32,
+            a: in_use.min(u32::MAX as usize) as u32,
+            b: slots.min(u32::MAX as usize) as u32,
+        });
+    }
+
+    fn fork(&self) -> Self {
+        Self {
+            cap: self.cap,
+            buf: VecDeque::new(),
+            dropped: 0,
+        }
+    }
+
+    fn clear(&mut self) {
+        self.buf.clear();
+        self.dropped = 0;
+    }
+
+    fn absorb(&mut self, worker: &mut Self) {
+        self.dropped += worker.dropped;
+        worker.dropped = 0;
+        for e in worker.buf.drain(..) {
+            if self.buf.len() == self.cap {
+                self.buf.pop_front();
+                self.dropped += 1;
+            }
+            self.buf.push_back(e);
+        }
+    }
+}
+
+/// A linearized snapshot of a [`FlightRecorder`]'s ring: the event
+/// stream in engine order, plus how many older events the ring
+/// evicted.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Recording {
+    pub events: Vec<Event>,
+    pub dropped: u64,
+}
+
+impl Recording {
+    /// Serialize the stream as fixed-width records behind a small
+    /// header (magic, eviction count, event count). Two recordings of
+    /// the same program + seed must byte-compare equal.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(20 + self.events.len() * EVENT_BYTES);
+        out.extend_from_slice(b"DFR1");
+        out.extend_from_slice(&self.dropped.to_le_bytes());
+        out.extend_from_slice(&(self.events.len() as u64).to_le_bytes());
+        for e in &self.events {
+            out.extend_from_slice(&e.to_bytes());
+        }
+        out
+    }
+
+    /// Decode [`Self::to_bytes`] output.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Recording> {
+        if bytes.len() < 20 || &bytes[..4] != b"DFR1" {
+            bail!("not a DFR1 flight recording");
+        }
+        let dropped = u64::from_le_bytes(bytes[4..12].try_into().unwrap());
+        let count = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+        let body = &bytes[20..];
+        if body.len() != count * EVENT_BYTES {
+            bail!(
+                "flight recording body is {} B, expected {} events x {} B",
+                body.len(),
+                count,
+                EVENT_BYTES
+            );
+        }
+        let mut events = Vec::with_capacity(count);
+        for rec in body.chunks_exact(EVENT_BYTES) {
+            events.push(Event::from_bytes(rec.try_into().unwrap())?);
+        }
+        Ok(Recording { events, dropped })
+    }
+
+    /// Highest stage index observed, plus one.
+    pub fn stage_count(&self) -> usize {
+        self.events
+            .iter()
+            .map(|e| e.stage as usize + 1)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Events per stage.
+    pub fn events_per_stage(&self) -> BTreeMap<u16, u64> {
+        let mut out = BTreeMap::new();
+        for e in &self.events {
+            *out.entry(e.stage).or_insert(0u64) += 1;
+        }
+        out
+    }
+}
+
+/// One link transfer in a timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinkSample {
+    pub slot: u32,
+    pub bits: u64,
+    pub interchip: bool,
+}
+
+/// One FIFO-depth sample in a timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DepthSample {
+    pub slot: u32,
+    pub depth: u32,
+}
+
+/// One psum-arena occupancy sample.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArenaSample {
+    pub slot: u32,
+    pub in_use: u32,
+    pub slots: u32,
+}
+
+/// Per-link / per-tile time series for one stage, extracted from a
+/// recording — the Fig. 6-style occupancy view.
+#[derive(Clone, Debug, Default)]
+pub struct StageTimelines {
+    pub stage: usize,
+    /// (chain, tile) -> transfers leaving that tile, in slot order.
+    pub links: BTreeMap<(u16, u16), Vec<LinkSample>>,
+    /// (chain, row-head tile) -> ROFM FIFO depth samples.
+    pub fifo: BTreeMap<(u16, u16), Vec<DepthSample>>,
+    /// chain -> psum arena occupancy samples.
+    pub arena: BTreeMap<u16, Vec<ArenaSample>>,
+}
+
+impl StageTimelines {
+    /// Build the stage's timelines from a recording.
+    pub fn build(rec: &Recording, stage: usize) -> StageTimelines {
+        let mut t = StageTimelines {
+            stage,
+            ..Default::default()
+        };
+        for e in rec.events.iter().filter(|e| e.stage as usize == stage) {
+            match e.kind {
+                EventKind::LinkTx if e.ci != NO_TILE => {
+                    t.links.entry((e.chain, e.ci)).or_default().push(LinkSample {
+                        slot: e.slot,
+                        bits: e.a as u64,
+                        interchip: e.b == 1,
+                    });
+                }
+                EventKind::FifoDepth => {
+                    t.fifo.entry((e.chain, e.ci)).or_default().push(DepthSample {
+                        slot: e.slot,
+                        depth: e.a,
+                    });
+                }
+                EventKind::ArenaInUse => {
+                    t.arena.entry(e.chain).or_default().push(ArenaSample {
+                        slot: e.slot,
+                        in_use: e.a,
+                        slots: e.b,
+                    });
+                }
+                _ => {}
+            }
+        }
+        t
+    }
+
+    /// Total bits moved over links in this stage.
+    pub fn total_link_bits(&self) -> u64 {
+        self.links
+            .values()
+            .flatten()
+            .map(|s| s.bits)
+            .sum()
+    }
+
+    /// Peak group-sum FIFO depth across all row heads.
+    pub fn peak_fifo_depth(&self) -> u32 {
+        self.fifo
+            .values()
+            .flatten()
+            .map(|s| s.depth)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Peak psum arena occupancy across chains.
+    pub fn peak_arena_in_use(&self) -> u32 {
+        self.arena
+            .values()
+            .flatten()
+            .map(|s| s.in_use)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Utilization shade ramp, darkest last.
+const SHADES: &[u8] = b" .:-=+*#%@";
+
+/// A tiles x time heatmap of link utilization for one stage: rows are
+/// chain positions (the link each tile drives), columns are time
+/// buckets over the stage's slot range, shade is bits moved relative
+/// to the busiest cell.
+#[derive(Clone, Debug)]
+pub struct LinkHeatmap {
+    pub stage: usize,
+    /// Rows (tiles that moved bits; max chain position + 1).
+    pub tiles: usize,
+    /// Time buckets (columns).
+    pub buckets: usize,
+    pub max_slot: u32,
+    pub total_bits: u64,
+    pub interchip_bits: u64,
+    /// Bits per (tile, bucket), row-major.
+    cells: Vec<u64>,
+    peak: u64,
+}
+
+impl LinkHeatmap {
+    /// Build a heatmap of `stage` with `buckets` time columns. `None`
+    /// when the recording holds no tile-scoped link events for the
+    /// stage.
+    pub fn build(rec: &Recording, stage: usize, buckets: usize) -> Option<LinkHeatmap> {
+        let buckets = buckets.max(1);
+        let evs: Vec<&Event> = rec
+            .events
+            .iter()
+            .filter(|e| {
+                e.kind == EventKind::LinkTx && e.stage as usize == stage && e.ci != NO_TILE
+            })
+            .collect();
+        if evs.is_empty() {
+            return None;
+        }
+        let tiles = evs.iter().map(|e| e.ci as usize + 1).max().unwrap();
+        let max_slot = evs.iter().map(|e| e.slot).max().unwrap();
+        let mut cells = vec![0u64; tiles * buckets];
+        let mut total = 0u64;
+        let mut inter = 0u64;
+        for e in &evs {
+            let bucket = (e.slot as usize * buckets) / (max_slot as usize + 1);
+            cells[e.ci as usize * buckets + bucket] += e.a as u64;
+            total += e.a as u64;
+            if e.b == 1 {
+                inter += e.a as u64;
+            }
+        }
+        let peak = cells.iter().copied().max().unwrap_or(0);
+        Some(LinkHeatmap {
+            stage,
+            tiles,
+            buckets,
+            max_slot,
+            total_bits: total,
+            interchip_bits: inter,
+            cells,
+            peak,
+        })
+    }
+
+    /// The stage moving the most link bits in the recording.
+    pub fn busiest_stage(rec: &Recording) -> Option<usize> {
+        let mut per_stage: BTreeMap<u16, u64> = BTreeMap::new();
+        for e in &rec.events {
+            if e.kind == EventKind::LinkTx && e.ci != NO_TILE {
+                *per_stage.entry(e.stage).or_insert(0) += e.a as u64;
+            }
+        }
+        per_stage
+            .into_iter()
+            .max_by_key(|&(stage, bits)| (bits, std::cmp::Reverse(stage)))
+            .map(|(stage, _)| stage as usize)
+    }
+
+    /// Bits moved from `tile` during time bucket `bucket`.
+    pub fn cell_bits(&self, tile: usize, bucket: usize) -> u64 {
+        self.cells[tile * self.buckets + bucket]
+    }
+
+    /// Render the terminal heatmap.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "link utilization, stage {} ({} tiles, slots 0..{}, {} b total, {} b inter-chip)",
+            self.stage,
+            self.tiles,
+            self.max_slot + 1,
+            self.total_bits,
+            self.interchip_bits
+        );
+        let _ = writeln!(
+            out,
+            "shade ramp '{}' scales to the busiest cell ({} b)",
+            std::str::from_utf8(SHADES).unwrap(),
+            self.peak
+        );
+        for t in 0..self.tiles {
+            let _ = write!(out, "{t:>4} |");
+            for bkt in 0..self.buckets {
+                let bits = self.cell_bits(t, bkt);
+                let shade = if self.peak == 0 {
+                    0
+                } else {
+                    (bits * (SHADES.len() as u64 - 1) / self.peak) as usize
+                };
+                out.push(SHADES[shade] as char);
+            }
+            out.push_str("|\n");
+        }
+        out
+    }
+}
+
+/// Result of [`diff`]: where two event streams first diverge and how
+/// their per-stage event populations compare.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RecordingDiff {
+    pub len_a: usize,
+    pub len_b: usize,
+    /// Index of the first differing event (or of the end of the
+    /// shorter stream when one is a prefix of the other).
+    pub first_divergence: Option<usize>,
+    /// The two events at the divergence point (`None` past the end of
+    /// a stream).
+    pub diverging: Option<(Option<Event>, Option<Event>)>,
+    /// stage -> (events in a, events in b).
+    pub stage_events: BTreeMap<u16, (u64, u64)>,
+}
+
+impl RecordingDiff {
+    /// True when the streams are identical.
+    pub fn identical(&self) -> bool {
+        self.first_divergence.is_none()
+    }
+
+    /// Human-readable summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        match (self.first_divergence, &self.diverging) {
+            (None, _) => {
+                let _ = writeln!(out, "recordings identical ({} events)", self.len_a);
+            }
+            (Some(i), Some((a, b))) => {
+                let _ = writeln!(
+                    out,
+                    "first divergence at event {i} ({} vs {} events)",
+                    self.len_a, self.len_b
+                );
+                let _ = writeln!(
+                    out,
+                    "  a: {}",
+                    a.map(|e| e.describe()).unwrap_or_else(|| "<end>".into())
+                );
+                let _ = writeln!(
+                    out,
+                    "  b: {}",
+                    b.map(|e| e.describe()).unwrap_or_else(|| "<end>".into())
+                );
+            }
+            _ => {}
+        }
+        for (stage, (na, nb)) in &self.stage_events {
+            if na != nb {
+                let _ = writeln!(out, "  stage {stage}: {na} events vs {nb}");
+            }
+        }
+        out
+    }
+}
+
+/// Compare two recordings: first divergent event and per-stage event
+/// counts — the frozen-baseline comparison generalized to whole event
+/// streams.
+pub fn diff(a: &Recording, b: &Recording) -> RecordingDiff {
+    let first = a
+        .events
+        .iter()
+        .zip(&b.events)
+        .position(|(x, y)| x != y)
+        .or_else(|| {
+            (a.events.len() != b.events.len()).then(|| a.events.len().min(b.events.len()))
+        });
+    let diverging = first.map(|i| {
+        (
+            a.events.get(i).copied(),
+            b.events.get(i).copied(),
+        )
+    });
+    let mut stage_events: BTreeMap<u16, (u64, u64)> = BTreeMap::new();
+    for e in &a.events {
+        stage_events.entry(e.stage).or_insert((0, 0)).0 += 1;
+    }
+    for e in &b.events {
+        stage_events.entry(e.stage).or_insert((0, 0)).1 += 1;
+    }
+    RecordingDiff {
+        len_a: a.events.len(),
+        len_b: b.events.len(),
+        first_divergence: first,
+        diverging,
+        stage_events,
+    }
+}
+
+/// A breakpoint for the [`Stepper`]: matches events on any combination
+/// of tile (chain position), cycle (the event's slot window), and
+/// event kind. Unset fields match everything.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Breakpoint {
+    pub tile: Option<usize>,
+    pub cycle: Option<u64>,
+    pub kind: Option<EventKind>,
+}
+
+impl Breakpoint {
+    /// Parse a CLI spec `tile,cycle[,kind]` where either of the first
+    /// two fields may be `*` (wildcard) and `kind` is an
+    /// [`EventKind::label`] name, e.g. `3,120`, `*,40,push`,
+    /// `6,*,pop`.
+    pub fn parse(spec: &str) -> Result<Breakpoint> {
+        let parts: Vec<&str> = spec.split(',').map(str::trim).collect();
+        if parts.len() < 2 || parts.len() > 3 {
+            bail!("breakpoint spec must be tile,cycle[,kind], got {spec:?}");
+        }
+        let field = |s: &str, what: &str| -> Result<Option<u64>> {
+            if s == "*" {
+                Ok(None)
+            } else {
+                Ok(Some(s.parse().with_context(|| {
+                    format!("bad {what} {s:?} in breakpoint {spec:?}")
+                })?))
+            }
+        };
+        let tile = field(parts[0], "tile")?.map(|v| v as usize);
+        let cycle = field(parts[1], "cycle")?;
+        let kind = match parts.get(2) {
+            None => None,
+            Some(&"*") => None,
+            Some(s) => Some(
+                EventKind::parse(s)
+                    .with_context(|| format!("unknown event kind {s:?} in breakpoint {spec:?}"))?,
+            ),
+        };
+        Ok(Breakpoint { tile, cycle, kind })
+    }
+
+    /// Does `e` hit this breakpoint? A cycle condition hits when it
+    /// falls inside the event's slot window (`CYCLES_PER_SLOT` cycles).
+    pub fn matches(&self, e: &Event) -> bool {
+        if let Some(t) = self.tile {
+            if e.ci == NO_TILE || e.ci as usize != t {
+                return false;
+            }
+        }
+        if let Some(c) = self.cycle {
+            let lo = e.cycle();
+            if c < lo || c >= lo + CYCLES_PER_SLOT as u64 {
+                return false;
+            }
+        }
+        if let Some(k) = self.kind {
+            if e.kind != k {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Derived engine state at the stepper's current position, rebuilt
+/// incrementally from the event stream.
+#[derive(Clone, Debug, Default)]
+pub struct DebugState {
+    /// Stage currently executing (last StageEnter not yet exited).
+    pub stage: Option<u16>,
+    /// (stage, chain, tile) -> last observed ROFM FIFO depth.
+    pub fifo_depth: BTreeMap<(u16, u16, u16), u32>,
+    /// (stage, chain) -> last observed psum arena (in_use, slots).
+    pub arena: BTreeMap<(u16, u16), (u32, u32)>,
+    /// Events consumed per kind, indexed by the kind tag.
+    pub counts: [u64; EventKind::ALL.len()],
+    pub onchip_bits: u64,
+    pub interchip_bits: u64,
+}
+
+impl DebugState {
+    fn apply(&mut self, e: &Event) {
+        self.counts[e.kind as usize] += 1;
+        match e.kind {
+            EventKind::StageEnter => self.stage = Some(e.stage),
+            EventKind::StageExit => {
+                if self.stage == Some(e.stage) {
+                    self.stage = None;
+                }
+            }
+            EventKind::FifoDepth => {
+                self.fifo_depth.insert((e.stage, e.chain, e.ci), e.a);
+            }
+            EventKind::ArenaInUse => {
+                self.arena.insert((e.stage, e.chain), (e.a, e.b));
+            }
+            EventKind::LinkTx => {
+                if e.b == 1 {
+                    self.interchip_bits += e.a as u64;
+                } else {
+                    self.onchip_bits += e.a as u64;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Events of `kind` consumed so far.
+    pub fn count(&self, kind: EventKind) -> u64 {
+        self.counts[kind as usize]
+    }
+
+    /// Render the inspection summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "stage: {}   links: {} b on-chip / {} b inter-chip",
+            self.stage
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| "-".into()),
+            self.onchip_bits,
+            self.interchip_bits
+        );
+        let _ = write!(out, "events:");
+        for k in EventKind::ALL {
+            if self.count(k) > 0 {
+                let _ = write!(out, " {}={}", k.label(), self.count(k));
+            }
+        }
+        let _ = writeln!(out);
+        let queued: Vec<String> = self
+            .fifo_depth
+            .iter()
+            .filter(|(_, &d)| d > 0)
+            .map(|(&(s, c, t), d)| format!("s{s}/c{c}/t{t}:{d}"))
+            .collect();
+        if !queued.is_empty() {
+            let _ = writeln!(out, "group-sum FIFOs: {}", queued.join(" "));
+        }
+        let busy: Vec<String> = self
+            .arena
+            .iter()
+            .filter(|(_, &(u, _))| u > 0)
+            .map(|(&(s, c), &(u, n))| format!("s{s}/c{c}:{u}/{n}"))
+            .collect();
+        if !busy.is_empty() {
+            let _ = writeln!(out, "psum arenas: {}", busy.join(" "));
+        }
+        out
+    }
+}
+
+/// A domino debug stepper: walk a recording event by event, stop at
+/// breakpoints, inspect derived engine state at any point.
+#[derive(Clone, Debug)]
+pub struct Stepper {
+    rec: Recording,
+    pos: usize,
+    breakpoints: Vec<Breakpoint>,
+    state: DebugState,
+}
+
+impl Stepper {
+    pub fn new(rec: Recording) -> Self {
+        Self {
+            rec,
+            pos: 0,
+            breakpoints: Vec::new(),
+            state: DebugState::default(),
+        }
+    }
+
+    pub fn add_breakpoint(&mut self, bp: Breakpoint) {
+        self.breakpoints.push(bp);
+    }
+
+    /// Index of the next event to consume.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Total events in the recording.
+    pub fn len(&self) -> usize {
+        self.rec.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rec.events.is_empty()
+    }
+
+    /// All events consumed?
+    pub fn done(&self) -> bool {
+        self.pos >= self.rec.events.len()
+    }
+
+    /// Derived state after every consumed event.
+    pub fn state(&self) -> &DebugState {
+        &self.state
+    }
+
+    /// Consume one event; `None` at end of stream.
+    pub fn step(&mut self) -> Option<Event> {
+        let e = *self.rec.events.get(self.pos)?;
+        self.pos += 1;
+        self.state.apply(&e);
+        Some(e)
+    }
+
+    /// Run until an event hits a breakpoint (that event is consumed
+    /// and returned with its index); `None` when the stream ends with
+    /// no hit.
+    pub fn run_to_break(&mut self) -> Option<(usize, Event)> {
+        while let Some(e) = self.step() {
+            if self.breakpoints.iter().any(|bp| bp.matches(&e)) {
+                return Some((self.pos - 1, e));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, stage: u16, ci: u16, slot: u32, a: u32, b: u32) -> Event {
+        Event {
+            kind,
+            stage,
+            chain: 0,
+            ci,
+            slot,
+            a,
+            b,
+        }
+    }
+
+    #[test]
+    fn event_bytes_round_trip_every_kind() {
+        for (i, kind) in EventKind::ALL.into_iter().enumerate() {
+            assert_eq!(EventKind::from_u8(i as u8), Some(kind));
+            assert_eq!(EventKind::parse(kind.label()), Some(kind));
+            let e = Event {
+                kind,
+                stage: 3,
+                chain: 1,
+                ci: NO_TILE,
+                slot: 0xDEAD_BEEF,
+                a: 7,
+                b: 9,
+            };
+            let bytes = e.to_bytes();
+            assert_eq!(bytes.len(), EVENT_BYTES);
+            assert_eq!(Event::from_bytes(&bytes).unwrap(), e);
+        }
+        assert_eq!(EventKind::from_u8(200), None);
+        assert!(Event::from_bytes(&[200u8; EVENT_BYTES]).is_err());
+    }
+
+    #[test]
+    fn ring_caps_length_and_counts_drops() {
+        let mut r = FlightRecorder::new(RecorderConfig::with_capacity(4));
+        for slot in 0..10usize {
+            r.stage_enter(slot);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 6);
+        let rec = r.recording();
+        assert_eq!(rec.events.len(), 4);
+        // oldest evicted: stages 6..10 remain
+        assert_eq!(rec.events[0].stage, 6);
+        assert_eq!(rec.events[3].stage, 9);
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn fork_and_absorb_concatenate_in_order() {
+        let mut main = FlightRecorder::new(RecorderConfig::with_capacity(100));
+        main.stage_enter(0);
+        let mut w1 = main.fork();
+        let mut w2 = main.fork();
+        assert!(w1.is_empty() && w2.capacity() == 100);
+        w1.stage_enter(1);
+        w2.stage_enter(2);
+        main.absorb(&mut w1);
+        main.absorb(&mut w2);
+        assert!(w1.is_empty());
+        let stages: Vec<u16> = main.recording().events.iter().map(|e| e.stage).collect();
+        assert_eq!(stages, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn recording_bytes_round_trip() {
+        let rec = Recording {
+            events: vec![
+                ev(EventKind::Acc, 0, 1, 5, 2, 3),
+                ev(EventKind::LinkTx, 1, 2, 6, 512, 1),
+            ],
+            dropped: 42,
+        };
+        let bytes = rec.to_bytes();
+        assert_eq!(bytes.len(), 20 + 2 * EVENT_BYTES);
+        assert_eq!(Recording::from_bytes(&bytes).unwrap(), rec);
+        assert!(Recording::from_bytes(&bytes[..10]).is_err());
+        assert!(Recording::from_bytes(b"XXXX0000000000000000").is_err());
+    }
+
+    #[test]
+    fn diff_finds_first_divergence_and_stage_deltas() {
+        let a = Recording {
+            events: vec![
+                ev(EventKind::Acc, 0, 0, 0, 0, 0),
+                ev(EventKind::Push, 0, 3, 1, 0, 0),
+            ],
+            dropped: 0,
+        };
+        assert!(diff(&a, &a).identical());
+        assert!(diff(&a, &a).render().contains("identical"));
+
+        let mut b = a.clone();
+        b.events[1] = ev(EventKind::Pop, 0, 3, 1, 0, 0);
+        let d = diff(&a, &b);
+        assert_eq!(d.first_divergence, Some(1));
+        let (ea, eb) = d.diverging.unwrap();
+        assert_eq!(ea.unwrap().kind, EventKind::Push);
+        assert_eq!(eb.unwrap().kind, EventKind::Pop);
+
+        // prefix relationship: divergence at the shorter stream's end
+        let mut c = a.clone();
+        c.events.push(ev(EventKind::Emit, 1, 8, 2, 0, 0));
+        let d = diff(&a, &c);
+        assert_eq!(d.first_divergence, Some(2));
+        assert_eq!(d.diverging.unwrap().0, None);
+        assert_eq!(d.stage_events[&1], (0, 1));
+        assert!(d.render().contains("stage 1"));
+    }
+
+    #[test]
+    fn heatmap_buckets_and_shades() {
+        let rec = Recording {
+            events: vec![
+                ev(EventKind::LinkTx, 0, 0, 0, 100, 0),
+                ev(EventKind::LinkTx, 0, 1, 5, 300, 1),
+                ev(EventKind::LinkTx, 0, 1, 9, 300, 0),
+                // other stage, ignored by build(0)
+                ev(EventKind::LinkTx, 1, 0, 0, 999, 0),
+            ],
+            dropped: 0,
+        };
+        let h = LinkHeatmap::build(&rec, 0, 2).unwrap();
+        assert_eq!((h.tiles, h.buckets, h.max_slot), (2, 2, 9));
+        assert_eq!(h.total_bits, 700);
+        assert_eq!(h.interchip_bits, 300);
+        assert_eq!(h.cell_bits(0, 0), 100);
+        assert_eq!(h.cell_bits(1, 1), 600);
+        let s = h.render();
+        assert_eq!(s.lines().count(), 2 + h.tiles);
+        assert!(s.contains("700 b total"));
+        assert_eq!(LinkHeatmap::busiest_stage(&rec), Some(1));
+        assert!(LinkHeatmap::build(&rec, 7, 2).is_none());
+    }
+
+    #[test]
+    fn breakpoint_parse_and_match() {
+        let bp = Breakpoint::parse("3,120").unwrap();
+        assert_eq!(bp.tile, Some(3));
+        assert_eq!(bp.cycle, Some(120));
+        assert_eq!(bp.kind, None);
+        // slot 60 covers cycles 120..122 at CYCLES_PER_SLOT = 2
+        assert!(bp.matches(&ev(EventKind::Acc, 0, 3, 60, 0, 0)));
+        assert!(!bp.matches(&ev(EventKind::Acc, 0, 4, 60, 0, 0)));
+        assert!(!bp.matches(&ev(EventKind::Acc, 0, 3, 61, 0, 0)));
+
+        let bp = Breakpoint::parse("*,*,push").unwrap();
+        assert!(bp.matches(&ev(EventKind::Push, 0, 3, 1, 0, 0)));
+        assert!(!bp.matches(&ev(EventKind::Pop, 0, 3, 1, 0, 0)));
+
+        let bp = Breakpoint::parse(" 6 , * , pop ").unwrap();
+        assert_eq!((bp.tile, bp.cycle, bp.kind), (Some(6), None, Some(EventKind::Pop)));
+
+        assert!(Breakpoint::parse("3").is_err());
+        assert!(Breakpoint::parse("a,b").is_err());
+        assert!(Breakpoint::parse("1,2,teleport").is_err());
+        assert!(Breakpoint::parse("1,2,3,4").is_err());
+    }
+
+    #[test]
+    fn stepper_runs_to_breakpoints_and_tracks_state() {
+        let rec = Recording {
+            events: vec![
+                ev(EventKind::StageEnter, 0, NO_TILE, 0, 0, 0),
+                ev(EventKind::Acc, 0, 1, 0, 0, 0),
+                ev(EventKind::Push, 0, 3, 1, 0, 0),
+                ev(EventKind::FifoDepth, 0, 3, 1, 2, 0),
+                ev(EventKind::LinkTx, 0, 1, 1, 64, 1),
+                ev(EventKind::Pop, 0, 3, 4, 0, 0),
+                ev(EventKind::StageExit, 0, NO_TILE, 0, 9, 0),
+            ],
+            dropped: 0,
+        };
+        let mut st = Stepper::new(rec.clone());
+        st.add_breakpoint(Breakpoint::parse("3,*,push").unwrap());
+        st.add_breakpoint(Breakpoint::parse("3,*,pop").unwrap());
+        let (i, e) = st.run_to_break().unwrap();
+        assert_eq!((i, e.kind), (2, EventKind::Push));
+        assert_eq!(st.state().stage, Some(0));
+        let (i, e) = st.run_to_break().unwrap();
+        assert_eq!((i, e.kind), (5, EventKind::Pop));
+        assert_eq!(st.state().fifo_depth[&(0, 0, 3)], 2);
+        assert_eq!(st.state().interchip_bits, 64);
+        assert!(st.run_to_break().is_none());
+        assert!(st.done());
+        assert_eq!(st.state().stage, None);
+        assert_eq!(st.state().count(EventKind::Acc), 1);
+        let r = st.state().render();
+        assert!(r.contains("inter-chip"));
+
+        // plain stepping visits every event once
+        let mut st = Stepper::new(rec);
+        let mut n = 0;
+        while st.step().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, st.len());
+    }
+
+    #[test]
+    fn timelines_split_by_link_fifo_and_arena() {
+        let mut r = FlightRecorder::new(RecorderConfig::with_capacity(64));
+        r.link(0, 0, 1, 3, LinkKind::OnChip, 128);
+        r.link(0, 0, 1, 4, LinkKind::InterChip, 256);
+        r.fifo_depth(0, 0, 3, 4, 2);
+        r.arena_in_use(0, 0, 4, 5, 12);
+        r.link(2, 0, 0, 0, LinkKind::OnChip, 8);
+        let rec = r.recording();
+        let t = StageTimelines::build(&rec, 0);
+        assert_eq!(t.links[&(0, 1)].len(), 2);
+        assert!(t.links[&(0, 1)][1].interchip);
+        assert_eq!(t.total_link_bits(), 384);
+        assert_eq!(t.peak_fifo_depth(), 2);
+        assert_eq!(t.peak_arena_in_use(), 5);
+        assert_eq!(t.arena[&0][0].slots, 12);
+        assert_eq!(rec.stage_count(), 3);
+        assert_eq!(rec.events_per_stage()[&0], 4);
+    }
+}

@@ -1,5 +1,5 @@
-//! Cycle-level simulation: engine, statistics, pipeline timing,
-//! dataflow trace.
+//! Cycle-level simulation: engine, probe layer, flight recorder,
+//! statistics, pipeline timing, dataflow trace.
 //!
 //! * [`engine`] — the cycle-accurate COM engine. Per-tile runtime
 //!   state is built once per engine and reset between images;
@@ -23,19 +23,41 @@
 //!   host-side only: scores and counters are bit-identical across
 //!   modes. `cargo bench --bench engine_perf` gates the speedup of
 //!   this design against a frozen copy of the pre-arena hot path.
+//! * [`flight`] — the observability plane. The engine is generic over a
+//!   [`Probe`]: every tile action, psum push/pop, link transfer
+//!   (with [`LinkKind`](crate::noc::link::LinkKind)), stage boundary,
+//!   and FIFO/arena occupancy sample flows through it. The default
+//!   [`NullProbe`] monomorphizes every callback to an empty inline
+//!   body guarded by a `const ENABLED = false`, so the serving hot
+//!   path compiles exactly as if the seam did not exist — scores and
+//!   [`Counters`] are bit-identical probe-on vs. probe-off, and the
+//!   `engine_perf` frozen-baseline gate still holds. [`FlightRecorder`]
+//!   is the real probe: a bounded binary ring of fixed-width 20-byte
+//!   [`flight::Event`] records (oldest dropped under pressure, never
+//!   unbounded growth). Batches record too: each worker forks an empty
+//!   recorder and the chunks are absorbed back in image order, so
+//!   recordings are thread-count invariant. On top of a
+//!   [`Recording`] the module builds per-link/per-tile occupancy
+//!   timelines ([`flight::StageTimelines`]), a terminal link-utilization
+//!   heatmap ([`flight::LinkHeatmap`]), recording diffs
+//!   ([`flight::diff`] — first divergent event, per-stage deltas), and
+//!   a breakpointing [`flight::Stepper`] for `domino debug`.
 //! * [`pipeline`] — the stage-granularity layer-synchronization model
 //!   ([`run_pipelined`]): while stage *i* processes image *n*, stage
 //!   *i−1* streams image *n+1*; its measured steady-state period is
 //!   the quantity Table IV throughput derives from.
 //! * [`stats`] — raw architectural event counters; the `energy` module
 //!   prices them.
-//! * [`trace`] — the Fig. 3(b) COM dataflow trace.
+//! * [`trace`] — the Fig. 3(b) COM dataflow trace, rendered from a
+//!   flight recording.
 
 pub mod engine;
+pub mod flight;
 pub mod pipeline;
 pub mod stats;
 pub mod trace;
 
 pub use engine::{BatchOutput, CaptureMode, EnginePool, PooledEngine, RunOutput, Simulator};
+pub use flight::{FlightRecorder, NullProbe, Probe, RecorderConfig, Recording};
 pub use pipeline::{run_pipelined, PipelineRun};
 pub use stats::Counters;

@@ -2,9 +2,10 @@
 //! Fig. 3(b) — "black circles represent partial-sums in registers while
 //! red ones represent group-sums in buffers".
 //!
-//! The simulator records one [`Action`](crate::sim::engine::Action) per
-//! tile event; this module renders them as a tiles x time grid in which
-//! each cell shows what moved through the tile at that pixel slot:
+//! A [`FlightRecorder`](crate::sim::flight::FlightRecorder) captures
+//! one event per tile action; this module filters the recording down
+//! to one conv chain and renders a tiles x time grid in which each
+//! cell shows what moved through the tile at that pixel slot:
 //!
 //! * `U`  — a partial-sum accumulated in the tile's registers and
 //!   forwarded along the chain (black circles);
@@ -18,7 +19,8 @@ use std::fmt::Write as _;
 use anyhow::Result;
 
 use crate::coordinator::program::{Program, StageKind};
-use crate::sim::engine::{ActionKind, Simulator};
+use crate::sim::engine::Simulator;
+use crate::sim::flight::{EventKind, RecorderConfig};
 use crate::testutil::Rng;
 
 /// One rendered trace.
@@ -35,11 +37,13 @@ pub struct ComTrace {
     pub max_slot: usize,
 }
 
-/// Simulate one image and capture the COM trace of `stage` (chain 0).
+/// Simulate one image under a [`FlightRecorder`](crate::sim::flight)
+/// and capture the COM trace of `stage` (chain 0).
 pub fn trace_stage(program: &Program, stage: usize, seed: u64) -> Result<ComTrace> {
-    let mut sim = Simulator::with_action_recording(program);
+    let mut sim = Simulator::with_recorder(program, RecorderConfig::default());
     let mut rng = Rng::new(seed);
     sim.run_image(&rng.i8_vec(program.net.input_len(), 31))?;
+    let rec = sim.recording();
 
     let (tiles, name) = match &program.stages[stage].kind {
         StageKind::Conv(c) => (
@@ -51,20 +55,27 @@ pub fn trace_stage(program: &Program, stage: usize, seed: u64) -> Result<ComTrac
 
     let mut cells = BTreeMap::new();
     let mut max_slot = 0;
-    for a in sim.actions().iter().filter(|a| a.stage == stage && a.chain == 0) {
-        let label = match a.kind {
-            ActionKind::Acc { .. } => "U",
-            ActionKind::Push => "G+",
-            ActionKind::Pop => "G-",
-            ActionKind::Emit { .. } => "Y",
+    for e in rec
+        .events
+        .iter()
+        .filter(|e| e.stage as usize == stage && e.chain == 0)
+    {
+        // only tile actions feed the figure; link transfers, stage
+        // boundaries, and occupancy samples are other planes
+        let label = match e.kind {
+            EventKind::Acc => "U",
+            EventKind::Push => "G+",
+            EventKind::Pop => "G-",
+            EventKind::Emit => "Y",
+            _ => continue,
         };
         // pops and accs can hit the same (tile, slot); prefer showing
         // the buffer event (the figure's red circles)
-        let e = cells.entry((a.ci, a.slot)).or_insert(label);
+        let cell = cells.entry((e.ci as usize, e.slot as usize)).or_insert(label);
         if label == "G+" || label == "G-" {
-            *e = label;
+            *cell = label;
         }
-        max_slot = max_slot.max(a.slot);
+        max_slot = max_slot.max(e.slot as usize);
     }
     Ok(ComTrace {
         stage,

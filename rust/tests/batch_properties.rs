@@ -9,7 +9,7 @@ use std::sync::Arc;
 use domino::coordinator::{ArchConfig, Compiler, Program};
 use domino::model::{Network, NetworkBuilder, Projection, TensorShape};
 use domino::perfmodel;
-use domino::sim::{CaptureMode, Counters, EnginePool, Simulator};
+use domino::sim::{CaptureMode, Counters, EnginePool, RecorderConfig, Simulator};
 use domino::testutil::Rng;
 
 /// The sweep: every layer kind, strides, padding, pooling flavors,
@@ -294,6 +294,54 @@ fn batch_thread_count_does_not_change_results() {
             Some((want_scores, want_stats)) => {
                 assert_eq!(&scores, want_scores, "threads={threads}");
                 assert_eq!(sim.stats(), want_stats, "threads={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn recording_is_thread_count_invariant() {
+    // Regression: run_batch_threads used to silently fall back to one
+    // worker whenever recording was on. Now each worker forks its own
+    // recorder and the chunks are absorbed back in image order, so the
+    // merged event stream is byte-identical across thread counts — and
+    // the batch genuinely runs multi-threaded while recording.
+    let net = NetworkBuilder::new("sweep-rec-threads", TensorShape::new(3, 8, 8))
+        .conv(6, 3, 1, 1)
+        .max_pool(2, 2)
+        .flatten()
+        .fc_logits(4)
+        .build();
+    let program = Compiler::default().compile(&net).unwrap();
+    let mut rng = Rng::new(0x7EAD);
+    let inputs: Vec<Vec<i8>> = (0..6)
+        .map(|_| rng.i8_vec(net.input_len(), 31))
+        .collect();
+    let mut reference: Option<(Vec<u8>, Vec<Vec<i8>>, Counters)> = None;
+    for threads in [1usize, 2, 3, 6, 16] {
+        let mut sim = Simulator::with_recorder(&program, RecorderConfig::default());
+        let batch = sim.run_batch_threads(&inputs, threads).unwrap();
+        if threads > 1 {
+            assert!(
+                batch.threads > 1,
+                "recording must not force a single-threaded batch (asked for {threads}, \
+                 got {})",
+                batch.threads
+            );
+        }
+        let scores: Vec<Vec<i8>> =
+            batch.outputs.iter().map(|o| o.scores.clone()).collect();
+        let bytes = sim.recording().to_bytes();
+        assert!(!bytes.is_empty(), "threads={threads}: nothing recorded");
+        match &reference {
+            None => reference = Some((bytes, scores, sim.stats().clone())),
+            Some((want_bytes, want_scores, want_stats)) => {
+                assert_eq!(&scores, want_scores, "threads={threads}: scores");
+                assert_eq!(sim.stats(), want_stats, "threads={threads}: counters");
+                assert_eq!(
+                    &bytes, want_bytes,
+                    "threads={threads}: merged recording must be byte-identical"
+                );
             }
         }
     }

@@ -1,0 +1,285 @@
+//! Flight-recorder properties at the engine level, over a sweep of
+//! small geometries covering every stage kind:
+//!
+//! * **transparency** — scores, latency and [`Counters`] are identical
+//!   probe-on vs probe-off (the probe observes; it never perturbs);
+//! * **determinism** — the same program + seed produces byte-identical
+//!   event streams from independent simulators;
+//! * **bounded memory** — the ring never outgrows its capacity; under
+//!   pressure it keeps the newest events and counts the evictions;
+//! * **analysis** — timelines/heatmap cross-check against the engine's
+//!   own link counters, and the stepper replays the stream exactly.
+
+use domino::coordinator::{ArchConfig, Compiler};
+use domino::model::{Network, NetworkBuilder, Projection, TensorShape};
+use domino::sim::flight::{
+    diff, Breakpoint, EventKind, LinkHeatmap, RecorderConfig, StageTimelines, Stepper,
+};
+use domino::sim::Simulator;
+use domino::testutil::Rng;
+
+/// Small geometries covering conv (strides/padding), fused pooling,
+/// multi-block channels + fc, and residuals with projection.
+fn sweep_nets() -> Vec<(Network, ArchConfig)> {
+    let mut nets = Vec::new();
+    for (k, stride, padding) in [(1usize, 1usize, 0usize), (3, 1, 1), (3, 2, 1)] {
+        let net = NetworkBuilder::new("flight-conv", TensorShape::new(2, 6, 6))
+            .conv(4, k, stride, padding)
+            .build();
+        nets.push((net, ArchConfig::default()));
+    }
+    nets.push((
+        NetworkBuilder::new("flight-pool", TensorShape::new(3, 8, 8))
+            .conv(4, 3, 1, 1)
+            .max_pool(2, 2)
+            .build(),
+        ArchConfig::default(),
+    ));
+    nets.push((
+        NetworkBuilder::new("flight-blocks", TensorShape::new(6, 5, 5))
+            .conv(7, 3, 1, 1)
+            .flatten()
+            .fc(9)
+            .fc_logits(5)
+            .build(),
+        ArchConfig::tiny(4),
+    ));
+    nets.push((
+        NetworkBuilder::new("flight-res", TensorShape::new(4, 8, 8))
+            .conv(4, 3, 1, 1)
+            .conv(8, 3, 2, 1)
+            .conv_linear(8, 3, 1, 1)
+            .res_add_proj(
+                0,
+                Projection {
+                    out_ch: 8,
+                    stride: 2,
+                },
+            )
+            .build(),
+        ArchConfig::default(),
+    ));
+    nets
+}
+
+#[test]
+fn probe_is_transparent_to_scores_and_counters() {
+    for (net, arch) in sweep_nets() {
+        let program = Compiler::new(arch).compile(&net).unwrap();
+        let mut rng = Rng::new(0xF117);
+        let img = rng.i8_vec(net.input_len(), 31);
+
+        let mut plain = Simulator::new(&program);
+        let want = plain.run_image(&img).unwrap();
+        let mut probed = Simulator::with_recorder(&program, RecorderConfig::default());
+        let got = probed.run_image(&img).unwrap();
+
+        assert_eq!(got.scores, want.scores, "{}: scores", net.name);
+        assert_eq!(
+            got.latency_cycles, want.latency_cycles,
+            "{}: latency",
+            net.name
+        );
+        assert_eq!(
+            probed.stats(),
+            plain.stats(),
+            "{}: counters must not depend on the probe",
+            net.name
+        );
+        assert_eq!(
+            probed.stage_stats(),
+            plain.stage_stats(),
+            "{}: per-stage counters",
+            net.name
+        );
+        let rec = probed.recording();
+        assert!(!rec.events.is_empty(), "{}: nothing recorded", net.name);
+        assert_eq!(rec.dropped, 0, "{}: default ring must not evict here", net.name);
+        assert_eq!(
+            rec.stage_count(),
+            program.stages.len(),
+            "{}: every stage must appear in the stream",
+            net.name
+        );
+    }
+}
+
+#[test]
+fn recordings_are_deterministic_byte_for_byte() {
+    for (net, arch) in sweep_nets() {
+        let program = Compiler::new(arch).compile(&net).unwrap();
+        let run = || {
+            let mut sim = Simulator::with_recorder(&program, RecorderConfig::default());
+            let mut rng = Rng::new(7);
+            sim.run_image(&rng.i8_vec(net.input_len(), 31)).unwrap();
+            sim.recording()
+        };
+        let (a, b) = (run(), run());
+        assert!(
+            diff(&a, &b).identical(),
+            "{}: independent runs diverged:\n{}",
+            net.name,
+            diff(&a, &b).render()
+        );
+        assert_eq!(
+            a.to_bytes(),
+            b.to_bytes(),
+            "{}: byte encodings differ",
+            net.name
+        );
+    }
+}
+
+#[test]
+fn ring_is_bounded_and_keeps_the_newest_events() {
+    let net = NetworkBuilder::new("flight-ring", TensorShape::new(3, 8, 8))
+        .conv(6, 3, 1, 1)
+        .max_pool(2, 2)
+        .flatten()
+        .fc_logits(4)
+        .build();
+    let program = Compiler::default().compile(&net).unwrap();
+    let images = 3usize;
+
+    let run = |cap: Option<usize>| {
+        let cfg = match cap {
+            Some(c) => RecorderConfig::with_capacity(c),
+            None => RecorderConfig::default(),
+        };
+        let mut sim = Simulator::with_recorder(&program, cfg);
+        let mut rng = Rng::new(3);
+        for _ in 0..images {
+            sim.run_image(&rng.i8_vec(net.input_len(), 31)).unwrap();
+        }
+        sim.recording()
+    };
+    let full = run(None);
+    assert!(full.dropped == 0 && full.events.len() > 256, "need pressure");
+
+    // the regression this guards: instrumented runs used to buffer one
+    // Vec entry per action, unbounded — memory grew with every image.
+    // The ring caps retained events at the configured capacity no
+    // matter how long the run gets, and accounts for every eviction.
+    let cap = 64usize;
+    let small = run(Some(cap));
+    assert!(small.events.len() <= cap, "ring outgrew its capacity");
+    assert!(small.dropped > 0, "pressure must evict");
+    assert_eq!(
+        small.events.len() as u64 + small.dropped,
+        full.events.len() as u64,
+        "every event is either retained or counted as dropped"
+    );
+    // eviction is oldest-first: the retained window is exactly the
+    // tail of the unbounded stream
+    assert_eq!(
+        small.events[..],
+        full.events[full.events.len() - small.events.len()..],
+        "ring must keep the newest events"
+    );
+}
+
+#[test]
+fn timelines_and_heatmap_cross_check_the_link_counters() {
+    for (net, arch) in sweep_nets() {
+        let program = Compiler::new(arch).compile(&net).unwrap();
+        let mut sim = Simulator::with_recorder(&program, RecorderConfig::default());
+        let mut rng = Rng::new(0x11);
+        sim.run_image(&rng.i8_vec(net.input_len(), 31)).unwrap();
+        let rec = sim.recording();
+
+        // every link event in the stream carries the bits the engine
+        // charged its counters with — summed over all stages the two
+        // planes must agree exactly
+        let (mut on, mut inter) = (0u64, 0u64);
+        for e in &rec.events {
+            if e.kind == EventKind::LinkTx {
+                if e.b == 1 {
+                    inter += e.a as u64;
+                } else {
+                    on += e.a as u64;
+                }
+            }
+        }
+        assert_eq!(
+            on,
+            sim.stats().onchip_link_bits,
+            "{}: on-chip link bits",
+            net.name
+        );
+        assert_eq!(
+            inter,
+            sim.stats().interchip_bits,
+            "{}: inter-chip link bits",
+            net.name
+        );
+
+        // stage timelines partition the same totals per stage
+        let per_stage: u64 = (0..rec.stage_count())
+            .map(|s| StageTimelines::build(&rec, s).total_link_bits())
+            .sum();
+        assert!(per_stage <= on + inter, "{}: timelines overcount", net.name);
+
+        // the busiest stage renders a non-empty heatmap whose cells sum
+        // to that stage's tile-scoped link bits
+        let busiest = LinkHeatmap::busiest_stage(&rec)
+            .unwrap_or_else(|| panic!("{}: no link events", net.name));
+        let h = LinkHeatmap::build(&rec, busiest, 16).unwrap();
+        let cells: u64 = (0..h.tiles)
+            .flat_map(|t| (0..h.buckets).map(move |b| (t, b)))
+            .map(|(t, b)| h.cell_bits(t, b))
+            .sum();
+        assert_eq!(cells, h.total_bits, "{}: heatmap loses bits", net.name);
+        let rendered = h.render();
+        assert!(rendered.contains("link utilization"), "{}", net.name);
+        assert!(rendered.lines().count() == h.tiles + 2, "{}", net.name);
+    }
+}
+
+#[test]
+fn stepper_replays_the_stream_exactly() {
+    let net = NetworkBuilder::new("flight-step", TensorShape::new(2, 6, 6))
+        .conv(4, 3, 1, 1)
+        .build();
+    let program = Compiler::default().compile(&net).unwrap();
+    let mut sim = Simulator::with_recorder(&program, RecorderConfig::default());
+    let mut rng = Rng::new(5);
+    sim.run_image(&rng.i8_vec(net.input_len(), 31)).unwrap();
+    let rec = sim.recording();
+
+    // run to the first group-sum push at a row head, from any tile
+    let mut stepper = Stepper::new(rec.clone());
+    stepper.add_breakpoint(Breakpoint::parse("*,*,push").unwrap());
+    let (i, e) = stepper.run_to_break().expect("conv chain has row heads");
+    assert_eq!(e.kind, EventKind::Push);
+    assert_eq!(rec.events[i], e, "breakpoint returns the stream's event");
+    assert_eq!(stepper.pos(), i + 1, "the hit event is consumed");
+    assert!(stepper.state().count(EventKind::Push) == 1);
+
+    // a (tile, cycle) breakpoint in cycle units: the first event at
+    // tile 0 within the first slot window
+    let mut bp = Stepper::new(rec.clone());
+    bp.add_breakpoint(Breakpoint::parse("0,0").unwrap());
+    let hit = bp.run_to_break().expect("tile 0 acts in slot 0");
+    assert_eq!(hit.1.ci, 0);
+    assert_eq!(hit.1.slot, 0);
+
+    // stepping to the end applies every event exactly once: the
+    // derived per-kind totals equal the stream's own population
+    while stepper.step().is_some() {}
+    assert!(stepper.done());
+    for k in EventKind::ALL {
+        let want = rec.events.iter().filter(|e| e.kind == k).count() as u64;
+        assert_eq!(
+            stepper.state().count(k),
+            want,
+            "stepper count for {:?}",
+            k
+        );
+    }
+    // a breakpoint that never hits is a clean end-of-stream, not an
+    // error (the CLI exits 0 on it)
+    let mut never = Stepper::new(rec);
+    never.add_breakpoint(Breakpoint::parse("60000,*").unwrap());
+    assert!(never.run_to_break().is_none());
+    assert!(never.done());
+}

@@ -16,6 +16,8 @@ use domino::serve::api::{MappingSpec, RegistryManifest, Request, Response};
 use domino::serve::client::Client;
 use domino::serve::net::{NetConfig, NetServer};
 use domino::serve::{wire, ModelRegistry, ServeConfig, Server, Service};
+use domino::sim::flight::RecorderConfig;
+use domino::sim::Simulator;
 use domino::testutil::Rng;
 
 fn fast_net_cfg() -> NetConfig {
@@ -404,6 +406,76 @@ fn explored_mapping_loads_over_tcp_and_survives_restart() {
     };
     service2.shutdown().unwrap();
     let _ = std::fs::remove_file(&path);
+}
+
+/// The acceptance path for the observability plane: a flight recording
+/// is retrievable from the live TCP endpoint through the typed client,
+/// bit-identical to a local instrumented run of the same model version,
+/// deterministic across calls, counted in the per-model `traced` stat,
+/// and a typed error for an unloaded model.
+#[test]
+fn flight_recording_is_served_over_tcp() {
+    let (service, net, addr) = start_endpoint(&[("tiny-cnn", 0x99)]);
+    let mut client = connect(&addr);
+
+    let t = client.trace("tiny-cnn", 7, 48).unwrap();
+    assert_eq!(&*t.model.name, "tiny-cnn");
+    assert_eq!(t.image_seed, 7);
+    assert_eq!(t.dropped, 0, "tiny models must not evict at default capacity");
+    assert!(t.events_total > 0, "a conv net records events");
+    assert_eq!(t.events.len(), 48.min(t.events_total as usize));
+    assert!(
+        t.heatmap.contains("link utilization"),
+        "trace reply carries a rendered heatmap:\n{}",
+        t.heatmap
+    );
+
+    // the reply is exactly what a local instrumented run of the same
+    // model version produces: scores, stream length, and the leading
+    // window event-for-event (the wire round-trip loses nothing)
+    let registry = Arc::clone(service.server().registry().unwrap());
+    let mv = registry.get("tiny-cnn").unwrap();
+    let mut sim = Simulator::with_recorder(mv.program(), RecorderConfig::default());
+    let out = sim
+        .run_image(&Rng::new(7).i8_vec(mv.input_len(), 31))
+        .unwrap();
+    let rec = sim.recording();
+    assert_eq!(t.events_total as usize, rec.events.len());
+    assert_eq!(t.scores, out.scores, "traced scores diverged over TCP");
+    assert_eq!(
+        t.events[..],
+        rec.events[..t.events.len()],
+        "served events must be bit-identical to the local recording"
+    );
+
+    // tracing is deterministic: the same (model, seed, window) answers
+    // identically on a second call
+    let t2 = client.trace("tiny-cnn", 7, 48).unwrap();
+    assert_eq!(t2.events, t.events);
+    assert_eq!(t2.scores, t.scores);
+    assert_eq!(t2.heatmap, t.heatmap);
+
+    // both traces show up in the per-model stats, separate from served
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.served, 0, "traces are not inferences");
+    let m = stats
+        .models
+        .iter()
+        .find(|m| m.model == "tiny-cnn")
+        .expect("stats entry for tiny-cnn");
+    assert_eq!(m.traced, 2);
+
+    // unloaded model: typed error naming the survivors, connection fine
+    let err = client.trace("nope", 1, 4).unwrap_err().to_string();
+    assert!(err.contains("not loaded"), "{err}");
+    assert!(client.stats().is_ok());
+
+    drop(client);
+    net.shutdown().unwrap();
+    let Ok(service) = Arc::try_unwrap(service) else {
+        panic!("sole service ref")
+    };
+    service.shutdown().unwrap();
 }
 
 #[test]

@@ -9,9 +9,11 @@ use std::sync::Arc;
 use domino::coordinator::{Placement, PoolingScheme};
 use domino::serve::api::{
     InferReply, MappingDesc, MappingSpec, ModelDesc, Request, Response, StatsReply,
+    TraceReply,
 };
 use domino::serve::wire;
 use domino::serve::{ModelMetricsSnapshot, ModelStamp};
+use domino::sim::flight::{Event, EventKind};
 use domino::testutil::{for_all, Rng};
 
 fn roundtrip_req(req: &Request) {
@@ -143,11 +145,41 @@ fn tricky_snapshot(rng: &mut Rng) -> ModelMetricsSnapshot {
         served: tricky_u64(rng),
         failed: tricky_u64(rng),
         rejected: tricky_u64(rng),
+        traced: tricky_u64(rng),
         queue_depth: tricky_u64(rng),
         samples: tricky_u64(rng),
         p50_us: opt(rng),
         p95_us: opt(rng),
         p99_us: opt(rng),
+    }
+}
+
+fn tricky_u32(rng: &mut Rng) -> u32 {
+    match rng.below(3) {
+        0 => 0,
+        1 => u32::MAX,
+        _ => rng.next_u64() as u32,
+    }
+}
+
+/// A flight-recorder event stressing every field's extremes (incl. the
+/// `NO_TILE` sentinel at `u16::MAX`).
+fn tricky_event(rng: &mut Rng) -> Event {
+    let u16_or_max = |rng: &mut Rng| {
+        if rng.chance(0.2) {
+            u16::MAX
+        } else {
+            rng.next_u64() as u16
+        }
+    };
+    Event {
+        kind: EventKind::ALL[rng.below(EventKind::ALL.len())],
+        stage: rng.next_u64() as u16,
+        chain: u16_or_max(rng),
+        ci: u16_or_max(rng),
+        slot: tricky_u32(rng),
+        a: tricky_u32(rng),
+        b: tricky_u32(rng),
     }
 }
 
@@ -202,10 +234,15 @@ fn every_request_variant_roundtrips() {
         model: "tiny-cnn".to_string(),
     });
     roundtrip_req(&Request::Stats);
+    roundtrip_req(&Request::Trace {
+        model: "tiny-cnn".to_string(),
+        image_seed: u64::MAX,
+        window: 0,
+    });
 
     // randomized sweep across all variants
     for_all("request_roundtrip", 200, |rng| {
-        let req = match rng.below(8) {
+        let req = match rng.below(9) {
             0 => Request::Infer {
                 model: if rng.chance(0.3) {
                     None
@@ -238,7 +275,12 @@ fn every_request_variant_roundtrips() {
             6 => Request::ModelInfo {
                 model: tricky_name(rng),
             },
-            _ => Request::Stats,
+            7 => Request::Stats,
+            _ => Request::Trace {
+                model: tricky_name(rng),
+                image_seed: tricky_u64(rng),
+                window: tricky_u64(rng),
+            },
         };
         roundtrip_req(&req);
     });
@@ -264,7 +306,7 @@ fn every_response_variant_roundtrips() {
     }));
 
     for_all("response_roundtrip", 200, |rng| {
-        let resp = match rng.below(8) {
+        let resp = match rng.below(9) {
             0 => Response::Infer(InferReply {
                 logits: tricky_image(rng),
                 model: if rng.chance(0.3) {
@@ -285,6 +327,15 @@ fn every_response_variant_roundtrips() {
                 rejected: tricky_u64(rng),
                 failed: tricky_u64(rng),
                 models: (0..rng.range(0, 4)).map(|_| tricky_snapshot(rng)).collect(),
+            }),
+            7 => Response::Trace(TraceReply {
+                model: tricky_stamp(rng),
+                image_seed: tricky_u64(rng),
+                events_total: tricky_u64(rng),
+                dropped: tricky_u64(rng),
+                events: (0..rng.range(0, 6)).map(|_| tricky_event(rng)).collect(),
+                scores: tricky_image(rng),
+                heatmap: tricky_name(rng),
             }),
             _ => Response::Error {
                 message: tricky_name(rng),
