@@ -638,12 +638,42 @@ fn main() -> anyhow::Result<()> {
         println!("per-worker served: {counts:?}");
     }
 
+    // ---- 5. hostile-reality scenarios (see serve::traffic) ----------
+    // Overload past queue_cap (typed rejections only, zero drops), a
+    // bursty open-loop run, an admin+data storm, a slow-loris TCP
+    // client, and the SLO-conditioned load search. The suite enforces
+    // its own invariants (any violation is an Err), and its report
+    // lands in BENCH_serve.json as the `scenarios` section so reject
+    // counts and the sustained-rate-at-SLO trend run over run.
+    let scenarios = if !multi_only && !remote_only {
+        let report = domino::serve::traffic::scenario_suite(&names, smoke, 0xBEEF)?;
+        println!(
+            "\nscenarios: overload {}/{} rejected typed (0 dropped, 0 failed); \
+             burst p99 {} us; storm {} swaps under flood; loris served {} well-behaved; \
+             slo max rate {}/s at p99 {} us (bound {} us)",
+            report.overload.rejected,
+            report.overload.submitted,
+            report.burst.p99_us.unwrap_or(0),
+            report.storm.swaps_ok,
+            report.loris.map(|l| l.wellbehaved_ok).unwrap_or(0),
+            report.slo.max_rate_per_s,
+            report.slo.p99_at_max_us,
+            report.slo.slo_p99_us
+        );
+        Some(domino::serve::wire::encode(&report.to_json()))
+    } else {
+        None
+    };
+
     if let Some(path) = json_path {
         let mut doc = JsonObj::new();
         doc.str_field("bench", "serve_sim_throughput")
             .str_field("mode", if smoke { "smoke" } else { "full" })
             .str_field("models", &model_list)
             .raw_field("sections", &json_array(&sections));
+        if let Some(s) = &scenarios {
+            doc.raw_field("scenarios", s);
+        }
         write_json(&path, &doc.finish())?;
     }
     Ok(())

@@ -132,6 +132,35 @@ COMMANDS:
                          trace <m> [--seed S] [--window N] (pull a
                          flight recording + link heatmap off the live
                          endpoint)
+  traffic record --out FILE [--models a,b,c] [--requests N] [--seed S]
+          [--rate R | --burst B --gap-us G]
+                         capture a timestamped, model-tagged request log:
+                         starts a sim service over --models (default
+                         tiny-mlp,tiny-cnn), drives N open-loop requests
+                         at the given arrival process through it with a
+                         recorder tapped on dispatch, writes the
+                         versioned framed log to FILE
+  traffic replay FILE [--speed 1x|max|Nx|N/Mx] [--addr HOST:PORT]
+                         re-issue a recorded log at the given speed
+                         (default max): against a fresh local service
+                         built from the log's own load requests, or
+                         against a live endpoint via --addr; every
+                         comparable response is checked byte-for-byte
+                         against the recording (timing fields excluded,
+                         point-in-time stats skipped) and the first
+                         divergence is printed. Exits non-zero on any
+                         mismatch
+  traffic scenario [--smoke] [--models a,b,c] [--seed S] [--out FILE]
+                         hostile-reality scenario suite on a deliberately
+                         small service (2 workers, queue_cap 8): overload
+                         past queue_cap (typed rejections only, zero
+                         drops), bursty open-loop arrivals, mixed
+                         admin+data storm (hot-swap/load under flood),
+                         slow-loris TCP client vs well-behaved peer, and
+                         an SLO-conditioned load search (max rate at
+                         p99 < 200ms). Violated invariants exit non-zero;
+                         --out writes the wire-JSON report (the serve
+                         bench embeds the same shape into BENCH_serve.json)
   models [list|info <m>] [--json]
                          list zoo models (params/MACs/shapes), or show
                          one model in detail incl. its mapping stats at

@@ -35,6 +35,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "golden" => golden(args),
         "serve" => serve(args),
         "client" => client_cmd(args),
+        "traffic" => traffic_cmd(args),
         "models" => models_cmd(args),
         "" | "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -906,8 +907,8 @@ fn print_stats(resp: &domino::serve::api::Response) -> Result<()> {
         other => bail!("unexpected response to stats: {other:?}"),
     };
     println!(
-        "stats: served {}, rejected {}, failed {}",
-        stats.served, stats.rejected, stats.failed
+        "stats: served {}, rejected {}, failed {}, conns refused {}, traces rejected {}",
+        stats.served, stats.rejected, stats.failed, stats.conns_refused, stats.trace_rejected
     );
     println!(
         "  {:<18} {:>8} {:>8} {:>9} {:>7} {:>7} {:>9} {:>9} {:>9}",
@@ -1129,6 +1130,260 @@ fn client_cmd(args: &Args) -> Result<()> {
              | stats | trace)"
         ),
     }
+}
+
+/// `domino traffic record|replay|scenario` — the hostile-reality
+/// plane: capture a timestamped request log off a live service,
+/// re-issue it deterministically at a chosen speed, or run the
+/// scenario suite (overload, bursts, admin storms, slow-loris, SLO
+/// search). See `serve::traffic`.
+fn traffic_cmd(args: &Args) -> Result<()> {
+    let op = args.positional.first().map(String::as_str).unwrap_or("");
+    match op {
+        "record" => traffic_record(args),
+        "replay" => traffic_replay(args),
+        "scenario" => traffic_scenario(args),
+        other => bail!("unknown traffic op {other:?} (use record | replay | scenario)"),
+    }
+}
+
+fn traffic_models(args: &Args) -> Vec<String> {
+    args.get("models")
+        .unwrap_or("tiny-mlp,tiny-cnn")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+fn traffic_record(args: &Args) -> Result<()> {
+    use domino::serve::api::{Request, Response};
+    use domino::serve::traffic::{arrival_offsets_us, Arrival, TrafficRecorder};
+    use domino::serve::{ModelRegistry, ServeConfig, Server, Service};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("traffic record needs --out FILE"))?;
+    let models = traffic_models(args);
+    let n = args.get_usize("requests", 64);
+    let seed = args.get_u64("seed", 42);
+
+    // Start from an *empty* registry and load the models through
+    // dispatch while the recorder is armed: the log then begins with
+    // its own `load_seeded` requests, so replaying it into a fresh
+    // empty service reconstructs the exact versions (weights are a
+    // pure function of network + seed) — the log is self-contained.
+    let registry = Arc::new(ModelRegistry::new());
+    let server = Server::start_multi(
+        ServeConfig {
+            workers: 2,
+            max_batch: 4,
+            queue_cap: 64,
+        },
+        registry,
+    )?;
+    let service = Service::new(server, arch_from(args));
+    let recorder = TrafficRecorder::arm(&service);
+
+    let mut loaded: Vec<(String, usize)> = Vec::new();
+    for (i, m) in models.iter().enumerate() {
+        match service.dispatch(Request::LoadSeeded {
+            model: m.clone(),
+            seed: seed.wrapping_add(i as u64),
+            mapping: None,
+        }) {
+            Response::Loaded(stamp) => {
+                let reg = service
+                    .server()
+                    .registry()
+                    .ok_or_else(|| anyhow::anyhow!("sim backend has no registry"))?;
+                let mv = reg
+                    .get(&stamp.name)
+                    .ok_or_else(|| anyhow::anyhow!("{} vanished after load", stamp.name))?;
+                loaded.push((stamp.name.to_string(), mv.input_len()));
+            }
+            Response::Error { message } => bail!("load {m}: {message}"),
+            other => bail!("unexpected response to load {m}: {other:?}"),
+        }
+    }
+
+    let arrival = match args.get("burst") {
+        Some(b) => Arrival::Bursty {
+            burst: b
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--burst must be a positive integer"))?,
+            gap_us: args.get_u64("gap-us", 20_000),
+        },
+        None => Arrival::Uniform {
+            rate: args.get_u64("rate", 200),
+        },
+    };
+    let offsets = arrival_offsets_us(arrival, n);
+    let start = Instant::now();
+    let mut rng = Rng::new(seed);
+    let (mut ok, mut rejected, mut failed) = (0u64, 0u64, 0u64);
+    for (i, off) in offsets.iter().enumerate() {
+        let due = Duration::from_micros(*off);
+        let now = start.elapsed();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let (name, input_len) = &loaded[i % loaded.len()];
+        let image = rng.i8_vec(*input_len, 31);
+        match service.dispatch(Request::Infer {
+            model: Some(name.clone()),
+            image,
+        }) {
+            Response::Infer(_) => ok += 1,
+            Response::Error { message } if message.contains("backpressure") => rejected += 1,
+            _ => failed += 1,
+        }
+    }
+    service.clear_tap();
+    let log = recorder.finish();
+    log.save(std::path::Path::new(out))?;
+    println!(
+        "recorded {} entries ({} loads; {} infers ok, {} rejected, {} failed) \
+         over {:.2}s -> {}",
+        log.len(),
+        loaded.len(),
+        ok,
+        rejected,
+        failed,
+        start.elapsed().as_secs_f64(),
+        out
+    );
+    if rejected > 0 {
+        println!(
+            "note: the recording includes backpressure rejections; rejections are \
+             timing-dependent, so a replay at a different speed may legitimately diverge"
+        );
+    }
+    service.shutdown()?;
+    Ok(())
+}
+
+fn traffic_replay(args: &Args) -> Result<()> {
+    use domino::serve::api::Response;
+    use domino::serve::traffic::{replay, replay_with, ReplaySpeed, TrafficLog};
+    use domino::serve::{ModelRegistry, ServeConfig, Server, Service};
+    use std::sync::Arc;
+
+    let file = args.positional.get(1).ok_or_else(|| {
+        anyhow::anyhow!("usage: domino traffic replay FILE [--speed 1x|max|Nx] [--addr HOST:PORT]")
+    })?;
+    let log = TrafficLog::load(std::path::Path::new(file))?;
+    let speed = ReplaySpeed::parse(args.get("speed").unwrap_or("max"))?;
+    let report = match args.get("addr") {
+        Some(addr) => {
+            // against a live endpoint: a transport failure becomes a
+            // typed error response, which the diff then reports
+            let mut client = domino::serve::client::Client::connect(addr)?;
+            replay_with(&log, speed, |req| {
+                client.call(&req).unwrap_or_else(|e| Response::Error {
+                    message: format!("transport: {e:#}"),
+                })
+            })
+        }
+        None => {
+            // against a fresh local service: the log's own load
+            // requests reconstruct the models, same seeds, same bytes
+            let registry = Arc::new(ModelRegistry::new());
+            let server = Server::start_multi(
+                ServeConfig {
+                    workers: 2,
+                    max_batch: 4,
+                    queue_cap: 64,
+                },
+                registry,
+            )?;
+            let service = Service::new(server, arch_from(args));
+            let r = replay(&log, &service, speed);
+            service.shutdown()?;
+            r
+        }
+    };
+    println!(
+        "replayed {} entries in {:.2}s: {} matched, {} mismatched, {} skipped (stats)",
+        report.total,
+        report.elapsed.as_secs_f64(),
+        report.matched,
+        report.mismatched,
+        report.skipped
+    );
+    if let Some(m) = &report.first_mismatch {
+        println!("first mismatch: {m}");
+    }
+    anyhow::ensure!(
+        report.is_identical(),
+        "{} responses diverged from the recording",
+        report.mismatched
+    );
+    println!("every comparable response was byte-identical to the recording");
+    Ok(())
+}
+
+fn traffic_scenario(args: &Args) -> Result<()> {
+    use domino::serve::{traffic, wire};
+
+    let models = traffic_models(args);
+    let smoke = args.flag("smoke");
+    let seed = args.get_u64("seed", 42);
+    let report = traffic::scenario_suite(&models, smoke, seed)?;
+    println!(
+        "scenario suite ({}) on {} (queue_cap {}):",
+        if smoke { "smoke" } else { "full" },
+        models.join(","),
+        report.queue_cap
+    );
+    println!(
+        "  overload: {} submitted -> {} accepted, {} rejected (typed), {} failed, {} dropped",
+        report.overload.submitted,
+        report.overload.accepted,
+        report.overload.rejected,
+        report.overload.failed,
+        report.overload.dropped
+    );
+    let fmt = |v: Option<u64>| v.map(|x| x.to_string()).unwrap_or_else(|| "-".into());
+    println!(
+        "  burst:    {} submitted -> {} accepted, {} rejected; p50 {} us, p99 {} us",
+        report.burst.submitted,
+        report.burst.accepted,
+        report.burst.rejected,
+        fmt(report.burst.p50_us),
+        fmt(report.burst.p99_us)
+    );
+    println!(
+        "  storm:    {} infers ok across {} version(s); {} swaps, {} side loads, \
+         {} admin failures",
+        report.storm.infers_ok,
+        report.storm.versions_seen,
+        report.storm.swaps_ok,
+        report.storm.loads_ok,
+        report.storm.admin_failed
+    );
+    if let Some(l) = &report.loris {
+        println!(
+            "  loris:    {} well-behaved infers served during a {} ms dribble; \
+             dribbled frame answered: {}",
+            l.wellbehaved_ok, l.dribble_ms, l.loris_answered
+        );
+    }
+    println!(
+        "  slo:      max sustained rate {}/s at p99 {} us (bound {} us, {} probes)",
+        report.slo.max_rate_per_s,
+        report.slo.p99_at_max_us,
+        report.slo.slo_p99_us,
+        report.slo.probes.len()
+    );
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, wire::encode(&report.to_json()))?;
+        println!("wrote {path}");
+    }
+    println!("all scenario invariants held");
+    Ok(())
 }
 
 /// Serve the AOT artifact through PJRT over the held-out test set.

@@ -23,6 +23,7 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
@@ -291,12 +292,21 @@ impl ModelDesc {
 
 /// The `Stats` payload: the former aggregate counters plus the
 /// per-model split ([`ModelMetricsSnapshot`]: served/failed/rejected
-/// counts, live queue-depth gauge, p50/p95/p99 latency).
+/// counts, live queue-depth gauge, p50/p95/p99 latency) and the
+/// endpoint-level shedding counters — connections refused at the TCP
+/// accept loop (over `max_conns`) and traces rejected by the
+/// concurrent-trace budget. Both used to be invisible: an operator
+/// watching `Stats` could not tell connection-level shedding from a
+/// quiet endpoint.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct StatsReply {
     pub served: u64,
     pub rejected: u64,
     pub failed: u64,
+    /// Connections refused over capacity at the TCP endpoint.
+    pub conns_refused: u64,
+    /// `Request::Trace` dispatches rejected by the trace budget.
+    pub trace_rejected: u64,
     pub models: Vec<ModelMetricsSnapshot>,
 }
 
@@ -499,6 +509,20 @@ impl RegistryManifest {
     }
 }
 
+/// Default cap on concurrently executing `Request::Trace` dispatches
+/// (see [`Service::with_trace_budget`]).
+pub const DEFAULT_TRACE_BUDGET: usize = 2;
+
+/// Observer of every dispatched request/response pair — the
+/// `Probe`-style hook the traffic recorder (`serve::traffic`) arms on
+/// a live service. The tap sees the request *after* dispatch decided
+/// the response, on the dispatching thread, for local and TCP callers
+/// alike (there is only one dispatch path). Implementations must be
+/// cheap and must not dispatch back into the service.
+pub trait DispatchTap: Send + Sync {
+    fn on_dispatch(&self, req: &Request, resp: &Response);
+}
+
 /// The one front door for every plane: wraps a running [`Server`] and
 /// dispatches typed [`Request`]s, locally or (through `serve::net`)
 /// over TCP. Admin mutations optionally persist through a
@@ -507,6 +531,49 @@ pub struct Service {
     server: Server,
     arch: ArchConfig,
     manifest: Option<Arc<RegistryManifest>>,
+    /// Cap on concurrently executing traces. A trace runs a full
+    /// instrumented cycle-sim *inline on the dispatching thread* —
+    /// it never passes through the bounded data-plane queue — so
+    /// without a budget N hostile connections could run N unbounded
+    /// simulations while paid inference traffic starves.
+    trace_budget: usize,
+    /// Traces currently executing (bounded by `trace_budget`).
+    trace_live: AtomicUsize,
+    /// Traces rejected by the budget (surfaced in [`StatsReply`]).
+    trace_rejected: AtomicU64,
+    /// Connections refused over capacity by the TCP accept loop
+    /// (`serve::net` reports in via [`Self::note_conn_refused`]).
+    conns_refused: AtomicU64,
+    /// Optional dispatch observer (see [`DispatchTap`]); armed by the
+    /// traffic recorder, `None` in the steady state.
+    tap: Mutex<Option<Arc<dyn DispatchTap>>>,
+}
+
+/// RAII slot in the trace budget: acquired lock-free at the top of
+/// `do_trace`, released on every exit path (including errors) by Drop.
+struct TracePermit<'a> {
+    live: &'a AtomicUsize,
+}
+
+impl<'a> TracePermit<'a> {
+    fn acquire(live: &'a AtomicUsize, budget: usize) -> Option<Self> {
+        let mut cur = live.load(Ordering::Relaxed);
+        loop {
+            if cur >= budget {
+                return None;
+            }
+            match live.compare_exchange_weak(cur, cur + 1, Ordering::AcqRel, Ordering::Relaxed) {
+                Ok(_) => return Some(Self { live }),
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
+impl Drop for TracePermit<'_> {
+    fn drop(&mut self) {
+        self.live.fetch_sub(1, Ordering::AcqRel);
+    }
 }
 
 impl Service {
@@ -515,6 +582,11 @@ impl Service {
             server,
             arch,
             manifest: None,
+            trace_budget: DEFAULT_TRACE_BUDGET,
+            trace_live: AtomicUsize::new(0),
+            trace_rejected: AtomicU64::new(0),
+            conns_refused: AtomicU64::new(0),
+            tap: Mutex::new(None),
         }
     }
 
@@ -522,10 +594,44 @@ impl Service {
     /// `manifest` (see [`RegistryManifest`]).
     pub fn with_manifest(server: Server, arch: ArchConfig, manifest: Arc<RegistryManifest>) -> Self {
         Self {
-            server,
-            arch,
             manifest: Some(manifest),
+            ..Self::new(server, arch)
         }
+    }
+
+    /// Override the concurrent-trace budget (`n = 0` rejects every
+    /// trace — useful to make shedding deterministic in tests).
+    pub fn with_trace_budget(mut self, n: usize) -> Self {
+        self.trace_budget = n;
+        self
+    }
+
+    /// Record one refused-over-capacity connection. Called by the TCP
+    /// accept loop so connection-level shedding shows up in `Stats`.
+    pub fn note_conn_refused(&self) {
+        self.conns_refused.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total connections refused over capacity at the TCP endpoint.
+    pub fn conns_refused(&self) -> u64 {
+        self.conns_refused.load(Ordering::Relaxed)
+    }
+
+    /// Total traces rejected by the concurrent-trace budget.
+    pub fn trace_rejected(&self) -> u64 {
+        self.trace_rejected.load(Ordering::Relaxed)
+    }
+
+    /// Arm a [`DispatchTap`]: from now on every dispatched
+    /// request/response pair is observed (replacing any earlier tap).
+    pub fn set_tap(&self, tap: Arc<dyn DispatchTap>) {
+        *self.tap.lock().unwrap() = Some(tap);
+    }
+
+    /// Disarm the dispatch tap (dispatch reverts to zero overhead
+    /// beyond one uncontended mutex probe).
+    pub fn clear_tap(&self) {
+        *self.tap.lock().unwrap() = None;
     }
 
     /// The wrapped server (counters, registry, direct submit paths).
@@ -543,6 +649,11 @@ impl Service {
     /// the in-process path and the TCP endpoint use; failures become
     /// [`Response::Error`], never `Err`.
     pub fn dispatch(&self, req: Request) -> Response {
+        // clone the tap handle out of the lock so a slow observer
+        // never holds up other dispatching threads; clone the request
+        // only while a recorder is actually armed
+        let tap = self.tap.lock().unwrap().clone();
+        let recorded_req = tap.as_ref().map(|_| req.clone());
         let r = match req {
             Request::Infer { model, image } => self.do_infer(model, image),
             Request::Load { model, mapping } => self.do_load(&model, None, mapping.as_ref()),
@@ -562,9 +673,13 @@ impl Service {
                 window,
             } => self.do_trace(&model, image_seed, window),
         };
-        r.unwrap_or_else(|e| Response::Error {
+        let resp = r.unwrap_or_else(|e| Response::Error {
             message: format!("{e:#}"),
-        })
+        });
+        if let (Some(tap), Some(req)) = (tap, recorded_req) {
+            tap.on_dispatch(&req, &resp);
+        }
+        resp
     }
 
     fn registry(&self) -> Result<&Arc<ModelRegistry>> {
@@ -700,11 +815,28 @@ impl Service {
             served: self.server.served(),
             rejected: self.server.rejected(),
             failed: self.server.failed(),
+            conns_refused: self.conns_refused.load(Ordering::Relaxed),
+            trace_rejected: self.trace_rejected.load(Ordering::Relaxed),
             models: self.server.metrics_snapshot(),
         })
     }
 
     fn do_trace(&self, model: &str, image_seed: u64, window: u64) -> Result<Response> {
+        // Budget first: a trace is an inline instrumented cycle-sim on
+        // *this* thread, outside the bounded data-plane queue, so it
+        // needs its own backpressure. Over budget is a typed overload
+        // error (load-shedding), never a wait.
+        let _permit = match TracePermit::acquire(&self.trace_live, self.trace_budget) {
+            Some(p) => p,
+            None => {
+                self.trace_rejected.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!(
+                    "trace budget exhausted ({} concurrent traces): \
+                     the observability plane is shedding load, retry later",
+                    self.trace_budget
+                );
+            }
+        };
         let reg = self.registry()?;
         let key = self.registry_key(model);
         let mv = reg.get(&key).ok_or_else(|| {

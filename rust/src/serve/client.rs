@@ -21,6 +21,13 @@ use super::wire;
 /// One framed connection to a `serve::net` endpoint.
 pub struct Client {
     stream: TcpStream,
+    /// Set when a call died mid-round-trip (write or read failure,
+    /// e.g. a read timeout). The framing is then unsynchronized: the
+    /// late response is still in flight and would be decoded as the
+    /// answer to the *next* request — silent misattribution when the
+    /// variants happen to match. Every subsequent call fails fast
+    /// instead; reconnect to recover.
+    poisoned: bool,
 }
 
 impl Client {
@@ -29,22 +36,50 @@ impl Client {
         let stream = TcpStream::connect(addr)
             .map_err(|e| anyhow!("failed to connect to {addr}: {e}"))?;
         stream.set_nodelay(true).ok();
-        Ok(Self { stream })
+        Ok(Self {
+            stream,
+            poisoned: false,
+        })
     }
 
     /// Bound how long a single response may take; `None` (the
     /// default) waits indefinitely. A timeout surfaces as an error
-    /// from the next call.
+    /// from the next call and poisons the connection (the late
+    /// response would otherwise answer the wrong request).
     pub fn set_read_timeout(&mut self, dur: Option<Duration>) -> Result<()> {
         self.stream
             .set_read_timeout(dur)
             .map_err(|e| anyhow!("set read timeout: {e}"))
     }
 
+    /// Whether a previous call died mid-round-trip, leaving the frame
+    /// stream unsynchronized (see [`Self::call`]).
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned
+    }
+
     /// One raw round-trip: send `req`, receive the typed response
     /// (which may be [`Response::Error`] — the typed helpers below
-    /// convert that into `Err`).
+    /// convert that into `Err`). Any transport failure mid-call
+    /// poisons the client: request and response frames alternate
+    /// strictly on one connection, so after a half-finished round-trip
+    /// the next read could return the *previous* request's late
+    /// response. Poisoned clients fail fast; reconnect to recover.
     pub fn call(&mut self, req: &Request) -> Result<Response> {
+        if self.poisoned {
+            bail!(
+                "connection poisoned by an earlier mid-call transport error \
+                 (a stale response may be in flight); reconnect"
+            );
+        }
+        let r = self.call_inner(req);
+        if r.is_err() {
+            self.poisoned = true;
+        }
+        r
+    }
+
+    fn call_inner(&mut self, req: &Request) -> Result<Response> {
         wire::write_frame(&mut self.stream, &wire::encode_request(req))?;
         let frame = wire::read_frame(&mut self.stream)?
             .ok_or_else(|| anyhow!("server closed the connection"))?;

@@ -35,6 +35,14 @@
 //! * [`metrics`] — per-model observability: p50/p95/p99 latency,
 //!   served/failed/rejected counts and live queue-depth gauges, keyed
 //!   by model name and served through the `Stats` request.
+//! * [`traffic`] — serving under hostile reality: a request
+//!   record/replay plane (timestamped, model-tagged logs captured off
+//!   [`Service::dispatch`], replayed at 1x/max/scaled speed with
+//!   byte-identical-response checking) and the scenario harness
+//!   (Poisson/bursty open-loop arrivals, overload past `queue_cap`
+//!   with typed-rejection accounting, admin+data storms, slow-loris
+//!   clients, SLO-conditioned load search) behind
+//!   `domino traffic record|replay|scenario`.
 //!
 //! ## Hot-swap semantics
 //!
@@ -62,6 +70,7 @@ pub mod metrics;
 pub mod net;
 mod registry;
 mod server;
+pub mod traffic;
 pub mod wire;
 
 pub use api::Service;

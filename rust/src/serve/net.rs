@@ -130,7 +130,7 @@ fn accept_loop(
             Ok((stream, peer)) => {
                 conns.retain(|h| !h.is_finished());
                 if live.load(Ordering::SeqCst) >= cfg.max_conns {
-                    refuse(stream, &cfg);
+                    refuse(stream, &cfg, &service);
                     continue;
                 }
                 live.fetch_add(1, Ordering::SeqCst);
@@ -170,8 +170,11 @@ fn accept_loop(
     }
 }
 
-/// Over-capacity connection: answer with a typed error, then close.
-fn refuse(mut stream: TcpStream, cfg: &NetConfig) {
+/// Over-capacity connection: answer with a typed error, then close —
+/// and count it, so an operator watching `Stats` sees connection-level
+/// shedding instead of a mysteriously quiet endpoint.
+fn refuse(mut stream: TcpStream, cfg: &NetConfig, service: &Service) {
+    service.note_conn_refused();
     let _ = stream.set_write_timeout(Some(cfg.write_timeout));
     let resp = api::Response::Error {
         message: format!(

@@ -1,0 +1,1299 @@
+//! Traffic record/replay + scenario harness: serving under hostile
+//! reality instead of well-behaved closed loops.
+//!
+//! Three planes in one module:
+//!
+//! - **Recorder** ([`TrafficRecorder`]): a [`DispatchTap`] armed on a
+//!   live [`Service`] that captures every request/response pair with a
+//!   microsecond arrival offset into a [`TrafficLog`]. The on-disk
+//!   format reuses the wire codec verbatim — length-prefixed frames of
+//!   the same hand-rolled JSON `serve::wire` speaks, one header frame
+//!   (format name + version) followed by one frame per entry — so a
+//!   log survives protocol revisions exactly as well as the wire does.
+//! - **Replayer** ([`replay`]/[`replay_with`]): re-issues a recorded
+//!   log against a service at a configurable [`ReplaySpeed`]
+//!   (wall-clock, max-rate, or scaled) and diffs each live response
+//!   against the recorded one byte-for-byte after stripping the
+//!   fields that legitimately vary run-to-run (timing splits,
+//!   point-in-time stats) — see [`comparable_bytes`]. Same seeds, same
+//!   models ⇒ byte-identical logits and stamps, turning "handles the
+//!   same traffic the same way" into a checked property.
+//! - **Scenario generator**: open-loop [`Arrival`] schedules (uniform,
+//!   Poisson, bursty), an [`overload`] scenario that pushes past
+//!   `queue_cap` and proves rejection stays *typed* (zero dropped
+//!   accepted requests, zero untyped failures), an [`admin_storm`]
+//!   (swap/load under burst), a TCP [`slow_loris`] dribbling bytes
+//!   into the frame reader while well-behaved peers stay served, and
+//!   an SLO-conditioned load search ([`slo_search`]: max sustained
+//!   rate at p99 below a bound). [`scenario_suite`] bundles them for
+//!   the `domino traffic scenario` CLI and the `serve_sim_throughput`
+//!   bench's `scenarios` section in `BENCH_serve.json`.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write as _};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::api::{DispatchTap, Request, Response, Service};
+use super::metrics::LatencyStats;
+use super::wire::{self, Json};
+use crate::testutil::Rng;
+
+/// Magic string identifying a traffic log's header frame.
+pub const TRAFFIC_LOG_FORMAT: &str = "domino-traffic-log";
+/// Current on-disk log format revision.
+pub const TRAFFIC_LOG_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// Log format
+// ---------------------------------------------------------------------------
+
+/// One recorded dispatch: arrival offset (µs since the recorder was
+/// armed), the request, and the response the service produced.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LogEntry {
+    pub at_us: u64,
+    pub request: Request,
+    pub response: Response,
+}
+
+/// A recorded traffic session, ordered by arrival.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TrafficLog {
+    pub entries: Vec<LogEntry>,
+}
+
+impl TrafficLog {
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serialize to the framed on-disk format: a header frame
+    /// (`format`/`version`/`entries`) then one frame per entry, each
+    /// frame the same length-prefixed JSON the wire speaks.
+    pub fn save_to<W: std::io::Write>(&self, w: &mut W) -> Result<()> {
+        let header = wire::obj(vec![
+            ("format", wire::s(TRAFFIC_LOG_FORMAT)),
+            ("version", wire::u(TRAFFIC_LOG_VERSION)),
+            ("entries", wire::u(self.entries.len() as u64)),
+        ]);
+        wire::write_frame(w, wire::encode(&header).as_bytes())?;
+        for e in &self.entries {
+            let frame = wire::obj(vec![
+                ("at_us", wire::u(e.at_us)),
+                ("request", wire::request_to_json(&e.request)),
+                ("response", wire::response_to_json(&e.response)),
+            ]);
+            wire::write_frame(w, wire::encode(&frame).as_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Parse a log from its framed form. The header's `entries` count
+    /// is verified, so a truncated file is an error, never a silently
+    /// shorter session.
+    pub fn load_from<R: Read>(r: &mut R) -> Result<Self> {
+        let header = wire::read_frame(r)?
+            .ok_or_else(|| anyhow!("empty traffic log (no header frame)"))?;
+        let header = wire::decode(
+            std::str::from_utf8(&header).context("traffic log header is not UTF-8")?,
+        )?;
+        let format = wire::str_field(&header, "format")?;
+        ensure!(
+            format == TRAFFIC_LOG_FORMAT,
+            "not a traffic log (format {format:?})"
+        );
+        let version = wire::u64_field(&header, "version")?;
+        ensure!(
+            version == TRAFFIC_LOG_VERSION,
+            "traffic log version {version} is not supported (this build reads {TRAFFIC_LOG_VERSION})"
+        );
+        let expected = wire::u64_field(&header, "entries")? as usize;
+        let mut entries = Vec::with_capacity(expected.min(1 << 20));
+        while let Some(frame) = wire::read_frame(r)? {
+            let v = wire::decode(
+                std::str::from_utf8(&frame).context("traffic log entry is not UTF-8")?,
+            )?;
+            entries.push(LogEntry {
+                at_us: wire::u64_field(&v, "at_us")?,
+                request: wire::request_from_json(wire::field(&v, "request")?)?,
+                response: wire::response_from_json(wire::field(&v, "response")?)?,
+            });
+        }
+        ensure!(
+            entries.len() == expected,
+            "traffic log truncated: header promises {expected} entries, found {}",
+            entries.len()
+        );
+        Ok(Self { entries })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(
+            File::create(path).with_context(|| format!("create {}", path.display()))?,
+        );
+        self.save_to(&mut w)?;
+        w.flush()
+            .with_context(|| format!("flush {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut r = BufReader::new(
+            File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        Self::load_from(&mut r)
+            .with_context(|| format!("parse traffic log {}", path.display()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recorder
+// ---------------------------------------------------------------------------
+
+/// The dispatch tap that captures a [`TrafficLog`] from a live
+/// service. Arm with [`TrafficRecorder::arm`]; every dispatch from
+/// any thread (local callers and TCP connections alike) is appended
+/// with its arrival offset. Call [`TrafficRecorder::finish`] to take
+/// the log (typically after `Service::clear_tap`).
+pub struct TrafficRecorder {
+    start: Instant,
+    entries: Mutex<Vec<LogEntry>>,
+}
+
+impl TrafficRecorder {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self {
+            start: Instant::now(),
+            entries: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Create a recorder and arm it on `service` in one step.
+    pub fn arm(service: &Service) -> Arc<Self> {
+        let rec = Self::new();
+        service.set_tap(Arc::clone(&rec) as Arc<dyn DispatchTap>);
+        rec
+    }
+
+    /// Entries captured so far.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Take the captured log (the recorder keeps running if still
+    /// armed; entries recorded after this call start a fresh log).
+    pub fn finish(&self) -> TrafficLog {
+        TrafficLog {
+            entries: std::mem::take(&mut *self.entries.lock().unwrap()),
+        }
+    }
+}
+
+impl DispatchTap for TrafficRecorder {
+    fn on_dispatch(&self, req: &Request, resp: &Response) {
+        let at_us = self.start.elapsed().as_micros() as u64;
+        self.entries.lock().unwrap().push(LogEntry {
+            at_us,
+            request: req.clone(),
+            response: resp.clone(),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replayer
+// ---------------------------------------------------------------------------
+
+/// How fast to re-issue a recorded log.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplaySpeed {
+    /// Honor the recorded arrival offsets (1x wall-clock).
+    Wallclock,
+    /// Issue back-to-back, as fast as the loop can go.
+    MaxRate,
+    /// Scale the recorded gaps: `num/den` is a *rate* multiplier, so
+    /// `Scaled { num: 2, den: 1 }` replays twice as fast (half the
+    /// gaps) and `Scaled { num: 1, den: 2 }` at half speed.
+    Scaled { num: u32, den: u32 },
+}
+
+impl ReplaySpeed {
+    /// Parse `"1x"`, `"max"`, or `"Nx"` (e.g. `"4x"`, `"0.5x"` is
+    /// spelled `"1/2x"`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "1x" | "wallclock" => Ok(Self::Wallclock),
+            "max" | "max-rate" => Ok(Self::MaxRate),
+            other => {
+                let body = other
+                    .strip_suffix('x')
+                    .ok_or_else(|| anyhow!("bad replay speed {other:?} (want 1x, max, Nx or N/Mx)"))?;
+                let (num, den) = match body.split_once('/') {
+                    Some((n, d)) => (n.parse()?, d.parse()?),
+                    None => (body.parse()?, 1u32),
+                };
+                ensure!(num > 0 && den > 0, "replay speed must be positive");
+                Ok(Self::Scaled { num, den })
+            }
+        }
+    }
+
+    fn scale_gap(&self, gap_us: u64) -> Option<u64> {
+        match *self {
+            Self::Wallclock => Some(gap_us),
+            Self::MaxRate => None,
+            Self::Scaled { num, den } => {
+                Some((gap_us as u128 * den as u128 / num as u128) as u64)
+            }
+        }
+    }
+}
+
+/// Outcome of one replay pass.
+#[derive(Clone, Debug, Default)]
+pub struct ReplayReport {
+    /// Entries re-issued.
+    pub total: u64,
+    /// Live response byte-identical to the recorded one (after
+    /// stripping run-varying fields — see [`comparable_bytes`]).
+    pub matched: u64,
+    /// Comparable but different.
+    pub mismatched: u64,
+    /// Not comparable (point-in-time `Stats` replies).
+    pub skipped: u64,
+    pub elapsed: Duration,
+    /// Human-readable description of the first divergence.
+    pub first_mismatch: Option<String>,
+}
+
+impl ReplayReport {
+    /// True when every comparable response matched.
+    pub fn is_identical(&self) -> bool {
+        self.mismatched == 0
+    }
+}
+
+/// The byte-comparable form of a response for replay diffing, or
+/// `None` when the variant cannot be compared across runs. Server-side
+/// timing splits (`queue_us`/`exec_us`) legitimately differ run to run
+/// and are zeroed; `Stats` replies are point-in-time counters and are
+/// skipped entirely. Everything semantic — logits, stamps, model
+/// descriptions, trace events, error messages — must reproduce
+/// byte-for-byte at the same seeds.
+pub fn comparable_bytes(resp: &Response) -> Option<Vec<u8>> {
+    match resp {
+        Response::Stats(_) => None,
+        Response::Infer(r) => {
+            let mut c = r.clone();
+            c.queue_us = 0;
+            c.exec_us = 0;
+            Some(wire::encode_response(&Response::Infer(c)))
+        }
+        other => Some(wire::encode_response(other)),
+    }
+}
+
+/// Replay `log` through an arbitrary dispatch function at `speed`,
+/// diffing every live response against the recorded one. The dispatch
+/// function abstracts the target: `Service::dispatch` for in-process
+/// replay ([`replay`]), a `Client` round-trip for replay against a
+/// remote endpoint (`domino traffic replay --addr`).
+pub fn replay_with<F: FnMut(Request) -> Response>(
+    log: &TrafficLog,
+    speed: ReplaySpeed,
+    mut dispatch: F,
+) -> ReplayReport {
+    let mut report = ReplayReport::default();
+    let start = Instant::now();
+    let mut prev_at = log.entries.first().map(|e| e.at_us).unwrap_or(0);
+    let mut due = Duration::ZERO;
+    for e in &log.entries {
+        if let Some(gap) = speed.scale_gap(e.at_us.saturating_sub(prev_at)) {
+            due += Duration::from_micros(gap);
+            let now = start.elapsed();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+        }
+        prev_at = e.at_us;
+        let live = dispatch(e.request.clone());
+        report.total += 1;
+        match (comparable_bytes(&e.response), comparable_bytes(&live)) {
+            (Some(want), Some(got)) => {
+                if want == got {
+                    report.matched += 1;
+                } else {
+                    report.mismatched += 1;
+                    if report.first_mismatch.is_none() {
+                        report.first_mismatch = Some(format!(
+                            "entry {} ({:?}): recorded {} bytes != live {} bytes\n  recorded: {}\n  live:     {}",
+                            report.total - 1,
+                            request_kind(&e.request),
+                            want.len(),
+                            got.len(),
+                            String::from_utf8_lossy(&want[..want.len().min(160)]),
+                            String::from_utf8_lossy(&got[..got.len().min(160)]),
+                        ));
+                    }
+                }
+            }
+            _ => report.skipped += 1,
+        }
+    }
+    report.elapsed = start.elapsed();
+    report
+}
+
+/// [`replay_with`] against a local [`Service`].
+pub fn replay(log: &TrafficLog, service: &Service, speed: ReplaySpeed) -> ReplayReport {
+    replay_with(log, speed, |req| service.dispatch(req))
+}
+
+fn request_kind(req: &Request) -> &'static str {
+    match req {
+        Request::Infer { .. } => "infer",
+        Request::Load { .. } => "load",
+        Request::LoadSeeded { .. } => "load_seeded",
+        Request::Swap { .. } => "swap",
+        Request::Unload { .. } => "unload",
+        Request::ListModels => "list_models",
+        Request::ModelInfo { .. } => "model_info",
+        Request::Stats => "stats",
+        Request::Trace { .. } => "trace",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Arrival schedules
+// ---------------------------------------------------------------------------
+
+/// Open-loop arrival process for scenario traffic.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrival {
+    /// Evenly spaced arrivals at `rate` requests/second.
+    Uniform { rate: u64 },
+    /// Poisson process with mean `rate` requests/second
+    /// (exponentially distributed gaps, deterministic in `seed`).
+    Poisson { rate: u64, seed: u64 },
+    /// `burst` back-to-back arrivals, then `gap_us` of silence.
+    Bursty { burst: usize, gap_us: u64 },
+}
+
+/// The first `n` arrival offsets (µs from schedule start) of the
+/// process — a pure function, so scenarios are reproducible.
+pub fn arrival_offsets_us(a: Arrival, n: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(n);
+    match a {
+        Arrival::Uniform { rate } => {
+            let gap = 1_000_000 / rate.max(1);
+            for i in 0..n as u64 {
+                out.push(i * gap);
+            }
+        }
+        Arrival::Poisson { rate, seed } => {
+            let mut rng = Rng::new(seed ^ 0x7261_6666_6963); // "raffic"
+            let mut t = 0.0f64;
+            let rate = rate.max(1) as f64;
+            for _ in 0..n {
+                // inverse-CDF exponential gap; clamp the uniform away
+                // from 0 so ln never sees it
+                let u = rng.f64().max(1e-12);
+                t += -u.ln() / rate * 1e6;
+                out.push(t as u64);
+            }
+        }
+        Arrival::Bursty { burst, gap_us } => {
+            let burst = burst.max(1);
+            for i in 0..n {
+                out.push((i / burst) as u64 * gap_us);
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Scenarios
+// ---------------------------------------------------------------------------
+
+/// Outcome of the [`overload`] scenario. The invariant that makes
+/// backpressure *backpressure* (and not collapse): every submission is
+/// accounted for — `accepted + rejected == submitted`, `failed == 0`,
+/// and `dropped == 0` (no request vanished without a response).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OverloadReport {
+    pub submitted: u64,
+    /// Answered with logits.
+    pub accepted: u64,
+    /// Typed backpressure rejections (`queue full … backpressure`).
+    pub rejected: u64,
+    /// Any other error — must be 0 under pure overload.
+    pub failed: u64,
+    /// Submissions that got no response at all — must always be 0.
+    pub dropped: u64,
+}
+
+/// Push `threads` concurrent open-loop submitters at a service until
+/// `submitted` total requests have been issued — deliberately far past
+/// `queue_cap` — and classify every response. Overload must produce
+/// typed rejections, zero untyped failures, zero drops.
+pub fn overload(
+    service: &Service,
+    model: &str,
+    submitted: usize,
+    threads: usize,
+    seed: u64,
+) -> Result<OverloadReport> {
+    let input_len = model_input_len(service, model)?;
+    let accepted = AtomicU64::new(0);
+    let rejected = AtomicU64::new(0);
+    let failed = AtomicU64::new(0);
+    let answered = AtomicU64::new(0);
+    let threads = threads.max(1);
+    let per_thread = submitted.div_ceil(threads);
+    let submitted = per_thread * threads;
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let image = Rng::new(seed.wrapping_add(t as u64)).i8_vec(input_len, 31);
+            let (accepted, rejected, failed, answered) =
+                (&accepted, &rejected, &failed, &answered);
+            let service = &service;
+            scope.spawn(move || {
+                for _ in 0..per_thread {
+                    let resp = service.dispatch(Request::Infer {
+                        model: Some(model.to_string()),
+                        image: image.clone(),
+                    });
+                    answered.fetch_add(1, Ordering::Relaxed);
+                    match resp {
+                        Response::Infer(_) => accepted.fetch_add(1, Ordering::Relaxed),
+                        Response::Error { message } if message.contains("backpressure") => {
+                            rejected.fetch_add(1, Ordering::Relaxed)
+                        }
+                        _ => failed.fetch_add(1, Ordering::Relaxed),
+                    };
+                }
+            });
+        }
+    });
+    Ok(OverloadReport {
+        submitted: submitted as u64,
+        accepted: accepted.into_inner(),
+        rejected: rejected.into_inner(),
+        failed: failed.into_inner(),
+        dropped: submitted as u64 - answered.into_inner(),
+    })
+}
+
+/// Outcome of an open-loop [`burst_run`]: how the data plane behaved
+/// under a fixed arrival schedule.
+#[derive(Clone, Debug, Default)]
+pub struct BurstReport {
+    pub submitted: u64,
+    pub accepted: u64,
+    pub rejected: u64,
+    pub failed: u64,
+    pub dropped: u64,
+    /// End-to-end latency from *scheduled arrival* to response — the
+    /// open-loop number (includes time spent behind schedule), which
+    /// is the one an SLO is written against.
+    pub p50_us: Option<u64>,
+    pub p99_us: Option<u64>,
+}
+
+/// Drive `model` with open-loop arrivals at the given schedule using a
+/// small dispatcher pool: request `i` is issued at `offsets[i]` (or as
+/// soon after as a dispatcher frees up — falling behind schedule is
+/// charged to latency, exactly like a real overloaded frontend).
+pub fn burst_run(
+    service: &Service,
+    model: &str,
+    offsets_us: &[u64],
+    dispatchers: usize,
+    seed: u64,
+) -> Result<BurstReport> {
+    let input_len = model_input_len(service, model)?;
+    let accepted = AtomicU64::new(0);
+    let rejected = AtomicU64::new(0);
+    let failed = AtomicU64::new(0);
+    let answered = AtomicU64::new(0);
+    let lat = Mutex::new(LatencyStats::default());
+    let dispatchers = dispatchers.max(1);
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for d in 0..dispatchers {
+            let image = Rng::new(seed.wrapping_add(d as u64)).i8_vec(input_len, 31);
+            let (accepted, rejected, failed, answered, lat) =
+                (&accepted, &rejected, &failed, &answered, &lat);
+            let service = &service;
+            scope.spawn(move || {
+                // dispatcher d owns arrivals d, d+K, d+2K, …
+                for &off in offsets_us.iter().skip(d).step_by(dispatchers) {
+                    let due = Duration::from_micros(off);
+                    let now = start.elapsed();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                    let resp = service.dispatch(Request::Infer {
+                        model: Some(model.to_string()),
+                        image: image.clone(),
+                    });
+                    let done = start.elapsed();
+                    answered.fetch_add(1, Ordering::Relaxed);
+                    match resp {
+                        Response::Infer(_) => {
+                            accepted.fetch_add(1, Ordering::Relaxed);
+                            lat.lock().unwrap().record(done.saturating_sub(due));
+                        }
+                        Response::Error { message } if message.contains("backpressure") => {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                        _ => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let lat = lat.into_inner().unwrap();
+    Ok(BurstReport {
+        submitted: offsets_us.len() as u64,
+        accepted: accepted.into_inner(),
+        rejected: rejected.into_inner(),
+        failed: failed.into_inner(),
+        dropped: offsets_us.len() as u64 - answered.into_inner(),
+        p50_us: lat.percentile(50.0),
+        p99_us: lat.percentile(99.0),
+    })
+}
+
+/// Outcome of [`admin_storm`]: data-plane and admin-plane requests
+/// interleaved under burst.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StormReport {
+    pub infers_ok: u64,
+    pub infers_rejected: u64,
+    pub infers_failed: u64,
+    pub swaps_ok: u64,
+    pub loads_ok: u64,
+    pub admin_failed: u64,
+    /// Distinct model versions observed in infer stamps — > 1 proves
+    /// the storm actually swapped under live traffic.
+    pub versions_seen: u64,
+}
+
+/// Mixed admin+data storm: `infer_threads` flood `model` with
+/// inference while the admin plane hot-swaps it and re-loads a second
+/// model `admin_rounds` times. Every response must stay typed, every
+/// infer must be served by *some* coherent version (the stamp says
+/// which), and nothing may drop.
+pub fn admin_storm(
+    service: &Service,
+    model: &str,
+    side_model: &str,
+    admin_rounds: usize,
+    infer_threads: usize,
+    infers_per_thread: usize,
+    seed: u64,
+) -> Result<StormReport> {
+    let input_len = model_input_len(service, model)?;
+    let infers_ok = AtomicU64::new(0);
+    let infers_rejected = AtomicU64::new(0);
+    let infers_failed = AtomicU64::new(0);
+    let swaps_ok = AtomicU64::new(0);
+    let loads_ok = AtomicU64::new(0);
+    let admin_failed = AtomicU64::new(0);
+    let versions = Mutex::new(std::collections::BTreeSet::new());
+    std::thread::scope(|scope| {
+        for t in 0..infer_threads.max(1) {
+            let image = Rng::new(seed.wrapping_add(1000 + t as u64)).i8_vec(input_len, 31);
+            let (infers_ok, infers_rejected, infers_failed, versions) =
+                (&infers_ok, &infers_rejected, &infers_failed, &versions);
+            let service = &service;
+            scope.spawn(move || {
+                for _ in 0..infers_per_thread {
+                    match service.dispatch(Request::Infer {
+                        model: Some(model.to_string()),
+                        image: image.clone(),
+                    }) {
+                        Response::Infer(r) => {
+                            infers_ok.fetch_add(1, Ordering::Relaxed);
+                            if let Some(stamp) = r.model {
+                                versions.lock().unwrap().insert(stamp.version);
+                            }
+                        }
+                        Response::Error { message } if message.contains("backpressure") => {
+                            infers_rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                        _ => {
+                            infers_failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+        // the admin storm runs on this thread, concurrent with the flood
+        for round in 0..admin_rounds {
+            match service.dispatch(Request::Swap {
+                model: model.to_string(),
+                seed: Some(seed.wrapping_add(round as u64)),
+            }) {
+                Response::Swapped(_) => swaps_ok.fetch_add(1, Ordering::Relaxed),
+                _ => admin_failed.fetch_add(1, Ordering::Relaxed),
+            };
+            // churn the side model through unload→reload each round
+            // (a plain re-load would be refused as already loaded);
+            // with no distinct side model there is nothing to churn —
+            // unloading the primary would starve the flood
+            if side_model != model {
+                match service.dispatch(Request::Unload {
+                    model: side_model.to_string(),
+                }) {
+                    Response::Unloaded(_) => {}
+                    _ => {
+                        admin_failed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                match service.dispatch(Request::LoadSeeded {
+                    model: side_model.to_string(),
+                    seed: seed.wrapping_add(round as u64),
+                    mapping: None,
+                }) {
+                    Response::Loaded(_) => loads_ok.fetch_add(1, Ordering::Relaxed),
+                    _ => admin_failed.fetch_add(1, Ordering::Relaxed),
+                };
+            }
+        }
+    });
+    Ok(StormReport {
+        infers_ok: infers_ok.into_inner(),
+        infers_rejected: infers_rejected.into_inner(),
+        infers_failed: infers_failed.into_inner(),
+        swaps_ok: swaps_ok.into_inner(),
+        loads_ok: loads_ok.into_inner(),
+        admin_failed: admin_failed.into_inner(),
+        versions_seen: versions.into_inner().unwrap().len() as u64,
+    })
+}
+
+/// Outcome of [`slow_loris`]: the endpoint stayed serviceable while a
+/// hostile peer dribbled bytes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LorisReport {
+    /// Well-behaved infers completed *during* the dribble.
+    pub wellbehaved_ok: u64,
+    /// The dribbled frame, once finally complete, was answered.
+    pub loris_answered: bool,
+    /// How long the dribble held its connection open.
+    pub dribble_ms: u64,
+}
+
+/// Slow-loris a live TCP endpoint: connect, then write one valid
+/// request frame a few bytes at a time with pauses, while a
+/// well-behaved client hammers the same endpoint. The frame reader
+/// must neither hang the server nor corrupt the slow connection — the
+/// dribbled request is eventually answered like any other.
+pub fn slow_loris(
+    addr: &str,
+    model: &str,
+    input_len: usize,
+    wellbehaved_requests: usize,
+    pause: Duration,
+) -> Result<LorisReport> {
+    let image = Rng::new(0x1015).i8_vec(input_len, 31);
+    let payload = wire::encode_request(&Request::Infer {
+        model: Some(model.to_string()),
+        image,
+    });
+    let mut framed = Vec::with_capacity(payload.len() + 4);
+    framed.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    framed.extend_from_slice(&payload);
+
+    let mut loris = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("loris connect {addr}"))?;
+    loris.set_nodelay(true).ok();
+
+    let start = Instant::now();
+    let wellbehaved_ok = AtomicU64::new(0);
+    let mut loris_answered = false;
+    std::thread::scope(|scope| -> Result<()> {
+        let ok = &wellbehaved_ok;
+        let handle = scope.spawn(move || -> Result<()> {
+            let mut client = super::client::Client::connect(addr)?;
+            let image = Rng::new(0xbe57).i8_vec(input_len, 31);
+            for _ in 0..wellbehaved_requests {
+                client.infer(Some(model), image.clone())?;
+                ok.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(())
+        });
+        // dribble the frame in ~40 slices, pausing between them, while
+        // the well-behaved client runs (size-adaptive so a large image
+        // payload doesn't stretch the dribble unboundedly)
+        let slice = (framed.len() / 40).max(1);
+        for chunk in framed.chunks(slice) {
+            loris.write_all(chunk).context("loris dribble")?;
+            loris.flush().ok();
+            std::thread::sleep(pause);
+        }
+        // the frame is finally complete: the server owes a response
+        if let Some(frame) = wire::read_frame(&mut loris)? {
+            loris_answered = matches!(
+                wire::decode_response(&frame)?,
+                Response::Infer(_)
+            );
+        }
+        handle
+            .join()
+            .map_err(|_| anyhow!("well-behaved client thread panicked"))?
+            .context("well-behaved client failed during the dribble")?;
+        Ok(())
+    })?;
+    Ok(LorisReport {
+        wellbehaved_ok: wellbehaved_ok.into_inner(),
+        loris_answered,
+        dribble_ms: start.elapsed().as_millis() as u64,
+    })
+}
+
+/// Outcome of [`slo_search`].
+#[derive(Clone, Debug, Default)]
+pub struct SloReport {
+    /// The p99 bound the search was conditioned on (µs).
+    pub slo_p99_us: u64,
+    /// Highest tested rate (req/s) that met the SLO (0 = none did).
+    pub max_rate_per_s: u64,
+    /// p99 measured at that rate (µs).
+    pub p99_at_max_us: u64,
+    /// Every `(rate, p99_us, met_slo)` probe, in test order.
+    pub probes: Vec<(u64, u64, bool)>,
+}
+
+/// SLO-conditioned load search: find the highest open-loop request
+/// rate the service sustains with p99 latency under `slo_us`
+/// microseconds (and zero rejections/drops). Rates ramp geometrically
+/// from `start_rate` until the SLO breaks, then one bisection step
+/// refines the boundary — cheap enough for CI, honest enough to trend.
+pub fn slo_search(
+    service: &Service,
+    model: &str,
+    slo_us: u64,
+    start_rate: u64,
+    requests_per_probe: usize,
+    seed: u64,
+) -> Result<SloReport> {
+    let mut report = SloReport {
+        slo_p99_us: slo_us,
+        ..Default::default()
+    };
+    let mut probe = |rate: u64, report: &mut SloReport| -> Result<bool> {
+        let offsets = arrival_offsets_us(Arrival::Uniform { rate }, requests_per_probe);
+        let r = burst_run(service, model, &offsets, 8, seed)?;
+        let p99 = r.p99_us.unwrap_or(u64::MAX);
+        let ok = r.rejected == 0 && r.failed == 0 && r.dropped == 0 && p99 <= slo_us;
+        report.probes.push((rate, p99, ok));
+        if ok && rate > report.max_rate_per_s {
+            report.max_rate_per_s = rate;
+            report.p99_at_max_us = p99;
+        }
+        Ok(ok)
+    };
+    let mut rate = start_rate.max(1);
+    let mut last_ok = 0u64;
+    // geometric ramp until the SLO breaks (bounded: 12 doublings)
+    for _ in 0..12 {
+        if probe(rate, &mut report)? {
+            last_ok = rate;
+            rate *= 2;
+        } else {
+            break;
+        }
+    }
+    // one bisection step between the last passing and first failing rate
+    if last_ok > 0 && rate > last_ok {
+        let mid = last_ok + (rate - last_ok) / 2;
+        if mid != last_ok && mid != rate {
+            probe(mid, &mut report)?;
+        }
+    }
+    Ok(report)
+}
+
+fn model_input_len(service: &Service, model: &str) -> Result<usize> {
+    let reg = service
+        .server()
+        .registry()
+        .ok_or_else(|| anyhow!("scenario needs the sim backend (no registry)"))?;
+    let mv = reg
+        .get(model)
+        .ok_or_else(|| anyhow!("model {model:?} is not loaded"))?;
+    Ok(mv.input_len())
+}
+
+// ---------------------------------------------------------------------------
+// Scenario suite (CLI + bench entry point)
+// ---------------------------------------------------------------------------
+
+/// Aggregated outcome of [`scenario_suite`], serializable into the
+/// bench's `BENCH_serve.json` `scenarios` section.
+#[derive(Clone, Debug)]
+pub struct SuiteReport {
+    pub queue_cap: usize,
+    pub overload: OverloadReport,
+    pub burst: BurstReport,
+    pub storm: StormReport,
+    pub loris: Option<LorisReport>,
+    pub slo: SloReport,
+}
+
+impl SuiteReport {
+    /// Wire-JSON rendering (integers only, like everything else the
+    /// codec emits) for `BENCH_serve.json`.
+    pub fn to_json(&self) -> Json {
+        let b = |x: bool| Json::Bool(x);
+        let mut fields = vec![
+            ("name", wire::s("scenarios")),
+            ("queue_cap", wire::u(self.queue_cap as u64)),
+            ("overload_submitted", wire::u(self.overload.submitted)),
+            ("overload_accepted", wire::u(self.overload.accepted)),
+            ("overload_rejected", wire::u(self.overload.rejected)),
+            ("overload_failed", wire::u(self.overload.failed)),
+            ("overload_dropped", wire::u(self.overload.dropped)),
+            ("burst_submitted", wire::u(self.burst.submitted)),
+            ("burst_accepted", wire::u(self.burst.accepted)),
+            ("burst_rejected", wire::u(self.burst.rejected)),
+            ("burst_p99_us", wire::u(self.burst.p99_us.unwrap_or(0))),
+            ("storm_infers_ok", wire::u(self.storm.infers_ok)),
+            ("storm_swaps_ok", wire::u(self.storm.swaps_ok)),
+            ("storm_versions_seen", wire::u(self.storm.versions_seen)),
+            ("slo_p99_us", wire::u(self.slo.slo_p99_us)),
+            ("slo_max_rate_per_s", wire::u(self.slo.max_rate_per_s)),
+            ("slo_p99_at_max_us", wire::u(self.slo.p99_at_max_us)),
+        ];
+        if let Some(l) = &self.loris {
+            fields.push(("loris_wellbehaved_ok", wire::u(l.wellbehaved_ok)));
+            fields.push(("loris_answered", b(l.loris_answered)));
+        }
+        Json::Obj(
+            fields
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        )
+    }
+}
+
+/// Build a deliberately small service (2 workers, shallow queue — the
+/// point is to *hit* the limits) over `models`, run every scenario
+/// against it, and enforce the suite invariants: typed rejection under
+/// overload with zero drops and zero untyped failures, admin storms
+/// that never wedge the data plane, a slow-loris that cannot starve
+/// well-behaved peers, and an SLO search that found a sustained rate.
+/// Violations are `Err` so the CI leg fails loudly.
+pub fn scenario_suite(models: &[String], smoke: bool, seed: u64) -> Result<SuiteReport> {
+    use super::registry::ModelRegistry;
+    use super::server::{ServeConfig, Server};
+    use crate::coordinator::ArchConfig;
+    use crate::model::zoo;
+
+    ensure!(!models.is_empty(), "scenario suite needs at least one model");
+    let queue_cap = 8;
+    let registry = Arc::new(ModelRegistry::new());
+    let mut canonical: Vec<String> = Vec::new();
+    for m in models {
+        let net = zoo::lookup(m)?;
+        registry.load_seeded(&net.name, &net, ArchConfig::default(), Some(seed))?;
+        canonical.push(net.name);
+    }
+    let server = Server::start_multi(
+        ServeConfig {
+            workers: 2,
+            max_batch: 4,
+            queue_cap,
+        },
+        registry,
+    )?;
+    let service = Arc::new(Service::new(server, ArchConfig::default()));
+    let primary = canonical[0].clone();
+    let side = canonical.get(1).cloned().unwrap_or_else(|| primary.clone());
+
+    // 1) overload past queue_cap: typed rejection, not collapse
+    let (submitted, threads) = if smoke { (128, 32) } else { (512, 48) };
+    let overload_report = overload(&service, &primary, submitted, threads, seed)?;
+    ensure!(
+        overload_report.dropped == 0,
+        "overload dropped {} accepted requests",
+        overload_report.dropped
+    );
+    ensure!(
+        overload_report.failed == 0,
+        "overload produced {} untyped failures",
+        overload_report.failed
+    );
+    ensure!(
+        overload_report.rejected > 0,
+        "overload of {} requests over a {queue_cap}-deep queue never hit backpressure",
+        overload_report.submitted
+    );
+    ensure!(
+        overload_report.accepted + overload_report.rejected == overload_report.submitted,
+        "overload accounting leak"
+    );
+
+    // 2) bursty open-loop arrivals (Poisson thinks in averages; bursts
+    // are what actually fill queues)
+    let n = if smoke { 48 } else { 192 };
+    let offsets = arrival_offsets_us(
+        Arrival::Bursty {
+            burst: 12,
+            gap_us: 30_000,
+        },
+        n,
+    );
+    let burst_report = burst_run(&service, &primary, &offsets, 8, seed ^ 1)?;
+    ensure!(burst_report.dropped == 0, "burst dropped requests");
+    ensure!(burst_report.failed == 0, "burst produced untyped failures");
+
+    // 3) admin storm: swap/load under burst
+    let rounds = if smoke { 2 } else { 6 };
+    let storm_report = admin_storm(
+        &service,
+        &primary,
+        &side,
+        rounds,
+        4,
+        if smoke { 4 } else { 12 },
+        seed ^ 2,
+    )?;
+    ensure!(
+        storm_report.infers_failed == 0,
+        "admin storm produced {} untyped infer failures",
+        storm_report.infers_failed
+    );
+    ensure!(
+        storm_report.admin_failed == 0,
+        "admin storm produced {} admin failures",
+        storm_report.admin_failed
+    );
+    ensure!(
+        storm_report.swaps_ok == rounds as u64,
+        "admin storm lost swaps"
+    );
+
+    // 4) slow-loris against a real TCP endpoint on this service
+    let net_server = super::net::NetServer::bind("127.0.0.1:0", Arc::clone(&service))?;
+    let addr = net_server.local_addr().to_string();
+    let input_len = model_input_len(&service, &primary)?;
+    let loris_report = slow_loris(
+        &addr,
+        &primary,
+        input_len,
+        if smoke { 6 } else { 24 },
+        Duration::from_millis(if smoke { 5 } else { 10 }),
+    )?;
+    net_server.shutdown()?;
+    ensure!(
+        loris_report.wellbehaved_ok > 0,
+        "slow-loris starved the well-behaved client"
+    );
+    ensure!(
+        loris_report.loris_answered,
+        "the dribbled frame was never answered"
+    );
+
+    // 5) SLO-conditioned load search
+    let slo_report = slo_search(
+        &service,
+        &primary,
+        200_000, // p99 < 200 ms — generous for tiny models on CI
+        25,
+        if smoke { 24 } else { 96 },
+        seed ^ 3,
+    )?;
+    ensure!(
+        slo_report.max_rate_per_s > 0,
+        "no tested rate met the p99 SLO"
+    );
+
+    let report = SuiteReport {
+        queue_cap,
+        overload: overload_report,
+        burst: burst_report,
+        storm: storm_report,
+        loris: Some(loris_report),
+        slo: slo_report,
+    };
+    match Arc::try_unwrap(service) {
+        Ok(svc) => {
+            svc.shutdown()?;
+        }
+        Err(_) => bail!("scenario threads leaked a service handle"),
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ArchConfig;
+    use crate::model::zoo;
+    use crate::serve::registry::ModelRegistry;
+    use crate::serve::server::{ServeConfig, Server};
+
+    fn start_service(queue_cap: usize) -> Service {
+        let registry = Arc::new(ModelRegistry::new());
+        let net = zoo::tiny_mlp();
+        registry
+            .load_seeded(&net.name, &net, ArchConfig::default(), Some(0xF00D))
+            .unwrap();
+        let server = Server::start_multi(
+            ServeConfig {
+                workers: 2,
+                max_batch: 4,
+                queue_cap,
+            },
+            registry,
+        )
+        .unwrap();
+        Service::new(server, ArchConfig::default())
+    }
+
+    fn input_len(service: &Service) -> usize {
+        model_input_len(service, "tiny-mlp").unwrap()
+    }
+
+    #[test]
+    fn log_roundtrips_through_framed_bytes() {
+        let log = TrafficLog {
+            entries: vec![
+                LogEntry {
+                    at_us: 0,
+                    request: Request::LoadSeeded {
+                        model: "tiny-mlp".into(),
+                        seed: 7,
+                        mapping: None,
+                    },
+                    response: Response::Error {
+                        message: "say \"hi\"\n".into(),
+                    },
+                },
+                LogEntry {
+                    at_us: 1234,
+                    request: Request::Infer {
+                        model: Some("tiny-mlp".into()),
+                        image: vec![i8::MIN, 0, i8::MAX],
+                    },
+                    response: Response::Infer(super::super::api::InferReply {
+                        logits: vec![1, -2, 3],
+                        model: None,
+                        queue_us: 9,
+                        exec_us: 11,
+                    }),
+                },
+            ],
+        };
+        let mut bytes = Vec::new();
+        log.save_to(&mut bytes).unwrap();
+        let back = TrafficLog::load_from(&mut bytes.as_slice()).unwrap();
+        assert_eq!(log, back);
+
+        // a truncated log is an error, not a silently shorter session
+        let cut = bytes.len() - 10;
+        assert!(TrafficLog::load_from(&mut &bytes[..cut]).is_err());
+
+        // a wrong-format header is rejected by name
+        let mut other = Vec::new();
+        wire::write_frame(&mut other, br#"{"format":"nope","version":1,"entries":0}"#)
+            .unwrap();
+        let err = TrafficLog::load_from(&mut other.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("not a traffic log"), "{err:#}");
+    }
+
+    #[test]
+    fn recorder_captures_and_replay_matches_byte_for_byte() {
+        let service = start_service(64);
+        let rec = TrafficRecorder::arm(&service);
+        let image = Rng::new(3).i8_vec(input_len(&service), 31);
+        for _ in 0..3 {
+            let resp = service.dispatch(Request::Infer {
+                model: Some("tiny-mlp".into()),
+                image: image.clone(),
+            });
+            assert!(matches!(resp, Response::Infer(_)));
+        }
+        service.dispatch(Request::ModelInfo {
+            model: "tiny-mlp".into(),
+        });
+        service.dispatch(Request::Stats);
+        service.clear_tap();
+        // after clear_tap nothing more is recorded
+        service.dispatch(Request::Stats);
+        let log = rec.finish();
+        assert_eq!(log.len(), 5);
+        assert!(
+            log.entries.windows(2).all(|w| w[0].at_us <= w[1].at_us),
+            "arrival offsets are monotonic"
+        );
+
+        // replay against a *fresh* service built the same way: every
+        // comparable response byte-identical, stats skipped
+        let fresh = start_service(64);
+        let report = replay(&log, &fresh, ReplaySpeed::MaxRate);
+        assert_eq!(report.total, 5);
+        assert_eq!(report.skipped, 1, "stats replies are not comparable");
+        assert_eq!(
+            report.mismatched, 0,
+            "replay diverged: {:?}",
+            report.first_mismatch
+        );
+        assert_eq!(report.matched, 4);
+
+        service.shutdown().unwrap();
+        fresh.shutdown().unwrap();
+    }
+
+    #[test]
+    fn replay_detects_divergence() {
+        let service = start_service(64);
+        let image = Rng::new(4).i8_vec(input_len(&service), 31);
+        let resp = service.dispatch(Request::Infer {
+            model: Some("tiny-mlp".into()),
+            image: image.clone(),
+        });
+        let mut log = TrafficLog {
+            entries: vec![LogEntry {
+                at_us: 0,
+                request: Request::Infer {
+                    model: Some("tiny-mlp".into()),
+                    image,
+                },
+                response: resp,
+            }],
+        };
+        // corrupt the recorded logits: the replayer must notice
+        if let Response::Infer(r) = &mut log.entries[0].response {
+            r.logits[0] = r.logits[0].wrapping_add(1);
+        }
+        let report = replay(&log, &service, ReplaySpeed::MaxRate);
+        assert_eq!(report.mismatched, 1);
+        assert!(report.first_mismatch.is_some());
+        assert!(!report.is_identical());
+        service.shutdown().unwrap();
+    }
+
+    #[test]
+    fn timing_fields_do_not_affect_comparison() {
+        let a = Response::Infer(super::super::api::InferReply {
+            logits: vec![1, 2],
+            model: None,
+            queue_us: 10,
+            exec_us: 20,
+        });
+        let b = Response::Infer(super::super::api::InferReply {
+            logits: vec![1, 2],
+            model: None,
+            queue_us: 99,
+            exec_us: 1,
+        });
+        assert_eq!(comparable_bytes(&a), comparable_bytes(&b));
+        assert!(comparable_bytes(&Response::Stats(
+            super::super::api::StatsReply {
+                served: 0,
+                rejected: 0,
+                failed: 0,
+                conns_refused: 0,
+                trace_rejected: 0,
+                models: vec![],
+            }
+        ))
+        .is_none());
+    }
+
+    #[test]
+    fn arrival_schedules_are_deterministic_and_shaped() {
+        // uniform: constant gaps
+        let u = arrival_offsets_us(Arrival::Uniform { rate: 1000 }, 5);
+        assert_eq!(u, vec![0, 1000, 2000, 3000, 4000]);
+
+        // poisson: deterministic in the seed, strictly increasing,
+        // mean gap near 1/rate
+        let p1 = arrival_offsets_us(Arrival::Poisson { rate: 1000, seed: 9 }, 500);
+        let p2 = arrival_offsets_us(Arrival::Poisson { rate: 1000, seed: 9 }, 500);
+        assert_eq!(p1, p2);
+        assert_ne!(
+            p1,
+            arrival_offsets_us(Arrival::Poisson { rate: 1000, seed: 10 }, 500)
+        );
+        assert!(p1.windows(2).all(|w| w[0] <= w[1]));
+        let mean_gap = *p1.last().unwrap() as f64 / (p1.len() - 1) as f64;
+        assert!(
+            (500.0..2000.0).contains(&mean_gap),
+            "poisson mean gap {mean_gap} is far from 1000 µs"
+        );
+
+        // bursty: groups of `burst` share an offset, separated by gaps
+        let b = arrival_offsets_us(
+            Arrival::Bursty {
+                burst: 3,
+                gap_us: 500,
+            },
+            7,
+        );
+        assert_eq!(b, vec![0, 0, 0, 500, 500, 500, 1000]);
+    }
+
+    #[test]
+    fn replay_speed_parses_and_scales() {
+        assert_eq!(ReplaySpeed::parse("1x").unwrap(), ReplaySpeed::Wallclock);
+        assert_eq!(ReplaySpeed::parse("max").unwrap(), ReplaySpeed::MaxRate);
+        assert_eq!(
+            ReplaySpeed::parse("4x").unwrap(),
+            ReplaySpeed::Scaled { num: 4, den: 1 }
+        );
+        assert_eq!(
+            ReplaySpeed::parse("1/2x").unwrap(),
+            ReplaySpeed::Scaled { num: 1, den: 2 }
+        );
+        assert!(ReplaySpeed::parse("fast").is_err());
+        assert!(ReplaySpeed::parse("0x").is_err());
+
+        // 2x halves the gaps; max-rate removes them
+        let two_x = ReplaySpeed::Scaled { num: 2, den: 1 };
+        assert_eq!(two_x.scale_gap(1000), Some(500));
+        assert_eq!(ReplaySpeed::Wallclock.scale_gap(1000), Some(1000));
+        assert_eq!(ReplaySpeed::MaxRate.scale_gap(1000), None);
+    }
+
+    #[test]
+    fn overload_rejects_typed_and_drops_nothing() {
+        let service = start_service(4);
+        let r = overload(&service, "tiny-mlp", 96, 24, 0xBEEF).unwrap();
+        assert_eq!(r.dropped, 0, "every submission must get a response");
+        assert_eq!(r.failed, 0, "overload must fail typed, not untyped");
+        assert_eq!(r.accepted + r.rejected, r.submitted);
+        assert!(
+            r.rejected > 0,
+            "24 threads over a 4-deep queue must hit backpressure"
+        );
+        // the rejections are visible in per-model metrics too
+        let stats = match service.dispatch(Request::Stats) {
+            Response::Stats(s) => s,
+            other => panic!("expected Stats, got {other:?}"),
+        };
+        assert_eq!(stats.rejected, r.rejected);
+        service.shutdown().unwrap();
+    }
+}

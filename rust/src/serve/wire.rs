@@ -502,15 +502,15 @@ pub fn i8_vec_field(v: &Json, key: &str) -> Result<Vec<i8>> {
 // api::Request / api::Response <-> JSON
 // ---------------------------------------------------------------------------
 
-fn obj(pairs: Vec<(&str, Json)>) -> Json {
+pub(crate) fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
-fn s(x: &str) -> Json {
+pub(crate) fn s(x: &str) -> Json {
     Json::Str(x.to_string())
 }
 
-fn u(x: u64) -> Json {
+pub(crate) fn u(x: u64) -> Json {
     Json::Int(x as i128)
 }
 
@@ -677,37 +677,45 @@ pub fn request_to_json(req: &api::Request) -> Json {
 pub fn decode_request(frame: &[u8]) -> Result<api::Request> {
     let text = std::str::from_utf8(frame).context("request frame is not UTF-8")?;
     let v = decode(text)?;
-    let t = str_field(&v, "type")?;
+    request_from_json(&v)
+}
+
+/// Decode a request from an already-parsed [`Json`] value. Split out
+/// of [`decode_request`] so formats that *embed* requests in a larger
+/// document (the traffic log, `serve::traffic`) reuse the exact same
+/// decoder the wire speaks.
+pub fn request_from_json(v: &Json) -> Result<api::Request> {
+    let t = str_field(v, "type")?;
     match t.as_str() {
         "infer" => Ok(api::Request::Infer {
-            model: opt_str_field(&v, "model")?,
-            image: i8_vec_field(&v, "image")?,
+            model: opt_str_field(v, "model")?,
+            image: i8_vec_field(v, "image")?,
         }),
         "load" => Ok(api::Request::Load {
-            model: str_field(&v, "model")?,
-            mapping: opt_mapping_field(&v)?,
+            model: str_field(v, "model")?,
+            mapping: opt_mapping_field(v)?,
         }),
         "load_seeded" => Ok(api::Request::LoadSeeded {
-            model: str_field(&v, "model")?,
-            seed: u64_field(&v, "seed")?,
-            mapping: opt_mapping_field(&v)?,
+            model: str_field(v, "model")?,
+            seed: u64_field(v, "seed")?,
+            mapping: opt_mapping_field(v)?,
         }),
         "swap" => Ok(api::Request::Swap {
-            model: str_field(&v, "model")?,
-            seed: opt_u64_field(&v, "seed")?,
+            model: str_field(v, "model")?,
+            seed: opt_u64_field(v, "seed")?,
         }),
         "unload" => Ok(api::Request::Unload {
-            model: str_field(&v, "model")?,
+            model: str_field(v, "model")?,
         }),
         "list_models" => Ok(api::Request::ListModels),
         "model_info" => Ok(api::Request::ModelInfo {
-            model: str_field(&v, "model")?,
+            model: str_field(v, "model")?,
         }),
         "stats" => Ok(api::Request::Stats),
         "trace" => Ok(api::Request::Trace {
-            model: str_field(&v, "model")?,
-            image_seed: u64_field(&v, "image_seed")?,
-            window: u64_field(&v, "window")?,
+            model: str_field(v, "model")?,
+            image_seed: u64_field(v, "image_seed")?,
+            window: u64_field(v, "window")?,
         }),
         other => bail!("unknown request type {other:?}"),
     }
@@ -931,6 +939,8 @@ pub fn response_to_json(resp: &api::Response) -> Json {
             ("served", u(st.served)),
             ("rejected", u(st.rejected)),
             ("failed", u(st.failed)),
+            ("conns_refused", u(st.conns_refused)),
+            ("trace_rejected", u(st.trace_rejected)),
             (
                 "models",
                 Json::Arr(st.models.iter().map(snapshot_to_json).collect()),
@@ -950,45 +960,57 @@ pub fn response_to_json(resp: &api::Response) -> Json {
 pub fn decode_response(frame: &[u8]) -> Result<api::Response> {
     let text = std::str::from_utf8(frame).context("response frame is not UTF-8")?;
     let v = decode(text)?;
-    let t = str_field(&v, "type")?;
+    response_from_json(&v)
+}
+
+/// Decode a response from an already-parsed [`Json`] value (the
+/// counterpart of [`request_from_json`] for embedding responses in
+/// larger documents — see the traffic log in `serve::traffic`).
+pub fn response_from_json(v: &Json) -> Result<api::Response> {
+    let t = str_field(v, "type")?;
     match t.as_str() {
         "infer" => Ok(api::Response::Infer(api::InferReply {
-            logits: i8_vec_field(&v, "logits")?,
+            logits: i8_vec_field(v, "logits")?,
             model: match v.get("model") {
                 None | Some(Json::Null) => None,
                 Some(m) => Some(stamp_from_json(m)?),
             },
-            queue_us: u64_field(&v, "queue_us")?,
-            exec_us: u64_field(&v, "exec_us")?,
+            queue_us: u64_field(v, "queue_us")?,
+            exec_us: u64_field(v, "exec_us")?,
         })),
-        "loaded" => Ok(api::Response::Loaded(stamp_from_json(field(&v, "model")?)?)),
-        "swapped" => Ok(api::Response::Swapped(stamp_from_json(field(&v, "model")?)?)),
+        "loaded" => Ok(api::Response::Loaded(stamp_from_json(field(v, "model")?)?)),
+        "swapped" => Ok(api::Response::Swapped(stamp_from_json(field(v, "model")?)?)),
         "unloaded" => Ok(api::Response::Unloaded(stamp_from_json(field(
-            &v, "model",
+            v, "model",
         )?)?)),
         "models" => {
-            let arr = field(&v, "models")?
+            let arr = field(v, "models")?
                 .as_arr()
                 .ok_or_else(|| anyhow::anyhow!("field \"models\" must be an array"))?;
             Ok(api::Response::Models(
                 arr.iter().map(desc_from_json).collect::<Result<_>>()?,
             ))
         }
-        "info" => Ok(api::Response::Info(desc_from_json(field(&v, "model")?)?)),
+        "info" => Ok(api::Response::Info(desc_from_json(field(v, "model")?)?)),
         "stats" => {
-            let arr = field(&v, "models")?
+            let arr = field(v, "models")?
                 .as_arr()
                 .ok_or_else(|| anyhow::anyhow!("field \"models\" must be an array"))?;
             Ok(api::Response::Stats(api::StatsReply {
-                served: u64_field(&v, "served")?,
-                rejected: u64_field(&v, "rejected")?,
-                failed: u64_field(&v, "failed")?,
+                served: u64_field(v, "served")?,
+                rejected: u64_field(v, "rejected")?,
+                failed: u64_field(v, "failed")?,
+                // optional (default 0) so frames recorded before the
+                // shedding counters existed still decode — traffic
+                // logs outlive protocol revisions
+                conns_refused: opt_u64_field(v, "conns_refused")?.unwrap_or(0),
+                trace_rejected: opt_u64_field(v, "trace_rejected")?.unwrap_or(0),
                 models: arr.iter().map(snapshot_from_json).collect::<Result<_>>()?,
             }))
         }
-        "trace" => Ok(api::Response::Trace(trace_reply_from_json(&v)?)),
+        "trace" => Ok(api::Response::Trace(trace_reply_from_json(v)?)),
         "error" => Ok(api::Response::Error {
-            message: str_field(&v, "message")?,
+            message: str_field(v, "message")?,
         }),
         other => bail!("unknown response type {other:?}"),
     }

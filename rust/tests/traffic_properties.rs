@@ -1,0 +1,294 @@
+//! Integration properties of the traffic record/replay plane
+//! (`serve::traffic`): a session recorded off a live service replays
+//! byte-identically into a fresh service (in-process and over TCP),
+//! the on-disk log format round-trips through a real file, and the
+//! trace-budget guard sheds concurrent `Trace` storms with typed
+//! errors that are visible in `Stats`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use domino::coordinator::ArchConfig;
+use domino::serve::api::{Request, Response};
+use domino::serve::client::Client;
+use domino::serve::net::{NetConfig, NetServer};
+use domino::serve::traffic::{
+    replay, replay_with, ReplaySpeed, TrafficLog, TrafficRecorder,
+};
+use domino::serve::{ModelRegistry, ServeConfig, Server, Service};
+use domino::testutil::Rng;
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        workers: 2,
+        max_batch: 4,
+        queue_cap: 256,
+    }
+}
+
+/// A service over an *empty* registry: models enter through
+/// `dispatch(LoadSeeded …)`, so a recorded session is self-contained
+/// and replaying it reconstructs the same versions from the same
+/// seeds.
+fn empty_service() -> Service {
+    let registry = Arc::new(ModelRegistry::new());
+    let server = Server::start_multi(serve_cfg(), registry).unwrap();
+    Service::new(server, ArchConfig::default())
+}
+
+fn input_len_of(service: &Service, model: &str) -> usize {
+    let reg = service.server().registry().unwrap();
+    reg.get(model).unwrap().input_len()
+}
+
+/// Drive a self-contained session — loads, mixed-model infers, admin
+/// lookups, a stats poll — against `service` while a recorder is
+/// armed, and return the captured log.
+fn record_session(service: &Service) -> TrafficLog {
+    let recorder = TrafficRecorder::arm(service);
+    for (model, seed) in [("tiny-mlp", 0x11u64), ("tiny-cnn", 0x22u64)] {
+        let resp = service.dispatch(Request::LoadSeeded {
+            model: model.to_string(),
+            seed,
+            mapping: None,
+        });
+        assert!(matches!(resp, Response::Loaded(_)), "{resp:?}");
+    }
+    let mut rng = Rng::new(7);
+    for i in 0..6 {
+        let model = if i % 2 == 0 { "tiny-mlp" } else { "tiny-cnn" };
+        let image = rng.i8_vec(input_len_of(service, model), 31);
+        let resp = service.dispatch(Request::Infer {
+            model: Some(model.to_string()),
+            image,
+        });
+        assert!(matches!(resp, Response::Infer(_)), "{resp:?}");
+    }
+    service.dispatch(Request::ModelInfo {
+        model: "tiny-cnn".to_string(),
+    });
+    service.dispatch(Request::ListModels);
+    service.dispatch(Request::Stats);
+    service.clear_tap();
+    recorder.finish()
+}
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "domino_traffic_{tag}_{}.log",
+        std::process::id()
+    ))
+}
+
+#[test]
+fn recorded_session_replays_byte_identically_through_a_file() {
+    let service = empty_service();
+    let log = record_session(&service);
+    service.shutdown().unwrap();
+    assert_eq!(log.len(), 2 + 6 + 3, "loads + infers + admin lookups");
+
+    // the on-disk format round-trips through a real file
+    let path = temp_path("roundtrip");
+    log.save(&path).unwrap();
+    let loaded = TrafficLog::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(log, loaded);
+
+    // replay into a FRESH empty service: the log's own load requests
+    // rebuild the models (weights are a pure function of net + seed),
+    // so every comparable response is byte-identical; the lone Stats
+    // reply is point-in-time and skipped
+    let fresh = empty_service();
+    let report = replay(&loaded, &fresh, ReplaySpeed::MaxRate);
+    fresh.shutdown().unwrap();
+    assert_eq!(report.total, log.len() as u64);
+    assert_eq!(report.skipped, 1, "exactly the Stats poll is skipped");
+    assert_eq!(
+        report.mismatched, 0,
+        "replay diverged: {:?}",
+        report.first_mismatch
+    );
+    assert!(report.is_identical());
+
+    // determinism: a second fresh service replays identically too
+    let again = empty_service();
+    let report2 = replay(&loaded, &again, ReplaySpeed::MaxRate);
+    again.shutdown().unwrap();
+    assert_eq!(report2.mismatched, 0, "{:?}", report2.first_mismatch);
+    assert_eq!(report2.matched, report.matched);
+}
+
+#[test]
+fn recorded_session_replays_byte_identically_over_tcp() {
+    // record in-process …
+    let service = empty_service();
+    let log = record_session(&service);
+    service.shutdown().unwrap();
+
+    // … and replay against a fresh TCP endpoint: the wire encode →
+    // decode → dispatch → encode cycle must not perturb a single byte
+    let remote = Arc::new(empty_service());
+    let net = NetServer::bind_with(
+        "127.0.0.1:0",
+        Arc::clone(&remote),
+        NetConfig {
+            poll: Duration::from_millis(20),
+            ..NetConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = net.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    client
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .unwrap();
+    let report = replay_with(&log, ReplaySpeed::MaxRate, |req| {
+        client.call(&req).unwrap_or_else(|e| Response::Error {
+            message: format!("transport: {e:#}"),
+        })
+    });
+    drop(client);
+    net.shutdown().unwrap();
+    match Arc::try_unwrap(remote) {
+        Ok(svc) => {
+            svc.shutdown().unwrap();
+        }
+        Err(_) => panic!("endpoint leaked a service handle"),
+    }
+    assert_eq!(report.total, log.len() as u64);
+    assert_eq!(
+        report.mismatched, 0,
+        "remote replay diverged: {:?}",
+        report.first_mismatch
+    );
+    assert_eq!(report.skipped, 1);
+}
+
+#[test]
+fn wallclock_replay_honors_recorded_gaps() {
+    // a synthetic 2-entry log with a 120 ms gap: wall-clock replay
+    // must take at least the gap, max-rate must be much faster
+    let service = empty_service();
+    let resp = service.dispatch(Request::LoadSeeded {
+        model: "tiny-mlp".to_string(),
+        seed: 0x33,
+        mapping: None,
+    });
+    assert!(matches!(resp, Response::Loaded(_)));
+    let recorder = TrafficRecorder::arm(&service);
+    service.dispatch(Request::ListModels);
+    std::thread::sleep(Duration::from_millis(120));
+    service.dispatch(Request::ListModels);
+    service.clear_tap();
+    let log = recorder.finish();
+    assert_eq!(log.len(), 2);
+    let gap = log.entries[1].at_us - log.entries[0].at_us;
+    assert!(gap >= 120_000, "recorded gap {gap} us");
+
+    let wallclock = replay(&log, &service, ReplaySpeed::Wallclock);
+    assert!(
+        wallclock.elapsed >= Duration::from_millis(110),
+        "wall-clock replay finished in {:?}, ignoring the recorded gap",
+        wallclock.elapsed
+    );
+    let fast = replay(&log, &service, ReplaySpeed::MaxRate);
+    assert!(
+        fast.elapsed < wallclock.elapsed,
+        "max-rate ({:?}) should beat wall-clock ({:?})",
+        fast.elapsed,
+        wallclock.elapsed
+    );
+    assert_eq!(wallclock.mismatched + fast.mismatched, 0);
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn trace_budget_zero_sheds_with_typed_error_and_counter() {
+    let service = empty_service().with_trace_budget(0);
+    let resp = service.dispatch(Request::LoadSeeded {
+        model: "tiny-mlp".to_string(),
+        seed: 0x44,
+        mapping: None,
+    });
+    assert!(matches!(resp, Response::Loaded(_)));
+
+    // budget 0: every trace is shed, deterministically, with a typed
+    // error — never a hang, never an untyped failure
+    for _ in 0..3 {
+        match service.dispatch(Request::Trace {
+            model: "tiny-mlp".to_string(),
+            image_seed: 1,
+            window: 8,
+        }) {
+            Response::Error { message } => {
+                assert!(
+                    message.contains("trace budget exhausted"),
+                    "unexpected shed message: {message}"
+                );
+            }
+            other => panic!("budget 0 must shed traces, got {other:?}"),
+        }
+    }
+    match service.dispatch(Request::Stats) {
+        Response::Stats(s) => assert_eq!(s.trace_rejected, 3),
+        other => panic!("expected Stats, got {other:?}"),
+    }
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn concurrent_trace_storm_stays_typed_and_accounted() {
+    let service = empty_service();
+    let resp = service.dispatch(Request::LoadSeeded {
+        model: "tiny-mlp".to_string(),
+        seed: 0x55,
+        mapping: None,
+    });
+    assert!(matches!(resp, Response::Loaded(_)));
+
+    // 6 concurrent traces against the default budget of 2: every
+    // response is either a real recording or the typed budget error,
+    // the books balance, and the data plane stays serviceable
+    let threads = 6;
+    let (ok, shed) = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let service = &service;
+            handles.push(scope.spawn(move || {
+                match service.dispatch(Request::Trace {
+                    model: "tiny-mlp".to_string(),
+                    image_seed: t as u64,
+                    window: 4,
+                }) {
+                    Response::Trace(_) => (1u64, 0u64),
+                    Response::Error { message }
+                        if message.contains("trace budget exhausted") =>
+                    {
+                        (0, 1)
+                    }
+                    other => panic!("untyped trace response: {other:?}"),
+                }
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .fold((0, 0), |(a, b), (x, y)| (a + x, b + y))
+    });
+    assert_eq!(ok + shed, threads as u64, "every trace gets a response");
+    assert!(ok >= 1, "at least one trace must win a budget slot");
+    match service.dispatch(Request::Stats) {
+        Response::Stats(s) => assert_eq!(s.trace_rejected, shed),
+        other => panic!("expected Stats, got {other:?}"),
+    }
+
+    // the observability storm must not have wedged the data plane
+    let image = Rng::new(9).i8_vec(input_len_of(&service, "tiny-mlp"), 31);
+    let resp = service.dispatch(Request::Infer {
+        model: Some("tiny-mlp".to_string()),
+        image,
+    });
+    assert!(matches!(resp, Response::Infer(_)), "{resp:?}");
+    service.shutdown().unwrap();
+}

@@ -302,6 +302,8 @@ fn every_response_variant_roundtrips() {
         served: 0,
         rejected: 0,
         failed: 0,
+        conns_refused: 0,
+        trace_rejected: 0,
         models: vec![],
     }));
 
@@ -326,6 +328,8 @@ fn every_response_variant_roundtrips() {
                 served: tricky_u64(rng),
                 rejected: tricky_u64(rng),
                 failed: tricky_u64(rng),
+                conns_refused: tricky_u64(rng),
+                trace_rejected: tricky_u64(rng),
                 models: (0..rng.range(0, 4)).map(|_| tricky_snapshot(rng)).collect(),
             }),
             7 => Response::Trace(TraceReply {
