@@ -20,7 +20,13 @@
 //!    `serve::client::Client` connections, a mid-traffic hot-swap and
 //!    the final unload issued remotely through the typed admin plane —
 //!    every remote response cross-checked against the refcompute of
-//!    its stamped model version, plus the per-model `Stats` split.
+//!    its stamped model version, plus the per-model `Stats` split;
+//! 5. the **cluster** plane: two spawned `domino serve` backend
+//!    processes behind a `serve::cluster::Router`, mixed-model
+//!    traffic with one backend SIGKILLed mid-run (zero client-visible
+//!    drops, bit-exact failover), and the protocol-v2 pipelining gate
+//!    (window-8 submit/await on one connection must beat the
+//!    one-in-flight client by ≥ 2x at equal request count).
 //!
 //!     cargo bench --bench serve_sim_throughput            # full run
 //!     cargo bench --bench serve_sim_throughput -- --smoke # CI-sized
@@ -29,6 +35,9 @@
 //!         --models tiny-cnn,tiny-mlp
 //!     # CI remote-protocol leg (TCP path only):
 //!     cargo bench --bench serve_sim_throughput -- --smoke --remote-only
+//!     # CI cluster smoke leg (spawned backends + router + kill):
+//!     cargo bench --bench serve_sim_throughput -- --smoke --cluster-only \
+//!         --models tiny-cnn,tiny-mlp
 //!
 //! `--models a,b,c` picks the loaded set (default
 //! `tiny-cnn,tiny-mlp,tiny-resnet`). `--json PATH` additionally writes
@@ -78,19 +87,22 @@ fn main() -> anyhow::Result<()> {
     let smoke = argv.iter().any(|a| a == "--smoke");
     let multi_only = argv.iter().any(|a| a == "--multi-only");
     let remote_only = argv.iter().any(|a| a == "--remote-only");
+    let cluster_only = argv.iter().any(|a| a == "--cluster-only");
     let json_path = arg_value(&argv, "--json");
     let mut sections: Vec<String> = Vec::new();
+    let mut gate_failures: Vec<String> = Vec::new();
     let model_list = arg_value(&argv, "--models")
         .unwrap_or_else(|| "tiny-cnn,tiny-mlp,tiny-resnet".to_string());
     println!(
-        "serve_sim_throughput ({}{}{})\n",
+        "serve_sim_throughput ({}{}{}{})\n",
         if smoke { "smoke" } else { "full" },
         if multi_only { ", multi-only" } else { "" },
-        if remote_only { ", remote-only" } else { "" }
+        if remote_only { ", remote-only" } else { "" },
+        if cluster_only { ", cluster-only" } else { "" }
     );
     let mut rng = Rng::new(0xBEEF);
 
-    if !multi_only && !remote_only {
+    if !multi_only && !remote_only && !cluster_only {
         let net = zoo::tiny_cnn();
         let (program, weights) = sim_program(&net, ArchConfig::default())?;
 
@@ -273,7 +285,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- 3. multi-model closed loop with a mid-traffic hot-swap ----
-    if !remote_only {
+    if !remote_only && !cluster_only {
     let registry = Arc::new(ModelRegistry::new());
     let mut models: Vec<Arc<ModelVersion>> = Vec::new();
     for raw in &names {
@@ -456,7 +468,7 @@ fn main() -> anyhow::Result<()> {
     // in-process path uses, so every guarantee above must hold
     // byte-for-byte across the wire: stamps, refcompute exactness,
     // drain on swap, per-model stats.
-    if !multi_only {
+    if !multi_only && !cluster_only {
         let registry = Arc::new(ModelRegistry::new());
         let mut models: Vec<Arc<ModelVersion>> = Vec::new();
         for raw in &names {
@@ -638,14 +650,303 @@ fn main() -> anyhow::Result<()> {
         println!("per-worker served: {counts:?}");
     }
 
-    // ---- 5. hostile-reality scenarios (see serve::traffic) ----------
+    // ---- 5. cluster: router over spawned backend processes ----------
+    // A multi-process closed loop: two real `domino serve` child
+    // processes behind an in-process Router, mixed-model traffic, one
+    // backend SIGKILLed mid-run — zero client-visible drops allowed,
+    // every answer bit-exact vs refcompute. Then the protocol-v2
+    // pipelining gate on the surviving cluster's TCP endpoint: one
+    // connection, window-8 submit/await vs one-in-flight calls at the
+    // same request count, required >= 2x.
+    if cluster_only || (!multi_only && !remote_only) {
+        use domino::serve::api::{Dispatcher, Request, Response};
+        use domino::serve::{ClusterConfig, Router};
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        struct Children(Vec<std::process::Child>);
+        impl Drop for Children {
+            fn drop(&mut self) {
+                for c in &mut self.0 {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                }
+            }
+        }
+
+        fn spawn_backend(workers: usize) -> anyhow::Result<(std::process::Child, String)> {
+            use std::io::BufRead;
+            let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_domino"))
+                .args([
+                    "serve",
+                    "--backend",
+                    "sim",
+                    "--models",
+                    "",
+                    "--workers",
+                    &workers.to_string(),
+                    "--listen",
+                    "127.0.0.1:0",
+                ])
+                .stdout(std::process::Stdio::piped())
+                .stderr(std::process::Stdio::inherit())
+                .spawn()?;
+            let stdout = child.stdout.take().expect("stdout piped");
+            let mut reader = std::io::BufReader::new(stdout);
+            let mut line = String::new();
+            let addr = loop {
+                line.clear();
+                anyhow::ensure!(
+                    reader.read_line(&mut line)? > 0,
+                    "backend exited before printing its listen address"
+                );
+                if let Some(rest) = line.strip_prefix("listening on ") {
+                    break rest
+                        .split_whitespace()
+                        .next()
+                        .expect("address token")
+                        .to_string();
+                }
+            };
+            // drain (and keep open) the child's stdout for its lifetime
+            std::thread::spawn(move || {
+                let mut sink = String::new();
+                while reader.read_line(&mut sink).map(|n| n > 0).unwrap_or(false) {
+                    sink.clear();
+                }
+            });
+            Ok((child, addr))
+        }
+
+        // 4 workers even in smoke: the pipelining gate needs real
+        // concurrency behind the window to show its speedup
+        let backend_workers = 4;
+        let (c1, a1) = spawn_backend(backend_workers)?;
+        let (c2, a2) = spawn_backend(backend_workers)?;
+        let mut children = Children(vec![c1, c2]);
+        println!("cluster: spawned backends {a1} + {a2} ({backend_workers} workers each)");
+
+        let router = Arc::new(Router::new(
+            vec![a1, a2],
+            ClusterConfig {
+                replication: 2,
+                ..ClusterConfig::default()
+            },
+        )?);
+
+        // two models, seeded loads through the router; local reference
+        // versions with identical (network, seed) are the oracle
+        let cluster_names: Vec<String> = names.iter().take(2).cloned().collect();
+        let local_reg = ModelRegistry::new();
+        let mut refs: Vec<Arc<ModelVersion>> = Vec::new();
+        for (i, m) in cluster_names.iter().enumerate() {
+            let seed = 0xC1A0 + i as u64;
+            match router.dispatch(Request::LoadSeeded {
+                model: m.clone(),
+                seed,
+                mapping: None,
+            }) {
+                Response::Loaded(_) => {}
+                other => anyhow::bail!("cluster load {m}: {other:?}"),
+            }
+            let net = zoo::lookup(m)?;
+            refs.push(local_reg.load_seeded(
+                &net.name,
+                &net,
+                ArchConfig::default(),
+                Some(seed),
+            )?);
+        }
+        let pools: Arc<Vec<Vec<Vec<i8>>>> = Arc::new(
+            refs.iter()
+                .map(|mv| {
+                    (0..8)
+                        .map(|_| rng.i8_vec(mv.input_len(), 31))
+                        .collect::<Vec<_>>()
+                })
+                .collect(),
+        );
+        let expected: Arc<Vec<Vec<Vec<i8>>>> = Arc::new(
+            refs.iter()
+                .zip(pools.iter())
+                .map(|(mv, pool)| expected_for(mv, pool))
+                .collect::<anyhow::Result<_>>()?,
+        );
+
+        let clients = if smoke { 3 } else { 4 };
+        let per_client = if smoke { 10 } else { 40 };
+        let total = clients * per_client;
+        let done = Arc::new(AtomicUsize::new(0));
+        println!(
+            "cluster closed loop: {} clients x {} mixed-model requests, \
+             one backend killed at ~25%",
+            clients, per_client
+        );
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let router = Arc::clone(&router);
+            let pools = Arc::clone(&pools);
+            let expected = Arc::clone(&expected);
+            let done = Arc::clone(&done);
+            let model_names = cluster_names.clone();
+            handles.push(std::thread::spawn(move || -> anyhow::Result<LatencyStats> {
+                let mut lat = LatencyStats::default();
+                for i in 0..per_client {
+                    let mi = (c + i) % model_names.len();
+                    let idx = i % pools[mi].len();
+                    let t = Instant::now();
+                    let resp = router.dispatch(Request::Infer {
+                        model: Some(model_names[mi].clone()),
+                        image: pools[mi][idx].clone(),
+                    });
+                    lat.record(t.elapsed());
+                    match resp {
+                        Response::Infer(r) => {
+                            anyhow::ensure!(
+                                r.logits == expected[mi][idx],
+                                "cluster response for {} image {idx} diverged",
+                                model_names[mi]
+                            );
+                            let stamp =
+                                r.model.ok_or_else(|| anyhow::anyhow!("missing stamp"))?;
+                            anyhow::ensure!(
+                                &*stamp.name == model_names[mi].as_str(),
+                                "request for {} answered by {}",
+                                model_names[mi],
+                                stamp.name
+                            );
+                        }
+                        other => anyhow::bail!("request dropped or failed: {other:?}"),
+                    }
+                    done.fetch_add(1, Ordering::SeqCst);
+                }
+                Ok(lat)
+            }));
+        }
+
+        // SIGKILL one backend mid-run: in-flight calls to it fail over
+        // to the replica; nothing is allowed to surface to a client
+        let deadline = Instant::now() + std::time::Duration::from_secs(120);
+        while done.load(Ordering::SeqCst) < total / 4 && Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+        let killed_at = done.load(Ordering::SeqCst);
+        children.0[0].kill()?;
+        children.0[0].wait()?;
+        println!("killed backend #0 at ~{killed_at} served");
+
+        let mut lat = LatencyStats::default();
+        for h in handles {
+            lat.merge(&h.join().expect("cluster client thread")?);
+        }
+        let wall = t0.elapsed();
+        // a failed routed call marks the backend dead; if traffic
+        // finished before the kill landed, one probe pass settles it
+        router.health_pass();
+        let st = router.status();
+        anyhow::ensure!(
+            st.backends.iter().any(|b| !b.alive),
+            "the killed backend must be marked dead"
+        );
+        println!(
+            "cluster served {total}/{total} requests in {:.2} s -> {:.1} img/s \
+             (0 dropped, all bit-exact across the kill: PASS)",
+            wall.as_secs_f64(),
+            domino::sim::stats::safe_rate(total as f64, wall.as_secs_f64())
+        );
+        println!("latency: {}", lat.summary());
+
+        // ---- protocol-v2 pipelining gate on the router endpoint ----
+        let net = NetServer::bind("127.0.0.1:0", Arc::clone(&router))?;
+        let addr = net.local_addr().to_string();
+        let gate_n = if smoke { 24 } else { 96 };
+        let gate_model = cluster_names[0].as_str();
+        let gate_pool = &pools[0];
+        let gate_expected = &expected[0];
+
+        // one-in-flight: request, wait, repeat
+        let mut serial = Client::connect(&addr)?;
+        serial.set_read_timeout(Some(std::time::Duration::from_secs(120)))?;
+        let t0 = Instant::now();
+        for i in 0..gate_n {
+            let idx = i % gate_pool.len();
+            let r = serial.infer(Some(gate_model), gate_pool[idx].clone())?;
+            anyhow::ensure!(r.logits == gate_expected[idx], "serial response diverged");
+        }
+        let serial_secs = t0.elapsed().as_secs_f64();
+        let serial_rate = domino::sim::stats::safe_rate(gate_n as f64, serial_secs);
+
+        // pipelined: same connection count (one), window of 8 in flight
+        let mut piped = Client::connect(&addr)?;
+        piped.set_read_timeout(Some(std::time::Duration::from_secs(120)))?;
+        let t0 = Instant::now();
+        let mut inflight: std::collections::VecDeque<(u64, usize)> =
+            std::collections::VecDeque::new();
+        for i in 0..gate_n {
+            let idx = i % gate_pool.len();
+            if inflight.len() >= 8 {
+                let (rid, idx) = inflight.pop_front().expect("window non-empty");
+                let r = piped.await_infer(rid)?;
+                anyhow::ensure!(r.logits == gate_expected[idx], "pipelined response diverged");
+            }
+            let rid = piped.infer_submit(Some(gate_model), gate_pool[idx].clone())?;
+            inflight.push_back((rid, idx));
+        }
+        while let Some((rid, idx)) = inflight.pop_front() {
+            let r = piped.await_infer(rid)?;
+            anyhow::ensure!(r.logits == gate_expected[idx], "pipelined response diverged");
+        }
+        let piped_secs = t0.elapsed().as_secs_f64();
+        let piped_rate = domino::sim::stats::safe_rate(gate_n as f64, piped_secs);
+        let speedup = if serial_secs > 0.0 { serial_secs / piped_secs.max(1e-9) } else { 0.0 };
+        println!(
+            "pipelining gate on one connection: serial {serial_rate:.1} img/s, \
+             window-8 {piped_rate:.1} img/s -> {speedup:.2}x {}",
+            if speedup >= 2.0 { "(>= 2x: PASS)" } else { "(< 2x: FAIL)" }
+        );
+
+        {
+            let mut o = JsonObj::new();
+            o.str_field("section", "cluster")
+                .u64_field("requests", total as u64)
+                .f64_field(
+                    "images_per_s",
+                    domino::sim::stats::safe_rate(total as f64, wall.as_secs_f64()),
+                )
+                .u64_field("p50_us", lat.percentile(50.0).unwrap_or(0))
+                .u64_field("p95_us", lat.percentile(95.0).unwrap_or(0))
+                .u64_field("p99_us", lat.percentile(99.0).unwrap_or(0))
+                .u64_field("backend_killed_at", killed_at as u64)
+                .u64_field("dropped", 0)
+                .f64_field("serial_images_per_s", serial_rate)
+                .f64_field("pipelined_images_per_s", piped_rate)
+                .f64_field("pipelined_speedup", speedup);
+            sections.push(o.finish());
+        }
+
+        drop(serial);
+        drop(piped);
+        net.shutdown()?;
+        drop(router);
+        drop(children);
+        if speedup < 2.0 {
+            // fail AFTER the json report is written, so the artifact
+            // still records the regressed number
+            gate_failures.push(format!(
+                "pipelined throughput {speedup:.2}x is below the 2x acceptance gate"
+            ));
+        }
+        println!();
+    }
+
+    // ---- 6. hostile-reality scenarios (see serve::traffic) ----------
     // Overload past queue_cap (typed rejections only, zero drops), a
     // bursty open-loop run, an admin+data storm, a slow-loris TCP
     // client, and the SLO-conditioned load search. The suite enforces
     // its own invariants (any violation is an Err), and its report
     // lands in BENCH_serve.json as the `scenarios` section so reject
     // counts and the sustained-rate-at-SLO trend run over run.
-    let scenarios = if !multi_only && !remote_only {
+    let scenarios = if !multi_only && !remote_only && !cluster_only {
         let report = domino::serve::traffic::scenario_suite(&names, smoke, 0xBEEF)?;
         println!(
             "\nscenarios: overload {}/{} rejected typed (0 dropped, 0 failed); \
@@ -676,5 +977,10 @@ fn main() -> anyhow::Result<()> {
         }
         write_json(&path, &doc.finish())?;
     }
+    anyhow::ensure!(
+        gate_failures.is_empty(),
+        "acceptance gate(s) failed: {}",
+        gate_failures.join("; ")
+    );
     Ok(())
 }

@@ -141,6 +141,7 @@ COMMANDS:
                          recorder tapped on dispatch, writes the
                          versioned framed log to FILE
   traffic replay FILE [--speed 1x|max|Nx|N/Mx] [--addr HOST:PORT]
+          [--admission live|recorded]
                          re-issue a recorded log at the given speed
                          (default max): against a fresh local service
                          built from the log's own load requests, or
@@ -149,7 +150,10 @@ COMMANDS:
                          against the recording (timing fields excluded,
                          point-in-time stats skipped) and the first
                          divergence is printed. Exits non-zero on any
-                         mismatch
+                         mismatch. --admission recorded re-applies the
+                         recorded accept/reject decisions, so logs
+                         containing backpressure rejections replay
+                         byte-identically at any speed
   traffic scenario [--smoke] [--models a,b,c] [--seed S] [--out FILE]
                          hostile-reality scenario suite on a deliberately
                          small service (2 workers, queue_cap 8): overload
@@ -161,6 +165,23 @@ COMMANDS:
                          p99 < 200ms). Violated invariants exit non-zero;
                          --out writes the wire-JSON report (the serve
                          bench embeds the same shape into BENCH_serve.json)
+  cluster serve (--spawn N | --backends a,b,c) --listen ADDR
+          [--models a,b,c] [--replication R] [--seed S]
+          [--workers N] [--serve-secs N]
+                         run a cluster router: shard + replicate models
+                         over N spawned backend processes (or attach to
+                         already-running --backends), health-check them,
+                         fail over on backend death, and serve the same
+                         typed API on --listen. Models are assigned by
+                         rendezvous hashing with --replication copies
+                         (default 2) and least-loaded dispatch among
+                         replicas. NOTE: the wire protocol is plaintext
+                         and unauthenticated — bind routers and backends
+                         to trusted networks only
+  cluster status --backends a,b,c [--models a,b,c]
+                         probe each backend once and print liveness,
+                         loaded models, and the model->owner assignments
+                         the router would use
   models [list|info <m>] [--json]
                          list zoo models (params/MACs/shapes), or show
                          one model in detail incl. its mapping stats at

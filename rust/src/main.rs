@@ -36,6 +36,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "serve" => serve(args),
         "client" => client_cmd(args),
         "traffic" => traffic_cmd(args),
+        "cluster" => cluster_cmd(args),
         "models" => models_cmd(args),
         "" | "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -675,7 +676,12 @@ fn serve_sim(args: &Args) -> Result<()> {
             .collect(),
         None => vec![args.get("model").unwrap_or("tiny-cnn").to_string()],
     };
-    anyhow::ensure!(!names.is_empty(), "--models needs at least one model name");
+    // An empty model set is only meaningful with --listen, where the
+    // admin plane (a client, or a cluster router) loads models later.
+    anyhow::ensure!(
+        !names.is_empty() || args.get("listen").is_some(),
+        "--models needs at least one model name (an empty list needs --listen)"
+    );
     let arch = arch_from(args);
     let cfg = ServeConfig {
         workers: args.get_usize("workers", 2),
@@ -1257,8 +1263,8 @@ fn traffic_record(args: &Args) -> Result<()> {
     );
     if rejected > 0 {
         println!(
-            "note: the recording includes backpressure rejections; rejections are \
-             timing-dependent, so a replay at a different speed may legitimately diverge"
+            "note: the recording includes backpressure rejections; replay with \
+             `--admission recorded` to re-apply them byte-identically at any speed"
         );
     }
     service.shutdown()?;
@@ -1267,21 +1273,27 @@ fn traffic_record(args: &Args) -> Result<()> {
 
 fn traffic_replay(args: &Args) -> Result<()> {
     use domino::serve::api::Response;
-    use domino::serve::traffic::{replay, replay_with, ReplaySpeed, TrafficLog};
+    use domino::serve::traffic::{
+        replay_admission, replay_with_admission, AdmissionMode, ReplaySpeed, TrafficLog,
+    };
     use domino::serve::{ModelRegistry, ServeConfig, Server, Service};
     use std::sync::Arc;
 
     let file = args.positional.get(1).ok_or_else(|| {
-        anyhow::anyhow!("usage: domino traffic replay FILE [--speed 1x|max|Nx] [--addr HOST:PORT]")
+        anyhow::anyhow!(
+            "usage: domino traffic replay FILE [--speed 1x|max|Nx] [--addr HOST:PORT] \
+             [--admission live|recorded]"
+        )
     })?;
     let log = TrafficLog::load(std::path::Path::new(file))?;
     let speed = ReplaySpeed::parse(args.get("speed").unwrap_or("max"))?;
+    let admission = AdmissionMode::parse(args.get("admission").unwrap_or("live"))?;
     let report = match args.get("addr") {
         Some(addr) => {
             // against a live endpoint: a transport failure becomes a
             // typed error response, which the diff then reports
             let mut client = domino::serve::client::Client::connect(addr)?;
-            replay_with(&log, speed, |req| {
+            replay_with_admission(&log, speed, admission, |req| {
                 client.call(&req).unwrap_or_else(|e| Response::Error {
                     message: format!("transport: {e:#}"),
                 })
@@ -1300,19 +1312,27 @@ fn traffic_replay(args: &Args) -> Result<()> {
                 registry,
             )?;
             let service = Service::new(server, arch_from(args));
-            let r = replay(&log, &service, speed);
+            let r = replay_admission(&log, &service, speed, admission);
             service.shutdown()?;
             r
         }
     };
     println!(
-        "replayed {} entries in {:.2}s: {} matched, {} mismatched, {} skipped (stats)",
+        "replayed {} entries ({} admission) in {:.2}s: {} matched, {} mismatched, \
+         {} skipped (stats)",
         report.total,
+        admission.name(),
         report.elapsed.as_secs_f64(),
         report.matched,
         report.mismatched,
         report.skipped
     );
+    if report.rejections_reapplied > 0 || report.backpressure_retries > 0 {
+        println!(
+            "  admission: {} recorded rejections re-applied, {} live backpressure retries",
+            report.rejections_reapplied, report.backpressure_retries
+        );
+    }
     if let Some(m) = &report.first_mismatch {
         println!("first mismatch: {m}");
     }
@@ -1442,5 +1462,233 @@ fn golden(args: &Args) -> Result<()> {
     let n = args.get_usize("images", 5);
     let checked = domino::runtime::golden::check_golden_vs_reference(&rt, n, 1234)?;
     println!("golden HLO == rust reference on {checked} image(s) [bit-exact]");
+    Ok(())
+}
+
+// ------------------------------------------------------------------ cluster
+
+fn cluster_cmd(args: &Args) -> Result<()> {
+    let op = args.positional.first().map(String::as_str).unwrap_or("");
+    match op {
+        "serve" => cluster_serve(args),
+        "status" => cluster_status(args),
+        other => bail!("unknown cluster op {other:?} (use serve | status)"),
+    }
+}
+
+/// Backend processes spawned by `cluster serve --spawn N`. Killed on
+/// drop — including every error path — so a failed router start never
+/// orphans children. The stdout pipes are held open for the children's
+/// lifetime: a spawned `serve` prints a line or two after we stop
+/// reading, and a closed pipe would make its `println!` panic.
+struct SpawnedBackends {
+    children: Vec<std::process::Child>,
+    // held, never read: keeping the pipes open is the point
+    #[allow(dead_code)]
+    stdouts: Vec<std::io::BufReader<std::process::ChildStdout>>,
+}
+
+impl Drop for SpawnedBackends {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Spawn `n` empty sim-serve backends on ephemeral ports and collect
+/// the bound address each prints. The backends carry no models — the
+/// router's admin plane loads (and on failover re-loads) them.
+fn spawn_backends(n: usize, workers: usize) -> Result<(SpawnedBackends, Vec<String>)> {
+    use std::io::BufRead;
+
+    let exe = std::env::current_exe()?;
+    let mut guard = SpawnedBackends {
+        children: Vec::new(),
+        stdouts: Vec::new(),
+    };
+    let mut addrs = Vec::new();
+    for _ in 0..n {
+        let mut child = std::process::Command::new(&exe)
+            .args([
+                "serve",
+                "--backend",
+                "sim",
+                "--models",
+                "",
+                "--workers",
+                &workers.to_string(),
+                "--listen",
+                "127.0.0.1:0",
+            ])
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::inherit())
+            .spawn()?;
+        let stdout = child.stdout.take().expect("stdout was piped");
+        guard.children.push(child);
+        let mut reader = std::io::BufReader::new(stdout);
+        let mut addr = None;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                break; // child exited without listening
+            }
+            if let Some(rest) = line.strip_prefix("listening on ") {
+                addr = rest.split_whitespace().next().map(String::from);
+                break;
+            }
+        }
+        guard.stdouts.push(reader);
+        let addr = addr.ok_or_else(|| {
+            anyhow::anyhow!("spawned backend exited before printing its listen address")
+        })?;
+        addrs.push(addr);
+    }
+    Ok((guard, addrs))
+}
+
+fn cluster_models(args: &Args) -> Vec<String> {
+    args.get("models")
+        .unwrap_or("tiny-mlp,tiny-cnn")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect()
+}
+
+/// `domino cluster serve`: spawn (or attach to) backend serve
+/// processes, shard the requested models over them with replication,
+/// and expose the same typed API on `--listen` — a router endpoint is
+/// indistinguishable from a single serve endpoint to any client.
+fn cluster_serve(args: &Args) -> Result<()> {
+    use domino::serve::api::{Dispatcher, Request, Response};
+    use domino::serve::net::NetServer;
+    use domino::serve::{ClusterConfig, Router};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let listen = args
+        .get("listen")
+        .ok_or_else(|| anyhow::anyhow!("cluster serve needs --listen ADDR"))?;
+    let (_guard, backend_addrs) = match (args.get("spawn"), args.get("backends")) {
+        (Some(_), Some(_)) => bail!("pass --spawn N or --backends a,b,c, not both"),
+        (Some(n), None) => {
+            let n: usize = n
+                .parse()
+                .ok()
+                .filter(|&n| n > 0)
+                .ok_or_else(|| anyhow::anyhow!("--spawn must be a positive integer"))?;
+            let (g, addrs) = spawn_backends(n, args.get_usize("workers", 2))?;
+            println!(
+                "spawned {} backend process(es): {}",
+                addrs.len(),
+                addrs.join(", ")
+            );
+            (Some(g), addrs)
+        }
+        (None, Some(list)) => {
+            let addrs: Vec<String> = list
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(String::from)
+                .collect();
+            (None, addrs)
+        }
+        (None, None) => bail!("cluster serve needs --spawn N or --backends a,b,c"),
+    };
+
+    let cfg = ClusterConfig {
+        replication: args.get_usize("replication", 2),
+        ..ClusterConfig::default()
+    };
+    let router = Router::new(backend_addrs, cfg)?;
+
+    // Load the models through the router's own admin plane: rendezvous
+    // hashing picks each model's owners, and the router records the
+    // (seed, mapping) spec it will re-load from during failover.
+    let seed = args.get_u64("seed", 42);
+    for (i, m) in cluster_models(args).iter().enumerate() {
+        match router.dispatch(Request::LoadSeeded {
+            model: m.clone(),
+            seed: seed.wrapping_add(i as u64),
+            mapping: None,
+        }) {
+            Response::Loaded(stamp) => {
+                println!("loaded {} v{} across the cluster", stamp.name, stamp.version)
+            }
+            Response::Error { message } => bail!("load {m}: {message}"),
+            other => bail!("unexpected response to load {m}: {other:?}"),
+        }
+    }
+    router.start_health();
+    print!("{}", router.status().render());
+
+    let router = Arc::new(router);
+    let net = NetServer::bind(listen, Arc::clone(&router))?;
+    println!(
+        "router listening on {addr_real} (length-prefixed JSON frames; drive with \
+         `domino client <op> --addr {addr_real}`)",
+        addr_real = net.local_addr()
+    );
+    println!(
+        "note: the wire protocol is plaintext and unauthenticated; bind to trusted \
+         networks only"
+    );
+    let secs = args.get_u64("serve-secs", 0);
+    if secs == 0 {
+        println!("serving until killed (pass --serve-secs N for a bounded run)");
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(secs));
+    net.shutdown()?;
+    print!("{}", router.status().render());
+    Ok(())
+}
+
+/// `domino cluster status`: probe each backend once (read-only — no
+/// loads, no repairs) and print liveness, loaded models, and the
+/// owner assignments a router over these backends would use.
+fn cluster_status(args: &Args) -> Result<()> {
+    use domino::serve::{ClusterConfig, Router};
+    use std::collections::BTreeSet;
+
+    let backends: Vec<String> = args
+        .get("backends")
+        .ok_or_else(|| anyhow::anyhow!("cluster status needs --backends a,b,c"))?
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    let cfg = ClusterConfig {
+        replication: args.get_usize("replication", 2),
+        ..ClusterConfig::default()
+    };
+    let router = Router::new(backends, cfg)?;
+    // Probe with an empty model table: reconcile has nothing to
+    // repair, so the pass is purely observational.
+    router.health_pass();
+    let probed = router.status();
+    let mut names: BTreeSet<String> = probed
+        .backends
+        .iter()
+        .flat_map(|b| b.loaded.iter().cloned())
+        .collect();
+    if let Some(list) = args.get("models") {
+        names.extend(
+            list.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(String::from),
+        );
+    }
+    router.assume_models(&names.into_iter().collect::<Vec<_>>());
+    print!("{}", router.status().render());
     Ok(())
 }

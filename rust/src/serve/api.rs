@@ -523,6 +523,33 @@ pub trait DispatchTap: Send + Sync {
     fn on_dispatch(&self, req: &Request, resp: &Response);
 }
 
+/// The dispatch surface `serve::net` serves and `serve::cluster`
+/// composes: anything that executes one typed [`Request`] into one
+/// [`Response`] (failures folded into [`Response::Error`], never
+/// `Err`). [`Service`] is the leaf implementation — one process's
+/// registry and worker pool; `serve::cluster::Router` implements it by
+/// routing to many remote services over the same wire protocol. A TCP
+/// endpoint fronts either without knowing which: a remote call is the
+/// same call, one level up.
+pub trait Dispatcher: Send + Sync + 'static {
+    /// Execute one typed request.
+    fn dispatch(&self, req: Request) -> Response;
+
+    /// Record one connection refused over capacity at the TCP accept
+    /// loop, where the implementation keeps a counter (default no-op).
+    fn note_conn_refused(&self) {}
+}
+
+impl Dispatcher for Service {
+    fn dispatch(&self, req: Request) -> Response {
+        Service::dispatch(self, req)
+    }
+
+    fn note_conn_refused(&self) {
+        Service::note_conn_refused(self)
+    }
+}
+
 /// The one front door for every plane: wraps a running [`Server`] and
 /// dispatches typed [`Request`]s, locally or (through `serve::net`)
 /// over TCP. Admin mutations optionally persist through a

@@ -6,7 +6,24 @@
 //! in-process API. The benches, the protocol smoke test and the
 //! `domino client …` CLI subcommands all drive the server through
 //! this type.
+//!
+//! Two submission modes share the connection:
+//!
+//! - **Synchronous** ([`Client::call`] and the typed helpers): one
+//!   request, wait for its response. Frames are untagged, i.e. pure
+//!   protocol v1 — works against any endpoint.
+//! - **Pipelined** ([`Client::submit`] / [`Client::await_response`]):
+//!   requests carry a request id (protocol v2) and many may be in
+//!   flight at once on the one connection; responses complete out of
+//!   order and are claimed by id. This is how one connection carries
+//!   real load — the round-trip latency is paid once per *window*,
+//!   not once per request.
+//!
+//! A client whose call dies mid-round-trip poisons itself (the frame
+//! stream may be desynchronized); [`Client::reconnect`] re-establishes
+//! the connection in place, keeping the address and read timeout.
 
+use std::collections::{HashMap, HashSet};
 use std::net::TcpStream;
 use std::time::Duration;
 
@@ -21,13 +38,26 @@ use super::wire;
 /// One framed connection to a `serve::net` endpoint.
 pub struct Client {
     stream: TcpStream,
+    /// The dialed address, kept for [`Self::reconnect`].
+    addr: String,
+    /// The configured timeout, reapplied on reconnect.
+    read_timeout: Option<Duration>,
     /// Set when a call died mid-round-trip (write or read failure,
     /// e.g. a read timeout). The framing is then unsynchronized: the
     /// late response is still in flight and would be decoded as the
     /// answer to the *next* request — silent misattribution when the
     /// variants happen to match. Every subsequent call fails fast
-    /// instead; reconnect to recover.
+    /// instead; [`Self::reconnect`] recovers.
     poisoned: bool,
+    /// Next request id for [`Self::submit`] (per-connection counter;
+    /// the endpoint scopes ids per connection, so a fresh connection
+    /// may reuse them).
+    next_rid: u64,
+    /// Ids submitted but not yet claimed by [`Self::await_response`].
+    outstanding: HashSet<u64>,
+    /// Responses that arrived while waiting for a *different* id,
+    /// parked until their id is awaited.
+    ready: HashMap<u64, Response>,
 }
 
 impl Client {
@@ -38,7 +68,12 @@ impl Client {
         stream.set_nodelay(true).ok();
         Ok(Self {
             stream,
+            addr: addr.to_string(),
+            read_timeout: None,
             poisoned: false,
+            next_rid: 0,
+            outstanding: HashSet::new(),
+            ready: HashMap::new(),
         })
     }
 
@@ -47,6 +82,7 @@ impl Client {
     /// from the next call and poisons the connection (the late
     /// response would otherwise answer the wrong request).
     pub fn set_read_timeout(&mut self, dur: Option<Duration>) -> Result<()> {
+        self.read_timeout = dur;
         self.stream
             .set_read_timeout(dur)
             .map_err(|e| anyhow!("set read timeout: {e}"))
@@ -56,6 +92,26 @@ impl Client {
     /// stream unsynchronized (see [`Self::call`]).
     pub fn is_poisoned(&self) -> bool {
         self.poisoned
+    }
+
+    /// Re-establish the connection in place: dial the original
+    /// address again, reapply the configured read timeout, and clear
+    /// the poison. Responses to requests submitted on the old
+    /// connection are gone — outstanding pipelined ids are dropped
+    /// and can never be awaited (awaiting one reports it unknown);
+    /// resubmit the work instead.
+    pub fn reconnect(&mut self) -> Result<()> {
+        let stream = TcpStream::connect(&self.addr)
+            .map_err(|e| anyhow!("failed to reconnect to {}: {e}", self.addr))?;
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(self.read_timeout)
+            .map_err(|e| anyhow!("set read timeout: {e}"))?;
+        self.stream = stream;
+        self.poisoned = false;
+        self.outstanding.clear();
+        self.ready.clear();
+        Ok(())
     }
 
     /// One raw round-trip: send `req`, receive the typed response
@@ -81,9 +137,124 @@ impl Client {
 
     fn call_inner(&mut self, req: &Request) -> Result<Response> {
         wire::write_frame(&mut self.stream, &wire::encode_request(req))?;
-        let frame = wire::read_frame(&mut self.stream)?
-            .ok_or_else(|| anyhow!("server closed the connection"))?;
-        wire::decode_response(&frame)
+        // the untagged request's response is the next *untagged* frame;
+        // tagged frames arriving first belong to pipelined submits
+        // still in flight — park them for their await
+        loop {
+            let frame = wire::read_frame(&mut self.stream)?
+                .ok_or_else(|| anyhow!("server closed the connection"))?;
+            let (resp, rid) = wire::decode_response_tagged(&frame)?;
+            match rid {
+                None => return Ok(resp),
+                Some(r) if self.outstanding.remove(&r) => {
+                    self.ready.insert(r, resp);
+                }
+                Some(r) => bail!("server answered unknown request id {r}"),
+            }
+        }
+    }
+
+    /// Pipelined submission: send `req` tagged with a fresh request
+    /// id and return immediately. Many submits may be in flight at
+    /// once on this one connection; claim each response with
+    /// [`Self::await_response`]. Any transport failure poisons the
+    /// client exactly like [`Self::call`].
+    pub fn submit(&mut self, req: &Request) -> Result<u64> {
+        if self.poisoned {
+            bail!(
+                "connection poisoned by an earlier mid-call transport error \
+                 (a stale response may be in flight); reconnect"
+            );
+        }
+        let rid = self.next_rid;
+        self.next_rid += 1;
+        let r = wire::write_frame(
+            &mut self.stream,
+            &wire::encode_request_tagged(req, Some(rid)),
+        );
+        if let Err(e) = r {
+            self.poisoned = true;
+            return Err(e);
+        }
+        self.outstanding.insert(rid);
+        Ok(rid)
+    }
+
+    /// Claim the response to a prior [`Self::submit`]. Responses to
+    /// *other* outstanding ids that arrive first are parked, so
+    /// awaiting in any order works. An id that was never submitted
+    /// (or already claimed) is an error without touching the wire.
+    pub fn await_response(&mut self, rid: u64) -> Result<Response> {
+        if let Some(resp) = self.ready.remove(&rid) {
+            return Ok(resp);
+        }
+        if self.poisoned {
+            bail!(
+                "connection poisoned by an earlier mid-call transport error \
+                 (a stale response may be in flight); reconnect"
+            );
+        }
+        if !self.outstanding.contains(&rid) {
+            bail!("request id {rid} is not outstanding on this connection");
+        }
+        loop {
+            let frame = match wire::read_frame(&mut self.stream) {
+                Ok(Some(f)) => f,
+                Ok(None) => {
+                    self.poisoned = true;
+                    bail!("server closed the connection with request id {rid} in flight");
+                }
+                Err(e) => {
+                    self.poisoned = true;
+                    return Err(e);
+                }
+            };
+            let (resp, got) = match wire::decode_response_tagged(&frame) {
+                Ok(v) => v,
+                Err(e) => {
+                    self.poisoned = true;
+                    return Err(e);
+                }
+            };
+            match got {
+                Some(r) if r == rid => {
+                    self.outstanding.remove(&rid);
+                    return Ok(resp);
+                }
+                Some(r) if self.outstanding.remove(&r) => {
+                    self.ready.insert(r, resp);
+                }
+                _ => {
+                    // an untagged or never-submitted id mid-pipeline
+                    // means the stream is not what we think it is
+                    self.poisoned = true;
+                    bail!(
+                        "response stream desynchronized: got {} while awaiting request id {rid}",
+                        match got {
+                            Some(r) => format!("unknown request id {r}"),
+                            None => "an untagged response".to_string(),
+                        }
+                    );
+                }
+            }
+        }
+    }
+
+    /// Pipelined [`Self::infer`]: submit one image, claim the typed
+    /// reply later with [`Self::await_infer`].
+    pub fn infer_submit(&mut self, model: Option<&str>, image: Vec<i8>) -> Result<u64> {
+        self.submit(&Request::Infer {
+            model: model.map(str::to_string),
+            image,
+        })
+    }
+
+    /// Claim a pipelined infer: unwraps the reply like [`Self::infer`].
+    pub fn await_infer(&mut self, rid: u64) -> Result<InferReply> {
+        match Self::ok(self.await_response(rid)?)? {
+            Response::Infer(r) => Ok(r),
+            other => bail!("unexpected response to infer: {other:?}"),
+        }
     }
 
     fn ok(resp: Response) -> Result<Response> {

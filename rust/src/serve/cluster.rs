@@ -1,0 +1,922 @@
+//! The cluster plane: one [`Router`] frontend sharding, replicating
+//! and failing over across many `serve` processes, behind the same
+//! typed API as a single process.
+//!
+//! The router owns a table of backend endpoints and implements
+//! [`api::Dispatcher`], so everything that can front a leaf `Service`
+//! — the TCP endpoint, the benches, the traffic harness — can front a
+//! cluster unchanged; a remote call is the same call, one level up.
+//!
+//! - **Routing.** `Infer` routes by rendezvous (highest-random-weight)
+//!   hashing of the model name over the live backends: each model has
+//!   a stable owner set of [`ClusterConfig::replication`] backends
+//!   that survives unrelated backends joining or dying, and within
+//!   the owner set each request goes to the replica with the fewest
+//!   router-observed requests in flight (least-loaded dispatch).
+//! - **Admin plane.** `Load`/`LoadSeeded`/`Swap` fan out to the
+//!   model's owner set and are recorded in the router's model table —
+//!   the cluster's manifest — so failover can re-load the model
+//!   elsewhere from `(zoo name, seed, mapping)` alone: weights are a
+//!   pure function of (network, seed), so a re-load is bit-identical.
+//!   `Unload` fans to every live backend and drops the table entry.
+//! - **Observability.** `Stats` aggregates every backend (counters
+//!   summed, per-model percentiles folded by max); `ListModels`
+//!   unions; `ModelInfo`/`Trace` go to the model's primary owner.
+//! - **Health + failover.** A health thread probes every backend over
+//!   the existing typed API (`ListModels` doubles as liveness probe
+//!   and loaded-set report), marks unresponsive backends dead, and
+//!   re-loads owned models onto owners that are missing them. A
+//!   transport failure during a call marks the backend dead on the
+//!   spot and the infer retries on the next replica, so a kill -9
+//!   backend costs retries, not answers. [`Router::drain`] is the
+//!   polite version: the backend stops receiving new work, finishes
+//!   its in-flight requests, and only then is removed.
+//!
+//! # Security
+//!
+//! The wire protocol is **plaintext and unauthenticated** — length-
+//! prefixed JSON with no TLS and no credentials. That was a footnote
+//! while everything lived on one localhost; the cluster plane is the
+//! component that puts frames on a real network, so it inherits the
+//! warning at full strength: run routers and backends on a trusted
+//! network (localhost, a private segment, or inside a mesh that adds
+//! transport security), never on an address the internet can reach.
+//! The admin plane (`Load`/`Swap`/`Unload`) is reachable by anyone
+//! who can open a TCP connection.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::model::zoo;
+
+use super::api::{self, Dispatcher, MappingSpec, Request, Response, StatsReply};
+use super::client::Client;
+
+/// Router tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    /// How many backends own (and serve) each model. Clamped to the
+    /// number of live backends.
+    pub replication: usize,
+    /// Health-probe cadence.
+    pub health_interval: Duration,
+    /// Read timeout for routed data/admin calls.
+    pub request_timeout: Duration,
+    /// Read timeout for health probes (shorter: a probe that hangs
+    /// this long *is* the failure signal).
+    pub health_timeout: Duration,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            replication: 2,
+            health_interval: Duration::from_millis(500),
+            request_timeout: Duration::from_secs(30),
+            health_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+/// What the router remembers about a model it loaded: enough to
+/// re-load it, bit-identically, on another backend during failover.
+#[derive(Clone, Debug, Default)]
+struct ModelSpec {
+    seed: Option<u64>,
+    mapping: Option<MappingSpec>,
+}
+
+/// One backend endpoint and the router's view of it.
+struct Backend {
+    addr: String,
+    /// Probed healthy (optimistically true at startup; the first
+    /// failed probe or failed call clears it, a later successful
+    /// probe restores it).
+    alive: AtomicBool,
+    /// Draining: finishes in-flight work, receives no new work.
+    draining: AtomicBool,
+    /// Router-observed requests currently in flight (the least-loaded
+    /// dispatch signal).
+    in_flight: AtomicUsize,
+    served: AtomicU64,
+    errors: AtomicU64,
+    /// Idle pooled connections, reused across calls.
+    pool: Mutex<Vec<Client>>,
+    /// Models the last health probe saw loaded.
+    loaded: Mutex<BTreeSet<String>>,
+}
+
+impl Backend {
+    fn new(addr: String) -> Self {
+        Self {
+            addr,
+            alive: AtomicBool::new(true),
+            draining: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            served: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            pool: Mutex::new(Vec::new()),
+            loaded: Mutex::new(BTreeSet::new()),
+        }
+    }
+
+    fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Routable: may receive *new* work.
+    fn routable(&self) -> bool {
+        self.is_alive() && !self.is_draining()
+    }
+
+    fn mark_dead(&self) {
+        self.alive.store(false, Ordering::SeqCst);
+        // pooled connections to a dead backend are stale
+        self.pool.lock().unwrap().clear();
+    }
+}
+
+/// FNV-1a 64: small, dependency-free, and plenty uniform for
+/// spreading model names over a handful of backends.
+fn fnv1a(init: u64, bytes: &[u8]) -> u64 {
+    let mut h = init;
+    for b in bytes {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Rendezvous weight of `(model, addr)`: each model ranks every
+/// backend by this score; the top `replication` are its owners. A
+/// backend joining or dying only moves the models it scores highest
+/// for — no global reshuffle.
+fn rendezvous_score(model: &str, addr: &str) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    let h = fnv1a(FNV_OFFSET, model.as_bytes());
+    let h = fnv1a(h, &[0xff]);
+    fnv1a(h, addr.as_bytes())
+}
+
+struct RouterInner {
+    backends: Vec<Arc<Backend>>,
+    cfg: ClusterConfig,
+    /// The cluster's manifest: every model loaded *through the
+    /// router*, with the spec failover re-loads it from.
+    models: Mutex<BTreeMap<String, ModelSpec>>,
+    conns_refused: AtomicU64,
+}
+
+/// The cluster frontend. Implements [`api::Dispatcher`], so
+/// `serve::net::NetServer::bind` serves a cluster exactly like it
+/// serves one process.
+pub struct Router {
+    inner: Arc<RouterInner>,
+    stop: Arc<AtomicBool>,
+    health: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+/// Point-in-time view of one backend, for `domino cluster status`.
+#[derive(Clone, Debug)]
+pub struct BackendStatus {
+    pub addr: String,
+    pub alive: bool,
+    pub draining: bool,
+    pub in_flight: u64,
+    pub served: u64,
+    pub errors: u64,
+    pub loaded: Vec<String>,
+}
+
+/// Point-in-time view of the cluster, for `domino cluster status`.
+#[derive(Clone, Debug)]
+pub struct ClusterStatus {
+    pub backends: Vec<BackendStatus>,
+    /// model → its current owner addresses, in rendezvous order.
+    pub assignments: Vec<(String, Vec<String>)>,
+}
+
+impl ClusterStatus {
+    /// Render for the CLI.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("backends ({}):\n", self.backends.len()));
+        for b in &self.backends {
+            let state = if !b.alive {
+                "DEAD"
+            } else if b.draining {
+                "draining"
+            } else {
+                "alive"
+            };
+            out.push_str(&format!(
+                "  {:<22} {:<8} in-flight {:>3}  served {:>6}  errors {:>4}  [{}]\n",
+                b.addr,
+                state,
+                b.in_flight,
+                b.served,
+                b.errors,
+                b.loaded.join(", ")
+            ));
+        }
+        out.push_str(&format!("assignments ({}):\n", self.assignments.len()));
+        for (model, owners) in &self.assignments {
+            out.push_str(&format!("  {:<14} -> {}\n", model, owners.join(", ")));
+        }
+        out
+    }
+}
+
+impl Router {
+    /// Build a router over `backends` (TCP addresses of running
+    /// `domino serve` processes). No connections are opened here;
+    /// backends start optimistically alive and the first probe or
+    /// call corrects the picture. Call [`Self::start_health`] to
+    /// begin probing.
+    pub fn new(backends: Vec<String>, cfg: ClusterConfig) -> Result<Self> {
+        if backends.is_empty() {
+            bail!("a cluster needs at least one backend address");
+        }
+        let mut seen = BTreeSet::new();
+        for b in &backends {
+            if !seen.insert(b.clone()) {
+                bail!("duplicate backend address {b:?}");
+            }
+        }
+        Ok(Self {
+            inner: Arc::new(RouterInner {
+                backends: backends.into_iter().map(|a| Arc::new(Backend::new(a))).collect(),
+                cfg,
+                models: Mutex::new(BTreeMap::new()),
+                conns_refused: AtomicU64::new(0),
+            }),
+            stop: Arc::new(AtomicBool::new(false)),
+            health: Mutex::new(None),
+        })
+    }
+
+    /// Start the health thread: probe every backend each
+    /// [`ClusterConfig::health_interval`], mark the unresponsive dead,
+    /// resurrect the recovered, and re-load owned models onto owners
+    /// missing them (the failover repair loop).
+    pub fn start_health(&self) {
+        let mut slot = self.health.lock().unwrap();
+        if slot.is_some() {
+            return;
+        }
+        let inner = Arc::clone(&self.inner);
+        let stop = Arc::clone(&self.stop);
+        let handle = std::thread::Builder::new()
+            .name("domino-cluster-health".to_string())
+            .spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    inner.probe_all();
+                    inner.reconcile();
+                    let interval = inner.cfg.health_interval;
+                    let mut slept = Duration::ZERO;
+                    // nap in small steps so shutdown is prompt
+                    while slept < interval && !stop.load(Ordering::SeqCst) {
+                        let step = Duration::from_millis(20).min(interval - slept);
+                        std::thread::sleep(step);
+                        slept += step;
+                    }
+                }
+            });
+        match handle {
+            Ok(h) => *slot = Some(h),
+            Err(e) => eprintln!("domino-cluster: spawn health thread: {e}"),
+        }
+    }
+
+    /// Run exactly one health pass inline (probe + repair). Useful
+    /// where a test or tool wants deterministic reconciliation
+    /// instead of a background cadence.
+    pub fn health_pass(&self) {
+        self.inner.probe_all();
+        self.inner.reconcile();
+    }
+
+    /// Drain-aware removal: `addr` stops receiving new work, its
+    /// in-flight requests finish (bounded by `deadline`), then it is
+    /// marked dead and its models are re-loaded onto the owners that
+    /// take over. Returns an error only for an unknown address; a
+    /// drain that times out still completes the removal (the
+    /// remaining in-flight calls fail over like any transport error).
+    pub fn drain(&self, addr: &str, deadline: Duration) -> Result<()> {
+        let be = self
+            .inner
+            .backends
+            .iter()
+            .find(|b| b.addr == addr)
+            .ok_or_else(|| anyhow!("no backend with address {addr:?}"))?;
+        be.draining.store(true, Ordering::SeqCst);
+        let t0 = std::time::Instant::now();
+        while be.in_flight.load(Ordering::SeqCst) > 0 && t0.elapsed() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        be.mark_dead();
+        self.inner.reconcile();
+        Ok(())
+    }
+
+    /// The router's current view: per-backend state and per-model
+    /// owner assignments.
+    pub fn status(&self) -> ClusterStatus {
+        let backends = self
+            .inner
+            .backends
+            .iter()
+            .map(|b| BackendStatus {
+                addr: b.addr.clone(),
+                alive: b.is_alive(),
+                draining: b.is_draining(),
+                in_flight: b.in_flight.load(Ordering::SeqCst) as u64,
+                served: b.served.load(Ordering::SeqCst),
+                errors: b.errors.load(Ordering::SeqCst),
+                loaded: b.loaded.lock().unwrap().iter().cloned().collect(),
+            })
+            .collect();
+        let assignments = self
+            .inner
+            .models
+            .lock()
+            .unwrap()
+            .keys()
+            .map(|m| {
+                (
+                    m.clone(),
+                    self.inner.owners(m).iter().map(|b| b.addr.clone()).collect(),
+                )
+            })
+            .collect();
+        ClusterStatus {
+            backends,
+            assignments,
+        }
+    }
+
+    /// Backend addresses, in table order.
+    pub fn backend_addrs(&self) -> Vec<String> {
+        self.inner.backends.iter().map(|b| b.addr.clone()).collect()
+    }
+
+    /// Record `models` in the router's table without loading them
+    /// anywhere — `domino cluster status` uses this to display the
+    /// owner assignments the router *would* use for models it did not
+    /// load itself. Names already in the table keep their recorded
+    /// (seed, mapping) spec.
+    pub fn assume_models(&self, models: &[String]) {
+        let mut table = self.inner.models.lock().unwrap();
+        for m in models {
+            table.entry(RouterInner::canonical(m)).or_default();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.health.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Dispatcher for Router {
+    fn dispatch(&self, req: Request) -> Response {
+        self.inner.dispatch(req)
+    }
+
+    fn note_conn_refused(&self) {
+        self.inner.conns_refused.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+impl RouterInner {
+    /// Canonicalize a model name the way a leaf service does, so the
+    /// rendezvous hash sees one spelling (`TINY_CNN` and `tiny-cnn`
+    /// must not land on different shards).
+    fn canonical(model: &str) -> String {
+        match zoo::by_name(model) {
+            Some(net) => net.name,
+            None => model.to_string(),
+        }
+    }
+
+    /// The model's owner set: routable backends ranked by rendezvous
+    /// score, top `replication`.
+    fn owners(&self, model: &str) -> Vec<Arc<Backend>> {
+        let mut ranked: Vec<&Arc<Backend>> =
+            self.backends.iter().filter(|b| b.routable()).collect();
+        ranked.sort_by_key(|b| std::cmp::Reverse(rendezvous_score(model, &b.addr)));
+        ranked
+            .into_iter()
+            .take(self.cfg.replication.max(1))
+            .cloned()
+            .collect()
+    }
+
+    /// One routed call over a pooled connection. A transport error
+    /// marks the backend dead (the caller decides whether to fail
+    /// over); a typed `Response::Error` is a *successful* call.
+    fn call_backend(&self, be: &Backend, req: &Request) -> Result<Response> {
+        be.in_flight.fetch_add(1, Ordering::SeqCst);
+        let result = self.call_pooled(be, req);
+        be.in_flight.fetch_sub(1, Ordering::SeqCst);
+        match &result {
+            Ok(_) => {
+                be.served.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                be.errors.fetch_add(1, Ordering::Relaxed);
+                be.mark_dead();
+            }
+        }
+        result
+    }
+
+    fn call_pooled(&self, be: &Backend, req: &Request) -> Result<Response> {
+        let mut client = match be.pool.lock().unwrap().pop() {
+            Some(c) => c,
+            None => {
+                let mut c = Client::connect(&be.addr)?;
+                c.set_read_timeout(Some(self.cfg.request_timeout))?;
+                c
+            }
+        };
+        match client.call(req) {
+            Ok(resp) => {
+                be.pool.lock().unwrap().push(client);
+                Ok(resp)
+            }
+            // the client poisoned itself; drop it, never re-pool it
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Re-load `model` on `be` from the router's recorded spec.
+    /// Tolerates "already loaded": two repair paths racing is fine.
+    fn ensure_loaded(&self, be: &Backend, model: &str) -> Result<()> {
+        let spec = self
+            .models
+            .lock()
+            .unwrap()
+            .get(model)
+            .cloned()
+            .ok_or_else(|| anyhow!("model {model:?} is not in the router's table"))?;
+        let req = match spec.seed {
+            Some(seed) => Request::LoadSeeded {
+                model: model.to_string(),
+                seed,
+                mapping: spec.mapping,
+            },
+            None => Request::Load {
+                model: model.to_string(),
+                mapping: spec.mapping,
+            },
+        };
+        match self.call_backend(be, &req)? {
+            Response::Loaded(_) => {
+                be.loaded.lock().unwrap().insert(model.to_string());
+                Ok(())
+            }
+            Response::Error { message } if message.contains("already loaded") => {
+                be.loaded.lock().unwrap().insert(model.to_string());
+                Ok(())
+            }
+            Response::Error { message } => bail!("load {model} on {}: {message}", be.addr),
+            other => bail!("unexpected response to load: {other:?}"),
+        }
+    }
+
+    /// Probe every backend: `ListModels` doubles as liveness check
+    /// and loaded-set report. A fresh connection per probe, so a
+    /// backend that died and restarted is re-discovered without
+    /// fighting stale pooled sockets.
+    fn probe_all(&self) {
+        for be in &self.backends {
+            if be.is_draining() && !be.is_alive() {
+                continue; // drained and removed; leave it dead
+            }
+            let probe = (|| -> Result<Vec<String>> {
+                let mut c = Client::connect(&be.addr)?;
+                c.set_read_timeout(Some(self.cfg.health_timeout))?;
+                Ok(c.models()?.into_iter().map(|d| d.name).collect())
+            })();
+            match probe {
+                Ok(names) => {
+                    *be.loaded.lock().unwrap() = names.into_iter().collect();
+                    be.alive.store(true, Ordering::SeqCst);
+                }
+                Err(_) => be.mark_dead(),
+            }
+        }
+    }
+
+    /// The repair loop: every model in the router's table must be
+    /// loaded on every backend in its (current) owner set. After a
+    /// backend dies, its models' owner sets re-rank over the
+    /// survivors and this loop re-loads them there from the recorded
+    /// spec — bit-identical weights, because weights are a pure
+    /// function of (network, seed). Non-owners keep whatever they
+    /// have: a stale replica is harmless and a future owner-set shift
+    /// may want it back.
+    fn reconcile(&self) {
+        let models: Vec<String> = self.models.lock().unwrap().keys().cloned().collect();
+        for model in models {
+            for be in self.owners(&model) {
+                let have = be.loaded.lock().unwrap().contains(&model);
+                if !have {
+                    if let Err(e) = self.ensure_loaded(&be, &model) {
+                        eprintln!("domino-cluster: repair {model} on {}: {e:#}", be.addr);
+                    }
+                }
+            }
+        }
+    }
+
+    fn dispatch(&self, req: Request) -> Response {
+        let r = match req {
+            Request::Infer { model, image } => self.route_infer(model, image),
+            req @ (Request::Load { .. } | Request::LoadSeeded { .. } | Request::Swap { .. }) => {
+                self.route_admin(req)
+            }
+            Request::Unload { model } => self.route_unload(&model),
+            Request::ListModels => self.route_list(),
+            Request::ModelInfo { model } => self.route_to_primary(Request::ModelInfo { model }),
+            Request::Stats => self.route_stats(),
+            req @ Request::Trace { .. } => self.route_to_primary(req),
+        };
+        r.unwrap_or_else(|e| Response::Error {
+            message: format!("{e:#}"),
+        })
+    }
+
+    /// Data plane: least-loaded replica first, transport failures
+    /// fail over to the next replica (an infer is idempotent — same
+    /// weights, same image, same logits — so a retry can never serve
+    /// a different answer), and an owner that is missing the model is
+    /// repaired in-line and retried once.
+    fn route_infer(&self, model: Option<String>, image: Vec<i8>) -> Result<Response> {
+        let name = match model {
+            Some(m) => Self::canonical(&m),
+            None => {
+                // `model: None` means "the sole model" — only
+                // unambiguous when the cluster serves exactly one
+                let models = self.models.lock().unwrap();
+                match models.len() {
+                    1 => models.keys().next().cloned().unwrap(),
+                    0 => bail!("no model is loaded in the cluster"),
+                    n => bail!(
+                        "cluster serves {n} models; infer requests must name one"
+                    ),
+                }
+            }
+        };
+        let mut owners = self.owners(&name);
+        if owners.is_empty() {
+            bail!("no live backend available for model {name:?}");
+        }
+        owners.sort_by_key(|b| b.in_flight.load(Ordering::SeqCst));
+        let req = Request::Infer {
+            model: Some(name.clone()),
+            image,
+        };
+        let mut last_err = None;
+        for be in &owners {
+            match self.call_backend(be, &req) {
+                Ok(Response::Error { message })
+                    if message.contains("not loaded") || message.contains("no model") =>
+                {
+                    // the owner exists but lost the model (fresh
+                    // failover target): repair and retry once
+                    if self.ensure_loaded(be, &name).is_ok() {
+                        if let Ok(resp) = self.call_backend(be, &req) {
+                            return Ok(resp);
+                        }
+                    }
+                    last_err = Some(anyhow!("{}: {message}", be.addr));
+                }
+                Ok(resp) => return Ok(resp),
+                Err(e) => last_err = Some(anyhow!("{}: {e:#}", be.addr)),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| anyhow!("no replica of {name:?} answered")))
+    }
+
+    /// Admin plane: fan to the owner set, record the spec on success.
+    /// All owners must apply the mutation; partial success is a typed
+    /// error naming the stragglers (the health repair loop will keep
+    /// retrying them).
+    fn route_admin(&self, req: Request) -> Result<Response> {
+        let (name, spec) = match &req {
+            Request::Load { model, mapping } => (
+                Self::canonical(model),
+                ModelSpec {
+                    seed: None,
+                    mapping: *mapping,
+                },
+            ),
+            Request::LoadSeeded {
+                model,
+                seed,
+                mapping,
+            } => (
+                Self::canonical(model),
+                ModelSpec {
+                    seed: Some(*seed),
+                    mapping: *mapping,
+                },
+            ),
+            Request::Swap { model, seed } => {
+                let name = Self::canonical(model);
+                let prior = self.models.lock().unwrap().get(&name).cloned();
+                (
+                    name,
+                    ModelSpec {
+                        seed: *seed,
+                        mapping: prior.and_then(|s| s.mapping),
+                    },
+                )
+            }
+            _ => unreachable!("route_admin only handles Load/LoadSeeded/Swap"),
+        };
+        let owners = self.owners(&name);
+        if owners.is_empty() {
+            bail!("no live backend available for model {name:?}");
+        }
+        let mut ok_resp = None;
+        let mut failures = Vec::new();
+        for be in &owners {
+            match self.call_backend(be, &req) {
+                Ok(Response::Error { message }) => {
+                    failures.push(format!("{}: {message}", be.addr))
+                }
+                Ok(resp) => {
+                    be.loaded.lock().unwrap().insert(name.clone());
+                    ok_resp = Some(resp);
+                }
+                Err(e) => failures.push(format!("{}: {e:#}", be.addr)),
+            }
+        }
+        match (ok_resp, failures.is_empty()) {
+            (Some(resp), true) => {
+                self.models.lock().unwrap().insert(name, spec);
+                Ok(resp)
+            }
+            (Some(_), false) => {
+                // applied somewhere: record it (the repair loop will
+                // chase the stragglers) but tell the operator
+                self.models.lock().unwrap().insert(name.clone(), spec);
+                bail!(
+                    "{name} applied on {} of {} owners; failed on: {}",
+                    owners.len() - failures.len(),
+                    owners.len(),
+                    failures.join("; ")
+                )
+            }
+            (None, _) => bail!(
+                "{name} failed on every owner: {}",
+                failures.join("; ")
+            ),
+        }
+    }
+
+    /// Unload fans to *every* live backend — owner sets shift over
+    /// time, so stale replicas may exist anywhere. "Not loaded" is
+    /// success for this purpose.
+    fn route_unload(&self, model: &str) -> Result<Response> {
+        let name = Self::canonical(model);
+        let req = Request::Unload {
+            model: name.clone(),
+        };
+        let mut ok_resp = None;
+        for be in &self.backends {
+            if !be.is_alive() {
+                continue;
+            }
+            if let Ok(resp) = self.call_backend(be, &req) {
+                be.loaded.lock().unwrap().remove(&name);
+                if matches!(resp, Response::Unloaded(_)) {
+                    ok_resp = Some(resp);
+                }
+            }
+        }
+        self.models.lock().unwrap().remove(&name);
+        ok_resp.ok_or_else(|| anyhow!("model {name:?} was not loaded on any live backend"))
+    }
+
+    /// Union of every live backend's models, deduplicated by name.
+    fn route_list(&self) -> Result<Response> {
+        let mut by_name: BTreeMap<String, api::ModelDesc> = BTreeMap::new();
+        let mut any_alive = false;
+        for be in &self.backends {
+            if !be.is_alive() {
+                continue;
+            }
+            if let Ok(Response::Models(descs)) = self.call_backend(be, &Request::ListModels) {
+                any_alive = true;
+                for d in descs {
+                    by_name.entry(d.name.clone()).or_insert(d);
+                }
+            }
+        }
+        if !any_alive {
+            bail!("no live backend answered ListModels");
+        }
+        Ok(Response::Models(by_name.into_values().collect()))
+    }
+
+    /// Model-specific reads route to the primary owner (rendezvous
+    /// rank 0): one consistent answerer per model.
+    fn route_to_primary(&self, req: Request) -> Result<Response> {
+        let model = match &req {
+            Request::ModelInfo { model } | Request::Trace { model, .. } => {
+                Self::canonical(model)
+            }
+            _ => unreachable!("route_to_primary only handles ModelInfo/Trace"),
+        };
+        let owners = self.owners(&model);
+        let be = owners
+            .first()
+            .ok_or_else(|| anyhow!("no live backend available for model {model:?}"))?;
+        self.call_backend(be, &req)
+    }
+
+    /// Cluster-wide stats: counters summed across live backends,
+    /// per-model metrics folded by name (counts summed, percentiles
+    /// folded by max — a cluster p99 cannot be better than its worst
+    /// replica's), plus the router's own refused-connection count.
+    fn route_stats(&self) -> Result<Response> {
+        let mut agg = StatsReply {
+            served: 0,
+            rejected: 0,
+            failed: 0,
+            conns_refused: self.conns_refused.load(Ordering::Relaxed),
+            trace_rejected: 0,
+            models: Vec::new(),
+        };
+        let mut by_name: BTreeMap<String, super::metrics::ModelMetricsSnapshot> =
+            BTreeMap::new();
+        let mut any_alive = false;
+        for be in &self.backends {
+            if !be.is_alive() {
+                continue;
+            }
+            let Ok(Response::Stats(s)) = self.call_backend(be, &Request::Stats) else {
+                continue;
+            };
+            any_alive = true;
+            agg.served += s.served;
+            agg.rejected += s.rejected;
+            agg.failed += s.failed;
+            agg.conns_refused += s.conns_refused;
+            agg.trace_rejected += s.trace_rejected;
+            for m in s.models {
+                by_name
+                    .entry(m.model.clone())
+                    .and_modify(|acc| {
+                        acc.served += m.served;
+                        acc.failed += m.failed;
+                        acc.rejected += m.rejected;
+                        acc.traced += m.traced;
+                        acc.queue_depth += m.queue_depth;
+                        acc.samples += m.samples;
+                        acc.p50_us = acc.p50_us.max(m.p50_us);
+                        acc.p95_us = acc.p95_us.max(m.p95_us);
+                        acc.p99_us = acc.p99_us.max(m.p99_us);
+                    })
+                    .or_insert(m);
+            }
+        }
+        if !any_alive {
+            bail!("no live backend answered Stats");
+        }
+        agg.models = by_name.into_values().collect();
+        Ok(Response::Stats(agg))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router(addrs: &[&str], replication: usize) -> Router {
+        Router::new(
+            addrs.iter().map(|s| s.to_string()).collect(),
+            ClusterConfig {
+                replication,
+                ..ClusterConfig::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn rendezvous_assignment_is_stable_and_survives_unrelated_removals() {
+        let r = router(&["a:1", "b:2", "c:3", "d:4"], 2);
+        let owners: Vec<String> = r
+            .inner
+            .owners("tiny-mlp")
+            .iter()
+            .map(|b| b.addr.clone())
+            .collect();
+        assert_eq!(owners.len(), 2);
+        // deterministic: same answer every time
+        for _ in 0..4 {
+            let again: Vec<String> = r
+                .inner
+                .owners("tiny-mlp")
+                .iter()
+                .map(|b| b.addr.clone())
+                .collect();
+            assert_eq!(owners, again);
+        }
+        // different models spread: at least two distinct primary
+        // owners across a handful of names (FNV over 4 backends)
+        let primaries: BTreeSet<String> = ["tiny-mlp", "tiny-cnn", "tiny-resnet", "m4", "m5"]
+            .iter()
+            .map(|m| r.inner.owners(m)[0].addr.clone())
+            .collect();
+        assert!(primaries.len() >= 2, "all models on one backend: {primaries:?}");
+
+        // killing a NON-owner must not move the model
+        let non_owner = ["a:1", "b:2", "c:3", "d:4"]
+            .iter()
+            .find(|a| !owners.contains(&a.to_string()))
+            .unwrap();
+        r.inner
+            .backends
+            .iter()
+            .find(|b| b.addr == *non_owner)
+            .unwrap()
+            .mark_dead();
+        let after: Vec<String> = r
+            .inner
+            .owners("tiny-mlp")
+            .iter()
+            .map(|b| b.addr.clone())
+            .collect();
+        assert_eq!(owners, after, "losing a non-owner reshuffled the model");
+
+        // killing an owner promotes exactly one survivor, keeps the other
+        r.inner
+            .backends
+            .iter()
+            .find(|b| b.addr == owners[0])
+            .unwrap()
+            .mark_dead();
+        let failed_over: Vec<String> = r
+            .inner
+            .owners("tiny-mlp")
+            .iter()
+            .map(|b| b.addr.clone())
+            .collect();
+        assert_eq!(failed_over.len(), 2);
+        assert!(failed_over.contains(&owners[1]), "surviving owner kept");
+        assert!(!failed_over.contains(&owners[0]), "dead owner still ranked");
+    }
+
+    #[test]
+    fn least_loaded_replica_is_picked_first() {
+        let r = router(&["a:1", "b:2", "c:3"], 2);
+        let owners = r.inner.owners("tiny-cnn");
+        assert_eq!(owners.len(), 2);
+        // tilt the load: first-ranked owner is busy
+        owners[0].in_flight.store(5, Ordering::SeqCst);
+        let mut sorted = owners.clone();
+        sorted.sort_by_key(|b| b.in_flight.load(Ordering::SeqCst));
+        assert_eq!(sorted[0].addr, owners[1].addr, "idle replica must rank first");
+        // and with the tilt reversed, the order flips
+        owners[0].in_flight.store(0, Ordering::SeqCst);
+        owners[1].in_flight.store(7, Ordering::SeqCst);
+        let mut sorted = owners.clone();
+        sorted.sort_by_key(|b| b.in_flight.load(Ordering::SeqCst));
+        assert_eq!(sorted[0].addr, owners[0].addr);
+    }
+
+    #[test]
+    fn drain_excludes_from_routing_and_duplicate_backends_are_rejected() {
+        let r = router(&["a:1", "b:2", "c:3"], 2);
+        let owners = r.inner.owners("tiny-mlp");
+        let primary = owners[0].addr.clone();
+        r.drain(&primary, Duration::from_millis(50)).unwrap();
+        let after = r.inner.owners("tiny-mlp");
+        assert!(after.iter().all(|b| b.addr != primary));
+        assert!(r.drain("nope:0", Duration::ZERO).is_err());
+
+        assert!(Router::new(
+            vec!["x:1".to_string(), "x:1".to_string()],
+            ClusterConfig::default()
+        )
+        .is_err());
+    }
+}

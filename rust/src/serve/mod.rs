@@ -27,11 +27,21 @@
 //! * [`wire`] — the dependency-free wire protocol: length-prefixed
 //!   frames of hand-rolled, escaping-correct JSON (std only; the
 //!   build image is offline, so no serde).
-//! * [`net`] — the TCP endpoint (`domino serve --listen ADDR`):
-//!   bounded accept loop feeding the existing bounded queue, graceful
-//!   drain on shutdown.
+//! * [`net`] — the TCP endpoint (`domino serve --listen ADDR`): a
+//!   nonblocking poll loop (one event thread owns accept + every
+//!   connection's reads and writes; a dispatcher pool executes
+//!   requests), protocol-v2 request ids for many-in-flight pipelined
+//!   connections, bounded connection count, graceful drain on
+//!   shutdown. It serves any [`api::Dispatcher`] — a leaf [`Service`]
+//!   or a cluster [`cluster::Router`].
+//! * [`cluster`] — the cluster plane (`domino cluster …`): a
+//!   [`cluster::Router`] sharding models over many serve processes by
+//!   rendezvous hashing with replication, least-loaded dispatch among
+//!   replicas, health probing, and drain-aware failover that re-loads
+//!   models from the router's recorded (zoo, seed, mapping) specs.
 //! * [`client`] — the in-crate typed client (`domino client …`, the
-//!   benches and the protocol smoke test).
+//!   benches and the protocol smoke test); synchronous calls plus a
+//!   pipelined submit/await-by-id mode over one connection.
 //! * [`metrics`] — per-model observability: p50/p95/p99 latency,
 //!   served/failed/rejected counts and live queue-depth gauges, keyed
 //!   by model name and served through the `Stats` request.
@@ -66,6 +76,7 @@
 
 pub mod api;
 pub mod client;
+pub mod cluster;
 pub mod metrics;
 pub mod net;
 mod registry;
@@ -73,7 +84,8 @@ mod server;
 pub mod traffic;
 pub mod wire;
 
-pub use api::Service;
+pub use api::{Dispatcher, Service};
+pub use cluster::{ClusterConfig, Router};
 pub use metrics::{LatencyStats, ModelMetricsSnapshot};
 pub use registry::{sim_program, ModelRegistry, ModelStamp, ModelVersion};
 pub use server::{Request, Response, ServeConfig, Server};

@@ -1,44 +1,74 @@
-//! The TCP endpoint: `serve::api` over `serve::wire` frames. One
-//! accept thread, one thread per connection (bounded by
-//! [`NetConfig::max_conns`]), every decoded request routed through the
-//! same [`Service::dispatch`] the in-process path uses — so a remote
-//! call *is* the local call, stamp and all. The accept loop feeds the
-//! server's existing bounded queue; backpressure and per-model
-//! validation errors come back as typed [`api::Response::Error`]
-//! frames, exactly like any other failure.
+//! The TCP endpoint: `serve::api` over `serve::wire` frames, served by
+//! a **nonblocking poll loop** — one event thread owns the listener
+//! and every connection (accept + read + write, no thread per socket),
+//! and a small dispatcher pool executes decoded requests through the
+//! same [`api::Dispatcher::dispatch`] the in-process path uses. So a
+//! remote call *is* the local call, stamp and all — and the dispatch
+//! surface is a trait, so the same endpoint fronts a leaf `Service` or
+//! a `serve::cluster` router unchanged.
 //!
-//! Shutdown is a graceful drain: the accept loop stops taking
-//! connections, each connection thread finishes the request it is
-//! already dispatching and writes its response, idle connections
-//! close at their next poll tick, and [`NetServer::shutdown`] joins
-//! them all before returning. A frame only *partially* received when
-//! the stop lands is abandoned with a framing error — a stalled peer
-//! must not be able to block shutdown indefinitely.
+//! ## Protocol v2: many frames in flight per connection
+//!
+//! A request frame may carry a `"rid"` (see `wire::decode_request_tagged`).
+//! Tagged requests dispatch concurrently and complete **out of order**;
+//! each response echoes its rid. Untagged (v1) requests keep the v1
+//! contract: their responses are released in request arrival order, so
+//! a v1 single-frame peer — or a v1 peer that pipelines without rids —
+//! observes exactly the old behavior. A rid already in flight on the
+//! same connection is answered with a typed error (tagged with that
+//! rid) without dispatching; it cannot desynchronize the stream.
+//!
+//! ## Error taxonomy (unchanged from v1)
+//!
+//! A frame that decodes but fails in dispatch is a typed `Error`
+//! *response*; a frame that does not decode gets a typed `Error`
+//! response too and the connection stays usable (framing is still
+//! intact). A framing error — oversized length prefix — is
+//! unrecoverable: one last `Error` frame, then close. Connections over
+//! [`NetConfig::max_conns`] get a typed refusal frame and are closed
+//! (counted via [`api::Dispatcher::note_conn_refused`]).
+//!
+//! ## Shutdown
+//!
+//! A graceful drain: the loop stops accepting and reading, frames
+//! already received whole are still dispatched, every in-flight
+//! dispatch completes and its response is flushed, then connections
+//! close. A frame only *partially* received when the stop lands is
+//! abandoned, and a peer that stops reading its responses is declared
+//! dead after [`NetConfig::write_timeout`] without write progress — a
+//! stalled peer must not block shutdown indefinitely.
 
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::api::{self, Service};
+use super::api::{self, Dispatcher};
 use super::wire;
 
 /// Endpoint tuning knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct NetConfig {
     /// Maximum concurrent client connections; further connections get
-    /// a typed `Error` response and are closed (bounded accept loop).
+    /// a typed `Error` response and are closed.
     pub max_conns: usize,
-    /// How often idle reads and the accept loop wake to poll the stop
-    /// flag (drain latency at shutdown).
+    /// Upper bound on how long the event loop sleeps when idle (the
+    /// loop wakes immediately on dispatch completions; this bounds the
+    /// latency of *noticing* new bytes and the stop flag).
     pub poll: Duration,
-    /// Deadline for writing one response frame. A client that stops
-    /// reading (full send buffer) is treated as dead once this
-    /// elapses, so a stalled connection can never block
-    /// [`NetServer::shutdown`]'s drain-and-join.
+    /// Deadline for making write progress on one connection. A client
+    /// that stops reading (full send buffer) is treated as dead once
+    /// this elapses, so a stalled connection can never block
+    /// [`NetServer::shutdown`]'s drain.
     pub write_timeout: Duration,
+    /// Dispatcher threads executing decoded requests. This bounds how
+    /// many requests the endpoint runs concurrently *outside* the
+    /// server's own worker queue (traces run inline on these threads).
+    pub dispatchers: usize,
 }
 
 impl Default for NetConfig {
@@ -47,30 +77,36 @@ impl Default for NetConfig {
             max_conns: 64,
             poll: Duration::from_millis(100),
             write_timeout: Duration::from_secs(30),
+            dispatchers: 4,
         }
     }
 }
 
 /// A running TCP endpoint. Dropping it (or calling
-/// [`Self::shutdown`]) stops the accept loop and drains every
-/// connection.
+/// [`Self::shutdown`]) stops the loop and drains every connection.
 pub struct NetServer {
     local_addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_handle: Option<std::thread::JoinHandle<()>>,
+    loop_handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl NetServer {
     /// Bind `addr` (e.g. `127.0.0.1:7700`; port 0 picks an ephemeral
     /// port — read the result off [`Self::local_addr`]) and start
-    /// serving `service`. A bind failure names the address that
+    /// serving `service` (any [`api::Dispatcher`]: a leaf `Service` or
+    /// a cluster `Router`). A bind failure names the address that
     /// failed, so "port in use" is diagnosable from the message alone.
-    pub fn bind(addr: &str, service: Arc<Service>) -> Result<Self> {
+    pub fn bind<D: Dispatcher>(addr: &str, service: Arc<D>) -> Result<Self> {
         Self::bind_with(addr, service, NetConfig::default())
     }
 
     /// [`Self::bind`] with explicit [`NetConfig`].
-    pub fn bind_with(addr: &str, service: Arc<Service>, cfg: NetConfig) -> Result<Self> {
+    pub fn bind_with<D: Dispatcher>(
+        addr: &str,
+        service: Arc<D>,
+        cfg: NetConfig,
+    ) -> Result<Self> {
+        let service: Arc<dyn Dispatcher> = service;
         let listener =
             TcpListener::bind(addr).with_context(|| format!("failed to bind {addr}"))?;
         let local_addr = listener
@@ -80,15 +116,15 @@ impl NetServer {
             .set_nonblocking(true)
             .context("set listener non-blocking")?;
         let stop = Arc::new(AtomicBool::new(false));
-        let accept_stop = Arc::clone(&stop);
-        let accept_handle = std::thread::Builder::new()
-            .name("domino-net-accept".to_string())
-            .spawn(move || accept_loop(listener, service, accept_stop, cfg))
-            .context("spawn accept thread")?;
+        let loop_stop = Arc::clone(&stop);
+        let loop_handle = std::thread::Builder::new()
+            .name("domino-net-loop".to_string())
+            .spawn(move || event_loop(listener, service, loop_stop, cfg))
+            .context("spawn net event loop")?;
         Ok(Self {
             local_addr,
             stop,
-            accept_handle: Some(accept_handle),
+            loop_handle: Some(loop_handle),
         })
     }
 
@@ -100,9 +136,9 @@ impl NetServer {
     /// Stop accepting, drain every live connection, join the threads.
     pub fn shutdown(mut self) -> Result<()> {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(h) = self.accept_handle.take() {
+        if let Some(h) = self.loop_handle.take() {
             h.join()
-                .map_err(|_| anyhow::anyhow!("net accept thread panicked"))?;
+                .map_err(|_| anyhow::anyhow!("net event loop panicked"))?;
         }
         Ok(())
     }
@@ -111,70 +147,392 @@ impl NetServer {
 impl Drop for NetServer {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(h) = self.accept_handle.take() {
+        if let Some(h) = self.loop_handle.take() {
             let _ = h.join();
         }
     }
 }
 
-fn accept_loop(
-    listener: TcpListener,
-    service: Arc<Service>,
-    stop: Arc<AtomicBool>,
-    cfg: NetConfig,
+// ---------------------------------------------------------------------------
+// Dispatch pool
+// ---------------------------------------------------------------------------
+
+/// How a response is slotted back into its connection's stream:
+/// `Seq` = untagged (v1) request, released in arrival order; `Rid` =
+/// tagged (v2) request, released as soon as it completes.
+#[derive(Clone, Copy, Debug)]
+enum Slot {
+    Seq(u64),
+    Rid(u64),
+}
+
+struct Job {
+    conn: u64,
+    slot: Slot,
+    req: api::Request,
+}
+
+struct Done {
+    conn: u64,
+    slot: Slot,
+    bytes: Vec<u8>,
+}
+
+#[derive(Default)]
+struct DispatchQueue {
+    jobs: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    stop: AtomicBool,
+}
+
+impl DispatchQueue {
+    fn push(&self, job: Job) {
+        self.jobs.lock().unwrap().push_back(job);
+        self.cv.notify_one();
+    }
+
+    fn is_empty(&self) -> bool {
+        self.jobs.lock().unwrap().is_empty()
+    }
+
+    /// Publish the stop flag under the jobs mutex (a store outside the
+    /// lock could slot between a dispatcher's emptiness check and its
+    /// wait — the classic missed wakeup; same discipline as
+    /// `Server::shutdown`).
+    fn stop_all(&self) {
+        let _jobs = self.jobs.lock().unwrap();
+        self.stop.store(true, Ordering::SeqCst);
+        drop(_jobs);
+        self.cv.notify_all();
+    }
+}
+
+/// Encode `resp` for `slot`, downgrading a response too large to frame
+/// (possible only for pathological trace windows) to a typed error
+/// instead of killing the connection.
+fn encode_for_slot(resp: &api::Response, slot: Slot) -> Vec<u8> {
+    let rid = match slot {
+        Slot::Seq(_) => None,
+        Slot::Rid(r) => Some(r),
+    };
+    let bytes = wire::encode_response_tagged(resp, rid);
+    if bytes.len() <= wire::MAX_FRAME {
+        return bytes;
+    }
+    wire::encode_response_tagged(
+        &api::Response::Error {
+            message: format!(
+                "response of {} bytes exceeds the {}-byte frame limit",
+                bytes.len(),
+                wire::MAX_FRAME
+            ),
+        },
+        rid,
+    )
+}
+
+fn dispatcher_entry(
+    q: Arc<DispatchQueue>,
+    service: Arc<dyn Dispatcher>,
+    done_tx: mpsc::Sender<Done>,
 ) {
-    let live = Arc::new(AtomicUsize::new(0));
-    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
-    while !stop.load(Ordering::SeqCst) {
-        match listener.accept() {
-            Ok((stream, peer)) => {
-                conns.retain(|h| !h.is_finished());
-                if live.load(Ordering::SeqCst) >= cfg.max_conns {
-                    refuse(stream, &cfg, &service);
-                    continue;
+    loop {
+        let job = {
+            let mut jobs = q.jobs.lock().unwrap();
+            loop {
+                if let Some(j) = jobs.pop_front() {
+                    break Some(j);
                 }
-                live.fetch_add(1, Ordering::SeqCst);
-                let service = Arc::clone(&service);
-                let stop = Arc::clone(&stop);
-                let live_conn = Arc::clone(&live);
-                let spawned = std::thread::Builder::new()
-                    .name(format!("domino-net-conn-{peer}"))
-                    .spawn(move || {
-                        if let Err(e) = handle_conn(stream, &service, &stop, cfg) {
-                            eprintln!("domino-net: connection {peer}: {e:#}");
-                        }
-                        live_conn.fetch_sub(1, Ordering::SeqCst);
-                    });
-                match spawned {
-                    Ok(h) => conns.push(h),
-                    Err(e) => {
-                        live.fetch_sub(1, Ordering::SeqCst);
-                        eprintln!("domino-net: spawn connection thread: {e}");
-                    }
+                if q.stop.load(Ordering::SeqCst) {
+                    break None;
                 }
+                jobs = q.cv.wait(jobs).unwrap();
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(cfg.poll);
+        };
+        let Some(job) = job else { return };
+        let done = run_job(&*service, job);
+        if done_tx.send(done).is_err() {
+            return; // event loop gone
+        }
+    }
+}
+
+/// Execute one job. A panic inside dispatch (a bug, not a typed
+/// failure) becomes a typed error response: losing the completion
+/// would leave its connection's in-flight accounting stuck and wedge
+/// the drain.
+fn run_job(service: &dyn Dispatcher, job: Job) -> Done {
+    let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        service.dispatch(job.req)
+    }))
+    .unwrap_or_else(|_| api::Response::Error {
+        message: "internal error: dispatch panicked".to_string(),
+    });
+    Done {
+        conn: job.conn,
+        slot: job.slot,
+        bytes: encode_for_slot(&resp, job.slot),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection state
+// ---------------------------------------------------------------------------
+
+/// Per-connection cap on concurrently dispatched requests: past it the
+/// loop stops reading the socket, so a peer that floods frames gets
+/// TCP backpressure instead of an unbounded job queue.
+const CONN_INFLIGHT_CAP: usize = 256;
+
+/// Per-connection cap on unflushed response bytes: past it the loop
+/// stops reading, so a peer that streams undecodable frames (each of
+/// which earns an immediate error response) cannot grow the write
+/// buffer without bound while never reading any of it.
+const CONN_WBUF_CAP: usize = 4 << 20;
+
+struct Conn {
+    id: u64,
+    stream: TcpStream,
+    peer: String,
+    /// Unparsed received bytes (at most one partial frame plus a read
+    /// chunk — complete frames are consumed as they appear).
+    rbuf: Vec<u8>,
+    /// Pending outgoing bytes and how far they have been written.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Arrival-order counter for untagged requests…
+    next_seq: u64,
+    /// …and the next one whose response may be released.
+    release_seq: u64,
+    /// Untagged responses that completed out of order, held until
+    /// every earlier one has been released.
+    held: BTreeMap<u64, Vec<u8>>,
+    /// Rids currently in flight (duplicates are refused without
+    /// dispatching).
+    live_rids: HashSet<u64>,
+    /// Dispatched-but-not-completed requests (both kinds).
+    inflight: usize,
+    /// No more reads: peer closed, framing broke, or drain started.
+    eof: bool,
+    /// Remove immediately (write side failed or stalled out).
+    dead: bool,
+    /// When the current write stall started.
+    stalled_since: Option<Instant>,
+}
+
+impl Conn {
+    fn new(id: u64, stream: TcpStream, peer: String) -> Self {
+        Self {
+            id,
+            stream,
+            peer,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            next_seq: 0,
+            release_seq: 0,
+            held: BTreeMap::new(),
+            live_rids: HashSet::new(),
+            inflight: 0,
+            eof: false,
+            dead: false,
+            stalled_since: None,
+        }
+    }
+
+    fn push_frame(&mut self, payload: &[u8]) {
+        self.wbuf
+            .extend_from_slice(&(payload.len() as u32).to_be_bytes());
+        self.wbuf.extend_from_slice(payload);
+    }
+
+    /// Slot a completed response in, releasing every untagged response
+    /// that is now in order.
+    fn complete(&mut self, slot: Slot, bytes: Vec<u8>) {
+        match slot {
+            Slot::Rid(r) => {
+                self.live_rids.remove(&r);
+                self.push_frame(&bytes);
             }
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-            Err(e) => {
-                eprintln!("domino-net: accept error: {e}");
-                std::thread::sleep(cfg.poll);
+            Slot::Seq(s) => {
+                self.held.insert(s, bytes);
+                while let Some(b) = self.held.remove(&self.release_seq) {
+                    self.push_frame(&b);
+                    self.release_seq += 1;
+                }
             }
         }
     }
-    // graceful drain: every connection thread finishes its in-flight
-    // request and observes `stop` at its next idle poll
-    for h in conns {
+
+    /// True once nothing more can happen on this connection.
+    fn finished(&self) -> bool {
+        self.dead || (self.eof && self.inflight == 0 && self.wpos == self.wbuf.len())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The event loop
+// ---------------------------------------------------------------------------
+
+fn event_loop(
+    listener: TcpListener,
+    service: Arc<dyn Dispatcher>,
+    stop: Arc<AtomicBool>,
+    cfg: NetConfig,
+) {
+    let q = Arc::new(DispatchQueue::default());
+    let (done_tx, done_rx) = mpsc::channel::<Done>();
+    let mut pool = Vec::new();
+    for d in 0..cfg.dispatchers.max(1) {
+        let spawned = std::thread::Builder::new()
+            .name(format!("domino-net-dispatch-{d}"))
+            .spawn({
+                let q = Arc::clone(&q);
+                let service = Arc::clone(&service);
+                let done_tx = done_tx.clone();
+                move || dispatcher_entry(q, service, done_tx)
+            });
+        match spawned {
+            Ok(h) => pool.push(h),
+            Err(e) => eprintln!("domino-net: spawn dispatcher: {e}"),
+        }
+    }
+    drop(done_tx);
+
+    let idle = cfg.poll.min(Duration::from_micros(500));
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_conn = 0u64;
+    let mut chunk = vec![0u8; 64 * 1024];
+    let mut draining = false;
+
+    loop {
+        let mut progress = false;
+
+        if !draining && stop.load(Ordering::SeqCst) {
+            // drain transition: frames already received whole are
+            // still served; partial frames are abandoned
+            draining = true;
+            for c in conns.values_mut() {
+                parse_frames(c, &q);
+                c.eof = true;
+                c.rbuf.clear();
+            }
+            progress = true;
+        }
+
+        if !draining {
+            progress |= accept_new(&listener, &mut conns, &mut next_conn, &service, &cfg);
+            for c in conns.values_mut() {
+                progress |= read_and_parse(c, &mut chunk, &q);
+            }
+        }
+
+        // completions: drain whatever the dispatchers finished
+        while let Ok(done) = done_rx.try_recv() {
+            if let Some(c) = conns.get_mut(&done.conn) {
+                c.inflight -= 1;
+                c.complete(done.slot, done.bytes);
+            }
+            progress = true;
+        }
+
+        // degenerate fallback: with no dispatcher threads at all,
+        // execute queued jobs inline so the endpoint still functions
+        if pool.is_empty() {
+            let job = q.jobs.lock().unwrap().pop_front();
+            if let Some(job) = job {
+                let done = run_job(&*service, job);
+                if let Some(c) = conns.get_mut(&done.conn) {
+                    c.inflight -= 1;
+                    c.complete(done.slot, done.bytes);
+                }
+                progress = true;
+            }
+        }
+
+        for c in conns.values_mut() {
+            progress |= flush_writes(c, cfg.write_timeout);
+        }
+        conns.retain(|_, c| !c.finished());
+
+        if draining
+            && q.is_empty()
+            && conns.values().all(|c| c.inflight == 0)
+            && conns.values().all(|c| c.wpos == c.wbuf.len() || c.dead)
+        {
+            break;
+        }
+
+        if !progress {
+            // sleep on the completion channel: a finishing dispatch
+            // wakes the loop immediately, new socket bytes are noticed
+            // within `idle`
+            match done_rx.recv_timeout(idle) {
+                Ok(done) => {
+                    if let Some(c) = conns.get_mut(&done.conn) {
+                        c.inflight -= 1;
+                        c.complete(done.slot, done.bytes);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // all dispatchers gone (only possible if none were
+                    // ever spawned); inline fallback above still runs
+                    std::thread::sleep(idle);
+                }
+            }
+        }
+    }
+
+    q.stop_all();
+    for h in pool {
         let _ = h.join();
     }
 }
 
-/// Over-capacity connection: answer with a typed error, then close —
-/// and count it, so an operator watching `Stats` sees connection-level
-/// shedding instead of a mysteriously quiet endpoint.
-fn refuse(mut stream: TcpStream, cfg: &NetConfig, service: &Service) {
+/// Accept every connection currently pending (bounded per tick).
+/// Over-capacity connections get a typed refusal frame, a
+/// [`Dispatcher::note_conn_refused`] tick, and a close — an operator
+/// watching `Stats` sees connection-level shedding instead of a
+/// mysteriously quiet endpoint.
+fn accept_new(
+    listener: &TcpListener,
+    conns: &mut HashMap<u64, Conn>,
+    next_conn: &mut u64,
+    service: &Arc<dyn Dispatcher>,
+    cfg: &NetConfig,
+) -> bool {
+    let mut progress = false;
+    for _ in 0..16 {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                progress = true;
+                if conns.len() >= cfg.max_conns {
+                    refuse(stream, cfg, service.as_ref());
+                    continue;
+                }
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                stream.set_nodelay(true).ok();
+                let id = *next_conn;
+                *next_conn += 1;
+                conns.insert(id, Conn::new(id, stream, peer.to_string()));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => {
+                eprintln!("domino-net: accept error: {e}");
+                break;
+            }
+        }
+    }
+    progress
+}
+
+fn refuse(mut stream: TcpStream, cfg: &NetConfig, service: &dyn Dispatcher) {
     service.note_conn_refused();
+    let _ = stream.set_nonblocking(false);
     let _ = stream.set_write_timeout(Some(cfg.write_timeout));
     let resp = api::Response::Error {
         message: format!(
@@ -185,47 +543,181 @@ fn refuse(mut stream: TcpStream, cfg: &NetConfig, service: &Service) {
     let _ = wire::write_frame(&mut stream, &wire::encode_response(&resp));
 }
 
-/// One connection: read a frame, dispatch, answer, repeat. A frame
-/// that decodes but fails in dispatch is a typed `Error` *response*;
-/// a frame that does not decode gets a typed `Error` response too and
-/// the connection stays usable (framing is still intact). A framing
-/// error (oversized length prefix, truncation) is unrecoverable: we
-/// best-effort send one last `Error` frame and close.
-fn handle_conn(
-    mut stream: TcpStream,
-    service: &Service,
-    stop: &AtomicBool,
-    cfg: NetConfig,
-) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    stream
-        .set_read_timeout(Some(cfg.poll))
-        .context("set read timeout")?;
-    // a client that stops reading must look dead, not immortal: a
-    // blocked write would otherwise pin this thread past shutdown
-    stream
-        .set_write_timeout(Some(cfg.write_timeout))
-        .context("set write timeout")?;
-    let stop_fn = || stop.load(Ordering::SeqCst);
-    loop {
-        let frame = match wire::read_frame_cancellable(&mut stream, &stop_fn) {
-            Ok(Some(f)) => f,
-            Ok(None) => return Ok(()), // client closed, or drained at stop
+/// Pull whatever bytes the socket has, then consume every complete
+/// frame in the buffer. Returns true on any progress.
+fn read_and_parse(c: &mut Conn, chunk: &mut [u8], q: &Arc<DispatchQueue>) -> bool {
+    if c.eof || c.dead {
+        return false;
+    }
+    if c.inflight >= CONN_INFLIGHT_CAP || c.wbuf.len() - c.wpos >= CONN_WBUF_CAP {
+        return false;
+    }
+    let mut progress = false;
+    for _ in 0..8 {
+        match c.stream.read(chunk) {
+            Ok(0) => {
+                c.eof = true;
+                progress = true;
+                break;
+            }
+            Ok(n) => {
+                c.rbuf.extend_from_slice(&chunk[..n]);
+                progress = true;
+                parse_frames(c, q);
+                if c.eof
+                    || c.inflight >= CONN_INFLIGHT_CAP
+                    || c.wbuf.len() - c.wpos >= CONN_WBUF_CAP
+                {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                break;
+            }
             Err(e) => {
-                let resp = api::Response::Error {
+                // the read side died; finish in-flight work, the write
+                // side will discover its own fate
+                eprintln!("domino-net: connection {}: read: {e}", c.peer);
+                c.eof = true;
+                break;
+            }
+        }
+    }
+    if progress {
+        parse_frames(c, q);
+    }
+    progress
+}
+
+/// Consume every complete frame in `c.rbuf`: decode, then either
+/// enqueue a dispatch job or complete immediately (decode errors,
+/// duplicate rids). A framing error poisons the connection: one last
+/// `Error` frame, reads stop, the flush-then-close path takes over.
+fn parse_frames(c: &mut Conn, q: &Arc<DispatchQueue>) {
+    loop {
+        let range = match wire::frame_in_buffer(&c.rbuf) {
+            Ok(Some(r)) => r,
+            Ok(None) => return,
+            Err(e) => {
+                let err = api::Response::Error {
                     message: format!("framing error: {e:#}"),
                 };
-                let _ = wire::write_frame(&mut stream, &wire::encode_response(&resp));
-                return Err(e);
+                c.push_frame(&wire::encode_response(&err));
+                c.eof = true;
+                c.rbuf.clear();
+                return;
             }
         };
-        let resp = match wire::decode_request(&frame) {
-            Ok(req) => service.dispatch(req),
-            Err(e) => api::Response::Error {
-                message: format!("bad request: {e:#}"),
-            },
-        };
-        wire::write_frame(&mut stream, &wire::encode_response(&resp))
-            .context("write response frame")?;
+        let consumed = range.end;
+        match wire::decode_request_tagged(&c.rbuf[range]) {
+            Ok((req, None)) => {
+                let seq = c.next_seq;
+                c.next_seq += 1;
+                c.inflight += 1;
+                q.push(Job {
+                    conn: c.id,
+                    slot: Slot::Seq(seq),
+                    req,
+                });
+            }
+            Ok((req, Some(rid))) => {
+                if c.live_rids.contains(&rid) {
+                    // refuse without dispatching: the duplicate cannot
+                    // desync the stream, both completions would carry
+                    // the same rid
+                    let err = api::Response::Error {
+                        message: format!(
+                            "bad request: request id {rid} is already in flight on this connection"
+                        ),
+                    };
+                    c.push_frame(&wire::encode_response_tagged(&err, Some(rid)));
+                } else {
+                    c.live_rids.insert(rid);
+                    c.inflight += 1;
+                    q.push(Job {
+                        conn: c.id,
+                        slot: Slot::Rid(rid),
+                        req,
+                    });
+                }
+            }
+            Err(e) => {
+                // decodes as a frame but not as a request: a typed
+                // error response on a surviving connection, occupying
+                // an ordered slot so v1 pipelined peers stay in sync
+                let seq = c.next_seq;
+                c.next_seq += 1;
+                let err = api::Response::Error {
+                    message: format!("bad request: {e:#}"),
+                };
+                c.complete(Slot::Seq(seq), wire::encode_response(&err));
+            }
+        }
+        c.rbuf.drain(..consumed);
     }
+}
+
+fn flush_writes(c: &mut Conn, write_timeout: Duration) -> bool {
+    if c.dead || c.wpos == c.wbuf.len() {
+        // fully flushed: reset the buffer so it doesn't grow forever
+        if c.wpos > 0 {
+            c.wbuf.clear();
+            c.wpos = 0;
+        }
+        c.stalled_since = None;
+        return false;
+    }
+    let mut progress = false;
+    while c.wpos < c.wbuf.len() {
+        match c.stream.write(&c.wbuf[c.wpos..]) {
+            Ok(0) => {
+                c.dead = true;
+                return true;
+            }
+            Ok(n) => {
+                c.wpos += n;
+                c.stalled_since = None;
+                progress = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // no room: start (or check) the stall clock — a peer
+                // that stopped reading is dead after write_timeout
+                match c.stalled_since {
+                    None => c.stalled_since = Some(Instant::now()),
+                    Some(t0) if t0.elapsed() > write_timeout => {
+                        eprintln!(
+                            "domino-net: connection {}: write stalled past {:?}; dropping",
+                            c.peer, write_timeout
+                        );
+                        c.dead = true;
+                        return true;
+                    }
+                    Some(_) => {}
+                }
+                break;
+            }
+            Err(e) => {
+                eprintln!("domino-net: connection {}: write: {e}", c.peer);
+                c.dead = true;
+                return true;
+            }
+        }
+    }
+    if c.wpos == c.wbuf.len() {
+        c.wbuf.clear();
+        c.wpos = 0;
+    }
+    progress
 }

@@ -17,7 +17,11 @@
 //!   fields that legitimately vary run-to-run (timing splits,
 //!   point-in-time stats) — see [`comparable_bytes`]. Same seeds, same
 //!   models ⇒ byte-identical logits and stamps, turning "handles the
-//!   same traffic the same way" into a checked property.
+//!   same traffic the same way" into a checked property. Logs that
+//!   contain timing-dependent backpressure rejections replay
+//!   byte-identically too under [`AdmissionMode::Recorded`], which
+//!   re-applies the recorded accept/reject decisions instead of
+//!   re-racing the queue.
 //! - **Scenario generator**: open-loop [`Arrival`] schedules (uniform,
 //!   Poisson, bursty), an [`overload`] scenario that pushes past
 //!   `queue_cap` and proves rejection stays *typed* (zero dropped
@@ -261,6 +265,54 @@ impl ReplaySpeed {
     }
 }
 
+/// How a replay treats recorded *admission decisions* — accepted
+/// requests vs typed backpressure rejections.
+///
+/// Backpressure is timing-dependent: whether a request found the
+/// queue full depends on worker pace and replay speed, so a log
+/// containing rejections cannot replay byte-identically by re-racing
+/// admission ([`AdmissionMode::Live`]). [`AdmissionMode::Recorded`]
+/// re-applies the recorded decisions instead: entries recorded as
+/// backpressure rejections are reproduced without dispatching (the
+/// decision, and therefore the response bytes, are exact), and
+/// entries recorded as accepted retry through transient live
+/// backpressure until the service admits them. With admission pinned,
+/// determinism is back: same seeds, same models ⇒ byte-identical
+/// responses at any replay speed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// Re-race admission live: every entry is dispatched, and a log
+    /// with recorded rejections may legitimately diverge.
+    #[default]
+    Live,
+    /// Re-apply recorded accept/reject decisions (see above).
+    Recorded,
+}
+
+impl AdmissionMode {
+    /// Parse `"live"` or `"recorded"`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "live" => Ok(Self::Live),
+            "recorded" => Ok(Self::Recorded),
+            other => bail!("bad admission mode {other:?} (want live or recorded)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Live => "live",
+            Self::Recorded => "recorded",
+        }
+    }
+}
+
+/// Whether a response is the typed backpressure rejection the
+/// bounded queue sheds load with.
+fn is_backpressure(resp: &Response) -> bool {
+    matches!(resp, Response::Error { message } if message.contains("backpressure"))
+}
+
 /// Outcome of one replay pass.
 #[derive(Clone, Debug, Default)]
 pub struct ReplayReport {
@@ -276,6 +328,12 @@ pub struct ReplayReport {
     pub elapsed: Duration,
     /// Human-readable description of the first divergence.
     pub first_mismatch: Option<String>,
+    /// Recorded backpressure rejections re-applied without
+    /// dispatching ([`AdmissionMode::Recorded`] only).
+    pub rejections_reapplied: u64,
+    /// Live transient-backpressure retries absorbed for entries the
+    /// recording accepted ([`AdmissionMode::Recorded`] only).
+    pub backpressure_retries: u64,
 }
 
 impl ReplayReport {
@@ -313,8 +371,26 @@ pub fn comparable_bytes(resp: &Response) -> Option<Vec<u8>> {
 pub fn replay_with<F: FnMut(Request) -> Response>(
     log: &TrafficLog,
     speed: ReplaySpeed,
+    dispatch: F,
+) -> ReplayReport {
+    replay_with_admission(log, speed, AdmissionMode::Live, dispatch)
+}
+
+/// [`replay_with`] with an explicit [`AdmissionMode`]. Under
+/// [`AdmissionMode::Recorded`], recorded backpressure rejections are
+/// reproduced without dispatching and recorded-accepted entries retry
+/// through transient live backpressure (bounded; a queue that never
+/// drains still surfaces as a mismatch rather than a hang).
+pub fn replay_with_admission<F: FnMut(Request) -> Response>(
+    log: &TrafficLog,
+    speed: ReplaySpeed,
+    admission: AdmissionMode,
     mut dispatch: F,
 ) -> ReplayReport {
+    // bounded retry budget per accepted entry: plenty for a transient
+    // full queue, finite for a wedged one
+    const MAX_RETRIES: u32 = 200;
+    const RETRY_PAUSE: Duration = Duration::from_millis(2);
     let mut report = ReplayReport::default();
     let start = Instant::now();
     let mut prev_at = log.entries.first().map(|e| e.at_us).unwrap_or(0);
@@ -328,7 +404,25 @@ pub fn replay_with<F: FnMut(Request) -> Response>(
             }
         }
         prev_at = e.at_us;
-        let live = dispatch(e.request.clone());
+        if admission == AdmissionMode::Recorded && is_backpressure(&e.response) {
+            // the recorded decision was "reject": re-apply it verbatim
+            // instead of re-racing the queue — byte-exact by
+            // construction
+            report.total += 1;
+            report.matched += 1;
+            report.rejections_reapplied += 1;
+            continue;
+        }
+        let mut live = dispatch(e.request.clone());
+        if admission == AdmissionMode::Recorded && !is_backpressure(&e.response) {
+            let mut retries = 0;
+            while is_backpressure(&live) && retries < MAX_RETRIES {
+                std::thread::sleep(RETRY_PAUSE);
+                live = dispatch(e.request.clone());
+                retries += 1;
+            }
+            report.backpressure_retries += u64::from(retries);
+        }
         report.total += 1;
         match (comparable_bytes(&e.response), comparable_bytes(&live)) {
             (Some(want), Some(got)) => {
@@ -359,6 +453,16 @@ pub fn replay_with<F: FnMut(Request) -> Response>(
 /// [`replay_with`] against a local [`Service`].
 pub fn replay(log: &TrafficLog, service: &Service, speed: ReplaySpeed) -> ReplayReport {
     replay_with(log, speed, |req| service.dispatch(req))
+}
+
+/// [`replay_with_admission`] against a local [`Service`].
+pub fn replay_admission(
+    log: &TrafficLog,
+    service: &Service,
+    speed: ReplaySpeed,
+    admission: AdmissionMode,
+) -> ReplayReport {
+    replay_with_admission(log, speed, admission, |req| service.dispatch(req))
 }
 
 fn request_kind(req: &Request) -> &'static str {
@@ -1191,6 +1295,71 @@ mod tests {
         assert_eq!(report.mismatched, 1);
         assert!(report.first_mismatch.is_some());
         assert!(!report.is_identical());
+        service.shutdown().unwrap();
+    }
+
+    /// The admission-determinism satellite: a log containing recorded
+    /// backpressure rejections replays byte-identically under
+    /// `AdmissionMode::Recorded` (the rejection is re-applied, not
+    /// re-raced), while `Live` legitimately diverges on an uncontended
+    /// service that now accepts the request.
+    #[test]
+    fn recorded_admission_replays_backpressure_logs_byte_identically() {
+        let service = start_service(64);
+        let image = Rng::new(5).i8_vec(input_len(&service), 31);
+        let infer = Request::Infer {
+            model: Some("tiny-mlp".into()),
+            image,
+        };
+        let ok = service.dispatch(infer.clone());
+        assert!(matches!(ok, Response::Infer(_)));
+        // the middle entry was shed by the queue when recorded; the
+        // exact message the server uses for that decision
+        let rejected = Response::Error {
+            message: "queue full (64): backpressure".into(),
+        };
+        assert!(is_backpressure(&rejected));
+        let log = TrafficLog {
+            entries: vec![
+                LogEntry {
+                    at_us: 0,
+                    request: infer.clone(),
+                    response: ok.clone(),
+                },
+                LogEntry {
+                    at_us: 10,
+                    request: infer.clone(),
+                    response: rejected,
+                },
+                LogEntry {
+                    at_us: 20,
+                    request: infer,
+                    response: ok,
+                },
+            ],
+        };
+
+        // recorded admission: byte-identical, the rejection re-applied
+        let report =
+            replay_admission(&log, &service, ReplaySpeed::MaxRate, AdmissionMode::Recorded);
+        assert_eq!(report.total, 3);
+        assert_eq!(report.rejections_reapplied, 1);
+        assert!(
+            report.is_identical(),
+            "recorded admission diverged: {:?}",
+            report.first_mismatch
+        );
+        assert_eq!(report.matched, 3);
+
+        // live admission re-races the queue: uncontended, the service
+        // now accepts the request the recording rejected — a mismatch
+        let report = replay_admission(&log, &service, ReplaySpeed::MaxRate, AdmissionMode::Live);
+        assert_eq!(report.mismatched, 1);
+
+        assert_eq!(AdmissionMode::parse("recorded").unwrap(), AdmissionMode::Recorded);
+        assert_eq!(AdmissionMode::parse("live").unwrap(), AdmissionMode::Live);
+        assert!(AdmissionMode::parse("sometimes").is_err());
+
         service.shutdown().unwrap();
     }
 

@@ -1021,6 +1021,60 @@ pub fn encode_response(resp: &api::Response) -> Vec<u8> {
 }
 
 // ---------------------------------------------------------------------------
+// v2 tagging: request ids for pipelined connections
+// ---------------------------------------------------------------------------
+//
+// Protocol rev 2 adds one optional field to both envelopes: `"rid"`,
+// a client-chosen u64 request id. A frame carrying a rid may complete
+// out of order — the response echoes the rid so a pipelined client can
+// match many in-flight frames on one connection. Frames *without* a
+// rid keep the v1 contract (responses in request order), and because
+// every decoder in this module extracts fields by name and ignores
+// unknown ones, v1 peers interoperate with v2 peers unchanged:
+// `encode_*_tagged(.., None)` is byte-identical to the v1 encoding,
+// and a v1 decoder simply never looks at `"rid"`.
+
+/// Append the v2 request id to an encoded envelope. `rid: None`
+/// leaves the value untouched — the exact v1 bytes.
+fn tag(v: Json, rid: Option<u64>) -> Json {
+    match (v, rid) {
+        (Json::Obj(mut fields), Some(r)) => {
+            fields.push(("rid".to_string(), u(r)));
+            Json::Obj(fields)
+        }
+        (v, _) => v,
+    }
+}
+
+/// [`encode_request`] plus an optional v2 request id.
+pub fn encode_request_tagged(req: &api::Request, rid: Option<u64>) -> Vec<u8> {
+    encode(&tag(request_to_json(req), rid)).into_bytes()
+}
+
+/// [`decode_request`] plus the optional v2 request id. A v1 frame
+/// (no `"rid"`) decodes with `None`.
+pub fn decode_request_tagged(frame: &[u8]) -> Result<(api::Request, Option<u64>)> {
+    let text = std::str::from_utf8(frame).context("request frame is not UTF-8")?;
+    let v = decode(text)?;
+    let rid = opt_u64_field(&v, "rid")?;
+    Ok((request_from_json(&v)?, rid))
+}
+
+/// [`encode_response`] plus an optional v2 request id.
+pub fn encode_response_tagged(resp: &api::Response, rid: Option<u64>) -> Vec<u8> {
+    encode(&tag(response_to_json(resp), rid)).into_bytes()
+}
+
+/// [`decode_response`] plus the optional v2 request id. A v1 frame
+/// (no `"rid"`) decodes with `None`.
+pub fn decode_response_tagged(frame: &[u8]) -> Result<(api::Response, Option<u64>)> {
+    let text = std::str::from_utf8(frame).context("response frame is not UTF-8")?;
+    let v = decode(text)?;
+    let rid = opt_u64_field(&v, "rid")?;
+    Ok((response_from_json(&v)?, rid))
+}
+
+// ---------------------------------------------------------------------------
 // Framing
 // ---------------------------------------------------------------------------
 
@@ -1132,6 +1186,26 @@ pub fn read_frame_cancellable<R: Read>(
     stop: &dyn Fn() -> bool,
 ) -> Result<Option<Vec<u8>>> {
     read_frame_impl(r, Some(stop))
+}
+
+/// Incremental framing for nonblocking readers: inspect an
+/// accumulation buffer for one complete frame. `Ok(None)` means more
+/// bytes are needed; `Ok(Some(range))` is the payload's byte range
+/// within `buf` — it starts at 4 (past the length prefix), and the
+/// caller consumes `range.end` bytes total. A hostile length prefix
+/// is rejected here, before any payload accumulates.
+pub fn frame_in_buffer(buf: &[u8]) -> Result<Option<std::ops::Range<usize>>> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds the {MAX_FRAME}-byte limit");
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    Ok(Some(4..4 + len))
 }
 
 #[cfg(test)]
@@ -1400,6 +1474,65 @@ mod tests {
         ] {
             assert!(decode_response(bad.as_bytes()).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn tagged_encoding_is_v1_when_untagged_and_roundtrips_rids() {
+        let req = api::Request::Infer {
+            model: Some("tiny-cnn".to_string()),
+            image: vec![-128, 0, 127],
+        };
+        // rid: None is byte-identical to the v1 encoding
+        assert_eq!(encode_request_tagged(&req, None), encode_request(&req));
+        // a tagged frame carries the rid and round-trips it
+        let bytes = encode_request_tagged(&req, Some(42));
+        assert_eq!(
+            String::from_utf8(bytes.clone()).unwrap(),
+            r#"{"type":"infer","model":"tiny-cnn","image":[-128,0,127],"rid":42}"#
+        );
+        assert_eq!(decode_request_tagged(&bytes).unwrap(), (req.clone(), Some(42)));
+        // the v1 decoder ignores the rid entirely (forward compat)
+        assert_eq!(decode_request(&bytes).unwrap(), req);
+        // and a v1 frame decodes as untagged through the v2 decoder
+        assert_eq!(
+            decode_request_tagged(&encode_request(&req)).unwrap(),
+            (req, None)
+        );
+
+        let resp = api::Response::Error {
+            message: "nope".to_string(),
+        };
+        assert_eq!(encode_response_tagged(&resp, None), encode_response(&resp));
+        let bytes = encode_response_tagged(&resp, Some(u64::MAX));
+        assert_eq!(
+            decode_response_tagged(&bytes).unwrap(),
+            (resp.clone(), Some(u64::MAX))
+        );
+        assert_eq!(decode_response(&bytes).unwrap(), resp);
+        // a negative or non-integer rid is a typed error, not a panic
+        assert!(decode_request_tagged(br#"{"type":"stats","rid":-1}"#).is_err());
+        assert!(decode_response_tagged(br#"{"type":"error","message":"m","rid":"x"}"#).is_err());
+    }
+
+    #[test]
+    fn frame_in_buffer_handles_partial_complete_and_hostile() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        // partial prefixes need more bytes
+        for cut in 0..buf.len() {
+            assert_eq!(frame_in_buffer(&buf[..cut]).unwrap(), None, "cut {cut}");
+        }
+        // the complete buffer yields the payload range
+        let range = frame_in_buffer(&buf).unwrap().unwrap();
+        assert_eq!(&buf[range], b"hello");
+        // trailing bytes of the next frame don't confuse it
+        let mut two = buf.clone();
+        two.extend_from_slice(&buf[..3]);
+        assert_eq!(&two[frame_in_buffer(&two).unwrap().unwrap()], b"hello");
+        // a hostile length prefix errors before buffering a payload
+        let hostile = ((MAX_FRAME + 1) as u32).to_be_bytes();
+        let err = frame_in_buffer(&hostile).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
     }
 
     #[test]

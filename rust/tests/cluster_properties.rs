@@ -1,0 +1,422 @@
+//! Cluster-plane properties, end to end over real TCP: consistent
+//! model→backend assignment, replica placement, least-loaded dispatch
+//! under concurrency, and failover — both in-process (a backend's
+//! endpoint shuts down) and cross-process (a spawned `domino serve`
+//! backend is SIGKILLed mid-run). Every accepted inference must come
+//! back version-stamped and bit-exact against a local refcompute of
+//! the same (network, seed) — failover is only correct if the
+//! replacement backend serves the *identical* weights.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+use domino::coordinator::ArchConfig;
+use domino::model::zoo;
+use domino::serve::api::{Dispatcher, Request, Response};
+use domino::serve::client::Client;
+use domino::serve::net::NetServer;
+use domino::serve::{
+    ClusterConfig, ModelRegistry, Router, ServeConfig, Server, Service,
+};
+use domino::testutil::Rng;
+
+const MODEL: &str = "tiny-mlp";
+const SEED: u64 = 7;
+
+/// One in-process backend: empty registry, sim server, TCP endpoint.
+struct TestBackend {
+    service: Arc<Service>,
+    net: Option<NetServer>,
+    addr: String,
+}
+
+fn start_backend() -> TestBackend {
+    let registry = Arc::new(ModelRegistry::new());
+    let server = Server::start_multi(
+        ServeConfig {
+            workers: 1,
+            max_batch: 2,
+            queue_cap: 64,
+        },
+        registry,
+    )
+    .expect("start server");
+    let service = Arc::new(Service::new(server, ArchConfig::default()));
+    let net = NetServer::bind("127.0.0.1:0", Arc::clone(&service)).expect("bind");
+    let addr = net.local_addr().to_string();
+    TestBackend {
+        service,
+        net: Some(net),
+        addr,
+    }
+}
+
+/// A router with probing under test control (no background cadence).
+fn test_router(addrs: Vec<String>, replication: usize) -> Router {
+    Router::new(
+        addrs,
+        ClusterConfig {
+            replication,
+            health_interval: Duration::from_secs(3600),
+            request_timeout: Duration::from_secs(30),
+            health_timeout: Duration::from_secs(5),
+        },
+    )
+    .expect("router")
+}
+
+/// Reference logits for `(MODEL, SEED)` on the default arch — what
+/// every backend that (re-)loads the model must reproduce exactly.
+fn reference(images: &[Vec<i8>]) -> Vec<Vec<i8>> {
+    let net = zoo::lookup(MODEL).unwrap();
+    let reg = ModelRegistry::new();
+    let mv = reg
+        .load_seeded(MODEL, &net, ArchConfig::default(), Some(SEED))
+        .expect("local reference load");
+    images.iter().map(|i| mv.refcompute(i).unwrap()).collect()
+}
+
+fn loaded_on(addr: &str) -> BTreeSet<String> {
+    let mut c = Client::connect(addr).expect("connect");
+    c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    c.models()
+        .expect("list models")
+        .into_iter()
+        .map(|d| d.name)
+        .collect()
+}
+
+fn input_len() -> usize {
+    let net = zoo::lookup(MODEL).unwrap();
+    let reg = ModelRegistry::new();
+    reg.load_seeded(MODEL, &net, ArchConfig::default(), Some(SEED))
+        .unwrap()
+        .input_len()
+}
+
+#[test]
+fn routing_is_consistent_replicated_and_survives_backend_death() {
+    let mut backends: Vec<TestBackend> = (0..3).map(|_| start_backend()).collect();
+    let addrs: Vec<String> = backends.iter().map(|b| b.addr.clone()).collect();
+    let router = test_router(addrs.clone(), 2);
+
+    // Load through the router: exactly the replication-2 rendezvous
+    // owners get the model, the third backend stays empty.
+    match router.dispatch(Request::LoadSeeded {
+        model: MODEL.to_string(),
+        seed: SEED,
+        mapping: None,
+    }) {
+        Response::Loaded(stamp) => assert_eq!(&*stamp.name, MODEL),
+        other => panic!("load failed: {other:?}"),
+    }
+    let assignments = router.status().assignments;
+    let owners: BTreeSet<String> = assignments
+        .iter()
+        .find(|(m, _)| m == MODEL)
+        .map(|(_, o)| o.iter().cloned().collect())
+        .expect("model in assignments");
+    assert_eq!(owners.len(), 2, "replication 2 means 2 owners");
+    for addr in &addrs {
+        let has = loaded_on(addr).contains(MODEL);
+        assert_eq!(
+            has,
+            owners.contains(addr),
+            "{addr}: loaded must equal ownership (owners {owners:?})"
+        );
+    }
+
+    // Consistency: an independent router over the same addresses
+    // computes the identical assignment without any traffic.
+    let fresh = test_router(addrs.clone(), 2);
+    fresh.assume_models(&[MODEL.to_string()]);
+    let fresh_owners: BTreeSet<String> = fresh
+        .status()
+        .assignments
+        .iter()
+        .find(|(m, _)| m == MODEL)
+        .map(|(_, o)| o.iter().cloned().collect())
+        .unwrap();
+    assert_eq!(owners, fresh_owners, "assignment is a pure function of the table");
+
+    // Concurrent inferences through the router: all bit-exact and
+    // version-stamped, from several threads at once.
+    let ilen = input_len();
+    let mut rng = Rng::new(0xC1u64);
+    let images: Vec<Vec<i8>> = (0..16).map(|_| rng.i8_vec(ilen, 31)).collect();
+    let expected = reference(&images);
+    let router = Arc::new(router);
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let router = Arc::clone(&router);
+        let images = images.clone();
+        let expected = expected.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in (t..images.len()).step_by(4) {
+                match router.dispatch(Request::Infer {
+                    model: Some(MODEL.to_string()),
+                    image: images[i].clone(),
+                }) {
+                    Response::Infer(r) => {
+                        assert_eq!(r.logits, expected[i], "logits diverge on image {i}");
+                        let stamp = r.model.expect("version-stamped");
+                        assert_eq!(&*stamp.name, MODEL);
+                        assert!(stamp.version >= 1);
+                    }
+                    other => panic!("infer {i} failed: {other:?}"),
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // every routed call landed on an owner (dispatch is least-loaded
+    // *among owners*, never a non-owner)
+    let st = router.status();
+    let owner_served: u64 = st
+        .backends
+        .iter()
+        .filter(|b| owners.contains(&b.addr))
+        .map(|b| b.served)
+        .sum();
+    assert!(
+        owner_served >= images.len() as u64,
+        "owners served {owner_served} < {} routed infers",
+        images.len()
+    );
+
+    // Kill one owner (its endpoint shuts down mid-cluster). The next
+    // infer fails over to the surviving replica; after a health pass
+    // the model is re-loaded onto a new owner from the recorded spec.
+    let dead_addr = owners.iter().next().unwrap().clone();
+    let idx = backends.iter().position(|b| b.addr == dead_addr).unwrap();
+    backends[idx].net.take().unwrap().shutdown().unwrap();
+
+    for i in 0..4 {
+        match router.dispatch(Request::Infer {
+            model: Some(MODEL.to_string()),
+            image: images[i].clone(),
+        }) {
+            Response::Infer(r) => assert_eq!(
+                r.logits, expected[i],
+                "failover answer diverges on image {i}"
+            ),
+            other => panic!("infer after backend death failed: {other:?}"),
+        }
+    }
+
+    router.health_pass();
+    let st = router.status();
+    let dead = st.backends.iter().find(|b| b.addr == dead_addr).unwrap();
+    assert!(!dead.alive, "killed backend must probe dead");
+    let new_owners: BTreeSet<String> = st
+        .assignments
+        .iter()
+        .find(|(m, _)| m == MODEL)
+        .map(|(_, o)| o.iter().cloned().collect())
+        .unwrap();
+    assert_eq!(new_owners.len(), 2, "replication restored over survivors");
+    assert!(!new_owners.contains(&dead_addr));
+    for addr in &new_owners {
+        assert!(
+            loaded_on(addr).contains(MODEL),
+            "{addr} must have the model after reconcile"
+        );
+    }
+    // and the re-loaded copy serves the identical weights
+    match router.dispatch(Request::Infer {
+        model: Some(MODEL.to_string()),
+        image: images[0].clone(),
+    }) {
+        Response::Infer(r) => assert_eq!(r.logits, expected[0]),
+        other => panic!("infer after reconcile failed: {other:?}"),
+    }
+
+    // cleanup: drop the router first so pooled conns close, then
+    // shut the surviving backends down
+    drop(router);
+    for mut b in backends {
+        if let Some(net) = b.net.take() {
+            net.shutdown().unwrap();
+        }
+        if let Ok(service) = Arc::try_unwrap(b.service) {
+            service.shutdown().unwrap();
+        }
+    }
+}
+
+#[test]
+fn drained_backend_finishes_and_leaves_the_owner_set() {
+    let mut backends: Vec<TestBackend> = (0..3).map(|_| start_backend()).collect();
+    let addrs: Vec<String> = backends.iter().map(|b| b.addr.clone()).collect();
+    let router = test_router(addrs.clone(), 2);
+    match router.dispatch(Request::LoadSeeded {
+        model: MODEL.to_string(),
+        seed: SEED,
+        mapping: None,
+    }) {
+        Response::Loaded(_) => {}
+        other => panic!("load failed: {other:?}"),
+    }
+    let owners: Vec<String> = router
+        .status()
+        .assignments
+        .iter()
+        .find(|(m, _)| m == MODEL)
+        .map(|(_, o)| o.clone())
+        .unwrap();
+
+    // drain the primary: no new work routes there, the model moves
+    router
+        .drain(&owners[0], Duration::from_secs(10))
+        .expect("drain known backend");
+    let st = router.status();
+    let new_owners: Vec<String> = st
+        .assignments
+        .iter()
+        .find(|(m, _)| m == MODEL)
+        .map(|(_, o)| o.clone())
+        .unwrap();
+    assert!(!new_owners.contains(&owners[0]), "drained backend still an owner");
+    assert_eq!(new_owners.len(), 2);
+
+    // traffic still flows, bit-exact
+    let ilen = input_len();
+    let mut rng = Rng::new(0xD2u64);
+    let images: Vec<Vec<i8>> = (0..4).map(|_| rng.i8_vec(ilen, 31)).collect();
+    let expected = reference(&images);
+    for (i, img) in images.iter().enumerate() {
+        match router.dispatch(Request::Infer {
+            model: Some(MODEL.to_string()),
+            image: img.clone(),
+        }) {
+            Response::Infer(r) => assert_eq!(r.logits, expected[i]),
+            other => panic!("infer after drain failed: {other:?}"),
+        }
+    }
+    assert!(
+        router.drain("127.0.0.1:1", Duration::from_secs(1)).is_err(),
+        "draining an unknown address must error"
+    );
+
+    drop(router);
+    for mut b in backends.drain(..) {
+        if let Some(net) = b.net.take() {
+            net.shutdown().unwrap();
+        }
+        if let Ok(service) = Arc::try_unwrap(b.service) {
+            service.shutdown().unwrap();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-process failover: spawned `domino serve` backends, one killed
+// with SIGKILL mid-run.
+
+/// Kills the children on drop so a failing assertion never orphans
+/// backend processes.
+struct Children(Vec<std::process::Child>);
+
+impl Drop for Children {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+fn spawn_backend() -> (std::process::Child, String) {
+    use std::io::BufRead;
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_domino"))
+        .args([
+            "serve",
+            "--backend",
+            "sim",
+            "--models",
+            "",
+            "--workers",
+            "1",
+            "--listen",
+            "127.0.0.1:0",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::inherit())
+        .spawn()
+        .expect("spawn backend");
+    let stdout = child.stdout.take().expect("stdout piped");
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        if reader.read_line(&mut line).expect("read child stdout") == 0 {
+            panic!("backend exited before printing its listen address");
+        }
+        if let Some(rest) = line.strip_prefix("listening on ") {
+            break rest.split_whitespace().next().expect("address token").to_string();
+        }
+    };
+    // leak the reader thread-lessly: keep the pipe open for the
+    // child's later prints by parking the reader in a drain thread
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while reader.read_line(&mut sink).map(|n| n > 0).unwrap_or(false) {
+            sink.clear();
+        }
+    });
+    (child, addr)
+}
+
+#[test]
+fn killing_a_backend_process_mid_run_loses_no_accepted_request() {
+    let (c1, a1) = spawn_backend();
+    let (c2, a2) = spawn_backend();
+    let mut children = Children(vec![c1, c2]);
+
+    let router = test_router(vec![a1, a2], 2);
+    match router.dispatch(Request::LoadSeeded {
+        model: MODEL.to_string(),
+        seed: SEED,
+        mapping: None,
+    }) {
+        Response::Loaded(_) => {}
+        other => panic!("load failed: {other:?}"),
+    }
+
+    let ilen = input_len();
+    let mut rng = Rng::new(0xF0u64);
+    let images: Vec<Vec<i8>> = (0..30).map(|_| rng.i8_vec(ilen, 31)).collect();
+    let expected = reference(&images);
+
+    for (i, img) in images.iter().enumerate() {
+        if i == 10 {
+            // SIGKILL one backend between requests: no in-flight work
+            // is lost, and everything after must fail over
+            children.0[0].kill().expect("kill backend");
+            children.0[0].wait().expect("reap backend");
+        }
+        match router.dispatch(Request::Infer {
+            model: Some(MODEL.to_string()),
+            image: img.clone(),
+        }) {
+            Response::Infer(r) => {
+                assert_eq!(
+                    r.logits, expected[i],
+                    "request {i} diverged from refcompute"
+                );
+                let stamp = r.model.expect("version-stamped");
+                assert_eq!(&*stamp.name, MODEL);
+            }
+            other => panic!("request {i} was not answered: {other:?}"),
+        }
+    }
+
+    let st = router.status();
+    assert!(
+        st.backends.iter().any(|b| !b.alive),
+        "the killed backend must be marked dead after the transport error"
+    );
+}

@@ -25,6 +25,7 @@ fn fast_net_cfg() -> NetConfig {
         max_conns: 64,
         poll: Duration::from_millis(20),
         write_timeout: Duration::from_millis(500),
+        ..NetConfig::default()
     }
 }
 
@@ -307,6 +308,64 @@ fn mid_call_timeout_poisons_the_client_until_reconnect() {
 
     drop(client);
     slow.join().unwrap();
+}
+
+#[test]
+fn reconnect_recovers_a_poisoned_client_in_place() {
+    use domino::serve::api::InferReply;
+
+    // a fake server whose FIRST connection is sluggish (to poison the
+    // client) and whose second connection answers promptly — the same
+    // address throughout, so Client::reconnect() can recover in place
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        for i in 0..2 {
+            let (mut conn, _) = listener.accept().unwrap();
+            while let Ok(Some(_)) = wire::read_frame(&mut conn) {
+                if i == 0 {
+                    std::thread::sleep(Duration::from_millis(300));
+                }
+                let resp = Response::Infer(InferReply {
+                    logits: vec![1, -2, 3],
+                    model: None,
+                    queue_us: 0,
+                    exec_us: 0,
+                });
+                if wire::write_frame(&mut conn, &wire::encode_response(&resp)).is_err() {
+                    break;
+                }
+            }
+        }
+    });
+
+    let mut client = Client::connect(&addr).unwrap();
+    client
+        .set_read_timeout(Some(Duration::from_millis(50)))
+        .unwrap();
+
+    // poison: the response outlives the read timeout
+    let err = client.infer(Some("m"), vec![0; 4]).unwrap_err();
+    assert!(client.is_poisoned(), "timeout must poison: {err:#}");
+    let msg = format!("{:#}", client.infer(Some("m"), vec![0; 4]).unwrap_err());
+    assert!(msg.contains("poisoned"), "{msg}");
+
+    // reconnect IN PLACE: same Client value, fresh connection; the old
+    // connection's stale in-flight response is stranded on the old
+    // socket and can no longer misattribute
+    client.reconnect().unwrap();
+    assert!(!client.is_poisoned());
+    // the fake's second connection still needs the first one's delayed
+    // write to finish before it is accepted; wait generously
+    client
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let reply = client.infer(Some("m"), vec![0; 4]).unwrap();
+    assert_eq!(reply.logits, vec![1, -2, 3]);
+    assert!(!client.is_poisoned());
+
+    drop(client);
+    server.join().unwrap();
 }
 
 #[test]

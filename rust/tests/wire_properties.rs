@@ -450,3 +450,256 @@ fn wire_json_matches_manifest_and_script_consumers() {
     assert_eq!(wire::str_field(m, "placement").unwrap(), "serpentine");
     assert_eq!(wire::u64_field(m, "tiles").unwrap(), 22);
 }
+
+// ---------------------------------------------------------------------------
+// Protocol v2 back-compat: these run against the real nonblocking
+// `NetServer`, fronted by a stub dispatcher whose `Stats` calls park
+// on a latch — so "a request is still in flight" is a deterministic
+// state, not a sleep race.
+
+mod v2 {
+    use super::*;
+    use domino::serve::client::Client;
+    use domino::serve::net::NetServer;
+    use domino::serve::Dispatcher;
+    use std::net::{TcpListener, TcpStream};
+    use std::sync::{Condvar, Mutex};
+    use std::time::Duration;
+
+    struct LatchDispatcher {
+        blocked: Mutex<bool>,
+        cv: Condvar,
+    }
+
+    impl LatchDispatcher {
+        fn new(blocked: bool) -> Self {
+            Self {
+                blocked: Mutex::new(blocked),
+                cv: Condvar::new(),
+            }
+        }
+
+        fn release(&self) {
+            *self.blocked.lock().unwrap() = false;
+            self.cv.notify_all();
+        }
+    }
+
+    impl Dispatcher for LatchDispatcher {
+        fn dispatch(&self, req: Request) -> Response {
+            match req {
+                // the deterministic "slow" op: parks until release()
+                // (bounded so a test bug can't hang the suite)
+                Request::Stats => {
+                    let mut b = self.blocked.lock().unwrap();
+                    while *b {
+                        let (g, t) = self
+                            .cv
+                            .wait_timeout(b, Duration::from_secs(30))
+                            .unwrap();
+                        b = g;
+                        if t.timed_out() {
+                            break;
+                        }
+                    }
+                    Response::Stats(StatsReply {
+                        served: 1,
+                        rejected: 0,
+                        failed: 0,
+                        conns_refused: 0,
+                        trace_rejected: 0,
+                        models: vec![],
+                    })
+                }
+                Request::ListModels => Response::Models(vec![]),
+                other => Response::Error {
+                    message: format!("stub does not serve {other:?}"),
+                },
+            }
+        }
+    }
+
+    fn read_tagged(s: &mut TcpStream) -> (Response, Option<u64>) {
+        let frame = wire::read_frame(s)
+            .expect("read frame")
+            .expect("connection open");
+        wire::decode_response_tagged(&frame).expect("decode response")
+    }
+
+    #[test]
+    fn v1_untagged_requests_are_answered_in_order_even_when_the_first_is_slow() {
+        let d = Arc::new(LatchDispatcher::new(true));
+        let net = NetServer::bind("127.0.0.1:0", Arc::clone(&d)).unwrap();
+        let mut s = TcpStream::connect(net.local_addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+        // two plain v1 frames back-to-back, no rids anywhere: the slow
+        // Stats first, the instant ListModels second. The endpoint must
+        // hold the finished ListModels reply until Stats completes.
+        wire::write_frame(&mut s, &wire::encode_request(&Request::Stats)).unwrap();
+        wire::write_frame(&mut s, &wire::encode_request(&Request::ListModels)).unwrap();
+        let unlatch = std::thread::spawn({
+            let d = Arc::clone(&d);
+            move || {
+                std::thread::sleep(Duration::from_millis(150));
+                d.release();
+            }
+        });
+
+        let (first, rid) = read_tagged(&mut s);
+        assert_eq!(rid, None, "v1 requests get untagged responses");
+        assert!(matches!(first, Response::Stats(_)), "got {first:?}");
+        let (second, rid) = read_tagged(&mut s);
+        assert_eq!(rid, None);
+        assert!(matches!(second, Response::Models(_)), "got {second:?}");
+
+        unlatch.join().unwrap();
+        drop(s);
+        net.shutdown().unwrap();
+    }
+
+    #[test]
+    fn duplicate_rids_get_typed_errors_and_fresh_rids_complete_out_of_order() {
+        let d = Arc::new(LatchDispatcher::new(true));
+        let net = NetServer::bind("127.0.0.1:0", Arc::clone(&d)).unwrap();
+        let mut s = TcpStream::connect(net.local_addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+        // rid 7: parks in the dispatcher. rid 7 again while in flight:
+        // a typed error tagged 7, and the duplicate is NOT dispatched.
+        wire::write_frame(
+            &mut s,
+            &wire::encode_request_tagged(&Request::Stats, Some(7)),
+        )
+        .unwrap();
+        wire::write_frame(
+            &mut s,
+            &wire::encode_request_tagged(&Request::ListModels, Some(7)),
+        )
+        .unwrap();
+        let (resp, rid) = read_tagged(&mut s);
+        assert_eq!(rid, Some(7));
+        match resp {
+            Response::Error { message } => assert!(
+                message.contains("already in flight"),
+                "unexpected error: {message}"
+            ),
+            other => panic!("expected a typed error for the duplicate, got {other:?}"),
+        }
+
+        // rid 9 completes and is delivered while rid 7 is still parked:
+        // out-of-order completion, no desync.
+        wire::write_frame(
+            &mut s,
+            &wire::encode_request_tagged(&Request::ListModels, Some(9)),
+        )
+        .unwrap();
+        let (resp, rid) = read_tagged(&mut s);
+        assert_eq!(rid, Some(9));
+        assert!(matches!(resp, Response::Models(_)), "got {resp:?}");
+
+        // release the latch: rid 7 finally answers, correctly tagged
+        d.release();
+        let (resp, rid) = read_tagged(&mut s);
+        assert_eq!(rid, Some(7));
+        assert!(matches!(resp, Response::Stats(_)), "got {resp:?}");
+
+        // the connection is still perfectly usable for v1 traffic
+        wire::write_frame(&mut s, &wire::encode_request(&Request::ListModels)).unwrap();
+        let (resp, rid) = read_tagged(&mut s);
+        assert_eq!(rid, None);
+        assert!(matches!(resp, Response::Models(_)));
+
+        drop(s);
+        net.shutdown().unwrap();
+    }
+
+    #[test]
+    fn pipelined_client_rejects_unknown_rids_and_poisons_on_desync() {
+        // a hand-rolled server that answers with a rid the client
+        // never issued — the client must refuse to guess
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let _req = wire::read_frame(&mut s).unwrap().unwrap();
+            wire::write_frame(
+                &mut s,
+                &wire::encode_response_tagged(&Response::Models(vec![]), Some(999)),
+            )
+            .unwrap();
+            // hold the socket open until the client is done failing
+            let _ = wire::read_frame(&mut s);
+        });
+
+        let mut c = Client::connect(&addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let rid = c.submit(&Request::ListModels).unwrap();
+
+        // awaiting an id that was never submitted: typed error, no
+        // poison, nothing read off the wire
+        let err = c.await_response(rid + 100).unwrap_err().to_string();
+        assert!(err.contains("not outstanding"), "{err}");
+        assert!(!c.is_poisoned());
+
+        // the server's answer carries an unknown rid: desync → poison
+        let err = c.await_response(rid).unwrap_err().to_string();
+        assert!(err.contains("desynchronized"), "{err}");
+        assert!(c.is_poisoned());
+
+        drop(c);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn tagged_roundtrips_and_untagged_encoding_is_v1() {
+        for_all("tagged_roundtrip", 200, |rng| {
+            let req = Request::LoadSeeded {
+                model: tricky_name(rng),
+                seed: tricky_u64(rng),
+                mapping: tricky_mapping_spec(rng),
+            };
+            let rid = tricky_u64(rng);
+            let bytes = wire::encode_request_tagged(&req, Some(rid));
+            let (back, got) = wire::decode_request_tagged(&bytes).unwrap();
+            assert_eq!(back, req);
+            assert_eq!(got, Some(rid));
+            // untagged == the exact v1 bytes, and the v2 decoder reads
+            // v1 bytes as rid-less
+            let v1 = wire::encode_request(&req);
+            assert_eq!(wire::encode_request_tagged(&req, None), v1);
+            let (back, got) = wire::decode_request_tagged(&v1).unwrap();
+            assert_eq!(back, req);
+            assert_eq!(got, None);
+        });
+    }
+
+    #[test]
+    fn corrupted_tagged_frames_never_panic() {
+        for_all("tagged_corruption", 300, |rng| {
+            let req = Request::Trace {
+                model: tricky_name(rng),
+                image_seed: tricky_u64(rng),
+                window: tricky_u64(rng),
+            };
+            let rid = if rng.chance(0.5) {
+                Some(tricky_u64(rng))
+            } else {
+                None
+            };
+            let mut bytes = wire::encode_request_tagged(&req, rid);
+            let at = rng.below(bytes.len());
+            bytes[at] = (rng.next_u64() & 0xFF) as u8;
+            let _ = wire::decode_request_tagged(&bytes); // must not panic
+            let _ = wire::frame_in_buffer(&bytes); // nor the frame scanner
+
+            let resp = Response::Error {
+                message: tricky_name(rng),
+            };
+            let mut rbytes = wire::encode_response_tagged(&resp, rid);
+            let at = rng.below(rbytes.len());
+            rbytes[at] = (rng.next_u64() & 0xFF) as u8;
+            let _ = wire::decode_response_tagged(&rbytes); // must not panic
+        });
+    }
+}
