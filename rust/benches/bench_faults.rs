@@ -1,0 +1,266 @@
+//! Fault-plane bench: what deterministic fault injection costs and
+//! how fast the serve plane recovers from it, recorded into
+//! `BENCH_faults.json`.
+//!
+//!     cargo bench --bench bench_faults                     # full run
+//!     cargo bench --bench bench_faults -- --smoke          # CI leg
+//!     cargo bench --bench bench_faults -- --json BENCH_faults.json
+//!
+//! Two halves:
+//!
+//! * **Engine sweep** — per fault kind (dead tile, stuck-at tile,
+//!   link bit-flip, dropped-flit, slot-windowed transient), the
+//!   armed engine's per-image throughput next to the clean engine's,
+//!   plus what actually fired (fires, corrupted psum lanes) and the
+//!   output verdict against the clean run. The empty-plan row is the
+//!   seam's own overhead: an armed-but-empty injector must track the
+//!   NoFaults engine closely (and stays bit-exact — `engine_perf`
+//!   gates that).
+//! * **Serve recovery** — the end-to-end drill through a real
+//!   `Service`: clean throughput, detection latency (`FaultInject`'s
+//!   seeded diagnostic), throughput while serving silently-corrupt
+//!   responses, heal latency (`Canary {heal}` = canary + masked
+//!   re-map + verifying canary), and post-heal throughput with every
+//!   response checked bit-exact against refcompute.
+//!
+//! Correctness violations (a heal that does not heal, a post-heal
+//! response that is not bit-exact) exit non-zero; timing numbers are
+//! recorded but not gated.
+
+use std::sync::Arc;
+
+use domino::benchutil::{arg_value, stats, time_n, JsonObj};
+use domino::coordinator::{ArchConfig, Compiler};
+use domino::model::zoo;
+use domino::serve::api::{Dispatcher, Request, Response};
+use domino::serve::{ModelRegistry, ServeConfig, Server, Service};
+use domino::sim::fault::corruption_verdict;
+use domino::sim::{CaptureMode, FaultPlan, Simulator};
+use domino::testutil::Rng;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let json_path = arg_value(&argv, "--json");
+    println!(
+        "fault-plane bench ({}) — injection overhead + detect/heal recovery\n",
+        if smoke { "smoke" } else { "full" }
+    );
+
+    let mut violations = 0usize;
+    let mut engine_json: Vec<String> = Vec::new();
+
+    // ---- engine sweep: per-kind cost and blast radius ----------------
+    let sweep_models: &[&str] = if smoke {
+        &["tiny-cnn"]
+    } else {
+        &["tiny-cnn", "tiny-resnet"]
+    };
+    let iters = if smoke { 3 } else { 7 };
+    for name in sweep_models {
+        let net = zoo::by_name(name).unwrap();
+        let program = Compiler::default().compile(&net).unwrap();
+        let mut rng = Rng::new(0xFA);
+        let input = rng.i8_vec(net.input_len(), 31);
+        let coords = program.tile_coords();
+        let (c0, c1) = (coords[0], coords[coords.len() / 2]);
+
+        let mut clean = Simulator::with_capture(&program, CaptureMode::Final);
+        let clean_out = clean.run_image(&input).unwrap();
+        let base = stats(time_n(iters, || {
+            std::hint::black_box(clean.run_image(&input).unwrap());
+        }));
+        println!(
+            "{name:<14} {:<22} {:>10.3?}/img",
+            "clean (NoFaults)", base.median
+        );
+
+        let plans: Vec<(&str, FaultPlan)> = vec![
+            ("empty plan", FaultPlan::default()),
+            ("dead tile", FaultPlan::new().dead_tile(c0)),
+            ("stuck-at tile", FaultPlan::new().stuck_tile(c0, 7)),
+            ("link bit-flip", FaultPlan::new().link_flip(c1, 3)),
+            ("link dropped-flit", FaultPlan::new().link_drop(c1)),
+            (
+                "transient (slots 0-32)",
+                FaultPlan::new().stuck_tile(c0, 7).during(0, 32),
+            ),
+        ];
+        for (kind, plan) in plans {
+            let mut sim = Simulator::with_faults(&program, plan);
+            sim.set_capture(CaptureMode::Final);
+            let out = sim.run_image(&input).unwrap();
+            let verdict = corruption_verdict(&out.scores, &clean_out.scores);
+            let t = stats(time_n(iters, || {
+                std::hint::black_box(sim.run_image(&input).unwrap());
+            }));
+            let report = sim.fault_report();
+            let overhead = t.median.as_secs_f64() / base.median.as_secs_f64();
+            println!(
+                "{name:<14} {kind:<22} {:>10.3?}/img  ({overhead:.2}x clean)  \
+                 fires {} lanes {}  {}",
+                t.median,
+                report.total_fires(),
+                report.total_lanes(),
+                if verdict.corrupted {
+                    format!("{}/{} outputs wrong", verdict.mismatched, verdict.outputs)
+                } else {
+                    "outputs clean".to_string()
+                }
+            );
+            let mut w = JsonObj::new();
+            w.str_field("model", name)
+                .str_field("kind", kind)
+                .f64_field("clean_s_per_img", base.median.as_secs_f64())
+                .f64_field("faulty_s_per_img", t.median.as_secs_f64())
+                .f64_field("overhead_vs_clean", overhead)
+                .u64_field("fires", report.total_fires())
+                .u64_field("lanes_corrupted", report.total_lanes())
+                .bool_field("corrupted", verdict.corrupted)
+                .u64_field("outputs_wrong", verdict.mismatched as u64)
+                .u64_field("outputs_total", verdict.outputs as u64);
+            engine_json.push(w.finish());
+        }
+        println!();
+    }
+
+    // ---- serve recovery: detect -> degrade -> re-map -> verify -------
+    const MODEL: &str = "tiny-mlp";
+    const SEED: u64 = 42;
+    let n = if smoke { 8 } else { 32 };
+
+    let registry = Arc::new(ModelRegistry::new());
+    let server = Server::start_multi(
+        ServeConfig {
+            workers: 2,
+            max_batch: 4,
+            queue_cap: 64,
+        },
+        registry,
+    )
+    .expect("start server");
+    let service = Service::new(server, ArchConfig::default());
+    let stamp = match service.dispatch(Request::LoadSeeded {
+        model: MODEL.to_string(),
+        seed: SEED,
+        mapping: None,
+    }) {
+        Response::Loaded(stamp) => stamp,
+        other => panic!("load failed: {other:?}"),
+    };
+    let reg = service.server().registry().expect("sim registry");
+    let mv = reg.get(&stamp.name).expect("loaded model");
+    let ilen = mv.input_len();
+    let bad = mv.program().tile_coords()[0];
+    let mut rng = Rng::new(0xFA_2);
+    let images: Vec<Vec<i8>> = (0..n).map(|_| rng.i8_vec(ilen, 31)).collect();
+    let expected: Vec<Vec<i8>> = images.iter().map(|i| mv.refcompute(i).unwrap()).collect();
+
+    let infer_all = |label: &str, check: bool| -> (f64, usize) {
+        let t0 = std::time::Instant::now();
+        let mut wrong = 0usize;
+        for (i, img) in images.iter().enumerate() {
+            match service.dispatch(Request::Infer {
+                model: Some(MODEL.to_string()),
+                image: img.clone(),
+            }) {
+                Response::Infer(r) => {
+                    if r.logits != expected[i] {
+                        wrong += 1;
+                        assert!(
+                            !check,
+                            "{label}: response {i} not bit-exact after recovery"
+                        );
+                    }
+                }
+                other => panic!("{label}: infer {i} failed: {other:?}"),
+            }
+        }
+        (n as f64 / t0.elapsed().as_secs_f64(), wrong)
+    };
+
+    let (clean_rps, _) = infer_all("clean", true);
+    println!("serve {MODEL}: clean {clean_rps:.0} req/s over {n} requests");
+
+    let plan = FaultPlan::new().stuck_tile(bad, 7).spec();
+    let t_detect = std::time::Instant::now();
+    let rep = match service.dispatch(Request::FaultInject {
+        model: MODEL.to_string(),
+        plan,
+    }) {
+        Response::Fault(rep) => rep,
+        other => panic!("fault inject failed: {other:?}"),
+    };
+    let detect_us = t_detect.elapsed().as_micros() as u64;
+    println!(
+        "armed stuck-at on tile {bad}: diagnostic {} fire(s), {}/{} outputs wrong, \
+         detected in {detect_us} us",
+        rep.fires, rep.mismatched, rep.outputs
+    );
+    if !rep.corrupted {
+        eprintln!("fault-plane bench: diagnostic saw no corruption — nothing to recover from");
+        violations += 1;
+    }
+
+    let (faulty_rps, wrong_under_fault) = infer_all("under-fault", false);
+    println!(
+        "under fault: {faulty_rps:.0} req/s, {wrong_under_fault}/{n} responses silently wrong \
+         (all structurally valid)"
+    );
+
+    let t_heal = std::time::Instant::now();
+    let canary = match service.dispatch(Request::Canary {
+        model: MODEL.to_string(),
+        seed: 0xCA11A2,
+        heal: true,
+    }) {
+        Response::Canary(c) => c,
+        other => panic!("canary heal failed: {other:?}"),
+    };
+    let heal_us = t_heal.elapsed().as_micros() as u64;
+    println!(
+        "heal: canary {} -> remapped {} healed {} (v{}) in {heal_us} us",
+        if canary.ok { "PASS" } else { "FAIL" },
+        canary.remapped,
+        canary.healed,
+        canary.version
+    );
+    if !(canary.remapped && canary.healed) {
+        eprintln!("fault-plane bench: heal failed to recover the model");
+        violations += 1;
+    }
+
+    let (healed_rps, _) = infer_all("post-heal", true);
+    println!("post-heal: {healed_rps:.0} req/s, all {n} responses bit-exact (v{})", canary.version);
+
+    service.shutdown().expect("shutdown");
+
+    if let Some(path) = json_path {
+        let mut serve_json = JsonObj::new();
+        serve_json
+            .str_field("model", MODEL)
+            .u64_field("requests_per_phase", n as u64)
+            .f64_field("clean_req_per_s", clean_rps)
+            .f64_field("under_fault_req_per_s", faulty_rps)
+            .f64_field("post_heal_req_per_s", healed_rps)
+            .u64_field("detect_us", detect_us)
+            .u64_field("heal_us", heal_us)
+            .u64_field("diag_fires", rep.fires)
+            .u64_field("wrong_under_fault", wrong_under_fault as u64)
+            .bool_field("healed", canary.remapped && canary.healed)
+            .u64_field("healed_version", canary.version);
+        let mut doc = JsonObj::new();
+        doc.str_field("bench", "faults")
+            .str_field("mode", if smoke { "smoke" } else { "full" })
+            .bool_field("pass", violations == 0)
+            .raw_field("engine", &domino::benchutil::json_array(&engine_json))
+            .raw_field("serve", &serve_json.finish());
+        domino::benchutil::write_json(&path, &doc.finish()).expect("write bench json");
+    }
+
+    if violations > 0 {
+        eprintln!("bench_faults: {violations} correctness violation(s)");
+        std::process::exit(1);
+    }
+    println!("\nfault-plane bench: PASS");
+}

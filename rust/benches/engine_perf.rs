@@ -584,6 +584,37 @@ fn main() {
                 fresh.stats(),
                 "{name}: counters diverged from the pre-refactor baseline"
             );
+
+            // The fault seam must be invisible when empty: an engine
+            // threaded with an empty FaultInjector must be
+            // bit-identical to the NoFaults engine — scores, latency,
+            // and every counter. On divergence, both runs repeat
+            // under a flight recorder and the first divergent event
+            // (tile, slot, kind) is printed via flight::diff, so the
+            // regression is located, not merely detected.
+            use domino::sim::{flight, FaultInjector, FaultPlan, FlightRecorder, RecorderConfig};
+            let mut faulty = Simulator::with_faults(&program, FaultPlan::default());
+            faulty.set_capture(CaptureMode::Final);
+            let f_out = faulty.run_image(&pool[0]).unwrap();
+            let identical = f_out.scores == new_out.scores
+                && f_out.latency_cycles == new_out.latency_cycles
+                && faulty.stats() == fresh.stats();
+            if !identical {
+                let mut rec_clean =
+                    Simulator::with_recorder(&program, RecorderConfig::default());
+                rec_clean.set_capture(CaptureMode::Final);
+                rec_clean.run_image(&pool[0]).unwrap();
+                let mut rec_faulty = Simulator::with_instruments(
+                    &program,
+                    FlightRecorder::new(RecorderConfig::default()),
+                    FaultInjector::new(FaultPlan::default()),
+                );
+                rec_faulty.set_capture(CaptureMode::Final);
+                rec_faulty.run_image(&pool[0]).unwrap();
+                let d = flight::diff(&rec_clean.recording(), &rec_faulty.recording());
+                eprintln!("{}", d.render());
+                panic!("{name}: empty fault plan diverged from the NoFaults engine");
+            }
         }
 
         let iters = if name == "resnet18-cifar10" {

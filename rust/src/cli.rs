@@ -181,7 +181,32 @@ COMMANDS:
   cluster status --backends a,b,c [--models a,b,c]
                          probe each backend once and print liveness,
                          loaded models, and the model->owner assignments
-                         the router would use
+                         the router would use; a canary inference per
+                         discovered model distinguishes `canary-failed`
+                         (socket answers, outputs silently wrong) from
+                         `DEAD` (socket down)
+  fault inject <model> --plan SPEC [--addr HOST:PORT] [--heal]
+        [--seed S] [--canary-seed S]
+                         arm a deterministic fault plan (SPEC: `;`-joined
+                         sites — tile:<chip>:<r>:<c>:stuck:<v>|dead,
+                         link:<chip>:<r>:<c>:flip:<bit>|drop, optional
+                         @from-to slot window; empty SPEC disarms) on a
+                         live endpoint (--addr) or a local one-shot
+                         service, and print the seeded diagnostic report
+                         (fires, corrupted lanes, outputs wrong vs
+                         refcompute); --heal follows with a healing
+                         canary that re-maps around the fault sites
+  fault canary <model> [--heal] [--addr HOST:PORT] [--canary-seed S]
+                         one seeded sentinel inference checked
+                         bit-for-bit against the refcompute oracle —
+                         the detector for silent corruption; --heal
+                         re-maps around armed fault sites on failure
+  fault storm [--models a,b,c] [--seed S]
+                         end-to-end drill: per model, arm a stuck-at
+                         tile fault, prove the corruption is silent,
+                         detect + heal via canary, report recovery
+                         times; exits non-zero if anything stays
+                         corrupt (default models: the tiny trio)
   models [list|info <m>] [--json]
                          list zoo models (params/MACs/shapes), or show
                          one model in detail incl. its mapping stats at

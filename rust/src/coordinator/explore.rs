@@ -25,7 +25,7 @@
 use anyhow::Result;
 
 use crate::coordinator::mapper::{ArchConfig, Compiler, PoolingScheme};
-use crate::coordinator::plan::Placement;
+use crate::coordinator::plan::{Placement, TileMask};
 use crate::energy::{energy_of, CimModel};
 use crate::model::Network;
 use crate::noc::flit;
@@ -269,6 +269,58 @@ pub fn explore(
     Ok(candidates)
 }
 
+/// [`score`] with a [`TileMask`] feasibility constraint: the candidate
+/// is compiled around the masked tiles/links, so its tile count,
+/// timing and energy include the routing-around penalty.
+pub fn score_masked(
+    net: &Network,
+    base: &ArchConfig,
+    choice: MappingChoice,
+    mask: &TileMask,
+) -> Result<Candidate> {
+    let arch = choice.apply(*base);
+    let program = Compiler::new(arch).compile_analysis_masked(net, mask)?;
+    let s = analyze(&program)?;
+    Ok(Candidate {
+        choice,
+        arch,
+        tiles: s.tiles,
+        chips: s.chips,
+        latency_cycles: s.latency_cycles,
+        period_cycles: s.period_cycles,
+        images_per_s: s.images_per_s,
+        energy_per_image_j: s.energy_per_image_j,
+        worst_link_utilization: s.worst_link_utilization,
+        feasible: s.feasible,
+    })
+}
+
+/// [`explore`] under a [`TileMask`]: masked resources are a hard
+/// feasibility constraint. A candidate whose masked placement cannot
+/// converge is dropped from the table (not an error — the rest of the
+/// sweep still ranks); every returned candidate's scores already
+/// include its routing-around penalty. An empty mask reproduces
+/// [`explore`] exactly.
+pub fn explore_masked(
+    net: &Network,
+    base: &ArchConfig,
+    bounds: &ExploreBounds,
+    objective: Objective,
+    mask: &TileMask,
+) -> Result<Vec<Candidate>> {
+    if mask.is_empty() {
+        return explore(net, base, bounds, objective);
+    }
+    let mut candidates = Vec::new();
+    for c in enumerate(base, bounds) {
+        if let Ok(cand) = score_masked(net, base, c, mask) {
+            candidates.push(cand);
+        }
+    }
+    rank(&mut candidates, objective);
+    Ok(candidates)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -340,6 +392,41 @@ mod tests {
             .unwrap();
         assert!(dup.tiles > block.tiles);
         assert!(dup.period_cycles < block.period_cycles);
+    }
+
+    #[test]
+    fn masked_explore_prices_the_routing_around_penalty() {
+        let net = zoo::tiny_cnn();
+        let base = ArchConfig::default();
+        let free = explore(&net, &base, &ExploreBounds::default(), Objective::Tiles).unwrap();
+        // ban the mesh origin on chip 0 — every placement strategy
+        // starts there, so every candidate pays a shift
+        let mut mask = TileMask::new();
+        mask.ban_tile(crate::noc::Coord::new(0, 0, 0));
+        let masked = explore_masked(
+            &net,
+            &base,
+            &ExploreBounds::default(),
+            Objective::Tiles,
+            &mask,
+        )
+        .unwrap();
+        assert!(!masked.is_empty());
+        assert!(
+            masked[0].tiles >= free[0].tiles,
+            "masking can never shrink the best mapping"
+        );
+        // empty mask is exactly the unmasked sweep
+        let same = explore_masked(
+            &net,
+            &base,
+            &ExploreBounds::default(),
+            Objective::Tiles,
+            &TileMask::new(),
+        )
+        .unwrap();
+        assert_eq!(same.len(), free.len());
+        assert_eq!(same[0].tiles, free[0].tiles);
     }
 
     #[test]

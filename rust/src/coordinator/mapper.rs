@@ -27,7 +27,7 @@
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::coordinator::plan::{ConvPlan, FcPlan, LayerPlan, MappingPlan, Placement};
+use crate::coordinator::plan::{ConvPlan, FcPlan, LayerPlan, MappingPlan, Placement, TileMask};
 use crate::coordinator::program::*;
 use crate::coordinator::schedule::{
     conv_tile_schedule, fc_tile_schedule, ConvGeometry, ConvRole,
@@ -205,12 +205,55 @@ impl Compiler {
         crate::coordinator::plan::build(net, &self.arch)
     }
 
+    /// [`Self::plan`], routing placement around a [`TileMask`] of
+    /// known-bad tiles/links (the fault-recovery path — see
+    /// `coordinator::plan`'s fault-aware placement docs). An empty
+    /// mask reproduces [`Self::plan`] bit-for-bit.
+    pub fn plan_masked(&self, net: &Network, mask: &TileMask) -> Result<MappingPlan> {
+        crate::coordinator::plan::build_masked(net, &self.arch, mask)
+    }
+
     /// Compile with caller-provided weights (e.g. trained weights loaded
     /// from the JAX golden model): the thin composition of
     /// [`Self::plan`] and [`Self::materialize`].
     pub fn compile_with_weights(&self, net: &Network, weights: &Weights) -> Result<Program> {
         let plan = self.plan(net)?;
         self.materialize(net, weights, &plan)
+    }
+
+    /// [`Self::compile_with_weights`] around a [`TileMask`]: the same
+    /// weights, scheduled onto a placement that provably avoids every
+    /// masked tile/link. This is how a model re-maps around a detected
+    /// fault bit-exactly — outputs are weight- and schedule-determined,
+    /// so the re-placed program stays refcompute-exact while the bad
+    /// resources go unused (the measurable cost is extra span: more
+    /// pad tiles, possibly more chips).
+    pub fn compile_with_weights_masked(
+        &self,
+        net: &Network,
+        weights: &Weights,
+        mask: &TileMask,
+    ) -> Result<Program> {
+        let plan = self.plan_masked(net, mask)?;
+        self.materialize(net, weights, &plan)
+    }
+
+    /// [`Self::compile`] (seeded weights) around a [`TileMask`].
+    pub fn compile_masked(&self, net: &Network, mask: &TileMask) -> Result<Program> {
+        if self.skeleton {
+            let weights = Weights::empty(net);
+            return self.compile_with_weights_masked(net, &weights, mask);
+        }
+        let weights = Weights::random(net, self.weight_seed)?;
+        self.compile_with_weights_masked(net, &weights, mask)
+    }
+
+    /// [`Self::compile_analysis`] around a [`TileMask`] (skeleton
+    /// program: mapping/timing/energy only, not runnable).
+    pub fn compile_analysis_masked(&self, net: &Network, mask: &TileMask) -> Result<Program> {
+        let mut c = self.clone();
+        c.skeleton = true;
+        c.compile_masked(net, mask)
     }
 
     /// The schedule phase: turn a [`MappingPlan`] into the runnable
@@ -1011,6 +1054,38 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn masked_compile_relocates_but_preserves_weights_and_schedules() {
+        use crate::model::refcompute::Weights;
+        let net = zoo::tiny_cnn();
+        let compiler = Compiler::default();
+        let weights = Weights::random(&net, compiler.weight_seed).unwrap();
+        let base = compiler.compile_with_weights(&net, &weights).unwrap();
+        // ban the first placed tile; the masked program must avoid it
+        let bad = match &base.stages[0].kind {
+            StageKind::Conv(c) => c.chains[0].tiles[0].coord,
+            _ => panic!("tiny_cnn starts with a conv"),
+        };
+        let mut mask = TileMask::new();
+        mask.ban_tile(bad);
+        let masked = compiler
+            .compile_with_weights_masked(&net, &weights, &mask)
+            .unwrap();
+        for (a, b) in masked.stages.iter().zip(&base.stages) {
+            if let (StageKind::Conv(ca), StageKind::Conv(cb)) = (&a.kind, &b.kind) {
+                for (cha, chb) in ca.chains.iter().zip(&cb.chains) {
+                    for (x, y) in cha.tiles.iter().zip(&chb.tiles) {
+                        assert_ne!(x.coord, bad, "masked tile still in use");
+                        // placement moved; weights and schedules did not
+                        assert_eq!(x.weights, y.weights);
+                        assert_eq!(x.schedule, y.schedule);
+                    }
+                }
+            }
+        }
+        assert!(masked.total_tiles >= base.total_tiles);
     }
 
     #[test]

@@ -7,7 +7,12 @@
 //!   arrays & duplication per layer) → **place** (pluggable
 //!   [`Placement`] strategy: serpentine baseline or column-major, plus
 //!   chip-aligned variants) → **partition** (240-tile chips), yielding
-//!   a weight-free [`MappingPlan`].
+//!   a weight-free [`MappingPlan`]. The place phase is fault-aware: a
+//!   [`TileMask`] of known-bad tiles/links (from the fault plane's
+//!   detection path) slides whole chains forward until they clear,
+//!   so a model re-maps around a bad resource with bit-exact weights
+//!   ([`Compiler::compile_with_weights_masked`]) at a measurable
+//!   span/latency/energy cost.
 //! * [`mapper`] — the compiler around the plan: [`Compiler::plan`]
 //!   builds the IR, [`Compiler::materialize`] schedules it (per-tile
 //!   periodic instruction programs, RIFM configs, stationary weight
@@ -34,5 +39,5 @@ pub mod program;
 pub mod schedule;
 
 pub use mapper::{ArchConfig, Compiler, PoolingScheme};
-pub use plan::{MappingPlan, Placement};
+pub use plan::{MappingPlan, Placement, TileMask};
 pub use program::{Program, Stage, StageKind};

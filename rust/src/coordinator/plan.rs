@@ -26,6 +26,24 @@
 //! The IR is deliberately weight-free: a `MappingPlan` is a pure
 //! function of `(Network, ArchConfig)`, cheap enough for the mapping
 //! explorer (`super::explore`) to build dozens of them per model.
+//!
+//! ## Fault-aware placement
+//!
+//! The fault plane (`sim::fault`, `serve`'s canary checks) names bad
+//! physical resources by [`Coord`]; [`TileMask`] carries that set into
+//! the **place** phase. [`build_masked`] / [`place_masked`] produce a
+//! plan that provably uses none of the masked tiles or links: a chain
+//! whose candidate span touches a masked resource is slid forward in
+//! flat-cursor space until it clears (whole-chain shifts only, so
+//! chains stay contiguous and every psum hop stays mesh-local — the
+//! COM locality invariant survives masking under both [`Placement`]
+//! strategies). The cost is the skipped tiles: a masked plan may span
+//! more chips, which the explorer and the recovery path surface as a
+//! measurable latency/energy penalty. An empty mask reproduces the
+//! unmasked plan bit-for-bit.
+
+use std::collections::BTreeSet;
+use std::fmt;
 
 use anyhow::Result;
 
@@ -85,6 +103,112 @@ impl Placement {
 
     /// Every strategy, for sweeps.
     pub const ALL: [Placement; 2] = [Placement::Serpentine, Placement::ColumnMajor];
+}
+
+/// Physical resources the **place** phase must route around: tiles
+/// known (or suspected) bad, and directed-agnostic links between
+/// mesh-adjacent tiles. Built from a detected `sim::fault::FaultPlan`
+/// (`TileMask::from_coords`) or by hand; consumed by [`build_masked`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TileMask {
+    tiles: BTreeSet<Coord>,
+    /// Banned links, stored as normalized (min, max) endpoint pairs so
+    /// `a→b` and `b→a` are the same physical link.
+    links: BTreeSet<(Coord, Coord)>,
+}
+
+impl TileMask {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A mask banning every coordinate in `coords` (the usual recovery
+    /// path: `FaultPlan::coords()` → mask → re-place).
+    pub fn from_coords<I: IntoIterator<Item = Coord>>(coords: I) -> Self {
+        Self {
+            tiles: coords.into_iter().collect(),
+            links: BTreeSet::new(),
+        }
+    }
+
+    /// Ban a tile outright.
+    pub fn ban_tile(&mut self, c: Coord) -> &mut Self {
+        self.tiles.insert(c);
+        self
+    }
+
+    /// Ban the link between two (mesh-adjacent) tiles; order of the
+    /// endpoints does not matter.
+    pub fn ban_link(&mut self, a: Coord, b: Coord) -> &mut Self {
+        self.links.insert(if a <= b { (a, b) } else { (b, a) });
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tiles.is_empty() && self.links.is_empty()
+    }
+
+    /// Banned tiles + banned links.
+    pub fn len(&self) -> usize {
+        self.tiles.len() + self.links.len()
+    }
+
+    /// Is this tile banned?
+    pub fn bans_tile(&self, c: Coord) -> bool {
+        self.tiles.contains(&c)
+    }
+
+    /// Is the link between these tiles banned?
+    pub fn bans_link(&self, a: Coord, b: Coord) -> bool {
+        let key = if a <= b { (a, b) } else { (b, a) };
+        self.links.contains(&key)
+    }
+
+    /// The banned tile coordinates, ascending.
+    pub fn tiles(&self) -> impl Iterator<Item = &Coord> {
+        self.tiles.iter()
+    }
+
+    /// Would a chain over these coordinates use any banned resource —
+    /// a banned tile, or a banned link between consecutive hops?
+    pub fn allows_chain(&self, coords: &[Coord]) -> bool {
+        if coords.iter().any(|c| self.tiles.contains(c)) {
+            return false;
+        }
+        coords
+            .windows(2)
+            .all(|w| !self.bans_link(w[0], w[1]))
+    }
+
+    /// Highest chip any banned resource touches (None for an empty
+    /// mask). Every flat index past this chip is guaranteed clean,
+    /// which bounds the masked-placement retry loop.
+    pub fn max_chip(&self) -> Option<usize> {
+        let t = self.tiles.iter().map(|c| c.chip).max();
+        let l = self
+            .links
+            .iter()
+            .map(|(a, b)| a.chip.max(b.chip))
+            .max();
+        t.max(l)
+    }
+}
+
+impl fmt::Display for TileMask {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut parts: Vec<String> = self
+            .tiles
+            .iter()
+            .map(|c| format!("{}:{}:{}", c.chip, c.row, c.col))
+            .collect();
+        parts.extend(self.links.iter().map(|(a, b)| {
+            format!(
+                "{}:{}:{}-{}:{}:{}",
+                a.chip, a.row, a.col, b.chip, b.row, b.col
+            )
+        }));
+        write!(f, "{}", parts.join(","))
+    }
 }
 
 /// Output of the **allocate** phase for one network layer: the logical
@@ -176,6 +300,17 @@ pub fn build(net: &Network, arch: &ArchConfig) -> Result<MappingPlan> {
     let dups = plan_duplication(net, &shapes, arch)?;
     let allocs = allocate(net, &shapes, arch, &dups)?;
     Ok(place(&allocs, arch))
+}
+
+/// [`build`], routing placement around a [`TileMask`] of known-bad
+/// resources. The result provably uses none of the masked tiles/links
+/// (every chain's span is checked before it is pinned); an empty mask
+/// reproduces [`build`] bit-for-bit.
+pub fn build_masked(net: &Network, arch: &ArchConfig, mask: &TileMask) -> Result<MappingPlan> {
+    let shapes = net.shapes()?;
+    let dups = plan_duplication(net, &shapes, arch)?;
+    let allocs = allocate(net, &shapes, arch, &dups)?;
+    place_masked(&allocs, arch, mask)
 }
 
 /// Phase 1 (**allocate**, tile arrays): the logical tile array of every
@@ -414,6 +549,91 @@ fn place_chain(cursor: &mut usize, n: usize, arch: &ArchConfig) -> ChainPlan {
     ChainPlan { start, coords }
 }
 
+/// [`place`] with a [`TileMask`]: identical cursor walk, except a chain
+/// whose candidate span touches a masked tile or link is slid forward
+/// (whole-chain shifts, so contiguity — and with it mesh-locality — is
+/// preserved) until it clears. Fails only if the mask is degenerate
+/// (the retry bound is defensive: both placement strategies satisfy
+/// `chip = flat_index / tiles_per_chip`, so every flat index past the
+/// mask's highest chip is clean and the loop must terminate there).
+pub fn place_masked(
+    allocs: &[LayerAlloc],
+    arch: &ArchConfig,
+    mask: &TileMask,
+) -> Result<MappingPlan> {
+    let mut layers = Vec::with_capacity(allocs.len());
+    let mut cursor = 0usize;
+    for alloc in allocs {
+        layers.push(match alloc {
+            LayerAlloc::None => LayerPlan::None,
+            LayerAlloc::Conv {
+                chains,
+                chain_len,
+                dup,
+            } => {
+                let mut placed = Vec::with_capacity(*chains);
+                for _ in 0..*chains {
+                    placed.push(place_chain_masked(&mut cursor, chain_len * dup, arch, mask)?);
+                }
+                LayerPlan::Conv(ConvPlan {
+                    chain_len: *chain_len,
+                    dup: *dup,
+                    chains: placed,
+                })
+            }
+            LayerAlloc::Fc {
+                columns,
+                column_len,
+            } => {
+                let mut placed = Vec::with_capacity(*columns);
+                for _ in 0..*columns {
+                    placed.push(place_chain_masked(&mut cursor, *column_len, arch, mask)?);
+                }
+                LayerPlan::Fc(FcPlan { columns: placed })
+            }
+        });
+    }
+    let total_tiles = cursor;
+    Ok(MappingPlan {
+        arch: *arch,
+        layers,
+        total_tiles,
+        chips: partition(total_tiles, arch),
+    })
+}
+
+fn place_chain_masked(
+    cursor: &mut usize,
+    n: usize,
+    arch: &ArchConfig,
+    mask: &TileMask,
+) -> Result<ChainPlan> {
+    // Past the mask's highest chip every candidate is clean; give the
+    // loop one spare chip of headroom and treat exceeding it as a bug.
+    let limit = (mask.max_chip().unwrap_or(0) + 2) * arch.tiles_per_chip + n;
+    loop {
+        align_chain(cursor, n, arch);
+        let start = *cursor;
+        let coords = arch
+            .placement
+            .coords(start, n, arch.mesh_cols, arch.tiles_per_chip);
+        if mask.allows_chain(&coords) {
+            *cursor += n;
+            return Ok(ChainPlan { start, coords });
+        }
+        if start > limit {
+            anyhow::bail!(
+                "masked placement did not converge: a {n}-tile chain found no clean span \
+                 by flat index {start} (mask: {mask})"
+            );
+        }
+        // slide the whole chain one tile forward and retry — shifting
+        // the start (never skipping mid-chain tiles) keeps the span
+        // contiguous in flat space, hence mesh-local
+        *cursor = start + 1;
+    }
+}
+
 /// Under `chip_aligned_chains`, advance the cursor to the next chip
 /// boundary when an `n`-tile chain would otherwise straddle one (chains
 /// longer than a chip must straddle regardless). Costs a few pad tiles;
@@ -503,6 +723,104 @@ mod tests {
         let base = build(&net, &ArchConfig::default()).unwrap();
         assert_eq!(plan.total_tiles, base.total_tiles);
         assert_eq!(plan.chips, base.chips);
+    }
+
+    /// Every coordinate a plan pins, in placement order.
+    fn all_coords(plan: &MappingPlan) -> Vec<Coord> {
+        let mut out = Vec::new();
+        for lp in &plan.layers {
+            match lp {
+                LayerPlan::Conv(c) => {
+                    for ch in &c.chains {
+                        out.extend(ch.coords.iter().copied());
+                    }
+                }
+                LayerPlan::Fc(f) => {
+                    for col in &f.columns {
+                        out.extend(col.coords.iter().copied());
+                    }
+                }
+                LayerPlan::None => {}
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn empty_mask_reproduces_unmasked_plan() {
+        let net = zoo::tiny_cnn();
+        for placement in Placement::ALL {
+            let mut arch = ArchConfig::default();
+            arch.placement = placement;
+            let base = build(&net, &arch).unwrap();
+            let masked = build_masked(&net, &arch, &TileMask::new()).unwrap();
+            assert_eq!(base, masked, "{placement:?}: empty mask must be a no-op");
+        }
+    }
+
+    #[test]
+    fn masked_plan_avoids_banned_tiles_and_stays_local() {
+        let net = zoo::tiny_cnn();
+        for placement in Placement::ALL {
+            let mut arch = ArchConfig::default();
+            arch.placement = placement;
+            let base = build(&net, &arch).unwrap();
+            // ban the very first placed tile and one mid-plan tile
+            let coords = all_coords(&base);
+            let mut mask = TileMask::new();
+            mask.ban_tile(coords[0]);
+            mask.ban_tile(coords[coords.len() / 2]);
+            let masked = build_masked(&net, &arch, &mask).unwrap();
+            for c in all_coords(&masked) {
+                assert!(!mask.bans_tile(c), "{placement:?}: banned tile {c:?} used");
+            }
+            for lp in &masked.layers {
+                if let LayerPlan::Conv(c) = lp {
+                    for ch in &c.chains {
+                        assert!(chain_is_local(&ch.coords), "{placement:?}");
+                    }
+                }
+            }
+            // routing around costs tiles, never saves them
+            assert!(masked.total_tiles >= base.total_tiles);
+        }
+    }
+
+    #[test]
+    fn masked_plan_avoids_banned_links() {
+        let net = zoo::tiny_cnn();
+        let arch = ArchConfig::default();
+        let base = build(&net, &arch).unwrap();
+        // ban the first chain's first hop
+        let coords = all_coords(&base);
+        let mut mask = TileMask::new();
+        mask.ban_link(coords[0], coords[1]);
+        assert!(mask.bans_link(coords[1], coords[0]), "links are undirected");
+        let masked = build_masked(&net, &arch, &mask).unwrap();
+        for lp in &masked.layers {
+            let chains: &[ChainPlan] = match lp {
+                LayerPlan::Conv(c) => &c.chains,
+                LayerPlan::Fc(f) => &f.columns,
+                LayerPlan::None => continue,
+            };
+            for ch in chains {
+                for w in ch.coords.windows(2) {
+                    assert!(!mask.bans_link(w[0], w[1]), "banned link used");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mask_display_and_max_chip() {
+        let mut mask = TileMask::new();
+        assert!(mask.is_empty());
+        assert_eq!(mask.max_chip(), None);
+        mask.ban_tile(Coord::new(1, 0, 2));
+        mask.ban_link(Coord::new(0, 0, 0), Coord::new(0, 0, 1));
+        assert_eq!(mask.len(), 2);
+        assert_eq!(mask.max_chip(), Some(1));
+        assert_eq!(mask.to_string(), "1:0:2,0:0:0-0:0:1");
     }
 
     #[test]

@@ -238,6 +238,35 @@ impl Program {
         out
     }
 
+    /// Every physical tile coordinate the program occupies (fault
+    /// plane: proving a re-mapped program avoids masked resources).
+    pub fn tile_coords(&self) -> Vec<Coord> {
+        let mut out = Vec::new();
+        for stage in &self.stages {
+            match &stage.kind {
+                StageKind::Conv(c) => {
+                    for ch in &c.chains {
+                        out.extend(ch.tiles.iter().map(|t| t.coord));
+                    }
+                }
+                StageKind::Fc(f) => {
+                    for col in &f.columns {
+                        out.extend(col.tiles.iter().map(|t| t.coord));
+                    }
+                }
+                StageKind::Res(r) => {
+                    if let Some(p) = &r.proj {
+                        for ch in &p.chains {
+                            out.extend(ch.tiles.iter().map(|t| t.coord));
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
     /// Check every schedule fits the 128-entry hardware table after
     /// run-length compression (see `isa::Schedule::compressed_len`).
     pub fn schedules_fit_hardware(&self) -> bool {

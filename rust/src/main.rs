@@ -37,6 +37,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "client" => client_cmd(args),
         "traffic" => traffic_cmd(args),
         "cluster" => cluster_cmd(args),
+        "fault" => fault_cmd(args),
         "models" => models_cmd(args),
         "" | "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -924,7 +925,7 @@ fn print_stats(resp: &domino::serve::api::Response) -> Result<()> {
     let fmt = |v: Option<u64>| v.map(|x| x.to_string()).unwrap_or_else(|| "-".into());
     for m in &stats.models {
         println!(
-            "  {:<18} {:>8} {:>8} {:>9} {:>7} {:>7} {:>9} {:>9} {:>9}",
+            "  {:<18} {:>8} {:>8} {:>9} {:>7} {:>7} {:>9} {:>9} {:>9}{}",
             m.model,
             m.served,
             m.failed,
@@ -933,7 +934,8 @@ fn print_stats(resp: &domino::serve::api::Response) -> Result<()> {
             m.queue_depth,
             fmt(m.p50_us),
             fmt(m.p95_us),
-            fmt(m.p99_us)
+            fmt(m.p99_us),
+            if m.degraded { "  DEGRADED" } else { "" }
         );
     }
     Ok(())
@@ -1671,9 +1673,9 @@ fn cluster_status(args: &Args) -> Result<()> {
         ..ClusterConfig::default()
     };
     let router = Router::new(backends, cfg)?;
-    // Probe with an empty model table: reconcile has nothing to
-    // repair, so the pass is purely observational.
-    router.health_pass();
+    // First probe-only pass (no repair loop, nothing is loaded
+    // anywhere): discover liveness and each backend's loaded set.
+    router.probe_pass();
     let probed = router.status();
     let mut names: BTreeSet<String> = probed
         .backends
@@ -1689,6 +1691,297 @@ fn cluster_status(args: &Args) -> Result<()> {
         );
     }
     router.assume_models(&names.into_iter().collect::<Vec<_>>());
+    // Second pass now that the table is populated: canary every
+    // discovered model, so the rendered state distinguishes a dead
+    // socket (DEAD) from silently-wrong outputs (canary-failed).
+    router.probe_pass();
     print!("{}", router.status().render());
+    Ok(())
+}
+
+/// `domino fault inject|canary|storm` — the fault plane's CLI: arm a
+/// deterministic fault plan on a model (local one-shot service or a
+/// live `serve --listen` endpoint via --addr), run canary checks
+/// against the refcompute oracle, and heal by re-mapping around the
+/// faulted tiles. `storm` is the end-to-end drill over several
+/// models at once.
+fn fault_cmd(args: &Args) -> Result<()> {
+    let op = args.positional.first().map(String::as_str).unwrap_or("");
+    match op {
+        "inject" => fault_inject_cmd(args),
+        "canary" => fault_canary_cmd(args),
+        "storm" => fault_storm(args),
+        other => bail!("unknown fault op {other:?} (use inject | canary | storm)"),
+    }
+}
+
+fn print_fault_reply(r: &domino::serve::api::FaultReply) {
+    if !r.armed {
+        println!("{} v{}: fault plan disarmed", r.model.name, r.model.version);
+        return;
+    }
+    println!(
+        "{} v{}: armed {} fault site(s)",
+        r.model.name, r.model.version, r.sites
+    );
+    println!(
+        "diagnostic run (image seed {:#x}): {} fire(s), {} psum lane(s) corrupted, \
+         {}/{} outputs wrong -> {}",
+        domino::serve::api::FAULT_DIAG_SEED,
+        r.fires,
+        r.lanes,
+        r.mismatched,
+        r.outputs,
+        if r.corrupted {
+            "SILENTLY CORRUPT (structure and timing stay clean; only a canary catches this)"
+        } else {
+            "outputs unaffected (sites never exercised or corruption masked)"
+        }
+    );
+    for line in r.report.lines() {
+        println!("  {line}");
+    }
+}
+
+fn print_canary_reply(c: &domino::serve::api::CanaryReply) {
+    println!(
+        "canary on {} v{}: {} ({}/{} outputs wrong vs refcompute)",
+        c.model.name,
+        c.model.version,
+        if c.ok { "PASS" } else { "FAIL" },
+        c.mismatched,
+        c.outputs
+    );
+    if c.remapped {
+        println!(
+            "re-mapped around the armed fault sites -> v{} ({})",
+            c.version,
+            if c.healed {
+                "healed: post-remap canary is bit-exact"
+            } else {
+                "NOT healed: post-remap canary still corrupt"
+            }
+        );
+    }
+}
+
+/// Build a one-shot local sim service with `model` loaded at `--seed`
+/// — the offline venue for fault drills when no --addr is given.
+fn fault_local_service(model: &str, args: &Args) -> Result<(domino::serve::Service, String)> {
+    use domino::serve::api::{Dispatcher, Request, Response};
+    use domino::serve::{ModelRegistry, ServeConfig, Server, Service};
+    use std::sync::Arc;
+
+    let registry = Arc::new(ModelRegistry::new());
+    let server = Server::start_multi(
+        ServeConfig {
+            workers: 1,
+            max_batch: 2,
+            queue_cap: 64,
+        },
+        registry,
+    )?;
+    let service = Service::new(server, arch_from(args));
+    match service.dispatch(Request::LoadSeeded {
+        model: model.to_string(),
+        seed: args.get_u64("seed", 42),
+        mapping: None,
+    }) {
+        Response::Loaded(stamp) => Ok((service, stamp.name.to_string())),
+        Response::Error { message } => bail!("load {model}: {message}"),
+        other => bail!("unexpected response to load {model}: {other:?}"),
+    }
+}
+
+/// `domino fault inject <model> --plan SPEC [--addr HOST:PORT]
+/// [--heal]`: arm (empty SPEC disarms) a deterministic fault plan and
+/// print the diagnostic report; --heal follows up with a healing
+/// canary. Without --addr a local one-shot service hosts the drill.
+fn fault_inject_cmd(args: &Args) -> Result<()> {
+    use domino::serve::api::{Dispatcher, Request, Response};
+    use domino::serve::client::Client;
+
+    let model = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("usage: domino fault inject <model> --plan SPEC"))?;
+    let plan = args.get("plan").ok_or_else(|| {
+        anyhow::anyhow!(
+            "fault inject needs --plan SPEC — `;`-joined sites like \
+             tile:0:1:2:stuck:7, tile:0:1:2:dead, link:0:0:3:flip:5, link:0:0:3:drop, \
+             each optionally windowed @from-to; an empty spec disarms"
+        )
+    })?;
+
+    if let Some(addr) = args.get("addr") {
+        let mut client = Client::connect(addr)?;
+        client.set_read_timeout(Some(std::time::Duration::from_secs(120)))?;
+        let rep = client.fault_inject(model, plan)?;
+        print_fault_reply(&rep);
+        if args.flag("heal") {
+            let c = client.canary(model, args.get_u64("canary-seed", 0xCA11A2), true)?;
+            print_canary_reply(&c);
+        }
+        return Ok(());
+    }
+
+    let (service, name) = fault_local_service(model, args)?;
+    match service.dispatch(Request::FaultInject {
+        model: name.clone(),
+        plan: plan.to_string(),
+    }) {
+        Response::Fault(rep) => print_fault_reply(&rep),
+        Response::Error { message } => bail!("fault inject: {message}"),
+        other => bail!("unexpected response to fault inject: {other:?}"),
+    }
+    if args.flag("heal") {
+        match service.dispatch(Request::Canary {
+            model: name,
+            seed: args.get_u64("canary-seed", 0xCA11A2),
+            heal: true,
+        }) {
+            Response::Canary(c) => print_canary_reply(&c),
+            Response::Error { message } => bail!("canary: {message}"),
+            other => bail!("unexpected response to canary: {other:?}"),
+        }
+    }
+    service.shutdown()?;
+    Ok(())
+}
+
+/// `domino fault canary <model> [--heal] [--addr HOST:PORT]`: one
+/// seeded sentinel inference checked bit-for-bit against refcompute;
+/// --heal re-maps around armed fault sites when the check fails.
+fn fault_canary_cmd(args: &Args) -> Result<()> {
+    use domino::serve::api::{Dispatcher, Request, Response};
+    use domino::serve::client::Client;
+
+    let model = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("usage: domino fault canary <model> [--heal]"))?;
+    let seed = args.get_u64("canary-seed", 0xCA11A2);
+    let heal = args.flag("heal");
+
+    if let Some(addr) = args.get("addr") {
+        let mut client = Client::connect(addr)?;
+        client.set_read_timeout(Some(std::time::Duration::from_secs(120)))?;
+        print_canary_reply(&client.canary(model, seed, heal)?);
+        return Ok(());
+    }
+    let (service, name) = fault_local_service(model, args)?;
+    match service.dispatch(Request::Canary {
+        model: name,
+        seed,
+        heal,
+    }) {
+        Response::Canary(c) => print_canary_reply(&c),
+        Response::Error { message } => bail!("canary: {message}"),
+        other => bail!("unexpected response to canary: {other:?}"),
+    }
+    service.shutdown()?;
+    Ok(())
+}
+
+/// `domino fault storm [--models a,b,c] [--seed S]`: the end-to-end
+/// drill. For each model: load seeded, arm a stuck-at fault on a
+/// real tile of its placement, prove the corruption is silent
+/// (diagnostic fires, outputs wrong), then detect + heal via the
+/// canary path and report per-model detection/recovery wall time.
+/// Exits non-zero if any model fails to heal.
+fn fault_storm(args: &Args) -> Result<()> {
+    use domino::serve::api::{Dispatcher, Request, Response};
+    use domino::serve::{ModelRegistry, ServeConfig, Server, Service};
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    let models: Vec<String> = args
+        .get("models")
+        .unwrap_or("tiny-mlp,tiny-cnn,tiny-resnet")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    let seed = args.get_u64("seed", 42);
+
+    let registry = Arc::new(ModelRegistry::new());
+    let server = Server::start_multi(
+        ServeConfig {
+            workers: 2,
+            max_batch: 4,
+            queue_cap: 64,
+        },
+        registry,
+    )?;
+    let service = Service::new(server, arch_from(args));
+
+    let mut unhealed = Vec::new();
+    for (i, m) in models.iter().enumerate() {
+        let stamp = match service.dispatch(Request::LoadSeeded {
+            model: m.clone(),
+            seed: seed.wrapping_add(i as u64),
+            mapping: None,
+        }) {
+            Response::Loaded(stamp) => stamp,
+            Response::Error { message } => bail!("load {m}: {message}"),
+            other => bail!("unexpected response to load {m}: {other:?}"),
+        };
+        // a real tile of this model's placement — the fault must hit
+        let reg = service
+            .server()
+            .registry()
+            .ok_or_else(|| anyhow::anyhow!("sim backend has no registry"))?;
+        let mv = reg
+            .get(&stamp.name)
+            .ok_or_else(|| anyhow::anyhow!("{} vanished after load", stamp.name))?;
+        let coords = mv.program().tile_coords();
+        let bad = coords[i % coords.len()];
+        let plan = domino::sim::FaultPlan::new().stuck_tile(bad, 7).spec();
+
+        let t0 = Instant::now();
+        let rep = match service.dispatch(Request::FaultInject {
+            model: stamp.name.to_string(),
+            plan,
+        }) {
+            Response::Fault(rep) => rep,
+            Response::Error { message } => bail!("fault inject {m}: {message}"),
+            other => bail!("unexpected response to fault inject {m}: {other:?}"),
+        };
+        let detect_us = t0.elapsed().as_micros();
+        println!(
+            "{}: stuck-at fault on tile {bad} -> diagnostic {} fire(s), {}/{} outputs wrong \
+             ({} us to detect)",
+            stamp.name, rep.fires, rep.mismatched, rep.outputs, detect_us
+        );
+
+        let t1 = Instant::now();
+        let c = match service.dispatch(Request::Canary {
+            model: stamp.name.to_string(),
+            seed: args.get_u64("canary-seed", 0xCA11A2),
+            heal: true,
+        }) {
+            Response::Canary(c) => c,
+            Response::Error { message } => bail!("canary {m}: {message}"),
+            other => bail!("unexpected response to canary {m}: {other:?}"),
+        };
+        let heal_us = t1.elapsed().as_micros();
+        print_canary_reply(&c);
+        if rep.corrupted && c.remapped && c.healed {
+            println!("  recovered in {heal_us} us (re-map + verifying canary)");
+        } else if !rep.corrupted {
+            println!("  fault site never exercised on the diagnostic image; nothing to heal");
+        } else {
+            unhealed.push(stamp.name.to_string());
+        }
+    }
+    print_stats(&service.dispatch(Request::Stats))?;
+    service.shutdown()?;
+    if !unhealed.is_empty() {
+        bail!("models left unhealed: {}", unhealed.join(", "));
+    }
+    println!("storm complete: every corrupted model detected and healed");
     Ok(())
 }

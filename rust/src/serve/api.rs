@@ -25,12 +25,14 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::explore::MappingChoice;
-use crate::coordinator::{ArchConfig, Placement, PoolingScheme, Program};
+use crate::coordinator::{ArchConfig, Placement, PoolingScheme, Program, TileMask};
 use crate::model::{zoo, Network};
+use crate::sim::fault::{corruption_verdict, FaultPlan};
 use crate::sim::flight::{self, LinkHeatmap, RecorderConfig};
 use crate::sim::Simulator;
 use crate::testutil::Rng;
@@ -157,6 +159,23 @@ pub enum Request {
         image_seed: u64,
         window: u64,
     },
+    /// Arm a deterministic [`FaultPlan`] on `model` (the fault plane):
+    /// every subsequent `Infer` for the model runs through a
+    /// fault-injecting engine, so the service behaves exactly like one
+    /// whose CIM tiles / NoC links silently corrupt values. `plan` is
+    /// the `;`-separated site-spec string ([`FaultPlan::parse`]); the
+    /// empty string disarms. Arming runs one seeded diagnostic
+    /// inference and reports which sites fired plus the corruption
+    /// verdict against the refcompute oracle.
+    FaultInject { model: String, plan: String },
+    /// Sentinel health check: run one seeded canary image through the
+    /// data plane (armed fault plans included) and cross-check it
+    /// against [`ModelVersion::refcompute`]. A mismatch marks the
+    /// model degraded in `Stats`; with `heal`, the service re-maps the
+    /// model around the armed plan's fault sites
+    /// (`ModelRegistry::remap_masked`) and re-checks — the fault stays
+    /// armed, the re-mapped program just never touches the bad tiles.
+    Canary { model: String, seed: u64, heal: bool },
 }
 
 /// The response envelope for every [`Request`]. Failures are
@@ -172,7 +191,56 @@ pub enum Response {
     Info(ModelDesc),
     Stats(StatsReply),
     Trace(TraceReply),
+    Fault(FaultReply),
+    Canary(CanaryReply),
     Error { message: String },
+}
+
+/// The `FaultInject` payload: what was armed and what the diagnostic
+/// run saw. `fires`/`lanes` come from the typed
+/// [`crate::sim::FaultReport`]; `corrupted`/`mismatched`/`outputs` are
+/// the verdict of the diagnostic scores against the refcompute oracle
+/// — a plan can be armed yet silent (sites the mapping never exercises
+/// or a transient window that never opens).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultReply {
+    pub model: ModelStamp,
+    /// `false` means the request disarmed the model's plan.
+    pub armed: bool,
+    /// Fault sites in the armed plan.
+    pub sites: u64,
+    /// Site activations during the diagnostic run.
+    pub fires: u64,
+    /// Output lanes corrupted during the diagnostic run.
+    pub lanes: u64,
+    pub corrupted: bool,
+    /// Diagnostic scores diverging from the oracle.
+    pub mismatched: u64,
+    /// Scores compared.
+    pub outputs: u64,
+    /// Rendered per-site fault report (human-readable).
+    pub report: String,
+}
+
+/// The `Canary` payload. `model` stamps the version the sentinel ran
+/// against; `version` is the version published when the dispatch
+/// returned (bumped past the stamp when a heal re-mapped). `ok` is the
+/// initial check; `healed` whether the post-re-map re-check came back
+/// clean.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CanaryReply {
+    pub model: ModelStamp,
+    pub ok: bool,
+    /// Canary scores diverging from the oracle on the initial check.
+    pub mismatched: u64,
+    /// Scores compared.
+    pub outputs: u64,
+    /// A heal re-mapped the model around the armed plan's sites.
+    pub remapped: bool,
+    /// The post-heal re-check was refcompute-exact.
+    pub healed: bool,
+    /// Currently published version of the model.
+    pub version: u64,
 }
 
 /// A served inference: the logits plus the exact model version that
@@ -513,6 +581,12 @@ impl RegistryManifest {
 /// (see [`Service::with_trace_budget`]).
 pub const DEFAULT_TRACE_BUDGET: usize = 2;
 
+/// Image seed for the diagnostic run `FaultInject` performs when it
+/// arms a plan. Fixed (not caller-chosen): the diagnostic is a smoke
+/// signal, and a stable seed makes its verdict reproducible across
+/// arms of the same plan.
+pub const FAULT_DIAG_SEED: u64 = 0xFA_17;
+
 /// Observer of every dispatched request/response pair — the
 /// `Probe`-style hook the traffic recorder (`serve::traffic`) arms on
 /// a live service. The tap sees the request *after* dispatch decided
@@ -574,6 +648,11 @@ pub struct Service {
     /// Optional dispatch observer (see [`DispatchTap`]); armed by the
     /// traffic recorder, `None` in the steady state.
     tap: Mutex<Option<Arc<dyn DispatchTap>>>,
+    /// Armed fault plans by model name (the fault plane). A plan stays
+    /// armed across swaps and re-maps — it models broken *hardware*,
+    /// keyed by physical coordinates, so a re-mapped model simply stops
+    /// touching the bad sites.
+    faults: Mutex<BTreeMap<String, FaultPlan>>,
 }
 
 /// RAII slot in the trace budget: acquired lock-free at the top of
@@ -614,6 +693,7 @@ impl Service {
             trace_rejected: AtomicU64::new(0),
             conns_refused: AtomicU64::new(0),
             tap: Mutex::new(None),
+            faults: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -699,6 +779,8 @@ impl Service {
                 image_seed,
                 window,
             } => self.do_trace(&model, image_seed, window),
+            Request::FaultInject { model, plan } => self.do_fault_inject(&model, &plan),
+            Request::Canary { model, seed, heal } => self.do_canary(&model, seed, heal),
         };
         let resp = r.unwrap_or_else(|e| Response::Error {
             message: format!("{e:#}"),
@@ -752,10 +834,14 @@ impl Service {
     }
 
     fn do_infer(&self, model: Option<String>, image: Vec<i8>) -> Result<Response> {
-        let r = match &model {
-            // canonicalize like every other plane, so the name that
-            // worked for Load/ModelInfo also works for Infer
-            Some(m) => self.server.infer_on(&self.registry_key(m), image)?,
+        // canonicalize like every other plane, so the name that
+        // worked for Load/ModelInfo also works for Infer
+        let key = model.map(|m| self.registry_key(&m).into_owned());
+        if let Some(faulty) = self.infer_faulty(key.as_deref(), &image)? {
+            return Ok(faulty);
+        }
+        let r = match &key {
+            Some(k) => self.server.infer_on(k, image)?,
             None => self.server.infer(image)?,
         };
         Ok(Response::Infer(InferReply {
@@ -764,6 +850,58 @@ impl Service {
             queue_us: r.queue.as_micros() as u64,
             exec_us: r.exec.as_micros() as u64,
         }))
+    }
+
+    /// The model name an infer for `model` resolves to, if the fault
+    /// plane has a plan armed for it (`None` routes to the sole model,
+    /// exactly like `Server::submit`).
+    fn armed_plan(&self, model: Option<&str>) -> Option<(String, FaultPlan)> {
+        let faults = self.faults.lock().unwrap();
+        if faults.is_empty() {
+            return None;
+        }
+        let name = match model {
+            Some(m) => m.to_string(),
+            None => self.server.registry()?.sole()?.name().to_string(),
+        };
+        let plan = faults.get(&name)?.clone();
+        Some((name, plan))
+    }
+
+    /// Serve one inference through a fault-injecting engine when a
+    /// plan is armed for the target model. Runs inline on the
+    /// dispatching thread (like a trace): corruption must be
+    /// deterministic per request, and the pooled worker engines must
+    /// stay pristine for the other models. Counts as served traffic —
+    /// to a client this *is* the data plane, silently wrong and all.
+    fn infer_faulty(&self, model: Option<&str>, image: &[i8]) -> Result<Option<Response>> {
+        let Some((name, plan)) = self.armed_plan(model) else {
+            return Ok(None);
+        };
+        let reg = self.registry()?;
+        let mv = reg.get(&name).ok_or_else(|| {
+            anyhow!(
+                "model {name:?} is not loaded (loaded: [{}])",
+                reg.names().join(", ")
+            )
+        })?;
+        anyhow::ensure!(
+            image.len() == mv.input_len(),
+            "image for model {name:?} must be {} int8 values (got {})",
+            mv.input_len(),
+            image.len()
+        );
+        let t0 = Instant::now();
+        let mut sim = Simulator::with_faults(mv.program(), plan);
+        let out = sim.run_image(image).context("fault-injected simulation")?;
+        let exec = t0.elapsed();
+        self.server.note_fault_serve(mv.name(), exec);
+        Ok(Some(Response::Infer(InferReply {
+            logits: out.scores,
+            model: Some(mv.stamp()),
+            queue_us: 0,
+            exec_us: exec.as_micros() as u64,
+        })))
     }
 
     fn do_load(
@@ -896,6 +1034,112 @@ impl Service {
             events: rec.events[..window].to_vec(),
             scores: out.scores,
             heatmap,
+        }))
+    }
+
+    fn do_fault_inject(&self, model: &str, plan: &str) -> Result<Response> {
+        let reg = self.registry()?;
+        let key = self.registry_key(model).into_owned();
+        let mv = reg.get(&key).ok_or_else(|| {
+            anyhow!(
+                "model {model:?} is not loaded (loaded: [{}])",
+                reg.names().join(", ")
+            )
+        })?;
+        let plan = FaultPlan::parse(plan).context("fault plan")?;
+        if plan.is_empty() {
+            self.faults.lock().unwrap().remove(&key);
+            return Ok(Response::Fault(FaultReply {
+                model: mv.stamp(),
+                armed: false,
+                sites: 0,
+                fires: 0,
+                lanes: 0,
+                corrupted: false,
+                mismatched: 0,
+                outputs: 0,
+                report: String::new(),
+            }));
+        }
+        self.faults
+            .lock()
+            .unwrap()
+            .insert(key.clone(), plan.clone());
+        // one diagnostic run under the plan: does it fire, and does it
+        // corrupt? (a site the mapping never exercises is armed but
+        // silent — worth telling the operator up front)
+        let sites = plan.len() as u64;
+        let img = Rng::new(FAULT_DIAG_SEED).i8_vec(mv.input_len(), 31);
+        let mut sim = Simulator::with_faults(mv.program(), plan);
+        let out = sim
+            .run_image(&img)
+            .context("fault-injected diagnostic run")?;
+        let report = sim.fault_report();
+        let verdict = corruption_verdict(&out.scores, &mv.refcompute(&img)?);
+        Ok(Response::Fault(FaultReply {
+            model: mv.stamp(),
+            armed: true,
+            sites,
+            fires: report.total_fires(),
+            lanes: report.total_lanes(),
+            corrupted: verdict.corrupted,
+            mismatched: verdict.mismatched as u64,
+            outputs: verdict.outputs as u64,
+            report: report.render(),
+        }))
+    }
+
+    fn do_canary(&self, model: &str, seed: u64, heal: bool) -> Result<Response> {
+        let reg = self.registry()?;
+        let key = self.registry_key(model).into_owned();
+        let mv = reg.get(&key).ok_or_else(|| {
+            anyhow!(
+                "model {model:?} is not loaded (loaded: [{}])",
+                reg.names().join(", ")
+            )
+        })?;
+        let img = Rng::new(seed).i8_vec(mv.input_len(), 31);
+        let oracle = mv.refcompute(&img)?;
+        // through the same data plane a client uses — armed fault
+        // plans included — so silent corruption is what gets checked
+        let got = match self.do_infer(Some(key.clone()), img.clone())? {
+            Response::Infer(r) => r.logits,
+            other => anyhow::bail!("canary infer returned {other:?}"),
+        };
+        let verdict = corruption_verdict(&got, &oracle);
+        let ok = !verdict.corrupted;
+        self.server.set_degraded(&key, !ok);
+        let mut remapped = false;
+        let mut healed = false;
+        if !ok && heal {
+            // Re-map around the armed plan's physical fault sites. The
+            // plan stays armed — it models broken hardware — but the
+            // re-mapped program never touches the masked coordinates,
+            // so the very same injected faults stop firing.
+            if let Some((_, plan)) = self.armed_plan(Some(&key)) {
+                let mask = TileMask::from_coords(plan.coords());
+                reg.remap_masked(&key, &mask)
+                    .context("fault-plane re-map")?;
+                remapped = true;
+                let again = match self.do_infer(Some(key.clone()), img.clone())? {
+                    Response::Infer(r) => r.logits,
+                    other => anyhow::bail!("canary re-check returned {other:?}"),
+                };
+                // weights survive the re-map bit-exactly, so the old
+                // oracle still judges the new version
+                healed = !corruption_verdict(&again, &oracle).corrupted;
+                self.server.set_degraded(&key, !healed);
+            }
+        }
+        let version = reg.get(&key).map(|v| v.version()).unwrap_or(0);
+        Ok(Response::Canary(CanaryReply {
+            model: mv.stamp(),
+            ok,
+            mismatched: verdict.mismatched as u64,
+            outputs: verdict.outputs as u64,
+            remapped,
+            healed,
+            version,
         }))
     }
 }
@@ -1031,6 +1275,121 @@ mod tests {
             other => panic!("expected Error, got {other:?}"),
         }
 
+        service.shutdown().unwrap();
+    }
+
+    /// The fault plane end-to-end: arm a stuck tile → the data plane
+    /// serves silently-wrong (structurally valid, bit-wrong) responses
+    /// → a canary detects it and marks the model degraded → a healing
+    /// canary re-maps around the bad tile (fault still armed) → every
+    /// post-recovery response is refcompute-bit-exact.
+    #[test]
+    fn fault_plane_detects_and_heals_silent_corruption() {
+        let service = start_service();
+        let reg = Arc::clone(service.server().registry().unwrap());
+        let mv = reg.get("tiny-mlp").unwrap();
+        let bad = mv.program().tile_coords()[0];
+        let plan = FaultPlan::new().stuck_tile(bad, 7).spec();
+
+        // arm: the diagnostic run fires and corrupts
+        let fr = match service.dispatch(Request::FaultInject {
+            model: "tiny-mlp".into(),
+            plan,
+        }) {
+            Response::Fault(f) => f,
+            other => panic!("expected Fault, got {other:?}"),
+        };
+        assert!(fr.armed);
+        assert_eq!(fr.sites, 1);
+        assert!(fr.fires > 0, "the site sits on a mapped tile: it must fire");
+        assert!(fr.corrupted, "a stuck tile must corrupt the scores");
+        assert!(fr.report.contains("stuck"), "{}", fr.report);
+
+        // the data plane now serves silently-wrong responses
+        let img = Rng::new(42).i8_vec(mv.input_len(), 31);
+        let oracle = mv.refcompute(&img).unwrap();
+        let reply = match service.dispatch(Request::Infer {
+            model: Some("tiny-mlp".into()),
+            image: img.clone(),
+        }) {
+            Response::Infer(r) => r,
+            other => panic!("expected Infer, got {other:?}"),
+        };
+        assert_eq!(reply.logits.len(), oracle.len(), "structurally valid");
+        assert_ne!(reply.logits, oracle, "bit-wrong: the silent corruption");
+
+        // canary without heal: detects and marks degraded
+        let c = match service.dispatch(Request::Canary {
+            model: "tiny-mlp".into(),
+            seed: 42,
+            heal: false,
+        }) {
+            Response::Canary(c) => c,
+            other => panic!("expected Canary, got {other:?}"),
+        };
+        assert!(!c.ok && !c.remapped && !c.healed);
+        assert!(c.mismatched > 0 && c.outputs > 0);
+        let stats = match service.dispatch(Request::Stats) {
+            Response::Stats(s) => s,
+            other => panic!("expected Stats, got {other:?}"),
+        };
+        let m = stats.models.iter().find(|m| m.model == "tiny-mlp").unwrap();
+        assert!(m.degraded, "a failed canary must mark the model degraded");
+
+        // canary with heal: re-map around the bad tile; the plan stays
+        // armed (broken hardware does not un-break), the new placement
+        // just never touches it
+        let c = match service.dispatch(Request::Canary {
+            model: "tiny-mlp".into(),
+            seed: 42,
+            heal: true,
+        }) {
+            Response::Canary(c) => c,
+            other => panic!("expected Canary, got {other:?}"),
+        };
+        assert!(!c.ok, "the pre-heal check still sees the corruption");
+        assert!(c.remapped && c.healed);
+        assert_eq!(c.version, 2, "heal publishes a re-mapped version");
+        let healed_mv = reg.get("tiny-mlp").unwrap();
+        assert!(
+            healed_mv.program().tile_coords().iter().all(|&t| t != bad),
+            "the re-mapped program must avoid the masked tile"
+        );
+
+        // post-recovery: bit-exact responses on the new version, flag
+        // cleared — with the fault STILL armed
+        let reply = match service.dispatch(Request::Infer {
+            model: Some("tiny-mlp".into()),
+            image: img.clone(),
+        }) {
+            Response::Infer(r) => r,
+            other => panic!("expected Infer, got {other:?}"),
+        };
+        assert_eq!(reply.logits, oracle, "post-heal responses are bit-exact");
+        assert_eq!(reply.model.unwrap().version, 2);
+        let stats = match service.dispatch(Request::Stats) {
+            Response::Stats(s) => s,
+            other => panic!("expected Stats, got {other:?}"),
+        };
+        let m = stats.models.iter().find(|m| m.model == "tiny-mlp").unwrap();
+        assert!(!m.degraded, "a clean heal must clear the degraded flag");
+
+        // disarm with the empty plan
+        match service.dispatch(Request::FaultInject {
+            model: "tiny-mlp".into(),
+            plan: String::new(),
+        }) {
+            Response::Fault(f) => assert!(!f.armed),
+            other => panic!("expected Fault, got {other:?}"),
+        }
+        // a site spec that does not parse is a typed error
+        match service.dispatch(Request::FaultInject {
+            model: "tiny-mlp".into(),
+            plan: "tile:bogus".into(),
+        }) {
+            Response::Error { message } => assert!(message.contains("fault"), "{message}"),
+            other => panic!("expected Error, got {other:?}"),
+        }
         service.shutdown().unwrap();
     }
 

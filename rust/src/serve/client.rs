@@ -22,6 +22,11 @@
 //! A client whose call dies mid-round-trip poisons itself (the frame
 //! stream may be desynchronized); [`Client::reconnect`] re-establishes
 //! the connection in place, keeping the address and read timeout.
+//! [`Client::connect_with_backoff`] / [`Client::reconnect_with_backoff`]
+//! are the bounded-retry versions: exponential backoff with a
+//! deterministic per-address jitter (no RNG dependency), and a typed
+//! [`RetryExhausted`] error once the attempt budget is spent so
+//! callers can tell "kept refusing" from an ordinary transport error.
 
 use std::collections::{HashMap, HashSet};
 use std::net::TcpStream;
@@ -30,10 +35,56 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Result};
 
 use super::api::{
-    InferReply, MappingSpec, ModelDesc, Request, Response, StatsReply, TraceReply,
+    CanaryReply, FaultReply, InferReply, MappingSpec, ModelDesc, Request, Response, StatsReply,
+    TraceReply,
 };
 use super::registry::ModelStamp;
 use super::wire;
+
+/// Typed terminal error of the bounded-retry connect paths: the
+/// attempt budget is spent and the address still does not answer.
+/// Carried as the root cause inside the returned `anyhow::Error`, so
+/// callers distinguish "gave up after N attempts" from a one-shot
+/// transport failure with `err.downcast_ref::<RetryExhausted>()`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RetryExhausted {
+    /// The address that kept refusing.
+    pub addr: String,
+    /// How many connection attempts were made.
+    pub attempts: u32,
+}
+
+impl std::fmt::Display for RetryExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "gave up connecting to {} after {} attempts",
+            self.addr, self.attempts
+        )
+    }
+}
+
+impl std::error::Error for RetryExhausted {}
+
+/// Backoff before retry `attempt` (0-based): exponential doubling
+/// from `base` (capped at `base << 6`) plus a deterministic jitter in
+/// `[0, delay/4)` hashed from `(addr, attempt)`. Deterministic on
+/// purpose — the schedule is reproducible in tests and needs no RNG
+/// dependency — while still de-correlating: clients retrying
+/// *different* addresses (a router walking its replica set) spread
+/// out instead of hammering in lockstep.
+fn backoff_delay(addr: &str, attempt: u32, base: Duration) -> Duration {
+    let exp = base.saturating_mul(1 << attempt.min(6));
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in addr.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h ^= u64::from(attempt);
+    h = h.wrapping_mul(0x100_0000_01b3);
+    let jitter_cap = (exp.as_micros() as u64 / 4).max(1);
+    exp + Duration::from_micros(h % jitter_cap)
+}
 
 /// One framed connection to a `serve::net` endpoint.
 pub struct Client {
@@ -74,6 +125,59 @@ impl Client {
             next_rid: 0,
             outstanding: HashSet::new(),
             ready: HashMap::new(),
+        })
+    }
+
+    /// [`Self::connect`] with a bounded retry budget: up to
+    /// `attempts` dials, sleeping [`backoff_delay`] (exponential +
+    /// deterministic jitter) between them. Ends in the typed
+    /// [`RetryExhausted`] error once the budget is spent, with the
+    /// last dial failure attached as context.
+    pub fn connect_with_backoff(addr: &str, attempts: u32, base: Duration) -> Result<Self> {
+        let attempts = attempts.max(1);
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..attempts {
+            match Self::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => last = Some(e),
+            }
+            if attempt + 1 < attempts {
+                std::thread::sleep(backoff_delay(addr, attempt, base));
+            }
+        }
+        let root = anyhow::Error::new(RetryExhausted {
+            addr: addr.to_string(),
+            attempts,
+        });
+        Err(match last {
+            Some(e) => root.context(format!("last attempt: {e:#}")),
+            None => root,
+        })
+    }
+
+    /// [`Self::reconnect`] with the same bounded-retry policy as
+    /// [`Self::connect_with_backoff`]; on success the poison is
+    /// cleared and the read timeout reapplied, exactly like a single
+    /// successful `reconnect`.
+    pub fn reconnect_with_backoff(&mut self, attempts: u32, base: Duration) -> Result<()> {
+        let attempts = attempts.max(1);
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..attempts {
+            match self.reconnect() {
+                Ok(()) => return Ok(()),
+                Err(e) => last = Some(e),
+            }
+            if attempt + 1 < attempts {
+                std::thread::sleep(backoff_delay(&self.addr, attempt, base));
+            }
+        }
+        let root = anyhow::Error::new(RetryExhausted {
+            addr: self.addr.clone(),
+            attempts,
+        });
+        Err(match last {
+            Some(e) => root.context(format!("last attempt: {e:#}")),
+            None => root,
         })
     }
 
@@ -368,6 +472,35 @@ impl Client {
         }
     }
 
+    /// Fault plane: arm (or with an empty `plan`, disarm) a
+    /// deterministic fault plan on `model` and get back the
+    /// diagnostic report from the server's seeded probe run.
+    pub fn fault_inject(&mut self, model: &str, plan: &str) -> Result<FaultReply> {
+        let resp = self.call(&Request::FaultInject {
+            model: model.to_string(),
+            plan: plan.to_string(),
+        })?;
+        match Self::ok(resp)? {
+            Response::Fault(f) => Ok(f),
+            other => bail!("unexpected response to fault_inject: {other:?}"),
+        }
+    }
+
+    /// Fault plane: run a seeded canary inference on `model` against
+    /// its refcompute oracle. `heal: true` additionally re-maps the
+    /// model around any armed fault sites when the canary fails.
+    pub fn canary(&mut self, model: &str, seed: u64, heal: bool) -> Result<CanaryReply> {
+        let resp = self.call(&Request::Canary {
+            model: model.to_string(),
+            seed,
+            heal,
+        })?;
+        match Self::ok(resp)? {
+            Response::Canary(c) => Ok(c),
+            other => bail!("unexpected response to canary: {other:?}"),
+        }
+    }
+
     /// Observability plane: record one seeded image on `model` under a
     /// flight recorder and pull back the first `window` events plus a
     /// link-utilization heatmap of the busiest stage.
@@ -381,5 +514,57 @@ impl Client {
             Response::Trace(t) => Ok(t),
             other => bail!("unexpected response to trace: {other:?}"),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_schedule_is_deterministic_exponential_and_jittered() {
+        let base = Duration::from_millis(10);
+        // deterministic: same (addr, attempt) -> same delay
+        for attempt in 0..4 {
+            assert_eq!(
+                backoff_delay("127.0.0.1:7700", attempt, base),
+                backoff_delay("127.0.0.1:7700", attempt, base)
+            );
+        }
+        // exponential envelope: delay n lies in [base<<n, (base<<n)*1.25)
+        for attempt in 0..5u32 {
+            let d = backoff_delay("127.0.0.1:7700", attempt, base);
+            let floor = base * (1 << attempt);
+            assert!(d >= floor, "attempt {attempt}: {d:?} < {floor:?}");
+            assert!(d < floor + floor / 4 + Duration::from_micros(1));
+        }
+        // the exponent caps: attempt 20 does not overflow past <<6
+        let capped = backoff_delay("127.0.0.1:7700", 20, base);
+        let cap_floor = base * (1 << 6);
+        assert!(capped >= cap_floor && capped < cap_floor * 2);
+        // different addresses land on different jitters (de-correlated)
+        assert_ne!(
+            backoff_delay("10.0.0.1:7700", 3, base),
+            backoff_delay("10.0.0.2:7700", 3, base)
+        );
+    }
+
+    #[test]
+    fn connect_with_backoff_ends_in_typed_retry_exhausted() {
+        // grab a free port, then close the listener so dials refuse
+        let port = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let addr = format!("127.0.0.1:{port}");
+        let err = Client::connect_with_backoff(&addr, 2, Duration::from_millis(1))
+            .err()
+            .expect("connecting to a closed port must fail");
+        let typed = err
+            .downcast_ref::<RetryExhausted>()
+            .expect("root cause must be RetryExhausted");
+        assert_eq!(typed.attempts, 2);
+        assert_eq!(typed.addr, addr);
+        assert!(typed.to_string().contains("after 2 attempts"));
     }
 }

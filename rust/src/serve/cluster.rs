@@ -31,6 +31,16 @@
 //!   backend costs retries, not answers. [`Router::drain`] is the
 //!   polite version: the backend stops receiving new work, finishes
 //!   its in-flight requests, and only then is removed.
+//! - **Canary checks.** Dead sockets are the easy failure; a CIM
+//!   tile serving silently-wrong bits answers every probe. So the
+//!   same health pass also runs a seeded canary inference per owned
+//!   model on each backend and compares against the refcompute
+//!   oracle (`Request::Canary`): a backend whose canary fails is
+//!   excluded from routing exactly like a dead one — same owner-set
+//!   re-rank, same repair loop re-loading its models on the
+//!   survivors — while `cluster status` reports it as
+//!   `canary-failed` rather than `DEAD`, because the operator's fix
+//!   is different (re-map or fault-heal, not restart).
 //!
 //! # Security
 //!
@@ -69,6 +79,16 @@ pub struct ClusterConfig {
     /// Read timeout for health probes (shorter: a probe that hangs
     /// this long *is* the failure signal).
     pub health_timeout: Duration,
+    /// Run a seeded canary inference per owned model during each
+    /// health pass, excluding backends that serve silently-wrong
+    /// outputs from routing (see the module docs).
+    pub canary: bool,
+    /// Dial attempts when opening a fresh routed connection
+    /// (exponential backoff with deterministic jitter between them;
+    /// see [`Client::connect_with_backoff`]).
+    pub connect_attempts: u32,
+    /// Base delay of that backoff schedule.
+    pub connect_backoff: Duration,
 }
 
 impl Default for ClusterConfig {
@@ -78,9 +98,17 @@ impl Default for ClusterConfig {
             health_interval: Duration::from_millis(500),
             request_timeout: Duration::from_secs(30),
             health_timeout: Duration::from_secs(2),
+            canary: true,
+            connect_attempts: 3,
+            connect_backoff: Duration::from_millis(10),
         }
     }
 }
+
+/// The image seed canary probes use. Fixed and shared across every
+/// probe: the canary must be deterministic (same image, same oracle)
+/// so a failure is a property of the backend, never of the draw.
+pub const CANARY_SEED: u64 = 0xCA_11_A2;
 
 /// What the router remembers about a model it loaded: enough to
 /// re-load it, bit-identically, on another backend during failover.
@@ -99,6 +127,11 @@ struct Backend {
     alive: AtomicBool,
     /// Draining: finishes in-flight work, receives no new work.
     draining: AtomicBool,
+    /// Last health pass saw a canary inference mismatch its
+    /// refcompute oracle: the socket answers, the bits are wrong.
+    /// Excluded from routing while set; a later passing canary
+    /// clears it.
+    canary_failed: AtomicBool,
     /// Router-observed requests currently in flight (the least-loaded
     /// dispatch signal).
     in_flight: AtomicUsize,
@@ -116,6 +149,7 @@ impl Backend {
             addr,
             alive: AtomicBool::new(true),
             draining: AtomicBool::new(false),
+            canary_failed: AtomicBool::new(false),
             in_flight: AtomicUsize::new(0),
             served: AtomicU64::new(0),
             errors: AtomicU64::new(0),
@@ -132,9 +166,15 @@ impl Backend {
         self.draining.load(Ordering::SeqCst)
     }
 
-    /// Routable: may receive *new* work.
+    fn is_canary_failed(&self) -> bool {
+        self.canary_failed.load(Ordering::SeqCst)
+    }
+
+    /// Routable: may receive *new* work. A failed canary excludes a
+    /// backend exactly like a dead socket — wrong answers served
+    /// fast are worse than no answers.
     fn routable(&self) -> bool {
-        self.is_alive() && !self.is_draining()
+        self.is_alive() && !self.is_draining() && !self.is_canary_failed()
     }
 
     fn mark_dead(&self) {
@@ -190,6 +230,10 @@ pub struct BackendStatus {
     pub addr: String,
     pub alive: bool,
     pub draining: bool,
+    /// The backend answers its socket but its canary inference
+    /// mismatched refcompute — silently corrupt, excluded from
+    /// routing. Disjoint failure mode from `alive: false`.
+    pub canary_failed: bool,
     pub in_flight: u64,
     pub served: u64,
     pub errors: u64,
@@ -212,13 +256,15 @@ impl ClusterStatus {
         for b in &self.backends {
             let state = if !b.alive {
                 "DEAD"
+            } else if b.canary_failed {
+                "canary-failed"
             } else if b.draining {
                 "draining"
             } else {
                 "alive"
             };
             out.push_str(&format!(
-                "  {:<22} {:<8} in-flight {:>3}  served {:>6}  errors {:>4}  [{}]\n",
+                "  {:<22} {:<13} in-flight {:>3}  served {:>6}  errors {:>4}  [{}]\n",
                 b.addr,
                 state,
                 b.in_flight,
@@ -304,6 +350,14 @@ impl Router {
         self.inner.reconcile();
     }
 
+    /// Probe-only pass: liveness and canary checks without the
+    /// repair loop. `domino cluster status` uses this to observe
+    /// (including the canary-failed state) without loading models
+    /// onto anything.
+    pub fn probe_pass(&self) {
+        self.inner.probe_all();
+    }
+
     /// Drain-aware removal: `addr` stops receiving new work, its
     /// in-flight requests finish (bounded by `deadline`), then it is
     /// marked dead and its models are re-loaded onto the owners that
@@ -338,6 +392,7 @@ impl Router {
                 addr: b.addr.clone(),
                 alive: b.is_alive(),
                 draining: b.is_draining(),
+                canary_failed: b.is_canary_failed(),
                 in_flight: b.in_flight.load(Ordering::SeqCst) as u64,
                 served: b.served.load(Ordering::SeqCst),
                 errors: b.errors.load(Ordering::SeqCst),
@@ -447,7 +502,14 @@ impl RouterInner {
         let mut client = match be.pool.lock().unwrap().pop() {
             Some(c) => c,
             None => {
-                let mut c = Client::connect(&be.addr)?;
+                // bounded backoff: ride out a transient refusal (a
+                // backend mid-restart) without hammering it, give up
+                // with a typed error so the caller fails over
+                let mut c = Client::connect_with_backoff(
+                    &be.addr,
+                    self.cfg.connect_attempts,
+                    self.cfg.connect_backoff,
+                )?;
                 c.set_read_timeout(Some(self.cfg.request_timeout))?;
                 c
             }
@@ -500,25 +562,73 @@ impl RouterInner {
     /// Probe every backend: `ListModels` doubles as liveness check
     /// and loaded-set report. A fresh connection per probe, so a
     /// backend that died and restarted is re-discovered without
-    /// fighting stale pooled sockets.
+    /// fighting stale pooled sockets. With [`ClusterConfig::canary`]
+    /// on, the same connection then runs one seeded canary inference
+    /// per owned model: a mismatch against the refcompute oracle
+    /// marks the backend canary-failed (excluded from routing until
+    /// a later canary passes), which is how a silently-corrupting
+    /// tile fails over despite answering every liveness probe.
     fn probe_all(&self) {
+        let table: BTreeSet<String> = self.models.lock().unwrap().keys().cloned().collect();
         for be in &self.backends {
             if be.is_draining() && !be.is_alive() {
                 continue; // drained and removed; leave it dead
             }
-            let probe = (|| -> Result<Vec<String>> {
+            let probe = (|| -> Result<(Client, Vec<String>)> {
                 let mut c = Client::connect(&be.addr)?;
                 c.set_read_timeout(Some(self.cfg.health_timeout))?;
-                Ok(c.models()?.into_iter().map(|d| d.name).collect())
+                let names = c.models()?.into_iter().map(|d| d.name).collect();
+                Ok((c, names))
             })();
             match probe {
-                Ok(names) => {
-                    *be.loaded.lock().unwrap() = names.into_iter().collect();
+                Ok((mut c, names)) => {
+                    *be.loaded.lock().unwrap() = names.iter().cloned().collect();
                     be.alive.store(true, Ordering::SeqCst);
+                    if self.cfg.canary {
+                        self.canary_backend(be, &mut c, &names, &table);
+                    }
                 }
                 Err(_) => be.mark_dead(),
             }
         }
+    }
+
+    /// Canary every model of `names` the router knows about, over the
+    /// already-open probe connection. Sets or clears the backend's
+    /// canary flag from what this pass actually observed; a transport
+    /// death mid-canary is an ordinary liveness failure. A backend
+    /// too old to know the `Canary` request answers with a typed
+    /// error — treated as "no canary coverage", not as corruption.
+    fn canary_backend(
+        &self,
+        be: &Backend,
+        c: &mut Client,
+        names: &[String],
+        table: &BTreeSet<String>,
+    ) {
+        let mut failed = false;
+        for name in names.iter().filter(|n| table.contains(n.as_str())) {
+            match c.call(&Request::Canary {
+                model: name.clone(),
+                seed: CANARY_SEED,
+                heal: false,
+            }) {
+                Ok(Response::Canary(v)) if !v.ok => {
+                    eprintln!(
+                        "domino-cluster: canary failed on {} for {name}: \
+                         {}/{} outputs wrong",
+                        be.addr, v.mismatched, v.outputs
+                    );
+                    failed = true;
+                }
+                Ok(_) => {}
+                Err(_) => {
+                    be.mark_dead();
+                    return;
+                }
+            }
+        }
+        be.canary_failed.store(failed, Ordering::SeqCst);
     }
 
     /// The repair loop: every model in the router's table must be
@@ -553,7 +663,9 @@ impl RouterInner {
             Request::ListModels => self.route_list(),
             Request::ModelInfo { model } => self.route_to_primary(Request::ModelInfo { model }),
             Request::Stats => self.route_stats(),
-            req @ Request::Trace { .. } => self.route_to_primary(req),
+            req @ (Request::Trace { .. }
+            | Request::FaultInject { .. }
+            | Request::Canary { .. }) => self.route_to_primary(req),
         };
         r.unwrap_or_else(|e| Response::Error {
             message: format!("{e:#}"),
@@ -735,17 +847,30 @@ impl RouterInner {
         Ok(Response::Models(by_name.into_values().collect()))
     }
 
-    /// Model-specific reads route to the primary owner (rendezvous
-    /// rank 0): one consistent answerer per model.
+    /// Model-specific calls route to the primary owner (rendezvous
+    /// rank 0): one consistent answerer per model. The fault plane
+    /// rides this path too — `FaultInject` arms the primary's local
+    /// fault plan, `Canary` checks/heals the same backend the next
+    /// infer would hit.
     fn route_to_primary(&self, req: Request) -> Result<Response> {
         let model = match &req {
-            Request::ModelInfo { model } | Request::Trace { model, .. } => {
-                Self::canonical(model)
-            }
-            _ => unreachable!("route_to_primary only handles ModelInfo/Trace"),
+            Request::ModelInfo { model }
+            | Request::Trace { model, .. }
+            | Request::FaultInject { model, .. }
+            | Request::Canary { model, .. } => Self::canonical(model),
+            _ => unreachable!("route_to_primary only handles model-addressed requests"),
         };
-        let owners = self.owners(&model);
-        let be = owners
+        // ranked over *alive* backends, deliberately including
+        // canary-failed ones: the fault plane must reach a sick
+        // primary to inspect or heal it — routing that excluded it
+        // from new infer work must not also quarantine its cure
+        let mut ranked: Vec<&Arc<Backend>> = self
+            .backends
+            .iter()
+            .filter(|b| b.is_alive() && !b.is_draining())
+            .collect();
+        ranked.sort_by_key(|b| std::cmp::Reverse(rendezvous_score(&model, &b.addr)));
+        let be = ranked
             .first()
             .ok_or_else(|| anyhow!("no live backend available for model {model:?}"))?;
         self.call_backend(be, &req)
@@ -793,6 +918,9 @@ impl RouterInner {
                         acc.p50_us = acc.p50_us.max(m.p50_us);
                         acc.p95_us = acc.p95_us.max(m.p95_us);
                         acc.p99_us = acc.p99_us.max(m.p99_us);
+                        // OR-fold: one degraded replica degrades the
+                        // cluster view of the model
+                        acc.degraded = acc.degraded || m.degraded;
                     })
                     .or_insert(m);
             }
@@ -901,6 +1029,40 @@ mod tests {
         let mut sorted = owners.clone();
         sorted.sort_by_key(|b| b.in_flight.load(Ordering::SeqCst));
         assert_eq!(sorted[0].addr, owners[0].addr);
+    }
+
+    #[test]
+    fn canary_failure_excludes_from_routing_but_renders_distinctly() {
+        let r = router(&["a:1", "b:2", "c:3"], 2);
+        let owners = r.inner.owners("tiny-mlp");
+        let primary_addr = owners[0].addr.clone();
+        let primary = r
+            .inner
+            .backends
+            .iter()
+            .find(|b| b.addr == primary_addr)
+            .unwrap();
+        // a failed canary excludes from routing exactly like death...
+        primary.canary_failed.store(true, Ordering::SeqCst);
+        assert!(primary.is_alive(), "canary failure is not a dead socket");
+        assert!(!primary.routable());
+        let after = r.inner.owners("tiny-mlp");
+        assert!(after.iter().all(|b| b.addr != primary_addr));
+        // ...but status tells the two states apart
+        let status = r.status();
+        let rendered = status.render();
+        assert!(rendered.contains("canary-failed"), "{rendered}");
+        assert!(!rendered.contains("DEAD"), "{rendered}");
+        let bs = status
+            .backends
+            .iter()
+            .find(|b| b.addr == primary_addr)
+            .unwrap();
+        assert!(bs.alive && bs.canary_failed);
+        // a passing canary restores the backend
+        primary.canary_failed.store(false, Ordering::SeqCst);
+        assert!(primary.routable());
+        assert!(!r.status().render().contains("canary-failed"));
     }
 
     #[test]

@@ -102,6 +102,10 @@ struct ModelMetrics {
     window: Vec<u64>,
     /// Next slot to overwrite once the window is full (ring cursor).
     cursor: usize,
+    /// The fault plane flagged this model as producing silently-wrong
+    /// outputs (canary mismatch / armed fault injection). Cleared when
+    /// a re-map heals it.
+    degraded: bool,
 }
 
 impl ModelMetrics {
@@ -132,6 +136,10 @@ pub struct ModelMetricsSnapshot {
     pub p50_us: Option<u64>,
     pub p95_us: Option<u64>,
     pub p99_us: Option<u64>,
+    /// The fault plane flagged this model as silently corrupting
+    /// outputs; serving continues but responses are suspect until a
+    /// re-map clears the flag.
+    pub degraded: bool,
 }
 
 /// The per-model metrics hub shared by the submit path and the worker
@@ -197,6 +205,12 @@ impl MetricsHub {
         self.with(model, |m| m.traced += 1);
     }
 
+    /// Set or clear the fault plane's degraded flag for `model`
+    /// (canary mismatch sets it, a successful re-map clears it).
+    pub(crate) fn set_degraded(&self, model: &str, degraded: bool) {
+        self.with(model, |m| m.degraded = degraded);
+    }
+
     /// Snapshot every model's counters and window percentiles, in name
     /// order.
     pub fn snapshot(&self) -> Vec<ModelMetricsSnapshot> {
@@ -219,6 +233,7 @@ impl MetricsHub {
                     p50_us: percentile_of_sorted(&sorted, 50.0),
                     p95_us: percentile_of_sorted(&sorted, 95.0),
                     p99_us: percentile_of_sorted(&sorted, 99.0),
+                    degraded: m.degraded,
                 }
             })
             .collect()
@@ -319,6 +334,17 @@ mod tests {
             assert_eq!(percentile_of_sorted(&sorted, p), percentile_us(&samples, p));
         }
         assert_eq!(percentile_of_sorted(&[], 50.0), None);
+    }
+
+    #[test]
+    fn degraded_flag_sets_and_clears() {
+        let hub = MetricsHub::new();
+        hub.on_served("m", Duration::from_micros(7));
+        assert!(!hub.snapshot()[0].degraded);
+        hub.set_degraded("m", true);
+        assert!(hub.snapshot()[0].degraded);
+        hub.set_degraded("m", false);
+        assert!(!hub.snapshot()[0].degraded);
     }
 
     #[test]

@@ -20,10 +20,14 @@
 //! * [`api`] — the typed service surface: `Request`/`Response` enums
 //!   covering the data plane (`Infer`), the admin plane
 //!   (`Load`/`LoadSeeded`/`Swap`/`Unload`) and the observability plane
-//!   (`ListModels`/`ModelInfo`/`Stats`), all executed by one
-//!   [`Service::dispatch`] — the in-process path and the network path
-//!   are the same call. [`api::RegistryManifest`] persists the loaded
-//!   set across restarts (`serve --registry-file`).
+//!   (`ListModels`/`ModelInfo`/`Stats`) and the fault plane
+//!   (`FaultInject` arms a deterministic [`crate::sim::FaultPlan`] on
+//!   a model, `Canary` runs a seeded sentinel inference against the
+//!   refcompute oracle and, with `heal`, re-maps the model around the
+//!   armed fault sites) — all executed by one [`Service::dispatch`] —
+//!   the in-process path and the network path are the same call.
+//!   [`api::RegistryManifest`] persists the loaded set across
+//!   restarts (`serve --registry-file`).
 //! * [`wire`] — the dependency-free wire protocol: length-prefixed
 //!   frames of hand-rolled, escaping-correct JSON (std only; the
 //!   build image is offline, so no serde).
@@ -39,6 +43,10 @@
 //!   rendezvous hashing with replication, least-loaded dispatch among
 //!   replicas, health probing, and drain-aware failover that re-loads
 //!   models from the router's recorded (zoo, seed, mapping) specs.
+//!   The health thread also runs per-model canary inferences, so a
+//!   backend that answers the socket but serves silently-wrong bits
+//!   (a faulty tile) is excluded from routing exactly like a dead
+//!   one — `cluster status` tells the two states apart.
 //! * [`client`] — the in-crate typed client (`domino client …`, the
 //!   benches and the protocol smoke test); synchronous calls plus a
 //!   pipelined submit/await-by-id mode over one connection.

@@ -12,7 +12,7 @@ use std::sync::{Arc, OnceLock, RwLock};
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::api::MappingDesc;
-use crate::coordinator::{ArchConfig, Compiler, Program};
+use crate::coordinator::{ArchConfig, Compiler, Program, TileMask};
 use crate::model::refcompute::Weights;
 use crate::model::Network;
 
@@ -312,6 +312,44 @@ impl ModelRegistry {
         Ok(mv)
     }
 
+    /// Re-map `name` around a [`TileMask`] of known-bad tiles/links:
+    /// the current version's **exact weights** are re-materialized
+    /// onto a placement that provably avoids every masked resource,
+    /// published as version+1 (same drain semantics as [`Self::swap`]
+    /// — in-flight requests complete on the version they resolved).
+    /// This is the fault-recovery path: outputs are weight-determined,
+    /// so the re-mapped model is refcompute-bit-exact with the old one
+    /// while the bad tiles go unused. Errors if the version was
+    /// registered without weights ([`Self::load_prebuilt`]).
+    pub fn remap_masked(&self, name: &str, mask: &TileMask) -> Result<Arc<ModelVersion>> {
+        let Some(cur) = self.get(name) else {
+            bail!(
+                "model {name:?} is not loaded (loaded: [{}])",
+                self.names().join(", ")
+            );
+        };
+        let weights = cur
+            .weights()
+            .cloned()
+            .ok_or_else(|| anyhow!("model {name:?} was registered without weights"))?;
+        let net = cur.program().net.clone();
+        // compile outside the lock, like swap: traffic keeps serving
+        // the (possibly corrupting) old version until publish — the
+        // caller marks the model degraded in the meantime
+        let program = Compiler::new(cur.arch())
+            .compile_with_weights_masked(&net, &weights, mask)
+            .with_context(|| format!("re-map {name:?} around mask {mask}"))?;
+        let mut m = self.models.write().unwrap();
+        let Some(old_version) = m.get(name).map(|old| old.version) else {
+            bail!("model {name:?} was unloaded during the re-map");
+        };
+        let mv = self.mint(name, old_version + 1, Arc::new(program), Some(weights));
+        m.insert(name.to_string(), Arc::clone(&mv));
+        drop(m);
+        self.bump_generation();
+        Ok(mv)
+    }
+
     /// Remove `name`. Requests already accepted keep their
     /// `Arc<ModelVersion>` and complete normally; new submissions for
     /// the name are rejected.
@@ -432,6 +470,33 @@ mod tests {
         assert!(registry.unload("alpha").is_err());
         assert_eq!(registry.generation(), gen_after);
         assert!(registry.get("alpha").is_none());
+    }
+
+    #[test]
+    fn remap_masked_relocates_without_changing_outputs() {
+        let registry = ModelRegistry::new();
+        let net = small_net();
+        let v1 = registry.load("m", &net, ArchConfig::default()).unwrap();
+        let img = vec![2i8; net.input_len()];
+        let before = v1.refcompute(&img).unwrap();
+
+        // ban the first tile the base placement used
+        let bad = v1.program().tile_coords()[0];
+        let mut mask = TileMask::new();
+        mask.ban_tile(bad);
+        let v2 = registry.remap_masked("m", &mask).unwrap();
+
+        assert_eq!(v2.version(), 2, "re-map publishes version+1");
+        assert_ne!(v2.id(), v1.id(), "re-map mints a fresh pool key");
+        assert!(
+            v2.program().tile_coords().iter().all(|&c| c != bad),
+            "masked tile must go unused"
+        );
+        // weights are carried over bit-exactly, so outputs match
+        assert_eq!(v2.refcompute(&img).unwrap(), before);
+
+        // unknown model and weight-less versions are typed errors
+        assert!(registry.remap_masked("nope", &mask).is_err());
     }
 
     #[test]

@@ -399,6 +399,23 @@ impl Server {
         self.shared.metrics.on_trace(model);
     }
 
+    /// Count an inference served inline by the fault plane (`serve::
+    /// api` runs armed models through a fault-injecting engine on the
+    /// dispatching thread, bypassing the queue so corruption is
+    /// deterministic per request). To the client this is ordinary data
+    /// plane traffic, so it lands in the same served counters and
+    /// latency windows.
+    pub(crate) fn note_fault_serve(&self, model: &str, latency: Duration) {
+        self.shared.served.fetch_add(1, Ordering::Relaxed);
+        self.shared.metrics.on_served(model, latency);
+    }
+
+    /// Set or clear the fault plane's degraded flag for `model` in the
+    /// per-model metrics (surfaced by `Stats`).
+    pub(crate) fn set_degraded(&self, model: &str, degraded: bool) {
+        self.shared.metrics.set_degraded(model, degraded);
+    }
+
     /// Stop workers and join them; returns per-worker served counts.
     ///
     /// Workers drain the queue before exiting, so every request

@@ -671,6 +671,19 @@ pub fn request_to_json(req: &api::Request) -> Json {
             ("image_seed", u(*image_seed)),
             ("window", u(*window)),
         ]),
+        R::FaultInject { model, plan } => obj(vec![
+            ("type", s("fault_inject")),
+            ("model", s(model)),
+            // the plan travels as its canonical spec string
+            // (`FaultPlan::parse`/`spec` round-trip bit-exactly)
+            ("plan", s(plan)),
+        ]),
+        R::Canary { model, seed, heal } => obj(vec![
+            ("type", s("canary")),
+            ("model", s(model)),
+            ("seed", u(*seed)),
+            ("heal", Json::Bool(*heal)),
+        ]),
     }
 }
 
@@ -716,6 +729,15 @@ pub fn request_from_json(v: &Json) -> Result<api::Request> {
             model: str_field(v, "model")?,
             image_seed: u64_field(v, "image_seed")?,
             window: u64_field(v, "window")?,
+        }),
+        "fault_inject" => Ok(api::Request::FaultInject {
+            model: str_field(v, "model")?,
+            plan: str_field(v, "plan")?,
+        }),
+        "canary" => Ok(api::Request::Canary {
+            model: str_field(v, "model")?,
+            seed: u64_field(v, "seed")?,
+            heal: bool_field(v, "heal")?,
         }),
         other => bail!("unknown request type {other:?}"),
     }
@@ -822,6 +844,7 @@ fn snapshot_to_json(m: &ModelMetricsSnapshot) -> Json {
         ("p50_us", opt_u(m.p50_us)),
         ("p95_us", opt_u(m.p95_us)),
         ("p99_us", opt_u(m.p99_us)),
+        ("degraded", Json::Bool(m.degraded)),
     ])
 }
 
@@ -837,6 +860,9 @@ fn snapshot_from_json(v: &Json) -> Result<ModelMetricsSnapshot> {
         p50_us: opt_u64_field(v, "p50_us")?,
         p95_us: opt_u64_field(v, "p95_us")?,
         p99_us: opt_u64_field(v, "p99_us")?,
+        // optional (default false) so frames recorded before the fault
+        // plane existed still decode
+        degraded: opt_bool_field(v, "degraded")?.unwrap_or(false),
     })
 }
 
@@ -953,6 +979,28 @@ pub fn response_to_json(resp: &api::Response) -> Json {
             }
             Json::Obj(fields)
         }
+        R::Fault(f) => obj(vec![
+            ("type", s("fault")),
+            ("model", stamp_to_json(&f.model)),
+            ("armed", Json::Bool(f.armed)),
+            ("sites", u(f.sites)),
+            ("fires", u(f.fires)),
+            ("lanes", u(f.lanes)),
+            ("corrupted", Json::Bool(f.corrupted)),
+            ("mismatched", u(f.mismatched)),
+            ("outputs", u(f.outputs)),
+            ("report", s(&f.report)),
+        ]),
+        R::Canary(c) => obj(vec![
+            ("type", s("canary")),
+            ("model", stamp_to_json(&c.model)),
+            ("ok", Json::Bool(c.ok)),
+            ("mismatched", u(c.mismatched)),
+            ("outputs", u(c.outputs)),
+            ("remapped", Json::Bool(c.remapped)),
+            ("healed", Json::Bool(c.healed)),
+            ("version", u(c.version)),
+        ]),
         R::Error { message } => obj(vec![("type", s("error")), ("message", s(message))]),
     }
 }
@@ -1009,6 +1057,26 @@ pub fn response_from_json(v: &Json) -> Result<api::Response> {
             }))
         }
         "trace" => Ok(api::Response::Trace(trace_reply_from_json(v)?)),
+        "fault" => Ok(api::Response::Fault(api::FaultReply {
+            model: stamp_from_json(field(v, "model")?)?,
+            armed: bool_field(v, "armed")?,
+            sites: u64_field(v, "sites")?,
+            fires: u64_field(v, "fires")?,
+            lanes: u64_field(v, "lanes")?,
+            corrupted: bool_field(v, "corrupted")?,
+            mismatched: u64_field(v, "mismatched")?,
+            outputs: u64_field(v, "outputs")?,
+            report: str_field(v, "report")?,
+        })),
+        "canary" => Ok(api::Response::Canary(api::CanaryReply {
+            model: stamp_from_json(field(v, "model")?)?,
+            ok: bool_field(v, "ok")?,
+            mismatched: u64_field(v, "mismatched")?,
+            outputs: u64_field(v, "outputs")?,
+            remapped: bool_field(v, "remapped")?,
+            healed: bool_field(v, "healed")?,
+            version: u64_field(v, "version")?,
+        })),
         "error" => Ok(api::Response::Error {
             message: str_field(v, "message")?,
         }),
@@ -1413,6 +1481,87 @@ mod tests {
             r#"{"type":"trace","model":"tiny-cnn","image_seed":7,"window":64}"#
         );
         assert_eq!(decode_request(&encode_request(&req)).unwrap(), req);
+    }
+
+    #[test]
+    fn fault_plane_frames_are_stable_and_roundtrip() {
+        // requests: pinned bytes + round-trips
+        let inject = api::Request::FaultInject {
+            model: "tiny-cnn".to_string(),
+            plan: "tile:0:1:2:stuck:-7;link:0:0:3:flip:5@10-90".to_string(),
+        };
+        assert_eq!(
+            String::from_utf8(encode_request(&inject)).unwrap(),
+            r#"{"type":"fault_inject","model":"tiny-cnn","plan":"tile:0:1:2:stuck:-7;link:0:0:3:flip:5@10-90"}"#
+        );
+        assert_eq!(decode_request(&encode_request(&inject)).unwrap(), inject);
+        let canary = api::Request::Canary {
+            model: "tiny-cnn".to_string(),
+            seed: 42,
+            heal: true,
+        };
+        assert_eq!(
+            String::from_utf8(encode_request(&canary)).unwrap(),
+            r#"{"type":"canary","model":"tiny-cnn","seed":42,"heal":true}"#
+        );
+        assert_eq!(decode_request(&encode_request(&canary)).unwrap(), canary);
+
+        // replies round-trip bit-exactly
+        let stamp = ModelStamp {
+            name: Arc::from("tiny-cnn"),
+            id: 9,
+            version: 3,
+        };
+        let fault = api::Response::Fault(api::FaultReply {
+            model: stamp.clone(),
+            armed: true,
+            sites: 2,
+            fires: 1000,
+            lanes: 64_000,
+            corrupted: true,
+            mismatched: 4,
+            outputs: 10,
+            report: "tile:0:1:2:stuck:-7 fires 1000\n".to_string(),
+        });
+        assert_eq!(decode_response(&encode_response(&fault)).unwrap(), fault);
+        let canary = api::Response::Canary(api::CanaryReply {
+            model: stamp,
+            ok: false,
+            mismatched: 4,
+            outputs: 10,
+            remapped: true,
+            healed: true,
+            version: 4,
+        });
+        assert_eq!(decode_response(&encode_response(&canary)).unwrap(), canary);
+
+        // missing fields are typed errors
+        assert!(decode_request(br#"{"type":"fault_inject","model":"m"}"#).is_err());
+        assert!(decode_request(br#"{"type":"canary","model":"m","seed":1}"#).is_err());
+    }
+
+    #[test]
+    fn snapshot_degraded_flag_is_back_compatible() {
+        let m = ModelMetricsSnapshot {
+            model: "m".to_string(),
+            served: 1,
+            failed: 0,
+            rejected: 0,
+            traced: 0,
+            queue_depth: 0,
+            samples: 1,
+            p50_us: Some(5),
+            p95_us: Some(5),
+            p99_us: Some(5),
+            degraded: true,
+        };
+        let text = encode(&snapshot_to_json(&m));
+        assert_eq!(snapshot_from_json(&decode(&text).unwrap()).unwrap(), m);
+        // a pre-fault-plane frame (no "degraded" field) decodes as
+        // not-degraded — traffic logs outlive protocol revisions
+        let legacy = r#"{"model":"m","served":1,"failed":0,"rejected":0,"traced":0,"queue_depth":0,"samples":1,"p50_us":5,"p95_us":5,"p99_us":5}"#;
+        let got = snapshot_from_json(&decode(legacy).unwrap()).unwrap();
+        assert!(!got.degraded);
     }
 
     #[test]

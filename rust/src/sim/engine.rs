@@ -102,6 +102,7 @@ use crate::model::refcompute::Tensor;
 use crate::model::TensorShape;
 use crate::noc::link::LinkKind;
 use crate::noc::packet::{PsumArena, PsumRef};
+use crate::sim::fault::{FaultInjector, FaultPlan, FaultReport, Faults, NoFaults};
 use crate::sim::flight::{FlightRecorder, NullProbe, Probe, RecorderConfig, Recording, NO_TILE};
 use crate::sim::pipeline::{run_pipelined, PipelineRun};
 use crate::sim::stats::Counters;
@@ -321,7 +322,16 @@ struct Scratch {
 /// bodies and `P::ENABLED` is a false constant), so the seam costs
 /// zero on the hot path — the `engine_perf` frozen-baseline gate runs
 /// against exactly this instantiation.
-struct EngineCore<P: Probe = NullProbe> {
+///
+/// Fault injection is a second type parameter with the same contract
+/// ([`crate::sim::fault`]): the default [`NoFaults`] compiles every
+/// fault hook out, so the `EngineCore<NullProbe, NoFaults>`
+/// instantiation — what every pre-existing constructor builds — is the
+/// unchanged hot path. A [`FaultInjector`] corrupts psum *values* at
+/// the tile-MVM and link-transfer sites; event structure, timing and
+/// counters stay clean-run-identical (that is what makes the
+/// corruption *silent* and the serve-plane canary necessary).
+struct EngineCore<P: Probe = NullProbe, F: Faults = NoFaults> {
     /// Per-stage tile runtime state (indexed by stage; a `Res` stage's
     /// slot holds its projection's chains).
     state: Vec<Vec<ChainRt>>,
@@ -340,6 +350,8 @@ struct EngineCore<P: Probe = NullProbe> {
     /// The instrumentation sink (statically compiled out for
     /// [`NullProbe`]).
     probe: P,
+    /// The fault seam (statically compiled out for [`NoFaults`]).
+    faults: F,
 }
 
 impl EngineCore {
@@ -350,6 +362,12 @@ impl EngineCore {
 
 impl<P: Probe> EngineCore<P> {
     fn with_probe(program: &Program, probe: P) -> Self {
+        Self::with_instruments(program, probe, NoFaults)
+    }
+}
+
+impl<P: Probe, F: Faults> EngineCore<P, F> {
+    fn with_instruments(program: &Program, probe: P, faults: F) -> Self {
         let n = program.stages.len();
         let mut skip_needed = vec![false; n];
         for stage in &program.stages {
@@ -381,6 +399,7 @@ impl<P: Probe> EngineCore<P> {
             stats: Counters::new(),
             stage_stats: vec![Counters::new(); n],
             probe,
+            faults,
         }
     }
 
@@ -759,10 +778,12 @@ impl<P: Probe> EngineCore<P> {
                     let sum_ref: Option<PsumRef> = if cfg.is_chain_start {
                         if cfg.is_last {
                             pe.mvm_into(&tiles[ci].xbuf, &mut scratch.mac, st);
+                            self.faults.tile_psum(si, cfg.coord, slot, &mut scratch.mac);
                             None
                         } else {
                             let r = arena.alloc(opos);
                             pe.mvm_into(&tiles[ci].xbuf, arena.data_mut(r), st);
+                            self.faults.tile_psum(si, cfg.coord, slot, arena.data_mut(r));
                             Some(r)
                         }
                     } else {
@@ -789,6 +810,10 @@ impl<P: Probe> EngineCore<P> {
                         }
                         prev.opos = opos;
                         pe.mvm_into(&tiles[ci].xbuf, &mut scratch.mac, st);
+                        // a faulty tile corrupts *its own* MVM
+                        // contribution; the accumulated psum from
+                        // upstream still passes through it intact
+                        self.faults.tile_psum(si, cfg.coord, slot, &mut scratch.mac);
                         Rofm::add_psum_slices(arena.data_mut(prev), &scratch.mac, st);
                         Some(prev)
                     };
@@ -839,6 +864,14 @@ impl<P: Probe> EngineCore<P> {
                             LinkKind::OnChip => st.onchip_link_bits += pbits,
                         }
                         self.probe.link(si, chain.mblock, ci, slot, kind, pbits);
+                        self.faults.link_psum(
+                            si,
+                            cfg.coord,
+                            chain.tiles[ci + 1].coord,
+                            slot,
+                            kind,
+                            arena.data_mut(r),
+                        );
                         self.probe
                             .action(si, chain.mblock, ci, slot, ActionKind::Acc { opos });
                         let next_is_row_head = chain.tiles[ci + 1].is_row_head;
@@ -953,10 +986,12 @@ impl<P: Probe> EngineCore<P> {
                     scratch.fc_acc.clear();
                     scratch.fc_acc.resize(t.cols, 0);
                     pe.mvm_into(&scratch.fc_x, &mut scratch.fc_acc, st);
+                    self.faults.tile_psum(si, t.coord, rb, &mut scratch.fc_acc);
                 } else {
                     scratch.mac.clear();
                     scratch.mac.resize(t.cols, 0);
                     pe.mvm_into(&scratch.fc_x, &mut scratch.mac, st);
+                    self.faults.tile_psum(si, t.coord, rb, &mut scratch.mac);
                     // psum moved one hop down the column
                     let pbits = (scratch.fc_acc.len() * 32) as u64;
                     let kind =
@@ -966,6 +1001,15 @@ impl<P: Probe> EngineCore<P> {
                         LinkKind::OnChip => st.onchip_link_bits += pbits,
                     }
                     self.probe.link(si, coli, rb, rb, kind, pbits);
+                    // the column psum is in flight over this link
+                    self.faults.link_psum(
+                        si,
+                        col.tiles[rb - 1].coord,
+                        t.coord,
+                        rb,
+                        kind,
+                        &mut scratch.fc_acc,
+                    );
                     Rofm::charge_rx(pbits, st);
                     Rofm::add_psum_slices(&mut scratch.fc_acc, &scratch.mac, st);
                 }
@@ -1002,14 +1046,14 @@ impl<P: Probe> EngineCore<P> {
 /// images run, plus a pool of per-thread worker engines that
 /// [`Self::run_batch_threads`] builds once and reuses across batch
 /// calls (no per-batch state spin-up).
-pub struct Simulator<'p, P: Probe = NullProbe> {
+pub struct Simulator<'p, P: Probe = NullProbe, F: Faults = NoFaults> {
     program: &'p Program,
-    core: EngineCore<P>,
+    core: EngineCore<P, F>,
     /// Reusable worker engines for the batched path: grown on first
     /// use, counters reset and tile state reused on every subsequent
-    /// batch. Worker probes are forked from the main probe and merged
-    /// back in chunk order after every batch.
-    batch_workers: Vec<EngineCore<P>>,
+    /// batch. Worker probes and fault injectors are forked from the
+    /// main ones and merged back in chunk order after every batch.
+    batch_workers: Vec<EngineCore<P, F>>,
 }
 
 impl<'p> Simulator<'p> {
@@ -1039,7 +1083,12 @@ impl<'p> Simulator<'p, FlightRecorder> {
     pub fn with_recorder(program: &'p Program, cfg: RecorderConfig) -> Self {
         Self::with_probe(program, FlightRecorder::new(cfg))
     }
+}
 
+/// Recording accessors for *any* recorder-probed simulator — with or
+/// without a fault injector, so a faulty run's event stream can be
+/// diffed against a clean one's ([`crate::sim::flight::diff`]).
+impl<'p, F: Faults> Simulator<'p, FlightRecorder, F> {
     /// Snapshot the recorded event stream. After a threaded batch the
     /// per-worker recordings are already merged in chunk order, so the
     /// stream is in sequential image order regardless of thread count.
@@ -1058,9 +1107,46 @@ impl<'p, P: Probe> Simulator<'p, P> {
     /// for the event seam; [`Simulator::with_recorder`] is the common
     /// instrumented constructor).
     pub fn with_probe(program: &'p Program, probe: P) -> Self {
+        Self::with_instruments(program, probe, NoFaults)
+    }
+}
+
+impl<'p> Simulator<'p, NullProbe, FaultInjector> {
+    /// A simulator whose engine deterministically injects the given
+    /// [`FaultPlan`] (see [`crate::sim::fault`]): matching tile MVM
+    /// outputs and psum link transfers have their *values* corrupted in
+    /// place, while event structure, timing and counters stay
+    /// clean-run-identical. [`Self::fault_report`] says what fired.
+    pub fn with_faults(program: &'p Program, plan: FaultPlan) -> Self {
+        Self::with_instruments(program, NullProbe, FaultInjector::new(plan))
+    }
+}
+
+/// Fault-report accessors for *any* injector-armed simulator — with
+/// or without a probe, so an instrumented faulty run can both report
+/// and be diffed.
+impl<'p, P: Probe> Simulator<'p, P, FaultInjector> {
+    /// Which sites fired so far, when, and their blast radius. After a
+    /// threaded batch the per-worker fire counters are already merged,
+    /// so the report is thread-count-invariant.
+    pub fn fault_report(&self) -> FaultReport {
+        self.core.faults.report()
+    }
+
+    /// The armed fault plan.
+    pub fn fault_plan(&self) -> &FaultPlan {
+        self.core.faults.plan()
+    }
+}
+
+impl<'p, P: Probe, F: Faults> Simulator<'p, P, F> {
+    /// The fully general constructor: an explicit probe *and* an
+    /// explicit fault implementation. [`Simulator::with_probe`] /
+    /// [`Simulator::with_faults`] are the common special cases.
+    pub fn with_instruments(program: &'p Program, probe: P, faults: F) -> Self {
         Self {
             program,
-            core: EngineCore::with_probe(program, probe),
+            core: EngineCore::with_instruments(program, probe, faults),
             batch_workers: Vec::new(),
         }
     }
@@ -1154,18 +1240,22 @@ impl<'p, P: Probe> Simulator<'p, P> {
             // Worker probes are forked from the main probe (same
             // configuration, empty buffers).
             while self.batch_workers.len() < threads {
-                self.batch_workers
-                    .push(EngineCore::with_probe(program, self.core.probe.fork()));
+                self.batch_workers.push(EngineCore::with_instruments(
+                    program,
+                    self.core.probe.fork(),
+                    self.core.faults.fork(),
+                ));
             }
             let capture = self.core.capture;
             let workers = &mut self.batch_workers[..threads];
             for w in workers.iter_mut() {
                 w.reset_stats();
                 // workers inherit this simulator's capture mode; any
-                // events left from a previous (possibly failed) batch
-                // are dropped
+                // events or fault fires left from a previous (possibly
+                // failed) batch are dropped
                 w.capture = capture;
                 w.probe.clear();
+                w.faults.clear();
             }
             let joined: Vec<std::thread::Result<Result<Vec<RunOutput>>>> =
                 std::thread::scope(|s| {
@@ -1201,6 +1291,7 @@ impl<'p, P: Probe> Simulator<'p, P> {
                     agg.merge(st);
                 }
                 self.core.probe.absorb(&mut w.probe);
+                self.core.faults.absorb(&mut w.faults);
             }
         }
         let wall = t0.elapsed();

@@ -1,0 +1,731 @@
+//! Deterministic CIM/NoC fault injection.
+//!
+//! CIM crossbars are exactly where stuck-at cells and drift live, and
+//! the NoC's psum links are where upsets flip bits in flight — yet a
+//! cycle simulator normally assumes both are perfect. This module is
+//! the engine-side half of the fault plane: a seeded, fully
+//! deterministic [`FaultPlan`] describing *which* physical resources
+//! misbehave and *when*, threaded through the engine as a monomorphized
+//! type parameter exactly like the probe layer
+//! ([`crate::sim::flight::Probe`]).
+//!
+//! * [`NoFaults`] is the default: `const ENABLED = false`, every hook
+//!   an empty `#[inline(always)]` body. The zero-allocation hot path
+//!   and the `engine_perf` frozen-baseline gate compile bit-for-bit
+//!   unchanged — the seam costs nothing when unused.
+//! * [`FaultInjector`] is the live implementation: it matches every
+//!   tile MVM and psum link transfer against the plan's sites and
+//!   corrupts the payload **values** in place. Event structure and
+//!   timing are never touched — a faulty run produces the same event
+//!   sequence, the same latency and the same energy counters as a
+//!   clean one, only wrong numbers. That is precisely the
+//!   silent-corruption failure mode the serve plane's canary checks
+//!   exist to catch, and it keeps the engine's schedule tag-checks and
+//!   the `perfmodel` cross-assertions valid under injection.
+//!
+//! Fault sites are keyed by physical [`Coord`] (chip, row, col) — the
+//! same coordinates the mapping plane places chains onto and the same
+//! link sites the probe layer instruments — so a detected fault maps
+//! directly to a [`crate::coordinator::TileMask`] entry and the model
+//! can be re-placed around the bad resource.
+//!
+//! Determinism: the engine's event sequence is a pure function of
+//! (program, input), so for a fixed plan the set of fires, the
+//! [`FaultReport`] and the corrupted outputs are byte-identical across
+//! runs *and across batch thread counts* — per-worker reports merge by
+//! order-invariant sums/mins/maxes (property-tested in
+//! `rust/tests/fault_properties.rs`).
+
+use std::collections::BTreeSet;
+use std::fmt;
+
+use anyhow::{bail, Context, Result};
+
+use crate::noc::link::LinkKind;
+use crate::noc::Coord;
+
+/// What a fault site does to the values that pass through it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Dead CIM tile: its MVM output reads all-zero (the array never
+    /// discharges).
+    DeadTile,
+    /// Stuck-at CIM tile: every output lane of its MVM latches the
+    /// given value.
+    StuckAt(i8),
+    /// Link upset: XOR one bit (0..=31) of the first lane of every
+    /// psum payload leaving this tile.
+    LinkFlip { bit: u8 },
+    /// Dropped flit: the psum payload leaving this tile is re-assembled
+    /// as zeros at the receiver (values lost, event structure intact).
+    LinkDrop,
+}
+
+impl FaultKind {
+    /// Whether this kind fires on tile MVM outputs (vs link transfers).
+    pub fn is_tile(self) -> bool {
+        matches!(self, FaultKind::DeadTile | FaultKind::StuckAt(_))
+    }
+}
+
+/// When a fault site is live, in engine pixel slots.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultWindow {
+    /// Live for the whole run (a hard fault).
+    Permanent,
+    /// Live for slots in `[from, to)` of every stage (a transient).
+    Transient { from: u32, to: u32 },
+}
+
+impl FaultWindow {
+    fn contains(self, slot: usize) -> bool {
+        match self {
+            FaultWindow::Permanent => true,
+            FaultWindow::Transient { from, to } => {
+                (slot as u64) >= from as u64 && (slot as u64) < to as u64
+            }
+        }
+    }
+}
+
+/// One faulty physical resource: the tile (or link source tile) at
+/// `coord` misbehaves per `kind` whenever `window` is live.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSite {
+    pub coord: Coord,
+    pub kind: FaultKind,
+    pub window: FaultWindow,
+}
+
+impl fmt::Display for FaultSite {
+    /// Canonical spec string — the wire/CLI format, parsed back by
+    /// [`FaultSite::parse`].
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let c = self.coord;
+        match self.kind {
+            FaultKind::DeadTile => write!(f, "tile:{}:{}:{}:dead", c.chip, c.row, c.col)?,
+            FaultKind::StuckAt(v) => {
+                write!(f, "tile:{}:{}:{}:stuck:{}", c.chip, c.row, c.col, v)?
+            }
+            FaultKind::LinkFlip { bit } => {
+                write!(f, "link:{}:{}:{}:flip:{}", c.chip, c.row, c.col, bit)?
+            }
+            FaultKind::LinkDrop => write!(f, "link:{}:{}:{}:drop", c.chip, c.row, c.col)?,
+        }
+        if let FaultWindow::Transient { from, to } = self.window {
+            write!(f, "@{from}-{to}")?;
+        }
+        Ok(())
+    }
+}
+
+impl FaultSite {
+    /// Parse one site spec:
+    /// `tile:<chip>:<row>:<col>:dead`,
+    /// `tile:<chip>:<row>:<col>:stuck:<v>`,
+    /// `link:<chip>:<row>:<col>:flip:<bit>`,
+    /// `link:<chip>:<row>:<col>:drop`,
+    /// each optionally suffixed `@<from>-<to>` (slot window, else
+    /// permanent).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let spec = spec.trim();
+        let (body, window) = match spec.split_once('@') {
+            Some((b, w)) => {
+                let (from, to) = w
+                    .split_once('-')
+                    .with_context(|| format!("fault window {w:?}: expected <from>-<to>"))?;
+                let from: u32 = from
+                    .parse()
+                    .with_context(|| format!("fault window start {from:?}"))?;
+                let to: u32 = to
+                    .parse()
+                    .with_context(|| format!("fault window end {to:?}"))?;
+                if from >= to {
+                    bail!("fault window {w:?} is empty (from >= to)");
+                }
+                (b, FaultWindow::Transient { from, to })
+            }
+            None => (spec, FaultWindow::Permanent),
+        };
+        let parts: Vec<&str> = body.split(':').collect();
+        if parts.len() < 5 {
+            bail!(
+                "fault spec {spec:?}: expected \
+                 tile:<chip>:<row>:<col>:dead|stuck:<v> or \
+                 link:<chip>:<row>:<col>:flip:<bit>|drop"
+            );
+        }
+        let coord = Coord::new(
+            parts[1].parse().with_context(|| format!("chip {:?}", parts[1]))?,
+            parts[2].parse().with_context(|| format!("row {:?}", parts[2]))?,
+            parts[3].parse().with_context(|| format!("col {:?}", parts[3]))?,
+        );
+        let kind = match (parts[0], parts[4]) {
+            ("tile", "dead") => FaultKind::DeadTile,
+            ("tile", "stuck") => {
+                let v = parts
+                    .get(5)
+                    .with_context(|| format!("fault spec {spec:?}: stuck needs a value"))?;
+                FaultKind::StuckAt(v.parse().with_context(|| format!("stuck value {v:?}"))?)
+            }
+            ("link", "flip") => {
+                let b = parts
+                    .get(5)
+                    .with_context(|| format!("fault spec {spec:?}: flip needs a bit"))?;
+                let bit: u8 = b.parse().with_context(|| format!("flip bit {b:?}"))?;
+                if bit > 31 {
+                    bail!("flip bit {bit} out of range (psum lanes are 32-bit)");
+                }
+                FaultKind::LinkFlip { bit }
+            }
+            ("link", "drop") => FaultKind::LinkDrop,
+            (site, kind) => bail!("unknown fault {site}:{kind} in spec {spec:?}"),
+        };
+        Ok(FaultSite {
+            coord,
+            kind,
+            window,
+        })
+    }
+}
+
+/// A deterministic set of fault sites. Built programmatically or parsed
+/// from a `;`-separated spec string (the CLI/wire format).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub sites: Vec<FaultSite>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse a `;`-separated list of site specs (see
+    /// [`FaultSite::parse`]). An empty string is the empty plan.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut sites = Vec::new();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            sites.push(FaultSite::parse(part)?);
+        }
+        Ok(Self { sites })
+    }
+
+    /// The canonical `;`-separated spec string (round-trips through
+    /// [`Self::parse`]).
+    pub fn spec(&self) -> String {
+        self.sites
+            .iter()
+            .map(|s| s.to_string())
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sites.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sites.len()
+    }
+
+    /// Every distinct physical coordinate named by the plan — the tile
+    /// set a recovery re-mapping must avoid (link faults are dodged by
+    /// avoiding their source tile).
+    pub fn coords(&self) -> BTreeSet<Coord> {
+        self.sites.iter().map(|s| s.coord).collect()
+    }
+
+    fn push(mut self, site: FaultSite) -> Self {
+        self.sites.push(site);
+        self
+    }
+
+    /// Builder: a permanently dead tile.
+    pub fn dead_tile(self, coord: Coord) -> Self {
+        self.push(FaultSite {
+            coord,
+            kind: FaultKind::DeadTile,
+            window: FaultWindow::Permanent,
+        })
+    }
+
+    /// Builder: a permanently stuck tile.
+    pub fn stuck_tile(self, coord: Coord, v: i8) -> Self {
+        self.push(FaultSite {
+            coord,
+            kind: FaultKind::StuckAt(v),
+            window: FaultWindow::Permanent,
+        })
+    }
+
+    /// Builder: a permanent single-bit upset on psums leaving `coord`.
+    pub fn link_flip(self, coord: Coord, bit: u8) -> Self {
+        self.push(FaultSite {
+            coord,
+            kind: FaultKind::LinkFlip { bit },
+            window: FaultWindow::Permanent,
+        })
+    }
+
+    /// Builder: psum payloads leaving `coord` dropped (zeroed).
+    pub fn link_drop(self, coord: Coord) -> Self {
+        self.push(FaultSite {
+            coord,
+            kind: FaultKind::LinkDrop,
+            window: FaultWindow::Permanent,
+        })
+    }
+
+    /// Builder: restrict the most recently added site to a slot window.
+    pub fn during(mut self, from: u32, to: u32) -> Self {
+        if let Some(last) = self.sites.last_mut() {
+            last.window = FaultWindow::Transient { from, to };
+        }
+        self
+    }
+}
+
+/// The engine's fault seam, mirroring [`crate::sim::flight::Probe`]:
+/// monomorphized, forked per batch worker, merged back in chunk order.
+/// Hooks receive the payload *after* the clean computation and may
+/// corrupt values in place; they must never change payload length.
+pub trait Faults: Send {
+    /// Statically `true` when this implementation can fire. `false`
+    /// compiles every hook call site out of the monomorphized engine.
+    const ENABLED: bool;
+
+    /// A tile at `coord` produced an MVM psum row (`data`, one `i32`
+    /// per output lane) in stage `stage`, pixel slot `slot`.
+    fn tile_psum(&mut self, stage: usize, coord: Coord, slot: usize, data: &mut [i32]);
+
+    /// A psum payload (`data`) is in flight over the `kind` link
+    /// leaving tile `from` toward tile `to`.
+    fn link_psum(
+        &mut self,
+        stage: usize,
+        from: Coord,
+        to: Coord,
+        slot: usize,
+        kind: LinkKind,
+        data: &mut [i32],
+    );
+
+    /// A fresh instance of the same plan for a batch worker (zeroed
+    /// fire counters).
+    fn fork(&self) -> Self
+    where
+        Self: Sized;
+
+    /// Zero the fire counters (batch start for reused workers).
+    fn clear(&mut self);
+
+    /// Merge a worker's fire counters into this one. Sums, mins and
+    /// maxes only, so merging in any order — and any thread count —
+    /// produces the identical report.
+    fn absorb(&mut self, worker: &mut Self)
+    where
+        Self: Sized;
+}
+
+/// The default: no faults, no cost. The `EngineCore<_, NoFaults>`
+/// instantiation — the one every pre-existing constructor produces —
+/// is bit-for-bit the unparameterized engine.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NoFaults;
+
+impl Faults for NoFaults {
+    const ENABLED: bool = false;
+    #[inline(always)]
+    fn tile_psum(&mut self, _: usize, _: Coord, _: usize, _: &mut [i32]) {}
+    #[inline(always)]
+    fn link_psum(&mut self, _: usize, _: Coord, _: Coord, _: usize, _: LinkKind, _: &mut [i32]) {}
+    #[inline(always)]
+    fn fork(&self) -> Self {
+        NoFaults
+    }
+    #[inline(always)]
+    fn clear(&mut self) {}
+    #[inline(always)]
+    fn absorb(&mut self, _: &mut Self) {}
+}
+
+/// Per-site fire counters (order-invariant under merge).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct SiteFires {
+    fires: u64,
+    lanes_corrupted: u64,
+    first_slot: Option<u32>,
+    last_slot: Option<u32>,
+    /// Bitmask of the first 64 stages the site fired in (blast radius).
+    stage_mask: u64,
+}
+
+impl SiteFires {
+    fn record(&mut self, stage: usize, slot: usize, lanes: u64) {
+        self.fires += 1;
+        self.lanes_corrupted += lanes;
+        let s = slot.min(u32::MAX as usize) as u32;
+        self.first_slot = Some(self.first_slot.map_or(s, |f| f.min(s)));
+        self.last_slot = Some(self.last_slot.map_or(s, |l| l.max(s)));
+        if stage < 64 {
+            self.stage_mask |= 1 << stage;
+        }
+    }
+
+    fn merge(&mut self, other: &SiteFires) {
+        self.fires += other.fires;
+        self.lanes_corrupted += other.lanes_corrupted;
+        self.first_slot = match (self.first_slot, other.first_slot) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.last_slot = match (self.last_slot, other.last_slot) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
+        self.stage_mask |= other.stage_mask;
+    }
+}
+
+/// The live [`Faults`] implementation: matches engine events against a
+/// [`FaultPlan`] and corrupts payload values in place, counting every
+/// fire per site.
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    fires: Vec<SiteFires>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        let n = plan.sites.len();
+        Self {
+            plan,
+            fires: vec![SiteFires::default(); n],
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Snapshot the per-site fire counters as a typed report.
+    pub fn report(&self) -> FaultReport {
+        FaultReport {
+            sites: self
+                .plan
+                .sites
+                .iter()
+                .zip(&self.fires)
+                .map(|(site, f)| SiteReport {
+                    site: *site,
+                    fires: f.fires,
+                    lanes_corrupted: f.lanes_corrupted,
+                    first_slot: f.first_slot,
+                    last_slot: f.last_slot,
+                    stages: (0..64u16).filter(|s| f.stage_mask & (1 << s) != 0).collect(),
+                })
+                .collect(),
+        }
+    }
+
+    fn apply(kind: FaultKind, data: &mut [i32]) -> u64 {
+        match kind {
+            FaultKind::DeadTile | FaultKind::LinkDrop => {
+                data.fill(0);
+                data.len() as u64
+            }
+            FaultKind::StuckAt(v) => {
+                data.fill(v as i32);
+                data.len() as u64
+            }
+            FaultKind::LinkFlip { bit } => {
+                if let Some(lane) = data.first_mut() {
+                    *lane ^= 1i32 << bit;
+                    1
+                } else {
+                    0
+                }
+            }
+        }
+    }
+}
+
+impl Faults for FaultInjector {
+    const ENABLED: bool = true;
+
+    fn tile_psum(&mut self, stage: usize, coord: Coord, slot: usize, data: &mut [i32]) {
+        for (site, f) in self.plan.sites.iter().zip(self.fires.iter_mut()) {
+            if site.kind.is_tile() && site.coord == coord && site.window.contains(slot) {
+                let lanes = Self::apply(site.kind, data);
+                f.record(stage, slot, lanes);
+            }
+        }
+    }
+
+    fn link_psum(
+        &mut self,
+        stage: usize,
+        from: Coord,
+        _to: Coord,
+        slot: usize,
+        _kind: LinkKind,
+        data: &mut [i32],
+    ) {
+        for (site, f) in self.plan.sites.iter().zip(self.fires.iter_mut()) {
+            if !site.kind.is_tile() && site.coord == from && site.window.contains(slot) {
+                let lanes = Self::apply(site.kind, data);
+                f.record(stage, slot, lanes);
+            }
+        }
+    }
+
+    fn fork(&self) -> Self {
+        Self::new(self.plan.clone())
+    }
+
+    fn clear(&mut self) {
+        self.fires.fill(SiteFires::default());
+    }
+
+    fn absorb(&mut self, worker: &mut Self) {
+        debug_assert_eq!(self.plan, worker.plan, "absorbing a different plan");
+        for (a, b) in self.fires.iter_mut().zip(&worker.fires) {
+            a.merge(b);
+        }
+        worker.clear();
+    }
+}
+
+/// One site's fire record in a [`FaultReport`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SiteReport {
+    pub site: FaultSite,
+    /// Events the site corrupted.
+    pub fires: u64,
+    /// Total payload lanes (i32 values) modified — the blast radius in
+    /// corrupted numbers.
+    pub lanes_corrupted: u64,
+    /// Earliest pixel slot the site fired in (None: never fired).
+    pub first_slot: Option<u32>,
+    /// Latest pixel slot the site fired in.
+    pub last_slot: Option<u32>,
+    /// Stages the site fired in, ascending (stages >= 64 not tracked).
+    pub stages: Vec<u16>,
+}
+
+/// Typed summary of what a faulty run actually did: which sites fired,
+/// when, and how many values they touched. Byte-identical for a given
+/// (program, inputs, plan) across runs and batch thread counts.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultReport {
+    pub sites: Vec<SiteReport>,
+}
+
+impl FaultReport {
+    /// Total fires across all sites.
+    pub fn total_fires(&self) -> u64 {
+        self.sites.iter().map(|s| s.fires).sum()
+    }
+
+    /// Total corrupted payload lanes across all sites.
+    pub fn total_lanes(&self) -> u64 {
+        self.sites.iter().map(|s| s.lanes_corrupted).sum()
+    }
+
+    /// Sites that fired at least once.
+    pub fn fired_sites(&self) -> impl Iterator<Item = &SiteReport> {
+        self.sites.iter().filter(|s| s.fires > 0)
+    }
+
+    /// Human-readable multi-line summary (CLI `domino fault inject`).
+    pub fn render(&self) -> String {
+        if self.sites.is_empty() {
+            return "no fault sites armed".to_string();
+        }
+        let mut out = String::new();
+        for s in &self.sites {
+            let when = match (s.first_slot, s.last_slot) {
+                (Some(a), Some(b)) => format!("slots {a}..={b}"),
+                _ => "never fired".to_string(),
+            };
+            let stages = if s.stages.is_empty() {
+                "-".to_string()
+            } else {
+                s.stages
+                    .iter()
+                    .map(|x| x.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",")
+            };
+            out.push_str(&format!(
+                "{:<34} fires {:>8}  lanes {:>10}  {when:<22} stages {stages}\n",
+                s.site.to_string(),
+                s.fires,
+                s.lanes_corrupted
+            ));
+        }
+        out.push_str(&format!(
+            "total: {} fires, {} corrupted lanes\n",
+            self.total_fires(),
+            self.total_lanes()
+        ));
+        out
+    }
+}
+
+/// The output-corruption verdict of a faulty run against the
+/// refcompute oracle.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CorruptionVerdict {
+    /// Any score diverged from the oracle.
+    pub corrupted: bool,
+    /// Scores that diverged.
+    pub mismatched: usize,
+    /// Total scores compared.
+    pub outputs: usize,
+}
+
+/// Compare simulated scores against the oracle's. A length mismatch is
+/// full corruption (every output counted mismatched).
+pub fn corruption_verdict(scores: &[i8], oracle: &[i8]) -> CorruptionVerdict {
+    if scores.len() != oracle.len() {
+        let outputs = scores.len().max(oracle.len());
+        return CorruptionVerdict {
+            corrupted: true,
+            mismatched: outputs,
+            outputs,
+        };
+    }
+    let mismatched = scores
+        .iter()
+        .zip(oracle)
+        .filter(|(a, b)| a != b)
+        .count();
+    CorruptionVerdict {
+        corrupted: mismatched > 0,
+        mismatched,
+        outputs: scores.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(chip: usize, row: usize, col: usize) -> Coord {
+        Coord::new(chip, row, col)
+    }
+
+    #[test]
+    fn spec_round_trips() {
+        let plan = FaultPlan::new()
+            .dead_tile(c(0, 1, 2))
+            .stuck_tile(c(1, 0, 3), -7)
+            .link_flip(c(0, 2, 2), 13)
+            .during(4, 96)
+            .link_drop(c(2, 0, 0));
+        let spec = plan.spec();
+        assert_eq!(
+            spec,
+            "tile:0:1:2:dead;tile:1:0:3:stuck:-7;link:0:2:2:flip:13@4-96;link:2:0:0:drop"
+        );
+        assert_eq!(FaultPlan::parse(&spec).unwrap(), plan);
+        // empty and whitespace specs are the empty plan
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" ; ;").unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_specs_are_typed_errors() {
+        for bad in [
+            "tile:0:0:0",
+            "tile:0:0:0:melt",
+            "tile:0:0:0:stuck",
+            "link:0:0:0:flip:32",
+            "link:0:0:0:flip",
+            "tile:x:0:0:dead",
+            "tile:0:0:0:dead@9-3",
+            "tile:0:0:0:dead@5",
+        ] {
+            assert!(FaultSite::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn injector_fires_only_matching_sites_in_window() {
+        let plan = FaultPlan::new()
+            .dead_tile(c(0, 0, 0))
+            .link_flip(c(0, 0, 1), 0)
+            .during(10, 20);
+        let mut inj = FaultInjector::new(plan);
+        let mut data = [5i32, 6, 7];
+
+        // tile fault fires at its coord, any slot
+        inj.tile_psum(0, c(0, 0, 0), 3, &mut data);
+        assert_eq!(data, [0, 0, 0]);
+        // wrong coord: untouched
+        let mut other = [5i32];
+        inj.tile_psum(0, c(0, 0, 1), 3, &mut other);
+        assert_eq!(other, [5]);
+        // link fault respects its window
+        let mut lane = [8i32];
+        inj.link_psum(1, c(0, 0, 1), c(0, 0, 2), 5, LinkKind::OnChip, &mut lane);
+        assert_eq!(lane, [8], "slot 5 outside 10..20");
+        inj.link_psum(1, c(0, 0, 1), c(0, 0, 2), 12, LinkKind::OnChip, &mut lane);
+        assert_eq!(lane, [9], "bit 0 flipped");
+
+        let report = inj.report();
+        assert_eq!(report.sites[0].fires, 1);
+        assert_eq!(report.sites[0].lanes_corrupted, 3);
+        assert_eq!(report.sites[0].stages, vec![0]);
+        assert_eq!(report.sites[1].fires, 1);
+        assert_eq!(report.sites[1].first_slot, Some(12));
+        assert_eq!(report.total_fires(), 2);
+    }
+
+    #[test]
+    fn fork_absorb_is_order_invariant() {
+        let plan = FaultPlan::new().dead_tile(c(0, 0, 0));
+        let mut a = FaultInjector::new(plan.clone());
+        let mut w1 = a.fork();
+        let mut w2 = a.fork();
+        let mut d = [1i32, 2];
+        w1.tile_psum(0, c(0, 0, 0), 7, &mut d);
+        let mut d2 = [3i32, 4];
+        w2.tile_psum(1, c(0, 0, 0), 2, &mut d2);
+
+        let mut b = FaultInjector::new(plan);
+        let mut w1b = w1.clone();
+        let mut w2b = w2.clone();
+        a.absorb(&mut w1);
+        a.absorb(&mut w2);
+        b.absorb(&mut w2b);
+        b.absorb(&mut w1b);
+        assert_eq!(a.report(), b.report(), "merge order must not matter");
+        let r = a.report();
+        assert_eq!(r.sites[0].fires, 2);
+        assert_eq!(r.sites[0].first_slot, Some(2));
+        assert_eq!(r.sites[0].last_slot, Some(7));
+        assert_eq!(r.sites[0].stages, vec![0, 1]);
+        // absorbed workers are drained
+        assert_eq!(w1.report().total_fires(), 0);
+    }
+
+    #[test]
+    fn verdict_counts_mismatches() {
+        let v = corruption_verdict(&[1, 2, 3], &[1, 2, 3]);
+        assert!(!v.corrupted);
+        let v = corruption_verdict(&[1, 9, 3], &[1, 2, 3]);
+        assert!(v.corrupted);
+        assert_eq!((v.mismatched, v.outputs), (1, 3));
+        let v = corruption_verdict(&[1], &[1, 2]);
+        assert!(v.corrupted);
+        assert_eq!(v.outputs, 2);
+    }
+}

@@ -42,6 +42,20 @@
 //!   heatmap ([`flight::LinkHeatmap`]), recording diffs
 //!   ([`flight::diff`] — first divergent event, per-stage deltas), and
 //!   a breakpointing [`flight::Stepper`] for `domino debug`.
+//! * [`fault`] — the fault plane's engine half. The engine is generic
+//!   over a second seam, [`Faults`], with the same zero-cost contract
+//!   as the probe: the default [`NoFaults`] compiles every hook out,
+//!   while a [`FaultInjector`] executes a deterministic [`FaultPlan`]
+//!   (dead/stuck-at CIM tiles, link bit-flips and dropped flits keyed
+//!   to the same tile/link sites the probe instruments, permanent or
+//!   slot-windowed transients). Faults corrupt psum *values* only —
+//!   event structure, timing and counters stay clean-run-identical,
+//!   which is exactly the silent-corruption failure mode the serve
+//!   plane's canary checks detect. Faulty runs yield a typed
+//!   [`FaultReport`] (fires, blast radius, slot windows, stages) and
+//!   an output verdict against refcompute
+//!   ([`fault::corruption_verdict`]); reports and outputs are
+//!   byte-identical across batch thread counts.
 //! * [`pipeline`] — the stage-granularity layer-synchronization model
 //!   ([`run_pipelined`]): while stage *i* processes image *n*, stage
 //!   *i−1* streams image *n+1*; its measured steady-state period is
@@ -52,12 +66,17 @@
 //!   flight recording.
 
 pub mod engine;
+pub mod fault;
 pub mod flight;
 pub mod pipeline;
 pub mod stats;
 pub mod trace;
 
 pub use engine::{BatchOutput, CaptureMode, EnginePool, PooledEngine, RunOutput, Simulator};
+pub use fault::{
+    corruption_verdict, CorruptionVerdict, FaultInjector, FaultKind, FaultPlan, FaultReport,
+    FaultSite, FaultWindow, Faults, NoFaults,
+};
 pub use flight::{FlightRecorder, NullProbe, Probe, RecorderConfig, Recording};
 pub use pipeline::{run_pipelined, PipelineRun};
 pub use stats::Counters;

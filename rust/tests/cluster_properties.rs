@@ -6,6 +6,12 @@
 //! back version-stamped and bit-exact against a local refcompute of
 //! the same (network, seed) — failover is only correct if the
 //! replacement backend serves the *identical* weights.
+//!
+//! The fault plane rides the same harness: a backend with an armed
+//! [`domino::sim::FaultPlan`] keeps answering its socket while
+//! serving silently-wrong bits, and only the router's canary pass
+//! catches it — excluded from routing like a dead backend, healed by
+//! a fault-aware re-map, then re-admitted by the next passing canary.
 
 use std::collections::BTreeSet;
 use std::sync::Arc;
@@ -61,6 +67,7 @@ fn test_router(addrs: Vec<String>, replication: usize) -> Router {
             health_interval: Duration::from_secs(3600),
             request_timeout: Duration::from_secs(30),
             health_timeout: Duration::from_secs(5),
+            ..ClusterConfig::default()
         },
     )
     .expect("router")
@@ -301,6 +308,165 @@ fn drained_backend_finishes_and_leaves_the_owner_set() {
         "draining an unknown address must error"
     );
 
+    drop(router);
+    for mut b in backends.drain(..) {
+        if let Some(net) = b.net.take() {
+            net.shutdown().unwrap();
+        }
+        if let Ok(service) = Arc::try_unwrap(b.service) {
+            service.shutdown().unwrap();
+        }
+    }
+}
+
+#[test]
+fn silently_corrupting_backend_fails_canary_and_heals_back_in() {
+    let mut backends: Vec<TestBackend> = (0..2).map(|_| start_backend()).collect();
+    let addrs: Vec<String> = backends.iter().map(|b| b.addr.clone()).collect();
+    let router = test_router(addrs.clone(), 2);
+    match router.dispatch(Request::LoadSeeded {
+        model: MODEL.to_string(),
+        seed: SEED,
+        mapping: None,
+    }) {
+        Response::Loaded(_) => {}
+        other => panic!("load failed: {other:?}"),
+    }
+
+    let ilen = input_len();
+    let mut rng = Rng::new(0xFA01u64);
+    let images: Vec<Vec<i8>> = (0..6).map(|_| rng.i8_vec(ilen, 31)).collect();
+    let expected = reference(&images);
+
+    // The plan targets the first tile of the placement — computed
+    // from a local compile of the same (network, seed, arch), which
+    // is bit-identical to what the backend placed.
+    let bad = {
+        let net = zoo::lookup(MODEL).unwrap();
+        let reg = ModelRegistry::new();
+        let mv = reg
+            .load_seeded(MODEL, &net, ArchConfig::default(), Some(SEED))
+            .unwrap();
+        mv.program().tile_coords()[0]
+    };
+    let plan = domino::sim::FaultPlan::new().stuck_tile(bad, 7).spec();
+
+    // Arm the fault on the rendezvous primary, talking to the
+    // backend directly — a broken tile is a property of one machine,
+    // not of the cluster.
+    let primary = router
+        .status()
+        .assignments
+        .iter()
+        .find(|(m, _)| m == MODEL)
+        .map(|(_, o)| o[0].clone())
+        .unwrap();
+    let mut direct = Client::connect(&primary).expect("connect primary");
+    direct
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let rep = direct.fault_inject(MODEL, &plan).expect("fault inject");
+    assert!(rep.armed, "plan must arm");
+    assert!(
+        rep.corrupted && rep.fires > 0,
+        "diagnostic run must observe the corruption: {rep:?}"
+    );
+
+    // One health pass later the router knows: the backend is alive
+    // (socket answers) but canary-failed (bits are wrong), excluded
+    // from the owner set, and reported distinctly from DEAD.
+    router.health_pass();
+    let st = router.status();
+    let sick = st.backends.iter().find(|b| b.addr == primary).unwrap();
+    assert!(
+        sick.alive && sick.canary_failed,
+        "sick backend must be alive-but-canary-failed: {sick:?}"
+    );
+    let rendered = st.render();
+    assert!(rendered.contains("canary-failed"), "{rendered}");
+    assert!(!rendered.contains("DEAD"), "{rendered}");
+    let owners_now: Vec<String> = st
+        .assignments
+        .iter()
+        .find(|(m, _)| m == MODEL)
+        .map(|(_, o)| o.clone())
+        .unwrap();
+    assert!(
+        !owners_now.contains(&primary),
+        "canary-failed backend must leave the owner set: {owners_now:?}"
+    );
+    // cluster stats surface the degradation by model
+    match router.dispatch(Request::Stats) {
+        Response::Stats(s) => assert!(
+            s.models.iter().any(|m| m.model == MODEL && m.degraded),
+            "cluster stats must OR-fold the degraded flag"
+        ),
+        other => panic!("stats failed: {other:?}"),
+    }
+
+    // Routed traffic never sees the corrupt bits.
+    for (i, img) in images.iter().enumerate() {
+        match router.dispatch(Request::Infer {
+            model: Some(MODEL.to_string()),
+            image: img.clone(),
+        }) {
+            Response::Infer(r) => assert_eq!(
+                r.logits, expected[i],
+                "router served corrupt bits on image {i}"
+            ),
+            other => panic!("infer {i} failed: {other:?}"),
+        }
+    }
+
+    // Heal through the router: Canary{heal} routes to the model's
+    // true primary (sick backends included — the cure must be able
+    // to reach the patient), re-maps around the masked tile, and the
+    // healed program recovers bit-exactness.
+    match router.dispatch(Request::Canary {
+        model: MODEL.to_string(),
+        seed: 0xCAFE,
+        heal: true,
+    }) {
+        Response::Canary(c) => {
+            assert!(!c.ok, "pre-heal canary must fail");
+            assert!(c.remapped && c.healed, "heal must re-map and recover: {c:?}");
+            assert!(c.version >= 2, "heal publishes a new version");
+        }
+        other => panic!("canary heal failed: {other:?}"),
+    }
+
+    // The next health pass re-admits the healed backend.
+    router.health_pass();
+    let st = router.status();
+    assert!(
+        st.backends.iter().all(|b| b.alive && !b.canary_failed),
+        "healed cluster must be fully routable: {st:?}"
+    );
+    let owners_after: Vec<String> = st
+        .assignments
+        .iter()
+        .find(|(m, _)| m == MODEL)
+        .map(|(_, o)| o.clone())
+        .unwrap();
+    assert!(
+        owners_after.contains(&primary),
+        "healed backend must rejoin the owner set: {owners_after:?}"
+    );
+    match router.dispatch(Request::Stats) {
+        Response::Stats(s) => assert!(
+            s.models.iter().all(|m| !(m.model == MODEL && m.degraded)),
+            "degraded flag must clear after heal"
+        ),
+        other => panic!("stats failed: {other:?}"),
+    }
+    // and the healed backend itself serves bit-exact, on the new
+    // version, with the armed plan still in place (its sites are
+    // simply never exercised by the re-mapped placement)
+    let r = direct.infer(Some(MODEL), images[0].clone()).expect("direct infer");
+    assert_eq!(r.logits, expected[0], "healed backend must serve bit-exact");
+    assert!(r.model.expect("stamped").version >= 2);
+
+    drop(direct);
     drop(router);
     for mut b in backends.drain(..) {
         if let Some(net) = b.net.take() {

@@ -1,0 +1,261 @@
+//! Fault-plane properties: the deterministic fault injector must be
+//! (1) invisible when empty — an armed-but-empty [`FaultInjector`]
+//! engine is bit-identical to the default `NoFaults` engine, outputs
+//! *and* counters; (2) reproducible — the same seeded [`FaultPlan`]
+//! produces byte-identical outputs and [`FaultReport`]s whether the
+//! batch runs on 1, 2, or 4 threads; (3) recoverable — a masked
+//! re-map publishes a program that provably avoids the banned tiles
+//! while staying refcompute-exact with the original weights; and
+//! (4) honest over the wire — `FaultInject`/`Canary{heal}` through a
+//! real TCP endpoint detect silent corruption and heal it.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use domino::coordinator::{ArchConfig, Compiler, TileMask};
+use domino::model::zoo;
+use domino::serve::api::{Request, Response};
+use domino::serve::client::Client;
+use domino::serve::net::NetServer;
+use domino::serve::{ModelRegistry, ServeConfig, Server, Service};
+use domino::sim::{CaptureMode, FaultPlan, Simulator};
+use domino::testutil::Rng;
+
+fn images(seed: u64, n: usize, len: usize) -> Vec<Vec<i8>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.i8_vec(len, 31)).collect()
+}
+
+#[test]
+fn empty_fault_injector_is_bit_identical_to_default_engine() {
+    for name in ["tiny-mlp", "tiny-cnn", "tiny-resnet"] {
+        let net = zoo::by_name(name).unwrap();
+        let program = Compiler::default().compile(&net).unwrap();
+        let imgs = images(11, 3, net.input_len());
+
+        let mut clean = Simulator::with_capture(&program, CaptureMode::Final);
+        let mut armed = Simulator::with_faults(&program, FaultPlan::default());
+        armed.set_capture(CaptureMode::Final);
+        for (i, img) in imgs.iter().enumerate() {
+            let a = clean.run_image(img).unwrap();
+            let b = armed.run_image(img).unwrap();
+            assert_eq!(a.scores, b.scores, "{name} image {i}: scores diverged");
+            assert_eq!(
+                a.latency_cycles, b.latency_cycles,
+                "{name} image {i}: latency diverged"
+            );
+        }
+        assert_eq!(
+            clean.stats(),
+            armed.stats(),
+            "{name}: counters diverged under an empty fault plan"
+        );
+        let report = armed.fault_report();
+        assert!(report.sites.is_empty(), "{name}: empty plan reported sites");
+        assert_eq!(report.total_fires(), 0);
+    }
+}
+
+#[test]
+fn seeded_plan_is_byte_identical_across_batch_thread_counts() {
+    let net = zoo::by_name("tiny-cnn").unwrap();
+    let program = Compiler::default().compile(&net).unwrap();
+    let coords = program.tile_coords();
+    let plan = FaultPlan::new()
+        .stuck_tile(coords[0], 7)
+        .link_flip(coords[coords.len() / 2], 3);
+    let imgs = images(23, 8, net.input_len());
+
+    // Spec round-trip: the wire form re-parses to the same plan.
+    assert_eq!(FaultPlan::parse(&plan.spec()).unwrap(), plan);
+
+    let run = |threads: usize| {
+        let mut sim = Simulator::with_faults(&program, plan.clone());
+        sim.set_capture(CaptureMode::Final);
+        let batch = sim.run_batch_threads(&imgs, threads).unwrap();
+        let outs: Vec<(Vec<i8>, u64)> = batch
+            .outputs
+            .iter()
+            .map(|o| (o.scores.clone(), o.latency_cycles))
+            .collect();
+        (outs, sim.stats().clone(), sim.fault_report())
+    };
+
+    let (base_outs, base_stats, base_report) = run(1);
+    assert!(
+        base_report.total_fires() > 0,
+        "plan on used tiles never fired — test is vacuous"
+    );
+    for threads in [2, 4] {
+        let (outs, stats, report) = run(threads);
+        assert_eq!(outs, base_outs, "{threads} threads: outputs diverged");
+        assert_eq!(stats, base_stats, "{threads} threads: counters diverged");
+        assert_eq!(
+            report, base_report,
+            "{threads} threads: FaultReport diverged"
+        );
+    }
+}
+
+#[test]
+fn transient_window_gates_fault_fires() {
+    let net = zoo::by_name("tiny-cnn").unwrap();
+    let program = Compiler::default().compile(&net).unwrap();
+    let bad = program.tile_coords()[0];
+    let imgs = images(31, 1, net.input_len());
+
+    let mut clean = Simulator::with_capture(&program, CaptureMode::Final);
+    let clean_out = clean.run_image(&imgs[0]).unwrap();
+
+    // A window entirely past the run: the site is armed but never
+    // eligible, so the run is bit-exact with the clean engine.
+    let late = FaultPlan::new()
+        .stuck_tile(bad, 7)
+        .during(u32::MAX - 1, u32::MAX);
+    let mut sim = Simulator::with_faults(&program, late);
+    sim.set_capture(CaptureMode::Final);
+    let out = sim.run_image(&imgs[0]).unwrap();
+    assert_eq!(sim.fault_report().total_fires(), 0, "late window fired");
+    assert_eq!(out.scores, clean_out.scores, "gated fault corrupted output");
+
+    // A window covering everything behaves like no window at all.
+    let always = FaultPlan::new().stuck_tile(bad, 7).during(0, u32::MAX);
+    let unwindowed = FaultPlan::new().stuck_tile(bad, 7);
+    let mut a = Simulator::with_faults(&program, always);
+    a.set_capture(CaptureMode::Final);
+    let a_out = a.run_image(&imgs[0]).unwrap();
+    let mut u = Simulator::with_faults(&program, unwindowed);
+    u.set_capture(CaptureMode::Final);
+    let u_out = u.run_image(&imgs[0]).unwrap();
+    assert!(a.fault_report().total_fires() > 0, "full window never fired");
+    assert_eq!(a_out.scores, u_out.scores);
+    assert_eq!(
+        a.fault_report().total_fires(),
+        u.fault_report().total_fires()
+    );
+}
+
+#[test]
+fn masked_remap_avoids_banned_tiles_and_stays_refcompute_exact() {
+    let name = "tiny-cnn";
+    let net = zoo::by_name(name).unwrap();
+    let reg = ModelRegistry::new();
+    let mv = reg
+        .load_seeded(name, &net, ArchConfig::default(), Some(9))
+        .unwrap();
+    let bad = mv.program().tile_coords()[0];
+    let imgs = images(41, 4, mv.input_len());
+    let oracle: Vec<Vec<i8>> = imgs.iter().map(|i| mv.refcompute(i).unwrap()).collect();
+
+    let mask = TileMask::from_coords([bad]);
+    let mv2 = reg.remap_masked(name, &mask).unwrap();
+    assert_eq!(mv2.stamp().version, mv.stamp().version + 1);
+    assert!(
+        !mv2.program().tile_coords().contains(&bad),
+        "masked placement still uses the banned tile {bad}"
+    );
+
+    // Same weights, new placement: the re-mapped program must compute
+    // the exact same bits as the original model's refcompute oracle.
+    let mut sim = Simulator::with_capture(mv2.program(), CaptureMode::Final);
+    for (i, img) in imgs.iter().enumerate() {
+        let out = sim.run_image(img).unwrap();
+        assert_eq!(
+            out.scores, oracle[i],
+            "image {i}: masked re-map is not bit-exact"
+        );
+        assert_eq!(mv2.refcompute(img).unwrap(), oracle[i]);
+    }
+}
+
+#[test]
+fn fault_inject_and_canary_heal_end_to_end_over_tcp() {
+    const MODEL: &str = "tiny-mlp";
+    const SEED: u64 = 5;
+
+    let registry = Arc::new(ModelRegistry::new());
+    let server = Server::start_multi(
+        ServeConfig {
+            workers: 1,
+            max_batch: 2,
+            queue_cap: 64,
+        },
+        registry,
+    )
+    .expect("start server");
+    let service = Arc::new(Service::new(server, ArchConfig::default()));
+    let net_srv = NetServer::bind("127.0.0.1:0", Arc::clone(&service)).expect("bind");
+    let addr = net_srv.local_addr().to_string();
+
+    let mut c = Client::connect(&addr).expect("connect");
+    c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    match c
+        .call(&Request::LoadSeeded {
+            model: MODEL.to_string(),
+            seed: SEED,
+            mapping: None,
+        })
+        .expect("load")
+    {
+        Response::Loaded(stamp) => assert_eq!(stamp.version, 1),
+        other => panic!("load failed: {other:?}"),
+    }
+
+    // Local oracle for the same (model, seed): what the endpoint must
+    // serve bit-for-bit before the fault and after the heal.
+    let znet = zoo::by_name(MODEL).unwrap();
+    let local = ModelRegistry::new();
+    let lmv = local
+        .load_seeded(MODEL, &znet, ArchConfig::default(), Some(SEED))
+        .unwrap();
+    let bad = lmv.program().tile_coords()[0];
+    let imgs = images(47, 3, lmv.input_len());
+    let oracle: Vec<Vec<i8>> = imgs.iter().map(|i| lmv.refcompute(i).unwrap()).collect();
+
+    let infer = |c: &mut Client, img: &[i8]| -> Vec<i8> {
+        match c
+            .call(&Request::Infer {
+                model: Some(MODEL.to_string()),
+                image: img.to_vec(),
+            })
+            .expect("infer")
+        {
+            Response::Infer(r) => r.logits,
+            other => panic!("infer failed: {other:?}"),
+        }
+    };
+    assert_eq!(infer(&mut c, &imgs[0]), oracle[0], "clean endpoint wrong");
+
+    // Arm a permanent stuck-at fault on a tile the mapping uses. The
+    // diagnostic must see it fire and corrupt outputs silently.
+    let spec = FaultPlan::new().stuck_tile(bad, 7).spec();
+    let rep = c.fault_inject(MODEL, &spec).expect("fault inject");
+    assert!(rep.armed && rep.fires > 0, "diagnostic did not fire: {rep:?}");
+    assert!(rep.corrupted, "stuck-at on a used tile was not corrupting");
+
+    // A plain canary detects the corruption but does not touch the
+    // mapping; a healing canary re-maps around the fault and verifies.
+    let plain = c.canary(MODEL, 0xCA11A2, false).expect("canary");
+    assert!(!plain.ok && !plain.remapped);
+    let heal = c.canary(MODEL, 0xCA11A2, true).expect("healing canary");
+    assert!(!heal.ok, "pre-heal sentinel unexpectedly passed");
+    assert!(heal.remapped && heal.healed, "heal failed: {heal:?}");
+    assert_eq!(heal.version, 2);
+
+    // Healed endpoint: canary passes, traffic is bit-exact again.
+    let after = c.canary(MODEL, 0xCA11A2, false).expect("canary after heal");
+    assert!(after.ok, "canary still failing after heal: {after:?}");
+    for (i, img) in imgs.iter().enumerate() {
+        assert_eq!(infer(&mut c, img), oracle[i], "post-heal image {i} wrong");
+    }
+
+    // Empty spec disarms the plan.
+    let off = c.fault_inject(MODEL, "").expect("disarm");
+    assert!(!off.armed);
+
+    drop(c);
+    net_srv.shutdown().unwrap();
+    if let Ok(service) = Arc::try_unwrap(service) {
+        service.shutdown().unwrap();
+    }
+}

@@ -8,8 +8,8 @@ use std::sync::Arc;
 
 use domino::coordinator::{Placement, PoolingScheme};
 use domino::serve::api::{
-    InferReply, MappingDesc, MappingSpec, ModelDesc, Request, Response, StatsReply,
-    TraceReply,
+    CanaryReply, FaultReply, InferReply, MappingDesc, MappingSpec, ModelDesc, Request, Response,
+    StatsReply, TraceReply,
 };
 use domino::serve::wire;
 use domino::serve::{ModelMetricsSnapshot, ModelStamp};
@@ -151,6 +151,7 @@ fn tricky_snapshot(rng: &mut Rng) -> ModelMetricsSnapshot {
         p50_us: opt(rng),
         p95_us: opt(rng),
         p99_us: opt(rng),
+        degraded: rng.chance(0.5),
     }
 }
 
@@ -240,9 +241,19 @@ fn every_request_variant_roundtrips() {
         window: 0,
     });
 
+    roundtrip_req(&Request::FaultInject {
+        model: "tiny-cnn".to_string(),
+        plan: "tile:0:1:2:dead;link:3:4:5:flip:31@0-4294967295".to_string(),
+    });
+    roundtrip_req(&Request::Canary {
+        model: "tiny-cnn".to_string(),
+        seed: u64::MAX,
+        heal: false,
+    });
+
     // randomized sweep across all variants
     for_all("request_roundtrip", 200, |rng| {
-        let req = match rng.below(9) {
+        let req = match rng.below(11) {
             0 => Request::Infer {
                 model: if rng.chance(0.3) {
                     None
@@ -276,10 +287,21 @@ fn every_request_variant_roundtrips() {
                 model: tricky_name(rng),
             },
             7 => Request::Stats,
-            _ => Request::Trace {
+            8 => Request::Trace {
                 model: tricky_name(rng),
                 image_seed: tricky_u64(rng),
                 window: tricky_u64(rng),
+            },
+            // the plan travels as an opaque spec string: the codec
+            // must round-trip it whether or not it parses as a plan
+            9 => Request::FaultInject {
+                model: tricky_name(rng),
+                plan: tricky_name(rng),
+            },
+            _ => Request::Canary {
+                model: tricky_name(rng),
+                seed: tricky_u64(rng),
+                heal: rng.chance(0.5),
             },
         };
         roundtrip_req(&req);
@@ -308,7 +330,7 @@ fn every_response_variant_roundtrips() {
     }));
 
     for_all("response_roundtrip", 200, |rng| {
-        let resp = match rng.below(9) {
+        let resp = match rng.below(11) {
             0 => Response::Infer(InferReply {
                 logits: tricky_image(rng),
                 model: if rng.chance(0.3) {
@@ -340,6 +362,26 @@ fn every_response_variant_roundtrips() {
                 events: (0..rng.range(0, 6)).map(|_| tricky_event(rng)).collect(),
                 scores: tricky_image(rng),
                 heatmap: tricky_name(rng),
+            }),
+            8 => Response::Fault(FaultReply {
+                model: tricky_stamp(rng),
+                armed: rng.chance(0.5),
+                sites: tricky_u64(rng),
+                fires: tricky_u64(rng),
+                lanes: tricky_u64(rng),
+                corrupted: rng.chance(0.5),
+                mismatched: tricky_u64(rng),
+                outputs: tricky_u64(rng),
+                report: tricky_name(rng),
+            }),
+            9 => Response::Canary(CanaryReply {
+                model: tricky_stamp(rng),
+                ok: rng.chance(0.5),
+                mismatched: tricky_u64(rng),
+                outputs: tricky_u64(rng),
+                remapped: rng.chance(0.5),
+                healed: rng.chance(0.5),
+                version: tricky_u64(rng),
             }),
             _ => Response::Error {
                 message: tricky_name(rng),
