@@ -135,6 +135,7 @@ fn main() {
             workers: 2,
             max_batch: 4,
             queue_cap: 64,
+            ..ServeConfig::default()
         },
         registry,
     )

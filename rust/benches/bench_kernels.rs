@@ -1,0 +1,372 @@
+//! Kernel-level performance harness (§Perf): the blocked i8 compute
+//! kernels measured against a **frozen copy of the PR-9 scalar
+//! kernels** kept in [`legacy`] below (the same trick as
+//! `engine_perf`'s frozen pre-arena engine, one layer down). Every run
+//! re-measures the recorded scalar baseline on the same machine,
+//! asserts the blocked kernels are bit-exact with it (outputs *and*
+//! every charged counter), and gates PASS/FAIL on the single-thread
+//! MVM-family speedup.
+//!
+//!     cargo bench --bench bench_kernels                      # full run
+//!     cargo bench --bench bench_kernels -- --smoke           # CI gate leg
+//!     cargo bench --bench bench_kernels -- --json BENCH_kernels.json
+//!     cargo bench --bench bench_kernels -- --gate 1.2        # override
+//!
+//! The gate (default ≥1.5x) is the geometric mean over the MVM-family
+//! workloads — the panel kernel is where the blocked layout pays. The
+//! vectorized rofm datapaths are asserted bit-exact and *reported*
+//! (their scalar forms already autovectorize well, so their speedups
+//! are informational, not gated); the JSON records the gate basis. The
+//! process exits non-zero on FAIL so CI can regress on it.
+
+use domino::benchutil::{arg_value, stats, time_n, JsonObj};
+use domino::sim::Counters;
+use domino::testutil::Rng;
+use domino::tile::pe::MICRO_BATCH;
+use domino::tile::rofm::Rofm;
+use domino::tile::Pe;
+
+/// Frozen PR-9 scalar kernels — the pre-blocking state of
+/// `tile::pe::Pe::mvm_into`, `tile::rofm`'s datapaths and the
+/// `refcompute` requant helpers they call, copied verbatim so the
+/// baseline cannot drift when the live crate changes.
+///
+/// Do not "optimize" this module — it *is* the baseline the bench
+/// gates against. It charges exactly the counters the scalar kernels
+/// charged, which the harness asserts equal to the blocked kernels'.
+mod legacy {
+    use domino::sim::Counters;
+
+    fn clamp_i8(v: i32) -> i8 {
+        v.clamp(i8::MIN as i32, i8::MAX as i32) as i8
+    }
+
+    fn requant(acc: i32, shift: u32, relu: bool) -> i8 {
+        let mut v = acc >> shift; // arithmetic shift (i32)
+        if relu {
+            v = v.max(0);
+        }
+        clamp_i8(v)
+    }
+
+    fn res_add(a: i8, b: i8) -> i8 {
+        clamp_i8((a as i32 + b as i32).max(0))
+    }
+
+    /// The PR-9 `Pe::mvm_into` body over a row-major `[rows][cols]`
+    /// weight slice: per-row zero skip, scalar inner accumulation.
+    pub fn mvm_into(
+        weights: &[i8],
+        rows: usize,
+        cols: usize,
+        x: &[i8],
+        out: &mut [i32],
+        stats: &mut Counters,
+    ) {
+        assert!(x.len() <= rows, "input vector exceeds crossbar rows");
+        assert_eq!(out.len(), cols, "MVM output width");
+        stats.pe_mvms += 1;
+        stats.pe_macs += (x.len() * cols) as u64;
+        out.fill(0);
+        for (c, &xv) in x.iter().enumerate() {
+            if xv == 0 {
+                continue;
+            }
+            let xv = xv as i32;
+            let row = &weights[c * cols..(c + 1) * cols];
+            for (o, &wv) in out.iter_mut().zip(row) {
+                *o += xv * wv as i32;
+            }
+        }
+    }
+
+    /// The PR-9 `Rofm::add_psum_slices` body.
+    pub fn add_psum_slices(acc: &mut [i32], incoming: &[i32], stats: &mut Counters) {
+        assert_eq!(acc.len(), incoming.len(), "psum width mismatch");
+        for (a, b) in acc.iter_mut().zip(incoming.iter()) {
+            *a += b;
+        }
+        stats.adds_8b += 4 * acc.len() as u64;
+    }
+
+    /// The PR-9 `Rofm::act_into` body.
+    pub fn act_into(sum: &[i32], shift: u32, out: &mut Vec<i8>, stats: &mut Counters) {
+        stats.act_ops_8b += sum.len() as u64;
+        out.clear();
+        out.extend(sum.iter().map(|&v| requant(v, shift, true)));
+    }
+
+    /// The PR-9 `Rofm::quantize_into` body.
+    pub fn quantize_into(sum: &[i32], shift: u32, out: &mut Vec<i8>, stats: &mut Counters) {
+        stats.act_ops_8b += sum.len() as u64;
+        out.clear();
+        out.extend(sum.iter().map(|&v| requant(v, shift, false)));
+    }
+
+    /// The PR-9 `Rofm::cmp_max` body.
+    pub fn cmp_max(acc: &mut [i8], incoming: &[i8], stats: &mut Counters) {
+        assert_eq!(acc.len(), incoming.len());
+        stats.pool_ops_8b += acc.len() as u64;
+        for (a, b) in acc.iter_mut().zip(incoming.iter()) {
+            *a = (*a).max(*b);
+        }
+    }
+
+    /// The PR-9 `Rofm::res_add_into` body.
+    pub fn res_add_into(main: &[i8], skip: &[i8], out: &mut Vec<i8>, stats: &mut Counters) {
+        assert_eq!(main.len(), skip.len());
+        stats.adds_8b += main.len() as u64;
+        stats.act_ops_8b += main.len() as u64;
+        out.clear();
+        out.extend(main.iter().zip(skip.iter()).map(|(&a, &b)| res_add(a, b)));
+    }
+}
+
+/// An i8 input vector with roughly `zero_pct`% zeros (a post-ReLU
+/// activation profile — the zero-skip paths in both kernels see the
+/// same mix, so the comparison is fair).
+fn sparse_vec(rng: &mut Rng, len: usize, zero_pct: f64) -> Vec<i8> {
+    (0..len)
+        .map(|_| if rng.chance(zero_pct / 100.0) { 0 } else { rng.i8() })
+        .collect()
+}
+
+/// One measured workload row: a bit-exactness check, then timed
+/// baseline and blocked runs.
+struct Row {
+    name: String,
+    speedup: f64,
+    baseline_s: f64,
+    steady_s: f64,
+    gated: bool,
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let json_path = arg_value(&argv, "--json");
+    let gate: f64 = arg_value(&argv, "--gate")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.5);
+    println!(
+        "kernel performance ({}) — blocked kernels vs frozen PR-9 scalar baseline, \
+         MVM geomean gate >= {gate:.2}x\n",
+        if smoke { "smoke" } else { "full" }
+    );
+    println!(
+        "note: BENCH_*.json files checked into the repo are schema seeds, not \
+         measured numbers (see ROADMAP standing note)\n"
+    );
+
+    let iters = if smoke { 5 } else { 7 };
+    let mut rows: Vec<Row> = Vec::new();
+
+    // ---- MVM family (the gate basis) --------------------------------
+    // (rows, cols, %zeros in x): dense square, post-ReLU sparse, and a
+    // cols ∤ LANE remainder-panel shape.
+    let mvm_shapes: &[(usize, usize, f64, &str)] = &[
+        (256, 256, 0.0, "mvm dense 256x256"),
+        (256, 256, 50.0, "mvm sparse50 256x256"),
+        (256, 100, 0.0, "mvm remainder 256x100"),
+    ];
+    let reps = if smoke { 64 } else { 256 };
+    for &(r, c, zp, name) in mvm_shapes {
+        let mut rng = Rng::new(11);
+        let weights = sparse_vec(&mut rng, r * c, 0.0);
+        let xs: Vec<Vec<i8>> = (0..8).map(|_| sparse_vec(&mut rng, r, zp)).collect();
+        let pe = Pe::new(weights.clone(), r, c);
+        let mut out_a = vec![0i32; c];
+        let mut out_b = vec![0i32; c];
+
+        // Correctness first: outputs AND charged counters must match.
+        let (mut st_a, mut st_b) = (Counters::default(), Counters::default());
+        for x in &xs {
+            legacy::mvm_into(&weights, r, c, x, &mut out_a, &mut st_a);
+            pe.mvm_into(x, &mut out_b, &mut st_b);
+            assert_eq!(out_a, out_b, "{name}: blocked MVM diverged from scalar");
+        }
+        assert_eq!(st_a, st_b, "{name}: counters diverged");
+
+        let mut st = Counters::default();
+        let base = stats(time_n(iters, || {
+            for i in 0..reps {
+                legacy::mvm_into(&weights, r, c, &xs[i % xs.len()], &mut out_a, &mut st);
+            }
+            std::hint::black_box(&out_a);
+        }));
+        let steady = stats(time_n(iters, || {
+            for i in 0..reps {
+                pe.mvm_into(&xs[i % xs.len()], &mut out_b, &mut st);
+            }
+            std::hint::black_box(&out_b);
+        }));
+        push_row(&mut rows, name, &base, &steady, true, (r * c * reps) as u64);
+    }
+
+    // mvm_many_into: one packed mount draining a full micro-batch vs
+    // MICRO_BATCH separate scalar MVMs (the conv-chain refill shape).
+    {
+        let (r, c) = (256usize, 256usize);
+        let name = format!("mvm_many x{MICRO_BATCH} 256x256");
+        let mut rng = Rng::new(12);
+        let weights = sparse_vec(&mut rng, r * c, 0.0);
+        let batch: Vec<Vec<i8>> = (0..MICRO_BATCH).map(|_| sparse_vec(&mut rng, r, 30.0)).collect();
+        let xs: Vec<&[i8]> = batch.iter().map(|v| v.as_slice()).collect();
+        let pe = Pe::new(weights.clone(), r, c);
+        let mut out_a = vec![0i32; MICRO_BATCH * c];
+        let mut out_b = vec![0i32; MICRO_BATCH * c];
+
+        let (mut st_a, mut st_b) = (Counters::default(), Counters::default());
+        for (b, x) in xs.iter().enumerate() {
+            legacy::mvm_into(&weights, r, c, x, &mut out_a[b * c..(b + 1) * c], &mut st_a);
+        }
+        pe.mvm_many_into(&xs, &mut out_b, &mut st_b);
+        assert_eq!(out_a, out_b, "{name}: micro-batch MVM diverged from scalar");
+        assert_eq!(st_a, st_b, "{name}: counters diverged");
+
+        let mut st = Counters::default();
+        let base = stats(time_n(iters, || {
+            for _ in 0..reps {
+                for (b, x) in xs.iter().enumerate() {
+                    legacy::mvm_into(&weights, r, c, x, &mut out_a[b * c..(b + 1) * c], &mut st);
+                }
+            }
+            std::hint::black_box(&out_a);
+        }));
+        let steady = stats(time_n(iters, || {
+            for _ in 0..reps {
+                pe.mvm_many_into(&xs, &mut out_b, &mut st);
+            }
+            std::hint::black_box(&out_b);
+        }));
+        let macs = (r * c * MICRO_BATCH * reps) as u64;
+        push_row(&mut rows, &name, &base, &steady, true, macs);
+    }
+
+    // ---- vectorized rofm datapaths (reported, not gated) ------------
+    let vreps = if smoke { 1024 } else { 4096 };
+    {
+        let len = 256usize;
+        let mut rng = Rng::new(13);
+        let inc: Vec<i32> = (0..len).map(|_| rng.i8() as i32 * 117).collect();
+        let sum: Vec<i32> = (0..len).map(|_| rng.i8() as i32 * 33).collect();
+        let main_v = sparse_vec(&mut rng, len, 20.0);
+        let skip_v = sparse_vec(&mut rng, len, 20.0);
+        let mut acc_a = vec![0i32; len];
+        let mut acc_b = vec![0i32; len];
+        let mut v8_a: Vec<i8> = Vec::new();
+        let mut v8_b: Vec<i8> = Vec::new();
+
+        // Correctness first, for every reported datapath.
+        let (mut st_a, mut st_b) = (Counters::default(), Counters::default());
+        legacy::add_psum_slices(&mut acc_a, &inc, &mut st_a);
+        Rofm::add_psum_slices(&mut acc_b, &inc, &mut st_b);
+        assert_eq!(acc_a, acc_b, "add_psum_slices diverged");
+        legacy::act_into(&sum, 4, &mut v8_a, &mut st_a);
+        Rofm::act_into(&sum, 4, &mut v8_b, &mut st_b);
+        assert_eq!(v8_a, v8_b, "act_into diverged");
+        legacy::quantize_into(&sum, 4, &mut v8_a, &mut st_a);
+        Rofm::quantize_into(&sum, 4, &mut v8_b, &mut st_b);
+        assert_eq!(v8_a, v8_b, "quantize_into diverged");
+        legacy::res_add_into(&main_v, &skip_v, &mut v8_a, &mut st_a);
+        Rofm::res_add_into(&main_v, &skip_v, &mut v8_b, &mut st_b);
+        assert_eq!(v8_a, v8_b, "res_add_into diverged");
+        let mut mx_a = main_v.clone();
+        let mut mx_b = main_v.clone();
+        legacy::cmp_max(&mut mx_a, &skip_v, &mut st_a);
+        Rofm::cmp_max(&mut mx_b, &skip_v, &mut st_b);
+        assert_eq!(mx_a, mx_b, "cmp_max diverged");
+        assert_eq!(st_a, st_b, "rofm datapath counters diverged");
+
+        let mut st = Counters::default();
+        let base = stats(time_n(iters, || {
+            for _ in 0..vreps {
+                legacy::add_psum_slices(&mut acc_a, &inc, &mut st);
+                legacy::act_into(&sum, 4, &mut v8_a, &mut st);
+                legacy::res_add_into(&main_v, &skip_v, &mut v8_a, &mut st);
+                legacy::cmp_max(&mut mx_a, &skip_v, &mut st);
+            }
+            std::hint::black_box((&acc_a, &v8_a, &mx_a));
+        }));
+        let steady = stats(time_n(iters, || {
+            for _ in 0..vreps {
+                Rofm::add_psum_slices(&mut acc_b, &inc, &mut st);
+                Rofm::act_into(&sum, 4, &mut v8_b, &mut st);
+                Rofm::res_add_into(&main_v, &skip_v, &mut v8_b, &mut st);
+                Rofm::cmp_max(&mut mx_b, &skip_v, &mut st);
+            }
+            std::hint::black_box((&acc_b, &v8_b, &mx_b));
+        }));
+        let ops = (4 * len * vreps) as u64;
+        push_row(&mut rows, "rofm psum/act/res/cmp 256", &base, &steady, false, ops);
+    }
+
+    // ---- the gate: geometric mean over the MVM family ---------------
+    let gated: Vec<&Row> = rows.iter().filter(|r| r.gated).collect();
+    let geomean = (gated.iter().map(|r| r.speedup.ln()).sum::<f64>() / gated.len() as f64).exp();
+    let pass = geomean >= gate;
+    println!(
+        "\nMVM-family kernel speedup gate (geomean >= {gate:.2}x vs frozen scalar): \
+         {geomean:.2}x {}",
+        if pass { "PASS" } else { "FAIL" }
+    );
+
+    if let Some(path) = json_path {
+        let workloads: Vec<String> = rows
+            .iter()
+            .map(|r| {
+                let mut w = JsonObj::new();
+                w.str_field("name", &r.name)
+                    .f64_field("baseline_s", r.baseline_s)
+                    .f64_field("steady_s", r.steady_s)
+                    .f64_field("speedup_vs_scalar", r.speedup)
+                    .bool_field("gated", r.gated);
+                w.finish()
+            })
+            .collect();
+        let mut doc = JsonObj::new();
+        doc.str_field("bench", "bench_kernels")
+            .str_field("mode", if smoke { "smoke" } else { "full" })
+            .f64_field("gate", gate)
+            .str_field(
+                "gate_basis",
+                "geomean of speedup_vs_scalar over gated (MVM-family) workloads",
+            )
+            .f64_field("geomean_speedup", geomean)
+            .bool_field("pass", pass)
+            .raw_field("workloads", &domino::benchutil::json_array(&workloads));
+        domino::benchutil::write_json(&path, &doc.finish()).expect("write bench json");
+    }
+
+    if !pass {
+        eprintln!("bench_kernels: MVM speedup gate FAILED");
+        std::process::exit(1);
+    }
+}
+
+/// Record and print one workload row (ops = total MACs or 8-bit ops
+/// per timed iteration, for the throughput column).
+fn push_row(
+    rows: &mut Vec<Row>,
+    name: &str,
+    base: &domino::benchutil::Stats,
+    steady: &domino::benchutil::Stats,
+    gated: bool,
+    ops: u64,
+) {
+    let speedup = steady.speedup_over(base);
+    println!(
+        "{name:<28} scalar {:>10.3?}  blocked {:>10.3?}  ({:.1} Mop/s, {speedup:.2}x{})",
+        base.median,
+        steady.median,
+        ops as f64 / steady.median.as_secs_f64() / 1e6,
+        if gated { "" } else { ", not gated" }
+    );
+    rows.push(Row {
+        name: name.to_string(),
+        speedup,
+        baseline_s: base.median.as_secs_f64(),
+        steady_s: steady.median.as_secs_f64(),
+        gated,
+    });
+}

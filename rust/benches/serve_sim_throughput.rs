@@ -199,6 +199,7 @@ fn main() -> anyhow::Result<()> {
             workers: if smoke { 2 } else { 4 },
             max_batch: 8,
             queue_cap: 1024,
+            ..ServeConfig::default()
         };
         let clients = if smoke { 2 } else { 4 };
         let per_client = if smoke { 8 } else { 64 };
@@ -296,6 +297,7 @@ fn main() -> anyhow::Result<()> {
         workers: if smoke { 2 } else { 4 },
         max_batch: 8,
         queue_cap: 4096,
+        ..ServeConfig::default()
     };
     let clients = if smoke { 3 } else { 6 };
     let per_client = if smoke { 12 } else { 48 };
@@ -479,6 +481,7 @@ fn main() -> anyhow::Result<()> {
             workers: if smoke { 2 } else { 4 },
             max_batch: 8,
             queue_cap: 4096,
+            ..ServeConfig::default()
         };
         let server = Server::start_multi(cfg, Arc::clone(&registry))?;
         let service = Arc::new(Service::new(server, ArchConfig::default()));

@@ -103,7 +103,7 @@ COMMANDS:
   sweep [--models a,b]   mapping explorer across crossbar sizes
   golden [--images N]    check AOT golden model vs reference (needs artifacts)
   serve [--backend pjrt|sim] [--model M | --models a,b,c] [--workers N]
-        [--batch B] [--requests R] [--queue Q] [--seed S]
+        [--batch B] [--requests R] [--queue Q] [--dispatchers D] [--seed S]
         [--swap M [--swap-after K]]
         [--listen ADDR [--serve-secs N]] [--registry-file PATH]
                          run the inference server: `pjrt` serves the AOT
@@ -117,8 +117,11 @@ COMMANDS:
                          served it. `--listen HOST:PORT` (sim only)
                          exposes the typed service API over TCP instead
                          (port 0 picks an ephemeral port and prints the
-                         bound address); `--registry-file` persists the
-                         loaded-model set across restarts
+                         bound address); `--dispatchers` sizes the TCP
+                         endpoint's dispatcher thread pool (default 4,
+                         0 is rejected with a typed error);
+                         `--registry-file` persists the loaded-model
+                         set across restarts
   client <op> --addr HOST:PORT [--json]
                          drive a `serve --listen` endpoint: infer <m>
                          [--requests N] [--seed S] [--verify-seed S],
@@ -167,7 +170,7 @@ COMMANDS:
                          bench embeds the same shape into BENCH_serve.json)
   cluster serve (--spawn N | --backends a,b,c) --listen ADDR
           [--models a,b,c] [--replication R] [--seed S]
-          [--workers N] [--serve-secs N]
+          [--workers N] [--dispatchers D] [--serve-secs N]
                          run a cluster router: shard + replicate models
                          over N spawned backend processes (or attach to
                          already-running --backends), health-check them,

@@ -318,6 +318,7 @@ fn map_explore(args: &Args) -> Result<()> {
                 workers: 1,
                 max_batch: 4,
                 queue_cap: 16,
+                ..ServeConfig::default()
             },
             Arc::clone(&registry),
         )?;
@@ -664,7 +665,7 @@ fn serve(args: &Args) -> Result<()> {
 /// the exact model version stamped on it.
 fn serve_sim(args: &Args) -> Result<()> {
     use domino::serve::api::{self, RegistryManifest};
-    use domino::serve::net::NetServer;
+    use domino::serve::net::{NetConfig, NetServer};
     use domino::serve::{LatencyStats, ModelRegistry, ServeConfig, Server, Service};
     use std::sync::Arc;
 
@@ -688,6 +689,7 @@ fn serve_sim(args: &Args) -> Result<()> {
         workers: args.get_usize("workers", 2),
         max_batch: args.get_usize("batch", 8),
         queue_cap: args.get_usize("queue", 256),
+        dispatchers: args.get_usize("dispatchers", ServeConfig::default().dispatchers),
     };
     let n = args.get_usize("requests", 64);
 
@@ -766,7 +768,14 @@ fn serve_sim(args: &Args) -> Result<()> {
              use `domino client infer <model> --requests N --addr <addr>` instead"
         );
         let service = Arc::new(service);
-        let net = NetServer::bind(addr, Arc::clone(&service))?;
+        let net = NetServer::bind_with(
+            addr,
+            Arc::clone(&service),
+            NetConfig {
+                dispatchers: cfg.dispatchers,
+                ..NetConfig::default()
+            },
+        )?;
         // port 0 resolves to the actually-bound ephemeral port here
         println!("listening on {addr_real} (length-prefixed JSON frames; drive with `domino client <op> --addr {addr_real}`)",
             addr_real = net.local_addr());
@@ -1189,6 +1198,7 @@ fn traffic_record(args: &Args) -> Result<()> {
             workers: 2,
             max_batch: 4,
             queue_cap: 64,
+            ..ServeConfig::default()
         },
         registry,
     )?;
@@ -1310,6 +1320,7 @@ fn traffic_replay(args: &Args) -> Result<()> {
                     workers: 2,
                     max_batch: 4,
                     queue_cap: 64,
+                    ..ServeConfig::default()
                 },
                 registry,
             )?;
@@ -1419,6 +1430,7 @@ fn serve_pjrt(args: &Args) -> Result<()> {
         workers: args.get_usize("workers", 2),
         max_batch: args.get_usize("batch", 8),
         queue_cap: args.get_usize("queue", 256),
+        ..ServeConfig::default()
     };
     let n = args.get_usize("requests", 256);
     println!(
@@ -1567,7 +1579,7 @@ fn cluster_models(args: &Args) -> Vec<String> {
 /// indistinguishable from a single serve endpoint to any client.
 fn cluster_serve(args: &Args) -> Result<()> {
     use domino::serve::api::{Dispatcher, Request, Response};
-    use domino::serve::net::NetServer;
+    use domino::serve::net::{NetConfig, NetServer};
     use domino::serve::{ClusterConfig, Router};
     use std::sync::Arc;
     use std::time::Duration;
@@ -1630,7 +1642,15 @@ fn cluster_serve(args: &Args) -> Result<()> {
     print!("{}", router.status().render());
 
     let router = Arc::new(router);
-    let net = NetServer::bind(listen, Arc::clone(&router))?;
+    let net = NetServer::bind_with(
+        listen,
+        Arc::clone(&router),
+        NetConfig {
+            dispatchers: args
+                .get_usize("dispatchers", domino::serve::ServeConfig::default().dispatchers),
+            ..NetConfig::default()
+        },
+    )?;
     println!(
         "router listening on {addr_real} (length-prefixed JSON frames; drive with \
          `domino client <op> --addr {addr_real}`)",
@@ -1778,6 +1798,7 @@ fn fault_local_service(model: &str, args: &Args) -> Result<(domino::serve::Servi
             workers: 1,
             max_batch: 2,
             queue_cap: 64,
+            ..ServeConfig::default()
         },
         registry,
     )?;
@@ -1913,6 +1934,7 @@ fn fault_storm(args: &Args) -> Result<()> {
             workers: 2,
             max_batch: 4,
             queue_cap: 64,
+            ..ServeConfig::default()
         },
         registry,
     )?;

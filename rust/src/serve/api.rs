@@ -1158,6 +1158,7 @@ mod tests {
                 workers: 1,
                 max_batch: 4,
                 queue_cap: 64,
+                ..ServeConfig::default()
             },
             registry,
         )

@@ -284,6 +284,18 @@ impl Client {
         Ok(rid)
     }
 
+    /// Claim the response to a prior [`Self::submit`] *only if it has
+    /// already been read off the wire and parked* by an earlier await
+    /// on this connection. Never touches the socket: `None` means
+    /// "not arrived yet", not "unknown id". The cluster's pipelined
+    /// connection pool builds its leader/follower protocol on this —
+    /// one thread drives the socket with [`Self::await_response`]
+    /// (parking everyone else's responses as they arrive) while the
+    /// waiting threads poll the parked set without blocking on reads.
+    pub fn take_ready(&mut self, rid: u64) -> Option<Response> {
+        self.ready.remove(&rid)
+    }
+
     /// Claim the response to a prior [`Self::submit`]. Responses to
     /// *other* outstanding ids that arrive first are parked, so
     /// awaiting in any order works. An id that was never submitted

@@ -19,6 +19,15 @@
 //!   elsewhere from `(zoo name, seed, mapping)` alone: weights are a
 //!   pure function of (network, seed), so a re-load is bit-identical.
 //!   `Unload` fans to every live backend and drops the table entry.
+//! - **Connection pooling.** Data-plane `Infer` calls multiplex over
+//!   a small per-backend pool of pipelined wire-v2 connections
+//!   ([`ClusterConfig::pipe_conns`] of them), claimed by request id:
+//!   one socket carries many in-flight infers instead of one socket
+//!   per request. Admin and observability calls ride plain pooled
+//!   synchronous connections. Both pools recycle their sockets on any
+//!   transport error and are cleared outright when a backend is
+//!   marked dead; [`BackendStatus::dials`] counts fresh routed-call
+//!   connections so tests can pin the reuse.
 //! - **Observability.** `Stats` aggregates every backend (counters
 //!   summed, per-model percentiles folded by max); `ListModels`
 //!   unions; `ModelInfo`/`Trace` go to the model's primary owner.
@@ -56,7 +65,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
@@ -89,6 +98,10 @@ pub struct ClusterConfig {
     pub connect_attempts: u32,
     /// Base delay of that backoff schedule.
     pub connect_backoff: Duration,
+    /// Pipelined wire-v2 connections kept per backend for `Infer`
+    /// dispatch: the data-plane pool `Infer` requests multiplex over
+    /// by request id (see [`Client::submit`]). Clamped to >= 1.
+    pub pipe_conns: usize,
 }
 
 impl Default for ClusterConfig {
@@ -101,6 +114,7 @@ impl Default for ClusterConfig {
             canary: true,
             connect_attempts: 3,
             connect_backoff: Duration::from_millis(10),
+            pipe_conns: 2,
         }
     }
 }
@@ -116,6 +130,57 @@ pub const CANARY_SEED: u64 = 0xCA_11_A2;
 struct ModelSpec {
     seed: Option<u64>,
     mapping: Option<MappingSpec>,
+}
+
+/// One slot of a backend's pipelined data-plane pool: a wire-v2
+/// connection many `Infer` requests share by request id.
+///
+/// The concurrency protocol is leader/follower. Submitting is quick
+/// (one framed write under the slot lock). Awaiting elects one
+/// *reader* per slot: it checks the client out of the slot and drives
+/// the socket with [`Client::await_response`] — which parks other
+/// ids' responses inside the client — while every other waiter sleeps
+/// on the condvar and, on each wake, polls [`Client::take_ready`] for
+/// its own id. Requests submitted while a reader is out queue on the
+/// condvar, so the lock is never held across a blocking read.
+struct PipeSlot {
+    state: Mutex<PipeState>,
+    cv: Condvar,
+}
+
+struct PipeState {
+    /// The pooled connection: `None` before the first dial, after a
+    /// recycle, or while the reader has it checked out (the `reader`
+    /// flag tells those states apart).
+    client: Option<Client>,
+    /// Bumped on every dial and every recycle. A waiter whose epoch
+    /// no longer matches knows its response died with the old
+    /// connection and must fail (the caller fails over).
+    epoch: u64,
+    /// A reader currently has the client checked out.
+    reader: bool,
+}
+
+impl PipeSlot {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(PipeState {
+                client: None,
+                epoch: 0,
+                reader: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Drop the slot's connection (responses in flight on it are
+    /// lost; their waiters see the epoch change and error out).
+    fn recycle(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.client = None;
+        st.epoch += 1;
+        self.cv.notify_all();
+    }
 }
 
 /// One backend endpoint and the router's view of it.
@@ -137,14 +202,24 @@ struct Backend {
     in_flight: AtomicUsize,
     served: AtomicU64,
     errors: AtomicU64,
-    /// Idle pooled connections, reused across calls.
+    /// Fresh connections dialed by routed calls (both pools; health
+    /// probes deliberately dial their own and are not counted). The
+    /// cluster_properties suite pins connection reuse with this.
+    dials: AtomicU64,
+    /// Idle pooled connections for admin/observability calls, reused
+    /// across calls.
     pool: Mutex<Vec<Client>>,
+    /// Pipelined wire-v2 connections for `Infer` dispatch, sized by
+    /// [`ClusterConfig::pipe_conns`].
+    pipes: Vec<PipeSlot>,
+    /// Round-robin cursor over `pipes`.
+    next_pipe: AtomicUsize,
     /// Models the last health probe saw loaded.
     loaded: Mutex<BTreeSet<String>>,
 }
 
 impl Backend {
-    fn new(addr: String) -> Self {
+    fn new(addr: String, pipe_conns: usize) -> Self {
         Self {
             addr,
             alive: AtomicBool::new(true),
@@ -153,7 +228,10 @@ impl Backend {
             in_flight: AtomicUsize::new(0),
             served: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            dials: AtomicU64::new(0),
             pool: Mutex::new(Vec::new()),
+            pipes: (0..pipe_conns.max(1)).map(|_| PipeSlot::new()).collect(),
+            next_pipe: AtomicUsize::new(0),
             loaded: Mutex::new(BTreeSet::new()),
         }
     }
@@ -181,6 +259,9 @@ impl Backend {
         self.alive.store(false, Ordering::SeqCst);
         // pooled connections to a dead backend are stale
         self.pool.lock().unwrap().clear();
+        for slot in &self.pipes {
+            slot.recycle();
+        }
     }
 }
 
@@ -237,6 +318,10 @@ pub struct BackendStatus {
     pub in_flight: u64,
     pub served: u64,
     pub errors: u64,
+    /// Fresh connections the router has dialed to this backend for
+    /// routed calls. With pooling working, this stays near the pool
+    /// sizes no matter how many requests flow.
+    pub dials: u64,
     pub loaded: Vec<String>,
 }
 
@@ -264,12 +349,14 @@ impl ClusterStatus {
                 "alive"
             };
             out.push_str(&format!(
-                "  {:<22} {:<13} in-flight {:>3}  served {:>6}  errors {:>4}  [{}]\n",
+                "  {:<22} {:<13} in-flight {:>3}  served {:>6}  errors {:>4}  \
+                 dials {:>4}  [{}]\n",
                 b.addr,
                 state,
                 b.in_flight,
                 b.served,
                 b.errors,
+                b.dials,
                 b.loaded.join(", ")
             ));
         }
@@ -297,9 +384,13 @@ impl Router {
                 bail!("duplicate backend address {b:?}");
             }
         }
+        let pipe_conns = cfg.pipe_conns.max(1);
         Ok(Self {
             inner: Arc::new(RouterInner {
-                backends: backends.into_iter().map(|a| Arc::new(Backend::new(a))).collect(),
+                backends: backends
+                    .into_iter()
+                    .map(|a| Arc::new(Backend::new(a, pipe_conns)))
+                    .collect(),
                 cfg,
                 models: Mutex::new(BTreeMap::new()),
                 conns_refused: AtomicU64::new(0),
@@ -396,6 +487,7 @@ impl Router {
                 in_flight: b.in_flight.load(Ordering::SeqCst) as u64,
                 served: b.served.load(Ordering::SeqCst),
                 errors: b.errors.load(Ordering::SeqCst),
+                dials: b.dials.load(Ordering::Relaxed),
                 loaded: b.loaded.lock().unwrap().iter().cloned().collect(),
             })
             .collect();
@@ -479,12 +571,18 @@ impl RouterInner {
             .collect()
     }
 
-    /// One routed call over a pooled connection. A transport error
-    /// marks the backend dead (the caller decides whether to fail
-    /// over); a typed `Response::Error` is a *successful* call.
+    /// One routed call over a pooled connection. `Infer` rides the
+    /// backend's pipelined pool (many in flight per socket, claimed
+    /// by request id); everything else uses a plain synchronous
+    /// pooled connection. A transport error marks the backend dead
+    /// (the caller decides whether to fail over); a typed
+    /// `Response::Error` is a *successful* call.
     fn call_backend(&self, be: &Backend, req: &Request) -> Result<Response> {
         be.in_flight.fetch_add(1, Ordering::SeqCst);
-        let result = self.call_pooled(be, req);
+        let result = match req {
+            Request::Infer { .. } => self.call_piped(be, req),
+            _ => self.call_pooled(be, req),
+        };
         be.in_flight.fetch_sub(1, Ordering::SeqCst);
         match &result {
             Ok(_) => {
@@ -501,18 +599,7 @@ impl RouterInner {
     fn call_pooled(&self, be: &Backend, req: &Request) -> Result<Response> {
         let mut client = match be.pool.lock().unwrap().pop() {
             Some(c) => c,
-            None => {
-                // bounded backoff: ride out a transient refusal (a
-                // backend mid-restart) without hammering it, give up
-                // with a typed error so the caller fails over
-                let mut c = Client::connect_with_backoff(
-                    &be.addr,
-                    self.cfg.connect_attempts,
-                    self.cfg.connect_backoff,
-                )?;
-                c.set_read_timeout(Some(self.cfg.request_timeout))?;
-                c
-            }
+            None => self.dial(be)?,
         };
         match client.call(req) {
             Ok(resp) => {
@@ -521,6 +608,111 @@ impl RouterInner {
             }
             // the client poisoned itself; drop it, never re-pool it
             Err(e) => Err(e),
+        }
+    }
+
+    /// Open a fresh routed-call connection to `be`, counted in
+    /// [`BackendStatus::dials`]. Bounded backoff: ride out a
+    /// transient refusal (a backend mid-restart) without hammering
+    /// it, give up with a typed error so the caller fails over.
+    fn dial(&self, be: &Backend) -> Result<Client> {
+        be.dials.fetch_add(1, Ordering::Relaxed);
+        let mut c = Client::connect_with_backoff(
+            &be.addr,
+            self.cfg.connect_attempts,
+            self.cfg.connect_backoff,
+        )?;
+        c.set_read_timeout(Some(self.cfg.request_timeout))?;
+        Ok(c)
+    }
+
+    /// One `Infer` round-trip over the backend's pipelined pool:
+    /// submit tagged with a fresh request id on a round-robin slot,
+    /// release the slot lock, claim the response by id. See
+    /// [`PipeSlot`] for the leader/follower protocol that lets many
+    /// router threads share one socket. Any transport error recycles
+    /// the slot — the next call re-dials — and fails every response
+    /// still in flight on it; the caller marks the backend dead and
+    /// fails over exactly like the unpooled path.
+    fn call_piped(&self, be: &Backend, req: &Request) -> Result<Response> {
+        let idx = be.next_pipe.fetch_add(1, Ordering::Relaxed) % be.pipes.len();
+        let slot = &be.pipes[idx];
+        let mut st = slot.state.lock().unwrap();
+        // a reader has the client checked out: queue until it is back
+        while st.reader {
+            st = slot.cv.wait(st).unwrap();
+        }
+        if st.client.is_none() {
+            let c = match self.dial(be) {
+                Ok(c) => c,
+                Err(e) => {
+                    slot.cv.notify_all();
+                    return Err(e);
+                }
+            };
+            st.client = Some(c);
+            st.epoch += 1;
+        }
+        let my_epoch = st.epoch;
+        let rid = match st.client.as_mut().unwrap().submit(req) {
+            Ok(rid) => rid,
+            Err(e) => {
+                st.client = None;
+                st.epoch += 1;
+                slot.cv.notify_all();
+                return Err(e);
+            }
+        };
+        loop {
+            if st.epoch != my_epoch {
+                bail!(
+                    "pipelined connection to {} was recycled with request id {rid} in flight",
+                    be.addr
+                );
+            }
+            if let Some(client) = st.client.as_mut() {
+                if let Some(resp) = client.take_ready(rid) {
+                    slot.cv.notify_all();
+                    return Ok(resp);
+                }
+            }
+            if st.reader {
+                st = slot.cv.wait(st).unwrap();
+                continue;
+            }
+            // become the reader: check the client out so the lock is
+            // not held across the blocking read (submitters queue on
+            // the condvar, not behind a socket)
+            let mut client = st
+                .client
+                .take()
+                .expect("pipe slot invariant: matching epoch and no reader implies a client");
+            st.reader = true;
+            drop(st);
+            let result = client.await_response(rid);
+            st = slot.state.lock().unwrap();
+            st.reader = false;
+            match result {
+                Ok(resp) => {
+                    // give the client back (other ids' parked
+                    // responses ride inside it) unless the slot was
+                    // recycled while we were reading — our own answer
+                    // is still valid either way
+                    if st.epoch == my_epoch {
+                        st.client = Some(client);
+                    }
+                    slot.cv.notify_all();
+                    return Ok(resp);
+                }
+                Err(e) => {
+                    if st.epoch == my_epoch {
+                        st.client = None;
+                        st.epoch += 1;
+                    }
+                    slot.cv.notify_all();
+                    return Err(e);
+                }
+            }
         }
     }
 
@@ -1011,6 +1203,33 @@ mod tests {
         assert_eq!(failed_over.len(), 2);
         assert!(failed_over.contains(&owners[1]), "surviving owner kept");
         assert!(!failed_over.contains(&owners[0]), "dead owner still ranked");
+    }
+
+    #[test]
+    fn pipe_pool_is_sized_by_config_and_recycled_on_death() {
+        let r = router(&["a:1", "b:2"], 1);
+        let be = &r.inner.backends[0];
+        assert_eq!(be.pipes.len(), ClusterConfig::default().pipe_conns);
+        let e0 = be.pipes[0].state.lock().unwrap().epoch;
+        // marking dead clears both pools and bumps every slot's epoch,
+        // so waiters with responses in flight fail instead of hanging
+        be.mark_dead();
+        for slot in &be.pipes {
+            let st = slot.state.lock().unwrap();
+            assert!(st.client.is_none());
+            assert!(!st.reader);
+        }
+        assert_eq!(be.pipes[0].state.lock().unwrap().epoch, e0 + 1);
+        // pipe_conns is clamped: even 0 leaves one usable slot
+        let r0 = Router::new(
+            vec!["c:3".to_string()],
+            ClusterConfig {
+                pipe_conns: 0,
+                ..ClusterConfig::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(r0.inner.backends[0].pipes.len(), 1);
     }
 
     #[test]

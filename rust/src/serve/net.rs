@@ -82,6 +82,23 @@ impl Default for NetConfig {
     }
 }
 
+/// Typed rejection of a zero-size dispatcher pool: an endpoint with no
+/// dispatcher threads could accept connections but never answer them,
+/// so [`NetServer::bind_with`] refuses it up front. Carried as the
+/// root cause inside the returned `anyhow::Error`, so callers (and the
+/// CLI) distinguish the config mistake from a bind failure with
+/// `err.downcast_ref::<ZeroDispatchers>()`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ZeroDispatchers;
+
+impl std::fmt::Display for ZeroDispatchers {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "dispatcher pool size must be >= 1 (got 0)")
+    }
+}
+
+impl std::error::Error for ZeroDispatchers {}
+
 /// A running TCP endpoint. Dropping it (or calling
 /// [`Self::shutdown`]) stops the loop and drains every connection.
 pub struct NetServer {
@@ -106,6 +123,10 @@ impl NetServer {
         service: Arc<D>,
         cfg: NetConfig,
     ) -> Result<Self> {
+        if cfg.dispatchers == 0 {
+            return Err(anyhow::Error::new(ZeroDispatchers)
+                .context(format!("refusing to bind {addr}")));
+        }
         let service: Arc<dyn Dispatcher> = service;
         let listener =
             TcpListener::bind(addr).with_context(|| format!("failed to bind {addr}"))?;
@@ -383,7 +404,9 @@ fn event_loop(
     let q = Arc::new(DispatchQueue::default());
     let (done_tx, done_rx) = mpsc::channel::<Done>();
     let mut pool = Vec::new();
-    for d in 0..cfg.dispatchers.max(1) {
+    // `bind_with` rejects dispatchers == 0 (ZeroDispatchers), so the
+    // pool is never empty.
+    for d in 0..cfg.dispatchers {
         let spawned = std::thread::Builder::new()
             .name(format!("domino-net-dispatch-{d}"))
             .spawn({

@@ -56,6 +56,12 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// Queue capacity; `submit` fails fast beyond it (backpressure).
     pub queue_cap: usize,
+    /// Dispatcher threads of the TCP endpoint fronting this server
+    /// (plumbed into [`crate::serve::net::NetConfig::dispatchers`] by
+    /// the `serve`/`cluster serve` entry points; unused by in-process
+    /// servers). Zero is rejected at bind time with
+    /// [`crate::serve::net::ZeroDispatchers`].
+    pub dispatchers: usize,
 }
 
 impl Default for ServeConfig {
@@ -64,6 +70,7 @@ impl Default for ServeConfig {
             workers: 2,
             max_batch: 8,
             queue_cap: 256,
+            dispatchers: 4,
         }
     }
 }
@@ -602,6 +609,7 @@ mod tests {
                 workers: 2,
                 max_batch: 4,
                 queue_cap: 64,
+                ..ServeConfig::default()
             },
             Arc::clone(&program),
         )
@@ -655,6 +663,7 @@ mod tests {
                     workers: 2,
                     max_batch: 3,
                     queue_cap: 128,
+                    ..ServeConfig::default()
                 },
                 Arc::clone(&program),
             )
@@ -685,6 +694,7 @@ mod tests {
                 workers: 1,
                 max_batch: 2,
                 queue_cap: 16,
+                ..ServeConfig::default()
             },
             Arc::clone(&registry),
         )
@@ -737,6 +747,7 @@ mod tests {
             workers: 1,
             max_batch: 4,
             queue_cap: 8,
+            ..ServeConfig::default()
         })
         .unwrap();
         // wrong-size image rejected up front

@@ -1027,6 +1027,7 @@ pub fn scenario_suite(models: &[String], smoke: bool, seed: u64) -> Result<Suite
             workers: 2,
             max_batch: 4,
             queue_cap,
+            ..ServeConfig::default()
         },
         registry,
     )?;
@@ -1168,6 +1169,7 @@ mod tests {
                 workers: 2,
                 max_batch: 4,
                 queue_cap,
+                ..ServeConfig::default()
             },
             registry,
         )

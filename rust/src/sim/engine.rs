@@ -27,11 +27,13 @@
 //! engine** from the compiled program and *reset* between images —
 //! `run_image` allocates no tile state, which is what makes
 //! back-to-back and batched simulation cheap. The state owns no borrow
-//! of the program (PE weight blocks are mounted on the fly, a
-//! zero-alloc `Cow::Borrowed`, exactly like the FC path), so the same
-//! engine core can sit behind a borrow ([`Simulator`]) or share
-//! ownership of its program ([`PooledEngine`]) and live as long as the
-//! process does.
+//! of the program: conv tiles own a lane-blocked **packed copy** of
+//! their weight block ([`Pe::new`] packs it once, at engine
+//! construction), while FC tiles mount theirs on the fly (a zero-alloc
+//! `Cow::Borrowed` — one MVM per mount, where packing would cost as
+//! much as it saves). Either way the same engine core can sit behind a
+//! borrow ([`Simulator`]) or share ownership of its program
+//! ([`PooledEngine`]) and live as long as the process does.
 //!
 //! ## The zero-allocation hot path (§Perf)
 //!
@@ -56,6 +58,16 @@
 //!   input-slice/column-accumulator buffers are all cleared and reused.
 //!   Pooling units persist across images and recycle their window
 //!   buffers.
+//! * **Pixel micro-batching** — a conv tile's MVM is a pure function
+//!   of the input image, so each tile visit drains up to
+//!   [`MICRO_BATCH`] upcoming valid pixels' MVMs against the tile's
+//!   packed weight panel in one [`Pe::mvm_many_into`] pass and
+//!   consumes the stashed results in visit order. **Invariant:** only
+//!   the arithmetic is batched — RIFM/link/ROFM charges, probe
+//!   events, FIFO/arena occupancy samples and fault-injection sites
+//!   all stay per-slot, so `Counters`, recordings and injected faults
+//!   are 1:1 with per-pixel draining (asserted by the `engine_perf`
+//!   frozen baseline and the capture/flight/fault property suites).
 //! * **Capture modes** — [`CaptureMode::AllStages`] clones every stage
 //!   output tensor into [`RunOutput::stage_outputs`] (tests, tracing);
 //!   [`CaptureMode::Final`] keeps only the final scores (the serving
@@ -106,6 +118,7 @@ use crate::sim::fault::{FaultInjector, FaultPlan, FaultReport, Faults, NoFaults}
 use crate::sim::flight::{FlightRecorder, NullProbe, Probe, RecorderConfig, Recording, NO_TILE};
 use crate::sim::pipeline::{run_pipelined, PipelineRun};
 use crate::sim::stats::Counters;
+use crate::tile::pe::MICRO_BATCH;
 use crate::tile::rofm::{PoolUnit, Rofm};
 use crate::tile::{Pe, Rifm};
 
@@ -185,20 +198,30 @@ impl BatchOutput {
 }
 
 /// Per-tile runtime state, built once per engine and reset between
-/// images. Owns no borrow of the program: the PE weight block is
-/// mounted on the fly each MVM (a zero-alloc `Cow::Borrowed`, same as
-/// the FC path), which is what lets an engine be pooled behind an
-/// `Arc<Program>` and reused across images, batches and server
-/// workers. The ROFM owns its compiled schedule (cloned once, at
-/// construction — not per image as the pre-batching engine did).
+/// images. Owns no borrow of the program: the PE weight block is a
+/// lane-blocked **packed copy** made once here (so every MVM runs the
+/// blocked panel kernel), which is what lets an engine be pooled
+/// behind an `Arc<Program>` and reused across images, batches and
+/// server workers. The ROFM owns its compiled schedule (cloned once,
+/// at construction — not per image as the pre-batching engine did).
 struct TileRt {
     rifm: Rifm,
     rofm: Rofm,
     /// Register-path psum handles from the previous chain tile (lanes
     /// live in the owning chain's arena).
     incoming: VecDeque<PsumRef>,
-    /// Reused input-gather scratch (one alloc per tile, not per slot —
-    /// §Perf).
+    /// The tile's stationary weight block, packed into the
+    /// lane-blocked panel layout once at engine construction (§Perf).
+    pe: Pe<'static>,
+    /// Micro-batch MVM stash: `mb_out` holds `mb_pix.len()`
+    /// consecutive `cols`-wide results for the upcoming valid pixels
+    /// listed in `mb_pix`; `mb_pos` is the consumption cursor. Refilled
+    /// by [`Self::refill_mvm_batch`], consumed strictly in visit order.
+    mb_out: Vec<i32>,
+    mb_pix: Vec<usize>,
+    mb_pos: usize,
+    /// Reused input-gather scratch for the micro-batch refill (one
+    /// alloc per tile, not per slot — §Perf).
     xbuf: Vec<i8>,
 }
 
@@ -208,7 +231,11 @@ impl TileRt {
             rifm: Rifm::new_with_config(t.rifm),
             rofm: Rofm::new(t.schedule.clone()),
             incoming: VecDeque::new(),
-            xbuf: Vec::with_capacity(t.rows),
+            pe: Pe::new(t.weights.clone(), t.rows, t.cols),
+            mb_out: Vec::new(),
+            mb_pix: Vec::with_capacity(MICRO_BATCH),
+            mb_pos: 0,
+            xbuf: Vec::with_capacity(t.rows * MICRO_BATCH),
         }
     }
 
@@ -223,7 +250,79 @@ impl TileRt {
         debug_assert_eq!(self.incoming.capacity(), cap, "reset must retain capacity");
         self.rifm.reset();
         self.rofm.reset();
+        self.mb_out.clear();
+        self.mb_pix.clear();
+        self.mb_pos = 0;
         self.xbuf.clear();
+    }
+
+    /// Whether the micro-batch stash is exhausted (next consumption
+    /// must refill first).
+    fn mb_drained(&self) -> bool {
+        self.mb_pos == self.mb_pix.len()
+    }
+
+    /// Consume the stashed MVM result for pixel `p`, returning its
+    /// offset into `mb_out`. The event loop visits a tile's valid
+    /// pixels in strictly increasing order — exactly the refill order —
+    /// so consumption is a cursor walk (debug-asserted).
+    fn mb_take(&mut self, p: usize) -> usize {
+        debug_assert_eq!(
+            self.mb_pix[self.mb_pos], p,
+            "micro-batch consumed out of visit order"
+        );
+        let lo = self.mb_pos * self.pe.cols();
+        self.mb_pos += 1;
+        lo
+    }
+
+    /// Refill the micro-batch stash starting at pixel `from`: gather
+    /// up to [`MICRO_BATCH`] upcoming *valid* pixels' input vectors
+    /// (invalid raster positions contribute no MVM, exactly as the
+    /// per-pixel path skipped them before any compute) and drain their
+    /// MVMs against the packed panel in one [`Pe::mvm_many_into`]
+    /// call. This is pure computation plus the per-MVM PE charges —
+    /// every other charge, probe event and fault site stays per-slot
+    /// in the caller, so the observable event stream is identical to
+    /// per-pixel draining.
+    #[allow(clippy::too_many_arguments)]
+    fn refill_mvm_batch(
+        &mut self,
+        cfg: &ConvTile,
+        g: &ConvGeometry,
+        padding: usize,
+        c_lo: usize,
+        wp: usize,
+        total_pixels: usize,
+        input: &Tensor,
+        from: usize,
+        st: &mut Counters,
+    ) {
+        self.mb_pix.clear();
+        self.mb_pos = 0;
+        self.xbuf.clear();
+        let mut idx = from;
+        while self.mb_pix.len() < MICRO_BATCH && idx < total_pixels {
+            let (pr, u) = (idx / wp, idx % wp);
+            if g.out_row(pr, cfg.kr).is_some() && g.out_col(u, cfg.kc).is_some() {
+                let (py, px) = (
+                    pr as isize - padding as isize,
+                    u as isize - padding as isize,
+                );
+                self.xbuf
+                    .extend((0..cfg.rows).map(|dc| input.at_padded(c_lo + dc, py, px)));
+                self.mb_pix.push(idx);
+            }
+            idx += 1;
+        }
+        let nb = self.mb_pix.len();
+        self.mb_out.clear();
+        self.mb_out.resize(nb * cfg.cols, 0);
+        let mut xs: [&[i8]; MICRO_BATCH] = [&[]; MICRO_BATCH];
+        for (b, x) in self.xbuf.chunks_exact(cfg.rows).enumerate() {
+            xs[b] = x;
+        }
+        self.pe.mvm_many_into(&xs[..nb], &mut self.mb_out, st);
     }
 }
 
@@ -741,11 +840,6 @@ impl<P: Probe, F: Faults> EngineCore<P, F> {
                     st.sched_fetches += CYCLES_PER_SLOT as u64;
                     st.rofm_ctrl_steps += CYCLES_PER_SLOT as u64;
 
-                    // pixel coordinates for this tile's channel block
-                    let (py, px) = (
-                        pr as isize - c.padding as isize,
-                        u as isize - c.padding as isize,
-                    );
                     let c_lo = cfg.cb * program.arch.n_c;
 
                     // ---- validity: does this slot contribute?
@@ -760,29 +854,43 @@ impl<P: Probe, F: Faults> EngineCore<P, F> {
                     // starts from the RIFM buffer", Section II-A) — its
                     // energy is inside the inherited CIM j/MAC, so it is
                     // not double-charged to the router here.
-                    {
-                        let rt = &mut tiles[ci];
-                        rt.xbuf.clear();
-                        rt.xbuf.extend(
-                            (0..cfg.rows).map(|dc| input.at_padded(c_lo + dc, py, px)),
+                    //
+                    // ---- MVM micro-batch (§Perf): the stationary
+                    // weight panel is streamed once per MICRO_BATCH
+                    // valid pixels instead of once per pixel. Results
+                    // are stashed and consumed in visit order, so every
+                    // charge, probe event and fault site below still
+                    // fires per-slot, exactly as before.
+                    if tiles[ci].mb_drained() {
+                        tiles[ci].refill_mvm_batch(
+                            cfg,
+                            g,
+                            c.padding,
+                            c_lo,
+                            wp,
+                            total_pixels,
+                            input,
+                            p,
+                            st,
                         );
                     }
-                    // Stationary weight block mounted per MVM (zero-alloc
-                    // borrow, like the FC path) so the runtime state owns
-                    // no program borrow and the engine can be pooled.
-                    let pe = Pe::borrowed(&cfg.weights, cfg.rows, cfg.cols);
+                    let mac_lo = tiles[ci].mb_take(p);
 
                     // ---- psum accumulation (COM) over the slab arena.
                     // `None` = single-tile chain: the sum completes in
                     // this slot, accumulate in scratch, no slot needed.
                     let sum_ref: Option<PsumRef> = if cfg.is_chain_start {
                         if cfg.is_last {
-                            pe.mvm_into(&tiles[ci].xbuf, &mut scratch.mac, st);
+                            scratch
+                                .mac
+                                .copy_from_slice(&tiles[ci].mb_out[mac_lo..mac_lo + lanes]);
                             self.faults.tile_psum(si, cfg.coord, slot, &mut scratch.mac);
                             None
                         } else {
                             let r = arena.alloc(opos);
-                            pe.mvm_into(&tiles[ci].xbuf, arena.data_mut(r), st);
+                            arena
+                                .data_mut(r)
+                                .copy_from_slice(&tiles[ci].mb_out[mac_lo..mac_lo + lanes]);
                             self.faults.tile_psum(si, cfg.coord, slot, arena.data_mut(r));
                             Some(r)
                         }
@@ -809,7 +917,9 @@ impl<P: Probe, F: Faults> EngineCore<P, F> {
                             );
                         }
                         prev.opos = opos;
-                        pe.mvm_into(&tiles[ci].xbuf, &mut scratch.mac, st);
+                        scratch
+                            .mac
+                            .copy_from_slice(&tiles[ci].mb_out[mac_lo..mac_lo + lanes]);
                         // a faulty tile corrupts *its own* MVM
                         // contribution; the accumulated psum from
                         // upstream still passes through it intact
@@ -980,6 +1090,9 @@ impl<P: Probe, F: Faults> EngineCore<P, F> {
                 let ibits = (t.rows * 8) as u64;
                 st.onchip_link_bits += ibits;
                 self.probe.link(si, coli, rb, rb, LinkKind::OnChip, ibits);
+                // FC mounts run exactly one MVM per weight block, so a
+                // packed copy would cost as much as it saves: the
+                // zero-alloc borrow takes the blocked row-major kernel.
                 let pe = Pe::borrowed(&t.weights, t.rows, t.cols);
                 if rb == 0 {
                     // column head: the accumulator starts from this MVM

@@ -23,6 +23,15 @@
 //!   host-side only: scores and counters are bit-identical across
 //!   modes. `cargo bench --bench engine_perf` gates the speedup of
 //!   this design against a frozen copy of the pre-arena hot path.
+//!
+//!   The MVMs themselves run as blocked kernels: each conv tile owns
+//!   a panel-packed [`Pe`](crate::tile::Pe) and drains a small pixel
+//!   micro-batch per tile visit
+//!   ([`mvm_many_into`](crate::tile::Pe::mvm_many_into)), with every
+//!   counter charge, probe event and fault-injection site still
+//!   applied per slot — the observable event stream is 1:1 with
+//!   per-pixel draining, and `cargo bench --bench bench_kernels`
+//!   gates the kernel-level speedup against frozen scalar copies.
 //! * [`flight`] — the observability plane. The engine is generic over a
 //!   [`Probe`]: every tile action, psum push/pop, link transfer
 //!   (with [`LinkKind`](crate::noc::link::LinkKind)), stage boundary,

@@ -6,6 +6,17 @@
 //! IFM traffic (streamed activations) and OFM/partial-sum traffic move on
 //! disjoint router networks, so input streaming and computing-on-the-move
 //! accumulation never contend.
+//!
+//! The arithmetic inside both components is written as blocked,
+//! autovectorization-friendly kernels: [`pe::Pe`] packs its weights
+//! into cache-tiled column panels at construction and drains several
+//! pixels' MVMs per panel pass ([`pe::Pe::mvm_many_into`]), and the
+//! [`rofm::Rofm`] scratch datapaths (psum adds, activation,
+//! requantization, pooling) walk fixed-width `chunks_exact` blocks
+//! with scalar remainder lanes. All of it is bit-exact with the
+//! scalar reference by construction — i32 accumulation of i8
+//! products is order-independent — and `cargo bench --bench
+//! bench_kernels` gates the speedup against frozen scalar copies.
 
 pub mod pe;
 pub mod rifm;

@@ -12,8 +12,41 @@
 //! i.e. `w[c * cols + m]` — the transpose of the `[M][C]` layout used by
 //! `model::refcompute`, reflecting how a crossbar is physically loaded
 //! (inputs enter rows, outputs leave columns).
+//!
+//! ## Blocked kernels (§Perf)
+//!
+//! Owned constructions ([`Pe::new`], [`Pe::zeros`]) additionally pack
+//! the block into a **lane-blocked panel layout** once, at
+//! construction: the columns are split into [`LANE`]-wide panels and
+//! each panel stores its rows contiguously, so the register-blocked
+//! inner kernel streams 64-byte lines of weights into a fixed
+//! `[i32; LANE]` accumulator that lives in registers instead of
+//! re-loading the output slice per row. [`Pe::borrowed`] stays a
+//! zero-alloc mount (no packing — the FC path runs one MVM per mount,
+//! where packing would cost as much as it saves) and takes a
+//! `chunks_exact`-blocked row-major path instead. Both paths, and the
+//! multi-input [`Pe::mvm_many_into`], are **bit-exact by construction**
+//! with the retained scalar reference [`Pe::mvm_scalar_into`]: i32
+//! accumulation of i8×i8 products is order-independent (|x·w| ≤ 2¹⁴
+//! and ≤ 256 terms, so no i32 overflow is reachable), which makes the
+//! reordering safe and assertable — `rust/tests/kernel_properties.rs`
+//! sweeps every remainder-lane case, and `rust/benches/bench_kernels.rs`
+//! gates the speedup against a frozen copy of the scalar kernels.
 
 use crate::sim::stats::Counters;
+
+/// Accumulator lanes per blocked panel: 16 i32 lanes are one 64-byte
+/// line of accumulators, and `LANE` i8 weights per row × [`QUAD`] rows
+/// is one 64-byte line of packed weights.
+pub const LANE: usize = 16;
+
+/// Input rows walked per blocked step of the panel kernel.
+const QUAD: usize = 4;
+
+/// Upper bound on the pixel micro-batch [`Pe::mvm_many_into`] accepts
+/// (the engine's conv chains drain up to this many pixels' MVMs per
+/// tile visit against one mounted weight panel).
+pub const MICRO_BATCH: usize = 4;
 
 /// A weight-loaded CIM crossbar block (≤ 256 x 256). Weights are held
 /// by copy-on-write so the simulator can mount a compiled tile's block
@@ -23,20 +56,39 @@ pub struct Pe<'w> {
     weights: std::borrow::Cow<'w, [i8]>,
     rows: usize,
     cols: usize,
+    /// Lane-blocked panels, precomputed once at owned construction
+    /// (`⌈cols/LANE⌉` panels of `rows * LANE` weights each; remainder
+    /// panels are zero-padded, which is bit-exact — the padding lanes
+    /// accumulate `x·0` and are never copied out). Empty for
+    /// [`Pe::borrowed`] mounts.
+    panels: Vec<i8>,
 }
 
 impl<'w> Pe<'w> {
     /// `weights[c * cols + m]`, `rows` input channels, `cols` output
-    /// channels.
+    /// channels. Packs the lane-blocked panel layout once, here.
     pub fn new(weights: Vec<i8>, rows: usize, cols: usize) -> Pe<'static> {
         Pe::check(&weights, rows, cols);
-        Pe { weights: std::borrow::Cow::Owned(weights), rows, cols }
+        let panels = pack_panels(&weights, rows, cols);
+        Pe {
+            weights: std::borrow::Cow::Owned(weights),
+            rows,
+            cols,
+            panels,
+        }
     }
 
-    /// Mount a stationary weight block without copying.
+    /// Mount a stationary weight block without copying (and without
+    /// packing — one-shot mounts like the FC path run a single MVM,
+    /// for which the blocked row-major kernel is the right trade).
     pub fn borrowed(weights: &'w [i8], rows: usize, cols: usize) -> Pe<'w> {
         Pe::check(weights, rows, cols);
-        Pe { weights: std::borrow::Cow::Borrowed(weights), rows, cols }
+        Pe {
+            weights: std::borrow::Cow::Borrowed(weights),
+            rows,
+            cols,
+            panels: Vec::new(),
+        }
     }
 
     fn check(weights: &[i8], rows: usize, cols: usize) {
@@ -60,12 +112,19 @@ impl<'w> Pe<'w> {
         self.cols
     }
 
+    /// Whether this block carries the precomputed lane-blocked panels
+    /// (owned constructions do; [`Pe::borrowed`] mounts do not).
+    pub fn is_packed(&self) -> bool {
+        !self.panels.is_empty() || self.cols == 0
+    }
+
     /// In-memory matrix-vector multiply: `out[m] = Σ_c x[c] * w[c][m]`.
     ///
     /// `x` may be shorter than `rows` (the tail rows see zero input —
     /// e.g. the last channel block of a layer whose C is not a multiple
-    /// of 256). Allocates the result; the steady-state engine path uses
-    /// [`Self::mvm_into`] with caller scratch instead.
+    /// of 256). Allocates the result; **hot-path callers should use
+    /// [`Self::mvm_into`]** (or [`Self::mvm_many_into`]) with caller
+    /// scratch instead — this wrapper exists for tests and tools.
     pub fn mvm(&self, x: &[i8], stats: &mut Counters) -> Vec<i32> {
         let mut out = vec![0i32; self.cols];
         self.mvm_into(x, &mut out, stats);
@@ -75,14 +134,75 @@ impl<'w> Pe<'w> {
     /// [`Self::mvm`] writing into caller-owned scratch (`out.len()`
     /// must equal `cols`); the hot path of the cycle engine, which
     /// points `out` at a psum-arena slot or a reused scratch buffer so
-    /// no MVM allocates (§Perf).
+    /// no MVM allocates (§Perf). Dispatches to the panel kernel when
+    /// the block was packed at construction, else to the blocked
+    /// row-major kernel; both are bit-exact with
+    /// [`Self::mvm_scalar_into`].
     pub fn mvm_into(&self, x: &[i8], out: &mut [i32], stats: &mut Counters) {
         assert!(x.len() <= self.rows, "input vector exceeds crossbar rows");
         assert_eq!(out.len(), self.cols, "MVM output width");
         // MACs are charged uniformly per row activation — analog CIM
-        // drives the wordline regardless of value — so the zero-skip
-        // below is a pure simulator-speed optimization (§Perf), not an
+        // drives the wordline regardless of value — so the zero-skips
+        // below are pure simulator-speed optimizations (§Perf), not an
         // energy model change.
+        stats.pe_mvms += 1;
+        stats.pe_macs += (x.len() * self.cols) as u64;
+        if self.panels.is_empty() {
+            out.fill(0);
+            self.mvm_rowmajor(x, out);
+        } else {
+            self.mvm_panels(x, out);
+        }
+    }
+
+    /// Drain several inputs' MVMs against this one mounted weight
+    /// block: `out` receives `xs.len()` consecutive `cols`-wide result
+    /// slices (`out.len() == xs.len() * cols`). Each packed panel is
+    /// streamed through the cache once per micro-batch instead of once
+    /// per input, which is where the conv chains' weight-bandwidth win
+    /// comes from. Charges exactly `xs.len()` single-MVM charges and
+    /// is bit-exact with `xs.len()` separate [`Self::mvm_into`] calls.
+    pub fn mvm_many_into(&self, xs: &[&[i8]], out: &mut [i32], stats: &mut Counters) {
+        assert!(xs.len() <= MICRO_BATCH, "micro-batch exceeds MICRO_BATCH");
+        assert_eq!(
+            out.len(),
+            xs.len() * self.cols,
+            "micro-batch output width"
+        );
+        stats.pe_mvms += xs.len() as u64;
+        for x in xs {
+            assert!(x.len() <= self.rows, "input vector exceeds crossbar rows");
+            stats.pe_macs += (x.len() * self.cols) as u64;
+        }
+        if self.panels.is_empty() {
+            for (b, x) in xs.iter().enumerate() {
+                let o = &mut out[b * self.cols..(b + 1) * self.cols];
+                o.fill(0);
+                self.mvm_rowmajor(x, o);
+            }
+            return;
+        }
+        let np = self.cols.div_ceil(LANE);
+        for p in 0..np {
+            let c_lo = p * LANE;
+            let width = LANE.min(self.cols - c_lo);
+            let panel = &self.panels[p * self.rows * LANE..(p + 1) * self.rows * LANE];
+            for (b, x) in xs.iter().enumerate() {
+                let mut acc = [0i32; LANE];
+                panel_dot(panel, x, &mut acc);
+                out[b * self.cols + c_lo..b * self.cols + c_lo + width]
+                    .copy_from_slice(&acc[..width]);
+            }
+        }
+    }
+
+    /// The retained scalar reference kernel (the pre-blocking PR-9
+    /// `mvm_into` body): the bit-exactness oracle the kernel property
+    /// sweep compares the blocked paths against. Charges identically
+    /// to [`Self::mvm_into`]. Not a hot-path API.
+    pub fn mvm_scalar_into(&self, x: &[i8], out: &mut [i32], stats: &mut Counters) {
+        assert!(x.len() <= self.rows, "input vector exceeds crossbar rows");
+        assert_eq!(out.len(), self.cols, "MVM output width");
         stats.pe_mvms += 1;
         stats.pe_macs += (x.len() * self.cols) as u64;
         out.fill(0);
@@ -92,8 +212,46 @@ impl<'w> Pe<'w> {
             }
             let xv = xv as i32;
             let row = &self.weights[c * self.cols..(c + 1) * self.cols];
-            // zip keeps the loop free of bounds checks => SIMD
             for (o, &wv) in out.iter_mut().zip(row) {
+                *o += xv * wv as i32;
+            }
+        }
+    }
+
+    /// Panel path: every output lane is computed in the fixed-size
+    /// accumulator and copied out once, so `out` needs no pre-zeroing.
+    fn mvm_panels(&self, x: &[i8], out: &mut [i32]) {
+        let np = self.cols.div_ceil(LANE);
+        for p in 0..np {
+            let c_lo = p * LANE;
+            let width = LANE.min(self.cols - c_lo);
+            let panel = &self.panels[p * self.rows * LANE..(p + 1) * self.rows * LANE];
+            let mut acc = [0i32; LANE];
+            panel_dot(panel, x, &mut acc);
+            out[c_lo..c_lo + width].copy_from_slice(&acc[..width]);
+        }
+    }
+
+    /// Blocked row-major path for unpacked (borrowed) mounts: per-row
+    /// zero skip as before, with the inner accumulation walked in
+    /// `LANE`-wide `chunks_exact` blocks plus a scalar remainder lane.
+    fn mvm_rowmajor(&self, x: &[i8], out: &mut [i32]) {
+        for (c, &xv) in x.iter().enumerate() {
+            if xv == 0 {
+                continue;
+            }
+            let xv = xv as i32;
+            let row = &self.weights[c * self.cols..(c + 1) * self.cols];
+            let mut oi = out.chunks_exact_mut(LANE);
+            let mut wi = row.chunks_exact(LANE);
+            for (o, w) in oi.by_ref().zip(wi.by_ref()) {
+                let o: &mut [i32; LANE] = o.try_into().unwrap();
+                let w: &[i8; LANE] = w.try_into().unwrap();
+                for l in 0..LANE {
+                    o[l] += xv * w[l] as i32;
+                }
+            }
+            for (o, &wv) in oi.into_remainder().iter_mut().zip(wi.remainder()) {
                 *o += xv * wv as i32;
             }
         }
@@ -102,6 +260,60 @@ impl<'w> Pe<'w> {
     /// Weight of cell (row c, col m) — used by tests and the trace tool.
     pub fn weight(&self, c: usize, m: usize) -> i8 {
         self.weights[c * self.cols + m]
+    }
+}
+
+/// Pack `weights` (row-major `[rows][cols]`) into the lane-blocked
+/// panel layout: panel `p` holds cols `p*LANE..` and stores row `r`'s
+/// `LANE` weights at `p*rows*LANE + r*LANE` (remainder panel
+/// zero-padded to `LANE`).
+fn pack_panels(weights: &[i8], rows: usize, cols: usize) -> Vec<i8> {
+    let np = cols.div_ceil(LANE);
+    let mut panels = vec![0i8; np * rows * LANE];
+    for p in 0..np {
+        let c_lo = p * LANE;
+        let width = LANE.min(cols - c_lo);
+        let base = p * rows * LANE;
+        for r in 0..rows {
+            panels[base + r * LANE..base + r * LANE + width]
+                .copy_from_slice(&weights[r * cols + c_lo..r * cols + c_lo + width]);
+        }
+    }
+    panels
+}
+
+/// `acc[l] += Σ_r x[r] * panel[r][l]` — the register-blocked inner
+/// kernel: quads of rows stream 64-byte lines of packed weights with a
+/// quad-granular zero skip; remainder rows take the scalar lane.
+/// Bit-exact with the scalar reference in any grouping (i32 adds are
+/// order-independent and cannot overflow at crossbar scale).
+#[inline]
+fn panel_dot(panel: &[i8], x: &[i8], acc: &mut [i32; LANE]) {
+    let mut quads = x.chunks_exact(QUAD);
+    let mut r = 0;
+    for q in quads.by_ref() {
+        let [x0, x1, x2, x3]: [i8; QUAD] = q.try_into().unwrap();
+        // bit-OR of the quad is zero iff every input is zero
+        if (x0 | x1 | x2 | x3) != 0 {
+            let w: &[i8; QUAD * LANE] = panel[r * LANE..(r + QUAD) * LANE].try_into().unwrap();
+            let (x0, x1, x2, x3) = (x0 as i32, x1 as i32, x2 as i32, x3 as i32);
+            for l in 0..LANE {
+                acc[l] += x0 * w[l] as i32
+                    + x1 * w[LANE + l] as i32
+                    + x2 * w[2 * LANE + l] as i32
+                    + x3 * w[3 * LANE + l] as i32;
+            }
+        }
+        r += QUAD;
+    }
+    for (i, &xv) in quads.remainder().iter().enumerate() {
+        if xv != 0 {
+            let xv = xv as i32;
+            let w: &[i8; LANE] = panel[(r + i) * LANE..(r + i + 1) * LANE].try_into().unwrap();
+            for l in 0..LANE {
+                acc[l] += xv * w[l] as i32;
+            }
+        }
     }
 }
 
@@ -161,6 +373,58 @@ mod tests {
     fn mvm_into_rejects_wrong_width_scratch() {
         let pe = Pe::new(vec![0; 4], 2, 2);
         pe.mvm_into(&[1], &mut [0i32; 3], &mut Counters::new());
+    }
+
+    #[test]
+    fn packed_and_borrowed_paths_agree_with_scalar_reference() {
+        for_all("pe_blocked_vs_scalar", 40, |rng: &mut Rng| {
+            // widths crossing every remainder-lane and quad case
+            let dims = [1, 3, QUAD, LANE - 1, LANE, LANE + 1, 2 * LANE + 5, 100];
+            let rows = dims[rng.below(dims.len())];
+            let cols = dims[rng.below(dims.len())];
+            let w = rng.i8_vec(rows * cols, 127);
+            let x: Vec<i8> = (0..rows)
+                .map(|_| if rng.chance(0.4) { 0 } else { rng.i8() })
+                .collect();
+            let packed = Pe::new(w.clone(), rows, cols);
+            let borrowed = Pe::borrowed(&w, rows, cols);
+            assert!(packed.is_packed());
+            assert!(!borrowed.is_packed() || cols == 0);
+            let (mut s0, mut s1, mut s2) =
+                (Counters::new(), Counters::new(), Counters::new());
+            let mut want = vec![0i32; cols];
+            packed.mvm_scalar_into(&x, &mut want, &mut s0);
+            let mut got_p = vec![i32::MIN; cols];
+            packed.mvm_into(&x, &mut got_p, &mut s1);
+            let mut got_b = vec![i32::MIN; cols];
+            borrowed.mvm_into(&x, &mut got_b, &mut s2);
+            assert_eq!(got_p, want, "panel kernel diverged ({rows}x{cols})");
+            assert_eq!(got_b, want, "row-major kernel diverged ({rows}x{cols})");
+            assert_eq!(s0, s1);
+            assert_eq!(s0, s2);
+        });
+    }
+
+    #[test]
+    fn mvm_many_matches_single_calls_and_charges() {
+        for_all("pe_mvm_many", 30, |rng: &mut Rng| {
+            let rows = rng.range(1, 70);
+            let cols = rng.range(1, 70);
+            let pe = Pe::new(rng.i8_vec(rows * cols, 127), rows, cols);
+            let n = rng.range(1, MICRO_BATCH);
+            let xs_own: Vec<Vec<i8>> = (0..n).map(|_| rng.i8_vec(rows, 127)).collect();
+            let xs: Vec<&[i8]> = xs_own.iter().map(|v| v.as_slice()).collect();
+            let mut s1 = Counters::new();
+            let mut many = vec![i32::MIN; n * cols];
+            pe.mvm_many_into(&xs, &mut many, &mut s1);
+            let mut s2 = Counters::new();
+            for (b, x) in xs.iter().enumerate() {
+                let mut one = vec![0i32; cols];
+                pe.mvm_scalar_into(x, &mut one, &mut s2);
+                assert_eq!(&many[b * cols..(b + 1) * cols], &one[..]);
+            }
+            assert_eq!(s1, s2, "micro-batch must charge as n single MVMs");
+        });
     }
 
     #[test]

@@ -100,10 +100,21 @@ impl Rofm {
 
     /// The adder datapath of [`Self::add_psum`] over raw lane slices —
     /// the engine's arena path (tags are checked by the engine before
-    /// the lanes meet; this charges the adds).
+    /// the lanes meet; this charges the adds). Blocked in fixed-width
+    /// `chunks_exact` steps with a scalar remainder lane (§Perf);
+    /// bit-exact — i32 adds are order-independent.
     pub fn add_psum_slices(acc: &mut [i32], incoming: &[i32], stats: &mut Counters) {
         assert_eq!(acc.len(), incoming.len(), "psum width mismatch");
-        for (a, b) in acc.iter_mut().zip(incoming.iter()) {
+        let mut ai = acc.chunks_exact_mut(VEC_CHUNK);
+        let mut bi = incoming.chunks_exact(VEC_CHUNK);
+        for (a, b) in ai.by_ref().zip(bi.by_ref()) {
+            let a: &mut [i32; VEC_CHUNK] = a.try_into().unwrap();
+            let b: &[i32; VEC_CHUNK] = b.try_into().unwrap();
+            for l in 0..VEC_CHUNK {
+                a[l] += b[l];
+            }
+        }
+        for (a, b) in ai.into_remainder().iter_mut().zip(bi.remainder()) {
             *a += b;
         }
         // i32 adds = 4 x 8-bit adder-equivalents each (Table III prices
@@ -154,7 +165,9 @@ impl Rofm {
     // ---- computation unit (Table II) ----
 
     /// `Act.`: requantize + ReLU a finished sum to i8 (non-linear
-    /// function applied "in the last tile", Section III-B).
+    /// function applied "in the last tile", Section III-B). Allocates;
+    /// **hot-path callers should use [`Self::act_into`]** with reused
+    /// scratch — this wrapper exists for tests and tools.
     pub fn act(sum: &[i32], shift: u32, stats: &mut Counters) -> Vec<i8> {
         let mut out = Vec::with_capacity(sum.len());
         Self::act_into(sum, shift, &mut out, stats);
@@ -162,39 +175,54 @@ impl Rofm {
     }
 
     /// [`Self::act`] into reused caller scratch (cleared first) — the
-    /// engine's zero-alloc emit path.
+    /// engine's zero-alloc emit path, blocked in `chunks_exact` steps.
     pub fn act_into(sum: &[i32], shift: u32, out: &mut Vec<i8>, stats: &mut Counters) {
         stats.act_ops_8b += sum.len() as u64;
         out.clear();
-        out.extend(sum.iter().map(|&v| requant(v, shift, true)));
+        out.resize(sum.len(), 0);
+        requant_slice(sum, shift, true, out);
     }
 
     /// Requantize without activation (linear conv output, e.g. before a
-    /// residual add).
+    /// residual add). Allocates; hot-path callers should use
+    /// [`Self::quantize_into`].
     pub fn quantize(sum: &[i32], shift: u32, stats: &mut Counters) -> Vec<i8> {
         let mut out = Vec::with_capacity(sum.len());
         Self::quantize_into(sum, shift, &mut out, stats);
         out
     }
 
-    /// [`Self::quantize`] into reused caller scratch (cleared first).
+    /// [`Self::quantize`] into reused caller scratch (cleared first),
+    /// blocked in `chunks_exact` steps.
     pub fn quantize_into(sum: &[i32], shift: u32, out: &mut Vec<i8>, stats: &mut Counters) {
         stats.act_ops_8b += sum.len() as u64;
         out.clear();
-        out.extend(sum.iter().map(|&v| requant(v, shift, false)));
+        out.resize(sum.len(), 0);
+        requant_slice(sum, shift, false, out);
     }
 
-    /// `Cmp.`: element-wise max (max pooling step).
+    /// `Cmp.`: element-wise max (max pooling step), blocked in
+    /// `chunks_exact` steps with a scalar remainder lane.
     pub fn cmp_max(acc: &mut [i8], incoming: &[i8], stats: &mut Counters) {
         assert_eq!(acc.len(), incoming.len());
         stats.pool_ops_8b += acc.len() as u64;
-        for (a, b) in acc.iter_mut().zip(incoming.iter()) {
+        let mut ai = acc.chunks_exact_mut(VEC_CHUNK);
+        let mut bi = incoming.chunks_exact(VEC_CHUNK);
+        for (a, b) in ai.by_ref().zip(bi.by_ref()) {
+            let a: &mut [i8; VEC_CHUNK] = a.try_into().unwrap();
+            let b: &[i8; VEC_CHUNK] = b.try_into().unwrap();
+            for l in 0..VEC_CHUNK {
+                a[l] = a[l].max(b[l]);
+            }
+        }
+        for (a, b) in ai.into_remainder().iter_mut().zip(bi.remainder()) {
             *a = (*a).max(*b);
         }
     }
 
     /// `Mul.`: scale by `1/divisor` with floor division (average
-    /// pooling's "multiplication with a scaling factor").
+    /// pooling's "multiplication with a scaling factor"). Allocates;
+    /// hot-path callers should use [`Self::mul_scale_into`].
     pub fn mul_scale(sum: &[i32], divisor: i32, stats: &mut Counters) -> Vec<i8> {
         let mut out = Vec::with_capacity(sum.len());
         Self::mul_scale_into(sum, divisor, &mut out, stats);
@@ -224,7 +252,8 @@ impl Rofm {
     }
 
     /// Residual add of two i8 streams (skip + main), ReLU fused —
-    /// executed with the reusable adders + Act unit.
+    /// executed with the reusable adders + Act unit. Allocates;
+    /// hot-path callers should use [`Self::res_add_into`].
     pub fn res_add(main: &[i8], skip: &[i8], stats: &mut Counters) -> Vec<i8> {
         let mut out = Vec::with_capacity(main.len());
         Self::res_add_into(main, skip, &mut out, stats);
@@ -232,17 +261,57 @@ impl Rofm {
     }
 
     /// [`Self::res_add`] into reused caller scratch (cleared first;
-    /// must not alias either input).
+    /// must not alias either input), blocked in `chunks_exact` steps
+    /// with a scalar remainder lane.
     pub fn res_add_into(main: &[i8], skip: &[i8], out: &mut Vec<i8>, stats: &mut Counters) {
         assert_eq!(main.len(), skip.len());
         stats.adds_8b += main.len() as u64;
         stats.act_ops_8b += main.len() as u64;
         out.clear();
-        out.extend(
-            main.iter()
-                .zip(skip.iter())
-                .map(|(&a, &b)| crate::model::refcompute::res_add(a, b)),
-        );
+        out.resize(main.len(), 0);
+        let mut ai = main.chunks_exact(VEC_CHUNK);
+        let mut bi = skip.chunks_exact(VEC_CHUNK);
+        let mut oi = out.chunks_exact_mut(VEC_CHUNK);
+        for ((a, b), o) in ai.by_ref().zip(bi.by_ref()).zip(oi.by_ref()) {
+            let a: &[i8; VEC_CHUNK] = a.try_into().unwrap();
+            let b: &[i8; VEC_CHUNK] = b.try_into().unwrap();
+            let o: &mut [i8; VEC_CHUNK] = o.try_into().unwrap();
+            for l in 0..VEC_CHUNK {
+                o[l] = crate::model::refcompute::res_add(a[l], b[l]);
+            }
+        }
+        for ((a, b), o) in ai
+            .remainder()
+            .iter()
+            .zip(bi.remainder())
+            .zip(oi.into_remainder())
+        {
+            *o = crate::model::refcompute::res_add(*a, *b);
+        }
+    }
+}
+
+/// Fixed block width of the vectorized ROFM datapaths: wide enough to
+/// fill a SIMD register file, small enough that the scalar remainder
+/// lane stays cheap at the engine's narrow lane counts.
+const VEC_CHUNK: usize = 16;
+
+/// `out[i] = requant(sum[i], shift, relu)` blocked in [`VEC_CHUNK`]
+/// steps with a scalar remainder lane. `relu` is a call-site constant
+/// at both callers, so the branch is hoisted when inlined.
+#[inline]
+fn requant_slice(sum: &[i32], shift: u32, relu: bool, out: &mut [i8]) {
+    let mut si = sum.chunks_exact(VEC_CHUNK);
+    let mut oi = out.chunks_exact_mut(VEC_CHUNK);
+    for (s, o) in si.by_ref().zip(oi.by_ref()) {
+        let s: &[i32; VEC_CHUNK] = s.try_into().unwrap();
+        let o: &mut [i8; VEC_CHUNK] = o.try_into().unwrap();
+        for l in 0..VEC_CHUNK {
+            o[l] = requant(s[l], shift, relu);
+        }
+    }
+    for (s, o) in si.remainder().iter().zip(oi.into_remainder()) {
+        *o = requant(*s, shift, relu);
     }
 }
 
@@ -365,7 +434,18 @@ impl PoolUnit {
                         b.resize(values.len(), 0);
                         (b, 0)
                     });
-                    for (a, &b) in entry.0.iter_mut().zip(values.iter()) {
+                    // widening accumulate, blocked like the other
+                    // datapaths (§Perf; bit-exact in any order)
+                    let mut ai = entry.0.chunks_exact_mut(VEC_CHUNK);
+                    let mut bi = values.chunks_exact(VEC_CHUNK);
+                    for (a, b) in ai.by_ref().zip(bi.by_ref()) {
+                        let a: &mut [i32; VEC_CHUNK] = a.try_into().unwrap();
+                        let b: &[i8; VEC_CHUNK] = b.try_into().unwrap();
+                        for l in 0..VEC_CHUNK {
+                            a[l] += b[l] as i32;
+                        }
+                    }
+                    for (a, &b) in ai.into_remainder().iter_mut().zip(bi.remainder()) {
                         *a += b as i32;
                     }
                     stats.adds_8b += values.len() as u64;

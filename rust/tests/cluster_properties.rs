@@ -44,6 +44,7 @@ fn start_backend() -> TestBackend {
             workers: 1,
             max_batch: 2,
             queue_cap: 64,
+            ..ServeConfig::default()
         },
         registry,
     )
@@ -306,6 +307,124 @@ fn drained_backend_finishes_and_leaves_the_owner_set() {
     assert!(
         router.drain("127.0.0.1:1", Duration::from_secs(1)).is_err(),
         "draining an unknown address must error"
+    );
+
+    drop(router);
+    for mut b in backends.drain(..) {
+        if let Some(net) = b.net.take() {
+            net.shutdown().unwrap();
+        }
+        if let Ok(service) = Arc::try_unwrap(b.service) {
+            service.shutdown().unwrap();
+        }
+    }
+}
+
+#[test]
+fn infer_dispatch_multiplexes_over_a_bounded_connection_pool() {
+    let mut backends: Vec<TestBackend> = (0..2).map(|_| start_backend()).collect();
+    let addrs: Vec<String> = backends.iter().map(|b| b.addr.clone()).collect();
+    let router = test_router(addrs.clone(), 2);
+    match router.dispatch(Request::LoadSeeded {
+        model: MODEL.to_string(),
+        seed: SEED,
+        mapping: None,
+    }) {
+        Response::Loaded(_) => {}
+        other => panic!("load failed: {other:?}"),
+    }
+
+    // Concurrent routed infers, all bit-exact as ever.
+    let ilen = input_len();
+    let mut rng = Rng::new(0xBEEFu64);
+    let images: Vec<Vec<i8>> = (0..24).map(|_| rng.i8_vec(ilen, 31)).collect();
+    let expected = reference(&images);
+    let router = Arc::new(router);
+    let mut handles = Vec::new();
+    for t in 0..6 {
+        let router = Arc::clone(&router);
+        let images = images.clone();
+        let expected = expected.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in (t..images.len()).step_by(6) {
+                match router.dispatch(Request::Infer {
+                    model: Some(MODEL.to_string()),
+                    image: images[i].clone(),
+                }) {
+                    Response::Infer(r) => {
+                        assert_eq!(r.logits, expected[i], "logits diverge on image {i}")
+                    }
+                    other => panic!("infer {i} failed: {other:?}"),
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // The pooling property: every request was served, yet each
+    // backend saw at most `pipe_conns` pipelined dials plus one
+    // pooled admin dial — never one socket per in-flight request.
+    let cap = (ClusterConfig::default().pipe_conns + 1) as u64;
+    let st = router.status();
+    let served: u64 = st.backends.iter().map(|b| b.served).sum();
+    assert!(
+        served >= images.len() as u64,
+        "served {served} < {} routed infers",
+        images.len()
+    );
+    for b in &st.backends {
+        assert!(
+            b.dials <= cap,
+            "{}: {} dials for {} served calls (pool cap {cap})",
+            b.addr,
+            b.dials,
+            b.served
+        );
+        assert!(b.dials >= 1, "{}: pooling must still dial at least once", b.addr);
+    }
+    assert!(st.render().contains("dials"), "{}", st.render());
+
+    // Failover is untouched by pooling: kill one backend, traffic
+    // stays bit-exact, and the survivor's pool absorbs the extra
+    // load without needing fresh connections.
+    let dead_addr = st.backends[0].addr.clone();
+    let survivor = st.backends[1].addr.clone();
+    let dials_before = st
+        .backends
+        .iter()
+        .find(|b| b.addr == survivor)
+        .unwrap()
+        .dials;
+    let idx = backends.iter().position(|b| b.addr == dead_addr).unwrap();
+    backends[idx].net.take().unwrap().shutdown().unwrap();
+    for (i, img) in images.iter().take(4).enumerate() {
+        match router.dispatch(Request::Infer {
+            model: Some(MODEL.to_string()),
+            image: img.clone(),
+        }) {
+            Response::Infer(r) => {
+                assert_eq!(r.logits, expected[i], "failover answer diverges on image {i}")
+            }
+            other => panic!("infer after backend death failed: {other:?}"),
+        }
+    }
+    let st = router.status();
+    assert!(
+        st.backends.iter().any(|b| !b.alive),
+        "killed backend must be marked dead by the transport error"
+    );
+    let dials_after = st
+        .backends
+        .iter()
+        .find(|b| b.addr == survivor)
+        .unwrap()
+        .dials;
+    assert!(
+        dials_after <= dials_before + 1,
+        "failover must reuse the survivor's pooled sockets: \
+         {dials_before} dials -> {dials_after}"
     );
 
     drop(router);

@@ -179,6 +179,7 @@ fn fault_inject_and_canary_heal_end_to_end_over_tcp() {
             workers: 1,
             max_batch: 2,
             queue_cap: 64,
+            ..ServeConfig::default()
         },
         registry,
     )

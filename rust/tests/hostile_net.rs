@@ -40,6 +40,7 @@ fn start_endpoint(cfg: NetConfig) -> (Arc<Service>, NetServer, String) {
             workers: 2,
             max_batch: 4,
             queue_cap: 64,
+            ..ServeConfig::default()
         },
         registry,
     )
@@ -289,6 +290,7 @@ fn mid_call_timeout_poisons_the_client_until_reconnect() {
             workers: 1,
             max_batch: 2,
             queue_cap: 16,
+            ..ServeConfig::default()
         },
         registry,
     )

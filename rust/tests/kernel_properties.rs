@@ -1,0 +1,285 @@
+//! Bit-exactness properties of the blocked compute kernels (§Perf):
+//! the lane-blocked MVM paths (`Pe::mvm_into` packed and borrowed,
+//! `Pe::mvm_many_into`) and the vectorized rofm datapaths must be
+//! byte-identical — outputs *and* charged [`Counters`] — to the scalar
+//! reference kernels, across widths exercising every remainder-lane
+//! case (1, LANE−1, LANE, LANE+1, large) and the i8 extremes
+//! (including −128, whose products hit the largest magnitudes the
+//! datapath can see). A full-engine leg re-runs the small-geometry
+//! sweep so the conv micro-batch path is pinned through every
+//! geometry: stride, padding, 1x1 kernels, channel blocks, fused
+//! pooling, residuals.
+//!
+//! The direct frozen-scalar comparison (and the ≥1.5x speedup gate)
+//! runs on every `cargo bench --bench bench_kernels`.
+
+use domino::model::refcompute::{forward_all, requant, res_add, Tensor, Weights};
+use domino::model::{Network, NetworkBuilder, Projection, TensorShape};
+use domino::sim::{CaptureMode, Counters, Simulator};
+use domino::testutil::{for_all, Rng};
+use domino::tile::pe::{LANE, MICRO_BATCH};
+use domino::tile::rofm::Rofm;
+use domino::tile::Pe;
+
+/// Widths that exercise every remainder-lane case of a LANE-blocked
+/// kernel: below one lane, one short of a full lane, exactly full,
+/// one over (scalar remainder of 1), and several lanes plus a tail.
+fn lane_edge_widths() -> [usize; 6] {
+    [1, LANE - 1, LANE, LANE + 1, 2 * LANE + 5, 100]
+}
+
+/// An i8 drawn to stress the kernels: zeros (the skip paths), the
+/// extremes −128/127 (largest-magnitude products), and the full range.
+fn stress_i8(rng: &mut Rng) -> i8 {
+    if rng.chance(0.25) {
+        0
+    } else if rng.chance(0.1) {
+        i8::MIN
+    } else if rng.chance(0.1) {
+        i8::MAX
+    } else {
+        rng.i8()
+    }
+}
+
+fn stress_vec(rng: &mut Rng, len: usize) -> Vec<i8> {
+    (0..len).map(|_| stress_i8(rng)).collect()
+}
+
+#[test]
+fn blocked_mvm_paths_match_scalar_reference_across_remainder_widths() {
+    for_all("blocked mvm == scalar reference", 60, |rng| {
+        let rows_choices = [1usize, 3, 4, 5, LANE, 37, 256];
+        let rows = rows_choices[rng.below(rows_choices.len())];
+        let cols = lane_edge_widths()[rng.below(6)];
+        let weights = stress_vec(rng, rows * cols);
+        // x may be shorter than rows (last channel block of a layer)
+        let xlen = if rng.chance(0.3) { rng.range(0, rows) } else { rows };
+        let x = stress_vec(rng, xlen);
+
+        let packed = Pe::new(weights.clone(), rows, cols);
+        let borrowed = Pe::borrowed(&weights, rows, cols);
+        assert!(packed.is_packed());
+
+        let (mut st_s, mut st_p, mut st_b) =
+            (Counters::default(), Counters::default(), Counters::default());
+        // dirty scratch: the kernels must fully overwrite the output
+        let mut want = vec![i32::MIN; cols];
+        let mut got_p = vec![i32::MAX; cols];
+        let mut got_b = vec![7i32; cols];
+        packed.mvm_scalar_into(&x, &mut want, &mut st_s);
+        packed.mvm_into(&x, &mut got_p, &mut st_p);
+        borrowed.mvm_into(&x, &mut got_b, &mut st_b);
+        assert_eq!(want, got_p, "packed panel path diverged ({rows}x{cols})");
+        assert_eq!(want, got_b, "borrowed blocked path diverged ({rows}x{cols})");
+        assert_eq!(st_s, st_p, "packed path counters diverged");
+        assert_eq!(st_s, st_b, "borrowed path counters diverged");
+    });
+}
+
+#[test]
+fn mvm_many_matches_repeated_single_mvm() {
+    for_all("mvm_many == repeated mvm", 40, |rng| {
+        let rows = [3usize, LANE, 64][rng.below(3)];
+        let cols = lane_edge_widths()[rng.below(6)];
+        let nb = rng.range(1, MICRO_BATCH);
+        let weights = stress_vec(rng, rows * cols);
+        let batch: Vec<Vec<i8>> = (0..nb).map(|_| stress_vec(rng, rows)).collect();
+        let xs: Vec<&[i8]> = batch.iter().map(|v| v.as_slice()).collect();
+
+        for pe in [Pe::new(weights.clone(), rows, cols), Pe::borrowed(&weights, rows, cols)] {
+            let (mut st_one, mut st_many) = (Counters::default(), Counters::default());
+            let mut want = vec![0i32; nb * cols];
+            for (b, x) in xs.iter().enumerate() {
+                pe.mvm_scalar_into(x, &mut want[b * cols..(b + 1) * cols], &mut st_one);
+            }
+            let mut got = vec![i32::MIN; nb * cols];
+            pe.mvm_many_into(&xs, &mut got, &mut st_many);
+            assert_eq!(want, got, "micro-batch diverged ({rows}x{cols} nb={nb})");
+            assert_eq!(st_one, st_many, "micro-batch counters diverged");
+        }
+    });
+}
+
+#[test]
+fn extreme_magnitude_accumulation_is_exact() {
+    // The worst case the datapath can see: 256 rows of (−128)·(−128)
+    // products — 256 · 16384 = 4 194 304 per lane, far inside i32, so
+    // every accumulation grouping is exact (the blocked kernels'
+    // bit-exactness-by-construction argument, pinned here).
+    let (rows, cols) = (256usize, LANE + 1);
+    let weights = vec![i8::MIN; rows * cols];
+    let x = vec![i8::MIN; rows];
+    let mut st = Counters::default();
+    for pe in [Pe::new(weights.clone(), rows, cols), Pe::borrowed(&weights, rows, cols)] {
+        let mut out = vec![0i32; cols];
+        pe.mvm_into(&x, &mut out, &mut st);
+        assert!(out.iter().all(|&v| v == 256 * 16384), "extreme MVM wrong");
+    }
+}
+
+#[test]
+fn vectorized_rofm_datapaths_match_scalar_reference() {
+    for_all("rofm _into == scalar reference", 50, |rng| {
+        let len = lane_edge_widths()[rng.below(6)];
+        // psums in the reachable range (±4.2M, see the MVM bound)
+        let psum =
+            |rng: &mut Rng| -> i32 { stress_i8(rng) as i32 * stress_i8(rng) as i32 * 256 };
+        let sum: Vec<i32> = (0..len).map(|_| psum(rng)).collect();
+        let inc: Vec<i32> = (0..len).map(|_| psum(rng)).collect();
+        let shift = [0u32, 4, 8][rng.below(3)];
+
+        // add_psum_slices
+        let (mut st_s, mut st_v) = (Counters::default(), Counters::default());
+        let mut acc_s = sum.clone();
+        let mut acc_v = sum.clone();
+        for (a, b) in acc_s.iter_mut().zip(inc.iter()) {
+            *a += b;
+        }
+        st_s.adds_8b += 4 * len as u64;
+        Rofm::add_psum_slices(&mut acc_v, &inc, &mut st_v);
+        assert_eq!(acc_s, acc_v, "add_psum_slices diverged (len={len})");
+
+        // act_into / quantize_into (requant with and without ReLU)
+        let mut v_s: Vec<i8> = Vec::new();
+        let mut v_v: Vec<i8> = vec![99; 7]; // dirty scratch
+        for relu in [true, false] {
+            v_s.clear();
+            v_s.extend(sum.iter().map(|&v| requant(v, shift, relu)));
+            st_s.act_ops_8b += len as u64;
+            if relu {
+                Rofm::act_into(&sum, shift, &mut v_v, &mut st_v);
+            } else {
+                Rofm::quantize_into(&sum, shift, &mut v_v, &mut st_v);
+            }
+            assert_eq!(v_s, v_v, "requant diverged (len={len} relu={relu})");
+        }
+
+        // res_add_into / cmp_max over i8 streams with extremes
+        let main_v = stress_vec(rng, len);
+        let skip_v = stress_vec(rng, len);
+        v_s.clear();
+        v_s.extend(main_v.iter().zip(&skip_v).map(|(&a, &b)| res_add(a, b)));
+        st_s.adds_8b += len as u64;
+        st_s.act_ops_8b += len as u64;
+        Rofm::res_add_into(&main_v, &skip_v, &mut v_v, &mut st_v);
+        assert_eq!(v_s, v_v, "res_add_into diverged (len={len})");
+
+        let mut mx_s = main_v.clone();
+        let mut mx_v = main_v.clone();
+        for (a, &b) in mx_s.iter_mut().zip(&skip_v) {
+            *a = (*a).max(b);
+        }
+        st_s.pool_ops_8b += len as u64;
+        Rofm::cmp_max(&mut mx_v, &skip_v, &mut st_v);
+        assert_eq!(mx_s, mx_v, "cmp_max diverged (len={len})");
+
+        // every counter the datapaths charge, charged identically
+        assert_eq!(st_s, st_v, "rofm datapath counters diverged (len={len})");
+    });
+}
+
+/// The small-geometry sweep (mirrors `capture_properties.rs`): every
+/// conv shape the micro-batch refill must handle — strides, padding,
+/// 1x1 kernels, channel/filter blocks, fused pooling, residuals.
+fn sweep_nets() -> Vec<(Network, domino::coordinator::ArchConfig)> {
+    use domino::coordinator::ArchConfig;
+    let mut nets = Vec::new();
+    for (k, stride, padding) in [(1usize, 1usize, 0usize), (3, 1, 1), (3, 2, 1), (3, 1, 0)] {
+        let net = NetworkBuilder::new("kp-conv", TensorShape::new(2, 6, 6))
+            .conv(4, k, stride, padding)
+            .build();
+        nets.push((net, ArchConfig::default()));
+    }
+    nets.push((
+        NetworkBuilder::new("kp-maxpool", TensorShape::new(3, 8, 8))
+            .conv(4, 3, 1, 1)
+            .max_pool(2, 2)
+            .build(),
+        ArchConfig::default(),
+    ));
+    nets.push((
+        NetworkBuilder::new("kp-avgpool", TensorShape::new(3, 8, 8))
+            .conv(4, 3, 1, 1)
+            .avg_pool(2, 2)
+            .build(),
+        ArchConfig::default(),
+    ));
+    nets.push((
+        NetworkBuilder::new("kp-blocks", TensorShape::new(6, 5, 5))
+            .conv(7, 3, 1, 1)
+            .flatten()
+            .fc(9)
+            .fc_logits(5)
+            .build(),
+        domino::coordinator::ArchConfig::tiny(4),
+    ));
+    nets.push((
+        NetworkBuilder::new("kp-res", TensorShape::new(4, 8, 8))
+            .conv(4, 3, 1, 1)
+            .conv(8, 3, 2, 1)
+            .conv_linear(8, 3, 1, 1)
+            .res_add_proj(
+                0,
+                Projection {
+                    out_ch: 8,
+                    stride: 2,
+                },
+            )
+            .build(),
+        ArchConfig::default(),
+    ));
+    nets
+}
+
+#[test]
+fn micro_batched_engine_matches_refcompute_over_small_geometry_sweep() {
+    // Full-engine identity: the micro-batched conv path must keep the
+    // engine bit-exact with refcompute over every small geometry, with
+    // identical counters across capture modes and across warm reuse
+    // (the micro-batch stash resets cleanly between images).
+    for (net, arch) in sweep_nets() {
+        let compiler = domino::coordinator::Compiler::new(arch);
+        let weights = Weights::random(&net, compiler.weight_seed).unwrap();
+        let program = compiler.compile_with_weights(&net, &weights).unwrap();
+        let mut all = Simulator::new(&program);
+        let mut fin = Simulator::with_capture(&program, CaptureMode::Final);
+        let mut rng = Rng::new(0x5EED);
+        for i in 0..3 {
+            let input = Tensor::new(net.input, rng.i8_vec(net.input_len(), 31));
+            let want = forward_all(&net, &weights, &input).unwrap();
+            let a = all.run_image(&input.data).unwrap();
+            let f = fin.run_image(&input.data).unwrap();
+            assert_eq!(
+                a.scores,
+                want.last().unwrap().data,
+                "{} image {i}: scores vs refcompute",
+                net.name
+            );
+            assert_eq!(a.scores, f.scores, "{} image {i}: capture modes", net.name);
+            // AllStages captures every stage tensor (each produced
+            // through the blocked kernels); the final one is the score
+            // vector, pinned to refcompute above
+            assert_eq!(
+                a.stage_outputs.len(),
+                program.stages.len(),
+                "{} image {i}: AllStages capture count",
+                net.name
+            );
+            assert_eq!(
+                a.stage_outputs.last().unwrap().data,
+                a.scores,
+                "{} image {i}: final captured stage vs scores",
+                net.name
+            );
+            assert_eq!(a.latency_cycles, f.latency_cycles, "{}", net.name);
+        }
+        assert_eq!(
+            all.stats(),
+            fin.stats(),
+            "{}: counters differ across capture modes",
+            net.name
+        );
+        assert!(all.stats().pe_mvms > 0, "{}: no MVMs charged", net.name);
+    }
+}

@@ -50,6 +50,7 @@ fn concurrent_clients_across_three_models_are_answered_by_their_model() {
                 workers: 3,
                 max_batch: 4,
                 queue_cap: 256,
+                ..ServeConfig::default()
             },
             Arc::clone(&registry),
         )
@@ -117,6 +118,7 @@ fn shutdown_while_loaded_answers_every_accepted_request_per_model() {
                 workers: 2,
                 max_batch: 3,
                 queue_cap: 256,
+                ..ServeConfig::default()
             },
             Arc::clone(&registry),
         )
@@ -157,6 +159,7 @@ fn hot_swap_under_load_drains_old_version_and_routes_new() {
                 workers: 2,
                 max_batch: 4,
                 queue_cap: 1024,
+                ..ServeConfig::default()
             },
             Arc::clone(&registry),
         )
@@ -267,6 +270,7 @@ fn unload_keeps_inflight_requests_and_rejects_new_ones() {
             workers: 1,
             max_batch: 2,
             queue_cap: 64,
+            ..ServeConfig::default()
         },
         Arc::clone(&registry),
     )
@@ -318,6 +322,7 @@ fn load_while_serving_makes_model_routable_without_restart() {
             workers: 2,
             max_batch: 4,
             queue_cap: 64,
+            ..ServeConfig::default()
         },
         Arc::clone(&registry),
     )

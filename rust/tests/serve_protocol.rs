@@ -33,6 +33,7 @@ fn serve_cfg() -> ServeConfig {
         workers: 2,
         max_batch: 4,
         queue_cap: 256,
+        ..ServeConfig::default()
     }
 }
 
@@ -51,6 +52,26 @@ fn start_endpoint(models: &[(&str, u64)]) -> (Arc<Service>, NetServer, String) {
     let net = NetServer::bind_with("127.0.0.1:0", Arc::clone(&service), fast_net_cfg()).unwrap();
     let addr = net.local_addr().to_string();
     (service, net, addr)
+}
+
+#[test]
+fn zero_dispatchers_rejected_with_typed_error() {
+    let (service, net, _addr) = start_endpoint(&[("tiny-mlp", 1)]);
+    drop(net);
+    let err = NetServer::bind_with(
+        "127.0.0.1:0",
+        service,
+        NetConfig {
+            dispatchers: 0,
+            ..NetConfig::default()
+        },
+    )
+    .unwrap_err();
+    assert!(
+        err.downcast_ref::<domino::serve::net::ZeroDispatchers>()
+            .is_some(),
+        "expected ZeroDispatchers as root cause, got: {err:#}"
+    );
 }
 
 fn connect(addr: &str) -> Client {

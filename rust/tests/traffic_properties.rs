@@ -24,6 +24,7 @@ fn serve_cfg() -> ServeConfig {
         workers: 2,
         max_batch: 4,
         queue_cap: 256,
+        ..ServeConfig::default()
     }
 }
 
